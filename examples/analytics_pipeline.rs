@@ -1,0 +1,75 @@
+//! Three-layer composition demo: Rust coordinator (L3) feeds the
+//! AOT-compiled JAX graph (L2) wrapping the Pallas kernel (L1) — Python is
+//! nowhere at runtime.
+//!
+//! Loads a store, stages a batch of pending updates, then runs the fused
+//! masked-update + statistics + histogram *on the PJRT path*, compares
+//! against the Rust-side application of the same updates, and prints the
+//! price histogram before/after.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example analytics_pipeline
+//! ```
+
+use membig::memstore::ShardedStore;
+use membig::runtime::AnalyticsEngine;
+use membig::util::fmt::{commas, human_duration};
+use membig::workload::gen::{generate_stock_updates, DatasetSpec, KeyDist};
+
+fn bar(v: f32, max: f32) -> String {
+    "█".repeat(((v / max) * 40.0) as usize)
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let engine = AnalyticsEngine::load("artifacts")
+        .map_err(|e| format!("{e}\nhint: run `make artifacts` first"))?;
+    println!("PJRT platform: {}\n", engine.platform());
+
+    // L3: build a live store.
+    let spec = DatasetSpec { records: 60_000, ..Default::default() };
+    let store = ShardedStore::new(8, 1 << 13);
+    for r in spec.iter() {
+        store.insert(r);
+    }
+    println!("store: {} records in {} shards", commas(store.len() as u64), store.shard_count());
+
+    // Stage pending updates (not yet applied to the store).
+    let updates = generate_stock_updates(&spec, 30_000, KeyDist::Uniform, 99);
+
+    // "Before" analytics: no updates staged.
+    let before = engine.analytics_for_store(&store, &[])?;
+    // "After" analytics: updates applied *inside the kernel* via the mask.
+    let after = engine.analytics_for_store(&store, &updates)?;
+
+    println!("\n               before           after(staged updates)");
+    println!("value      ${:>12.2}    ${:>12.2}", before.stats.total_value, after.stats.total_value);
+    println!("mean price ${:>12.4}    ${:>12.4}", before.stats.mean_price, after.stats.mean_price);
+    println!("applied    {:>13}    {:>13}", before.stats.updates_applied, after.stats.updates_applied);
+    println!("exec time  {:>13}    {:>13}", human_duration(before.exec_time),
+        human_duration(after.exec_time));
+
+    // Cross-check: apply the same updates in Rust and compare value sums.
+    for u in &updates {
+        store.apply(u);
+    }
+    let (_, cents) = store.value_sum_cents();
+    let rust_value = cents as f64 / 100.0;
+    let rel = (after.stats.total_value - rust_value).abs() / rust_value;
+    println!("\nrust-side apply agrees: PJRT ${:.2} vs Rust ${:.2} (rel err {:.2e})",
+        after.stats.total_value, rust_value, rel);
+    assert!(rel < 1e-3);
+
+    // Price histogram, rendered.
+    println!("\nprice histogram after updates ($0.50 bins):");
+    let max = after.histogram.iter().cloned().fold(0.0f32, f32::max);
+    for (i, &count) in after.histogram.iter().enumerate() {
+        println!(
+            "  ${:>4.1}–${:>4.1} |{:<40}| {}",
+            i as f32 * 0.5,
+            (i + 1) as f32 * 0.5,
+            bar(count, max),
+            count as u64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! One-server architecture demo (paper §4.3): serve a live inventory over
+//! TCP from a single process — reads, updates, aggregate stats and
+//! PJRT-backed analytics — then benchmark it with concurrent clients
+//! running a read-heavy trace and report throughput + latency percentiles.
+//!
+//! ```bash
+//! cargo run --release --example bookstore_server
+//! ```
+
+use std::sync::Arc;
+
+use membig::memstore::ShardedStore;
+use membig::metrics::Histogram;
+use membig::runtime::AnalyticsService;
+use membig::server::{Client, Server};
+use membig::util::fmt::{commas, human_duration, rate};
+use membig::workload::gen::DatasetSpec;
+use membig::workload::trace::{generate_trace, Mix, Op};
+
+const CLIENTS: usize = 8;
+const OPS_PER_CLIENT: usize = 5_000;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // Build the store (the "database server" of the paper's one-server setup).
+    let spec = DatasetSpec { records: 100_000, ..Default::default() };
+    let store = Arc::new(ShardedStore::new(8, 1 << 14));
+    for r in spec.iter() {
+        store.insert(r);
+    }
+    println!("store ready: {} records", commas(store.len() as u64));
+
+    // Optional PJRT analytics service (dedicated executor thread).
+    let analytics = match AnalyticsService::start("artifacts") {
+        Ok(s) => {
+            println!("analytics: PJRT service online");
+            Some(Arc::new(s))
+        }
+        Err(e) => {
+            println!("analytics: disabled ({e}) — run `make artifacts` to enable");
+            None
+        }
+    };
+
+    let handle = Server::new(store.clone(), analytics).spawn("127.0.0.1:0")?;
+    println!("serving on {}\n", handle.addr);
+    let addr = handle.addr;
+
+    // Concurrent clients replay a read-heavy trace.
+    let lat = Histogram::new();
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let spec = spec.clone();
+            let lat = &lat;
+            s.spawn(move || {
+                let trace =
+                    generate_trace(&spec, OPS_PER_CLIENT, Mix::READ_HEAVY, 0.99, c as u64);
+                let mut client = Client::connect(addr).expect("connect");
+                for op in trace {
+                    let line = match op {
+                        Op::Get(k) => format!("GET {k}"),
+                        Op::Update(u) => {
+                            format!("UPDATE {} {} {}", u.isbn13, u.new_price_cents, u.new_quantity)
+                        }
+                        Op::Stats => "STATS".to_string(),
+                    };
+                    let t = std::time::Instant::now();
+                    let resp = client.request(&line).expect("request");
+                    lat.record_duration(t.elapsed());
+                    assert!(
+                        resp.starts_with("OK") || resp == "MISS",
+                        "unexpected response: {resp}"
+                    );
+                }
+                let _ = client.request("QUIT");
+            });
+        }
+    });
+    let elapsed = t0.elapsed();
+    let total_ops = (CLIENTS * OPS_PER_CLIENT) as u64;
+    let snap = lat.snapshot();
+
+    println!("{} ops from {} concurrent clients in {}", commas(total_ops), CLIENTS,
+        human_duration(elapsed));
+    println!("throughput: {}", rate(total_ops, elapsed));
+    println!(
+        "latency: p50 {}  p90 {}  p99 {}  max {}",
+        human_duration(std::time::Duration::from_nanos(snap.p50_ns)),
+        human_duration(std::time::Duration::from_nanos(snap.p90_ns)),
+        human_duration(std::time::Duration::from_nanos(snap.p99_ns)),
+        human_duration(std::time::Duration::from_nanos(snap.max_ns)),
+    );
+
+    // One analytics request through the same front door.
+    let mut client = Client::connect(addr)?;
+    let resp = client.request("ANALYTICS")?;
+    println!("\nANALYTICS → {resp}");
+    let _ = client.request("QUIT");
+
+    handle.shutdown();
+    println!("server stopped cleanly");
+    Ok(())
+}

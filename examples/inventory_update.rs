@@ -1,0 +1,138 @@
+//! **End-to-end validation driver** (EXPERIMENTS.md §E2E): the paper's §5
+//! experiment at full scale — a 2,000,000-record book database updated from
+//! a 2,000,000-entry Stock.dat — run through every layer of the system:
+//!
+//!   1. workload generator → disk table (real files) + stock feed
+//!   2. proposed app: sequential load → sharded hash tables → one worker
+//!      per core streaming the feed through bounded queues
+//!   3. conventional app: per-record RMW under the HDD latency model
+//!   4. PJRT analytics over the updated store (L2/L1 artifacts)
+//!   5. writeback + verification (store ≡ table)
+//!
+//! ```bash
+//! cargo run --release --example inventory_update -- [--records 2M] [--updates 2M]
+//! ```
+
+use std::sync::Arc;
+
+use membig::config::{Args, EngineConfig, FlagSpec};
+use membig::coordinator::report::{render_figure6, render_table1, RunReport};
+use membig::coordinator::{Coordinator, Workbench};
+use membig::memstore::snapshot::verify_against_table;
+use membig::runtime::AnalyticsEngine;
+use membig::storage::latency::{DiskProfile, DiskSim};
+use membig::storage::table::{DiskTable, TableOptions};
+use membig::util::fmt::{commas, human_duration, paper_hms, rate};
+use membig::workload::gen::DatasetSpec;
+
+fn flags() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "records", value: "N", help: "database size (default 2M)" },
+        FlagSpec { name: "updates", value: "N", help: "feed size (default = records)" },
+        FlagSpec { name: "skip-conventional", value: "", help: "skip the disk baseline" },
+    ]
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(std::env::args().skip(1), &flags())?;
+    let records = args.get_count("records")?.unwrap_or(2_000_000);
+    let updates = args.get_count("updates")?.unwrap_or(records);
+
+    let mut cfg = EngineConfig::default();
+    cfg.data_dir = std::path::PathBuf::from("bench_out/data");
+    cfg.writeback = false;
+    let cfg = cfg.validated()?;
+
+    println!("══ membig end-to-end: {} records, {} updates, {} threads ══\n",
+        commas(records), commas(updates), cfg.threads);
+
+    let spec = DatasetSpec { records, ..Default::default() };
+    let wb = Workbench::new(&cfg.data_dir, spec.clone());
+
+    // Phase 0: inputs.
+    let (table, build_t) = membig::util::bench::time_once(|| wb.ensure_table(&cfg))
+        ;
+    let table = table?;
+    let stock = wb.ensure_stock(updates)?;
+    println!("[0] inputs ready in {} (table {} + stock {})\n", human_duration(build_t),
+        wb.table_dir().display(), stock.display());
+    drop(table);
+
+    // Phase 1+2: proposed app.
+    let coord = Coordinator::new(cfg.clone());
+    let table = wb.ensure_table(&cfg)?;
+    let out = coord.run_proposed(&table, &stock)?;
+    println!("[1] load:   {} records in {}  ({})", commas(out.records),
+        human_duration(out.load), rate(out.records, out.load));
+    println!("[2] update: {} applied in {}  ({}, {} batches, {} missing)",
+        commas(out.stream.updates_applied),
+        human_duration(out.update),
+        rate(out.stream.updates_applied, out.update),
+        commas(out.stream.batches),
+        out.stream.updates_missing);
+    let proposed_total = out.load + out.update;
+
+    // Phase 3: conventional app (modeled HDD).
+    let conventional = if args.has("skip-conventional") {
+        None
+    } else {
+        let sim = Arc::new(DiskSim::new(DiskProfile::default()));
+        let conv_table = DiskTable::open(
+            wb.table_dir(),
+            sim,
+            TableOptions { cache_pages: cfg.page_cache_pages, engine_overhead: true },
+        )?;
+        let m = membig::metrics::EngineMetrics::new();
+        let rep = membig::baseline::run_conventional_stream(&conv_table, &stock, &m)?;
+        println!("[3] conventional: {} applied; wall {} | modeled full-scale disk: {}",
+            commas(rep.updates_applied), human_duration(rep.wall), paper_hms(rep.modeled));
+        Some(rep)
+    };
+
+    // Phase 4: PJRT analytics over the updated store.
+    match AnalyticsEngine::load("artifacts") {
+        Ok(engine) => {
+            // Analytics over a sample (largest compiled batch) of the store.
+            let sample: Vec<membig::workload::record::BookRecord> =
+                out.store.shard_records(0).into_iter().take(65_536).collect();
+            let price: Vec<f32> = sample.iter().map(|r| r.price_cents as f32 / 100.0).collect();
+            let qty: Vec<f32> = sample.iter().map(|r| r.quantity as f32).collect();
+            let mask = vec![0f32; price.len()];
+            let result = engine.analytics(&price, &qty, &price, &qty, &mask)?;
+            println!(
+                "[4] PJRT analytics ({}): {} rows → value ${:.2}, mean ${:.4}, exec {}",
+                engine.platform(),
+                commas(result.stats.count),
+                result.stats.total_value,
+                result.stats.mean_price,
+                human_duration(result.exec_time)
+            );
+        }
+        Err(e) => println!("[4] PJRT analytics skipped ({e}) — run `make artifacts`"),
+    }
+
+    // Phase 5: writeback + verification.
+    let m = membig::metrics::EngineMetrics::new();
+    let (written, wb_t) = membig::util::bench::time_once(|| {
+        membig::memstore::snapshot::writeback(&out.store, &table, &m)
+    });
+    let written = written?;
+    let diverged = verify_against_table(&out.store, &table)?;
+    println!("[5] writeback {} records in {}; verification: {} divergent\n",
+        commas(written), human_duration(wb_t), diverged);
+    assert_eq!(diverged, 0, "store and table must agree after writeback");
+
+    // Summary row (one Table-1 cell at full scale).
+    if let Some(conv) = conventional {
+        let row = RunReport {
+            n_updates: updates,
+            conventional: conv.modeled,
+            conventional_wall: conv.wall,
+            proposed: proposed_total,
+        };
+        println!("{}", render_table1(std::slice::from_ref(&row)));
+        println!("{}", render_figure6(std::slice::from_ref(&row)));
+    }
+    println!("total proposed time (load+update): {}", human_duration(proposed_total));
+    Ok(())
+}

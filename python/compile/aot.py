@@ -1,0 +1,96 @@
+"""AOT lowering: JAX → HLO *text* artifacts consumed by the Rust runtime.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format —
+jax >= 0.5 emits protos with 64-bit instruction ids that xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects; the text
+parser reassigns ids. See /opt/xla-example/README.md.
+
+Emits, per batch size B in ``BATCHES``:
+  artifacts/analytics_{B}.hlo.txt    5 x f32[B] -> (f32[B], f32[B], f32[28])
+  artifacts/value_sum_{B}.hlo.txt    3 x f32[B] -> (f32[],)
+plus ``artifacts/manifest.json`` describing every artifact (name, path,
+batch, arity) for the Rust artifact registry.
+
+Run via ``make artifacts`` (idempotent; skips when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Batch sizes compiled ahead of time. Rust picks the smallest that fits and
+# pads with mask=-1. Must be multiples of the kernel TILE (1024).
+BATCHES = (4096, 16384, 65536)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_analytics(batch: int) -> str:
+    spec = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    lowered = jax.jit(model.analytics_tuple).lower(spec, spec, spec, spec,
+                                                   spec)
+    return to_hlo_text(lowered)
+
+
+def lower_value_sum(batch: int) -> str:
+    spec = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    lowered = jax.jit(model.value_sum).lower(spec, spec, spec)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "models": []}
+    for batch in BATCHES:
+        for name, lower, outputs in (
+            ("analytics", lower_analytics, ["upd_price", "upd_qty",
+                                            "summary"]),
+            ("value_sum", lower_value_sum, ["total_value"]),
+        ):
+            text = lower(batch)
+            fname = f"{name}_{batch}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["models"].append({
+                "name": name,
+                "batch": batch,
+                "path": fname,
+                "inputs": 5 if name == "analytics" else 3,
+                "outputs": outputs,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            })
+            print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {out_dir}/manifest.json ({len(manifest['models'])} models)")
+    return manifest
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    out = args.out if os.path.isabs(args.out) else os.path.abspath(args.out)
+    build(out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

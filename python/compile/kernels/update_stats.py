@@ -1,0 +1,125 @@
+"""L1 — Pallas kernel: fused masked bulk-update + per-tile partial statistics.
+
+This is the compute hot-spot of the proposed method expressed for the TPU
+memory hierarchy (DESIGN.md §Hardware-Adaptation): the paper shards its hash
+tables across cores; here rows are tiled so each grid step stages one
+``(TILE,)`` block of the five input columns from HBM into VMEM (BlockSpec),
+applies the masked update, writes the updated block back, and emits one row
+of partial reductions. A tiny jnp combine (L2) folds the per-tile partials —
+the same leader/worker aggregation shape as the Rust pipeline.
+
+The kernel is bandwidth-bound (no matmul → MXU is idle by design); the
+roofline discussion lives in DESIGN.md §Perf.
+
+interpret=True always: the CPU PJRT client cannot execute Mosaic
+custom-calls. Real-TPU lowering would only change the BlockSpec constants.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One VMEM block: 8 sublanes x 128 lanes = 1024 rows per grid step. Five f32
+# input columns + two outputs = 7 * 4KiB = 28KiB VMEM per step — comfortably
+# inside a TPU core's ~16MiB VMEM with double-buffering headroom.
+TILE = 1024
+
+# Partial-statistics row emitted per tile:
+# [value_sum, count, price_sum, price_min, price_max, qty_sum, upd_count, _pad]
+N_STATS = 8
+
+# Plain python float (not a jnp array): pallas kernels may not capture
+# traced constants; a weak-typed literal folds into the kernel body.
+_BIG = 3.4e38
+
+
+def _kernel(price_ref, qty_ref, new_price_ref, new_qty_ref, mask_ref,
+            out_price_ref, out_qty_ref, part_ref):
+    """One grid step over a TILE-row block."""
+    p = price_ref[...]
+    q = qty_ref[...]
+    npx = new_price_ref[...]
+    nq = new_qty_ref[...]
+    m = mask_ref[...]          # 1.0 = apply update, 0.0 = keep; <0 = padding
+
+    valid = (m >= 0.0).astype(jnp.float32)   # padding rows excluded from stats
+    apply = (m > 0.0).astype(jnp.float32)
+
+    up = apply * npx + (1.0 - apply) * p
+    uq = apply * nq + (1.0 - apply) * q
+    out_price_ref[...] = up
+    out_qty_ref[...] = uq
+
+    val = up * uq * valid
+    # Min/max over valid rows only: invalid rows are pushed to +/- inf.
+    pmin = jnp.min(jnp.where(valid > 0.0, up, _BIG))
+    pmax = jnp.max(jnp.where(valid > 0.0, up, -_BIG))
+
+    part_ref[0, 0] = jnp.sum(val)
+    part_ref[0, 1] = jnp.sum(valid)
+    part_ref[0, 2] = jnp.sum(up * valid)
+    part_ref[0, 3] = pmin
+    part_ref[0, 4] = pmax
+    part_ref[0, 5] = jnp.sum(uq * valid)
+    part_ref[0, 6] = jnp.sum(apply * valid)
+    part_ref[0, 7] = jnp.float32(0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def update_stats(price, qty, new_price, new_qty, mask, *, tile: int = TILE):
+    """Masked bulk update + per-tile partial stats.
+
+    Args:
+      price, qty, new_price, new_qty: f32[N] columns (N multiple of ``tile``).
+      mask: f32[N]; 1.0 = apply update, 0.0 = keep current, -1.0 = padding
+        row (excluded from statistics entirely).
+
+    Returns:
+      (upd_price f32[N], upd_qty f32[N], partials f32[N/tile, N_STATS])
+    """
+    n = price.shape[0]
+    if n % tile != 0:
+        raise ValueError(f"N={n} must be a multiple of tile={tile}")
+    grid = (n // tile,)
+    col = pl.BlockSpec((tile,), lambda i: (i,))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[col, col, col, col, col],
+        out_specs=[
+            col,
+            col,
+            pl.BlockSpec((1, N_STATS), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0], N_STATS), jnp.float32),
+        ],
+        interpret=True,
+    )(price, qty, new_price, new_qty, mask)
+
+
+def combine_partials(partials):
+    """Fold per-tile partials into the final stats vector (pure jnp; L2).
+
+    Returns f32[N_STATS]:
+      [value_sum, count, price_sum, price_min, price_max, qty_sum,
+       updates_applied, mean_price]
+    """
+    value_sum = jnp.sum(partials[:, 0])
+    count = jnp.sum(partials[:, 1])
+    price_sum = jnp.sum(partials[:, 2])
+    price_min = jnp.min(partials[:, 3])
+    price_max = jnp.max(partials[:, 4])
+    qty_sum = jnp.sum(partials[:, 5])
+    applied = jnp.sum(partials[:, 6])
+    mean_price = jnp.where(count > 0, price_sum / jnp.maximum(count, 1.0), 0.0)
+    return jnp.stack([
+        value_sum, count, price_sum, price_min, price_max, qty_sum, applied,
+        mean_price
+    ])

@@ -1,0 +1,67 @@
+"""L2 — the analytics compute graph (JAX), calling the L1 Pallas kernel.
+
+Two exported computations, AOT-lowered by ``aot.py``:
+
+``analytics``
+    Masked bulk update fused with inventory statistics and a price
+    histogram. Rust pads each shard export to the compiled batch size and
+    feeds mask=-1 for padding rows.
+
+``value_sum``
+    Reduction-only fast path for the server's STATS op.
+
+Units note: Rust stores prices as integer cents; the analytics path converts
+to f32 dollars at the boundary (exact for the paper's <= $10 prices — cents
+values < 2^24 are exactly representable in f32).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.update_stats import combine_partials, update_stats
+
+HIST_BINS = 20
+HIST_LO = 0.0
+HIST_HI = 10.0
+
+
+def price_histogram(prices, valid_mask):
+    """Histogram of prices over [HIST_LO, HIST_HI) in HIST_BINS bins.
+
+    Branch-free one-hot formulation — lowers to a single fused loop, no
+    scatter (scatters serialize on CPU PJRT).
+    """
+    width = (HIST_HI - HIST_LO) / HIST_BINS
+    idx = jnp.clip(((prices - HIST_LO) / width).astype(jnp.int32), 0,
+                   HIST_BINS - 1)
+    onehot = (idx[:, None] == jnp.arange(HIST_BINS)[None, :]).astype(
+        jnp.float32)
+    return jnp.sum(onehot * valid_mask[:, None], axis=0)
+
+
+def analytics(price, qty, new_price, new_qty, mask):
+    """Full analytics: update + stats + histogram.
+
+    Returns a 3-tuple:
+      upd_price f32[N], upd_qty f32[N],
+      summary f32[N_STATS + HIST_BINS]  (stats ++ histogram)
+    """
+    up, uq, partials = update_stats(price, qty, new_price, new_qty, mask)
+    stats = combine_partials(partials)
+    valid = (mask >= 0.0).astype(jnp.float32)
+    hist = price_histogram(up, valid)
+    return up, uq, jnp.concatenate([stats, hist])
+
+
+def value_sum(price, qty, mask):
+    """Σ price·qty over valid rows (server STATS fast path)."""
+    valid = (mask >= 0.0).astype(jnp.float32)
+    return (jnp.sum(price * qty * valid),)
+
+
+def analytics_tuple(price, qty, new_price, new_qty, mask):
+    """aot entry point: flat tuple output for the XLA text boundary."""
+    up, uq, summary = analytics(price, qty, new_price, new_qty, mask)
+    return (up, uq, summary)

@@ -1,0 +1,170 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, masks and value ranges; fixed cases pin the edge
+behaviours (all-padding tiles, all-update, no-update, single tile).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels.ref import update_stats_ref
+from compile.kernels.update_stats import (N_STATS, TILE, combine_partials,
+                                          update_stats)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_inputs(rng, n, pad=0, update_frac=0.5):
+    """Random inputs with `pad` trailing padding rows."""
+    price = rng.uniform(0.0, 10.0, n).astype(np.float32)
+    qty = rng.uniform(0.0, 500.0, n).astype(np.float32)
+    new_price = rng.uniform(0.0, 10.0, n).astype(np.float32)
+    new_qty = rng.uniform(0.0, 500.0, n).astype(np.float32)
+    mask = (rng.uniform(0, 1, n) < update_frac).astype(np.float32)
+    if pad:
+        mask[n - pad:] = -1.0
+    return price, qty, new_price, new_qty, mask
+
+
+def run_both(price, qty, new_price, new_qty, mask, tile=TILE):
+    up_k, uq_k, partials = update_stats(
+        jnp.asarray(price), jnp.asarray(qty), jnp.asarray(new_price),
+        jnp.asarray(new_qty), jnp.asarray(mask), tile=tile)
+    stats_k = combine_partials(partials)
+    up_r, uq_r, stats_r = update_stats_ref(
+        jnp.asarray(price), jnp.asarray(qty), jnp.asarray(new_price),
+        jnp.asarray(new_qty), jnp.asarray(mask))
+    return (up_k, uq_k, stats_k), (up_r, uq_r, stats_r)
+
+
+def assert_matches(kernel_out, ref_out, n_valid):
+    (up_k, uq_k, stats_k), (up_r, uq_r, stats_r) = kernel_out, ref_out
+    np.testing.assert_allclose(up_k, up_r, rtol=1e-6)
+    np.testing.assert_allclose(uq_k, uq_r, rtol=1e-6)
+    # Sums accumulate differently (per-tile vs flat) → loose tolerance
+    # scaled by magnitude.
+    np.testing.assert_allclose(stats_k, stats_r, rtol=1e-4, atol=1e-3)
+    assert int(stats_k[1]) == n_valid
+
+
+class TestFixedCases:
+    def test_single_tile_half_updates(self):
+        rng = np.random.default_rng(0)
+        inputs = make_inputs(rng, TILE)
+        k, r = run_both(*inputs)
+        assert_matches(k, r, TILE)
+
+    def test_multi_tile(self):
+        rng = np.random.default_rng(1)
+        inputs = make_inputs(rng, 4 * TILE)
+        k, r = run_both(*inputs)
+        assert_matches(k, r, 4 * TILE)
+
+    def test_no_updates_is_identity(self):
+        rng = np.random.default_rng(2)
+        price, qty, new_price, new_qty, _ = make_inputs(rng, TILE)
+        mask = np.zeros(TILE, np.float32)
+        (up, uq, stats), _ = run_both(price, qty, new_price, new_qty, mask)
+        np.testing.assert_array_equal(up, price)
+        np.testing.assert_array_equal(uq, qty)
+        assert float(stats[6]) == 0.0  # applied
+
+    def test_all_updates(self):
+        rng = np.random.default_rng(3)
+        price, qty, new_price, new_qty, _ = make_inputs(rng, TILE)
+        mask = np.ones(TILE, np.float32)
+        (up, uq, stats), _ = run_both(price, qty, new_price, new_qty, mask)
+        np.testing.assert_array_equal(up, new_price)
+        np.testing.assert_array_equal(uq, new_qty)
+        assert float(stats[6]) == TILE
+
+    def test_padding_rows_excluded_from_stats(self):
+        rng = np.random.default_rng(4)
+        n, pad = 2 * TILE, 100
+        inputs = make_inputs(rng, n, pad=pad)
+        k, r = run_both(*inputs)
+        assert_matches(k, r, n - pad)
+
+    def test_entire_tile_padding(self):
+        # Second tile is all padding: min/max must not be poisoned.
+        rng = np.random.default_rng(5)
+        inputs = make_inputs(rng, 2 * TILE, pad=TILE)
+        k, r = run_both(*inputs)
+        assert_matches(k, r, TILE)
+        stats = np.asarray(k[2])
+        assert 0.0 <= stats[3] <= 10.0  # price_min from the real tile
+        assert 0.0 <= stats[4] <= 10.0
+
+    def test_value_sum_exact_on_integer_cents(self):
+        # Cents are < 2^24 → f32-exact; the kernel must agree with an
+        # integer reference exactly.
+        rng = np.random.default_rng(6)
+        price_cents = rng.integers(0, 1000, TILE)
+        qty = rng.integers(0, 500, TILE)
+        exact = int(np.sum(price_cents * qty))
+        price = (price_cents / 100.0).astype(np.float32)
+        mask = np.zeros(TILE, np.float32)
+        (_, _, stats), _ = run_both(price, qty.astype(np.float32), price,
+                                    qty.astype(np.float32), mask)
+        assert abs(float(stats[0]) * 100.0 - exact) / max(exact, 1) < 1e-5
+
+    def test_rejects_non_multiple_of_tile(self):
+        rng = np.random.default_rng(7)
+        inputs = make_inputs(rng, TILE + 1)
+        with pytest.raises(ValueError, match="multiple of tile"):
+            update_stats(*[jnp.asarray(x) for x in inputs])
+
+    def test_mean_price_matches_numpy(self):
+        rng = np.random.default_rng(8)
+        price, qty, new_price, new_qty, mask = make_inputs(rng, TILE, pad=17)
+        (_, _, stats), _ = run_both(price, qty, new_price, new_qty, mask)
+        up = np.where(mask > 0, new_price, price)
+        expect = up[mask >= 0].mean()
+        np.testing.assert_allclose(float(stats[7]), expect, rtol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=6),
+    pad=st.integers(min_value=0, max_value=TILE - 1),
+    update_frac=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_kernel_matches_ref_sweep(tiles, pad, update_frac, seed):
+    n = tiles * TILE
+    hypothesis.assume(pad < n)
+    rng = np.random.default_rng(seed)
+    inputs = make_inputs(rng, n, pad=pad, update_frac=update_frac)
+    k, r = run_both(*inputs)
+    assert_matches(k, r, n - pad)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    tile_exp=st.integers(min_value=7, max_value=11),  # tile 128..2048
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_tile_size_invariance(tile_exp, seed):
+    """The tiling is an implementation detail: results must not depend on it."""
+    tile = 1 << tile_exp
+    n = 4096
+    hypothesis.assume(n % tile == 0)
+    rng = np.random.default_rng(seed)
+    inputs = make_inputs(rng, n, pad=33)
+    k, r = run_both(*inputs, tile=tile)
+    assert_matches(k, r, n - 33)
+
+
+def test_partials_shape_and_determinism():
+    rng = np.random.default_rng(9)
+    price, qty, new_price, new_qty, mask = make_inputs(rng, 3 * TILE)
+    args = [jnp.asarray(x) for x in (price, qty, new_price, new_qty, mask)]
+    _, _, p1 = update_stats(*args)
+    _, _, p2 = update_stats(*args)
+    assert p1.shape == (3, N_STATS)
+    np.testing.assert_array_equal(p1, p2)

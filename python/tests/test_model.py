@@ -1,0 +1,91 @@
+"""L2 correctness: analytics graph shapes + semantics vs numpy, and the
+histogram vs its searchsorted reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from compile import model
+from compile.kernels.ref import price_histogram_ref
+from compile.kernels.update_stats import N_STATS, TILE
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def inputs(n, seed=0, pad=0):
+    rng = np.random.default_rng(seed)
+    price = rng.uniform(0, 10, n).astype(np.float32)
+    qty = rng.uniform(0, 500, n).astype(np.float32)
+    new_price = rng.uniform(0, 10, n).astype(np.float32)
+    new_qty = rng.uniform(0, 500, n).astype(np.float32)
+    mask = (rng.uniform(0, 1, n) < 0.5).astype(np.float32)
+    if pad:
+        mask[n - pad:] = -1.0
+    return tuple(jnp.asarray(x) for x in (price, qty, new_price, new_qty, mask))
+
+
+class TestAnalytics:
+    def test_output_shapes(self):
+        n = 2 * TILE
+        up, uq, summary = model.analytics(*inputs(n))
+        assert up.shape == (n,)
+        assert uq.shape == (n,)
+        assert summary.shape == (N_STATS + model.HIST_BINS,)
+
+    def test_summary_stats_vs_numpy(self):
+        n = 4 * TILE
+        price, qty, new_price, new_qty, mask = inputs(n, seed=1, pad=200)
+        _, _, summary = model.analytics(price, qty, new_price, new_qty, mask)
+        p, q = np.asarray(price), np.asarray(qty)
+        np_p, np_q, m = np.asarray(new_price), np.asarray(new_qty), np.asarray(mask)
+        up = np.where(m > 0, np_p, p)
+        uq = np.where(m > 0, np_q, q)
+        valid = m >= 0
+        np.testing.assert_allclose(float(summary[0]),
+                                   np.sum(up[valid] * uq[valid]),
+                                   rtol=1e-4)
+        assert int(summary[1]) == valid.sum()
+        np.testing.assert_allclose(float(summary[3]), up[valid].min(), rtol=1e-6)
+        np.testing.assert_allclose(float(summary[4]), up[valid].max(), rtol=1e-6)
+
+    def test_histogram_counts_sum_to_valid(self):
+        n = 2 * TILE
+        price, qty, new_price, new_qty, mask = inputs(n, seed=2, pad=100)
+        _, _, summary = model.analytics(price, qty, new_price, new_qty, mask)
+        hist = np.asarray(summary[N_STATS:])
+        assert hist.shape == (model.HIST_BINS,)
+        assert int(hist.sum()) == n - 100
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31))
+    def test_histogram_matches_ref(self, seed):
+        n = TILE
+        rng = np.random.default_rng(seed)
+        prices = jnp.asarray(rng.uniform(0, 10, n).astype(np.float32))
+        valid = jnp.asarray((rng.uniform(0, 1, n) < 0.9).astype(np.float32))
+        ours = model.price_histogram(prices, valid)
+        ref = price_histogram_ref(prices, valid, model.HIST_BINS,
+                                  model.HIST_LO, model.HIST_HI)
+        np.testing.assert_allclose(np.asarray(ours), np.asarray(ref))
+
+    def test_value_sum_fast_path(self):
+        n = TILE
+        price, qty, _, _, mask = inputs(n, seed=3, pad=50)
+        (total,) = model.value_sum(price, qty, mask)
+        p, q, m = np.asarray(price), np.asarray(qty), np.asarray(mask)
+        np.testing.assert_allclose(float(total), np.sum(p[m >= 0] * q[m >= 0]),
+                                   rtol=1e-4)
+
+    def test_jit_compiles_once_per_shape(self):
+        f = jax.jit(model.analytics_tuple)
+        n = TILE
+        args = inputs(n, seed=4)
+        f(*args)
+        lowered = f.lower(*args)
+        compiled = lowered.compile()
+        # No giant constant folding / duplicate computations: cost analysis
+        # flop count should be O(N * small_constant).
+        flops = compiled.cost_analysis().get("flops", 0.0)
+        assert flops < n * 200, f"suspiciously heavy graph: {flops} flops"

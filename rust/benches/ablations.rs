@@ -1,0 +1,174 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//!   A. The 2×2 grid of the paper's two ingredients (memory × threads):
+//!      conventional | disk+threads | memory 1-thread | proposed.
+//!   B. Threads vs processes (message passing, the paper's §7 future work):
+//!      shared-memory pipeline vs Unix-socket RPC pool.
+//!   C. Pipeline parameters: batch size and queue depth (backpressure).
+//!   D. Key distribution: permute-all vs uniform vs zipf(0.99) skew.
+//!
+//! CSV: bench_out/ablations.csv.
+
+use std::sync::Arc;
+
+use membig::baseline::run_conventional;
+use membig::baseline::variants::{run_disk_multithread, run_memory_singlethread};
+use membig::ipc::ProcessPool;
+use membig::memstore::snapshot::load_store;
+use membig::memstore::ShardedStore;
+use membig::metrics::EngineMetrics;
+use membig::pipeline::executor::{run_streaming_update, run_update_in_memory};
+use membig::storage::latency::{DiskProfile, DiskSim};
+use membig::storage::table::{DiskTable, TableOptions};
+use membig::util::bench::{bench_out_dir, bench_scale, time_once};
+use membig::util::csv::CsvWriter;
+use membig::util::fmt::{commas, human_duration, rate};
+use membig::workload::gen::{generate_stock_updates, DatasetSpec, KeyDist};
+use membig::workload::stockfile::write_stock_file;
+
+fn store_for(spec: &DatasetSpec, shards: usize) -> Arc<ShardedStore> {
+    let s = Arc::new(ShardedStore::new(
+        shards,
+        (spec.records as usize / shards + 1).next_power_of_two(),
+    ));
+    for r in spec.iter() {
+        s.insert(r);
+    }
+    s
+}
+
+fn main() {
+    let scale = bench_scale();
+    let n = (500_000 / scale).max(20_000);
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let threads = cores.max(2); // topology is meaningful even on 1 core
+    let spec = DatasetSpec { records: n, ..Default::default() };
+    let ups = generate_stock_updates(&spec, n, KeyDist::PermuteAll, 7);
+    let dir = bench_out_dir().join("data").join("ablations");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let csv_path = bench_out_dir().join("ablations.csv");
+    let mut csv =
+        CsvWriter::create(&csv_path, &["ablation", "variant", "seconds", "notes"]).unwrap();
+
+    // ---- A: 2x2 memory × threads grid --------------------------------------
+    println!("=== A. memory × multiprocessing grid ({} updates) ===", commas(n));
+    let build_sim = Arc::new(DiskSim::new(DiskProfile::none()));
+    let table = DiskTable::create(
+        dir.join("grid"),
+        spec.iter(),
+        n,
+        build_sim,
+        TableOptions { cache_pages: 256, engine_overhead: true },
+    )
+    .unwrap();
+    drop(table);
+
+    // conventional (disk, 1 thread) — modeled.
+    let sim = Arc::new(DiskSim::new(DiskProfile::default()));
+    let table = DiskTable::open(dir.join("grid"), sim.clone(), TableOptions::default()).unwrap();
+    let m = EngineMetrics::new();
+    let conv = run_conventional(&table, &ups, &m).unwrap();
+    println!("  disk 1t (conventional): modeled {}", human_duration(conv.modeled));
+    csv.row(&["grid", "disk_1t", &format!("{:.3}", conv.modeled.as_secs_f64()), "modeled"])
+        .unwrap();
+
+    // disk + threads — modeled (single spindle: threads don't help).
+    let sim = Arc::new(DiskSim::new(DiskProfile::default()));
+    let table =
+        Arc::new(DiskTable::open(dir.join("grid"), sim.clone(), TableOptions::default()).unwrap());
+    sim.reset();
+    let (_, _, modeled) = run_disk_multithread(&table, &ups, threads, &m).unwrap();
+    println!("  disk {threads}t:                modeled {}", human_duration(modeled));
+    csv.row(&["grid", "disk_nt", &format!("{:.3}", modeled.as_secs_f64()), "modeled"]).unwrap();
+    drop(table);
+
+    // memory 1 thread — measured.
+    let s1 = store_for(&spec, 1);
+    let (_, mem1) = run_memory_singlethread(&s1, &ups, &m);
+    println!("  memory 1t:              {}", human_duration(mem1));
+    csv.row(&["grid", "mem_1t", &format!("{:.6}", mem1.as_secs_f64()), "measured"]).unwrap();
+
+    // memory + threads (proposed) — measured.
+    let sn = store_for(&spec, threads);
+    let (rep, memn) = time_once(|| run_update_in_memory(&sn, &ups, &m));
+    assert_eq!(rep.updates_applied, n);
+    println!("  memory {threads}t (proposed):   {}  ({})\n", human_duration(memn), rate(n, memn));
+    csv.row(&["grid", "mem_nt", &format!("{:.6}", memn.as_secs_f64()), "measured"]).unwrap();
+
+    // ---- B: threads vs processes (message passing) -------------------------
+    // NOTE: must point at the real `membig` binary — current_exe() inside a
+    // bench is the bench itself and would re-enter this main() (fork bomb).
+    println!("=== B. shared memory vs message passing ({} updates) ===", commas(n));
+    let membig_bin = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target/release/membig");
+    if membig_bin.exists() {
+        let records: Vec<_> = spec.iter().collect();
+        let mut pool =
+            ProcessPool::spawn_with_exe(threads, membig_bin).expect("worker processes");
+        let (_, load_t) = time_once(|| pool.load(&records).unwrap());
+        let ((applied, _), ipc_t) = time_once(|| pool.update(&ups).unwrap());
+        assert_eq!(applied, n);
+        pool.shutdown().unwrap();
+        println!("  processes (RPC/socket): load {} + update {}  ({})", human_duration(load_t),
+            human_duration(ipc_t), rate(n, ipc_t));
+        println!("  threads  (shared mem):  update {}  ({})", human_duration(memn), rate(n, memn));
+        let tax = ipc_t.as_secs_f64() / memn.as_secs_f64();
+        println!("  message-passing tax: {tax:.1}x (serialization + socket hops)\n");
+        csv.row(&["ipc", "processes", &format!("{:.6}", ipc_t.as_secs_f64()), "measured"]).unwrap();
+        csv.row(&["ipc", "threads", &format!("{:.6}", memn.as_secs_f64()), "measured"]).unwrap();
+    } else {
+        println!("  skipped: build the membig binary first (cargo build --release)\n");
+    }
+
+    // ---- C: batch size × queue depth ---------------------------------------
+    println!("=== C. pipeline parameters (streaming path) ===");
+    let stock = dir.join("abl_stock.dat");
+    write_stock_file(&stock, &ups).unwrap();
+    for (batch, depth) in
+        [(64usize, 2usize), (1024, 2), (8192, 2), (8192, 64), (65536, 64), (1024, 64)]
+    {
+        let build_sim = Arc::new(DiskSim::new(DiskProfile::none()));
+        let table = DiskTable::create(
+            dir.join(format!("c_{batch}_{depth}")),
+            spec.iter(),
+            n,
+            build_sim,
+            TableOptions::default(),
+        )
+        .unwrap();
+        let m = EngineMetrics::new();
+        let store = load_store(&table, threads, &m).unwrap();
+        let (rep, t) = time_once(|| {
+            run_streaming_update(&store, &stock, batch, depth, &m).unwrap()
+        });
+        assert_eq!(rep.updates_applied, n);
+        println!("  batch {batch:>6} depth {depth:>3}: {}  ({})", human_duration(t), rate(n, t));
+        csv.row(&[
+            "pipeline",
+            &format!("b{batch}_d{depth}"),
+            &format!("{:.6}", t.as_secs_f64()),
+            "measured",
+        ])
+        .unwrap();
+    }
+
+    // ---- D: key distribution ------------------------------------------------
+    println!("\n=== D. key distribution (skew) ===");
+    for (dist, name) in [
+        (KeyDist::PermuteAll, "permute_all"),
+        (KeyDist::Uniform, "uniform"),
+        (KeyDist::Zipf(0.99), "zipf_0.99"),
+    ] {
+        let dups = generate_stock_updates(&spec, n, dist, 13);
+        let store = store_for(&spec, threads);
+        let m = EngineMetrics::new();
+        let (rep, t) = time_once(|| run_update_in_memory(&store, &dups, &m));
+        assert_eq!(rep.updates_applied, n);
+        println!("  {name:<12}: {}  ({})", human_duration(t), rate(n, t));
+        csv.row(&["keydist", name, &format!("{:.6}", t.as_secs_f64()), "measured"]).unwrap();
+    }
+
+    csv.flush().unwrap();
+    println!("\nwrote {}", csv_path.display());
+}

@@ -1,0 +1,96 @@
+//! Analytics-path throughput (L1/L2 extension experiment in DESIGN.md):
+//! the AOT-compiled PJRT analytics model vs an equivalent hand-written Rust
+//! loop, per compiled batch size. Proves the three-layer path is fast
+//! enough that analytics over the full store is interactive.
+//!
+//! CSV: bench_out/analytics.csv. Skips cleanly if `make artifacts` hasn't run.
+
+use membig::runtime::AnalyticsEngine;
+use membig::util::bench::{bench_out_dir, stat_from};
+use membig::util::csv::CsvWriter;
+use membig::util::fmt::commas;
+use membig::util::rng::Rng;
+
+fn rust_reference(price: &[f32], qty: &[f32], new_price: &[f32], new_qty: &[f32], mask: &[f32]) -> (f64, u64) {
+    let mut value = 0f64;
+    let mut count = 0u64;
+    for i in 0..price.len() {
+        let (p, q) = if mask[i] > 0.0 { (new_price[i], new_qty[i]) } else { (price[i], qty[i]) };
+        if mask[i] >= 0.0 {
+            value += p as f64 * q as f64;
+            count += 1;
+        }
+    }
+    (value, count)
+}
+
+fn main() {
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("analytics bench skipped: run `make artifacts` first");
+        return;
+    }
+    let engine = AnalyticsEngine::load(&artifacts).expect("engine");
+    println!("=== analytics path: PJRT ({}) vs pure-Rust loop ===\n", engine.platform());
+
+    let csv_path = bench_out_dir().join("analytics.csv");
+    let mut csv = CsvWriter::create(
+        &csv_path,
+        &["batch", "pjrt_mean_us", "pjrt_rows_per_sec", "rust_mean_us", "rust_rows_per_sec"],
+    )
+    .unwrap();
+
+    for &batch in &[4096usize, 16384, 65536] {
+        let mut rng = Rng::new(batch as u64);
+        let gen = |rng: &mut Rng, hi: f64, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.range_f64(0.0, hi) as f32).collect()
+        };
+        let price = gen(&mut rng, 10.0, batch);
+        let qty = gen(&mut rng, 500.0, batch);
+        let new_price = gen(&mut rng, 10.0, batch);
+        let new_qty = gen(&mut rng, 500.0, batch);
+        let mask: Vec<f32> =
+            (0..batch).map(|_| if rng.chance(0.5) { 1.0f32 } else { 0.0 }).collect();
+
+        // PJRT path (full call: pad + copy + execute + unpack).
+        let mut samples = Vec::new();
+        let mut pjrt_value = 0.0;
+        for _ in 0..20 {
+            let t0 = std::time::Instant::now();
+            let r = engine.analytics(&price, &qty, &new_price, &new_qty, &mask).unwrap();
+            samples.push(t0.elapsed());
+            pjrt_value = r.stats.total_value;
+        }
+        let pjrt = stat_from(&format!("pjrt analytics n={batch}"), samples);
+        println!("{}", pjrt.render(Some(batch as u64)));
+
+        // Pure-Rust loop.
+        let mut samples = Vec::new();
+        let mut rust_value = 0.0;
+        for _ in 0..20 {
+            let t0 = std::time::Instant::now();
+            let (v, _) = std::hint::black_box(rust_reference(&price, &qty, &new_price, &new_qty, &mask));
+            samples.push(t0.elapsed());
+            rust_value = v;
+        }
+        let rust = stat_from(&format!("rust loop     n={batch}"), samples);
+        println!("{}", rust.render(Some(batch as u64)));
+
+        let rel = (pjrt_value - rust_value).abs() / rust_value;
+        assert!(rel < 1e-4, "paths disagree: pjrt={pjrt_value} rust={rust_value}");
+        println!("  values agree (rel err {rel:.2e}); pjrt does {}x the work (updates+stats+histogram)\n",
+            3);
+
+        csv.row(&[
+            batch.to_string(),
+            format!("{:.1}", pjrt.mean.as_secs_f64() * 1e6),
+            format!("{:.0}", pjrt.ops_per_sec(batch as u64)),
+            format!("{:.1}", rust.mean.as_secs_f64() * 1e6),
+            format!("{:.0}", rust.ops_per_sec(batch as u64)),
+        ])
+        .unwrap();
+    }
+    csv.flush().unwrap();
+    println!("wrote {}", csv_path.display());
+    let _ = commas(0);
+}

@@ -1,0 +1,122 @@
+//! Figure 1 (the "special Hash Table data structure"): our robin-hood table
+//! vs `std::collections::HashMap` on the paper's workload shape — bulk
+//! insert, point get, in-place update — plus probe-length diagnostics and a
+//! load-factor sweep. CSV: bench_out/hashtable.csv.
+
+use membig::memstore::HashTable;
+use membig::util::bench::{bench_out_dir, bench_scale, stat_from};
+use membig::util::csv::CsvWriter;
+use membig::util::fmt::commas;
+use membig::util::rng::Rng;
+use membig::workload::gen::DatasetSpec;
+use membig::workload::record::BookRecord;
+
+fn main() {
+    let scale = bench_scale();
+    let n = (1_000_000 / scale).max(50_000);
+    let spec = DatasetSpec { records: n, ..Default::default() };
+    println!("=== hashtable: ours vs std::HashMap, {} records ===\n", commas(n));
+
+    let records: Vec<BookRecord> = spec.iter().collect();
+    let probe_keys: Vec<u64> = {
+        let mut rng = Rng::new(3);
+        (0..n).map(|_| records[rng.gen_range(n) as usize].isbn13).collect()
+    };
+
+    let csv_path = bench_out_dir().join("hashtable.csv");
+    let mut csv = CsvWriter::create(&csv_path, &["table", "op", "ops_per_sec"]).unwrap();
+    let iters = 5;
+
+    // ---- ours -----------------------------------------------------------
+    let mut ours = HashTable::with_capacity(n as usize);
+    {
+        let mut samples = Vec::new();
+        for _ in 0..iters {
+            ours = HashTable::with_capacity(n as usize);
+            let t0 = std::time::Instant::now();
+            for r in &records {
+                ours.insert(*r);
+            }
+            samples.push(t0.elapsed());
+        }
+        let s = stat_from("ours insert", samples);
+        println!("{}", s.render(Some(n)));
+        csv.row(&["ours", "insert", &format!("{:.0}", s.ops_per_sec(n))]).unwrap();
+    }
+    for (op, name) in [(0, "get"), (1, "update")] {
+        let mut samples = Vec::new();
+        for _ in 0..iters {
+            let t0 = std::time::Instant::now();
+            for &k in &probe_keys {
+                if op == 0 {
+                    std::hint::black_box(ours.get(k));
+                } else {
+                    ours.update(k, |r| r.quantity ^= 1);
+                }
+            }
+            samples.push(t0.elapsed());
+        }
+        let s = stat_from(&format!("ours {name}"), samples);
+        println!("{}", s.render(Some(n)));
+        csv.row(&["ours", name, &format!("{:.0}", s.ops_per_sec(n))]).unwrap();
+    }
+    println!("ours: capacity={} max_probe={} mem={}\n", commas(ours.capacity() as u64),
+        ours.max_probe(), membig::util::fmt::bytes(ours.memory_bytes() as u64));
+
+    // ---- std::HashMap ----------------------------------------------------
+    let mut std_map: std::collections::HashMap<u64, (u64, u32)> = Default::default();
+    {
+        let mut samples = Vec::new();
+        for _ in 0..iters {
+            std_map = std::collections::HashMap::with_capacity(n as usize);
+            let t0 = std::time::Instant::now();
+            for r in &records {
+                std_map.insert(r.isbn13, (r.price_cents, r.quantity));
+            }
+            samples.push(t0.elapsed());
+        }
+        let s = stat_from("std insert", samples);
+        println!("{}", s.render(Some(n)));
+        csv.row(&["std", "insert", &format!("{:.0}", s.ops_per_sec(n))]).unwrap();
+    }
+    for (op, name) in [(0, "get"), (1, "update")] {
+        let mut samples = Vec::new();
+        for _ in 0..iters {
+            let t0 = std::time::Instant::now();
+            for &k in &probe_keys {
+                if op == 0 {
+                    std::hint::black_box(std_map.get(&k));
+                } else if let Some(v) = std_map.get_mut(&k) {
+                    v.1 ^= 1;
+                }
+            }
+            samples.push(t0.elapsed());
+        }
+        let s = stat_from(&format!("std {name}"), samples);
+        println!("{}", s.render(Some(n)));
+        csv.row(&["std", name, &format!("{:.0}", s.ops_per_sec(n))]).unwrap();
+    }
+
+    // ---- load-factor sweep (probe behaviour near capacity) ---------------
+    // Fix the capacity (hint 800k → 2^20 buckets, grow threshold 917k) and
+    // fill to each target load, watching the probe length climb.
+    println!("\nload-factor sweep (ours, fixed 2^20-bucket table):");
+    for load in [0.5f64, 0.7, 0.8, 0.85] {
+        let mut t = HashTable::with_capacity(800_000);
+        let cap = t.capacity();
+        let items = ((cap as f64 * load) as usize).min(records.len());
+        for r in records.iter().take(items) {
+            t.insert(*r);
+        }
+        assert_eq!(t.capacity(), cap, "sweep must not trigger growth");
+        println!(
+            "  load {:.2} ({} items / {} buckets): max_probe {}",
+            t.len() as f64 / cap as f64,
+            commas(t.len() as u64),
+            commas(cap as u64),
+            t.max_probe()
+        );
+    }
+    csv.flush().unwrap();
+    println!("\nwrote {}", csv_path.display());
+}

@@ -1,0 +1,200 @@
+//! **Table 1 + Figure 6** — the paper's headline experiment.
+//!
+//! Database of 2M book records; for each N ∈ {100k, 500k, 1M, 1.5M, 2M},
+//! update N records with fresh prices/quantities from a Stock.dat feed:
+//!   * conventional app — disk-resident per-record read-modify-write
+//!     (HDD latency model, full-scale *modeled* time reported; wall time is
+//!     the scaled-sleep run, default scale 0);
+//!   * proposed app — load into sharded in-memory hash tables, then one
+//!     worker thread per core applies the feed (measured wall-clock, it
+//!     really runs).
+//!
+//! Outputs: paper-style table + ASCII Figure 6 on stdout; CSV series in
+//! bench_out/table1.csv; paper-reference comparison with shape checks.
+//!
+//! `MEMBIG_BENCH_SCALE=k` divides all sizes by k (CI). Paper scale: k=1.
+
+use std::sync::Arc;
+
+use membig::config::EngineConfig;
+use membig::coordinator::report::{render_figure6, render_table1, RunReport};
+use membig::coordinator::Workbench;
+use membig::memstore::snapshot::load_store;
+use membig::metrics::EngineMetrics;
+use membig::pipeline::executor::run_streaming_update;
+use membig::storage::latency::{DiskProfile, DiskSim};
+use membig::storage::table::{DiskTable, TableOptions};
+use membig::util::bench::{bench_out_dir, bench_scale, time_once};
+use membig::util::csv::CsvWriter;
+use membig::util::fmt::{commas, human_duration, paper_hms};
+use membig::workload::gen::DatasetSpec;
+
+/// Paper's Table 1 (seconds) for reference columns.
+const PAPER: &[(u64, u64, u64)] = &[
+    // (N, conventional_s, proposed_s)
+    (100_000, 6_602, 4),
+    (500_000, 29_535, 6),
+    (1_000_000, 64_052, 16),
+    (1_500_000, 97_325, 32),
+    (2_000_000, 123_471, 63),
+];
+
+fn main() {
+    let scale = bench_scale();
+    let records = 2_000_000 / scale;
+    let sweep: Vec<u64> =
+        [100_000u64, 500_000, 1_000_000, 1_500_000, 2_000_000].iter().map(|n| n / scale).collect();
+
+    let mut cfg = EngineConfig::default();
+    cfg.data_dir = bench_out_dir().join("data");
+    cfg.disk.scale = 0.0; // modeled time only; no sleeping
+    let cfg = cfg.validated().unwrap();
+
+    println!(
+        "=== Table 1 bench: {} records, sweep {:?}, {} threads ===",
+        commas(records),
+        sweep.iter().map(|n| commas(*n)).collect::<Vec<_>>(),
+        cfg.threads
+    );
+    println!("disk model: {:?}\n", cfg.disk);
+
+    let spec = DatasetSpec { records, seed: 0xB00C, ..Default::default() };
+    let wb = Workbench::new(&cfg.data_dir, spec.clone());
+
+    // Build the database + stock files once (outside measurement, like the
+    // paper's §5 setup).
+    let table = wb.ensure_table(&cfg).expect("table build");
+    drop(table);
+
+    let mut rows = Vec::new();
+    for &n in &sweep {
+        let stock = wb.ensure_stock(n).expect("stock build");
+
+        // ---- proposed -------------------------------------------------
+        let metrics = EngineMetrics::new();
+        let load_sim = Arc::new(DiskSim::new(DiskProfile::none()));
+        let table = DiskTable::open(
+            wb.table_dir(),
+            load_sim,
+            TableOptions { cache_pages: cfg.page_cache_pages, engine_overhead: false },
+        )
+        .expect("open table");
+        let (store, load_time) =
+            time_once(|| load_store(&table, cfg.shards, &metrics).expect("load"));
+        let (rep, update_time) = time_once(|| {
+            run_streaming_update(&store, &stock, cfg.batch_size, cfg.channel_depth, &metrics)
+                .expect("pipeline")
+        });
+        assert_eq!(rep.updates_applied, n, "proposed must apply all updates");
+        let proposed = load_time + update_time;
+        drop(table);
+
+        // ---- conventional ---------------------------------------------
+        // Fresh latency sim; real file I/O + modeled mechanical time.
+        let sim = Arc::new(DiskSim::new(cfg.disk));
+        let table = DiskTable::open(
+            wb.table_dir(),
+            sim.clone(),
+            TableOptions { cache_pages: cfg.page_cache_pages, engine_overhead: true },
+        )
+        .expect("open table");
+        let metrics2 = EngineMetrics::new();
+        let conv = membig::baseline::run_conventional_stream(&table, &stock, &metrics2)
+            .expect("conventional");
+        assert_eq!(conv.updates_applied, n);
+
+        let row = RunReport {
+            n_updates: n,
+            conventional: conv.modeled,
+            conventional_wall: conv.wall,
+            proposed,
+        };
+        println!(
+            "N={:>9}  conventional: modeled {} (wall {})  proposed: {} (load {} + update {})  speedup {:.0}x",
+            commas(n),
+            paper_hms(row.conventional),
+            human_duration(row.conventional_wall),
+            human_duration(row.proposed),
+            human_duration(load_time),
+            human_duration(update_time),
+            row.speedup()
+        );
+        rows.push(row);
+    }
+
+    println!("\n{}", render_table1(&rows));
+    println!("{}", render_figure6(&rows));
+
+    // CSV series (Figure 6 data).
+    let csv_path = bench_out_dir().join("table1.csv");
+    let mut csv = CsvWriter::create(
+        &csv_path,
+        &[
+            "n_updates",
+            "conventional_modeled_s",
+            "conventional_wall_s",
+            "proposed_s",
+            "speedup",
+            "paper_conventional_s",
+            "paper_proposed_s",
+            "paper_speedup",
+        ],
+    )
+    .unwrap();
+    for (row, paper) in rows.iter().zip(PAPER) {
+        csv.row(&[
+            row.n_updates.to_string(),
+            format!("{:.3}", row.conventional.as_secs_f64()),
+            format!("{:.3}", row.conventional_wall.as_secs_f64()),
+            format!("{:.3}", row.proposed.as_secs_f64()),
+            format!("{:.1}", row.speedup()),
+            paper.1.to_string(),
+            paper.2.to_string(),
+            format!("{:.1}", paper.1 as f64 / paper.2 as f64),
+        ])
+        .unwrap();
+    }
+    csv.flush().unwrap();
+    println!("wrote {}", csv_path.display());
+
+    // ---- shape checks vs the paper ------------------------------------
+    println!("\n=== shape checks (paper vs measured) ===");
+    let mut ok = true;
+    for (row, &(pn, pc, pp)) in rows.iter().zip(PAPER) {
+        let paper_speedup = pc as f64 / pp as f64;
+        let ours = row.speedup();
+        // Same winner by a large factor at every N.
+        let pass = ours > 100.0;
+        println!(
+            "N={:>9} (paper N={:>9}): paper speedup {:>6.0}x | measured {:>8.0}x | {}",
+            commas(row.n_updates),
+            commas(pn),
+            paper_speedup,
+            ours,
+            if pass { "✓" } else { "✗" }
+        );
+        ok &= pass;
+    }
+    // Conventional time must grow ~linearly in N (the paper's key shape).
+    let first = &rows[0];
+    let last = rows.last().unwrap();
+    let growth = last.conventional.as_secs_f64() / first.conventional.as_secs_f64();
+    let n_growth = last.n_updates as f64 / first.n_updates as f64;
+    println!(
+        "conventional growth {:.1}x over {:.0}x more updates (paper: {:.1}x) {}",
+        growth,
+        n_growth,
+        123_471.0 / 6_602.0,
+        if growth > 0.5 * n_growth { "✓ ~linear" } else { "✗" }
+    );
+    assert!(ok, "speedup shape check failed");
+    assert!(growth > 0.5 * n_growth, "conventional must scale ~linearly with N");
+
+    // Paper's §5 reason 1 sanity: modeled per-record cost in the tens of ms.
+    let per_rec = last.conventional.as_secs_f64() / last.n_updates as f64;
+    println!(
+        "conventional per-record cost: {:.1}ms (paper: {:.1}ms)",
+        per_rec * 1e3,
+        123_471_000.0 / 2_000_000.0
+    );
+}

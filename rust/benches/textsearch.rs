@@ -1,0 +1,99 @@
+//! Unstructured-data extension bench (paper §7): the memory-based
+//! multi-processing method applied to text search.
+//!
+//!   * build: inverted-index construction, 1 thread vs N threads
+//!     (map/reduce-shaped local-index merge);
+//!   * query: in-memory index search vs disk-scan baseline under the HDD
+//!     latency model — the Table-1 shape on a text workload.
+//!
+//! CSV: bench_out/textsearch.csv.
+
+use std::sync::Arc;
+
+use membig::storage::latency::{DiskProfile, DiskSim};
+use membig::textstore::corpus::write_corpus;
+use membig::textstore::scan::scan_search;
+use membig::textstore::{CorpusSpec, InvertedIndex};
+use membig::util::bench::{bench_out_dir, bench_scale, stat_from, time_once};
+use membig::util::csv::CsvWriter;
+use membig::util::fmt::{bytes, commas, human_duration, rate};
+
+fn main() {
+    let scale = bench_scale();
+    let docs = (50_000 / scale).max(2_000);
+    let threads = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1).max(2);
+    let spec = CorpusSpec { docs, ..Default::default() };
+    println!("=== textsearch: {} docs, vocab {} ===\n", commas(docs), commas(spec.vocab));
+
+    let corpus = membig::textstore::generate_corpus(&spec);
+    let total_bytes: usize = corpus.iter().map(|d| d.text.len()).sum();
+    println!("corpus: {}", bytes(total_bytes as u64));
+
+    let csv_path = bench_out_dir().join("textsearch.csv");
+    let mut csv = CsvWriter::create(&csv_path, &["metric", "variant", "value"]).unwrap();
+
+    // ---- build scaling -----------------------------------------------------
+    let (idx1, t1) = time_once(|| InvertedIndex::build(&corpus));
+    println!("index build 1t:  {}  ({})", human_duration(t1), rate(docs, t1));
+    let (idxn, tn) = time_once(|| InvertedIndex::build_parallel(&corpus, threads));
+    println!("index build {threads}t:  {}  ({})", human_duration(tn), rate(docs, tn));
+    assert_eq!(idx1.term_count(), idxn.term_count());
+    println!(
+        "index: {} terms, {} resident\n",
+        commas(idx1.term_count() as u64),
+        bytes(idxn.memory_bytes() as u64)
+    );
+    csv.row(&["build_s", "1_thread", &format!("{:.4}", t1.as_secs_f64())]).unwrap();
+    csv.row(&["build_s", &format!("{threads}_threads"), &format!("{:.4}", tn.as_secs_f64())])
+        .unwrap();
+
+    // ---- query: memory vs disk ----------------------------------------------
+    let dir = bench_out_dir().join("data");
+    std::fs::create_dir_all(&dir).unwrap();
+    let corpus_path = dir.join("corpus.tsv");
+    write_corpus(&corpus_path, &spec).unwrap();
+
+    let queries = ["t0", "t3 t7", "t1 t4 t9", "t12 t55", "t2"];
+    // In-memory index.
+    let mut samples = Vec::new();
+    for _ in 0..10 {
+        let t0 = std::time::Instant::now();
+        for q in &queries {
+            std::hint::black_box(idxn.search(q, 10));
+        }
+        samples.push(t0.elapsed() / queries.len() as u32);
+    }
+    let mem_stat = stat_from("index query", samples);
+    println!("in-memory query:   mean {}", human_duration(mem_stat.mean));
+
+    // Disk scan (modeled HDD + real file I/O).
+    let sim = Arc::new(DiskSim::new(DiskProfile::default()));
+    let mut scan_results = Vec::new();
+    let t0 = std::time::Instant::now();
+    for q in &queries {
+        scan_results.push(scan_search(&corpus_path, q, 10, &sim).unwrap());
+    }
+    let scan_wall = t0.elapsed() / queries.len() as u32;
+    let scan_modeled = sim.modeled() / queries.len() as u32;
+    println!(
+        "disk-scan query:   wall {} | modeled (HDD) {}",
+        human_duration(scan_wall),
+        human_duration(scan_modeled)
+    );
+
+    // Results must agree between paths.
+    for (q, scan_hits) in queries.iter().zip(&scan_results) {
+        assert_eq!(&idxn.search(q, 10), scan_hits, "query {q:?}");
+    }
+
+    let speedup = scan_modeled.as_secs_f64() / mem_stat.mean.as_secs_f64().max(1e-9);
+    println!("\nmemory-based speedup on text: {speedup:.0}x (same winner/shape as Table 1)");
+    csv.row(&["query_us", "memory", &format!("{:.1}", mem_stat.mean.as_secs_f64() * 1e6)])
+        .unwrap();
+    csv.row(&["query_us", "disk_modeled", &format!("{:.1}", scan_modeled.as_secs_f64() * 1e6)])
+        .unwrap();
+    csv.row(&["speedup", "memory_vs_disk", &format!("{speedup:.0}")]).unwrap();
+    csv.flush().unwrap();
+    println!("wrote {}", csv_path.display());
+    assert!(speedup > 100.0, "memory must dominate the modeled disk scan");
+}

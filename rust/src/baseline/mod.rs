@@ -1,0 +1,9 @@
+//! Baselines: the paper's *conventional application* (disk-based per-record
+//! read-modify-write against the DiskTable) plus ablation variants that
+//! isolate each ingredient of the proposed method (memory-only,
+//! parallelism-only).
+
+pub mod conventional;
+pub mod variants;
+
+pub use conventional::{run_conventional, run_conventional_stream, ConventionalReport};

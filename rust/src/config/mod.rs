@@ -1,0 +1,435 @@
+//! Typed configuration + CLI argument parsing (clap is unavailable offline).
+//!
+//! Two pieces:
+//! - [`Args`]: a small `--flag value` / `--flag=value` / positional parser
+//!   with typed getters and an auto-generated usage string.
+//! - [`EngineConfig`]: the engine's runtime configuration, loadable from an
+//!   INI-style file (`key = value`, `[section]` headers, `#`/`;` comments)
+//!   and overridable from CLI flags — a real config system, not a bag of
+//!   constants.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::storage::latency::DiskProfile;
+
+// ---------------------------------------------------------------------------
+// CLI argument parser
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("unknown flag '{0}' (see --help)")]
+    Unknown(String),
+    #[error("flag '--{0}' expects a value")]
+    MissingValue(String),
+    #[error("invalid value for '--{0}': {1}")]
+    Invalid(String, String),
+    #[error("missing required positional argument <{0}>")]
+    MissingPositional(&'static str),
+}
+
+/// Declarative flag spec: `(name, value_hint_or_empty, help)`.
+/// Flags with an empty value hint are booleans.
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub value: &'static str,
+    pub help: &'static str,
+}
+
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args against a spec. `spec` defines which flags take values.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, spec: &[FlagSpec]) -> Result<Args, ArgError> {
+        let takes_value: BTreeMap<&str, bool> =
+            spec.iter().map(|f| (f.name, !f.value.is_empty())).collect();
+        let mut flags = BTreeMap::new();
+        let mut bools = Vec::new();
+        let mut positionals = Vec::new();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                match takes_value.get(name.as_str()) {
+                    None => return Err(ArgError::Unknown(name)),
+                    Some(false) => {
+                        if inline.is_some() {
+                            return Err(ArgError::Invalid(name, "boolean flag takes no value".into()));
+                        }
+                        bools.push(name);
+                    }
+                    Some(true) => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => it.next().ok_or(ArgError::MissingValue(name.clone()))?,
+                        };
+                        flags.insert(name, v);
+                    }
+                }
+            } else {
+                positionals.push(a);
+            }
+        }
+        Ok(Args { flags, bools, positionals })
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, ArgError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| ArgError::Invalid(name.to_string(), e.to_string())),
+        }
+    }
+
+    /// Parse counts like `2000000`, `2M`, `500k`, `1.5M`.
+    pub fn get_count(&self, name: &str) -> Result<Option<u64>, ArgError> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => parse_count(v)
+                .map(Some)
+                .map_err(|e| ArgError::Invalid(name.to_string(), e)),
+        }
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    pub fn usage(cmd: &str, about: &str, spec: &[FlagSpec]) -> String {
+        let mut s = format!("{about}\n\nUSAGE:\n  {cmd} [flags]\n\nFLAGS:\n");
+        for f in spec {
+            let head = if f.value.is_empty() {
+                format!("--{}", f.name)
+            } else {
+                format!("--{} <{}>", f.name, f.value)
+            };
+            s.push_str(&format!("  {head:<34} {}\n", f.help));
+        }
+        s
+    }
+}
+
+/// `2M` / `500k` / `1.5M` / plain integers.
+pub fn parse_count(s: &str) -> Result<u64, String> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last() {
+        Some('k') | Some('K') => (&s[..s.len() - 1], 1_000f64),
+        Some('m') | Some('M') => (&s[..s.len() - 1], 1_000_000f64),
+        Some('g') | Some('G') | Some('b') | Some('B') => (&s[..s.len() - 1], 1_000_000_000f64),
+        _ => (s, 1f64),
+    };
+    let v: f64 = num.parse().map_err(|e| format!("bad count '{s}': {e}"))?;
+    if v < 0.0 {
+        return Err(format!("negative count '{s}'"));
+    }
+    Ok((v * mult).round() as u64)
+}
+
+// ---------------------------------------------------------------------------
+// Engine configuration
+// ---------------------------------------------------------------------------
+
+/// Full engine configuration. Every field has a sane default; an INI file
+/// and/or CLI flags override. This is the single source of truth threaded
+/// through the coordinator, pipeline, storage and runtime layers.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Worker threads for the proposed (memory) path. 0 = all cores.
+    pub threads: usize,
+    /// Hash-table shards; usually == threads (paper: one table per thread).
+    pub shards: usize,
+    /// Per-shard initial capacity hint (records).
+    pub shard_capacity_hint: usize,
+    /// Bounded channel depth between reader and workers (batches).
+    pub channel_depth: usize,
+    /// Records per parsed batch flowing through the pipeline.
+    pub batch_size: usize,
+    /// Directory for on-disk tables / stock files / artifacts.
+    pub data_dir: PathBuf,
+    /// Directory of AOT-compiled HLO artifacts.
+    pub artifacts_dir: PathBuf,
+    /// Disk latency model for the conventional baseline.
+    pub disk: DiskProfile,
+    /// Page-cache size (pages) for the disk store.
+    pub page_cache_pages: usize,
+    /// RNG seed for workload generation.
+    pub seed: u64,
+    /// Write updated store back to disk at the end of a run.
+    pub writeback: bool,
+    /// TCP bind address for `membig serve`.
+    pub bind: String,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        EngineConfig {
+            threads: cores,
+            shards: cores,
+            shard_capacity_hint: 1 << 16,
+            channel_depth: 64,
+            batch_size: 8192,
+            data_dir: PathBuf::from("data"),
+            artifacts_dir: PathBuf::from("artifacts"),
+            disk: DiskProfile::default(),
+            page_cache_pages: 256,
+            seed: 0xB00C,
+            writeback: false,
+            bind: "127.0.0.1:7979".to_string(),
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Load from an INI file, falling back to defaults for missing keys.
+    pub fn from_ini(path: impl AsRef<Path>) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| format!("read {}: {e}", path.as_ref().display()))?;
+        let ini = parse_ini(&text)?;
+        let mut cfg = EngineConfig::default();
+        cfg.apply_ini(&ini)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_ini(&mut self, ini: &Ini) -> Result<(), String> {
+        let get = |sec: &str, key: &str| ini.get(sec, key);
+        macro_rules! set {
+            ($field:expr, $sec:expr, $key:expr, $ty:ty) => {
+                if let Some(v) = get($sec, $key) {
+                    $field = v.parse::<$ty>().map_err(|e| format!("{}::{}: {e}", $sec, $key))?;
+                }
+            };
+        }
+        set!(self.threads, "engine", "threads", usize);
+        set!(self.shards, "engine", "shards", usize);
+        set!(self.shard_capacity_hint, "engine", "shard_capacity_hint", usize);
+        set!(self.channel_depth, "pipeline", "channel_depth", usize);
+        set!(self.batch_size, "pipeline", "batch_size", usize);
+        set!(self.page_cache_pages, "storage", "page_cache_pages", usize);
+        set!(self.seed, "engine", "seed", u64);
+        set!(self.writeback, "engine", "writeback", bool);
+        if let Some(v) = get("engine", "data_dir") {
+            self.data_dir = PathBuf::from(v);
+        }
+        if let Some(v) = get("engine", "artifacts_dir") {
+            self.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = get("server", "bind") {
+            self.bind = v.to_string();
+        }
+        set!(self.disk.avg_seek_ms, "disk", "avg_seek_ms", f64);
+        set!(self.disk.rotational_ms, "disk", "rotational_ms", f64);
+        set!(self.disk.transfer_mb_s, "disk", "transfer_mb_s", f64);
+        set!(self.disk.cpu_overhead_ms, "disk", "cpu_overhead_ms", f64);
+        set!(self.disk.scale, "disk", "scale", f64);
+        Ok(())
+    }
+
+    /// Validate invariants; call after all overrides are applied.
+    pub fn validated(mut self) -> Result<Self, String> {
+        if self.threads == 0 {
+            self.threads =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        }
+        if self.shards == 0 {
+            self.shards = self.threads;
+        }
+        if self.batch_size == 0 {
+            return Err("batch_size must be > 0".into());
+        }
+        if self.channel_depth == 0 {
+            return Err("channel_depth must be > 0".into());
+        }
+        if !(self.disk.scale >= 0.0) {
+            return Err("disk.scale must be >= 0".into());
+        }
+        Ok(self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// INI parser
+// ---------------------------------------------------------------------------
+
+/// Parsed INI: section → key → value. Keys outside any section land in "".
+#[derive(Debug, Default, Clone)]
+pub struct Ini {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Ini {
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+pub fn parse_ini(text: &str) -> Result<Ini, String> {
+    let mut ini = Ini::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?;
+            section = name.trim().to_string();
+            ini.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected 'key = value'", lineno + 1))?;
+        ini.sections
+            .entry(section.clone())
+            .or_default()
+            .insert(k.trim().to_string(), strip_quotes(v.trim()).to_string());
+    }
+    Ok(ini)
+}
+
+fn strip_quotes(s: &str) -> &str {
+    if s.len() >= 2 && ((s.starts_with('"') && s.ends_with('"')) || (s.starts_with('\'') && s.ends_with('\''))) {
+        &s[1..s.len() - 1]
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "records", value: "N", help: "record count" },
+            FlagSpec { name: "threads", value: "N", help: "worker threads" },
+            FlagSpec { name: "verbose", value: "", help: "chatty output" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(sv(&["run", "--records", "2M", "--verbose", "--threads=4", "out.csv"]), &spec()).unwrap();
+        assert_eq!(a.positional(0), Some("run"));
+        assert_eq!(a.positional(1), Some("out.csv"));
+        assert_eq!(a.get_count("records").unwrap(), Some(2_000_000));
+        assert_eq!(a.get_parsed::<usize>("threads").unwrap(), Some(4));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(matches!(Args::parse(sv(&["--nope"]), &spec()), Err(ArgError::Unknown(_))));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            Args::parse(sv(&["--records"]), &spec()),
+            Err(ArgError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bool_with_value_rejected() {
+        assert!(Args::parse(sv(&["--verbose=yes"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn count_suffixes() {
+        assert_eq!(parse_count("100000").unwrap(), 100_000);
+        assert_eq!(parse_count("500k").unwrap(), 500_000);
+        assert_eq!(parse_count("1.5M").unwrap(), 1_500_000);
+        assert_eq!(parse_count("2m").unwrap(), 2_000_000);
+        assert!(parse_count("x2").is_err());
+        assert!(parse_count("-5").is_err());
+    }
+
+    #[test]
+    fn ini_roundtrip() {
+        let text = r#"
+# comment
+[engine]
+threads = 8
+seed = 77
+data_dir = "/tmp/membig"
+
+[disk]
+avg_seek_ms = 8.5
+scale = 0.001
+
+[pipeline]
+batch_size = 1024
+"#;
+        let ini = parse_ini(text).unwrap();
+        assert_eq!(ini.get("engine", "threads"), Some("8"));
+        let mut cfg = EngineConfig::default();
+        cfg.apply_ini(&ini).unwrap();
+        assert_eq!(cfg.threads, 8);
+        assert_eq!(cfg.seed, 77);
+        assert_eq!(cfg.data_dir, PathBuf::from("/tmp/membig"));
+        assert_eq!(cfg.batch_size, 1024);
+        assert!((cfg.disk.scale - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ini_bad_lines() {
+        assert!(parse_ini("[unterminated").is_err());
+        assert!(parse_ini("keywithoutvalue").is_err());
+    }
+
+    #[test]
+    fn config_validation() {
+        let mut c = EngineConfig::default();
+        c.batch_size = 0;
+        assert!(c.clone().validated().is_err());
+        c.batch_size = 10;
+        c.threads = 0;
+        let v = c.validated().unwrap();
+        assert!(v.threads >= 1);
+    }
+
+    #[test]
+    fn usage_lists_flags() {
+        let u = Args::usage("membig run", "Run things", &spec());
+        assert!(u.contains("--records <N>"));
+        assert!(u.contains("--verbose"));
+    }
+}

@@ -1,0 +1,113 @@
+//! The leader: wires config → workload → storage → memstore → pipeline →
+//! analytics → writeback, with per-phase timing. `run_proposed` is the
+//! paper's second application; `run_conventional` the first. `Workbench`
+//! prepares the experiment inputs (database + Stock.dat) the way §5 does.
+
+pub mod report;
+pub mod workbench;
+
+pub use report::{ProposedOutcome, RunReport};
+pub use workbench::Workbench;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::baseline::conventional::{run_conventional_stream, ConventionalReport};
+use crate::config::EngineConfig;
+use crate::memstore::snapshot::{load_store, verify_against_table, writeback};
+use crate::memstore::ShardedStore;
+use crate::metrics::EngineMetrics;
+use crate::pipeline::executor::{run_streaming_update, PipelineError};
+use crate::storage::table::{DiskTable, TableError, TableOptions};
+
+#[derive(Debug, thiserror::Error)]
+pub enum CoordinatorError {
+    #[error("table: {0}")]
+    Table(#[from] TableError),
+    #[error("pipeline: {0}")]
+    Pipeline(#[from] PipelineError),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("verification failed: {0} records diverge between store and table")]
+    Verification(u64),
+}
+
+/// Orchestrates one run of either application over prepared inputs.
+pub struct Coordinator {
+    pub cfg: EngineConfig,
+    pub metrics: Arc<EngineMetrics>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: EngineConfig) -> Self {
+        Coordinator { cfg, metrics: Arc::new(EngineMetrics::new()) }
+    }
+
+    fn table_opts(&self) -> TableOptions {
+        TableOptions { cache_pages: self.cfg.page_cache_pages, engine_overhead: true }
+    }
+
+    /// Open the experiment's disk table.
+    pub fn open_table(&self, dir: &Path) -> Result<DiskTable, CoordinatorError> {
+        let sim = Arc::new(crate::storage::latency::DiskSim::new(self.cfg.disk));
+        Ok(DiskTable::open(dir, sim, self.table_opts())?)
+    }
+
+    /// The paper's proposed application: load → parallel streaming update →
+    /// (optional) writeback → verify.
+    pub fn run_proposed(
+        &self,
+        table: &DiskTable,
+        stock_path: &Path,
+    ) -> Result<ProposedOutcome, CoordinatorError> {
+        let m = &self.metrics;
+
+        // Phase 1: load the database into sharded RAM tables (§4.1).
+        let store = m.phases.time("load", || load_store(table, self.cfg.shards, m))?;
+
+        // Phase 2: multi-threaded shared-memory update (§4.2).
+        let stream = run_streaming_update(
+            &store,
+            stock_path,
+            self.cfg.batch_size,
+            self.cfg.channel_depth,
+            m,
+        )?;
+
+        // Phase 3: optional writeback + verification.
+        let mut written = 0;
+        if self.cfg.writeback {
+            written = m.phases.time("writeback", || writeback(&store, table, m))?;
+            let diverged = verify_against_table(&store, table)?;
+            if diverged > 0 {
+                return Err(CoordinatorError::Verification(diverged));
+            }
+        }
+
+        let (count, value_cents) = store.value_sum_cents();
+        Ok(ProposedOutcome {
+            store,
+            stream,
+            records: count,
+            inventory_value_cents: value_cents,
+            written_back: written,
+            load: m.phases.get("load").unwrap_or_default(),
+            update: m.phases.get("update_stream").unwrap_or_default(),
+            writeback: m.phases.get("writeback").unwrap_or_default(),
+        })
+    }
+
+    /// The paper's conventional application.
+    pub fn run_conventional(
+        &self,
+        table: &DiskTable,
+        stock_path: &Path,
+    ) -> Result<ConventionalReport, CoordinatorError> {
+        Ok(run_conventional_stream(table, stock_path, &self.metrics)?)
+    }
+
+    /// Load-only (for servers/analytics without an update feed).
+    pub fn load_only(&self, table: &DiskTable) -> Result<Arc<ShardedStore>, CoordinatorError> {
+        Ok(self.metrics.phases.time("load", || load_store(table, self.cfg.shards, &self.metrics))?)
+    }
+}

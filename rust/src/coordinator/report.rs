@@ -1,0 +1,156 @@
+//! Run outcomes and rendering — the numbers Table 1 / Figure 6 are made of.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::memstore::ShardedStore;
+use crate::pipeline::executor::StreamReport;
+use crate::util::fmt::{commas, human_duration, paper_hms};
+use crate::util::json::Json;
+
+/// Result of a proposed-method run.
+pub struct ProposedOutcome {
+    /// The live store (kept for analytics / serving after the run).
+    pub store: Arc<ShardedStore>,
+    pub stream: StreamReport,
+    pub records: u64,
+    pub inventory_value_cents: u128,
+    pub written_back: u64,
+    pub load: Duration,
+    pub update: Duration,
+    pub writeback: Duration,
+}
+
+impl ProposedOutcome {
+    pub fn total(&self) -> Duration {
+        self.load + self.update + self.writeback
+    }
+}
+
+/// A paper-style side-by-side row (one N of Table 1).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub n_updates: u64,
+    /// Conventional: modeled full-scale mechanical time.
+    pub conventional: Duration,
+    /// Conventional wall time actually waited (scaled sleeps).
+    pub conventional_wall: Duration,
+    /// Proposed: wall time (it really runs at full speed).
+    pub proposed: Duration,
+}
+
+impl RunReport {
+    pub fn speedup(&self) -> f64 {
+        let p = self.proposed.as_secs_f64();
+        if p <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.conventional.as_secs_f64() / p
+        }
+    }
+
+    /// Render like the paper's Table 1 (plus the speedup column the paper
+    /// leaves implicit).
+    pub fn render_row(&self) -> String {
+        format!(
+            "| {:>9} | {:>12} | {:>10} | {:>9.0}x |",
+            commas(self.n_updates),
+            paper_hms(self.conventional),
+            human_duration(self.proposed),
+            self.speedup(),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_updates", Json::num(self.n_updates as f64)),
+            ("conventional_modeled_s", Json::num(self.conventional.as_secs_f64())),
+            ("conventional_wall_s", Json::num(self.conventional_wall.as_secs_f64())),
+            ("proposed_s", Json::num(self.proposed.as_secs_f64())),
+            ("speedup", Json::num(self.speedup())),
+        ])
+    }
+}
+
+/// Render a whole Table 1.
+pub fn render_table1(rows: &[RunReport]) -> String {
+    let mut s = String::new();
+    s.push_str("| # updates |  conventional |  proposed  |  speedup  |\n");
+    s.push_str("|-----------|---------------|------------|-----------|\n");
+    for r in rows {
+        s.push_str(&r.render_row());
+        s.push('\n');
+    }
+    s
+}
+
+/// ASCII histogram of Table 1 (Figure 6 equivalent): log-scaled bars.
+pub fn render_figure6(rows: &[RunReport]) -> String {
+    let mut s = String::from("Figure 6 — execution time (log scale, s)\n");
+    let max = rows
+        .iter()
+        .map(|r| r.conventional.as_secs_f64())
+        .fold(1.0f64, f64::max)
+        .log10();
+    for r in rows {
+        let conv = r.conventional.as_secs_f64().max(1e-3);
+        let prop = r.proposed.as_secs_f64().max(1e-3);
+        let bar = |v: f64| -> String {
+            let w = ((v.log10() + 3.0) / (max + 3.0) * 50.0).max(0.0) as usize;
+            "#".repeat(w.max(1))
+        };
+        s.push_str(&format!("{:>9}  conv |{:<50}| {:.1}s\n", commas(r.n_updates), bar(conv), conv));
+        s.push_str(&format!("{:>9}  prop |{:<50}| {:.3}s\n", "", bar(prop), prop));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(n: u64, conv_s: u64, prop_ms: u64) -> RunReport {
+        RunReport {
+            n_updates: n,
+            conventional: Duration::from_secs(conv_s),
+            conventional_wall: Duration::from_millis(conv_s),
+            proposed: Duration::from_millis(prop_ms),
+        }
+    }
+
+    #[test]
+    fn speedup_math() {
+        let r = row(100_000, 6602, 4_000); // paper: 1h50m02s vs 4s
+        assert!((r.speedup() - 1650.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let rows =
+            vec![row(100_000, 6602, 4000), row(500_000, 29535, 6000), row(2_000_000, 123471, 63000)];
+        let t = render_table1(&rows);
+        assert_eq!(t.lines().count(), 5);
+        assert!(t.contains("100,000"));
+        assert!(t.contains("34h 17m 51s"), "paper's 2M conventional row:\n{t}");
+    }
+
+    #[test]
+    fn figure6_renders_bars() {
+        let rows = vec![row(100_000, 6602, 4000), row(2_000_000, 123471, 63000)];
+        let f = render_figure6(&rows);
+        assert!(f.contains("conv |#"));
+        assert!(f.contains("prop |#"));
+        // Conventional bar must be longer than proposed bar for same N.
+        let lines: Vec<&str> = f.lines().collect();
+        let conv_len = lines[1].matches('#').count();
+        let prop_len = lines[2].matches('#').count();
+        assert!(conv_len > prop_len);
+    }
+
+    #[test]
+    fn json_row() {
+        let j = row(500_000, 29535, 6000).to_json();
+        assert_eq!(j.get("n_updates").unwrap().as_f64().unwrap(), 500_000.0);
+        assert!(j.get("speedup").unwrap().as_f64().unwrap() > 4000.0);
+    }
+}

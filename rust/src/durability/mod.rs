@@ -1,0 +1,19 @@
+//! Durability for the memory store: write-ahead log + binary snapshots.
+//!
+//! The paper loads the database into RAM "prior to processing" and writes
+//! results back at the end; anything in between dies with the process. A
+//! production one-server deployment needs better:
+//!
+//! - [`wal`] — an append-only, CRC-framed write-ahead log of applied
+//!   updates. Replaying `snapshot + WAL suffix` reconstructs the exact
+//!   store state after a crash.
+//! - [`snapshot`] — compact binary checkpoints of the full store. Loading
+//!   a snapshot is a sequential read of 24-byte records — far cheaper than
+//!   re-scanning the paged disk table (see the `recovery` rows of the
+//!   ablations bench).
+
+pub mod snapshot;
+pub mod wal;
+
+pub use snapshot::{load_snapshot, write_snapshot};
+pub use wal::{Wal, WalReader};

@@ -1,0 +1,219 @@
+//! Binary store snapshots: a sequential dump of all records, with a header
+//! carrying count + checksum. Loading a snapshot is one streaming read —
+//! the fast path for the proposed method's "load prior to processing" step
+//! (see the recovery ablation bench).
+//!
+//! Layout: `MSNP` magic, version u32, record count u64, FNV-64 of the
+//! payload, then `count` encoded records (24B each).
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::memstore::ShardedStore;
+use crate::workload::record::{BookRecord, RECORD_BYTES};
+
+const MAGIC: &[u8; 4] = b"MSNP";
+const VERSION: u32 = 1;
+
+#[derive(Debug, thiserror::Error)]
+pub enum SnapshotError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad snapshot magic")]
+    BadMagic,
+    #[error("unsupported snapshot version {0}")]
+    BadVersion(u32),
+    #[error("snapshot checksum mismatch")]
+    BadChecksum,
+    #[error("snapshot truncated: expected {expected} records, read {got}")]
+    Truncated { expected: u64, got: u64 },
+    #[error("record decode at index {0}: {1}")]
+    Record(u64, crate::workload::record::DecodeError),
+}
+
+fn fnv64(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+const FNV_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Write the full store to `path`. Returns records written.
+pub fn write_snapshot(store: &ShardedStore, path: impl AsRef<Path>) -> Result<u64, SnapshotError> {
+    let tmp = path.as_ref().with_extension("tmp");
+    let mut out = BufWriter::with_capacity(1 << 20, std::fs::File::create(&tmp)?);
+
+    // First pass: collect per-shard to compute count + checksum while
+    // streaming records to disk after the header is known. We buffer the
+    // header space and patch it at the end instead of two passes.
+    out.write_all(MAGIC)?;
+    out.write_all(&VERSION.to_le_bytes())?;
+    out.write_all(&0u64.to_le_bytes())?; // count placeholder
+    out.write_all(&0u64.to_le_bytes())?; // checksum placeholder
+
+    let mut count = 0u64;
+    let mut checksum = FNV_SEED;
+    for s in 0..store.shard_count() {
+        for rec in store.shard_records(s) {
+            let enc = rec.encode();
+            checksum = fnv64(checksum, &enc);
+            out.write_all(&enc)?;
+            count += 1;
+        }
+    }
+    out.flush()?;
+    let file = out.into_inner().map_err(|e| SnapshotError::Io(e.into_error()))?;
+    // Patch header.
+    use std::os::unix::fs::FileExt;
+    file.write_all_at(&count.to_le_bytes(), 8)?;
+    file.write_all_at(&checksum.to_le_bytes(), 16)?;
+    file.sync_data()?;
+    drop(file);
+    std::fs::rename(&tmp, path.as_ref())?; // atomic publish
+    Ok(count)
+}
+
+/// Load a snapshot into a fresh store with `shards` shards.
+pub fn load_snapshot(
+    path: impl AsRef<Path>,
+    shards: usize,
+) -> Result<Arc<ShardedStore>, SnapshotError> {
+    let mut input = BufReader::with_capacity(1 << 20, std::fs::File::open(path.as_ref())?);
+    let mut header = [0u8; 24];
+    input.read_exact(&mut header)?;
+    if &header[0..4] != MAGIC {
+        return Err(SnapshotError::BadMagic);
+    }
+    let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    if version != VERSION {
+        return Err(SnapshotError::BadVersion(version));
+    }
+    let expected = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let want_sum = u64::from_le_bytes(header[16..24].try_into().unwrap());
+
+    // Guard the pre-allocation against a corrupted count field: the file
+    // size must carry exactly `expected` records. (Found by the
+    // prop_durability corruption sweep — a bit-flip in the header count
+    // previously drove a multi-petabyte allocation.)
+    let payload = std::fs::metadata(path.as_ref())?.len().saturating_sub(24);
+    if payload != expected.saturating_mul(RECORD_BYTES as u64) {
+        return Err(SnapshotError::Truncated {
+            expected,
+            got: payload / RECORD_BYTES as u64,
+        });
+    }
+
+    let store =
+        Arc::new(ShardedStore::new(shards, ((expected as usize / shards) + 1).next_power_of_two()));
+    let mut buf = [0u8; RECORD_BYTES];
+    let mut checksum = FNV_SEED;
+    let mut got = 0u64;
+    while got < expected {
+        if let Err(e) = input.read_exact(&mut buf) {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                return Err(SnapshotError::Truncated { expected, got });
+            }
+            return Err(e.into());
+        }
+        checksum = fnv64(checksum, &buf);
+        let rec = BookRecord::decode(&buf).map_err(|e| SnapshotError::Record(got, e))?;
+        store.insert(rec);
+        got += 1;
+    }
+    if checksum != want_sum {
+        return Err(SnapshotError::BadChecksum);
+    }
+    Ok(store)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gen::DatasetSpec;
+
+    fn tpath(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("membig_snapf_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    fn filled(n: u64) -> ShardedStore {
+        let spec = DatasetSpec { records: n, ..Default::default() };
+        let s = ShardedStore::new(4, 1 << 12);
+        for r in spec.iter() {
+            s.insert(r);
+        }
+        s
+    }
+
+    #[test]
+    fn roundtrip_identical_state() {
+        let store = filled(10_000);
+        let path = tpath("rt.snap");
+        let written = write_snapshot(&store, &path).unwrap();
+        assert_eq!(written, 10_000);
+        let loaded = load_snapshot(&path, 8).unwrap(); // different shard count is fine
+        assert_eq!(loaded.len(), 10_000);
+        assert_eq!(loaded.value_sum_cents(), store.value_sum_cents());
+        // Spot-check records.
+        let spec = DatasetSpec { records: 10_000, ..Default::default() };
+        for i in (0..10_000).step_by(977) {
+            let r = spec.record_at(i);
+            assert_eq!(loaded.get(r.isbn13), Some(r));
+        }
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let store = filled(500);
+        let path = tpath("trunc.snap");
+        write_snapshot(&store, &path).unwrap();
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 100).unwrap();
+        drop(f);
+        assert!(matches!(
+            load_snapshot(&path, 4),
+            Err(SnapshotError::Truncated { .. }) | Err(SnapshotError::Record(_, _))
+        ));
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let store = filled(500);
+        let path = tpath("corr.snap");
+        write_snapshot(&store, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = 24 + bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_snapshot(&path, 4).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_version() {
+        let path = tpath("magic.snap");
+        std::fs::write(&path, b"NOPE____________________").unwrap();
+        assert!(matches!(load_snapshot(&path, 2), Err(SnapshotError::BadMagic)));
+        let store = filled(10);
+        write_snapshot(&store, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4] = 99; // version
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(load_snapshot(&path, 2), Err(SnapshotError::BadVersion(99))));
+    }
+
+    #[test]
+    fn empty_store_snapshots() {
+        let store = ShardedStore::new(2, 16);
+        let path = tpath("empty.snap");
+        assert_eq!(write_snapshot(&store, &path).unwrap(), 0);
+        let loaded = load_snapshot(&path, 2).unwrap();
+        assert!(loaded.is_empty());
+    }
+}

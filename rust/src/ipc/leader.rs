@@ -1,0 +1,277 @@
+//! Leader side: spawn N worker processes, shard records/updates across
+//! them by the same hash routing as the in-process store, and drive the
+//! workload over Unix sockets.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::process::{Child, Command};
+
+use super::proto::{join_u128, ProtoError, Request, Response};
+use crate::storage::index::hash_key;
+use crate::workload::record::{BookRecord, StockUpdate};
+
+#[derive(Debug, thiserror::Error)]
+pub enum IpcError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("proto: {0}")]
+    Proto(#[from] ProtoError),
+    #[error("worker {0} sent unexpected response: {1:?}")]
+    Unexpected(usize, Response),
+    #[error("worker {0} exited abnormally")]
+    WorkerDied(usize),
+}
+
+struct WorkerConn {
+    child: Option<Child>,
+    reader: BufReader<UnixStream>,
+    writer: BufWriter<UnixStream>,
+}
+
+/// A pool of worker processes, one hash-table shard each.
+pub struct ProcessPool {
+    workers: Vec<WorkerConn>,
+    socket_dir: PathBuf,
+}
+
+impl ProcessPool {
+    /// Spawn `n` worker processes by self-exec'ing the current binary with
+    /// the hidden `ipc-worker` subcommand.
+    pub fn spawn(n: usize) -> Result<Self, IpcError> {
+        Self::spawn_with_exe(n, std::env::current_exe()?)
+    }
+
+    /// Spawn with an explicit worker binary (integration tests pass
+    /// `env!("CARGO_BIN_EXE_membig")`; production uses `spawn`).
+    pub fn spawn_with_exe(n: usize, exe: PathBuf) -> Result<Self, IpcError> {
+        assert!(n > 0);
+        // Fork-bomb guard: a worker process must never spawn its own pool.
+        if std::env::var_os("MEMBIG_IPC_CHILD").is_some() {
+            return Err(IpcError::Io(std::io::Error::other(
+                "refusing to spawn a process pool from inside an ipc worker",
+            )));
+        }
+        let socket_dir = std::env::temp_dir()
+            .join(format!("membig_ipc_{}_{:x}", std::process::id(), hash_key(n as u64)));
+        std::fs::create_dir_all(&socket_dir)?;
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let sock_path = socket_dir.join(format!("worker_{i}.sock"));
+            std::fs::remove_file(&sock_path).ok();
+            let listener = UnixListener::bind(&sock_path)?;
+            let child = Command::new(&exe)
+                .arg("ipc-worker")
+                .arg("--socket")
+                .arg(&sock_path)
+                .env("MEMBIG_IPC_CHILD", "1")
+                .spawn()?;
+            let (stream, _) = listener.accept()?;
+            workers.push(WorkerConn {
+                child: Some(child),
+                reader: BufReader::with_capacity(1 << 20, stream.try_clone()?),
+                writer: BufWriter::with_capacity(1 << 20, stream),
+            });
+        }
+        Ok(ProcessPool { workers, socket_dir })
+    }
+
+    /// In-process pool for tests: workers are threads serving socketpairs,
+    /// exercising the identical protocol path without process spawn.
+    pub fn spawn_in_process(n: usize) -> Result<Self, IpcError> {
+        assert!(n > 0);
+        let mut workers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (leader_sock, worker_sock) = UnixStream::pair()?;
+            std::thread::spawn(move || {
+                let r = worker_sock.try_clone().expect("clone");
+                let _ = super::worker::serve(r, worker_sock);
+            });
+            workers.push(WorkerConn {
+                child: None,
+                reader: BufReader::with_capacity(1 << 20, leader_sock.try_clone()?),
+                writer: BufWriter::with_capacity(1 << 20, leader_sock),
+            });
+        }
+        Ok(ProcessPool { workers, socket_dir: std::env::temp_dir() })
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    #[inline]
+    pub fn route(&self, key: u64) -> usize {
+        ((hash_key(key) >> 32) % self.workers.len() as u64) as usize
+    }
+
+    fn call(&mut self, worker: usize, req: &Request) -> Result<Response, IpcError> {
+        let w = &mut self.workers[worker];
+        req.write_to(&mut w.writer)?;
+        w.writer.flush()?;
+        Ok(Response::read_from(&mut w.reader)?)
+    }
+
+    /// Shard and load records; returns total loaded.
+    pub fn load(&mut self, records: &[BookRecord]) -> Result<u64, IpcError> {
+        let n = self.workers.len();
+        let mut parts: Vec<Vec<BookRecord>> = vec![Vec::new(); n];
+        for r in records {
+            parts[self.route(r.isbn13)].push(*r);
+        }
+        // Send all, then collect all (one in-flight request per worker).
+        for (i, part) in parts.iter().enumerate() {
+            let w = &mut self.workers[i];
+            Request::Load(part.clone()).write_to(&mut w.writer)?;
+            w.writer.flush()?;
+        }
+        let mut total = 0;
+        for i in 0..n {
+            match Response::read_from(&mut self.workers[i].reader)? {
+                Response::Loaded(k) => total += k,
+                other => return Err(IpcError::Unexpected(i, other)),
+            }
+        }
+        Ok(total)
+    }
+
+    /// Shard and apply updates in parallel across processes; returns
+    /// (applied, missing).
+    pub fn update(&mut self, updates: &[StockUpdate]) -> Result<(u64, u64), IpcError> {
+        let n = self.workers.len();
+        let mut parts: Vec<Vec<StockUpdate>> = vec![Vec::new(); n];
+        for u in updates {
+            parts[self.route(u.isbn13)].push(*u);
+        }
+        for (i, part) in parts.iter().enumerate() {
+            let w = &mut self.workers[i];
+            Request::Update(part.clone()).write_to(&mut w.writer)?;
+            w.writer.flush()?;
+        }
+        let (mut applied, mut missing) = (0, 0);
+        for i in 0..n {
+            match Response::read_from(&mut self.workers[i].reader)? {
+                Response::Applied { applied: a, missing: m } => {
+                    applied += a;
+                    missing += m;
+                }
+                other => return Err(IpcError::Unexpected(i, other)),
+            }
+        }
+        Ok((applied, missing))
+    }
+
+    /// Aggregate stats across all workers.
+    pub fn stats(&mut self) -> Result<(u64, u128), IpcError> {
+        let n = self.workers.len();
+        for i in 0..n {
+            let w = &mut self.workers[i];
+            Request::Stats.write_to(&mut w.writer)?;
+            w.writer.flush()?;
+        }
+        let (mut count, mut value) = (0u64, 0u128);
+        for i in 0..n {
+            match Response::read_from(&mut self.workers[i].reader)? {
+                Response::Stats { count: c, value_cents_lo, value_cents_hi } => {
+                    count += c;
+                    value += join_u128(value_cents_lo, value_cents_hi);
+                }
+                other => return Err(IpcError::Unexpected(i, other)),
+            }
+        }
+        Ok((count, value))
+    }
+
+    /// Point lookup through the owning worker.
+    pub fn get(&mut self, key: u64) -> Result<Option<BookRecord>, IpcError> {
+        let w = self.route(key);
+        match self.call(w, &Request::Get(key))? {
+            Response::Record(r) => Ok(r),
+            other => Err(IpcError::Unexpected(w, other)),
+        }
+    }
+
+    /// Graceful shutdown: Shutdown RPC, wait for children.
+    pub fn shutdown(mut self) -> Result<(), IpcError> {
+        for i in 0..self.workers.len() {
+            let _ = self.call(i, &Request::Shutdown);
+        }
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            if let Some(mut child) = w.child.take() {
+                let status = child.wait()?;
+                if !status.success() {
+                    return Err(IpcError::WorkerDied(i));
+                }
+            }
+        }
+        std::fs::remove_dir_all(&self.socket_dir).ok();
+        Ok(())
+    }
+}
+
+impl Drop for ProcessPool {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            if let Some(mut child) = w.child.take() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gen::{generate_stock_updates, DatasetSpec, KeyDist};
+
+    #[test]
+    fn in_process_pool_full_workflow() {
+        let spec = DatasetSpec { records: 5_000, ..Default::default() };
+        let records: Vec<BookRecord> = spec.iter().collect();
+        let mut pool = ProcessPool::spawn_in_process(4).unwrap();
+        assert_eq!(pool.load(&records).unwrap(), 5_000);
+
+        let ups = generate_stock_updates(&spec, 5_000, KeyDist::PermuteAll, 77);
+        let (applied, missing) = pool.update(&ups).unwrap();
+        assert_eq!(applied, 5_000);
+        assert_eq!(missing, 0);
+
+        // Cross-check against an in-process store applying the same updates.
+        let store = crate::memstore::ShardedStore::new(4, 4096);
+        for r in &records {
+            store.insert(*r);
+        }
+        for u in &ups {
+            store.apply(u);
+        }
+        let (count, value) = pool.stats().unwrap();
+        assert_eq!((count, value), store.value_sum_cents());
+
+        // Point reads route correctly.
+        let sample = spec.record_at(123);
+        let got = pool.get(sample.isbn13).unwrap().unwrap();
+        let expect = store.get(sample.isbn13).unwrap();
+        assert_eq!(got, expect);
+
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn missing_keys_reported() {
+        let mut pool = ProcessPool::spawn_in_process(2).unwrap();
+        pool.load(&[BookRecord::new(1, 1, 1)]).unwrap();
+        let (applied, missing) = pool
+            .update(&[
+                StockUpdate { isbn13: 1, new_price_cents: 9, new_quantity: 9 },
+                StockUpdate { isbn13: 2, new_price_cents: 9, new_quantity: 9 },
+            ])
+            .unwrap();
+        assert_eq!((applied, missing), (1, 1));
+        pool.shutdown().unwrap();
+    }
+}

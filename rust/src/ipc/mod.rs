@@ -1,0 +1,18 @@
+//! Message passing between processes — the paper's §7 future work
+//! ("message passing is to be investigated … including but not limited to
+//! RPC, Networking Sockets …"), implemented as a first-class execution
+//! mode: the leader process shards the store across N *worker processes*
+//! (one per core) and drives them over Unix-domain sockets with a
+//! length-prefixed binary RPC protocol.
+//!
+//! Same topology as the threaded pipeline — `T = {(p1,h1) … (pn,hn)}` with
+//! processes instead of threads — so the `ablations` bench can measure the
+//! IPC tax directly against shared memory.
+
+pub mod leader;
+pub mod proto;
+pub mod worker;
+
+pub use leader::ProcessPool;
+pub use proto::{Request, Response};
+pub use worker::worker_main;

@@ -1,0 +1,327 @@
+//! Wire protocol for leader ⇄ worker RPC.
+//!
+//! Frame: `u32 length | u8 tag | payload`. All integers little-endian.
+//! Payloads are flat arrays of fixed-size structs (records are 24B encoded,
+//! updates 20B raw) — no varints, no schema evolution; this is an internal
+//! protocol pinned to the binary.
+
+use std::io::{Read, Write};
+
+use crate::workload::record::{BookRecord, StockUpdate, RECORD_BYTES};
+
+pub const MAX_FRAME: u32 = 64 << 20; // 64 MiB safety bound
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Bulk-load records into the worker's table.
+    Load(Vec<BookRecord>),
+    /// Apply a batch of updates.
+    Update(Vec<StockUpdate>),
+    /// Ask for (count, value_sum_cents).
+    Stats,
+    /// Point lookup.
+    Get(u64),
+    /// Clean shutdown.
+    Shutdown,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Loaded(u64),
+    Applied { applied: u64, missing: u64 },
+    Stats { count: u64, value_cents_lo: u64, value_cents_hi: u64 },
+    Record(Option<BookRecord>),
+    Bye,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ProtoError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("frame too large: {0} bytes")]
+    TooLarge(u32),
+    #[error("unknown tag {0:#x}")]
+    BadTag(u8),
+    #[error("malformed payload for tag {0:#x}: {1}")]
+    Malformed(u8, String),
+}
+
+const TAG_LOAD: u8 = 1;
+const TAG_UPDATE: u8 = 2;
+const TAG_STATS: u8 = 3;
+const TAG_GET: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+const TAG_LOADED: u8 = 0x81;
+const TAG_APPLIED: u8 = 0x82;
+const TAG_STATS_R: u8 = 0x83;
+const TAG_RECORD: u8 = 0x84;
+const TAG_BYE: u8 = 0x85;
+
+const UPDATE_BYTES: usize = 20;
+
+fn encode_update(u: &StockUpdate, out: &mut Vec<u8>) {
+    out.extend_from_slice(&u.isbn13.to_le_bytes());
+    out.extend_from_slice(&u.new_price_cents.to_le_bytes());
+    out.extend_from_slice(&u.new_quantity.to_le_bytes());
+}
+
+fn decode_update(b: &[u8]) -> StockUpdate {
+    StockUpdate {
+        isbn13: u64::from_le_bytes(b[0..8].try_into().unwrap()),
+        new_price_cents: u64::from_le_bytes(b[8..16].try_into().unwrap()),
+        new_quantity: u32::from_le_bytes(b[16..20].try_into().unwrap()),
+    }
+}
+
+fn write_frame<W: Write>(w: &mut W, tag: u8, payload: &[u8]) -> Result<(), ProtoError> {
+    let len = 1 + payload.len() as u32;
+    if len > MAX_FRAME {
+        return Err(ProtoError::TooLarge(len));
+    }
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(&[tag])?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+fn read_frame<R: Read>(r: &mut R) -> Result<(u8, Vec<u8>), ProtoError> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4);
+    if len == 0 || len > MAX_FRAME {
+        return Err(ProtoError::TooLarge(len));
+    }
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag)?;
+    let mut payload = vec![0u8; len as usize - 1];
+    r.read_exact(&mut payload)?;
+    Ok((tag[0], payload))
+}
+
+impl Request {
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<(), ProtoError> {
+        match self {
+            Request::Load(records) => {
+                let mut payload = Vec::with_capacity(records.len() * RECORD_BYTES);
+                for r in records {
+                    payload.extend_from_slice(&r.encode());
+                }
+                write_frame(w, TAG_LOAD, &payload)
+            }
+            Request::Update(ups) => {
+                let mut payload = Vec::with_capacity(ups.len() * UPDATE_BYTES);
+                for u in ups {
+                    encode_update(u, &mut payload);
+                }
+                write_frame(w, TAG_UPDATE, &payload)
+            }
+            Request::Stats => write_frame(w, TAG_STATS, &[]),
+            Request::Get(key) => write_frame(w, TAG_GET, &key.to_le_bytes()),
+            Request::Shutdown => write_frame(w, TAG_SHUTDOWN, &[]),
+        }
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Request, ProtoError> {
+        let (tag, payload) = read_frame(r)?;
+        match tag {
+            TAG_LOAD => {
+                if payload.len() % RECORD_BYTES != 0 {
+                    return Err(ProtoError::Malformed(tag, format!("len {}", payload.len())));
+                }
+                let mut records = Vec::with_capacity(payload.len() / RECORD_BYTES);
+                for chunk in payload.chunks_exact(RECORD_BYTES) {
+                    records.push(
+                        BookRecord::decode(chunk)
+                            .map_err(|e| ProtoError::Malformed(tag, e.to_string()))?,
+                    );
+                }
+                Ok(Request::Load(records))
+            }
+            TAG_UPDATE => {
+                if payload.len() % UPDATE_BYTES != 0 {
+                    return Err(ProtoError::Malformed(tag, format!("len {}", payload.len())));
+                }
+                Ok(Request::Update(
+                    payload.chunks_exact(UPDATE_BYTES).map(decode_update).collect(),
+                ))
+            }
+            TAG_STATS => Ok(Request::Stats),
+            TAG_GET => {
+                if payload.len() != 8 {
+                    return Err(ProtoError::Malformed(tag, format!("len {}", payload.len())));
+                }
+                Ok(Request::Get(u64::from_le_bytes(payload[..8].try_into().unwrap())))
+            }
+            TAG_SHUTDOWN => Ok(Request::Shutdown),
+            t => Err(ProtoError::BadTag(t)),
+        }
+    }
+}
+
+impl Response {
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<(), ProtoError> {
+        match self {
+            Response::Loaded(n) => write_frame(w, TAG_LOADED, &n.to_le_bytes()),
+            Response::Applied { applied, missing } => {
+                let mut p = Vec::with_capacity(16);
+                p.extend_from_slice(&applied.to_le_bytes());
+                p.extend_from_slice(&missing.to_le_bytes());
+                write_frame(w, TAG_APPLIED, &p)
+            }
+            Response::Stats { count, value_cents_lo, value_cents_hi } => {
+                let mut p = Vec::with_capacity(24);
+                p.extend_from_slice(&count.to_le_bytes());
+                p.extend_from_slice(&value_cents_lo.to_le_bytes());
+                p.extend_from_slice(&value_cents_hi.to_le_bytes());
+                write_frame(w, TAG_STATS_R, &p)
+            }
+            Response::Record(opt) => match opt {
+                None => write_frame(w, TAG_RECORD, &[]),
+                Some(r) => write_frame(w, TAG_RECORD, &r.encode()),
+            },
+            Response::Bye => write_frame(w, TAG_BYE, &[]),
+        }
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Response, ProtoError> {
+        let (tag, payload) = read_frame(r)?;
+        let u64_at = |off: usize| -> u64 {
+            u64::from_le_bytes(payload[off..off + 8].try_into().unwrap())
+        };
+        match tag {
+            TAG_LOADED if payload.len() == 8 => Ok(Response::Loaded(u64_at(0))),
+            TAG_APPLIED if payload.len() == 16 => {
+                Ok(Response::Applied { applied: u64_at(0), missing: u64_at(8) })
+            }
+            TAG_STATS_R if payload.len() == 24 => Ok(Response::Stats {
+                count: u64_at(0),
+                value_cents_lo: u64_at(8),
+                value_cents_hi: u64_at(16),
+            }),
+            TAG_RECORD if payload.is_empty() => Ok(Response::Record(None)),
+            TAG_RECORD if payload.len() == RECORD_BYTES => Ok(Response::Record(Some(
+                BookRecord::decode(&payload).map_err(|e| ProtoError::Malformed(tag, e.to_string()))?,
+            ))),
+            TAG_BYE => Ok(Response::Bye),
+            t if matches!(t, TAG_LOADED | TAG_APPLIED | TAG_STATS_R | TAG_RECORD) => {
+                Err(ProtoError::Malformed(t, format!("len {}", payload.len())))
+            }
+            t => Err(ProtoError::BadTag(t)),
+        }
+    }
+}
+
+/// Split/merge helpers for the u128 value sums crossing the wire as 2×u64.
+pub fn split_u128(v: u128) -> (u64, u64) {
+    (v as u64, (v >> 64) as u64)
+}
+
+pub fn join_u128(lo: u64, hi: u64) -> u128 {
+    (lo as u128) | ((hi as u128) << 64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: Request) {
+        let mut buf = Vec::new();
+        req.write_to(&mut buf).unwrap();
+        let got = Request::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(got, req);
+    }
+
+    fn roundtrip_resp(resp: Response) {
+        let mut buf = Vec::new();
+        resp.write_to(&mut buf).unwrap();
+        let got = Response::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(got, resp);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_req(Request::Load(vec![
+            BookRecord::new(9_780_000_000_001, 199, 44),
+            BookRecord::new(9_780_000_000_002, 299, 55),
+        ]));
+        roundtrip_req(Request::Update(vec![StockUpdate {
+            isbn13: 9_783_652_774_577,
+            new_price_cents: 393,
+            new_quantity: 495,
+        }]));
+        roundtrip_req(Request::Stats);
+        roundtrip_req(Request::Get(12345));
+        roundtrip_req(Request::Shutdown);
+        roundtrip_req(Request::Load(vec![]));
+        roundtrip_req(Request::Update(vec![]));
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        roundtrip_resp(Response::Loaded(42));
+        roundtrip_resp(Response::Applied { applied: 10, missing: 3 });
+        let (lo, hi) = split_u128(123_456_789_012_345_678_901_234_567u128);
+        roundtrip_resp(Response::Stats { count: 7, value_cents_lo: lo, value_cents_hi: hi });
+        roundtrip_resp(Response::Record(None));
+        roundtrip_resp(Response::Record(Some(BookRecord::new(1, 2, 3))));
+        roundtrip_resp(Response::Bye);
+    }
+
+    #[test]
+    fn u128_split_join() {
+        for v in [0u128, 1, u64::MAX as u128, u128::MAX, 123_456_789_012_345_678_901_234_567] {
+            let (lo, hi) = split_u128(v);
+            assert_eq!(join_u128(lo, hi), v);
+        }
+    }
+
+    #[test]
+    fn multiple_frames_in_sequence() {
+        let mut buf = Vec::new();
+        Request::Stats.write_to(&mut buf).unwrap();
+        Request::Get(9).write_to(&mut buf).unwrap();
+        Request::Shutdown.write_to(&mut buf).unwrap();
+        let mut r = buf.as_slice();
+        assert_eq!(Request::read_from(&mut r).unwrap(), Request::Stats);
+        assert_eq!(Request::read_from(&mut r).unwrap(), Request::Get(9));
+        assert_eq!(Request::read_from(&mut r).unwrap(), Request::Shutdown);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_frames() {
+        // Unknown tag.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 0x77, &[1, 2, 3]).unwrap();
+        assert!(matches!(Request::read_from(&mut buf.as_slice()), Err(ProtoError::BadTag(0x77))));
+        // Oversized length prefix.
+        let huge = (MAX_FRAME + 1).to_le_bytes();
+        let mut data = huge.to_vec();
+        data.push(TAG_STATS);
+        assert!(matches!(
+            Request::read_from(&mut data.as_slice()),
+            Err(ProtoError::TooLarge(_))
+        ));
+        // Ragged update payload.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, TAG_UPDATE, &[0u8; 21]).unwrap();
+        assert!(matches!(
+            Request::read_from(&mut buf.as_slice()),
+            Err(ProtoError::Malformed(TAG_UPDATE, _))
+        ));
+        // Corrupt record in Load (checksum fails).
+        let mut payload = BookRecord::new(1, 2, 3).encode().to_vec();
+        payload[5] ^= 0xFF;
+        let mut buf = Vec::new();
+        write_frame(&mut buf, TAG_LOAD, &payload).unwrap();
+        assert!(Request::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_is_io_error() {
+        let mut buf = Vec::new();
+        Request::Get(1).write_to(&mut buf).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(matches!(Request::read_from(&mut buf.as_slice()), Err(ProtoError::Io(_))));
+    }
+}

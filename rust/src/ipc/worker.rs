@@ -1,0 +1,147 @@
+//! Worker-process main loop: owns one hash-table shard, serves the leader's
+//! RPCs over a Unix socket until `Shutdown`.
+//!
+//! Entered via the hidden `membig ipc-worker --socket <path>` subcommand
+//! (the leader self-execs the current binary). Also callable in-process on
+//! a `UnixStream` pair for tests — the loop is transport-agnostic over any
+//! `Read + Write`.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::os::unix::net::UnixStream;
+
+use super::proto::{split_u128, ProtoError, Request, Response};
+use crate::memstore::HashTable;
+
+/// Serve one leader connection until Shutdown / EOF. Returns the number of
+/// requests handled.
+pub fn serve<R: Read, W: Write>(input: R, output: W) -> Result<u64, ProtoError> {
+    let mut input = BufReader::with_capacity(1 << 20, input);
+    let mut output = BufWriter::with_capacity(1 << 20, output);
+    let mut table = HashTable::new();
+    let mut handled = 0u64;
+    loop {
+        let req = match Request::read_from(&mut input) {
+            Ok(r) => r,
+            Err(ProtoError::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                return Ok(handled); // leader vanished: exit quietly
+            }
+            Err(e) => return Err(e),
+        };
+        handled += 1;
+        match req {
+            Request::Load(records) => {
+                let mut n = 0u64;
+                for r in records {
+                    table.insert(r);
+                    n += 1;
+                }
+                Response::Loaded(n).write_to(&mut output)?;
+            }
+            Request::Update(ups) => {
+                let mut applied = 0u64;
+                let mut missing = 0u64;
+                for u in &ups {
+                    if table.update(u.isbn13, |r| u.apply_to(r)) {
+                        applied += 1;
+                    } else {
+                        missing += 1;
+                    }
+                }
+                Response::Applied { applied, missing }.write_to(&mut output)?;
+            }
+            Request::Stats => {
+                let (count, value) = table.value_sum_cents();
+                let (lo, hi) = split_u128(value);
+                Response::Stats { count, value_cents_lo: lo, value_cents_hi: hi }
+                    .write_to(&mut output)?;
+            }
+            Request::Get(key) => {
+                Response::Record(table.get(key)).write_to(&mut output)?;
+            }
+            Request::Shutdown => {
+                Response::Bye.write_to(&mut output)?;
+                output.flush()?;
+                return Ok(handled);
+            }
+        }
+        output.flush()?;
+    }
+}
+
+/// Process entrypoint: connect to the leader's socket and serve.
+pub fn worker_main(socket_path: &str) -> Result<(), String> {
+    let stream = UnixStream::connect(socket_path)
+        .map_err(|e| format!("worker connect {socket_path}: {e}"))?;
+    let reader = stream.try_clone().map_err(|e| e.to_string())?;
+    serve(reader, stream).map_err(|e| e.to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ipc::proto::join_u128;
+    use crate::workload::record::{BookRecord, StockUpdate};
+
+    /// Run the worker loop over in-memory pipes (no process spawn).
+    fn talk(requests: Vec<Request>) -> Vec<Response> {
+        let (leader_sock, worker_sock) = UnixStream::pair().unwrap();
+        let worker = std::thread::spawn(move || {
+            let r = worker_sock.try_clone().unwrap();
+            serve(r, worker_sock).unwrap()
+        });
+        let mut out = BufWriter::new(leader_sock.try_clone().unwrap());
+        let mut input = BufReader::new(leader_sock);
+        let mut responses = Vec::new();
+        for req in &requests {
+            req.write_to(&mut out).unwrap();
+            out.flush().unwrap();
+            responses.push(Response::read_from(&mut input).unwrap());
+        }
+        drop(out);
+        drop(input);
+        worker.join().unwrap();
+        responses
+    }
+
+    #[test]
+    fn load_update_stats_get_shutdown() {
+        let records =
+            vec![BookRecord::new(101, 100, 2), BookRecord::new(102, 200, 3), BookRecord::new(103, 50, 4)];
+        let responses = talk(vec![
+            Request::Load(records),
+            Request::Update(vec![
+                StockUpdate { isbn13: 101, new_price_cents: 500, new_quantity: 1 },
+                StockUpdate { isbn13: 999, new_price_cents: 1, new_quantity: 1 },
+            ]),
+            Request::Get(101),
+            Request::Get(999),
+            Request::Stats,
+            Request::Shutdown,
+        ]);
+        assert_eq!(responses[0], Response::Loaded(3));
+        assert_eq!(responses[1], Response::Applied { applied: 1, missing: 1 });
+        assert_eq!(responses[2], Response::Record(Some(BookRecord::new(101, 500, 1))));
+        assert_eq!(responses[3], Response::Record(None));
+        match responses[4] {
+            Response::Stats { count, value_cents_lo, value_cents_hi } => {
+                assert_eq!(count, 3);
+                // 500*1 + 200*3 + 50*4 = 1300
+                assert_eq!(join_u128(value_cents_lo, value_cents_hi), 1300);
+            }
+            ref other => panic!("expected stats, got {other:?}"),
+        }
+        assert_eq!(responses[5], Response::Bye);
+    }
+
+    #[test]
+    fn eof_terminates_cleanly() {
+        let (leader_sock, worker_sock) = UnixStream::pair().unwrap();
+        let worker = std::thread::spawn(move || {
+            let r = worker_sock.try_clone().unwrap();
+            serve(r, worker_sock)
+        });
+        drop(leader_sock); // immediate EOF
+        assert_eq!(worker.join().unwrap().unwrap(), 0);
+    }
+}

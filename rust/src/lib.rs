@@ -1,0 +1,36 @@
+//! # membig — memory-based multi-processing engine for big-data computation
+//!
+//! A production-shaped reproduction of Bassil (2019), *"Memory-Based
+//! Multi-Processing Method For Big Data Computation"*: load a disk-resident
+//! table into sharded in-memory hash tables, apply a bulk update feed with
+//! one worker thread per core over shared memory, on a single server — and
+//! compare against the conventional disk-based per-record path.
+//!
+//! ## Layering
+//! - **L3 (this crate)** — coordinator, sharded memstore, streaming pipeline,
+//!   disk-store substrate with an HDD latency model, metrics, CLI, server.
+//! - **L2 (JAX, build-time)** — the analytics compute graph, AOT-lowered to
+//!   HLO text in `artifacts/` by `python/compile/aot.py`.
+//! - **L1 (Pallas, build-time)** — the tiled masked-update + partial-reduce
+//!   kernel called by L2 (interpret mode for CPU PJRT).
+//!
+//! Python never runs on the request path: [`runtime`] loads the artifacts
+//! through the PJRT C API (`xla` crate) and executes them from Rust.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod baseline;
+pub mod config;
+pub mod ipc;
+pub mod coordinator;
+pub mod durability;
+pub mod memstore;
+pub mod metrics;
+pub mod pipeline;
+pub mod runtime;
+pub mod server;
+pub mod storage;
+pub mod textstore;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,260 @@
+//! `membig` — CLI launcher for the memory-based multi-processing engine.
+//!
+//! Subcommands:
+//!   gen           build the book-inventory database + Stock.dat feed
+//!   run           the proposed app (load → parallel update → report)
+//!   conventional  the disk-based baseline app
+//!   compare       both apps over the same inputs → one Table-1 row
+//!   analytics     PJRT analytics over the store (L1/L2 path)
+//!   serve         one-server TCP request loop
+//!   info          environment + config dump
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use membig::config::{Args, EngineConfig, FlagSpec};
+use membig::coordinator::{Coordinator, Workbench};
+use membig::coordinator::report::{render_figure6, render_table1, RunReport};
+use membig::runtime::AnalyticsEngine;
+use membig::server::Server;
+use membig::util::fmt::{commas, human_duration, paper_hms};
+use membig::workload::gen::DatasetSpec;
+
+fn spec() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "records", value: "N", help: "database size (default 2M; suffixes k/M)" },
+        FlagSpec { name: "updates", value: "N", help: "update feed size (default = records)" },
+        FlagSpec { name: "threads", value: "N", help: "worker threads (default = cores)" },
+        FlagSpec { name: "shards", value: "N", help: "hash-table shards (default = threads)" },
+        FlagSpec { name: "batch-size", value: "N", help: "pipeline batch size (default 8192)" },
+        FlagSpec { name: "data-dir", value: "DIR", help: "experiment data directory" },
+        FlagSpec { name: "artifacts", value: "DIR", help: "AOT artifacts directory" },
+        FlagSpec { name: "config", value: "FILE", help: "INI config file" },
+        FlagSpec { name: "seed", value: "N", help: "workload RNG seed" },
+        FlagSpec { name: "disk-scale", value: "F", help: "fraction of modeled disk delay to sleep (default 0)" },
+        FlagSpec { name: "cache-pages", value: "N", help: "disk store page-cache capacity" },
+        FlagSpec { name: "bind", value: "ADDR", help: "serve: TCP bind address" },
+        FlagSpec { name: "writeback", value: "", help: "persist memstore back to disk after update" },
+        FlagSpec { name: "json", value: "", help: "emit machine-readable JSON report" },
+        FlagSpec { name: "help", value: "", help: "show this help" },
+    ]
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> Result<(), String> {
+    // Hidden worker-process entrypoint (see ipc::leader) — must be handled
+    // before normal flag parsing.
+    {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        if raw.first().map(|s| s.as_str()) == Some("ipc-worker") {
+            let sock = raw
+                .iter()
+                .position(|a| a == "--socket")
+                .and_then(|i| raw.get(i + 1))
+                .ok_or("ipc-worker requires --socket <path>")?;
+            return membig::ipc::worker_main(sock);
+        }
+    }
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(raw, &spec()).map_err(|e| e.to_string())?;
+    let cmd = args.positional(0).unwrap_or("help").to_string();
+    if args.has("help") || cmd == "help" {
+        print!(
+            "{}",
+            Args::usage(
+                "membig <gen|run|conventional|compare|analytics|serve|info>",
+                "membig — memory-based multi-processing engine (Bassil 2019 reproduction)",
+                &spec()
+            )
+        );
+        return Ok(());
+    }
+
+    let cfg = build_config(&args)?;
+    let records = args.get_count("records").map_err(|e| e.to_string())?.unwrap_or(2_000_000);
+    let updates = args.get_count("updates").map_err(|e| e.to_string())?.unwrap_or(records);
+    let dataset = DatasetSpec { records, seed: cfg.seed, ..Default::default() };
+    let wb = Workbench::new(&cfg.data_dir, dataset.clone());
+
+    match cmd.as_str() {
+        "gen" => {
+            let t = wb.ensure_table(&cfg).map_err(|e| e.to_string())?;
+            let stock = wb.ensure_stock(updates).map_err(|e| e.to_string())?;
+            println!("table: {} ({} records)", wb.table_dir().display(), commas(t.len()));
+            println!("stock: {} ({} updates)", stock.display(), commas(updates));
+            Ok(())
+        }
+        "run" => {
+            let coord = Coordinator::new(cfg.clone());
+            let table = wb.ensure_table(&cfg).map_err(|e| e.to_string())?;
+            let stock = wb.ensure_stock(updates).map_err(|e| e.to_string())?;
+            let out = coord.run_proposed(&table, &stock).map_err(|e| e.to_string())?;
+            println!("proposed app: {} records, {} updates applied", commas(out.records),
+                commas(out.stream.updates_applied));
+            println!("  load      {}", human_duration(out.load));
+            println!("  update    {}", human_duration(out.update));
+            if cfg.writeback {
+                println!("  writeback {}", human_duration(out.writeback));
+            }
+            println!("  inventory value: ${:.2}", out.inventory_value_cents as f64 / 100.0);
+            if args.has("json") {
+                println!("{}", coord.metrics.to_json().to_string_pretty());
+            } else {
+                print!("{}", coord.metrics.render());
+            }
+            Ok(())
+        }
+        "conventional" => {
+            let coord = Coordinator::new(cfg.clone());
+            let table = wb.ensure_table(&cfg).map_err(|e| e.to_string())?;
+            let stock = wb.ensure_stock(updates).map_err(|e| e.to_string())?;
+            let rep = coord.run_conventional(&table, &stock).map_err(|e| e.to_string())?;
+            println!(
+                "conventional app: {} applied; wall {} | modeled (full-scale disk) {}",
+                commas(rep.updates_applied),
+                human_duration(rep.wall),
+                paper_hms(rep.modeled)
+            );
+            Ok(())
+        }
+        "compare" => {
+            let row = compare_once(&cfg, &wb, updates)?;
+            println!("{}", render_table1(std::slice::from_ref(&row)));
+            println!("{}", render_figure6(std::slice::from_ref(&row)));
+            if args.has("json") {
+                println!("{}", row.to_json().to_string_pretty());
+            }
+            Ok(())
+        }
+        "analytics" => {
+            let coord = Coordinator::new(cfg.clone());
+            let table = wb.ensure_table(&cfg).map_err(|e| e.to_string())?;
+            let store = coord.load_only(&table).map_err(|e| e.to_string())?;
+            let engine =
+                AnalyticsEngine::load(&cfg.artifacts_dir).map_err(|e| e.to_string())?;
+            println!("PJRT platform: {}", engine.platform());
+            let result = engine.analytics_for_store(&store, &[]).map_err(|e| e.to_string())?;
+            println!(
+                "inventory: count={} value=${:.2} mean=${:.4} min=${:.2} max=${:.2} (exec {})",
+                commas(result.stats.count),
+                result.stats.total_value,
+                result.stats.mean_price,
+                result.stats.price_min,
+                result.stats.price_max,
+                human_duration(result.exec_time)
+            );
+            println!("price histogram ($0.50 bins): {:?}", result.histogram);
+            Ok(())
+        }
+        "serve" => {
+            let coord = Coordinator::new(cfg.clone());
+            let table = wb.ensure_table(&cfg).map_err(|e| e.to_string())?;
+            let store = coord.load_only(&table).map_err(|e| e.to_string())?;
+            let engine = membig::runtime::AnalyticsService::start(&cfg.artifacts_dir)
+                .map(Arc::new)
+                .map_err(|e| {
+                    eprintln!("analytics engine unavailable: {e}");
+                })
+                .ok();
+            println!(
+                "serving {} records on {} (analytics: {})",
+                commas(store.len() as u64),
+                cfg.bind,
+                if engine.is_some() { "PJRT" } else { "disabled" }
+            );
+            let handle =
+                Server::new(store, engine).spawn(&cfg.bind).map_err(|e| e.to_string())?;
+            println!("listening on {} — Ctrl-C to stop", handle.addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "info" => {
+            println!("membig {}", env!("CARGO_PKG_VERSION"));
+            println!("cores: {}", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0));
+            println!("threads: {}  shards: {}", cfg.threads, cfg.shards);
+            println!("disk model: {:?}", cfg.disk);
+            println!("data dir: {}", cfg.data_dir.display());
+            println!("artifacts: {}", cfg.artifacts_dir.display());
+            match AnalyticsEngine::load_lazy(&cfg.artifacts_dir) {
+                Ok(e) => println!("PJRT: {}", e.platform()),
+                Err(e) => println!("PJRT: unavailable ({e})"),
+            }
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}' (try --help)")),
+    }
+}
+
+fn build_config(args: &Args) -> Result<EngineConfig, String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => EngineConfig::from_ini(path)?,
+        None => EngineConfig::default(),
+    };
+    if let Some(t) = args.get_parsed::<usize>("threads").map_err(|e| e.to_string())? {
+        cfg.threads = t;
+        cfg.shards = t;
+    }
+    if let Some(s) = args.get_parsed::<usize>("shards").map_err(|e| e.to_string())? {
+        cfg.shards = s;
+    }
+    if let Some(b) = args.get_parsed::<usize>("batch-size").map_err(|e| e.to_string())? {
+        cfg.batch_size = b;
+    }
+    if let Some(d) = args.get("data-dir") {
+        cfg.data_dir = PathBuf::from(d);
+    }
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(d);
+    }
+    if let Some(s) = args.get_parsed::<u64>("seed").map_err(|e| e.to_string())? {
+        cfg.seed = s;
+    }
+    if let Some(s) = args.get_parsed::<f64>("disk-scale").map_err(|e| e.to_string())? {
+        cfg.disk.scale = s;
+    }
+    if let Some(c) = args.get_parsed::<usize>("cache-pages").map_err(|e| e.to_string())? {
+        cfg.page_cache_pages = c;
+    }
+    if let Some(b) = args.get("bind") {
+        cfg.bind = b.to_string();
+    }
+    if args.has("writeback") {
+        cfg.writeback = true;
+    }
+    cfg.validated()
+}
+
+/// One Table-1 cell: run both apps over identical inputs.
+fn compare_once(cfg: &EngineConfig, wb: &Workbench, updates: u64) -> Result<RunReport, String> {
+    let stock = wb.ensure_stock(updates).map_err(|e| e.to_string())?;
+
+    // Proposed.
+    let coord = Coordinator::new(cfg.clone());
+    let table = wb.ensure_table(cfg).map_err(|e| e.to_string())?;
+    let out = coord.run_proposed(&table, &stock).map_err(|e| e.to_string())?;
+    drop(table);
+
+    // Conventional over a fresh table (same content).
+    std::fs::remove_dir_all(wb.table_dir()).ok();
+    let table = wb.ensure_table(cfg).map_err(|e| e.to_string())?;
+    let coord2 = Coordinator::new(cfg.clone());
+    let rep = coord2.run_conventional(&table, &stock).map_err(|e| e.to_string())?;
+
+    Ok(RunReport {
+        n_updates: updates,
+        conventional: rep.modeled,
+        conventional_wall: rep.wall,
+        proposed: out.load + out.update,
+    })
+}

@@ -1,0 +1,410 @@
+//! Robin-Hood open-addressing hash table specialised for `u64 → BookRecord`.
+//!
+//! This is the paper's "special Hash Table data structure" (§4.1) built from
+//! scratch rather than taken from the standard library:
+//! - open addressing with linear probing and robin-hood displacement keeps
+//!   probe sequences short and cache-friendly at high load factors;
+//! - keys are ISBN-13 integers (never 0), so 0 doubles as the empty marker
+//!   and the table stores no separate occupancy metadata;
+//! - power-of-two capacity → mask instead of modulo on the hot path;
+//! - the record payload is stored inline (24B), one cache line covers a
+//!   probe step.
+//!
+//! Not thread-safe by design: the sharded store gives each worker thread
+//! exclusive ownership of its table, which is exactly the paper's
+//! shared-memory-without-locks architecture.
+
+use crate::storage::index::hash_key;
+use crate::workload::record::BookRecord;
+
+const EMPTY: u64 = 0;
+
+#[derive(Clone)]
+struct Bucket {
+    key: u64, // 0 = empty
+    price_cents: u64,
+    quantity: u32,
+}
+
+impl Bucket {
+    const VACANT: Bucket = Bucket { key: EMPTY, price_cents: 0, quantity: 0 };
+
+    #[inline]
+    fn record(&self) -> BookRecord {
+        BookRecord { isbn13: self.key, price_cents: self.price_cents, quantity: self.quantity }
+    }
+}
+
+pub struct HashTable {
+    buckets: Vec<Bucket>,
+    mask: usize,
+    len: usize,
+    /// Grow when len exceeds this (87.5% load factor).
+    grow_at: usize,
+    /// Probe-length statistics for Figure-1-style diagnostics.
+    max_probe: usize,
+}
+
+impl HashTable {
+    /// Max load factor numerator/denominator: 7/8.
+    const LOAD_NUM: usize = 7;
+    const LOAD_DEN: usize = 8;
+
+    pub fn new() -> Self {
+        Self::with_capacity(16)
+    }
+
+    /// Capacity hint in *records*; the table sizes itself so that `hint`
+    /// records fit without growing.
+    pub fn with_capacity(hint: usize) -> Self {
+        let cap = (hint.max(8) * Self::LOAD_DEN / Self::LOAD_NUM + 1).next_power_of_two();
+        HashTable {
+            buckets: vec![Bucket::VACANT; cap],
+            mask: cap - 1,
+            len: 0,
+            grow_at: cap * Self::LOAD_NUM / Self::LOAD_DEN,
+            max_probe: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Longest probe sequence seen during inserts (diagnostics).
+    pub fn max_probe(&self) -> usize {
+        self.max_probe
+    }
+
+    /// Bytes of heap this table pins.
+    pub fn memory_bytes(&self) -> usize {
+        self.buckets.len() * std::mem::size_of::<Bucket>()
+    }
+
+    #[inline]
+    fn slot_of(&self, key: u64) -> usize {
+        (hash_key(key) as usize) & self.mask
+    }
+
+    /// Probe distance of the key found at `idx` from its home slot.
+    #[inline]
+    fn distance(&self, idx: usize, key: u64) -> usize {
+        let home = self.slot_of(key);
+        idx.wrapping_sub(home) & self.mask
+    }
+
+    /// Insert or overwrite. Returns the previous record for the key, if any.
+    pub fn insert(&mut self, rec: BookRecord) -> Option<BookRecord> {
+        assert_ne!(rec.isbn13, EMPTY, "key 0 is reserved as the empty marker");
+        if self.len >= self.grow_at {
+            self.grow();
+        }
+        let mut idx = self.slot_of(rec.isbn13);
+        let mut cur =
+            Bucket { key: rec.isbn13, price_cents: rec.price_cents, quantity: rec.quantity };
+        let mut dist = 0usize;
+        loop {
+            let b = &mut self.buckets[idx];
+            if b.key == EMPTY {
+                *b = cur;
+                self.len += 1;
+                self.max_probe = self.max_probe.max(dist);
+                return None;
+            }
+            if b.key == cur.key {
+                let prev = b.record();
+                *b = cur;
+                return Some(prev);
+            }
+            // Robin hood: displace richer residents.
+            let their_dist = self.distance(idx, self.buckets[idx].key);
+            if their_dist < dist {
+                std::mem::swap(&mut self.buckets[idx], &mut cur);
+                self.max_probe = self.max_probe.max(dist);
+                dist = their_dist;
+            }
+            idx = (idx + 1) & self.mask;
+            dist += 1;
+        }
+    }
+
+    /// Point lookup.
+    #[inline]
+    pub fn get(&self, key: u64) -> Option<BookRecord> {
+        let mut idx = self.slot_of(key);
+        let mut dist = 0usize;
+        loop {
+            let b = &self.buckets[idx];
+            if b.key == key {
+                return Some(b.record());
+            }
+            if b.key == EMPTY {
+                return None;
+            }
+            // Robin-hood invariant: once we've probed further than the
+            // resident's own distance, the key cannot be present.
+            if self.distance(idx, b.key) < dist {
+                return None;
+            }
+            idx = (idx + 1) & self.mask;
+            dist += 1;
+        }
+    }
+
+    /// In-place update through a closure; returns false if the key is absent.
+    /// This is the hot path of the proposed method: one probe, one write,
+    /// no allocation.
+    #[inline]
+    pub fn update(&mut self, key: u64, f: impl FnOnce(&mut BookRecord)) -> bool {
+        let mut idx = self.slot_of(key);
+        let mut dist = 0usize;
+        loop {
+            let b = &self.buckets[idx];
+            if b.key == key {
+                let mut rec = b.record();
+                f(&mut rec);
+                debug_assert_eq!(rec.isbn13, key, "update must not change the key");
+                let b = &mut self.buckets[idx];
+                b.price_cents = rec.price_cents;
+                b.quantity = rec.quantity;
+                return true;
+            }
+            if b.key == EMPTY || self.distance(idx, b.key) < dist {
+                return false;
+            }
+            idx = (idx + 1) & self.mask;
+            dist += 1;
+        }
+    }
+
+    /// Remove a key (backward-shift deletion keeps probe chains tight).
+    pub fn remove(&mut self, key: u64) -> Option<BookRecord> {
+        let mut idx = self.slot_of(key);
+        let mut dist = 0usize;
+        loop {
+            let b = &self.buckets[idx];
+            if b.key == key {
+                let prev = b.record();
+                // Backward shift: pull successors left until an empty slot
+                // or a resident at home position.
+                let mut cur = idx;
+                loop {
+                    let next = (cur + 1) & self.mask;
+                    let nb = self.buckets[next].clone();
+                    if nb.key == EMPTY || self.distance(next, nb.key) == 0 {
+                        self.buckets[cur] = Bucket::VACANT;
+                        break;
+                    }
+                    self.buckets[cur] = nb;
+                    cur = next;
+                }
+                self.len -= 1;
+                return Some(prev);
+            }
+            if b.key == EMPTY || self.distance(idx, b.key) < dist {
+                return None;
+            }
+            idx = (idx + 1) & self.mask;
+            dist += 1;
+        }
+    }
+
+    /// Iterate all records (arbitrary order).
+    pub fn iter(&self) -> impl Iterator<Item = BookRecord> + '_ {
+        self.buckets.iter().filter(|b| b.key != EMPTY).map(|b| b.record())
+    }
+
+    /// Fold the table into (count, Σ price·qty cents) without materializing.
+    pub fn value_sum_cents(&self) -> (u64, u128) {
+        let mut n = 0u64;
+        let mut sum = 0u128;
+        for b in &self.buckets {
+            if b.key != EMPTY {
+                n += 1;
+                sum += b.price_cents as u128 * b.quantity as u128;
+            }
+        }
+        (n, sum)
+    }
+
+    fn grow(&mut self) {
+        let new_cap = self.buckets.len() * 2;
+        let old = std::mem::replace(&mut self.buckets, vec![Bucket::VACANT; new_cap]);
+        self.mask = new_cap - 1;
+        self.grow_at = new_cap * Self::LOAD_NUM / Self::LOAD_DEN;
+        self.len = 0;
+        self.max_probe = 0;
+        for b in old {
+            if b.key != EMPTY {
+                self.insert(b.record());
+            }
+        }
+    }
+}
+
+impl Default for HashTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rec(k: u64) -> BookRecord {
+        BookRecord::new(k, k % 1000, (k % 500) as u32)
+    }
+
+    #[test]
+    fn insert_get_update_remove() {
+        let mut t = HashTable::new();
+        assert!(t.is_empty());
+        assert_eq!(t.insert(rec(42)), None);
+        assert_eq!(t.get(42), Some(rec(42)));
+        assert_eq!(t.get(43), None);
+        assert!(t.update(42, |r| r.quantity = 7));
+        assert_eq!(t.get(42).unwrap().quantity, 7);
+        assert!(!t.update(43, |r| r.quantity = 7));
+        let removed = t.remove(42).unwrap();
+        assert_eq!(removed.quantity, 7);
+        assert_eq!(t.get(42), None);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn insert_overwrites_and_returns_prev() {
+        let mut t = HashTable::new();
+        t.insert(BookRecord::new(5, 100, 1));
+        let prev = t.insert(BookRecord::new(5, 200, 2)).unwrap();
+        assert_eq!(prev.price_cents, 100);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get(5).unwrap().price_cents, 200);
+    }
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let mut t = HashTable::with_capacity(8);
+        let initial_cap = t.capacity();
+        for k in 1..=10_000u64 {
+            t.insert(rec(k));
+        }
+        assert_eq!(t.len(), 10_000);
+        assert!(t.capacity() > initial_cap);
+        for k in 1..=10_000u64 {
+            assert_eq!(t.get(k), Some(rec(k)), "lost key {k} after growth");
+        }
+    }
+
+    #[test]
+    fn with_capacity_avoids_growth() {
+        let mut t = HashTable::with_capacity(10_000);
+        let cap = t.capacity();
+        for k in 1..=10_000u64 {
+            t.insert(rec(k));
+        }
+        assert_eq!(t.capacity(), cap, "should not grow when sized upfront");
+    }
+
+    #[test]
+    fn dense_adversarial_keys() {
+        // Sequential keys stress the mixer; probe lengths must stay sane.
+        let mut t = HashTable::with_capacity(100_000);
+        for k in 1..=100_000u64 {
+            t.insert(rec(k));
+        }
+        assert!(t.max_probe() < 32, "max probe {} too long", t.max_probe());
+    }
+
+    #[test]
+    fn matches_std_hashmap_reference() {
+        // Randomized differential test vs std::HashMap.
+        let mut rng = Rng::new(2024);
+        let mut ours = HashTable::new();
+        let mut reference = std::collections::HashMap::new();
+        for _ in 0..50_000 {
+            let key = rng.gen_range(2_000) + 1;
+            match rng.gen_range(4) {
+                0 => {
+                    let r = rec(key * 31);
+                    assert_eq!(
+                        ours.insert(BookRecord::new(key, r.price_cents, r.quantity)),
+                        reference
+                            .insert(key, (r.price_cents, r.quantity))
+                            .map(|(p, q)| BookRecord::new(key, p, q))
+                    );
+                }
+                1 => {
+                    assert_eq!(
+                        ours.get(key),
+                        reference.get(&key).map(|&(p, q)| BookRecord::new(key, p, q))
+                    );
+                }
+                2 => {
+                    let updated = ours.update(key, |r| r.quantity += 1);
+                    let ref_updated = reference.get_mut(&key).map(|v| v.1 += 1).is_some();
+                    assert_eq!(updated, ref_updated);
+                }
+                _ => {
+                    assert_eq!(
+                        ours.remove(key),
+                        reference.remove(&key).map(|(p, q)| BookRecord::new(key, p, q))
+                    );
+                }
+            }
+            assert_eq!(ours.len(), reference.len());
+        }
+    }
+
+    #[test]
+    fn iteration_sees_exactly_live_records() {
+        let mut t = HashTable::new();
+        for k in 1..=500u64 {
+            t.insert(rec(k));
+        }
+        for k in (1..=500u64).step_by(2) {
+            t.remove(k);
+        }
+        let mut keys: Vec<u64> = t.iter().map(|r| r.isbn13).collect();
+        keys.sort_unstable();
+        let expect: Vec<u64> = (1..=500).filter(|k| k % 2 == 0).collect();
+        assert_eq!(keys, expect);
+    }
+
+    #[test]
+    fn value_sum_matches_naive() {
+        let mut t = HashTable::new();
+        let mut naive: u128 = 0;
+        for k in 1..=1000u64 {
+            let r = rec(k);
+            naive += r.value_cents();
+            t.insert(r);
+        }
+        let (n, sum) = t.value_sum_cents();
+        assert_eq!(n, 1000);
+        assert_eq!(sum, naive);
+    }
+
+    #[test]
+    #[should_panic(expected = "key 0 is reserved")]
+    fn zero_key_rejected() {
+        HashTable::new().insert(BookRecord::new(0, 1, 1));
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let t = HashTable::with_capacity(1 << 16);
+        // 24-byte buckets (u64,u64,u32 + padding) → cap * 24.
+        assert_eq!(t.memory_bytes(), t.capacity() * std::mem::size_of::<Bucket>());
+        assert!(t.memory_bytes() >= (1 << 16) * 24);
+    }
+}

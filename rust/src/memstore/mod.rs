@@ -1,0 +1,11 @@
+//! The paper's memory layer (§4.1–4.2): records live in purpose-built
+//! open-addressing hash tables in RAM, sharded one-table-per-thread
+//! (`T = {(t1,h1), (t2,h2), …, (tn,hn)}`), loaded once from the disk store
+//! and updated in parallel with zero cross-shard synchronization.
+
+pub mod hashtable;
+pub mod shard;
+pub mod snapshot;
+
+pub use hashtable::HashTable;
+pub use shard::ShardedStore;

@@ -1,0 +1,220 @@
+//! Sharded in-memory store: `n` independent [`HashTable`]s, keys routed by
+//! hash. Shard count is fixed at construction (paper: one shard per core),
+//! so routing is a pure function and workers never contend.
+//!
+//! Concurrency model: each shard is wrapped in a `Mutex` so the store is
+//! usable from any topology, but the pipeline's shard-affine workers take
+//! each mutex uncontended (one worker ↔ one shard) — the lock is a safety
+//! net, not a synchronization point. `route()` is exposed so callers can
+//! partition work *before* touching the store, which is the paper's design.
+
+use std::sync::Mutex;
+
+use super::hashtable::HashTable;
+use crate::storage::index::hash_key;
+use crate::workload::record::{BookRecord, StockUpdate};
+
+pub struct ShardedStore {
+    shards: Vec<Mutex<HashTable>>,
+    /// Bit mask when shard count is a power of two, else None → modulo.
+    mask: Option<u64>,
+}
+
+impl ShardedStore {
+    pub fn new(shards: usize, capacity_hint_per_shard: usize) -> Self {
+        assert!(shards > 0);
+        let mask = if shards.is_power_of_two() { Some(shards as u64 - 1) } else { None };
+        ShardedStore {
+            shards: (0..shards)
+                .map(|_| Mutex::new(HashTable::with_capacity(capacity_hint_per_shard)))
+                .collect(),
+            mask,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard owns `key`. Uses the *upper* hash bits so shard routing
+    /// stays independent of the in-table slot choice (lower bits).
+    #[inline]
+    pub fn route(&self, key: u64) -> usize {
+        let h = hash_key(key) >> 32;
+        match self.mask {
+            Some(m) => (h & m) as usize,
+            None => (h % self.shards.len() as u64) as usize,
+        }
+    }
+
+    /// Exclusive access to one shard (used by shard-affine workers).
+    pub fn shard(&self, i: usize) -> std::sync::MutexGuard<'_, HashTable> {
+        self.shards[i].lock().unwrap()
+    }
+
+    pub fn insert(&self, rec: BookRecord) -> Option<BookRecord> {
+        self.shard(self.route(rec.isbn13)).insert(rec)
+    }
+
+    pub fn get(&self, key: u64) -> Option<BookRecord> {
+        self.shard(self.route(key)).get(key)
+    }
+
+    pub fn update(&self, key: u64, f: impl FnOnce(&mut BookRecord)) -> bool {
+        self.shard(self.route(key)).update(key, f)
+    }
+
+    pub fn apply(&self, u: &StockUpdate) -> bool {
+        self.update(u.isbn13, |r| u.apply_to(r))
+    }
+
+    pub fn remove(&self, key: u64) -> Option<BookRecord> {
+        self.shard(self.route(key)).remove(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().memory_bytes()).sum()
+    }
+
+    /// (count, Σ price·qty) across all shards.
+    pub fn value_sum_cents(&self) -> (u64, u128) {
+        let mut n = 0;
+        let mut sum = 0;
+        for s in &self.shards {
+            let (sn, ss) = s.lock().unwrap().value_sum_cents();
+            n += sn;
+            sum += ss;
+        }
+        (n, sum)
+    }
+
+    /// Snapshot all records of one shard (for writeback / analytics export).
+    pub fn shard_records(&self, i: usize) -> Vec<BookRecord> {
+        self.shard(i).iter().collect()
+    }
+
+    /// Per-shard record counts — balance diagnostics for benches.
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gen::DatasetSpec;
+
+    #[test]
+    fn routing_is_stable_and_in_range() {
+        let s = ShardedStore::new(12, 16);
+        for k in 1..10_000u64 {
+            let r = s.route(k);
+            assert!(r < 12);
+            assert_eq!(r, s.route(k), "routing must be deterministic");
+        }
+    }
+
+    #[test]
+    fn insert_get_across_shards() {
+        let s = ShardedStore::new(8, 16);
+        let spec = DatasetSpec { records: 5_000, ..Default::default() };
+        for r in spec.iter() {
+            s.insert(r);
+        }
+        assert_eq!(s.len(), 5_000);
+        for i in (0..5_000).step_by(97) {
+            let r = spec.record_at(i);
+            assert_eq!(s.get(r.isbn13), Some(r));
+        }
+    }
+
+    #[test]
+    fn shards_balanced_within_20_percent() {
+        let s = ShardedStore::new(8, 1 << 12);
+        let spec = DatasetSpec { records: 80_000, ..Default::default() };
+        for r in spec.iter() {
+            s.insert(r);
+        }
+        let sizes = s.shard_sizes();
+        let mean = 80_000.0 / 8.0;
+        for (i, &sz) in sizes.iter().enumerate() {
+            assert!(
+                (sz as f64 - mean).abs() / mean < 0.2,
+                "shard {i} unbalanced: {sz} vs mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn apply_stock_update() {
+        let s = ShardedStore::new(4, 16);
+        s.insert(BookRecord::new(123, 100, 1));
+        let u = StockUpdate { isbn13: 123, new_price_cents: 393, new_quantity: 495 };
+        assert!(s.apply(&u));
+        assert_eq!(s.get(123).unwrap().price_cents, 393);
+        assert!(!s.apply(&StockUpdate { isbn13: 999, new_price_cents: 1, new_quantity: 1 }));
+    }
+
+    #[test]
+    fn concurrent_shard_affine_updates() {
+        // The paper's topology: each worker updates only its own shard.
+        let spec = DatasetSpec { records: 40_000, ..Default::default() };
+        let s = ShardedStore::new(4, 1 << 14);
+        for r in spec.iter() {
+            s.insert(r);
+        }
+        // Pre-route updates per shard.
+        let mut per_shard: Vec<Vec<StockUpdate>> = vec![Vec::new(); 4];
+        for r in spec.iter() {
+            per_shard[s.route(r.isbn13)].push(StockUpdate {
+                isbn13: r.isbn13,
+                new_price_cents: 555,
+                new_quantity: 5,
+            });
+        }
+        std::thread::scope(|scope| {
+            for (i, ups) in per_shard.iter().enumerate() {
+                let s = &s;
+                scope.spawn(move || {
+                    let mut shard = s.shard(i);
+                    for u in ups {
+                        assert!(shard.update(u.isbn13, |r| u.apply_to(r)));
+                    }
+                });
+            }
+        });
+        let (n, sum) = s.value_sum_cents();
+        assert_eq!(n, 40_000);
+        assert_eq!(sum, 40_000u128 * 555 * 5);
+    }
+
+    #[test]
+    fn non_power_of_two_shards() {
+        let s = ShardedStore::new(12, 16);
+        let spec = DatasetSpec { records: 1_000, ..Default::default() };
+        for r in spec.iter() {
+            s.insert(r);
+        }
+        assert_eq!(s.len(), 1_000);
+        assert_eq!(s.shard_sizes().iter().sum::<usize>(), 1_000);
+    }
+
+    #[test]
+    fn value_sum_aggregates_all_shards() {
+        let s = ShardedStore::new(3, 16);
+        s.insert(BookRecord::new(1, 100, 2)); // 200
+        s.insert(BookRecord::new(2, 300, 3)); // 900
+        s.insert(BookRecord::new(3, 50, 4)); // 200
+        let (n, sum) = s.value_sum_cents();
+        assert_eq!(n, 3);
+        assert_eq!(sum, 1300);
+    }
+}

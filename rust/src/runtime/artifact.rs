@@ -1,0 +1,178 @@
+//! Artifact manifest: `artifacts/manifest.json` written by `aot.py`,
+//! describing every compiled model variant (name, batch size, file).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{parse, Json};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArtifactError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("manifest parse: {0}")]
+    Parse(String),
+    #[error("no variant of model '{0}' fits batch {1} (available: {2:?})")]
+    NoVariant(String, usize, Vec<usize>),
+    #[error("artifact file missing: {0}")]
+    Missing(PathBuf),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelEntry {
+    pub name: String,
+    pub batch: usize,
+    pub path: PathBuf,
+    pub inputs: usize,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load and validate `dir/manifest.json`; every referenced artifact
+    /// file must exist.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, ArtifactError> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let json = parse(&text).map_err(ArtifactError::Parse)?;
+        Self::from_json(dir, &json)
+    }
+
+    pub fn from_json(dir: PathBuf, json: &Json) -> Result<Self, ArtifactError> {
+        let models = json
+            .get("models")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ArtifactError::Parse("missing 'models' array".into()))?;
+        let mut out = Vec::with_capacity(models.len());
+        for m in models {
+            let name = m
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ArtifactError::Parse("model missing 'name'".into()))?
+                .to_string();
+            let batch = m
+                .get("batch")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| ArtifactError::Parse(format!("model {name} missing 'batch'")))?;
+            let rel = m
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ArtifactError::Parse(format!("model {name} missing 'path'")))?;
+            let path = dir.join(rel);
+            if !path.exists() {
+                return Err(ArtifactError::Missing(path));
+            }
+            let inputs = m.get("inputs").and_then(Json::as_usize).unwrap_or(0);
+            let outputs = m
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|o| o.as_str().map(String::from)).collect())
+                .unwrap_or_default();
+            out.push(ModelEntry { name, batch, path, inputs, outputs });
+        }
+        Ok(ArtifactManifest { dir, models: out })
+    }
+
+    /// Smallest variant of `name` whose batch is >= `n`.
+    pub fn pick(&self, name: &str, n: usize) -> Result<&ModelEntry, ArtifactError> {
+        self.models
+            .iter()
+            .filter(|m| m.name == name && m.batch >= n)
+            .min_by_key(|m| m.batch)
+            .ok_or_else(|| {
+                ArtifactError::NoVariant(
+                    name.to_string(),
+                    n,
+                    self.models.iter().filter(|m| m.name == name).map(|m| m.batch).collect(),
+                )
+            })
+    }
+
+    pub fn variants(&self, name: &str) -> Vec<&ModelEntry> {
+        self.models.iter().filter(|m| m.name == name).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path, files: &[(&str, usize)]) -> ArtifactManifest {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut models = String::new();
+        for (i, (name, batch)) in files.iter().enumerate() {
+            let fname = format!("{name}_{batch}.hlo.txt");
+            std::fs::write(dir.join(&fname), "HloModule fake").unwrap();
+            if i > 0 {
+                models.push(',');
+            }
+            models.push_str(&format!(
+                r#"{{"name":"{name}","batch":{batch},"path":"{fname}","inputs":3,"outputs":["x"]}}"#
+            ));
+        }
+        let manifest = format!(r#"{{"format":"hlo-text","models":[{models}]}}"#);
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        ArtifactManifest::load(dir).unwrap()
+    }
+
+    fn tdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("membig_art_{}", std::process::id()))
+            .join(name);
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn load_and_pick() {
+        let dir = tdir("pick");
+        let m = fake_manifest(&dir, &[("value_sum", 4096), ("value_sum", 16384), ("analytics", 4096)]);
+        assert_eq!(m.models.len(), 3);
+        assert_eq!(m.pick("value_sum", 100).unwrap().batch, 4096);
+        assert_eq!(m.pick("value_sum", 4096).unwrap().batch, 4096);
+        assert_eq!(m.pick("value_sum", 4097).unwrap().batch, 16384);
+        assert!(matches!(
+            m.pick("value_sum", 1 << 20),
+            Err(ArtifactError::NoVariant(_, _, _))
+        ));
+        assert!(m.pick("nonexistent", 1).is_err());
+        assert_eq!(m.variants("value_sum").len(), 2);
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = tdir("missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"models":[{"name":"m","batch":1,"path":"gone.hlo.txt"}]}"#,
+        )
+        .unwrap();
+        assert!(matches!(ArtifactManifest::load(&dir), Err(ArtifactError::Missing(_))));
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        let dir = tdir("malformed");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"nope": 1}"#).unwrap();
+        assert!(matches!(ArtifactManifest::load(&dir), Err(ArtifactError::Parse(_))));
+        std::fs::write(dir.join("manifest.json"), "not json").unwrap();
+        assert!(ArtifactManifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Soft test: only runs when `make artifacts` has been executed.
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = ArtifactManifest::load(&dir).unwrap();
+            assert!(m.pick("analytics", 1000).is_ok());
+            assert!(m.pick("value_sum", 1000).is_ok());
+        }
+    }
+}

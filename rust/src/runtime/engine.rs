@@ -1,0 +1,313 @@
+//! The analytics engine: compiles every artifact once at startup, then
+//! serves batched analytics calls from the Rust hot path.
+//!
+//! Padding contract (must match `python/compile/model.py`): inputs are
+//! padded up to the compiled batch size with `mask = -1.0` rows, which the
+//! kernel excludes from all statistics.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::artifact::{ArtifactError, ArtifactManifest};
+use crate::memstore::ShardedStore;
+use crate::workload::record::StockUpdate;
+
+pub const N_STATS: usize = 8;
+pub const HIST_BINS: usize = 20;
+
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error("artifact: {0}")]
+    Artifact(#[from] ArtifactError),
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("model output shape unexpected: {0}")]
+    BadOutput(String),
+    #[error("input arrays must share one length (got {0:?})")]
+    RaggedInputs(Vec<usize>),
+}
+
+impl From<xla::Error> for EngineError {
+    fn from(e: xla::Error) -> Self {
+        EngineError::Xla(e.to_string())
+    }
+}
+
+/// Combined statistics emitted by the `analytics` model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InventoryStats {
+    /// Σ price·qty over live rows (dollars).
+    pub total_value: f64,
+    pub count: u64,
+    pub price_sum: f64,
+    pub price_min: f64,
+    pub price_max: f64,
+    pub qty_sum: f64,
+    pub updates_applied: u64,
+    pub mean_price: f64,
+}
+
+/// Full analytics output.
+#[derive(Debug, Clone)]
+pub struct AnalyticsResult {
+    pub upd_price: Vec<f32>,
+    pub upd_qty: Vec<f32>,
+    pub stats: InventoryStats,
+    pub histogram: [f32; HIST_BINS],
+    /// PJRT execution time of the call (excludes padding/copy).
+    pub exec_time: std::time::Duration,
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    #[allow(dead_code)] // kept for diagnostics / future batch introspection
+    batch: usize,
+}
+
+/// Loads `artifacts/` once; thread-safe (PJRT executions are serialized per
+/// engine via an internal lock — the CPU client is not re-entrant-safe for
+/// our use and analytics calls are coarse-grained).
+pub struct AnalyticsEngine {
+    manifest: ArtifactManifest,
+    client: xla::PjRtClient,
+    compiled: Mutex<HashMap<(String, usize), Compiled>>,
+}
+
+impl AnalyticsEngine {
+    /// Create the engine and eagerly compile every manifest entry.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self, EngineError> {
+        let manifest = ArtifactManifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let engine =
+            AnalyticsEngine { manifest, client, compiled: Mutex::new(HashMap::new()) };
+        // Eager compile: startup cost, not request-path cost.
+        for entry in engine.manifest.models.clone() {
+            engine.ensure_compiled(&entry.name, entry.batch)?;
+        }
+        Ok(engine)
+    }
+
+    /// Lazy variant for tests: compile on first use.
+    pub fn load_lazy(artifacts_dir: impl AsRef<Path>) -> Result<Self, EngineError> {
+        let manifest = ArtifactManifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(AnalyticsEngine { manifest, client, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn ensure_compiled(&self, name: &str, batch: usize) -> Result<(), EngineError> {
+        let key = (name.to_string(), batch);
+        let mut map = self.compiled.lock().unwrap();
+        if map.contains_key(&key) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .models
+            .iter()
+            .find(|m| m.name == name && m.batch == batch)
+            .ok_or_else(|| {
+                ArtifactError::NoVariant(name.to_string(), batch, vec![])
+            })?;
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.path.to_str().expect("artifact path must be utf-8"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        map.insert(key, Compiled { exe, batch });
+        Ok(())
+    }
+
+    fn padded(data: &[f32], batch: usize, fill: f32) -> Vec<f32> {
+        let mut v = Vec::with_capacity(batch);
+        v.extend_from_slice(data);
+        v.resize(batch, fill);
+        v
+    }
+
+    /// Run the `analytics` model: masked bulk update + stats + histogram.
+    /// `mask[i] = 1.0` applies `new_*[i]`; `0.0` keeps current values.
+    pub fn analytics(
+        &self,
+        price: &[f32],
+        qty: &[f32],
+        new_price: &[f32],
+        new_qty: &[f32],
+        mask: &[f32],
+    ) -> Result<AnalyticsResult, EngineError> {
+        let n = price.len();
+        let lens = vec![n, qty.len(), new_price.len(), new_qty.len(), mask.len()];
+        if lens.iter().any(|&l| l != n) {
+            return Err(EngineError::RaggedInputs(lens));
+        }
+        let entry = self.manifest.pick("analytics", n)?;
+        let batch = entry.batch;
+        self.ensure_compiled("analytics", batch)?;
+
+        let args = [
+            xla::Literal::vec1(&Self::padded(price, batch, 0.0)),
+            xla::Literal::vec1(&Self::padded(qty, batch, 0.0)),
+            xla::Literal::vec1(&Self::padded(new_price, batch, 0.0)),
+            xla::Literal::vec1(&Self::padded(new_qty, batch, 0.0)),
+            xla::Literal::vec1(&Self::padded(mask, batch, -1.0)),
+        ];
+
+        let map = self.compiled.lock().unwrap();
+        let compiled = map.get(&("analytics".to_string(), batch)).expect("compiled above");
+        let t0 = Instant::now();
+        let result = compiled.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let exec_time = t0.elapsed();
+        drop(map);
+
+        let (up_l, uq_l, summary_l) = result.to_tuple3()?;
+        let mut upd_price = up_l.to_vec::<f32>()?;
+        let mut upd_qty = uq_l.to_vec::<f32>()?;
+        upd_price.truncate(n);
+        upd_qty.truncate(n);
+        let summary = summary_l.to_vec::<f32>()?;
+        if summary.len() != N_STATS + HIST_BINS {
+            return Err(EngineError::BadOutput(format!("summary len {}", summary.len())));
+        }
+        let mut histogram = [0f32; HIST_BINS];
+        histogram.copy_from_slice(&summary[N_STATS..]);
+        Ok(AnalyticsResult {
+            upd_price,
+            upd_qty,
+            stats: InventoryStats {
+                total_value: summary[0] as f64,
+                count: summary[1] as u64,
+                price_sum: summary[2] as f64,
+                price_min: summary[3] as f64,
+                price_max: summary[4] as f64,
+                qty_sum: summary[5] as f64,
+                updates_applied: summary[6] as u64,
+                mean_price: summary[7] as f64,
+            },
+            histogram,
+            exec_time,
+        })
+    }
+
+    /// Run the `value_sum` fast path: Σ price·qty over `n` rows.
+    pub fn value_sum(&self, price: &[f32], qty: &[f32]) -> Result<f64, EngineError> {
+        let n = price.len();
+        if qty.len() != n {
+            return Err(EngineError::RaggedInputs(vec![n, qty.len()]));
+        }
+        let entry = self.manifest.pick("value_sum", n)?;
+        let batch = entry.batch;
+        self.ensure_compiled("value_sum", batch)?;
+        let mask: Vec<f32> = {
+            let mut m = vec![0.0f32; n];
+            m.resize(batch, -1.0);
+            m
+        };
+        let args = [
+            xla::Literal::vec1(&Self::padded(price, batch, 0.0)),
+            xla::Literal::vec1(&Self::padded(qty, batch, 0.0)),
+            xla::Literal::vec1(&mask),
+        ];
+        let map = self.compiled.lock().unwrap();
+        let compiled = map.get(&("value_sum".to_string(), batch)).expect("compiled above");
+        let result = compiled.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        drop(map);
+        let total = result.to_tuple1()?.to_vec::<f32>()?;
+        Ok(total[0] as f64)
+    }
+
+    /// Largest compiled batch for `name`.
+    fn max_batch(&self, name: &str) -> usize {
+        self.manifest.variants(name).iter().map(|m| m.batch).max().unwrap_or(0)
+    }
+
+    /// Analytics over a live store + pending updates: exports columns,
+    /// marks updated keys, runs the model — **chunked** to the largest
+    /// compiled variant, with partial statistics combined on the Rust side
+    /// (the same leader/worker aggregation shape as the L1 kernel's
+    /// per-tile partials). The store itself is not mutated — this is the
+    /// read-side analytics path, entirely on PJRT.
+    pub fn analytics_for_store(
+        &self,
+        store: &ShardedStore,
+        updates: &[StockUpdate],
+    ) -> Result<AnalyticsResult, EngineError> {
+        let mut price = Vec::new();
+        let mut qty = Vec::new();
+        let mut keys = Vec::new();
+        for s in 0..store.shard_count() {
+            for r in store.shard_records(s) {
+                price.push((r.price_cents as f32) / 100.0);
+                qty.push(r.quantity as f32);
+                keys.push(r.isbn13);
+            }
+        }
+        let mut new_price = price.clone();
+        let mut new_qty = qty.clone();
+        let mut mask = vec![0.0f32; price.len()];
+        let index: std::collections::HashMap<u64, usize> =
+            keys.iter().enumerate().map(|(i, &k)| (k, i)).collect();
+        for u in updates {
+            if let Some(&i) = index.get(&u.isbn13) {
+                new_price[i] = (u.new_price_cents as f32) / 100.0;
+                new_qty[i] = u.new_quantity as f32;
+                mask[i] = 1.0;
+            }
+        }
+
+        let chunk = self.max_batch("analytics");
+        if chunk == 0 {
+            return Err(EngineError::Artifact(ArtifactError::NoVariant(
+                "analytics".into(),
+                price.len(),
+                vec![],
+            )));
+        }
+        let mut combined: Option<AnalyticsResult> = None;
+        let mut start = 0usize;
+        while start < price.len() || combined.is_none() {
+            let end = (start + chunk).min(price.len());
+            let part = self.analytics(
+                &price[start..end],
+                &qty[start..end],
+                &new_price[start..end],
+                &new_qty[start..end],
+                &mask[start..end],
+            )?;
+            combined = Some(match combined {
+                None => part,
+                Some(acc) => combine_results(acc, part),
+            });
+            start = end;
+            if price.is_empty() {
+                break;
+            }
+        }
+        Ok(combined.expect("at least one chunk"))
+    }
+}
+
+/// Fold two chunked analytics results (leader-side combine).
+fn combine_results(mut a: AnalyticsResult, b: AnalyticsResult) -> AnalyticsResult {
+    a.upd_price.extend_from_slice(&b.upd_price);
+    a.upd_qty.extend_from_slice(&b.upd_qty);
+    for (ha, hb) in a.histogram.iter_mut().zip(b.histogram.iter()) {
+        *ha += *hb;
+    }
+    let s = &mut a.stats;
+    let t = &b.stats;
+    s.total_value += t.total_value;
+    s.count += t.count;
+    s.price_sum += t.price_sum;
+    s.price_min = s.price_min.min(t.price_min);
+    s.price_max = s.price_max.max(t.price_max);
+    s.qty_sum += t.qty_sum;
+    s.updates_applied += t.updates_applied;
+    s.mean_price = if s.count > 0 { s.price_sum / s.count as f64 } else { 0.0 };
+    a.exec_time += b.exec_time;
+    a
+}

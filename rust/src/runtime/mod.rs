@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT HLO artifacts emitted by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//! Python is never invoked here — the artifacts are plain HLO text compiled
+//! by the in-process XLA CPU client (`xla` crate, PJRT C API).
+
+pub mod artifact;
+pub mod engine;
+pub mod service;
+
+pub use artifact::{ArtifactManifest, ModelEntry};
+pub use engine::{AnalyticsEngine, AnalyticsResult, InventoryStats};
+pub use service::AnalyticsService;

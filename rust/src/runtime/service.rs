@@ -1,0 +1,148 @@
+//! Analytics service: a dedicated executor thread that owns the PJRT
+//! engine.
+//!
+//! The `xla` crate's client/executable types are `!Send` (Rc-backed), so
+//! they cannot be shared across the server's connection threads. The
+//! production pattern is a single executor thread owning the engine, fed
+//! through a channel — which also serializes PJRT executions (they are
+//! coarse-grained batch calls; queueing is the intended behaviour).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use super::engine::{AnalyticsEngine, AnalyticsResult, EngineError};
+use crate::memstore::ShardedStore;
+use crate::workload::record::StockUpdate;
+
+enum Request {
+    ForStore {
+        store: Arc<ShardedStore>,
+        updates: Vec<StockUpdate>,
+        reply: mpsc::Sender<Result<AnalyticsResult, String>>,
+    },
+    ValueSum {
+        price: Vec<f32>,
+        qty: Vec<f32>,
+        reply: mpsc::Sender<Result<f64, String>>,
+    },
+    Analytics {
+        price: Vec<f32>,
+        qty: Vec<f32>,
+        new_price: Vec<f32>,
+        new_qty: Vec<f32>,
+        mask: Vec<f32>,
+        reply: mpsc::Sender<Result<AnalyticsResult, String>>,
+    },
+    Shutdown,
+}
+
+/// Thread-safe handle to the executor thread. Clone-free: wrap in `Arc`.
+pub struct AnalyticsService {
+    tx: Mutex<mpsc::Sender<Request>>,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl AnalyticsService {
+    /// Start the executor thread; fails fast if the artifacts don't load.
+    pub fn start(artifacts_dir: impl Into<std::path::PathBuf>) -> Result<Self, String> {
+        let dir = artifacts_dir.into();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<(), String>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-analytics".into())
+            .spawn(move || {
+                let engine = match AnalyticsEngine::load(&dir) {
+                    Ok(e) => {
+                        let _ = init_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e.to_string()));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Shutdown => break,
+                        Request::ForStore { store, updates, reply } => {
+                            let r = engine
+                                .analytics_for_store(&store, &updates)
+                                .map_err(|e| e.to_string());
+                            let _ = reply.send(r);
+                        }
+                        Request::ValueSum { price, qty, reply } => {
+                            let r = engine.value_sum(&price, &qty).map_err(|e| e.to_string());
+                            let _ = reply.send(r);
+                        }
+                        Request::Analytics { price, qty, new_price, new_qty, mask, reply } => {
+                            let r = engine
+                                .analytics(&price, &qty, &new_price, &new_qty, &mask)
+                                .map_err(|e| e.to_string());
+                            let _ = reply.send(r);
+                        }
+                    }
+                }
+            })
+            .map_err(|e| e.to_string())?;
+        init_rx.recv().map_err(|_| "executor thread died during init".to_string())??;
+        Ok(AnalyticsService { tx: Mutex::new(tx), join: Mutex::new(Some(join)) })
+    }
+
+    fn send(&self, req: Request) -> Result<(), String> {
+        self.tx.lock().unwrap().send(req).map_err(|_| "analytics thread gone".to_string())
+    }
+
+    pub fn analytics_for_store(
+        &self,
+        store: Arc<ShardedStore>,
+        updates: Vec<StockUpdate>,
+    ) -> Result<AnalyticsResult, String> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::ForStore { store, updates, reply })?;
+        rx.recv().map_err(|_| "analytics thread gone".to_string())?
+    }
+
+    pub fn value_sum(&self, price: Vec<f32>, qty: Vec<f32>) -> Result<f64, String> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::ValueSum { price, qty, reply })?;
+        rx.recv().map_err(|_| "analytics thread gone".to_string())?
+    }
+
+    pub fn analytics(
+        &self,
+        price: Vec<f32>,
+        qty: Vec<f32>,
+        new_price: Vec<f32>,
+        new_qty: Vec<f32>,
+        mask: Vec<f32>,
+    ) -> Result<AnalyticsResult, String> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Analytics { price, qty, new_price, new_qty, mask, reply })?;
+        rx.recv().map_err(|_| "analytics thread gone".to_string())?
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.send(Request::Shutdown);
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for AnalyticsService {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Request::Shutdown);
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+// Compile-time guarantee the service is usable from server threads.
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<AnalyticsService>();
+};
+
+/// Error type re-export for callers that match on engine failures.
+pub type ServiceError = EngineError;

@@ -1,0 +1,289 @@
+//! One-server request loop (paper §4.3): a TCP line protocol over the live
+//! memstore, demonstrating that a single machine serves reads, updates and
+//! PJRT-backed analytics with no distributed infrastructure.
+//!
+//! Protocol (one request per line, space-separated, ASCII):
+//! ```text
+//! GET <isbn13>                      → OK <price_cents> <qty> | MISS
+//! UPDATE <isbn13> <cents> <qty>     → OK | MISS
+//! STATS                             → OK count=<n> value_cents=<v>
+//! ANALYTICS                         → OK value=<dollars> mean_price=<p> ... (PJRT path)
+//! PING                              → PONG
+//! QUIT                              → BYE (closes connection)
+//! ```
+//! Unknown/malformed input → `ERR <reason>`. One thread per connection:
+//! the store is shard-locked, so concurrent clients scale like the
+//! pipeline's workers.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::memstore::ShardedStore;
+use crate::runtime::AnalyticsService;
+use crate::workload::record::StockUpdate;
+
+pub struct Server {
+    store: Arc<ShardedStore>,
+    engine: Option<Arc<AnalyticsService>>,
+    stop: Arc<AtomicBool>,
+    pub requests: Arc<AtomicU64>,
+}
+
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+    pub requests: Arc<AtomicU64>,
+}
+
+impl Server {
+    pub fn new(store: Arc<ShardedStore>, engine: Option<Arc<AnalyticsService>>) -> Self {
+        Server {
+            store,
+            engine,
+            stop: Arc::new(AtomicBool::new(false)),
+            requests: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Bind and serve on a background thread; returns a handle for shutdown.
+    pub fn spawn(self, bind: &str) -> std::io::Result<ServerHandle> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        let stop = self.stop.clone();
+        let requests = self.requests.clone();
+        let join = std::thread::spawn(move || self.accept_loop(listener));
+        Ok(ServerHandle { addr, stop, join: Some(join), requests })
+    }
+
+    fn accept_loop(self, listener: TcpListener) {
+        listener.set_nonblocking(false).ok();
+        // Accept with a timeout-ish pattern: check `stop` between clients by
+        // using a short socket timeout on accept via non-blocking + sleep.
+        listener.set_nonblocking(true).ok();
+        let mut workers = Vec::new();
+        while !self.stop.load(Ordering::Acquire) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let store = self.store.clone();
+                    let engine = self.engine.clone();
+                    let stop = self.stop.clone();
+                    let requests = self.requests.clone();
+                    workers.push(std::thread::spawn(move || {
+                        let _ = handle_client(stream, &store, engine.as_ref(), &stop, &requests);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(_) => break,
+            }
+        }
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl ServerHandle {
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn handle_client(
+    stream: TcpStream,
+    store: &Arc<ShardedStore>,
+    engine: Option<&Arc<AnalyticsService>>,
+    stop: &AtomicBool,
+    requests: &AtomicU64,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(e) => return Err(e),
+        }
+        requests.fetch_add(1, Ordering::Relaxed);
+        let response = dispatch(line.trim(), store, engine);
+        out.write_all(response.as_bytes())?;
+        out.write_all(b"\n")?;
+        if line.trim() == "QUIT" {
+            return Ok(());
+        }
+    }
+}
+
+/// Parse + execute one request line (separated out for direct unit tests).
+pub fn dispatch(line: &str, store: &Arc<ShardedStore>, engine: Option<&Arc<AnalyticsService>>) -> String {
+    let mut parts = line.split_ascii_whitespace();
+    match parts.next() {
+        Some("GET") => match parts.next().and_then(|k| k.parse::<u64>().ok()) {
+            Some(key) => match store.get(key) {
+                Some(r) => format!("OK {} {}", r.price_cents, r.quantity),
+                None => "MISS".into(),
+            },
+            None => "ERR GET expects <isbn13>".into(),
+        },
+        Some("UPDATE") => {
+            let key = parts.next().and_then(|k| k.parse::<u64>().ok());
+            let cents = parts.next().and_then(|k| k.parse::<u64>().ok());
+            let qty = parts.next().and_then(|k| k.parse::<u32>().ok());
+            match (key, cents, qty) {
+                (Some(k), Some(c), Some(q)) => {
+                    let u = StockUpdate { isbn13: k, new_price_cents: c, new_quantity: q };
+                    if store.apply(&u) {
+                        "OK".into()
+                    } else {
+                        "MISS".into()
+                    }
+                }
+                _ => "ERR UPDATE expects <isbn13> <cents> <qty>".into(),
+            }
+        }
+        Some("STATS") => {
+            let (n, v) = store.value_sum_cents();
+            format!("OK count={n} value_cents={v}")
+        }
+        Some("ANALYTICS") => match engine {
+            None => "ERR analytics engine not loaded".into(),
+            Some(eng) => match eng.analytics_for_store(Arc::clone(store), Vec::new()) {
+                Ok(r) => format!(
+                    "OK value={:.2} count={} mean_price={:.4} price_min={:.2} price_max={:.2}",
+                    r.stats.total_value,
+                    r.stats.count,
+                    r.stats.mean_price,
+                    r.stats.price_min,
+                    r.stats.price_max
+                ),
+                Err(e) => format!("ERR {e}"),
+            },
+        },
+        Some("PING") => "PONG".into(),
+        Some("QUIT") => "BYE".into(),
+        Some(other) => format!("ERR unknown command '{other}'"),
+        None => "ERR empty request".into(),
+    }
+}
+
+/// Minimal blocking client for tests, examples and the CLI.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    pub fn request(&mut self, line: &str) -> std::io::Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        Ok(resp.trim_end().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gen::DatasetSpec;
+
+    fn store(n: u64) -> (Arc<ShardedStore>, DatasetSpec) {
+        let spec = DatasetSpec { records: n, ..Default::default() };
+        let s = Arc::new(ShardedStore::new(4, 1 << 10));
+        for r in spec.iter() {
+            s.insert(r);
+        }
+        (s, spec)
+    }
+
+    #[test]
+    fn dispatch_get_update_stats() {
+        let (s, spec) = store(100);
+        let key = spec.record_at(5).isbn13;
+        let rec = spec.record_at(5);
+        assert_eq!(
+            dispatch(&format!("GET {key}"), &s, None),
+            format!("OK {} {}", rec.price_cents, rec.quantity)
+        );
+        assert_eq!(dispatch("GET 42", &s, None), "MISS");
+        assert_eq!(dispatch(&format!("UPDATE {key} 999 7"), &s, None), "OK");
+        assert_eq!(dispatch(&format!("GET {key}"), &s, None), "OK 999 7");
+        let (n, v) = s.value_sum_cents();
+        assert_eq!(dispatch("STATS", &s, None), format!("OK count={n} value_cents={v}"));
+    }
+
+    #[test]
+    fn dispatch_error_paths() {
+        let (s, _) = store(10);
+        assert!(dispatch("GET", &s, None).starts_with("ERR"));
+        assert!(dispatch("GET notanumber", &s, None).starts_with("ERR"));
+        assert!(dispatch("UPDATE 1 2", &s, None).starts_with("ERR"));
+        assert!(dispatch("BOGUS", &s, None).starts_with("ERR"));
+        assert!(dispatch("", &s, None).starts_with("ERR"));
+        assert!(dispatch("ANALYTICS", &s, None).starts_with("ERR"));
+        assert_eq!(dispatch("PING", &s, None), "PONG");
+    }
+
+    #[test]
+    fn tcp_roundtrip_with_concurrent_clients() {
+        let (s, spec) = store(1_000);
+        let server = Server::new(s.clone(), None);
+        let handle = server.spawn("127.0.0.1:0").unwrap();
+        let addr = handle.addr;
+
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let spec = &spec;
+                scope.spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    assert_eq!(c.request("PING").unwrap(), "PONG");
+                    for i in (t * 100)..(t * 100 + 100) {
+                        let key = spec.record_at(i as u64).isbn13;
+                        let resp = c.request(&format!("UPDATE {key} 123 {t}")).unwrap();
+                        assert_eq!(resp, "OK");
+                        let got = c.request(&format!("GET {key}")).unwrap();
+                        assert_eq!(got, format!("OK 123 {t}"));
+                    }
+                    assert_eq!(c.request("QUIT").unwrap(), "BYE");
+                });
+            }
+        });
+        assert!(handle.requests.load(Ordering::Relaxed) >= 4 * 202);
+        handle.shutdown();
+    }
+}

@@ -1,0 +1,318 @@
+//! LRU page cache with dirty tracking (write-back) sitting between the
+//! table layer and the [`PageFile`]. Capacity is small by default (the
+//! paper's conventional app enjoys no large buffer pool), making the
+//! conventional baseline's per-record page faults faithful.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::sync::Mutex;
+
+use super::page::{Page, PAGE_SIZE};
+use super::pagefile::{PageFile, PageFileError};
+
+/// Intrusive doubly-linked LRU over a slab of entries.
+struct Entry {
+    page_id: u32,
+    page: Page,
+    dirty: bool,
+    prev: usize,
+    next: usize,
+}
+
+const NIL: usize = usize::MAX;
+
+pub struct PageCache {
+    file: Arc<PageFile>,
+    inner: Mutex<CacheInner>,
+    capacity: usize,
+}
+
+struct CacheInner {
+    map: HashMap<u32, usize>, // page id -> slab index
+    slab: Vec<Entry>,
+    free: Vec<usize>,
+    head: usize, // most recently used
+    tail: usize, // least recently used
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl PageCache {
+    pub fn new(file: Arc<PageFile>, capacity: usize) -> Self {
+        assert!(capacity > 0);
+        PageCache {
+            file,
+            capacity,
+            inner: Mutex::new(CacheInner {
+                map: HashMap::with_capacity(capacity),
+                slab: Vec::with_capacity(capacity),
+                free: Vec::new(),
+                head: NIL,
+                tail: NIL,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    pub fn file(&self) -> &Arc<PageFile> {
+        &self.file
+    }
+
+    /// Read through the cache and apply `f` to the page.
+    pub fn with_page<T>(
+        &self,
+        page_id: u32,
+        f: impl FnOnce(&Page) -> T,
+    ) -> Result<T, PageFileError> {
+        let mut inner = self.inner.lock().unwrap();
+        let idx = self.fault_in(&mut inner, page_id)?;
+        Ok(f(&inner.slab[idx].page))
+    }
+
+    /// Mutate a page through the cache; marks it dirty (write-back).
+    pub fn with_page_mut<T>(
+        &self,
+        page_id: u32,
+        f: impl FnOnce(&mut Page) -> T,
+    ) -> Result<T, PageFileError> {
+        let mut inner = self.inner.lock().unwrap();
+        let idx = self.fault_in(&mut inner, page_id)?;
+        let e = &mut inner.slab[idx];
+        e.dirty = true;
+        Ok(f(&mut e.page))
+    }
+
+    /// Allocate a fresh page via the file and cache it.
+    pub fn alloc_page(&self) -> Result<u32, PageFileError> {
+        let (id, page) = self.file.alloc_page()?;
+        let mut inner = self.inner.lock().unwrap();
+        self.insert_entry(&mut inner, id, page, false)?;
+        Ok(id)
+    }
+
+    /// Write all dirty pages back and sync the file.
+    pub fn flush(&self) -> Result<(), PageFileError> {
+        let mut inner = self.inner.lock().unwrap();
+        let dirty: Vec<usize> = inner
+            .map
+            .values()
+            .copied()
+            .filter(|&i| inner.slab[i].dirty)
+            .collect();
+        for idx in dirty {
+            self.file.write_page(&inner.slab[idx].page)?;
+            inner.slab[idx].dirty = false;
+        }
+        self.file.sync()?;
+        Ok(())
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            resident: inner.map.len(),
+            capacity: self.capacity,
+        }
+    }
+
+    // -- internals ---------------------------------------------------------
+
+    fn fault_in(&self, inner: &mut CacheInner, page_id: u32) -> Result<usize, PageFileError> {
+        if let Some(&idx) = inner.map.get(&page_id) {
+            inner.hits += 1;
+            Self::unlink(inner, idx);
+            Self::push_front(inner, idx);
+            return Ok(idx);
+        }
+        inner.misses += 1;
+        let page = self.file.read_page(page_id)?;
+        self.insert_entry(inner, page_id, page, false)
+    }
+
+    fn insert_entry(
+        &self,
+        inner: &mut CacheInner,
+        page_id: u32,
+        page: Page,
+        dirty: bool,
+    ) -> Result<usize, PageFileError> {
+        if inner.map.len() >= self.capacity {
+            self.evict_lru(inner)?;
+        }
+        let idx = match inner.free.pop() {
+            Some(i) => {
+                inner.slab[i] = Entry { page_id, page, dirty, prev: NIL, next: NIL };
+                i
+            }
+            None => {
+                inner.slab.push(Entry { page_id, page, dirty, prev: NIL, next: NIL });
+                inner.slab.len() - 1
+            }
+        };
+        inner.map.insert(page_id, idx);
+        Self::push_front(inner, idx);
+        Ok(idx)
+    }
+
+    fn evict_lru(&self, inner: &mut CacheInner) -> Result<(), PageFileError> {
+        let victim = inner.tail;
+        debug_assert_ne!(victim, NIL);
+        if inner.slab[victim].dirty {
+            self.file.write_page(&inner.slab[victim].page)?;
+        }
+        let pid = inner.slab[victim].page_id;
+        Self::unlink(inner, victim);
+        inner.map.remove(&pid);
+        inner.free.push(victim);
+        inner.evictions += 1;
+        Ok(())
+    }
+
+    fn unlink(inner: &mut CacheInner, idx: usize) {
+        let (prev, next) = (inner.slab[idx].prev, inner.slab[idx].next);
+        if prev != NIL {
+            inner.slab[prev].next = next;
+        } else if inner.head == idx {
+            inner.head = next;
+        }
+        if next != NIL {
+            inner.slab[next].prev = prev;
+        } else if inner.tail == idx {
+            inner.tail = prev;
+        }
+        inner.slab[idx].prev = NIL;
+        inner.slab[idx].next = NIL;
+    }
+
+    fn push_front(inner: &mut CacheInner, idx: usize) {
+        inner.slab[idx].prev = NIL;
+        inner.slab[idx].next = inner.head;
+        if inner.head != NIL {
+            let h = inner.head;
+            inner.slab[h].prev = idx;
+        }
+        inner.head = idx;
+        if inner.tail == NIL {
+            inner.tail = idx;
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub resident: usize,
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Bytes of memory a cache of `capacity` pages pins (approx).
+pub fn cache_bytes(capacity: usize) -> usize {
+    capacity * (PAGE_SIZE + std::mem::size_of::<Entry>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::latency::{DiskProfile, DiskSim};
+    use crate::workload::record::BookRecord;
+
+    fn setup(name: &str, cap: usize) -> PageCache {
+        let dir = std::env::temp_dir().join(format!("membig_cache_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let sim = Arc::new(DiskSim::new(DiskProfile::none()));
+        let pf = Arc::new(PageFile::create(dir.join(name), sim).unwrap());
+        PageCache::new(pf, cap)
+    }
+
+    #[test]
+    fn read_through_and_hit() {
+        let c = setup("rt.db", 4);
+        let id = c.alloc_page().unwrap();
+        c.with_page_mut(id, |p| p.insert(&BookRecord::new(1, 2, 3)).unwrap()).unwrap();
+        // First read is a hit (page cached from alloc), repeated reads hit.
+        for _ in 0..5 {
+            let rec = c.with_page(id, |p| p.read_slot(0).unwrap()).unwrap();
+            assert_eq!(rec, BookRecord::new(1, 2, 3));
+        }
+        let s = c.stats();
+        assert_eq!(s.misses, 0);
+        assert!(s.hits >= 5);
+    }
+
+    #[test]
+    fn eviction_respects_capacity_and_writes_back() {
+        let c = setup("ev.db", 2);
+        let ids: Vec<u32> = (0..4).map(|_| c.alloc_page().unwrap()).collect();
+        for (i, &id) in ids.iter().enumerate() {
+            c.with_page_mut(id, |p| p.insert(&BookRecord::new(i as u64 + 1, 0, 0)).unwrap())
+                .unwrap();
+        }
+        let s = c.stats();
+        assert!(s.resident <= 2);
+        assert!(s.evictions >= 2);
+        // Dirty evicted pages must have been written back: read them again.
+        for (i, &id) in ids.iter().enumerate() {
+            let rec = c.with_page(id, |p| p.read_slot(0).unwrap()).unwrap();
+            assert_eq!(rec.isbn13, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn lru_order_keeps_hot_page() {
+        let c = setup("lru.db", 2);
+        let a = c.alloc_page().unwrap();
+        let b = c.alloc_page().unwrap();
+        // Touch `a` so `b` is LRU, then fault a third page: `b` must go.
+        c.with_page(a, |_| ()).unwrap();
+        let d = c.alloc_page().unwrap();
+        let before = c.stats().misses;
+        c.with_page(a, |_| ()).unwrap(); // hit
+        c.with_page(d, |_| ()).unwrap(); // hit
+        assert_eq!(c.stats().misses, before);
+        c.with_page(b, |_| ()).unwrap(); // miss: was evicted
+        assert_eq!(c.stats().misses, before + 1);
+    }
+
+    #[test]
+    fn flush_persists_dirty_pages() {
+        let dir = std::env::temp_dir().join(format!("membig_cache_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fl.db");
+        let sim = Arc::new(DiskSim::new(DiskProfile::none()));
+        {
+            let pf = Arc::new(PageFile::create(&path, sim.clone()).unwrap());
+            let c = PageCache::new(pf, 8);
+            let id = c.alloc_page().unwrap();
+            c.with_page_mut(id, |p| p.insert(&BookRecord::new(42, 7, 9)).unwrap()).unwrap();
+            c.flush().unwrap();
+        }
+        let pf = Arc::new(PageFile::open(&path, sim).unwrap());
+        let page = pf.read_page(0).unwrap();
+        assert_eq!(page.read_slot(0).unwrap(), BookRecord::new(42, 7, 9));
+    }
+
+    #[test]
+    fn hit_rate_math() {
+        let s = CacheStats { hits: 75, misses: 25, evictions: 0, resident: 1, capacity: 1 };
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,342 @@
+//! On-disk static hash index: key → (data page, slot).
+//!
+//! Layout: the index file holds `buckets` primary pages (page b = bucket b)
+//! plus overflow pages appended at the end and chained via a `next` pointer
+//! in the page header. Each entry is 16 bytes: key(8) page(4) slot(2)
+//! flags(2). This mirrors how a desktop DB engine (the paper's MS Access)
+//! resolves a keyed lookup with one or more index page touches before the
+//! data page touch — each touch charges the disk latency model.
+//!
+//! Index page layout (little-endian):
+//! ```text
+//! [0..4)  magic 0x4D494458 ("MIDX")
+//! [4..8)  next overflow page id (u32::MAX = none)
+//! [8..12) entry count
+//! [12..16) reserved
+//! [16..)  entries
+//! ```
+
+use std::fs::{File, OpenOptions};
+use std::io;
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::latency::{AccessKind, DiskSim};
+use super::page::PAGE_SIZE;
+
+const IDX_MAGIC: u32 = 0x4D49_4458;
+const HEADER: usize = 16;
+const ENTRY_BYTES: usize = 16;
+pub const ENTRIES_PER_PAGE: usize = (PAGE_SIZE - HEADER) / ENTRY_BYTES; // 255
+const NO_PAGE: u32 = u32::MAX;
+
+#[derive(Debug, thiserror::Error)]
+pub enum IndexError {
+    #[error("io: {0}")]
+    Io(#[from] io::Error),
+    #[error("bad index magic {0:#x} at page {1}")]
+    BadMagic(u32, u32),
+    #[error("index full: bucket chain exhausted")]
+    Full,
+}
+
+/// Location of a record in the data file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Slot {
+    pub page: u32,
+    pub slot: u16,
+}
+
+pub struct HashIndex {
+    file: File,
+    buckets: u32,
+    pages: AtomicU32,
+    sim: Arc<DiskSim>,
+    pub page_reads: AtomicU64,
+    pub page_writes: AtomicU64,
+}
+
+/// 64-bit fibonacci/multiply-xor hash — same family the memstore uses, so
+/// collision behaviour is comparable across the two stores.
+#[inline]
+pub fn hash_key(key: u64) -> u64 {
+    let mut h = key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h ^= h >> 32;
+    h = h.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+    h ^ (h >> 32)
+}
+
+struct IdxPage {
+    buf: Box<[u8; PAGE_SIZE]>,
+}
+
+impl IdxPage {
+    fn new() -> Self {
+        let mut buf = Box::new([0u8; PAGE_SIZE]);
+        buf[0..4].copy_from_slice(&IDX_MAGIC.to_le_bytes());
+        buf[4..8].copy_from_slice(&NO_PAGE.to_le_bytes());
+        IdxPage { buf }
+    }
+
+    fn next(&self) -> u32 {
+        u32::from_le_bytes(self.buf[4..8].try_into().unwrap())
+    }
+
+    fn set_next(&mut self, n: u32) {
+        self.buf[4..8].copy_from_slice(&n.to_le_bytes());
+    }
+
+    fn count(&self) -> u32 {
+        u32::from_le_bytes(self.buf[8..12].try_into().unwrap())
+    }
+
+    fn set_count(&mut self, c: u32) {
+        self.buf[8..12].copy_from_slice(&c.to_le_bytes());
+    }
+
+    fn entry(&self, i: usize) -> (u64, Slot) {
+        let off = HEADER + i * ENTRY_BYTES;
+        let key = u64::from_le_bytes(self.buf[off..off + 8].try_into().unwrap());
+        let page = u32::from_le_bytes(self.buf[off + 8..off + 12].try_into().unwrap());
+        let slot = u16::from_le_bytes(self.buf[off + 12..off + 14].try_into().unwrap());
+        (key, Slot { page, slot })
+    }
+
+    fn set_entry(&mut self, i: usize, key: u64, loc: Slot) {
+        let off = HEADER + i * ENTRY_BYTES;
+        self.buf[off..off + 8].copy_from_slice(&key.to_le_bytes());
+        self.buf[off + 8..off + 12].copy_from_slice(&loc.page.to_le_bytes());
+        self.buf[off + 12..off + 14].copy_from_slice(&loc.slot.to_le_bytes());
+        self.buf[off + 14..off + 16].copy_from_slice(&1u16.to_le_bytes());
+    }
+}
+
+impl HashIndex {
+    /// Create an index sized for `expected` keys at ~70% target load.
+    pub fn create(
+        path: impl AsRef<Path>,
+        expected: u64,
+        sim: Arc<DiskSim>,
+    ) -> Result<Self, IndexError> {
+        let buckets =
+            ((expected as f64 / (ENTRIES_PER_PAGE as f64 * 0.7)).ceil() as u32).max(1);
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        // Pre-extend with empty bucket pages (sequential write).
+        let empty = IdxPage::new();
+        for b in 0..buckets {
+            file.write_all_at(&empty.buf[..], b as u64 * PAGE_SIZE as u64)?;
+        }
+        sim.charge(AccessKind::Sequential, buckets as usize * PAGE_SIZE);
+        Ok(HashIndex {
+            file,
+            buckets,
+            pages: AtomicU32::new(buckets),
+            sim,
+            page_reads: AtomicU64::new(0),
+            page_writes: AtomicU64::new(0),
+        })
+    }
+
+    /// Open an existing index; `buckets` must match creation time (stored by
+    /// the table's meta file).
+    pub fn open(path: impl AsRef<Path>, buckets: u32, sim: Arc<DiskSim>) -> Result<Self, IndexError> {
+        let file = OpenOptions::new().read(true).write(true).open(path)?;
+        let len = file.metadata()?.len();
+        Ok(HashIndex {
+            file,
+            buckets,
+            pages: AtomicU32::new((len / PAGE_SIZE as u64) as u32),
+            sim,
+            page_reads: AtomicU64::new(0),
+            page_writes: AtomicU64::new(0),
+        })
+    }
+
+    pub fn buckets(&self) -> u32 {
+        self.buckets
+    }
+
+    fn read_idx_page(&self, id: u32) -> Result<IdxPage, IndexError> {
+        self.sim.charge(AccessKind::Random, PAGE_SIZE);
+        self.page_reads.fetch_add(1, Ordering::Relaxed);
+        let mut p = IdxPage::new();
+        self.file.read_exact_at(&mut p.buf[..], id as u64 * PAGE_SIZE as u64)?;
+        let magic = u32::from_le_bytes(p.buf[0..4].try_into().unwrap());
+        if magic != IDX_MAGIC {
+            return Err(IndexError::BadMagic(magic, id));
+        }
+        Ok(p)
+    }
+
+    fn write_idx_page(&self, id: u32, p: &IdxPage) -> Result<(), IndexError> {
+        self.sim.charge(AccessKind::Random, PAGE_SIZE);
+        self.page_writes.fetch_add(1, Ordering::Relaxed);
+        self.file.write_all_at(&p.buf[..], id as u64 * PAGE_SIZE as u64)?;
+        Ok(())
+    }
+
+    /// Look up a key; returns its data-file location. Charges one index page
+    /// read per chain hop.
+    pub fn get(&self, key: u64) -> Result<Option<Slot>, IndexError> {
+        let mut page_id = (hash_key(key) % self.buckets as u64) as u32;
+        loop {
+            let p = self.read_idx_page(page_id)?;
+            for i in 0..p.count() as usize {
+                let (k, loc) = p.entry(i);
+                if k == key {
+                    return Ok(Some(loc));
+                }
+            }
+            match p.next() {
+                NO_PAGE => return Ok(None),
+                n => page_id = n,
+            }
+        }
+    }
+
+    /// Insert a (key → slot) mapping; appends overflow pages as needed.
+    pub fn insert(&self, key: u64, loc: Slot) -> Result<(), IndexError> {
+        let mut page_id = (hash_key(key) % self.buckets as u64) as u32;
+        loop {
+            let mut p = self.read_idx_page(page_id)?;
+            let count = p.count() as usize;
+            if count < ENTRIES_PER_PAGE {
+                p.set_entry(count, key, loc);
+                p.set_count(count as u32 + 1);
+                self.write_idx_page(page_id, &p)?;
+                return Ok(());
+            }
+            match p.next() {
+                NO_PAGE => {
+                    // Append an overflow page and link it.
+                    let new_id = self.pages.fetch_add(1, Ordering::AcqRel);
+                    let mut np = IdxPage::new();
+                    np.set_entry(0, key, loc);
+                    np.set_count(1);
+                    self.write_idx_page(new_id, &np)?;
+                    p.set_next(new_id);
+                    self.write_idx_page(page_id, &p)?;
+                    return Ok(());
+                }
+                n => page_id = n,
+            }
+        }
+    }
+
+    /// Mean chain length (diagnostics for benches).
+    pub fn chain_stats(&self) -> Result<(f64, u32), IndexError> {
+        let mut total_pages = 0u64;
+        let mut max_chain = 0u32;
+        for b in 0..self.buckets {
+            let mut len = 1u32;
+            let mut p = self.read_idx_page(b)?;
+            while p.next() != NO_PAGE {
+                len += 1;
+                p = self.read_idx_page(p.next())?;
+            }
+            total_pages += len as u64;
+            max_chain = max_chain.max(len);
+        }
+        Ok((total_pages as f64 / self.buckets as f64, max_chain))
+    }
+
+    pub fn sync(&self) -> Result<(), IndexError> {
+        self.file.sync_data()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::latency::DiskProfile;
+
+    fn setup(name: &str, expected: u64) -> HashIndex {
+        let dir = std::env::temp_dir().join(format!("membig_idx_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let sim = Arc::new(DiskSim::new(DiskProfile::none()));
+        HashIndex::create(dir.join(name), expected, sim).unwrap()
+    }
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let idx = setup("a.idx", 1000);
+        for k in 0..1000u64 {
+            idx.insert(k * 7 + 1, Slot { page: (k / 100) as u32, slot: (k % 100) as u16 })
+                .unwrap();
+        }
+        for k in 0..1000u64 {
+            let loc = idx.get(k * 7 + 1).unwrap().unwrap();
+            assert_eq!(loc, Slot { page: (k / 100) as u32, slot: (k % 100) as u16 });
+        }
+        assert_eq!(idx.get(999_999).unwrap(), None);
+    }
+
+    #[test]
+    fn overflow_chains_work() {
+        // Force overflow: expected=1 → 1 bucket; insert far more than one
+        // page holds.
+        let idx = setup("b.idx", 1);
+        assert_eq!(idx.buckets(), 1);
+        let n = ENTRIES_PER_PAGE as u64 * 3 + 10;
+        for k in 0..n {
+            idx.insert(k, Slot { page: 0, slot: k as u16 }).unwrap();
+        }
+        for k in (0..n).step_by(37) {
+            assert_eq!(idx.get(k).unwrap(), Some(Slot { page: 0, slot: k as u16 }));
+        }
+        let (mean, max) = idx.chain_stats().unwrap();
+        assert!(max >= 4, "expected ≥4-page chain, got {max}");
+        assert!(mean >= 4.0);
+    }
+
+    #[test]
+    fn sizing_keeps_chains_short() {
+        let idx = setup("c.idx", 50_000);
+        for k in 0..50_000u64 {
+            idx.insert(hash_key(k) | 1, Slot { page: 0, slot: 0 }).unwrap();
+        }
+        let (mean, max) = idx.chain_stats().unwrap();
+        assert!(mean < 1.5, "mean chain {mean}");
+        assert!(max <= 3, "max chain {max}");
+    }
+
+    #[test]
+    fn reopen_preserves_entries() {
+        let dir = std::env::temp_dir().join(format!("membig_idx_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("d.idx");
+        let sim = Arc::new(DiskSim::new(DiskProfile::none()));
+        let buckets;
+        {
+            let idx = HashIndex::create(&path, 500, sim.clone()).unwrap();
+            buckets = idx.buckets();
+            for k in 0..500u64 {
+                idx.insert(k, Slot { page: 1, slot: k as u16 }).unwrap();
+            }
+            idx.sync().unwrap();
+        }
+        let idx = HashIndex::open(&path, buckets, sim).unwrap();
+        assert_eq!(idx.get(250).unwrap(), Some(Slot { page: 1, slot: 250 }));
+    }
+
+    #[test]
+    fn lookups_charge_latency() {
+        let dir = std::env::temp_dir().join(format!("membig_idx_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let sim = Arc::new(DiskSim::new(DiskProfile::default()));
+        let idx = HashIndex::create(dir.join("e.idx"), 100, sim.clone()).unwrap();
+        idx.insert(42, Slot { page: 0, slot: 0 }).unwrap();
+        let before = sim.modeled();
+        idx.get(42).unwrap();
+        let delta = sim.modeled() - before;
+        assert!(delta >= std::time::Duration::from_millis(10), "index read must seek: {delta:?}");
+    }
+}

@@ -1,0 +1,251 @@
+//! HDD mechanical-latency model.
+//!
+//! Calibration (DESIGN.md §4): a 7200rpm SATA disk ~ 8.5ms average seek +
+//! 4.17ms average rotational delay (half a revolution) + sequential transfer
+//! at ~150MB/s; plus a per-operation CPU/interpreter overhead term modelling
+//! the paper's MS-Access stack. The paper itself quotes ~10ms disk latency
+//! vs ~10ns RAM (§5 reason 1); at these defaults one record's
+//! read-modify-write lands at ~40–60ms, matching Table 1's conventional
+//! column (~61.7ms/record at 2M records).
+//!
+//! `scale` shrinks *sleeping* so benches finish in minutes; modeled time is
+//! always accumulated at full scale and reported separately.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Parameters of the simulated disk (all tunable via config / CLI).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DiskProfile {
+    /// Average seek time, milliseconds.
+    pub avg_seek_ms: f64,
+    /// Average rotational delay (half revolution), milliseconds.
+    pub rotational_ms: f64,
+    /// Sequential transfer rate, MB/s.
+    pub transfer_mb_s: f64,
+    /// Per-operation CPU/db-engine overhead, milliseconds (MS-Access tax).
+    pub cpu_overhead_ms: f64,
+    /// Fraction of the modeled delay actually slept (0 = don't sleep,
+    /// 1 = real time). Modeled time is unaffected.
+    pub scale: f64,
+}
+
+impl Default for DiskProfile {
+    fn default() -> Self {
+        // 7200rpm SATA (paper's 1TB non-SSD disk) + DB-engine overhead.
+        DiskProfile {
+            avg_seek_ms: 8.5,
+            rotational_ms: 4.17,
+            transfer_mb_s: 150.0,
+            cpu_overhead_ms: 5.0,
+            scale: 0.0,
+        }
+    }
+}
+
+impl DiskProfile {
+    /// An SSD-ish profile for ablations (no mechanical delay, 500MB/s).
+    pub fn ssd() -> Self {
+        DiskProfile {
+            avg_seek_ms: 0.05,
+            rotational_ms: 0.0,
+            transfer_mb_s: 500.0,
+            cpu_overhead_ms: 0.02,
+            scale: 0.0,
+        }
+    }
+
+    /// Zero-latency profile (pure functional testing).
+    pub fn none() -> Self {
+        DiskProfile {
+            avg_seek_ms: 0.0,
+            rotational_ms: 0.0,
+            transfer_mb_s: f64::INFINITY,
+            cpu_overhead_ms: 0.0,
+            scale: 0.0,
+        }
+    }
+
+    pub fn with_scale(mut self, scale: f64) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    /// Modeled cost of one *random* access transferring `bytes`.
+    pub fn random_access_ns(&self, bytes: usize) -> u64 {
+        let transfer_ms = if self.transfer_mb_s.is_finite() && self.transfer_mb_s > 0.0 {
+            bytes as f64 / (self.transfer_mb_s * 1e6) * 1e3
+        } else {
+            0.0
+        };
+        ((self.avg_seek_ms + self.rotational_ms + transfer_ms) * 1e6) as u64
+    }
+
+    /// Modeled cost of a *sequential* access (no seek, no rotation —
+    /// streaming reads after the head is positioned).
+    pub fn sequential_access_ns(&self, bytes: usize) -> u64 {
+        let transfer_ms = if self.transfer_mb_s.is_finite() && self.transfer_mb_s > 0.0 {
+            bytes as f64 / (self.transfer_mb_s * 1e6) * 1e3
+        } else {
+            0.0
+        };
+        (transfer_ms * 1e6) as u64
+    }
+
+    /// Modeled per-op engine overhead.
+    pub fn overhead_ns(&self) -> u64 {
+        (self.cpu_overhead_ms * 1e6) as u64
+    }
+}
+
+/// Accumulating simulator: charges modeled time, optionally sleeps
+/// `scale × delay`. Thread-safe; shared by all accessors of one store.
+#[derive(Debug)]
+pub struct DiskSim {
+    pub profile: DiskProfile,
+    modeled_ns: AtomicU64,
+    ops: AtomicU64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessKind {
+    Random,
+    Sequential,
+    /// Engine/interpreter overhead only (no head movement).
+    Overhead,
+}
+
+impl DiskSim {
+    pub fn new(profile: DiskProfile) -> Self {
+        DiskSim { profile, modeled_ns: AtomicU64::new(0), ops: AtomicU64::new(0) }
+    }
+
+    /// Charge one access of `bytes` and (optionally) sleep the scaled delay.
+    pub fn charge(&self, kind: AccessKind, bytes: usize) {
+        let ns = match kind {
+            AccessKind::Random => self.profile.random_access_ns(bytes),
+            AccessKind::Sequential => self.profile.sequential_access_ns(bytes),
+            AccessKind::Overhead => self.profile.overhead_ns(),
+        };
+        self.modeled_ns.fetch_add(ns, Ordering::Relaxed);
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        let sleep_ns = (ns as f64 * self.profile.scale) as u64;
+        if sleep_ns > 0 {
+            precise_sleep(Duration::from_nanos(sleep_ns));
+        }
+    }
+
+    /// Total modeled (full-scale) time so far.
+    pub fn modeled(&self) -> Duration {
+        Duration::from_nanos(self.modeled_ns.load(Ordering::Relaxed))
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.modeled_ns.store(0, Ordering::Relaxed);
+        self.ops.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Sleep that stays accurate below OS timer granularity: coarse sleep for
+/// the bulk, spin for the last stretch. Benches that scale delays down to
+/// tens of microseconds need this.
+pub fn precise_sleep(d: Duration) {
+    let start = Instant::now();
+    if d > Duration::from_micros(200) {
+        std::thread::sleep(d - Duration::from_micros(100));
+    }
+    while start.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_profile_matches_calibration_band() {
+        let p = DiskProfile::default();
+        // One 4KiB random access ≈ 8.5 + 4.17 + ~0.027 ms.
+        let ns = p.random_access_ns(4096);
+        assert!((12.0e6..13.5e6).contains(&(ns as f64)), "ns={ns}");
+        // A record RMW (index read + data read + data write + overhead)
+        // should land in the paper's ~40-60ms band.
+        let rmw = 3 * ns + p.overhead_ns();
+        assert!((40.0e6..62.0e6).contains(&(rmw as f64)), "rmw={rmw}");
+    }
+
+    #[test]
+    fn sequential_is_cheaper_than_random() {
+        let p = DiskProfile::default();
+        assert!(p.sequential_access_ns(4096) < p.random_access_ns(4096) / 100);
+    }
+
+    #[test]
+    fn none_profile_is_free() {
+        let p = DiskProfile::none();
+        assert_eq!(p.random_access_ns(1 << 20), 0);
+        assert_eq!(p.overhead_ns(), 0);
+    }
+
+    #[test]
+    fn sim_accumulates_without_sleeping_at_scale_zero() {
+        let sim = DiskSim::new(DiskProfile::default()); // scale = 0
+        let t0 = Instant::now();
+        for _ in 0..1000 {
+            sim.charge(AccessKind::Random, 4096);
+        }
+        assert!(t0.elapsed() < Duration::from_millis(200), "must not sleep at scale 0");
+        assert_eq!(sim.ops(), 1000);
+        // 1000 * ~12.7ms ≈ 12.7s modeled.
+        let m = sim.modeled().as_secs_f64();
+        assert!((12.0..14.0).contains(&m), "modeled={m}");
+    }
+
+    #[test]
+    fn sim_sleeps_scaled() {
+        let p = DiskProfile::default().with_scale(0.001); // 12.7µs per access
+        let sim = DiskSim::new(p);
+        let t0 = Instant::now();
+        for _ in 0..100 {
+            sim.charge(AccessKind::Random, 4096);
+        }
+        let el = t0.elapsed();
+        // ≥ 100 × 12.7µs ≈ 1.27ms, and well under full scale.
+        assert!(el >= Duration::from_micros(1200), "slept only {el:?}");
+        assert!(el < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn precise_sleep_accuracy() {
+        for target_us in [50u64, 500, 2000] {
+            let d = Duration::from_micros(target_us);
+            let t0 = Instant::now();
+            precise_sleep(d);
+            let el = t0.elapsed();
+            assert!(el >= d, "undersleep {el:?} < {d:?}");
+            assert!(el < d + Duration::from_millis(2), "oversleep {el:?} vs {d:?}");
+        }
+    }
+
+    #[test]
+    fn concurrent_charges_sum() {
+        let sim = DiskSim::new(DiskProfile::default());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..250 {
+                        sim.charge(AccessKind::Overhead, 0);
+                    }
+                });
+            }
+        });
+        assert_eq!(sim.ops(), 1000);
+        let expect = 1000 * DiskProfile::default().overhead_ns();
+        assert_eq!(sim.modeled(), Duration::from_nanos(expect));
+    }
+}

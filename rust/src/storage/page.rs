@@ -1,0 +1,254 @@
+//! Fixed-slot data pages.
+//!
+//! Records are fixed-width ([`RECORD_BYTES`]), so a page is a small header
+//! plus `SLOTS_PER_PAGE` record slots and an occupancy bitmap — simpler and
+//! denser than a general slotted page, and exactly what a static inventory
+//! table needs.
+//!
+//! Layout (little-endian):
+//! ```text
+//! [0..4)   magic 0x4D504147 ("MPAG")
+//! [4..8)   page id
+//! [8..12)  record count
+//! [12..16) reserved
+//! [16..16+ceil(SLOTS/8))  occupancy bitmap
+//! [DATA_OFF..)            slots
+//! ```
+
+use crate::workload::record::{BookRecord, DecodeError, RECORD_BYTES};
+
+pub const PAGE_SIZE: usize = 4096;
+pub const PAGE_MAGIC: u32 = 0x4D50_4147;
+const HEADER: usize = 16;
+/// Solve slots so header + bitmap + slots*RECORD_BYTES <= PAGE_SIZE.
+pub const SLOTS_PER_PAGE: usize = (PAGE_SIZE - HEADER - 24) / RECORD_BYTES; // 169
+const BITMAP_OFF: usize = HEADER;
+const BITMAP_BYTES: usize = SLOTS_PER_PAGE.div_ceil(8);
+const DATA_OFF: usize = BITMAP_OFF + BITMAP_BYTES;
+
+const _: () = assert!(DATA_OFF + SLOTS_PER_PAGE * RECORD_BYTES <= PAGE_SIZE);
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum PageError {
+    #[error("bad page magic {0:#x}")]
+    BadMagic(u32),
+    #[error("slot {0} out of range (max {SLOTS_PER_PAGE})")]
+    SlotRange(usize),
+    #[error("slot {0} is empty")]
+    Empty(usize),
+    #[error("slot {0} is occupied")]
+    Occupied(usize),
+    #[error("page full")]
+    Full,
+    #[error("record decode: {0}")]
+    Decode(#[from] DecodeError),
+}
+
+/// In-memory view over one page buffer.
+pub struct Page {
+    pub buf: Box<[u8; PAGE_SIZE]>,
+}
+
+impl Page {
+    /// Fresh empty page with the given id.
+    pub fn new(id: u32) -> Self {
+        let mut buf = Box::new([0u8; PAGE_SIZE]);
+        buf[0..4].copy_from_slice(&PAGE_MAGIC.to_le_bytes());
+        buf[4..8].copy_from_slice(&id.to_le_bytes());
+        Page { buf }
+    }
+
+    /// Wrap an existing buffer, validating the magic.
+    pub fn from_bytes(bytes: [u8; PAGE_SIZE]) -> Result<Self, PageError> {
+        let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+        if magic != PAGE_MAGIC {
+            return Err(PageError::BadMagic(magic));
+        }
+        Ok(Page { buf: Box::new(bytes) })
+    }
+
+    pub fn id(&self) -> u32 {
+        u32::from_le_bytes(self.buf[4..8].try_into().unwrap())
+    }
+
+    pub fn count(&self) -> u32 {
+        u32::from_le_bytes(self.buf[8..12].try_into().unwrap())
+    }
+
+    fn set_count(&mut self, c: u32) {
+        self.buf[8..12].copy_from_slice(&c.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn is_occupied(&self, slot: usize) -> bool {
+        debug_assert!(slot < SLOTS_PER_PAGE);
+        self.buf[BITMAP_OFF + slot / 8] & (1 << (slot % 8)) != 0
+    }
+
+    fn set_occupied(&mut self, slot: usize, on: bool) {
+        let byte = &mut self.buf[BITMAP_OFF + slot / 8];
+        if on {
+            *byte |= 1 << (slot % 8);
+        } else {
+            *byte &= !(1 << (slot % 8));
+        }
+    }
+
+    fn slot_range(slot: usize) -> std::ops::Range<usize> {
+        let off = DATA_OFF + slot * RECORD_BYTES;
+        off..off + RECORD_BYTES
+    }
+
+    /// Insert into the first free slot; returns the slot index.
+    pub fn insert(&mut self, rec: &BookRecord) -> Result<usize, PageError> {
+        for slot in 0..SLOTS_PER_PAGE {
+            if !self.is_occupied(slot) {
+                self.write_slot(slot, rec)?;
+                return Ok(slot);
+            }
+        }
+        Err(PageError::Full)
+    }
+
+    /// Write a specific (empty) slot.
+    pub fn write_slot(&mut self, slot: usize, rec: &BookRecord) -> Result<(), PageError> {
+        if slot >= SLOTS_PER_PAGE {
+            return Err(PageError::SlotRange(slot));
+        }
+        if self.is_occupied(slot) {
+            return Err(PageError::Occupied(slot));
+        }
+        self.buf[Self::slot_range(slot)].copy_from_slice(&rec.encode());
+        self.set_occupied(slot, true);
+        self.set_count(self.count() + 1);
+        Ok(())
+    }
+
+    /// Overwrite an occupied slot in place (the update path).
+    pub fn overwrite_slot(&mut self, slot: usize, rec: &BookRecord) -> Result<(), PageError> {
+        if slot >= SLOTS_PER_PAGE {
+            return Err(PageError::SlotRange(slot));
+        }
+        if !self.is_occupied(slot) {
+            return Err(PageError::Empty(slot));
+        }
+        self.buf[Self::slot_range(slot)].copy_from_slice(&rec.encode());
+        Ok(())
+    }
+
+    pub fn read_slot(&self, slot: usize) -> Result<BookRecord, PageError> {
+        if slot >= SLOTS_PER_PAGE {
+            return Err(PageError::SlotRange(slot));
+        }
+        if !self.is_occupied(slot) {
+            return Err(PageError::Empty(slot));
+        }
+        Ok(BookRecord::decode(&self.buf[Self::slot_range(slot)])?)
+    }
+
+    pub fn delete_slot(&mut self, slot: usize) -> Result<(), PageError> {
+        if slot >= SLOTS_PER_PAGE {
+            return Err(PageError::SlotRange(slot));
+        }
+        if !self.is_occupied(slot) {
+            return Err(PageError::Empty(slot));
+        }
+        self.set_occupied(slot, false);
+        self.set_count(self.count() - 1);
+        Ok(())
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.count() as usize >= SLOTS_PER_PAGE
+    }
+
+    /// Iterate occupied slots.
+    pub fn records(&self) -> impl Iterator<Item = (usize, BookRecord)> + '_ {
+        (0..SLOTS_PER_PAGE).filter_map(move |s| self.read_slot(s).ok().map(|r| (s, r)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(i: u64) -> BookRecord {
+        BookRecord::new(9_780_000_000_000 + i, i * 3, i as u32)
+    }
+
+    #[test]
+    fn slots_per_page_sane() {
+        assert!(SLOTS_PER_PAGE >= 150, "density too low: {SLOTS_PER_PAGE}");
+        assert!(DATA_OFF + SLOTS_PER_PAGE * RECORD_BYTES <= PAGE_SIZE);
+    }
+
+    #[test]
+    fn insert_read_roundtrip() {
+        let mut p = Page::new(3);
+        assert_eq!(p.id(), 3);
+        let s0 = p.insert(&rec(1)).unwrap();
+        let s1 = p.insert(&rec(2)).unwrap();
+        assert_ne!(s0, s1);
+        assert_eq!(p.read_slot(s0).unwrap(), rec(1));
+        assert_eq!(p.read_slot(s1).unwrap(), rec(2));
+        assert_eq!(p.count(), 2);
+    }
+
+    #[test]
+    fn fills_to_capacity_then_errors() {
+        let mut p = Page::new(0);
+        for i in 0..SLOTS_PER_PAGE as u64 {
+            p.insert(&rec(i)).unwrap();
+        }
+        assert!(p.is_full());
+        assert_eq!(p.insert(&rec(999)), Err(PageError::Full));
+        assert_eq!(p.count() as usize, SLOTS_PER_PAGE);
+    }
+
+    #[test]
+    fn overwrite_updates_in_place() {
+        let mut p = Page::new(0);
+        let s = p.insert(&rec(5)).unwrap();
+        p.overwrite_slot(s, &rec(6)).unwrap();
+        assert_eq!(p.read_slot(s).unwrap(), rec(6));
+        assert_eq!(p.count(), 1);
+        assert_eq!(p.overwrite_slot(s + 1, &rec(7)), Err(PageError::Empty(s + 1)));
+    }
+
+    #[test]
+    fn delete_frees_slot_for_reuse() {
+        let mut p = Page::new(0);
+        let s = p.insert(&rec(1)).unwrap();
+        p.delete_slot(s).unwrap();
+        assert_eq!(p.count(), 0);
+        assert_eq!(p.read_slot(s), Err(PageError::Empty(s)));
+        let s2 = p.insert(&rec(2)).unwrap();
+        assert_eq!(s2, s, "first-fit reuses the freed slot");
+    }
+
+    #[test]
+    fn serialization_roundtrip_via_bytes() {
+        let mut p = Page::new(9);
+        for i in 0..10 {
+            p.insert(&rec(i)).unwrap();
+        }
+        let bytes = *p.buf;
+        let q = Page::from_bytes(bytes).unwrap();
+        assert_eq!(q.id(), 9);
+        assert_eq!(q.count(), 10);
+        let got: Vec<_> = q.records().map(|(_, r)| r).collect();
+        assert_eq!(got, (0..10).map(rec).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let bytes = [0u8; PAGE_SIZE];
+        assert!(matches!(Page::from_bytes(bytes), Err(PageError::BadMagic(0))));
+    }
+
+    #[test]
+    fn slot_bounds_checked() {
+        let p = Page::new(0);
+        assert_eq!(p.read_slot(SLOTS_PER_PAGE), Err(PageError::SlotRange(SLOTS_PER_PAGE)));
+    }
+}

@@ -1,0 +1,404 @@
+//! `DiskTable` — the complete disk-resident table: data pagefile + hash
+//! index + page cache + meta file. This is the stand-in for the paper's
+//! MS-Access database: the conventional baseline runs its per-record
+//! read-modify-write loop directly against this structure, and the proposed
+//! method bulk-loads from it into the memstore.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use super::cache::{CacheStats, PageCache};
+use super::index::{HashIndex, IndexError, Slot};
+use super::latency::{AccessKind, DiskSim};
+use super::page::SLOTS_PER_PAGE;
+use super::pagefile::{PageFile, PageFileError};
+use crate::workload::record::BookRecord;
+
+#[derive(Debug, thiserror::Error)]
+pub enum TableError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("pagefile: {0}")]
+    PageFile(#[from] PageFileError),
+    #[error("index: {0}")]
+    Index(#[from] IndexError),
+    #[error("page: {0}")]
+    Page(#[from] super::page::PageError),
+    #[error("key {0} not found")]
+    NotFound(u64),
+    #[error("duplicate key {0}")]
+    Duplicate(u64),
+    #[error("meta file corrupt: {0}")]
+    Meta(String),
+}
+
+/// Options controlling a table's physical behaviour.
+#[derive(Debug, Clone)]
+pub struct TableOptions {
+    /// Page-cache capacity in pages.
+    pub cache_pages: usize,
+    /// Charge the per-op engine overhead (MS-Access tax) on keyed ops.
+    pub engine_overhead: bool,
+}
+
+impl Default for TableOptions {
+    fn default() -> Self {
+        TableOptions { cache_pages: 256, engine_overhead: true }
+    }
+}
+
+pub struct DiskTable {
+    dir: PathBuf,
+    cache: PageCache,
+    index: HashIndex,
+    sim: Arc<DiskSim>,
+    opts: TableOptions,
+    records: u64,
+}
+
+impl DiskTable {
+    /// Bulk-create a table from records (sequential load, like building the
+    /// paper's Access database once before the experiments).
+    pub fn create(
+        dir: impl AsRef<Path>,
+        records: impl Iterator<Item = BookRecord>,
+        expected: u64,
+        sim: Arc<DiskSim>,
+        opts: TableOptions,
+    ) -> Result<Self, TableError> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        let data = Arc::new(PageFile::create(dir.join("data.mbt"), sim.clone())?);
+        let index = HashIndex::create(dir.join("index.mbi"), expected, sim.clone())?;
+        let cache = PageCache::new(data, opts.cache_pages);
+
+        let mut count = 0u64;
+        let mut cur_page: Option<u32> = None;
+        for rec in records {
+            let page_id = match cur_page {
+                Some(id) => id,
+                None => {
+                    let id = cache.alloc_page()?;
+                    cur_page = Some(id);
+                    id
+                }
+            };
+            let (slot, full) = cache.with_page_mut(page_id, |p| {
+                let s = p.insert(&rec).expect("fresh page cannot be full");
+                (s, p.is_full())
+            })?;
+            index.insert(rec.isbn13, Slot { page: page_id, slot: slot as u16 })?;
+            if full {
+                cur_page = None;
+            }
+            count += 1;
+        }
+        cache.flush()?;
+        index.sync()?;
+
+        let t = DiskTable { dir, cache, index, sim, opts, records: count };
+        t.write_meta()?;
+        Ok(t)
+    }
+
+    /// Open an existing table directory.
+    pub fn open(
+        dir: impl AsRef<Path>,
+        sim: Arc<DiskSim>,
+        opts: TableOptions,
+    ) -> Result<Self, TableError> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta = std::fs::read_to_string(dir.join("meta.mbm"))?;
+        let mut records = None;
+        let mut buckets = None;
+        for line in meta.lines() {
+            match line.split_once('=') {
+                Some(("records", v)) => records = v.trim().parse().ok(),
+                Some(("buckets", v)) => buckets = v.trim().parse().ok(),
+                _ => {}
+            }
+        }
+        let records = records.ok_or_else(|| TableError::Meta("missing records".into()))?;
+        let buckets = buckets.ok_or_else(|| TableError::Meta("missing buckets".into()))?;
+        let data = Arc::new(PageFile::open(dir.join("data.mbt"), sim.clone())?);
+        let index = HashIndex::open(dir.join("index.mbi"), buckets, sim.clone())?;
+        let cache = PageCache::new(data, opts.cache_pages);
+        Ok(DiskTable { dir, cache, index, sim, opts, records })
+    }
+
+    fn write_meta(&self) -> Result<(), TableError> {
+        std::fs::write(
+            self.dir.join("meta.mbm"),
+            format!("records={}\nbuckets={}\n", self.records, self.index.buckets()),
+        )?;
+        Ok(())
+    }
+
+    pub fn len(&self) -> u64 {
+        self.records
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records == 0
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn sim(&self) -> &Arc<DiskSim> {
+        &self.sim
+    }
+
+    fn engine_tax(&self) {
+        if self.opts.engine_overhead {
+            self.sim.charge(AccessKind::Overhead, 0);
+        }
+    }
+
+    /// Keyed point read: index probe + data page read.
+    pub fn get(&self, key: u64) -> Result<BookRecord, TableError> {
+        self.engine_tax();
+        let loc = self.index.get(key)?.ok_or(TableError::NotFound(key))?;
+        let rec = self.cache.with_page(loc.page, |p| p.read_slot(loc.slot as usize))??;
+        debug_assert_eq!(rec.isbn13, key);
+        Ok(rec)
+    }
+
+    /// Keyed read-modify-write — the conventional app's inner loop.
+    pub fn update(
+        &self,
+        key: u64,
+        f: impl FnOnce(&mut BookRecord),
+    ) -> Result<BookRecord, TableError> {
+        self.engine_tax();
+        let loc = self.index.get(key)?.ok_or(TableError::NotFound(key))?;
+        let rec = self.cache.with_page_mut(loc.page, |p| -> Result<BookRecord, TableError> {
+            let mut rec = p.read_slot(loc.slot as usize)?;
+            f(&mut rec);
+            p.overwrite_slot(loc.slot as usize, &rec)?;
+            Ok(rec)
+        })??;
+        Ok(rec)
+    }
+
+    /// Insert a new record (appends to the last page or allocates).
+    pub fn insert(&mut self, rec: BookRecord) -> Result<(), TableError> {
+        self.engine_tax();
+        if self.index.get(rec.isbn13)?.is_some() {
+            return Err(TableError::Duplicate(rec.isbn13));
+        }
+        // Try the last data page; allocate a new one if absent/full.
+        let n = self.cache.file().page_count();
+        let target = if n > 0 {
+            let last = n - 1;
+            let has_room = self.cache.with_page(last, |p| !p.is_full())?;
+            if has_room {
+                Some(last)
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        let page_id = match target {
+            Some(id) => id,
+            None => self.cache.alloc_page()?,
+        };
+        let slot = self
+            .cache
+            .with_page_mut(page_id, |p| p.insert(&rec))?
+            .map_err(PageFileError::from)?;
+        self.index.insert(rec.isbn13, Slot { page: page_id, slot: slot as u16 })?;
+        self.records += 1;
+        self.write_meta()?;
+        Ok(())
+    }
+
+    /// Full sequential scan (streams pages in order — cheap on the model).
+    pub fn scan(&self, mut f: impl FnMut(&BookRecord)) -> Result<u64, TableError> {
+        let n = self.cache.file().page_count();
+        let mut seen = 0u64;
+        for id in 0..n {
+            self.cache.with_page(id, |p| {
+                for (_, rec) in p.records() {
+                    f(&rec);
+                    seen += 1;
+                }
+            })?;
+        }
+        Ok(seen)
+    }
+
+    /// Rewrite the table in page order: for each live record, `f` returns
+    /// the new value (or `None` to keep it). One sequential pass, no index
+    /// probes — the fast writeback path (EXPERIMENTS.md §Perf P2). Returns
+    /// the number of records rewritten.
+    pub fn rewrite_all(
+        &self,
+        mut f: impl FnMut(&BookRecord) -> Option<BookRecord>,
+    ) -> Result<u64, TableError> {
+        let n = self.cache.file().page_count();
+        let mut written = 0u64;
+        for id in 0..n {
+            self.cache.with_page_mut(id, |p| -> Result<(), TableError> {
+                let slots: Vec<(usize, BookRecord)> = p.records().collect();
+                for (slot, rec) in slots {
+                    if let Some(new) = f(&rec) {
+                        debug_assert_eq!(new.isbn13, rec.isbn13, "rewrite must keep keys");
+                        if new != rec {
+                            p.overwrite_slot(slot, &new)?;
+                        }
+                        written += 1;
+                    }
+                }
+                Ok(())
+            })??;
+        }
+        self.flush()?;
+        Ok(written)
+    }
+
+    /// Flush dirty pages + index.
+    pub fn flush(&self) -> Result<(), TableError> {
+        self.cache.flush()?;
+        self.index.sync()?;
+        Ok(())
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Expected number of data pages for `n` records.
+    pub fn pages_for(n: u64) -> u64 {
+        n.div_ceil(SLOTS_PER_PAGE as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::latency::DiskProfile;
+    use crate::workload::gen::DatasetSpec;
+
+    fn tdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("membig_table_{}", std::process::id()))
+            .join(name);
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn nosim() -> Arc<DiskSim> {
+        Arc::new(DiskSim::new(DiskProfile::none()))
+    }
+
+    #[test]
+    fn create_get_update_scan() {
+        let spec = DatasetSpec { records: 2_000, ..Default::default() };
+        let t = DiskTable::create(tdir("basic"), spec.iter(), 2_000, nosim(), TableOptions::default())
+            .unwrap();
+        assert_eq!(t.len(), 2_000);
+
+        let r100 = spec.record_at(100);
+        assert_eq!(t.get(r100.isbn13).unwrap(), r100);
+
+        let updated = t
+            .update(r100.isbn13, |r| {
+                r.price_cents = 777;
+                r.quantity = 42;
+            })
+            .unwrap();
+        assert_eq!(updated.price_cents, 777);
+        assert_eq!(t.get(r100.isbn13).unwrap().quantity, 42);
+
+        let mut count = 0u64;
+        let mut value: u128 = 0;
+        t.scan(|r| {
+            count += 1;
+            value += r.value_cents();
+        })
+        .unwrap();
+        assert_eq!(count, 2_000);
+        assert!(value > 0);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let spec = DatasetSpec { records: 10, ..Default::default() };
+        let t = DiskTable::create(tdir("missing"), spec.iter(), 10, nosim(), TableOptions::default())
+            .unwrap();
+        assert!(matches!(t.get(1234), Err(TableError::NotFound(1234))));
+        assert!(matches!(t.update(1234, |_| ()), Err(TableError::NotFound(1234))));
+    }
+
+    #[test]
+    fn insert_and_duplicate() {
+        let spec = DatasetSpec { records: 200, ..Default::default() };
+        let mut t =
+            DiskTable::create(tdir("insert"), spec.iter(), 200, nosim(), TableOptions::default())
+                .unwrap();
+        let new = BookRecord::new(9_790_000_000_000, 999, 7);
+        t.insert(new).unwrap();
+        assert_eq!(t.len(), 201);
+        assert_eq!(t.get(new.isbn13).unwrap(), new);
+        assert!(matches!(t.insert(new), Err(TableError::Duplicate(_))));
+    }
+
+    #[test]
+    fn reopen_after_flush() {
+        let dir = tdir("reopen");
+        let spec = DatasetSpec { records: 500, ..Default::default() };
+        {
+            let t = DiskTable::create(&dir, spec.iter(), 500, nosim(), TableOptions::default())
+                .unwrap();
+            t.update(spec.record_at(3).isbn13, |r| r.quantity = 99).unwrap();
+            t.flush().unwrap();
+        }
+        let t = DiskTable::open(&dir, nosim(), TableOptions::default()).unwrap();
+        assert_eq!(t.len(), 500);
+        assert_eq!(t.get(spec.record_at(3).isbn13).unwrap().quantity, 99);
+        assert_eq!(t.get(spec.record_at(499).isbn13).unwrap(), spec.record_at(499));
+    }
+
+    #[test]
+    fn random_update_costs_dominate_scan_costs() {
+        // The microfoundation of Table 1: keyed RMW is mechanically
+        // expensive; sequential scan is cheap per record.
+        let spec = DatasetSpec { records: 5_000, ..Default::default() };
+        let sim = Arc::new(DiskSim::new(DiskProfile::default()));
+        let t = DiskTable::create(
+            tdir("costs"),
+            spec.iter(),
+            5_000,
+            sim.clone(),
+            TableOptions { cache_pages: 4, engine_overhead: true },
+        )
+        .unwrap();
+        sim.reset();
+        for i in (0..5_000).step_by(50) {
+            t.update(spec.record_at(i).isbn13, |r| r.quantity ^= 1).unwrap();
+        }
+        let per_update = sim.modeled().as_secs_f64() / 100.0;
+        sim.reset();
+        t.scan(|_| {}).unwrap();
+        let per_scan_rec = sim.modeled().as_secs_f64() / 5_000.0;
+        assert!(
+            per_update > 0.02,
+            "keyed RMW should cost ≥20ms modeled, got {per_update}s"
+        );
+        assert!(
+            per_update > 100.0 * per_scan_rec,
+            "RMW {per_update}s vs scan/rec {per_scan_rec}s"
+        );
+    }
+
+    #[test]
+    fn pages_for_math() {
+        assert_eq!(DiskTable::pages_for(0), 0);
+        assert_eq!(DiskTable::pages_for(1), 1);
+        assert_eq!(DiskTable::pages_for(SLOTS_PER_PAGE as u64), 1);
+        assert_eq!(DiskTable::pages_for(SLOTS_PER_PAGE as u64 + 1), 2);
+    }
+}

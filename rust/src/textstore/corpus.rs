@@ -1,0 +1,144 @@
+//! Synthetic web-document corpus: zipf-distributed vocabulary (like real
+//! text), deterministic from a spec, with a line-oriented on-disk format
+//! (`id<TAB>text`) for the disk-scan baseline.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use crate::util::rng::{Rng, Zipf};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Document {
+    pub id: u64,
+    pub text: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    pub docs: u64,
+    /// Vocabulary size; term `t<k>` has zipf rank k.
+    pub vocab: u64,
+    /// Words per document (uniform in [min, max)).
+    pub min_words: usize,
+    pub max_words: usize,
+    /// Zipf skew of term frequencies (≈1.0 for natural text).
+    pub theta: f64,
+    pub seed: u64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        CorpusSpec { docs: 10_000, vocab: 20_000, min_words: 30, max_words: 200, theta: 1.07, seed: 7 }
+    }
+}
+
+impl CorpusSpec {
+    /// Deterministic O(1)-seekable document generator.
+    pub fn document_at(&self, i: u64) -> Document {
+        debug_assert!(i < self.docs);
+        let mut rng = Rng::new(self.seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let zipf = Zipf::new(self.vocab, self.theta);
+        let n_words = rng.range_usize(self.min_words, self.max_words);
+        let mut text = String::with_capacity(n_words * 7);
+        for w in 0..n_words {
+            if w > 0 {
+                text.push(' ');
+            }
+            let term = zipf.sample(&mut rng);
+            text.push_str("t");
+            text.push_str(&term.to_string());
+        }
+        Document { id: i, text }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = Document> + '_ {
+        (0..self.docs).map(move |i| self.document_at(i))
+    }
+}
+
+pub fn generate_corpus(spec: &CorpusSpec) -> Vec<Document> {
+    spec.iter().collect()
+}
+
+/// Write corpus to disk (`id<TAB>text\n` per doc). Returns bytes written.
+pub fn write_corpus(path: impl AsRef<Path>, spec: &CorpusSpec) -> std::io::Result<u64> {
+    let mut out = BufWriter::with_capacity(1 << 20, std::fs::File::create(path)?);
+    let mut bytes = 0u64;
+    for doc in spec.iter() {
+        let line = format!("{}\t{}\n", doc.id, doc.text);
+        out.write_all(line.as_bytes())?;
+        bytes += line.len() as u64;
+    }
+    out.flush()?;
+    Ok(bytes)
+}
+
+/// Stream documents back from disk.
+pub fn read_corpus(
+    path: impl AsRef<Path>,
+    mut f: impl FnMut(Document),
+) -> std::io::Result<u64> {
+    let file = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::with_capacity(1 << 20, file);
+    let mut n = 0u64;
+    for line in reader.lines() {
+        let line = line?;
+        if let Some((id, text)) = line.split_once('\t') {
+            if let Ok(id) = id.parse() {
+                f(Document { id, text: text.to_string() });
+                n += 1;
+            }
+        }
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sized() {
+        let spec = CorpusSpec { docs: 100, ..Default::default() };
+        let a = generate_corpus(&spec);
+        let b = generate_corpus(&spec);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 100);
+        for d in &a {
+            let words = d.text.split(' ').count();
+            assert!((spec.min_words..spec.max_words).contains(&words));
+        }
+        assert_eq!(spec.document_at(42), a[42]);
+    }
+
+    #[test]
+    fn zipf_vocabulary_head_heavy() {
+        let spec = CorpusSpec { docs: 500, ..Default::default() };
+        let mut head = 0u64;
+        let mut total = 0u64;
+        for d in spec.iter() {
+            for w in d.text.split(' ') {
+                total += 1;
+                if w == "t0" || w == "t1" || w == "t2" {
+                    head += 1;
+                }
+            }
+        }
+        assert!(
+            head as f64 > total as f64 * 0.05,
+            "top-3 terms should carry a visible share: {head}/{total}"
+        );
+    }
+
+    #[test]
+    fn disk_roundtrip() {
+        let spec = CorpusSpec { docs: 200, ..Default::default() };
+        let path = std::env::temp_dir().join(format!("membig_corpus_{}.tsv", std::process::id()));
+        write_corpus(&path, &spec).unwrap();
+        let mut back = Vec::new();
+        let n = read_corpus(&path, |d| back.push(d)).unwrap();
+        assert_eq!(n, 200);
+        assert_eq!(back, generate_corpus(&spec));
+        std::fs::remove_file(&path).ok();
+    }
+}

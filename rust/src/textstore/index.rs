@@ -1,0 +1,223 @@
+//! In-memory inverted index with parallel construction.
+//!
+//! Build: documents are partitioned across `threads` workers; each worker
+//! builds a *local* index (term → postings), then the leader merges — the
+//! shared-memory analogue of map/reduce, with zero synchronization during
+//! the map phase (paper §4.2 applied to text).
+//!
+//! Query: conjunctive (AND) term queries with tf scoring, top-k by score.
+
+use std::collections::HashMap;
+
+use super::corpus::Document;
+use super::tokenizer::tokenize_into;
+use crate::util::split_ranges;
+
+/// Posting: (doc id, term frequency).
+pub type Posting = (u64, u32);
+
+#[derive(Default)]
+pub struct InvertedIndex {
+    terms: HashMap<String, Vec<Posting>>,
+    pub docs: u64,
+}
+
+impl InvertedIndex {
+    /// Single-threaded build (baseline for the scaling ablation).
+    pub fn build(docs: &[Document]) -> Self {
+        let mut idx = InvertedIndex::default();
+        for d in docs {
+            idx.add_document(d);
+        }
+        idx.finalize();
+        idx
+    }
+
+    /// Parallel build: map (local indexes) + reduce (merge).
+    pub fn build_parallel(docs: &[Document], threads: usize) -> Self {
+        assert!(threads > 0);
+        if threads == 1 || docs.len() < 2 {
+            return Self::build(docs);
+        }
+        let ranges = split_ranges(docs.len(), threads);
+        let locals: Vec<InvertedIndex> = std::thread::scope(|scope| {
+            let handles: Vec<_> = ranges
+                .into_iter()
+                .map(|r| {
+                    let slice = &docs[r];
+                    scope.spawn(move || {
+                        let mut local = InvertedIndex::default();
+                        for d in slice {
+                            local.add_document(d);
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("indexer panicked")).collect()
+        });
+        let mut merged = InvertedIndex::default();
+        for local in locals {
+            merged.docs += local.docs;
+            for (term, mut postings) in local.terms {
+                merged.terms.entry(term).or_default().append(&mut postings);
+            }
+        }
+        merged.finalize();
+        merged
+    }
+
+    fn add_document(&mut self, doc: &Document) {
+        // Aggregate term frequencies within the document first.
+        let mut tf: HashMap<String, u32> = HashMap::new();
+        tokenize_into(&doc.text, |w| {
+            *tf.entry(w.to_string()).or_insert(0) += 1;
+        });
+        for (term, count) in tf {
+            self.terms.entry(term).or_default().push((doc.id, count));
+        }
+        self.docs += 1;
+    }
+
+    /// Sort postings by doc id (required by the intersection) — called once
+    /// after build/merge.
+    fn finalize(&mut self) {
+        for postings in self.terms.values_mut() {
+            postings.sort_unstable_by_key(|&(id, _)| id);
+        }
+    }
+
+    pub fn term_count(&self) -> usize {
+        self.terms.len()
+    }
+
+    pub fn postings(&self, term: &str) -> Option<&[Posting]> {
+        self.terms.get(term).map(|v| v.as_slice())
+    }
+
+    /// Conjunctive query: documents containing *all* terms, scored by
+    /// summed tf, top-k by (score desc, id asc).
+    pub fn search(&self, query: &str, k: usize) -> Vec<(u64, u32)> {
+        let mut terms = Vec::new();
+        tokenize_into(query, |w| terms.push(w.to_string()));
+        if terms.is_empty() {
+            return Vec::new();
+        }
+        terms.sort();
+        terms.dedup();
+        // Gather posting lists; a missing term → empty result.
+        let mut lists: Vec<&[Posting]> = Vec::with_capacity(terms.len());
+        for t in &terms {
+            match self.postings(t) {
+                Some(p) => lists.push(p),
+                None => return Vec::new(),
+            }
+        }
+        // Intersect starting from the rarest list.
+        lists.sort_by_key(|l| l.len());
+        let mut acc: Vec<(u64, u32)> = lists[0].to_vec();
+        for list in &lists[1..] {
+            let mut out = Vec::with_capacity(acc.len().min(list.len()));
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < acc.len() && j < list.len() {
+                match acc[i].0.cmp(&list[j].0) {
+                    std::cmp::Ordering::Less => i += 1,
+                    std::cmp::Ordering::Greater => j += 1,
+                    std::cmp::Ordering::Equal => {
+                        out.push((acc[i].0, acc[i].1 + list[j].1));
+                        i += 1;
+                        j += 1;
+                    }
+                }
+            }
+            acc = out;
+            if acc.is_empty() {
+                return acc;
+            }
+        }
+        acc.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        acc.truncate(k);
+        acc
+    }
+
+    /// Approximate resident bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.terms
+            .iter()
+            .map(|(t, p)| t.len() + 48 + p.len() * std::mem::size_of::<Posting>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::textstore::corpus::CorpusSpec;
+
+    fn doc(id: u64, text: &str) -> Document {
+        Document { id, text: text.to_string() }
+    }
+
+    #[test]
+    fn search_single_term() {
+        let idx = InvertedIndex::build(&[
+            doc(1, "big data computation"),
+            doc(2, "small data"),
+            doc(3, "big big big ideas"),
+        ]);
+        let hits = idx.search("big", 10);
+        assert_eq!(hits, vec![(3, 3), (1, 1)], "tf-ordered");
+    }
+
+    #[test]
+    fn search_conjunction() {
+        let idx = InvertedIndex::build(&[
+            doc(1, "memory based processing"),
+            doc(2, "memory leaks"),
+            doc(3, "stream processing memory pool"),
+        ]);
+        let hits = idx.search("memory processing", 10);
+        assert_eq!(hits.iter().map(|h| h.0).collect::<Vec<_>>(), vec![1, 3]);
+        assert!(idx.search("memory nonexistentterm", 10).is_empty());
+        assert!(idx.search("", 10).is_empty());
+    }
+
+    #[test]
+    fn top_k_truncation() {
+        let docs: Vec<Document> = (0..50).map(|i| doc(i, "common term here")).collect();
+        let idx = InvertedIndex::build(&docs);
+        assert_eq!(idx.search("common", 5).len(), 5);
+    }
+
+    #[test]
+    fn parallel_build_equals_serial() {
+        let spec = CorpusSpec { docs: 2_000, ..Default::default() };
+        let docs = crate::textstore::generate_corpus(&spec);
+        let serial = InvertedIndex::build(&docs);
+        for threads in [2usize, 3, 8] {
+            let par = InvertedIndex::build_parallel(&docs, threads);
+            assert_eq!(par.docs, serial.docs);
+            assert_eq!(par.term_count(), serial.term_count(), "threads={threads}");
+            // Identical results for a few probe queries.
+            for q in ["t0", "t1 t2", "t5 t10 t0", "t999"] {
+                assert_eq!(par.search(q, 20), serial.search(q, 20), "query {q:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn postings_sorted_by_doc_id() {
+        let spec = CorpusSpec { docs: 500, ..Default::default() };
+        let docs = crate::textstore::generate_corpus(&spec);
+        let idx = InvertedIndex::build_parallel(&docs, 4);
+        let p = idx.postings("t0").expect("t0 is the hottest term");
+        assert!(p.windows(2).all(|w| w[0].0 < w[1].0), "postings must be sorted");
+    }
+
+    #[test]
+    fn stopwords_not_indexed() {
+        let idx = InvertedIndex::build(&[doc(1, "the cat and the hat")]);
+        assert!(idx.postings("the").is_none());
+        assert!(idx.postings("cat").is_some());
+    }
+}

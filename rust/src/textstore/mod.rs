@@ -1,0 +1,20 @@
+//! Unstructured-data extension (paper §7: "support not only relational
+//! databases but also unstructured data such as text and web documents").
+//!
+//! The same memory-based multi-processing method applied to text: documents
+//! are tokenized and indexed into an **in-memory inverted index**, built in
+//! parallel with one indexer thread per core (local index per worker →
+//! leader merge, the map/reduce shape the paper positions itself against),
+//! then queried at RAM latency. The disk-based baseline — re-scanning the
+//! corpus per query, as the conventional app re-reads the database per
+//! update — is in [`scan`], and the `textsearch` bench reproduces the
+//! Table-1 *shape* on this workload.
+
+pub mod corpus;
+pub mod index;
+pub mod scan;
+pub mod tokenizer;
+
+pub use corpus::{generate_corpus, CorpusSpec, Document};
+pub use index::InvertedIndex;
+pub use tokenizer::tokenize;

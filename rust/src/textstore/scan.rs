@@ -1,0 +1,88 @@
+//! Disk-scan search baseline: answer each query by re-reading the corpus
+//! file and scanning every document — the conventional (non-memory-based)
+//! way, charged under the same HDD latency model as the record store so
+//! the textsearch bench can reproduce the Table-1 shape on text.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::corpus::read_corpus;
+use super::tokenizer::tokenize_into;
+use crate::storage::latency::{AccessKind, DiskSim};
+
+/// Scan-search the on-disk corpus: documents containing all query terms,
+/// scored by summed tf, top-k. Charges `sim` one sequential access per
+/// 64KiB read (streaming scan) plus one initial seek.
+pub fn scan_search(
+    corpus_path: &Path,
+    query: &str,
+    k: usize,
+    sim: &Arc<DiskSim>,
+) -> std::io::Result<Vec<(u64, u32)>> {
+    let mut qterms: Vec<String> = Vec::new();
+    tokenize_into(query, |w| qterms.push(w.to_string()));
+    qterms.sort();
+    qterms.dedup();
+    if qterms.is_empty() {
+        return Ok(Vec::new());
+    }
+
+    // One seek to position the head, then stream sequentially.
+    sim.charge(AccessKind::Random, 0);
+    let bytes = std::fs::metadata(corpus_path)?.len();
+    sim.charge(AccessKind::Sequential, bytes as usize);
+
+    let mut hits: Vec<(u64, u32)> = Vec::new();
+    read_corpus(corpus_path, |doc| {
+        let mut found = vec![0u32; qterms.len()];
+        tokenize_into(&doc.text, |w| {
+            if let Ok(i) = qterms.binary_search_by(|t| t.as_str().cmp(w)) {
+                found[i] += 1;
+            }
+        });
+        if found.iter().all(|&c| c > 0) {
+            hits.push((doc.id, found.iter().sum()));
+        }
+    })?;
+    hits.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    hits.truncate(k);
+    Ok(hits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::latency::DiskProfile;
+    use crate::textstore::corpus::{write_corpus, CorpusSpec};
+    use crate::textstore::InvertedIndex;
+
+    #[test]
+    fn scan_matches_index_results() {
+        let spec = CorpusSpec { docs: 800, ..Default::default() };
+        let path =
+            std::env::temp_dir().join(format!("membig_scan_{}.tsv", std::process::id()));
+        write_corpus(&path, &spec).unwrap();
+        let docs = crate::textstore::generate_corpus(&spec);
+        let idx = InvertedIndex::build(&docs);
+        let sim = Arc::new(DiskSim::new(DiskProfile::none()));
+        for q in ["t0", "t1 t3", "t2 t5 t9"] {
+            let a = scan_search(&path, q, 25, &sim).unwrap();
+            let b = idx.search(q, 25);
+            assert_eq!(a, b, "query {q:?}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn scan_charges_latency_model() {
+        let spec = CorpusSpec { docs: 300, ..Default::default() };
+        let path =
+            std::env::temp_dir().join(format!("membig_scanlat_{}.tsv", std::process::id()));
+        write_corpus(&path, &spec).unwrap();
+        let sim = Arc::new(DiskSim::new(DiskProfile::default()));
+        scan_search(&path, "t0", 10, &sim).unwrap();
+        // ≥ one seek (≈12.7ms) + transfer time.
+        assert!(sim.modeled().as_millis() >= 12, "modeled {:?}", sim.modeled());
+        std::fs::remove_file(&path).ok();
+    }
+}

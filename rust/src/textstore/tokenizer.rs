@@ -1,0 +1,69 @@
+//! Minimal text tokenizer: ASCII-lowercased alphanumeric runs, short/stop
+//! words dropped. Deliberately simple — the contribution under test is the
+//! memory/parallelism architecture, not linguistics.
+
+/// Words excluded from the index (tiny closed-class set).
+pub const STOPWORDS: &[&str] =
+    &["the", "a", "an", "and", "or", "of", "to", "in", "is", "it", "on", "for", "with", "as"];
+
+fn is_stopword(w: &str) -> bool {
+    STOPWORDS.contains(&w)
+}
+
+/// Tokenize into lowercase terms, skipping stopwords and 1-char tokens.
+/// Allocation-conscious: yields borrowed slices of an internal lowercase
+/// buffer via a callback to keep the indexing hot loop copy-light.
+pub fn tokenize_into(text: &str, mut emit: impl FnMut(&str)) {
+    let mut word = String::with_capacity(16);
+    for c in text.chars() {
+        if c.is_ascii_alphanumeric() {
+            word.push(c.to_ascii_lowercase());
+        } else if !word.is_empty() {
+            if word.len() > 1 && !is_stopword(&word) {
+                emit(&word);
+            }
+            word.clear();
+        }
+    }
+    if word.len() > 1 && !is_stopword(&word) {
+        emit(&word);
+    }
+}
+
+/// Convenience: collect tokens into a Vec (tests / small call sites).
+pub fn tokenize(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    tokenize_into(text, |w| out.push(w.to_string()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_splitting_and_lowering() {
+        assert_eq!(tokenize("Hello, World! HELLO?"), vec!["hello", "world", "hello"]);
+    }
+
+    #[test]
+    fn stopwords_and_singles_dropped() {
+        assert_eq!(tokenize("the cat and a dog in x"), vec!["cat", "dog"]);
+    }
+
+    #[test]
+    fn alphanumerics_kept_together() {
+        assert_eq!(tokenize("isbn13 978-0306406157"), vec!["isbn13", "978", "0306406157"]);
+    }
+
+    #[test]
+    fn empty_and_punctuation_only() {
+        assert!(tokenize("").is_empty());
+        assert!(tokenize("!!! ... ???").is_empty());
+    }
+
+    #[test]
+    fn trailing_word_emitted() {
+        assert_eq!(tokenize("big data"), vec!["big", "data"]);
+    }
+}

@@ -1,0 +1,140 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Method: `warmup` unmeasured runs, then `iters` measured runs; report
+//! min / trimmed mean (drop top+bottom 10%) / p50 / max. Trimmed mean is
+//! the headline number — robust to scheduler noise without hiding tails.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchStat {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub max: Duration,
+}
+
+impl BenchStat {
+    /// Throughput given `ops` per iteration.
+    pub fn ops_per_sec(&self, ops: u64) -> f64 {
+        let s = self.mean.as_secs_f64();
+        if s <= 0.0 {
+            f64::INFINITY
+        } else {
+            ops as f64 / s
+        }
+    }
+
+    pub fn render(&self, ops: Option<u64>) -> String {
+        let tail = match ops {
+            Some(n) => format!(
+                "  {:>12}",
+                crate::util::fmt::rate(n, self.mean)
+            ),
+            None => String::new(),
+        };
+        format!(
+            "{:<38} min {:>10}  mean {:>10}  p50 {:>10}  max {:>10}{}",
+            self.name,
+            crate::util::fmt::human_duration(self.min),
+            crate::util::fmt::human_duration(self.mean),
+            crate::util::fmt::human_duration(self.p50),
+            crate::util::fmt::human_duration(self.max),
+            tail
+        )
+    }
+}
+
+/// Run `f` `iters` times after `warmup` runs; measure each run.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStat {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    stat_from(name, samples)
+}
+
+/// Build a stat from externally collected samples.
+pub fn stat_from(name: &str, mut samples: Vec<Duration>) -> BenchStat {
+    assert!(!samples.is_empty());
+    samples.sort_unstable();
+    let n = samples.len();
+    let trim = n / 10;
+    let kept = &samples[trim..n - trim.min(n - trim - 1)];
+    let mean = kept.iter().sum::<Duration>() / kept.len() as u32;
+    BenchStat {
+        name: name.to_string(),
+        iters: n,
+        min: samples[0],
+        mean,
+        p50: samples[n / 2],
+        max: samples[n - 1],
+    }
+}
+
+/// One timed run (for long end-to-end measurements where iters=1).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Benches honour `MEMBIG_BENCH_SCALE` (divides workload sizes) so CI can
+/// run the full suite quickly; default 1 = paper scale.
+pub fn bench_scale() -> u64 {
+    std::env::var("MEMBIG_BENCH_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(1).max(1)
+}
+
+/// Output directory for bench CSVs.
+pub fn bench_out_dir() -> std::path::PathBuf {
+    let d = std::path::PathBuf::from(
+        std::env::var("MEMBIG_BENCH_OUT").unwrap_or_else(|_| "bench_out".into()),
+    );
+    std::fs::create_dir_all(&d).ok();
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let s = bench("noop-ish", 2, 50, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(s.min <= s.mean);
+        assert!(s.mean <= s.max);
+        assert_eq!(s.iters, 50);
+    }
+
+    #[test]
+    fn trimmed_mean_resists_outliers() {
+        let mut samples = vec![Duration::from_micros(100); 50];
+        samples.push(Duration::from_secs(10)); // scheduler hiccup
+        let s = stat_from("outlier", samples);
+        assert!(s.mean < Duration::from_millis(1), "mean {:?} polluted", s.mean);
+        assert_eq!(s.max, Duration::from_secs(10));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = stat_from("x", vec![Duration::from_secs(1); 10]);
+        assert!((s.ops_per_sec(2_000_000) - 2e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(d < Duration::from_secs(1));
+    }
+}

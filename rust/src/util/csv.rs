@@ -1,0 +1,93 @@
+//! Tiny CSV writer used by benches to emit data series for every paper
+//! table/figure (`bench_out/*.csv`). RFC-4180-style quoting.
+
+use std::io::{self, Write};
+use std::path::Path;
+
+pub struct CsvWriter<W: Write> {
+    out: W,
+    cols: usize,
+}
+
+impl CsvWriter<std::io::BufWriter<std::fs::File>> {
+    /// Create a CSV file (parent dirs created) and write the header row.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> io::Result<Self> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        let mut w = CsvWriter { out: f, cols: header.len() };
+        w.row(header)?;
+        Ok(w)
+    }
+}
+
+impl<W: Write> CsvWriter<W> {
+    pub fn from_writer(out: W, header: &[&str]) -> io::Result<Self> {
+        let mut w = CsvWriter { out, cols: header.len() };
+        w.row(header)?;
+        Ok(w)
+    }
+
+    pub fn row<S: AsRef<str>>(&mut self, fields: &[S]) -> io::Result<()> {
+        assert_eq!(fields.len(), self.cols, "csv row arity mismatch");
+        for (i, f) in fields.iter().enumerate() {
+            if i > 0 {
+                self.out.write_all(b",")?;
+            }
+            write_field(&mut self.out, f.as_ref())?;
+        }
+        self.out.write_all(b"\n")
+    }
+
+    pub fn flush(&mut self) -> io::Result<()> {
+        self.out.flush()
+    }
+}
+
+fn write_field<W: Write>(out: &mut W, f: &str) -> io::Result<()> {
+    if f.contains(',') || f.contains('"') || f.contains('\n') {
+        out.write_all(b"\"")?;
+        out.write_all(f.replace('"', "\"\"").as_bytes())?;
+        out.write_all(b"\"")
+    } else {
+        out.write_all(f.as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_rows() {
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter::from_writer(&mut buf, &["a", "b"]).unwrap();
+            w.row(&["1", "2"]).unwrap();
+            w.flush().unwrap();
+        }
+        assert_eq!(String::from_utf8(buf).unwrap(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn quoting() {
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter::from_writer(&mut buf, &["x"]).unwrap();
+            w.row(&["he,llo"]).unwrap();
+            w.row(&["say \"hi\""]).unwrap();
+            w.flush().unwrap();
+        }
+        assert_eq!(String::from_utf8(buf).unwrap(), "x\n\"he,llo\"\n\"say \"\"hi\"\"\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut buf = Vec::new();
+        let mut w = CsvWriter::from_writer(&mut buf, &["a", "b"]).unwrap();
+        let _ = w.row(&["only-one"]);
+    }
+}

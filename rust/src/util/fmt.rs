@@ -1,0 +1,124 @@
+//! Human-readable formatting for durations, byte sizes and rates —
+//! matching the paper's "34h 17m 51s" style for Table 1 rows.
+
+use std::time::Duration;
+
+/// Format like the paper's Table 1: `0h 1m 03s`, `34h 17m 51s`.
+/// Sub-minute durations keep sub-second precision: `4.21s`, `16ms`.
+pub fn paper_hms(d: Duration) -> String {
+    let total = d.as_secs();
+    let h = total / 3600;
+    let m = (total % 3600) / 60;
+    let s = total % 60;
+    if h == 0 && m == 0 {
+        return human_duration(d);
+    }
+    format!("{h}h {m:02}m {s:02}s")
+}
+
+/// Compact adaptive duration: picks ns/µs/ms/s/min/h.
+pub fn human_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns < 60 * 1_000_000_000u128 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else if ns < 3600 * 1_000_000_000u128 {
+        format!("{:.1}min", ns as f64 / 60e9)
+    } else {
+        format!("{:.2}h", ns as f64 / 3600e9)
+    }
+}
+
+/// `1234567` → `1,234,567`.
+pub fn commas(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Bytes with binary units.
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n}B")
+    } else {
+        format!("{v:.2}{}", UNITS[u])
+    }
+}
+
+/// Rate in ops/s with adaptive k/M suffix.
+pub fn rate(ops: u64, elapsed: Duration) -> String {
+    let secs = elapsed.as_secs_f64();
+    if secs <= 0.0 {
+        return "inf ops/s".into();
+    }
+    let r = ops as f64 / secs;
+    if r >= 1e6 {
+        format!("{:.2}M ops/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2}k ops/s", r / 1e3)
+    } else {
+        format!("{r:.2} ops/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_style() {
+        assert_eq!(paper_hms(Duration::from_secs(34 * 3600 + 17 * 60 + 51)), "34h 17m 51s");
+        assert_eq!(paper_hms(Duration::from_secs(63)), "0h 01m 03s");
+        assert_eq!(paper_hms(Duration::from_secs(4)), "4.00s");
+        assert_eq!(paper_hms(Duration::from_millis(16)), "16.00ms");
+    }
+
+    #[test]
+    fn adaptive() {
+        assert_eq!(human_duration(Duration::from_nanos(500)), "500ns");
+        assert_eq!(human_duration(Duration::from_micros(12)), "12.00µs");
+        assert_eq!(human_duration(Duration::from_millis(250)), "250.00ms");
+        assert_eq!(human_duration(Duration::from_secs(90)), "1.5min");
+        assert_eq!(human_duration(Duration::from_secs(7200)), "2.00h");
+    }
+
+    #[test]
+    fn comma_grouping() {
+        assert_eq!(commas(0), "0");
+        assert_eq!(commas(999), "999");
+        assert_eq!(commas(1000), "1,000");
+        assert_eq!(commas(2_000_000), "2,000,000");
+        assert_eq!(commas(1_234_567_890), "1,234,567,890");
+    }
+
+    #[test]
+    fn byte_units() {
+        assert_eq!(bytes(512), "512B");
+        assert_eq!(bytes(2048), "2.00KiB");
+        assert_eq!(bytes(16 * 1024 * 1024 * 1024), "16.00GiB");
+    }
+
+    #[test]
+    fn rates() {
+        assert_eq!(rate(2_000_000, Duration::from_secs(1)), "2.00M ops/s");
+        assert_eq!(rate(1500, Duration::from_secs(1)), "1.50k ops/s");
+    }
+}

@@ -1,0 +1,78 @@
+//! Small self-contained substrates the rest of the crate builds on.
+//!
+//! This environment has no crate-registry access beyond the vendored set, so
+//! the usual suspects (`rand`, `serde_json`, `proptest`, `humantime`) are
+//! re-implemented here as minimal, well-tested equivalents. Each submodule is
+//! deliberately tiny and dependency-free.
+
+pub mod bench;
+pub mod csv;
+pub mod fmt;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Round `n` up to the next multiple of `m` (m > 0).
+#[inline]
+pub fn round_up(n: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    n.div_ceil(m) * m
+}
+
+/// Split `total` items into `parts` contiguous ranges as evenly as possible.
+/// The first `total % parts` ranges get one extra item. Empty ranges are
+/// produced when `parts > total` so callers can zip ranges with workers.
+pub fn split_ranges(total: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(parts > 0, "parts must be > 0");
+    let base = total / parts;
+    let extra = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, total);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+        assert_eq!(round_up(4095, 4096), 4096);
+    }
+
+    #[test]
+    fn split_ranges_covers_everything_in_order() {
+        for total in [0usize, 1, 7, 12, 100, 101] {
+            for parts in [1usize, 2, 3, 12, 17] {
+                let rs = split_ranges(total, parts);
+                assert_eq!(rs.len(), parts);
+                let mut next = 0;
+                for r in &rs {
+                    assert_eq!(r.start, next);
+                    next = r.end;
+                }
+                assert_eq!(next, total);
+                // Even split: lengths differ by at most 1.
+                let min = rs.iter().map(|r| r.len()).min().unwrap();
+                let max = rs.iter().map(|r| r.len()).max().unwrap();
+                assert!(max - min <= 1, "total={total} parts={parts}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn split_ranges_zero_parts_panics() {
+        let _ = split_ranges(10, 0);
+    }
+}

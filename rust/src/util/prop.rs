@@ -1,0 +1,152 @@
+//! Property-based testing mini-harness (proptest is unavailable offline).
+//!
+//! Usage:
+//! ```no_run
+//! use membig::util::prop::Prop;
+//! Prop::new("reverse twice is identity").cases(200).run(|rng| {
+//!     let n = rng.range_usize(0, 50);
+//!     let xs: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     if ys != xs { return Err("mismatch".into()); }
+//!     Ok(())
+//! });
+//! ```
+//!
+//! On failure the harness panics with the property name, the case index and
+//! the *per-case seed*, so the exact failing input can be replayed with
+//! [`Prop::replay`]. This is a deliberate trade: no shrinking, but exact
+//! deterministic reproduction.
+
+use super::rng::Rng;
+
+pub type PropResult = Result<(), String>;
+
+pub struct Prop {
+    name: &'static str,
+    cases: u64,
+    seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Self {
+        // Env knob lets CI crank case counts without code changes.
+        let cases = std::env::var("MEMBIG_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(100);
+        Prop { name, cases, seed: 0x6d65_6d62_6967_0001 }
+    }
+
+    pub fn cases(mut self, n: u64) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Run the property over `cases` deterministic random cases. Panics on
+    /// the first failure with replay instructions.
+    pub fn run<F: FnMut(&mut Rng) -> PropResult>(self, mut f: F) {
+        for case in 0..self.cases {
+            let case_seed = self.seed ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let mut rng = Rng::new(case_seed);
+            if let Err(msg) = f(&mut rng) {
+                panic!(
+                    "property '{}' failed at case {}/{} (case_seed={:#x}): {}\n\
+                     replay with Prop::new(..).replay({:#x}, f)",
+                    self.name, case, self.cases, case_seed, msg, case_seed
+                );
+            }
+        }
+    }
+
+    /// Re-run a single failing case by seed (copy it from the panic message).
+    pub fn replay<F: FnMut(&mut Rng) -> PropResult>(self, case_seed: u64, mut f: F) {
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{}' replay (case_seed={:#x}) failed: {}", self.name, case_seed, msg);
+        }
+    }
+}
+
+/// Assert helper producing `Err` instead of panicking, for use inside props.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err(format!($($arg)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Equality helper with value dump.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {}\n  left: {:?}\n right: {:?}",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        Prop::new("trivially true").cases(57).run(|_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 57);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_name() {
+        Prop::new("always fails").cases(10).run(|_| Err("nope".into()));
+    }
+
+    #[test]
+    fn cases_are_deterministic_across_runs() {
+        let collect = || {
+            let mut vals = Vec::new();
+            Prop::new("collect").cases(20).run(|rng| {
+                vals.push(rng.next_u64());
+                Ok(())
+            });
+            vals
+        };
+        assert_eq!(collect(), collect());
+    }
+
+    #[test]
+    fn macros_produce_errors_not_panics() {
+        fn inner(rng: &mut Rng) -> PropResult {
+            let v = rng.gen_range(10);
+            prop_assert!(v < 10, "v out of range: {}", v);
+            prop_assert_eq!(v, v);
+            Ok(())
+        }
+        Prop::new("macro check").cases(50).run(inner);
+    }
+}

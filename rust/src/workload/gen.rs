@@ -1,0 +1,199 @@
+//! Dataset + update-feed generators reproducing the paper's experimental
+//! inputs: a 2M-row book inventory (uniform prices $0–10, quantities 0–500,
+//! matching Figures 3–4's value ranges) and a stock file whose keys hit the
+//! database (the paper updates *existing* records).
+
+use super::isbn;
+use super::record::{BookRecord, StockUpdate};
+use crate::util::rng::{Rng, Zipf};
+
+/// Parameters for dataset generation.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    /// Number of inventory rows.
+    pub records: u64,
+    /// RNG seed (dataset is fully determined by spec).
+    pub seed: u64,
+    /// Max price in cents (exclusive). Paper samples show $0.31–$9.69.
+    pub max_price_cents: u64,
+    /// Max quantity (exclusive). Paper samples show 4–499.
+    pub max_quantity: u32,
+}
+
+impl Default for DatasetSpec {
+    fn default() -> Self {
+        DatasetSpec { records: 2_000_000, seed: 0xB00C, max_price_cents: 1000, max_quantity: 500 }
+    }
+}
+
+impl DatasetSpec {
+    pub fn with_records(records: u64) -> Self {
+        DatasetSpec { records, ..Default::default() }
+    }
+
+    /// The i-th record of the dataset (O(1), no state): keys are a
+    /// pseudo-random permutation of ISBN bodies via an affine map over a
+    /// prime modulus, so they are unique, valid, and order-scrambled.
+    pub fn record_at(&self, i: u64) -> BookRecord {
+        debug_assert!(i < self.records);
+        // Affine permutation over Z_p restricted to the first `records`
+        // values; p > 10^9 would overflow the 9-digit body, so map into
+        // [0, 999_999_937) (largest prime < 10^9) and fall back to identity
+        // offsets for the tiny tail that maps >= records... Simpler: use a
+        // SplitMix keyed by (seed, i) and resolve collisions by salting —
+        // but we need determinism AND uniqueness without a global set, so
+        // we use the affine permutation over the prime and accept bodies in
+        // [0, p). Uniqueness: affine maps are bijective on Z_p.
+        const P: u64 = 999_999_937; // prime < 10^9
+        let a = 736_338_717 % P; // fixed multiplier, coprime to P (P prime)
+        let b = self.seed % P;
+        let body = ((i % P).wrapping_mul(a) + b) % P;
+        // For i >= P (never in practice: dataset ≤ ~10^8), offset bodies.
+        let body = if i >= P { (body + i / P) % P } else { body };
+        let key = isbn::from_body(body as u32);
+        let mut rng = Rng::new(self.seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        BookRecord {
+            isbn13: key,
+            price_cents: rng.gen_range(self.max_price_cents),
+            quantity: rng.gen_range(self.max_quantity as u64) as u32,
+        }
+    }
+
+    /// Iterate all records in generation order.
+    pub fn iter(&self) -> impl Iterator<Item = BookRecord> + '_ {
+        (0..self.records).map(move |i| self.record_at(i))
+    }
+}
+
+/// Materialize the whole dataset (used for loads; ~24B/record in memory).
+pub fn generate_dataset(spec: &DatasetSpec) -> Vec<BookRecord> {
+    spec.iter().collect()
+}
+
+/// Key-selection distribution for the update feed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KeyDist {
+    /// Every key updated exactly once, in shuffled order (the paper's
+    /// workload: the stock file carries fresh data for each record).
+    PermuteAll,
+    /// Uniform random with replacement.
+    Uniform,
+    /// Zipf-skewed (hot keys) — ablation beyond the paper.
+    Zipf(f64),
+}
+
+/// Generate `count` stock updates against the dataset keys.
+pub fn generate_stock_updates(
+    spec: &DatasetSpec,
+    count: u64,
+    dist: KeyDist,
+    seed: u64,
+) -> Vec<StockUpdate> {
+    let mut rng = Rng::new(seed ^ 0x57AC_F11E);
+    let pick_body = |i: u64, rng: &mut Rng| -> u64 {
+        match dist {
+            KeyDist::PermuteAll => i % spec.records,
+            KeyDist::Uniform => rng.gen_range(spec.records),
+            KeyDist::Zipf(_) => unreachable!("handled below"),
+        }
+    };
+    let mut out = Vec::with_capacity(count as usize);
+    match dist {
+        KeyDist::Zipf(theta) => {
+            let z = Zipf::new(spec.records, theta);
+            for _ in 0..count {
+                let idx = z.sample(&mut rng);
+                out.push(update_for(spec, idx, &mut rng));
+            }
+        }
+        _ => {
+            for i in 0..count {
+                let idx = pick_body(i, &mut rng);
+                out.push(update_for(spec, idx, &mut rng));
+            }
+        }
+    }
+    if dist == KeyDist::PermuteAll {
+        rng.shuffle(&mut out);
+    }
+    out
+}
+
+fn update_for(spec: &DatasetSpec, index: u64, rng: &mut Rng) -> StockUpdate {
+    let rec = spec.record_at(index);
+    StockUpdate {
+        isbn13: rec.isbn13,
+        new_price_cents: rng.gen_range(spec.max_price_cents),
+        new_quantity: rng.gen_range(spec.max_quantity as u64) as u32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_are_unique_and_valid() {
+        let spec = DatasetSpec { records: 50_000, ..Default::default() };
+        let mut keys = std::collections::HashSet::new();
+        for r in spec.iter() {
+            assert!(isbn::is_valid(r.isbn13), "invalid isbn {}", r.isbn13);
+            assert!(r.price_cents < spec.max_price_cents);
+            assert!(r.quantity < spec.max_quantity);
+            assert!(keys.insert(r.isbn13), "duplicate key {}", r.isbn13);
+        }
+        assert_eq!(keys.len(), 50_000);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = DatasetSpec { records: 1000, ..Default::default() };
+        let a = generate_dataset(&spec);
+        let b = generate_dataset(&spec);
+        assert_eq!(a, b);
+        // O(1) access agrees with iteration.
+        assert_eq!(spec.record_at(577), a[577]);
+    }
+
+    #[test]
+    fn different_seed_different_data() {
+        let a = DatasetSpec { records: 100, seed: 1, ..Default::default() };
+        let b = DatasetSpec { records: 100, seed: 2, ..Default::default() };
+        assert_ne!(generate_dataset(&a), generate_dataset(&b));
+    }
+
+    #[test]
+    fn permute_all_hits_every_key_once() {
+        let spec = DatasetSpec { records: 5_000, ..Default::default() };
+        let ups = generate_stock_updates(&spec, 5_000, KeyDist::PermuteAll, 7);
+        assert_eq!(ups.len(), 5_000);
+        let keys: std::collections::HashSet<u64> = ups.iter().map(|u| u.isbn13).collect();
+        assert_eq!(keys.len(), 5_000, "each key exactly once");
+        let dataset_keys: std::collections::HashSet<u64> =
+            spec.iter().map(|r| r.isbn13).collect();
+        assert_eq!(keys, dataset_keys, "updates target dataset keys");
+    }
+
+    #[test]
+    fn uniform_updates_target_dataset() {
+        let spec = DatasetSpec { records: 1_000, ..Default::default() };
+        let dataset_keys: std::collections::HashSet<u64> =
+            spec.iter().map(|r| r.isbn13).collect();
+        for u in generate_stock_updates(&spec, 3_000, KeyDist::Uniform, 9) {
+            assert!(dataset_keys.contains(&u.isbn13));
+            assert!(u.new_price_cents < spec.max_price_cents);
+        }
+    }
+
+    #[test]
+    fn zipf_updates_skew() {
+        let spec = DatasetSpec { records: 1_000, ..Default::default() };
+        let ups = generate_stock_updates(&spec, 20_000, KeyDist::Zipf(0.99), 11);
+        let mut freq = std::collections::HashMap::new();
+        for u in &ups {
+            *freq.entry(u.isbn13).or_insert(0u64) += 1;
+        }
+        let max = *freq.values().max().unwrap();
+        assert!(max > 200, "hot key should dominate, max={max}");
+    }
+}

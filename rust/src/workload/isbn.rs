@@ -1,0 +1,98 @@
+//! ISBN-13 generation and validation.
+//!
+//! An ISBN-13 is 12 digits plus a check digit: with digits d1..d13,
+//! Σ d_i * w_i ≡ 0 (mod 10) where w alternates 1,3,1,3,... The paper's
+//! dataset uses the 978 bookland prefix (see Figure 3 samples).
+
+use crate::util::rng::Rng;
+
+/// Compute the ISBN-13 check digit for the first 12 digits.
+pub fn check_digit(d12: &[u8; 12]) -> u8 {
+    let mut sum = 0u32;
+    for (i, &d) in d12.iter().enumerate() {
+        debug_assert!(d < 10);
+        let w = if i % 2 == 0 { 1 } else { 3 };
+        sum += d as u32 * w;
+    }
+    ((10 - (sum % 10)) % 10) as u8
+}
+
+/// Validate a 13-digit numeric ISBN (as integer).
+pub fn is_valid(isbn: u64) -> bool {
+    if isbn < 9_780_000_000_000 || isbn > 9_799_999_999_999 {
+        // Bookland prefixes are 978/979; the paper uses 978.
+        return false;
+    }
+    let mut digits = [0u8; 13];
+    let mut v = isbn;
+    for i in (0..13).rev() {
+        digits[i] = (v % 10) as u8;
+        v /= 10;
+    }
+    let d12: [u8; 12] = digits[..12].try_into().unwrap();
+    check_digit(&d12) == digits[12]
+}
+
+/// Construct a valid ISBN-13 from a 9-digit "body" (deterministic mapping
+/// used so dataset keys are unique and reproducible): 978 + body(9) + check.
+pub fn from_body(body: u32) -> u64 {
+    debug_assert!(body < 1_000_000_000);
+    let mut d = [0u8; 12];
+    d[0] = 9;
+    d[1] = 7;
+    d[2] = 8;
+    let mut b = body as u64;
+    for i in (3..12).rev() {
+        d[i] = (b % 10) as u8;
+        b /= 10;
+    }
+    let cd = check_digit(&d);
+    let mut v: u64 = 0;
+    for digit in d {
+        v = v * 10 + digit as u64;
+    }
+    v * 10 + cd as u64
+}
+
+/// Random valid ISBN-13 (uniform over 10^9 bodies).
+pub fn random(rng: &mut Rng) -> u64 {
+    from_body(rng.gen_range(1_000_000_000) as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_check_digits() {
+        // 978-0-306-40615-? => 7 (canonical Wikipedia example)
+        let d: [u8; 12] = [9, 7, 8, 0, 3, 0, 6, 4, 0, 6, 1, 5];
+        assert_eq!(check_digit(&d), 7);
+        assert!(is_valid(9_780_306_406_157));
+        assert!(!is_valid(9_780_306_406_158));
+    }
+
+    #[test]
+    fn from_body_always_valid_and_injective() {
+        let mut seen = std::collections::HashSet::new();
+        for body in (0..1_000_000u32).step_by(997) {
+            let isbn = from_body(body);
+            assert!(is_valid(isbn), "body={body} isbn={isbn}");
+            assert!(seen.insert(isbn), "collision at body={body}");
+        }
+    }
+
+    #[test]
+    fn random_isbns_valid() {
+        let mut rng = Rng::new(42);
+        for _ in 0..1000 {
+            assert!(is_valid(random(&mut rng)));
+        }
+    }
+
+    #[test]
+    fn rejects_non_bookland() {
+        assert!(!is_valid(1_234_567_890_123));
+        assert!(!is_valid(0));
+    }
+}

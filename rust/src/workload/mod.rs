@@ -1,0 +1,16 @@
+//! Workload generation: the paper's book-inventory dataset and `Stock.dat`
+//! update feed, plus key-distribution and trace utilities used by benches.
+//!
+//! The paper's database is a single table `(bo_ISBN13, bo_price, bo_quantity)`
+//! with 2M rows; the stock file holds `ISBN13$price$quantity$` entries
+//! (Figures 3–4). We reproduce both formats exactly, with valid ISBN-13
+//! check digits.
+
+pub mod gen;
+pub mod isbn;
+pub mod record;
+pub mod stockfile;
+pub mod trace;
+
+pub use gen::{DatasetSpec, generate_dataset, generate_stock_updates};
+pub use record::{BookRecord, StockUpdate};

@@ -1,0 +1,147 @@
+//! The record schema from the paper (`bo_ISBN13`, `bo_price`, `bo_quantity`)
+//! with a fixed-width binary encoding used by both the disk store and the
+//! in-memory store.
+//!
+//! Prices are stored as integer cents to keep the stores byte-exact and
+//! comparable across the conventional and proposed paths (float drift would
+//! make verification flaky); the public API exposes `f64` dollars.
+
+/// One inventory row. 24 bytes on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BookRecord {
+    /// 13-digit ISBN as integer key (fits u64).
+    pub isbn13: u64,
+    /// Price in cents.
+    pub price_cents: u64,
+    /// Units in stock.
+    pub quantity: u32,
+}
+
+pub const RECORD_BYTES: usize = 8 + 8 + 4 + 4; // isbn + price + qty + crc
+
+impl BookRecord {
+    pub fn new(isbn13: u64, price_cents: u64, quantity: u32) -> Self {
+        BookRecord { isbn13, price_cents, quantity }
+    }
+
+    pub fn price_dollars(&self) -> f64 {
+        self.price_cents as f64 / 100.0
+    }
+
+    /// Inventory value of this line item, in cents.
+    pub fn value_cents(&self) -> u128 {
+        self.price_cents as u128 * self.quantity as u128
+    }
+
+    /// Serialize to the fixed 24-byte layout (LE) with a checksum word.
+    pub fn encode(&self) -> [u8; RECORD_BYTES] {
+        let mut out = [0u8; RECORD_BYTES];
+        out[0..8].copy_from_slice(&self.isbn13.to_le_bytes());
+        out[8..16].copy_from_slice(&self.price_cents.to_le_bytes());
+        out[16..20].copy_from_slice(&self.quantity.to_le_bytes());
+        out[20..24].copy_from_slice(&self.checksum().to_le_bytes());
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, DecodeError> {
+        if buf.len() < RECORD_BYTES {
+            return Err(DecodeError::Truncated(buf.len()));
+        }
+        let r = BookRecord {
+            isbn13: u64::from_le_bytes(buf[0..8].try_into().unwrap()),
+            price_cents: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
+            quantity: u32::from_le_bytes(buf[16..20].try_into().unwrap()),
+        };
+        let crc = u32::from_le_bytes(buf[20..24].try_into().unwrap());
+        if crc != r.checksum() {
+            return Err(DecodeError::BadChecksum { expected: r.checksum(), found: crc });
+        }
+        Ok(r)
+    }
+
+    /// FNV-1a over the payload — cheap corruption tripwire, not crypto.
+    pub fn checksum(&self) -> u32 {
+        let mut h: u32 = 0x811c9dc5;
+        for b in self
+            .isbn13
+            .to_le_bytes()
+            .iter()
+            .chain(self.price_cents.to_le_bytes().iter())
+            .chain(self.quantity.to_le_bytes().iter())
+        {
+            h ^= *b as u32;
+            h = h.wrapping_mul(0x01000193);
+        }
+        h
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum DecodeError {
+    #[error("record truncated: {0} bytes")]
+    Truncated(usize),
+    #[error("record checksum mismatch (expected {expected:#x}, found {found:#x})")]
+    BadChecksum { expected: u32, found: u32 },
+}
+
+/// One `Stock.dat` entry: the new price/quantity for an ISBN.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StockUpdate {
+    pub isbn13: u64,
+    pub new_price_cents: u64,
+    pub new_quantity: u32,
+}
+
+impl StockUpdate {
+    pub fn apply_to(&self, rec: &mut BookRecord) {
+        rec.price_cents = self.new_price_cents;
+        rec.quantity = self.new_quantity;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let r = BookRecord::new(9_783_652_774_577, 393, 495);
+        let e = r.encode();
+        assert_eq!(e.len(), RECORD_BYTES);
+        assert_eq!(BookRecord::decode(&e).unwrap(), r);
+    }
+
+    #[test]
+    fn decode_detects_corruption() {
+        let r = BookRecord::new(9_780_000_004_381, 116, 91);
+        let mut e = r.encode();
+        e[9] ^= 0xFF;
+        match BookRecord::decode(&e) {
+            Err(DecodeError::BadChecksum { .. }) => {}
+            other => panic!("expected checksum error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_detects_truncation() {
+        let r = BookRecord::new(1, 2, 3);
+        let e = r.encode();
+        assert_eq!(BookRecord::decode(&e[..10]), Err(DecodeError::Truncated(10)));
+    }
+
+    #[test]
+    fn value_math() {
+        let r = BookRecord::new(1, 250, 4); // $2.50 x 4
+        assert_eq!(r.value_cents(), 1000);
+        assert!((r.price_dollars() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn update_applies() {
+        let mut r = BookRecord::new(7, 100, 1);
+        StockUpdate { isbn13: 7, new_price_cents: 785, new_quantity: 267 }.apply_to(&mut r);
+        assert_eq!(r.price_cents, 785);
+        assert_eq!(r.quantity, 267);
+        assert_eq!(r.isbn13, 7);
+    }
+}

@@ -1,0 +1,237 @@
+//! `Stock.dat` reader/writer in the paper's exact framing:
+//! `9783652774577$3.93$495$` — ISBN, price (dollars, ≤2dp), quantity,
+//! each token terminated by `$`, one record per line (Figure 4).
+//!
+//! The reader is incremental and tolerant: malformed entries are counted and
+//! skipped (the pipeline reports `parse_errors`), not fatal.
+
+use std::io::{self, BufRead, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::record::StockUpdate;
+
+/// Write updates in paper framing. Returns bytes written.
+pub fn write_stock_file(path: impl AsRef<Path>, updates: &[StockUpdate]) -> io::Result<u64> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::with_capacity(1 << 20, f);
+    let mut bytes = 0u64;
+    let mut line = String::with_capacity(32);
+    for u in updates {
+        line.clear();
+        format_entry(&mut line, u);
+        w.write_all(line.as_bytes())?;
+        bytes += line.len() as u64;
+    }
+    w.flush()?;
+    Ok(bytes)
+}
+
+/// Render one entry incl. trailing newline, e.g. `9783652774577$3.93$495$\n`.
+pub fn format_entry(out: &mut String, u: &StockUpdate) {
+    use std::fmt::Write as _;
+    let dollars = u.new_price_cents / 100;
+    let cents = u.new_price_cents % 100;
+    if cents == 0 {
+        let _ = write!(out, "{}${}${}$\n", u.isbn13, dollars, u.new_quantity);
+    } else if cents % 10 == 0 {
+        let _ = write!(out, "{}${}.{}${}$\n", u.isbn13, dollars, cents / 10, u.new_quantity);
+    } else {
+        let _ = write!(out, "{}${}.{:02}${}$\n", u.isbn13, dollars, cents, u.new_quantity);
+    }
+}
+
+/// Parse one `$`-framed entry (without or with trailing newline).
+pub fn parse_entry(line: &str) -> Option<StockUpdate> {
+    let line = line.trim_end_matches(['\n', '\r']);
+    let mut parts = line.split('$');
+    let isbn: u64 = parts.next()?.parse().ok()?;
+    let price = parse_price_cents(parts.next()?)?;
+    let qty: u32 = parts.next()?.parse().ok()?;
+    // Framing requires the trailing '$' → an empty final token.
+    if parts.next() != Some("") {
+        return None;
+    }
+    if parts.next().is_some() {
+        return None;
+    }
+    Some(StockUpdate { isbn13: isbn, new_price_cents: price, new_quantity: qty })
+}
+
+/// `"3.93"` → 393; `"8.7"` → 870; `"12"` → 1200. Rejects >2dp and junk.
+pub fn parse_price_cents(s: &str) -> Option<u64> {
+    let (whole, frac) = match s.split_once('.') {
+        None => (s, ""),
+        Some((w, f)) => (w, f),
+    };
+    if whole.is_empty() || whole.bytes().any(|b| !b.is_ascii_digit()) {
+        return None;
+    }
+    let cents_part: u64 = match frac.len() {
+        0 => 0,
+        1 => frac.parse::<u64>().ok()? * 10,
+        2 => frac.parse::<u64>().ok()?,
+        _ => return None,
+    };
+    let dollars: u64 = whole.parse().ok()?;
+    Some(dollars * 100 + cents_part)
+}
+
+/// Streaming reader over a stock file. Yields parsed updates; malformed
+/// lines increment `errors` and are skipped.
+pub struct StockReader<R: Read> {
+    inner: io::BufReader<R>,
+    line: String,
+    pub errors: u64,
+    pub entries: u64,
+}
+
+impl StockReader<std::fs::File> {
+    pub fn open(path: impl AsRef<Path>) -> io::Result<Self> {
+        Ok(Self::new(std::fs::File::open(path)?))
+    }
+}
+
+impl<R: Read> StockReader<R> {
+    pub fn new(r: R) -> Self {
+        StockReader {
+            inner: io::BufReader::with_capacity(1 << 20, r),
+            line: String::with_capacity(64),
+            errors: 0,
+            entries: 0,
+        }
+    }
+
+    /// Read the next well-formed update, skipping malformed lines.
+    pub fn next_update(&mut self) -> io::Result<Option<StockUpdate>> {
+        loop {
+            self.line.clear();
+            let n = self.inner.read_line(&mut self.line)?;
+            if n == 0 {
+                return Ok(None);
+            }
+            if self.line.trim().is_empty() {
+                continue;
+            }
+            match parse_entry(&self.line) {
+                Some(u) => {
+                    self.entries += 1;
+                    return Ok(Some(u));
+                }
+                None => self.errors += 1,
+            }
+        }
+    }
+
+    /// Fill `buf` with up to `buf.capacity()` updates. Returns false at EOF.
+    pub fn next_batch(&mut self, buf: &mut Vec<StockUpdate>, max: usize) -> io::Result<bool> {
+        buf.clear();
+        while buf.len() < max {
+            match self.next_update()? {
+                Some(u) => buf.push(u),
+                None => return Ok(!buf.is_empty()),
+            }
+        }
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn u(isbn: u64, cents: u64, qty: u32) -> StockUpdate {
+        StockUpdate { isbn13: isbn, new_price_cents: cents, new_quantity: qty }
+    }
+
+    #[test]
+    fn paper_sample_formats() {
+        // From Figure 4 of the paper.
+        assert_eq!(
+            parse_entry("9783652774577$3.93$495$"),
+            Some(u(9_783_652_774_577, 393, 495))
+        );
+        assert_eq!(parse_entry("9787021212112$8.7$94$"), Some(u(9_787_021_212_112, 870, 94)));
+        assert_eq!(parse_entry("9782478416305$9.69$4$"), Some(u(9_782_478_416_305, 969, 4)));
+    }
+
+    #[test]
+    fn format_parse_roundtrip() {
+        let cases =
+            [u(9_783_652_774_577, 393, 495), u(1, 0, 0), u(42, 870, 94), u(7, 1200, 500), u(9, 5, 1)];
+        for c in cases {
+            let mut s = String::new();
+            format_entry(&mut s, &c);
+            assert_eq!(parse_entry(&s), Some(c), "entry {s:?}");
+        }
+    }
+
+    #[test]
+    fn price_parsing() {
+        assert_eq!(parse_price_cents("3.93"), Some(393));
+        assert_eq!(parse_price_cents("8.7"), Some(870));
+        assert_eq!(parse_price_cents("12"), Some(1200));
+        assert_eq!(parse_price_cents("0.05"), Some(5));
+        assert_eq!(parse_price_cents("1.234"), None);
+        assert_eq!(parse_price_cents(""), None);
+        assert_eq!(parse_price_cents("x.y"), None);
+        assert_eq!(parse_price_cents("3."), Some(300));
+    }
+
+    #[test]
+    fn malformed_entries_rejected() {
+        assert_eq!(parse_entry("no-dollars-here"), None);
+        assert_eq!(parse_entry("123$4.5"), None); // missing qty + frame
+        assert_eq!(parse_entry("123$4.5$6"), None); // missing trailing $
+        assert_eq!(parse_entry("123$4.5$6$extra$"), None);
+        assert_eq!(parse_entry("$1$2$"), None);
+    }
+
+    #[test]
+    fn reader_skips_bad_lines_and_counts() {
+        let data = "9783652774577$3.93$495$\ngarbage\n9787021212112$8.7$94$\n\n";
+        let mut r = StockReader::new(data.as_bytes());
+        let a = r.next_update().unwrap().unwrap();
+        assert_eq!(a.isbn13, 9_783_652_774_577);
+        let b = r.next_update().unwrap().unwrap();
+        assert_eq!(b.new_price_cents, 870);
+        assert!(r.next_update().unwrap().is_none());
+        assert_eq!(r.errors, 1);
+        assert_eq!(r.entries, 2);
+    }
+
+    #[test]
+    fn batching() {
+        let mut data = String::new();
+        for i in 0..10 {
+            format_entry(&mut data, &u(9_780_000_000_000 + i, 100 + i, i as u32));
+        }
+        let mut r = StockReader::new(data.as_bytes());
+        let mut buf = Vec::new();
+        let mut total = 0;
+        while r.next_batch(&mut buf, 3).unwrap() {
+            assert!(buf.len() <= 3);
+            total += buf.len();
+            if buf.len() < 3 {
+                break;
+            }
+        }
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("membig_stock_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stock.dat");
+        let updates: Vec<StockUpdate> = (0..100).map(|i| u(crate::workload::isbn::from_body(i), (i as u64 * 7) % 1000, i)).collect();
+        write_stock_file(&path, &updates).unwrap();
+        let mut r = StockReader::open(&path).unwrap();
+        let mut back = Vec::new();
+        while let Some(x) = r.next_update().unwrap() {
+            back.push(x);
+        }
+        assert_eq!(back, updates);
+        assert_eq!(r.errors, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,98 @@
+//! Mixed-operation workload traces for the server example and ablation
+//! benches — extends the paper's pure-update workload with reads and scans
+//! so the one-server architecture (§4.3) can be exercised under realistic
+//! request mixes.
+
+use super::gen::DatasetSpec;
+use super::record::StockUpdate;
+use crate::util::rng::{Rng, Zipf};
+
+/// One request in a trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Op {
+    /// Point lookup by key.
+    Get(u64),
+    /// Apply a stock update.
+    Update(StockUpdate),
+    /// Aggregate over the whole store (total inventory value).
+    Stats,
+}
+
+/// Operation mix (fractions sum to 1.0; Stats gets the remainder).
+#[derive(Debug, Clone, Copy)]
+pub struct Mix {
+    pub get: f64,
+    pub update: f64,
+}
+
+impl Mix {
+    pub const READ_HEAVY: Mix = Mix { get: 0.90, update: 0.095 };
+    pub const UPDATE_HEAVY: Mix = Mix { get: 0.05, update: 0.945 };
+    pub const PAPER: Mix = Mix { get: 0.0, update: 1.0 };
+}
+
+/// Generate a trace of `n` ops against `spec`'s key space.
+pub fn generate_trace(spec: &DatasetSpec, n: usize, mix: Mix, theta: f64, seed: u64) -> Vec<Op> {
+    let mut rng = Rng::new(seed ^ 0x72ACE);
+    let zipf = if theta > 0.0 { Some(Zipf::new(spec.records, theta)) } else { None };
+    let pick = |rng: &mut Rng| -> u64 {
+        let idx = match &zipf {
+            Some(z) => z.sample(rng),
+            None => rng.gen_range(spec.records),
+        };
+        spec.record_at(idx).isbn13
+    };
+    (0..n)
+        .map(|_| {
+            let roll = rng.next_f64();
+            if roll < mix.get {
+                Op::Get(pick(&mut rng))
+            } else if roll < mix.get + mix.update {
+                Op::Update(StockUpdate {
+                    isbn13: pick(&mut rng),
+                    new_price_cents: rng.gen_range(1000),
+                    new_quantity: rng.gen_range(500) as u32,
+                })
+            } else {
+                Op::Stats
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_respects_mix() {
+        let spec = DatasetSpec { records: 1000, ..Default::default() };
+        let trace = generate_trace(&spec, 50_000, Mix::READ_HEAVY, 0.0, 3);
+        let gets = trace.iter().filter(|o| matches!(o, Op::Get(_))).count() as f64;
+        let updates = trace.iter().filter(|o| matches!(o, Op::Update(_))).count() as f64;
+        let stats = trace.iter().filter(|o| matches!(o, Op::Stats)).count() as f64;
+        assert!((gets / 50_000.0 - 0.90).abs() < 0.02);
+        assert!((updates / 50_000.0 - 0.095).abs() < 0.02);
+        assert!(stats > 0.0);
+    }
+
+    #[test]
+    fn paper_mix_is_all_updates() {
+        let spec = DatasetSpec { records: 100, ..Default::default() };
+        let trace = generate_trace(&spec, 1000, Mix::PAPER, 0.0, 3);
+        assert!(trace.iter().all(|o| matches!(o, Op::Update(_))));
+    }
+
+    #[test]
+    fn trace_keys_belong_to_dataset() {
+        let spec = DatasetSpec { records: 500, ..Default::default() };
+        let keys: std::collections::HashSet<u64> = spec.iter().map(|r| r.isbn13).collect();
+        for op in generate_trace(&spec, 2000, Mix::READ_HEAVY, 0.99, 5) {
+            match op {
+                Op::Get(k) => assert!(keys.contains(&k)),
+                Op::Update(u) => assert!(keys.contains(&u.isbn13)),
+                Op::Stats => {}
+            }
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Integration: real multi-process message passing (paper §7 future work).
+//! Spawns actual `membig ipc-worker` OS processes over Unix sockets and
+//! runs the full load → update → stats → get → shutdown workflow,
+//! cross-checked against the in-process store.
+
+use std::path::PathBuf;
+
+use membig::ipc::ProcessPool;
+use membig::memstore::ShardedStore;
+use membig::workload::gen::{generate_stock_updates, DatasetSpec, KeyDist};
+use membig::workload::record::BookRecord;
+
+fn membig_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_membig"))
+}
+
+#[test]
+fn multiprocess_equals_inprocess() {
+    let spec = DatasetSpec { records: 20_000, ..Default::default() };
+    let records: Vec<BookRecord> = spec.iter().collect();
+    let ups = generate_stock_updates(&spec, 20_000, KeyDist::PermuteAll, 123);
+
+    // Multi-process pool (4 OS processes).
+    let mut pool = ProcessPool::spawn_with_exe(4, membig_exe()).expect("spawn workers");
+    assert_eq!(pool.len(), 4);
+    assert_eq!(pool.load(&records).unwrap(), 20_000);
+    let (applied, missing) = pool.update(&ups).unwrap();
+    assert_eq!((applied, missing), (20_000, 0));
+    let (count, value) = pool.stats().unwrap();
+
+    // In-process reference.
+    let store = ShardedStore::new(4, 1 << 13);
+    for r in &records {
+        store.insert(*r);
+    }
+    for u in &ups {
+        store.apply(u);
+    }
+    assert_eq!((count, value), store.value_sum_cents());
+
+    // Point reads through the RPC path.
+    for i in (0..20_000).step_by(2_111) {
+        let key = spec.record_at(i).isbn13;
+        assert_eq!(pool.get(key).unwrap(), store.get(key));
+    }
+    assert_eq!(pool.get(42).unwrap(), None);
+
+    pool.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn single_worker_process_roundtrip() {
+    let mut pool = ProcessPool::spawn_with_exe(1, membig_exe()).expect("spawn worker");
+    pool.load(&[BookRecord::new(9_780_000_000_017, 500, 3)]).unwrap();
+    let rec = pool.get(9_780_000_000_017).unwrap().unwrap();
+    assert_eq!(rec.price_cents, 500);
+    let (count, value) = pool.stats().unwrap();
+    assert_eq!(count, 1);
+    assert_eq!(value, 1500);
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn pool_drop_kills_workers() {
+    // Dropping without shutdown must not leave zombie processes hanging
+    // the test (kill + wait happens in Drop).
+    let pool = ProcessPool::spawn_with_exe(2, membig_exe()).expect("spawn");
+    drop(pool);
+}
+
+// ---------------------------------------------------------------------------
+// CLI smoke tests (the launcher itself, end to end through a shell user's
+// path: gen → compare → info).
+// ---------------------------------------------------------------------------
+
+fn run_cli(args: &[&str]) -> (String, bool) {
+    let out = std::process::Command::new(membig_exe())
+        .args(args)
+        .output()
+        .expect("spawn membig");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (text, out.status.success())
+}
+
+#[test]
+fn cli_compare_small_run() {
+    let dir = std::env::temp_dir().join(format!("membig_cli_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let (text, ok) = run_cli(&[
+        "compare",
+        "--records",
+        "3k",
+        "--data-dir",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(ok, "CLI failed:\n{text}");
+    assert!(text.contains("speedup"), "{text}");
+    assert!(text.contains("3,000"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_help_and_unknown_command() {
+    let (text, ok) = run_cli(&["--help"]);
+    assert!(ok);
+    assert!(text.contains("USAGE"), "{text}");
+    let (text, ok) = run_cli(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"), "{text}");
+    let (_, ok) = run_cli(&["run", "--records", "not-a-number"]);
+    assert!(!ok, "bad count must fail");
+}
+
+#[test]
+fn cli_gen_is_idempotent() {
+    let dir = std::env::temp_dir().join(format!("membig_cli_gen_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let args = ["gen", "--records", "2k", "--data-dir", dir.to_str().unwrap()];
+    let (t1, ok1) = run_cli(&args);
+    let (t2, ok2) = run_cli(&args);
+    assert!(ok1 && ok2, "{t1}\n{t2}");
+    assert!(t2.contains("2,000"));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,188 @@
+//! Integration: the full proposed-method pipeline over real files —
+//! table build → load → streaming update through bounded queues →
+//! writeback → verify — plus failure injection (corrupt feed, tiny queues,
+//! worker starvation) and restart durability.
+
+use std::sync::Arc;
+
+use membig::config::EngineConfig;
+use membig::coordinator::{Coordinator, Workbench};
+use membig::memstore::snapshot::{load_store, verify_against_table, writeback};
+use membig::metrics::EngineMetrics;
+use membig::pipeline::executor::run_streaming_update;
+use membig::storage::latency::{DiskProfile, DiskSim};
+use membig::storage::table::{DiskTable, TableOptions};
+use membig::workload::gen::{generate_stock_updates, DatasetSpec, KeyDist};
+use membig::workload::stockfile::write_stock_file;
+
+fn tdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("membig_ip_{}", std::process::id()))
+        .join(name);
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn cfg_for(dir: &std::path::Path, threads: usize) -> EngineConfig {
+    let mut c = EngineConfig::default();
+    c.data_dir = dir.to_path_buf();
+    c.threads = threads;
+    c.shards = threads;
+    c.validated().unwrap()
+}
+
+#[test]
+fn full_run_with_writeback_and_restart() {
+    let dir = tdir("full");
+    let mut cfg = cfg_for(&dir, 4);
+    cfg.writeback = true;
+    let spec = DatasetSpec { records: 30_000, ..Default::default() };
+    let wb = Workbench::new(&dir, spec.clone());
+    let stock = wb.ensure_stock(30_000).unwrap();
+
+    let coord = Coordinator::new(cfg.clone());
+    let table = wb.ensure_table(&cfg).unwrap();
+    let out = coord.run_proposed(&table, &stock).unwrap();
+    assert_eq!(out.stream.updates_applied, 30_000);
+    assert_eq!(out.written_back, 30_000);
+    let value_after_run = out.inventory_value_cents;
+    drop(out);
+    drop(table);
+
+    // Restart: reopen the table from disk; the written-back state must
+    // reload to an identical store (durability across process lifetime).
+    let coord2 = Coordinator::new(cfg.clone());
+    let table = wb.ensure_table(&cfg).unwrap();
+    let store = coord2.load_only(&table).unwrap();
+    let (n, value) = store.value_sum_cents();
+    assert_eq!(n, 30_000);
+    assert_eq!(value, value_after_run);
+    assert_eq!(verify_against_table(&store, &table).unwrap(), 0);
+}
+
+#[test]
+fn tiny_queues_exert_backpressure_but_lose_nothing() {
+    let dir = tdir("backpressure");
+    let spec = DatasetSpec { records: 20_000, ..Default::default() };
+    let sim = Arc::new(DiskSim::new(DiskProfile::none()));
+    let table = DiskTable::create(
+        dir.join("t"),
+        spec.iter(),
+        20_000,
+        sim,
+        TableOptions::default(),
+    )
+    .unwrap();
+    let m = EngineMetrics::new();
+    let store = load_store(&table, 2, &m).unwrap();
+
+    let ups = generate_stock_updates(&spec, 20_000, KeyDist::PermuteAll, 5);
+    let stock = dir.join("stock.dat");
+    write_stock_file(&stock, &ups).unwrap();
+
+    // channel_depth=1, batch=64: the reader must block constantly.
+    let rep = run_streaming_update(&store, &stock, 64, 1, &m).unwrap();
+    assert_eq!(rep.updates_applied, 20_000);
+    assert_eq!(rep.updates_missing, 0);
+    // All updates landed despite severe backpressure.
+    let mut expect: std::collections::HashMap<u64, (u64, u32)> = Default::default();
+    for u in &ups {
+        expect.insert(u.isbn13, (u.new_price_cents, u.new_quantity));
+    }
+    for r in spec.iter() {
+        let got = store.get(r.isbn13).unwrap();
+        assert_eq!((got.price_cents, got.quantity), expect[&r.isbn13]);
+    }
+}
+
+#[test]
+fn corrupt_feed_is_survived_and_counted() {
+    let dir = tdir("corrupt");
+    let spec = DatasetSpec { records: 5_000, ..Default::default() };
+    let sim = Arc::new(DiskSim::new(DiskProfile::none()));
+    let table =
+        DiskTable::create(dir.join("t"), spec.iter(), 5_000, sim, TableOptions::default())
+            .unwrap();
+    let m = EngineMetrics::new();
+    let store = load_store(&table, 4, &m).unwrap();
+
+    // Interleave garbage between valid entries.
+    let ups = generate_stock_updates(&spec, 1_000, KeyDist::Uniform, 7);
+    let stock = dir.join("stock.dat");
+    let mut text = String::new();
+    for (i, u) in ups.iter().enumerate() {
+        membig::workload::stockfile::format_entry(&mut text, u);
+        if i % 10 == 0 {
+            text.push_str("###corrupted-line###\n");
+            text.push_str("9999$$$\n");
+        }
+    }
+    std::fs::write(&stock, text).unwrap();
+
+    let rep = run_streaming_update(&store, &stock, 128, 4, &m).unwrap();
+    assert_eq!(rep.updates_applied, 1_000);
+    assert_eq!(rep.parse_errors, 200, "2 garbage lines per 10 entries");
+}
+
+#[test]
+fn shard_thread_matrix_produces_identical_state() {
+    // The result must be invariant to shard count, batch size and queue
+    // depth — same final store whatever the parallel topology.
+    let dir = tdir("matrix");
+    let spec = DatasetSpec { records: 8_000, ..Default::default() };
+    let ups = generate_stock_updates(&spec, 8_000, KeyDist::PermuteAll, 11);
+    let stock = dir.join("stock.dat");
+    write_stock_file(&stock, &ups).unwrap();
+
+    let mut reference: Option<(u64, u128)> = None;
+    for (shards, batch, depth) in
+        [(1usize, 512usize, 4usize), (2, 64, 1), (4, 8192, 64), (8, 100, 2), (3, 333, 3)]
+    {
+        let sim = Arc::new(DiskSim::new(DiskProfile::none()));
+        let table = DiskTable::create(
+            dir.join(format!("t{shards}_{batch}_{depth}")),
+            spec.iter(),
+            8_000,
+            sim,
+            TableOptions::default(),
+        )
+        .unwrap();
+        let m = EngineMetrics::new();
+        let store = load_store(&table, shards, &m).unwrap();
+        let rep = run_streaming_update(&store, &stock, batch, depth, &m).unwrap();
+        assert_eq!(rep.updates_applied, 8_000, "topology {shards}/{batch}/{depth}");
+        let state = store.value_sum_cents();
+        match &reference {
+            None => reference = Some(state),
+            Some(r) => assert_eq!(
+                state, *r,
+                "final state differs for topology {shards}/{batch}/{depth}"
+            ),
+        }
+    }
+}
+
+#[test]
+fn writeback_then_conventional_read_agrees() {
+    // Cross-system check: memstore writeback must be readable through the
+    // conventional (disk) access path with identical values.
+    let dir = tdir("crosscheck");
+    let spec = DatasetSpec { records: 3_000, ..Default::default() };
+    let sim = Arc::new(DiskSim::new(DiskProfile::none()));
+    let table =
+        DiskTable::create(dir.join("t"), spec.iter(), 3_000, sim, TableOptions::default())
+            .unwrap();
+    let m = EngineMetrics::new();
+    let store = load_store(&table, 4, &m).unwrap();
+    let ups = generate_stock_updates(&spec, 3_000, KeyDist::PermuteAll, 13);
+    let stock = dir.join("stock.dat");
+    write_stock_file(&stock, &ups).unwrap();
+    run_streaming_update(&store, &stock, 256, 8, &m).unwrap();
+    writeback(&store, &table, &m).unwrap();
+
+    for u in ups.iter().step_by(97) {
+        let rec = table.get(u.isbn13).unwrap();
+        assert_eq!((rec.price_cents, rec.quantity), (u.new_price_cents, u.new_quantity));
+    }
+}

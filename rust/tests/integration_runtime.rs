@@ -1,0 +1,225 @@
+//! Integration: AOT artifacts → PJRT CPU client → execute → numerics match
+//! a pure-Rust reference. This is the cross-language correctness seal: the
+//! same HLO the production coordinator loads is checked against Rust math.
+//!
+//! Requires `make artifacts` (skips gracefully when artifacts are absent so
+//! `cargo test` works on a fresh checkout).
+
+use std::path::PathBuf;
+
+use membig::memstore::ShardedStore;
+use membig::runtime::engine::{HIST_BINS, N_STATS};
+use membig::runtime::AnalyticsEngine;
+use membig::util::rng::Rng;
+use membig::workload::gen::{generate_stock_updates, DatasetSpec, KeyDist};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn engine() -> Option<AnalyticsEngine> {
+    artifacts_dir().map(|d| AnalyticsEngine::load_lazy(d).expect("engine must load"))
+}
+
+/// Pure-Rust reference for the analytics model.
+#[allow(clippy::type_complexity)]
+fn reference(
+    price: &[f32],
+    qty: &[f32],
+    new_price: &[f32],
+    new_qty: &[f32],
+    mask: &[f32],
+) -> (Vec<f32>, Vec<f32>, f64, u64, f64, f64, u64) {
+    let mut up = Vec::new();
+    let mut uq = Vec::new();
+    let (mut value, mut count, mut pmin, mut pmax, mut applied) =
+        (0f64, 0u64, f64::INFINITY, f64::NEG_INFINITY, 0u64);
+    for i in 0..price.len() {
+        let (p, q) = if mask[i] > 0.0 {
+            applied += 1;
+            (new_price[i], new_qty[i])
+        } else {
+            (price[i], qty[i])
+        };
+        up.push(p);
+        uq.push(q);
+        if mask[i] >= 0.0 {
+            count += 1;
+            value += p as f64 * q as f64;
+            pmin = pmin.min(p as f64);
+            pmax = pmax.max(p as f64);
+        }
+    }
+    (up, uq, value, count, pmin, pmax, applied)
+}
+
+#[allow(clippy::type_complexity)]
+fn random_inputs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    fn gen(rng: &mut Rng, n: usize, hi: f64) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f64(0.0, hi) as f32).collect()
+    }
+    let price = gen(&mut rng, n, 10.0);
+    let qty = gen(&mut rng, n, 500.0);
+    let new_price = gen(&mut rng, n, 10.0);
+    let new_qty = gen(&mut rng, n, 500.0);
+    let mask: Vec<f32> = (0..n).map(|_| if rng.chance(0.5) { 1.0 } else { 0.0 }).collect();
+    (price, qty, new_price, new_qty, mask)
+}
+
+#[test]
+fn analytics_matches_rust_reference() {
+    let Some(engine) = engine() else { return };
+    for &n in &[100usize, 4096, 5000] {
+        let (price, qty, new_price, new_qty, mask) = random_inputs(n, 42 + n as u64);
+        let result = engine.analytics(&price, &qty, &new_price, &new_qty, &mask).unwrap();
+        let (up, uq, value, count, pmin, pmax, applied) =
+            reference(&price, &qty, &new_price, &new_qty, &mask);
+
+        assert_eq!(result.upd_price.len(), n);
+        assert_eq!(result.upd_price, up, "updated prices must match exactly (n={n})");
+        assert_eq!(result.upd_qty, uq);
+        assert_eq!(result.stats.count, count);
+        assert_eq!(result.stats.updates_applied, applied);
+        let rel = (result.stats.total_value - value).abs() / value.max(1.0);
+        assert!(rel < 1e-4, "value: pjrt={} ref={value} rel={rel}", result.stats.total_value);
+        assert!((result.stats.price_min - pmin).abs() < 1e-5);
+        assert!((result.stats.price_max - pmax).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn histogram_counts_valid_rows() {
+    let Some(engine) = engine() else { return };
+    let n = 3000usize;
+    let (price, qty, new_price, new_qty, mask) = random_inputs(n, 7);
+    let result = engine.analytics(&price, &qty, &new_price, &new_qty, &mask).unwrap();
+    let total: f32 = result.histogram.iter().sum();
+    assert_eq!(total as usize, n, "histogram must count every valid row");
+    assert_eq!(result.histogram.len(), HIST_BINS);
+    // Prices are uniform over [0,10): every bin should be populated.
+    assert!(result.histogram.iter().all(|&b| b > 0.0));
+}
+
+#[test]
+fn value_sum_fast_path_matches() {
+    let Some(engine) = engine() else { return };
+    let n = 2048usize;
+    let (price, qty, _, _, _) = random_inputs(n, 9);
+    let got = engine.value_sum(&price, &qty).unwrap();
+    let expect: f64 = price.iter().zip(&qty).map(|(&p, &q)| p as f64 * q as f64).sum();
+    assert!((got - expect).abs() / expect < 1e-4, "got={got} expect={expect}");
+}
+
+#[test]
+fn batch_variant_selection_pads_transparently() {
+    let Some(engine) = engine() else { return };
+    // n just above a variant boundary exercises padding into the next size.
+    for &n in &[4095usize, 4097, 16384] {
+        let (price, qty, new_price, new_qty, mask) = random_inputs(n, n as u64);
+        let result = engine.analytics(&price, &qty, &new_price, &new_qty, &mask).unwrap();
+        assert_eq!(result.stats.count, n as u64, "padding rows leaked into stats at n={n}");
+        assert_eq!(result.upd_price.len(), n);
+    }
+}
+
+#[test]
+fn oversized_batch_is_a_clean_error() {
+    let Some(engine) = engine() else { return };
+    let n = 100_000; // larger than the largest compiled variant (65536)
+    let z = vec![0f32; n];
+    let err = engine.analytics(&z, &z, &z, &z, &z).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("no variant"), "unexpected error: {msg}");
+}
+
+#[test]
+fn analytics_for_store_end_to_end() {
+    let Some(engine) = engine() else { return };
+    let spec = DatasetSpec { records: 2_000, ..Default::default() };
+    let store = ShardedStore::new(4, 1 << 10);
+    for r in spec.iter() {
+        store.insert(r);
+    }
+    let updates = generate_stock_updates(&spec, 500, KeyDist::PermuteAll, 3);
+    // PermuteAll over 500 < records cycles the first 500 ids (then shuffles),
+    // so dedupe to the updates that target distinct keys for the check.
+    let result = engine.analytics_for_store(&store, &updates).unwrap();
+    assert_eq!(result.stats.count, 2_000);
+    assert_eq!(result.stats.updates_applied as usize, {
+        let keys: std::collections::HashSet<u64> = updates.iter().map(|u| u.isbn13).collect();
+        keys.len()
+    });
+
+    // Cross-check the post-update value against applying updates in Rust.
+    for u in &updates {
+        store.apply(u);
+    }
+    let (_, cents) = store.value_sum_cents();
+    let expect = cents as f64 / 100.0; // price dollars × qty
+    let rel = (result.stats.total_value - expect).abs() / expect;
+    assert!(rel < 1e-3, "pjrt={} rust={expect} rel={rel}", result.stats.total_value);
+}
+
+#[test]
+fn stats_layout_constants_match_python() {
+    // N_STATS/HIST_BINS must track python/compile/{kernels,model}.py.
+    assert_eq!(N_STATS, 8);
+    assert_eq!(HIST_BINS, 20);
+    let dir = match artifacts_dir() {
+        Some(d) => d,
+        None => return,
+    };
+    let manifest = membig::runtime::ArtifactManifest::load(dir).unwrap();
+    for m in manifest.variants("analytics") {
+        let text = std::fs::read_to_string(&m.path).unwrap();
+        assert!(
+            text.contains(&format!("f32[{}]", N_STATS + HIST_BINS)),
+            "artifact {} does not carry a {}-wide summary",
+            m.path.display(),
+            N_STATS + HIST_BINS
+        );
+    }
+}
+
+#[test]
+fn analytics_service_thread_roundtrip() {
+    // The !Send PJRT engine behind its dedicated executor thread: calls from
+    // multiple threads serialize through the channel and all succeed.
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = std::sync::Arc::new(
+        membig::runtime::AnalyticsService::start(dir).expect("service start"),
+    );
+    let spec = DatasetSpec { records: 1_000, ..Default::default() };
+    let store = std::sync::Arc::new(ShardedStore::new(2, 1 << 10));
+    for r in spec.iter() {
+        store.insert(r);
+    }
+    std::thread::scope(|s| {
+        for _ in 0..3 {
+            let svc = svc.clone();
+            let store = store.clone();
+            s.spawn(move || {
+                let r = svc.analytics_for_store(store.clone(), Vec::new()).unwrap();
+                assert_eq!(r.stats.count, 1_000);
+                let price: Vec<f32> = vec![1.0; 128];
+                let qty: Vec<f32> = vec![2.0; 128];
+                let total = svc.value_sum(price, qty).unwrap();
+                assert!((total - 256.0).abs() < 1e-3);
+            });
+        }
+    });
+    svc.shutdown();
+}
+
+#[test]
+fn service_fails_fast_on_missing_artifacts() {
+    let err = membig::runtime::AnalyticsService::start("/nonexistent/artifacts");
+    assert!(err.is_err());
+}

@@ -1,0 +1,109 @@
+//! Integration: the one-server TCP front end with the PJRT analytics
+//! service behind it — concurrent clients, mixed workload, analytics
+//! through the socket, graceful shutdown.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use membig::memstore::ShardedStore;
+use membig::runtime::AnalyticsService;
+use membig::server::{Client, Server};
+use membig::workload::gen::DatasetSpec;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        None
+    }
+}
+
+fn store(n: u64) -> (Arc<ShardedStore>, DatasetSpec) {
+    let spec = DatasetSpec { records: n, ..Default::default() };
+    let s = Arc::new(ShardedStore::new(4, 1 << 12));
+    for r in spec.iter() {
+        s.insert(r);
+    }
+    (s, spec)
+}
+
+#[test]
+fn mixed_workload_over_tcp() {
+    let (s, spec) = store(5_000);
+    let handle = Server::new(s.clone(), None).spawn("127.0.0.1:0").unwrap();
+    let addr = handle.addr;
+
+    std::thread::scope(|scope| {
+        for t in 0..4u32 {
+            let spec = &spec;
+            scope.spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for i in 0..250u64 {
+                    let key = spec.record_at((t as u64 * 250 + i) % 5_000).isbn13;
+                    match i % 3 {
+                        0 => {
+                            let r = c.request(&format!("GET {key}")).unwrap();
+                            assert!(r.starts_with("OK"), "{r}");
+                        }
+                        1 => {
+                            let r = c.request(&format!("UPDATE {key} 777 9")).unwrap();
+                            assert_eq!(r, "OK");
+                        }
+                        _ => {
+                            let r = c.request("STATS").unwrap();
+                            assert!(r.starts_with("OK count=5000"), "{r}");
+                        }
+                    }
+                }
+                assert_eq!(c.request("QUIT").unwrap(), "BYE");
+            });
+        }
+    });
+    handle.shutdown();
+}
+
+#[test]
+fn analytics_over_tcp_with_pjrt_service() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let (s, _) = store(3_000);
+    let svc = Arc::new(AnalyticsService::start(dir).expect("service"));
+    let handle = Server::new(s.clone(), Some(svc)).spawn("127.0.0.1:0").unwrap();
+
+    let mut c = Client::connect(handle.addr).unwrap();
+    let resp = c.request("ANALYTICS").unwrap();
+    assert!(resp.starts_with("OK value="), "{resp}");
+    assert!(resp.contains("count=3000"), "{resp}");
+
+    // Value reported by PJRT must match the store's own sum.
+    let (_, cents) = s.value_sum_cents();
+    let expect = cents as f64 / 100.0;
+    let got: f64 = resp
+        .split_whitespace()
+        .find_map(|kv| kv.strip_prefix("value="))
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!((got - expect).abs() / expect < 1e-3, "got {got} expect {expect}");
+
+    let _ = c.request("QUIT");
+    handle.shutdown();
+}
+
+#[test]
+fn malformed_requests_get_err_not_disconnect() {
+    let (s, _) = store(10);
+    let handle = Server::new(s, None).spawn("127.0.0.1:0").unwrap();
+    let mut c = Client::connect(handle.addr).unwrap();
+    for bad in ["", "FROB 1 2 3", "GET", "UPDATE 1", "GET abc"] {
+        let resp = c.request(bad).unwrap();
+        assert!(resp.starts_with("ERR"), "input {bad:?} → {resp}");
+    }
+    // Connection still alive afterwards.
+    assert_eq!(c.request("PING").unwrap(), "PONG");
+    let _ = c.request("QUIT");
+    handle.shutdown();
+}

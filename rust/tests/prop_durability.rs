@@ -1,0 +1,136 @@
+//! Property tests for the durability substrate and the IPC wire format:
+//! crash-point invariance of WAL replay, corruption detection of
+//! snapshots, and parser totality on hostile bytes.
+
+use membig::durability::{load_snapshot, write_snapshot, Wal, WalReader};
+use membig::ipc::{Request, Response};
+use membig::memstore::ShardedStore;
+use membig::util::prop::Prop;
+use membig::util::rng::Rng;
+use membig::workload::record::{BookRecord, StockUpdate};
+use membig::{prop_assert, prop_assert_eq};
+
+fn tdir() -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("membig_pd_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn arb_update(rng: &mut Rng) -> StockUpdate {
+    StockUpdate {
+        isbn13: rng.next_u64() | 1,
+        new_price_cents: rng.gen_range(1 << 30),
+        new_quantity: rng.next_u32(),
+    }
+}
+
+#[test]
+fn prop_wal_replay_survives_any_truncation_point() {
+    Prop::new("WAL: truncation at any byte yields exactly the whole frames before it")
+        .cases(40)
+        .run(|rng| {
+            let n = rng.range_usize(1, 300);
+            let ups: Vec<StockUpdate> = (0..n).map(|_| arb_update(rng)).collect();
+            let path = tdir().join(format!("t{}.wal", rng.next_u64()));
+            {
+                let mut w = Wal::open(&path).map_err(|e| e.to_string())?;
+                w.append_batch(&ups).map_err(|e| e.to_string())?;
+                w.sync().map_err(|e| e.to_string())?;
+            }
+            let full = std::fs::metadata(&path).map_err(|e| e.to_string())?.len();
+            let cut = rng.gen_range(full + 1); // 0..=full
+            let f = std::fs::OpenOptions::new()
+                .write(true)
+                .open(&path)
+                .map_err(|e| e.to_string())?;
+            f.set_len(cut).map_err(|e| e.to_string())?;
+            drop(f);
+
+            let mut got = Vec::new();
+            let (replayed, torn) = WalReader::open(&path)
+                .map_err(|e| e.to_string())?
+                .replay(|u| got.push(*u))
+                .map_err(|e| e.to_string())?;
+            let whole = (cut / 24) as usize;
+            prop_assert_eq!(replayed as usize, whole);
+            prop_assert_eq!(&got[..], &ups[..whole]);
+            prop_assert_eq!(torn, cut % 24 != 0);
+            std::fs::remove_file(&path).ok();
+            Ok(())
+        });
+}
+
+#[test]
+fn prop_snapshot_roundtrips_and_detects_any_corruption() {
+    Prop::new("snapshot: exact roundtrip; any payload byte-flip detected").cases(25).run(
+        |rng| {
+            let n = rng.range_usize(1, 2_000);
+            let shards_w = rng.range_usize(1, 9);
+            let shards_r = rng.range_usize(1, 9);
+            let store = ShardedStore::new(shards_w, 64);
+            for i in 0..n {
+                store.insert(BookRecord::new(
+                    (i as u64 + 1) * 7,
+                    rng.gen_range(100_000),
+                    rng.next_u32() % 10_000,
+                ));
+            }
+            let path = tdir().join(format!("s{}.snap", rng.next_u64()));
+            let written = write_snapshot(&store, &path).map_err(|e| e.to_string())?;
+            prop_assert_eq!(written as usize, n);
+
+            let loaded = load_snapshot(&path, shards_r).map_err(|e| e.to_string())?;
+            prop_assert_eq!(loaded.value_sum_cents(), store.value_sum_cents());
+
+            // Flip one random byte anywhere in the file → load must fail.
+            let mut bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+            let pos = rng.range_usize(0, bytes.len());
+            let bit = 1u8 << rng.range_usize(0, 8);
+            bytes[pos] ^= bit;
+            std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+            prop_assert!(
+                load_snapshot(&path, shards_r).is_err(),
+                "flip at byte {} undetected (n={})",
+                pos,
+                n
+            );
+            std::fs::remove_file(&path).ok();
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ipc_parsers_total_on_random_bytes() {
+    Prop::new("Request/Response parsers never panic on arbitrary input").cases(300).run(
+        |rng| {
+            let len = rng.range_usize(0, 200);
+            let bytes: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+            let _ = Request::read_from(&mut bytes.as_slice()); // any Err is fine
+            let _ = Response::read_from(&mut bytes.as_slice());
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ipc_roundtrip_arbitrary_payloads() {
+    Prop::new("IPC frames roundtrip for arbitrary valid payloads").cases(60).run(|rng| {
+        let n = rng.range_usize(0, 200);
+        let ups: Vec<StockUpdate> = (0..n).map(|_| arb_update(rng)).collect();
+        let req = Request::Update(ups);
+        let mut buf = Vec::new();
+        req.write_to(&mut buf).map_err(|e| e.to_string())?;
+        let back = Request::read_from(&mut buf.as_slice()).map_err(|e| e.to_string())?;
+        prop_assert_eq!(back, req);
+
+        let recs: Vec<BookRecord> = (0..rng.range_usize(0, 100))
+            .map(|i| BookRecord::new(i as u64 + 1, rng.gen_range(1 << 20), rng.next_u32()))
+            .collect();
+        let req = Request::Load(recs);
+        let mut buf = Vec::new();
+        req.write_to(&mut buf).map_err(|e| e.to_string())?;
+        prop_assert_eq!(Request::read_from(&mut buf.as_slice()).map_err(|e| e.to_string())?, req);
+        Ok(())
+    });
+}

@@ -1,0 +1,166 @@
+//! Property tests over the memory store (the paper's core data structure):
+//! differential testing vs std::HashMap, routing/sharding invariants,
+//! order-independence of the update workload, and writeback round-trips.
+
+use membig::memstore::{HashTable, ShardedStore};
+use membig::util::prop::Prop;
+use membig::util::rng::Rng;
+use membig::workload::record::{BookRecord, StockUpdate};
+use membig::{prop_assert, prop_assert_eq};
+
+fn arb_record(rng: &mut Rng) -> BookRecord {
+    BookRecord::new(rng.gen_range(1 << 20) + 1, rng.gen_range(1000), rng.gen_range(500) as u32)
+}
+
+#[test]
+fn prop_hashtable_behaves_like_hashmap() {
+    Prop::new("hashtable ≡ HashMap under random op sequences").cases(60).run(|rng| {
+        let mut ours = HashTable::new();
+        let mut reference = std::collections::HashMap::<u64, BookRecord>::new();
+        let ops = rng.range_usize(1, 2_000);
+        for _ in 0..ops {
+            let key = rng.gen_range(500) + 1;
+            match rng.gen_range(5) {
+                0 | 1 => {
+                    let rec = BookRecord::new(key, rng.gen_range(1000), rng.gen_range(500) as u32);
+                    prop_assert_eq!(ours.insert(rec), reference.insert(key, rec));
+                }
+                2 => prop_assert_eq!(ours.get(key), reference.get(&key).copied()),
+                3 => {
+                    let ok = ours.update(key, |r| r.quantity = r.quantity.wrapping_add(1));
+                    let ref_ok = match reference.get_mut(&key) {
+                        Some(r) => {
+                            r.quantity = r.quantity.wrapping_add(1);
+                            true
+                        }
+                        None => false,
+                    };
+                    prop_assert_eq!(ok, ref_ok);
+                }
+                _ => prop_assert_eq!(ours.remove(key), reference.remove(&key)),
+            }
+            prop_assert_eq!(ours.len(), reference.len());
+        }
+        // Final content identical.
+        let mut ours_all: Vec<BookRecord> = ours.iter().collect();
+        let mut ref_all: Vec<BookRecord> = reference.values().copied().collect();
+        ours_all.sort_by_key(|r| r.isbn13);
+        ref_all.sort_by_key(|r| r.isbn13);
+        prop_assert_eq!(ours_all, ref_all);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_value_sum_is_exact() {
+    Prop::new("value_sum_cents equals naive fold").cases(40).run(|rng| {
+        let mut t = HashTable::new();
+        let mut expect = std::collections::HashMap::new();
+        for _ in 0..rng.range_usize(1, 3_000) {
+            let r = arb_record(rng);
+            t.insert(r);
+            expect.insert(r.isbn13, r);
+        }
+        let naive: u128 = expect.values().map(|r| r.value_cents()).sum();
+        let (n, sum) = t.value_sum_cents();
+        prop_assert_eq!(n as usize, expect.len());
+        prop_assert_eq!(sum, naive);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_routing_is_total_and_stable() {
+    Prop::new("every key routes to exactly one shard, stably").cases(40).run(|rng| {
+        let shards = rng.range_usize(1, 33);
+        let store = ShardedStore::new(shards, 64);
+        for _ in 0..500 {
+            let key = rng.next_u64() | 1;
+            let s1 = store.route(key);
+            let s2 = store.route(key);
+            prop_assert!(s1 < shards, "route {} out of range {}", s1, shards);
+            prop_assert_eq!(s1, s2);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_update_order_is_irrelevant_for_distinct_keys() {
+    Prop::new("permuting distinct-key updates does not change final state").cases(30).run(
+        |rng| {
+            let n = rng.range_usize(10, 800);
+            let records: Vec<BookRecord> =
+                (1..=n as u64).map(|k| BookRecord::new(k, 1, 1)).collect();
+            let mut updates: Vec<StockUpdate> = records
+                .iter()
+                .map(|r| StockUpdate {
+                    isbn13: r.isbn13,
+                    new_price_cents: rng.gen_range(1000),
+                    new_quantity: rng.gen_range(500) as u32,
+                })
+                .collect();
+
+            let run = |ups: &[StockUpdate]| -> Result<(u64, u128), String> {
+                let store = ShardedStore::new(4, 256);
+                for r in &records {
+                    store.insert(*r);
+                }
+                for u in ups {
+                    prop_assert!(store.apply(u));
+                }
+                Ok(store.value_sum_cents())
+            };
+            let a = run(&updates)?;
+            rng.shuffle(&mut updates);
+            let b = run(&updates)?;
+            prop_assert_eq!(a, b);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_duplicate_key_updates_last_writer_wins() {
+    Prop::new("sequential duplicate updates: last writer wins").cases(30).run(|rng| {
+        let store = ShardedStore::new(2, 64);
+        store.insert(BookRecord::new(7, 0, 0));
+        let k = rng.range_usize(2, 50);
+        let mut last = (0u64, 0u32);
+        for _ in 0..k {
+            let u = StockUpdate {
+                isbn13: 7,
+                new_price_cents: rng.gen_range(1000),
+                new_quantity: rng.gen_range(500) as u32,
+            };
+            store.apply(&u);
+            last = (u.new_price_cents, u.new_quantity);
+        }
+        let r = store.get(7).unwrap();
+        prop_assert_eq!((r.price_cents, r.quantity), last);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_record_encoding_roundtrips() {
+    Prop::new("BookRecord encode/decode roundtrip + corruption detection").cases(100).run(
+        |rng| {
+            let rec = BookRecord::new(rng.next_u64() | 1, rng.next_u64() >> 20, rng.next_u32());
+            let enc = rec.encode();
+            prop_assert_eq!(BookRecord::decode(&enc).unwrap(), rec);
+            // Any single-bit flip must be detected.
+            let byte = rng.range_usize(0, enc.len());
+            let bit = rng.range_usize(0, 8);
+            let mut bad = enc;
+            bad[byte] ^= 1 << bit;
+            prop_assert!(
+                BookRecord::decode(&bad).is_err(),
+                "bit flip at {}:{} undetected",
+                byte,
+                bit
+            );
+            Ok(())
+        },
+    );
+}

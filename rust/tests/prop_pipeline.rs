@@ -1,0 +1,183 @@
+//! Property tests over the pipeline and file formats: topology invariance
+//! of the streaming executor, stock-file round-trips under arbitrary
+//! prices, parser robustness against injected garbage, and channel
+//! delivery guarantees under random thread topologies.
+
+use std::sync::Arc;
+
+use membig::memstore::ShardedStore;
+use membig::metrics::EngineMetrics;
+use membig::pipeline::channel::bounded;
+use membig::pipeline::executor::{run_streaming_update, run_update_in_memory};
+use membig::util::prop::Prop;
+use membig::util::rng::Rng;
+use membig::workload::gen::{generate_stock_updates, DatasetSpec, KeyDist};
+use membig::workload::record::StockUpdate;
+use membig::workload::stockfile::{format_entry, parse_entry, write_stock_file, StockReader};
+use membig::{prop_assert, prop_assert_eq};
+
+fn tdir() -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("membig_pp_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn prop_stockfile_roundtrips_arbitrary_updates() {
+    Prop::new("stock entries roundtrip for all valid price/qty").cases(100).run(|rng| {
+        let u = StockUpdate {
+            isbn13: rng.gen_range(9_999_999_999_999) + 1,
+            new_price_cents: rng.gen_range(1_000_000),
+            new_quantity: rng.next_u32() % 1_000_000,
+        };
+        let mut s = String::new();
+        format_entry(&mut s, &u);
+        prop_assert_eq!(parse_entry(&s), Some(u));
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parser_never_panics_on_garbage() {
+    Prop::new("parse_entry total on arbitrary bytes").cases(200).run(|rng| {
+        let len = rng.range_usize(0, 64);
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u32() % 128) as u8).collect();
+        if let Ok(s) = std::str::from_utf8(&bytes) {
+            let _ = parse_entry(s); // must not panic; result is irrelevant
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_streaming_equals_in_memory_for_any_topology() {
+    Prop::new("streaming executor ≡ in-memory executor ∀ topology").cases(12).run(|rng| {
+        let records = rng.range_usize(500, 4_000) as u64;
+        let shards = rng.range_usize(1, 9);
+        let batch = rng.range_usize(1, 2_000);
+        let depth = rng.range_usize(1, 16);
+        let spec = DatasetSpec { records, seed: rng.next_u64(), ..Default::default() };
+        let ups = generate_stock_updates(&spec, records, KeyDist::PermuteAll, rng.next_u64());
+
+        let mk = || {
+            let s = Arc::new(ShardedStore::new(shards, 1024));
+            for r in spec.iter() {
+                s.insert(r);
+            }
+            s
+        };
+
+        // In-memory path.
+        let m1 = EngineMetrics::new();
+        let s1 = mk();
+        let rep1 = run_update_in_memory(&s1, &ups, &m1);
+        prop_assert_eq!(rep1.updates_applied, records);
+
+        // Streaming path.
+        let path = tdir().join(format!("prop_{records}_{shards}_{batch}_{depth}.dat"));
+        write_stock_file(&path, &ups).map_err(|e| e.to_string())?;
+        let m2 = EngineMetrics::new();
+        let s2 = mk();
+        let rep2 =
+            run_streaming_update(&s2, &path, batch, depth, &m2).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        prop_assert_eq!(rep2.updates_applied, records);
+        prop_assert_eq!(s1.value_sum_cents(), s2.value_sum_cents());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_channel_delivers_exactly_once_any_topology() {
+    Prop::new("bounded channel: every item delivered exactly once").cases(15).run(|rng| {
+        let senders = rng.range_usize(1, 5);
+        let receivers = rng.range_usize(1, 5);
+        let capacity = rng.range_usize(1, 64);
+        let per_sender = rng.range_usize(1, 2_000);
+        let (tx, rx) = bounded::<u64>(capacity);
+        let received = std::sync::Mutex::new(Vec::<u64>::new());
+        std::thread::scope(|scope| {
+            for s in 0..senders {
+                let tx = tx.clone();
+                scope.spawn(move || {
+                    for i in 0..per_sender {
+                        tx.send((s * per_sender + i) as u64).unwrap();
+                    }
+                });
+            }
+            drop(tx);
+            for _ in 0..receivers {
+                let rx = rx.clone();
+                let received = &received;
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    while let Ok(v) = rx.recv() {
+                        local.push(v);
+                    }
+                    received.lock().unwrap().extend(local);
+                });
+            }
+            drop(rx);
+        });
+        let mut all = received.into_inner().unwrap();
+        all.sort_unstable();
+        prop_assert_eq!(all.len(), senders * per_sender);
+        all.dedup();
+        prop_assert_eq!(all.len(), senders * per_sender);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reader_error_count_matches_injected_garbage() {
+    Prop::new("StockReader counts exactly the injected bad lines").cases(30).run(|rng| {
+        let n_good = rng.range_usize(1, 200);
+        let n_bad = rng.range_usize(0, 50);
+        let spec = DatasetSpec { records: 1_000, ..Default::default() };
+        let ups = generate_stock_updates(&spec, n_good as u64, KeyDist::Uniform, rng.next_u64());
+        let mut lines: Vec<String> = ups
+            .iter()
+            .map(|u| {
+                let mut s = String::new();
+                format_entry(&mut s, u);
+                s.trim_end().to_string()
+            })
+            .collect();
+        for _ in 0..n_bad {
+            // Garbage that cannot parse: missing trailing frame / non-numeric.
+            lines.push("x$y$z".to_string());
+        }
+        // Shuffle good and bad lines together.
+        let mut rng2 = Rng::new(rng.next_u64());
+        rng2.shuffle(&mut lines);
+        let text = lines.join("\n") + "\n";
+        let mut reader = StockReader::new(text.as_bytes());
+        let mut count = 0;
+        while reader.next_update().map_err(|e| e.to_string())?.is_some() {
+            count += 1;
+        }
+        prop_assert_eq!(count, n_good);
+        prop_assert_eq!(reader.errors as usize, n_bad);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zero_missing_when_all_keys_exist() {
+    Prop::new("no spurious missing counts").cases(20).run(|rng| {
+        let records = rng.range_usize(100, 1_500) as u64;
+        let spec = DatasetSpec { records, seed: rng.next_u64(), ..Default::default() };
+        let store = ShardedStore::new(4, 1024);
+        for r in spec.iter() {
+            store.insert(r);
+        }
+        let ups =
+            generate_stock_updates(&spec, rng.range_usize(1, 2_000) as u64, KeyDist::Uniform, 1);
+        let m = EngineMetrics::new();
+        let rep = run_update_in_memory(&store, &ups, &m);
+        prop_assert_eq!(rep.updates_missing, 0);
+        prop_assert_eq!(rep.updates_applied as usize, ups.len());
+        prop_assert!(m.records_missing.get() == 0);
+        Ok(())
+    });
+}
