@@ -1,0 +1,34 @@
+# membig — build orchestration.
+#
+#   make artifacts   AOT-lower the JAX analytics graph to HLO text in
+#                    rust/artifacts/ (requires jax; idempotent)
+#   make build       release build of the Rust engine (default features:
+#                    std-only, pure-Rust analytics backend)
+#   make test        tier-1: cargo build --release && cargo test -q
+#   make check-pjrt  typecheck the PJRT-gated code paths
+#   make bench       run every custom-harness bench (MEMBIG_BENCH_SCALE=k
+#                    divides workload sizes for quick runs)
+#   make clean       drop build + bench outputs
+
+ARTIFACTS_DIR := $(abspath rust/artifacts)
+
+.PHONY: artifacts build test check-pjrt bench clean
+
+artifacts:
+	cd python && python -m compile.aot --out $(ARTIFACTS_DIR)
+
+build:
+	cd rust && cargo build --release
+
+test: build
+	cd rust && cargo test -q
+
+check-pjrt:
+	cd rust && cargo check --features pjrt --all-targets
+
+bench:
+	cd rust && cargo bench
+
+clean:
+	cd rust && cargo clean
+	rm -rf bench_out

@@ -1,18 +1,23 @@
-//! Three-layer composition demo: Rust coordinator (L3) feeds the
-//! AOT-compiled JAX graph (L2) wrapping the Pallas kernel (L1) — Python is
-//! nowhere at runtime.
+//! Three-layer composition demo: Rust coordinator (L3) feeds the analytics
+//! model — the AOT-compiled JAX graph (L2) wrapping the Pallas kernel (L1)
+//! when built with `--features pjrt` and artifacts are present, or the
+//! bit-identical pure-Rust reference backend otherwise. Python is nowhere
+//! at runtime either way.
 //!
 //! Loads a store, stages a batch of pending updates, then runs the fused
-//! masked-update + statistics + histogram *on the PJRT path*, compares
-//! against the Rust-side application of the same updates, and prints the
-//! price histogram before/after.
+//! masked-update + statistics + histogram through the analytics service,
+//! compares against the Rust-side application of the same updates, and
+//! prints the price histogram before/after.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example analytics_pipeline
+//! cargo run --release --example analytics_pipeline
+//! # PJRT path: make artifacts && cargo run --release --features pjrt --example analytics_pipeline
 //! ```
 
+use std::sync::Arc;
+
 use membig::memstore::ShardedStore;
-use membig::runtime::AnalyticsEngine;
+use membig::runtime::AnalyticsService;
 use membig::util::fmt::{commas, human_duration};
 use membig::workload::gen::{generate_stock_updates, DatasetSpec, KeyDist};
 
@@ -21,13 +26,12 @@ fn bar(v: f32, max: f32) -> String {
 }
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let engine = AnalyticsEngine::load("artifacts")
-        .map_err(|e| format!("{e}\nhint: run `make artifacts` first"))?;
-    println!("PJRT platform: {}\n", engine.platform());
+    let svc = AnalyticsService::start_auto("artifacts")?;
+    println!("analytics backend: {}\n", svc.backend_name());
 
     // L3: build a live store.
     let spec = DatasetSpec { records: 60_000, ..Default::default() };
-    let store = ShardedStore::new(8, 1 << 13);
+    let store = Arc::new(ShardedStore::new(8, 1 << 13));
     for r in spec.iter() {
         store.insert(r);
     }
@@ -37,9 +41,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let updates = generate_stock_updates(&spec, 30_000, KeyDist::Uniform, 99);
 
     // "Before" analytics: no updates staged.
-    let before = engine.analytics_for_store(&store, &[])?;
-    // "After" analytics: updates applied *inside the kernel* via the mask.
-    let after = engine.analytics_for_store(&store, &updates)?;
+    let before = svc.analytics_for_store(store.clone(), Vec::new())?;
+    // "After" analytics: updates applied *inside the model* via the mask.
+    let after = svc.analytics_for_store(store.clone(), updates.clone())?;
 
     println!("\n               before           after(staged updates)");
     println!("value      ${:>12.2}    ${:>12.2}", before.stats.total_value, after.stats.total_value);
@@ -55,7 +59,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let (_, cents) = store.value_sum_cents();
     let rust_value = cents as f64 / 100.0;
     let rel = (after.stats.total_value - rust_value).abs() / rust_value;
-    println!("\nrust-side apply agrees: PJRT ${:.2} vs Rust ${:.2} (rel err {:.2e})",
+    println!("\nrust-side apply agrees: analytics ${:.2} vs Rust ${:.2} (rel err {:.2e})",
         after.stats.total_value, rust_value, rel);
     assert!(rel < 1e-3);
 
@@ -71,5 +75,6 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             count as u64
         );
     }
+    svc.shutdown();
     Ok(())
 }

@@ -29,14 +29,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
     println!("store ready: {} records", commas(store.len() as u64));
 
-    // Optional PJRT analytics service (dedicated executor thread).
-    let analytics = match AnalyticsService::start("artifacts") {
+    // Analytics service (dedicated executor thread): PJRT when built with
+    // `--features pjrt` and artifacts exist, pure-Rust reference otherwise.
+    let analytics = match AnalyticsService::start_auto("artifacts") {
         Ok(s) => {
-            println!("analytics: PJRT service online");
+            println!("analytics: {} service online", s.backend_name());
             Some(Arc::new(s))
         }
         Err(e) => {
-            println!("analytics: disabled ({e}) — run `make artifacts` to enable");
+            println!("analytics: disabled ({e})");
             None
         }
     };

@@ -19,7 +19,7 @@ use membig::config::{Args, EngineConfig, FlagSpec};
 use membig::coordinator::report::{render_figure6, render_table1, RunReport};
 use membig::coordinator::{Coordinator, Workbench};
 use membig::memstore::snapshot::verify_against_table;
-use membig::runtime::AnalyticsEngine;
+use membig::runtime::AnalyticsService;
 use membig::storage::latency::{DiskProfile, DiskSim};
 use membig::storage::table::{DiskTable, TableOptions};
 use membig::util::fmt::{commas, human_duration, paper_hms, rate};
@@ -89,26 +89,29 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         Some(rep)
     };
 
-    // Phase 4: PJRT analytics over the updated store.
-    match AnalyticsEngine::load("artifacts") {
-        Ok(engine) => {
+    // Phase 4: analytics over the updated store (PJRT when available, else
+    // the pure-Rust reference backend — the phase always runs).
+    match AnalyticsService::start_auto("artifacts") {
+        Ok(svc) => {
             // Analytics over a sample (largest compiled batch) of the store.
             let sample: Vec<membig::workload::record::BookRecord> =
                 out.store.shard_records(0).into_iter().take(65_536).collect();
             let price: Vec<f32> = sample.iter().map(|r| r.price_cents as f32 / 100.0).collect();
             let qty: Vec<f32> = sample.iter().map(|r| r.quantity as f32).collect();
             let mask = vec![0f32; price.len()];
-            let result = engine.analytics(&price, &qty, &price, &qty, &mask)?;
+            let result =
+                svc.analytics(price.clone(), qty.clone(), price, qty, mask)?;
             println!(
-                "[4] PJRT analytics ({}): {} rows → value ${:.2}, mean ${:.4}, exec {}",
-                engine.platform(),
+                "[4] analytics ({}): {} rows → value ${:.2}, mean ${:.4}, exec {}",
+                svc.backend_name(),
                 commas(result.stats.count),
                 result.stats.total_value,
                 result.stats.mean_price,
                 human_duration(result.exec_time)
             );
+            svc.shutdown();
         }
-        Err(e) => println!("[4] PJRT analytics skipped ({e}) — run `make artifacts`"),
+        Err(e) => println!("[4] analytics skipped ({e})"),
     }
 
     // Phase 5: writeback + verification.

@@ -5,12 +5,23 @@
 //!
 //! CSV: bench_out/analytics.csv. Skips cleanly if `make artifacts` hasn't run.
 
+#[cfg(feature = "pjrt")]
 use membig::runtime::AnalyticsEngine;
+#[cfg(feature = "pjrt")]
 use membig::util::bench::{bench_out_dir, stat_from};
+#[cfg(feature = "pjrt")]
 use membig::util::csv::CsvWriter;
+#[cfg(feature = "pjrt")]
 use membig::util::fmt::commas;
+#[cfg(feature = "pjrt")]
 use membig::util::rng::Rng;
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    println!("analytics bench skipped: rebuild with `--features pjrt` (PJRT-only bench)");
+}
+
+#[cfg(feature = "pjrt")]
 fn rust_reference(price: &[f32], qty: &[f32], new_price: &[f32], new_qty: &[f32], mask: &[f32]) -> (f64, u64) {
     let mut value = 0f64;
     let mut count = 0u64;
@@ -24,13 +35,20 @@ fn rust_reference(price: &[f32], qty: &[f32], new_price: &[f32], new_qty: &[f32]
     (value, count)
 }
 
+#[cfg(feature = "pjrt")]
 fn main() {
     let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("manifest.json").exists() {
         println!("analytics bench skipped: run `make artifacts` first");
         return;
     }
-    let engine = AnalyticsEngine::load(&artifacts).expect("engine");
+    let engine = match AnalyticsEngine::load(&artifacts) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("analytics bench skipped: PJRT unavailable ({e})");
+            return;
+        }
+    };
     println!("=== analytics path: PJRT ({}) vs pure-Rust loop ===\n", engine.platform());
 
     let csv_path = bench_out_dir().join("analytics.csv");

@@ -17,17 +17,28 @@ use crate::storage::latency::DiskProfile;
 // CLI argument parser
 // ---------------------------------------------------------------------------
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArgError {
-    #[error("unknown flag '{0}' (see --help)")]
     Unknown(String),
-    #[error("flag '--{0}' expects a value")]
     MissingValue(String),
-    #[error("invalid value for '--{0}': {1}")]
     Invalid(String, String),
-    #[error("missing required positional argument <{0}>")]
     MissingPositional(&'static str),
 }
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgError::Unknown(name) => write!(f, "unknown flag '{name}' (see --help)"),
+            ArgError::MissingValue(name) => write!(f, "flag '--{name}' expects a value"),
+            ArgError::Invalid(name, why) => write!(f, "invalid value for '--{name}': {why}"),
+            ArgError::MissingPositional(name) => {
+                write!(f, "missing required positional argument <{name}>")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 /// Declarative flag spec: `(name, value_hint_or_empty, help)`.
 /// Flags with an empty value hint are booleans.

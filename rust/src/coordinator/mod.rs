@@ -20,16 +20,54 @@ use crate::metrics::EngineMetrics;
 use crate::pipeline::executor::{run_streaming_update, PipelineError};
 use crate::storage::table::{DiskTable, TableError, TableOptions};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CoordinatorError {
-    #[error("table: {0}")]
-    Table(#[from] TableError),
-    #[error("pipeline: {0}")]
-    Pipeline(#[from] PipelineError),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("verification failed: {0} records diverge between store and table")]
+    Table(TableError),
+    Pipeline(PipelineError),
+    Io(std::io::Error),
     Verification(u64),
+}
+
+impl std::fmt::Display for CoordinatorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CoordinatorError::Table(e) => write!(f, "table: {e}"),
+            CoordinatorError::Pipeline(e) => write!(f, "pipeline: {e}"),
+            CoordinatorError::Io(e) => write!(f, "io: {e}"),
+            CoordinatorError::Verification(n) => {
+                write!(f, "verification failed: {n} records diverge between store and table")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CoordinatorError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CoordinatorError::Table(e) => Some(e),
+            CoordinatorError::Pipeline(e) => Some(e),
+            CoordinatorError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<TableError> for CoordinatorError {
+    fn from(e: TableError) -> Self {
+        CoordinatorError::Table(e)
+    }
+}
+
+impl From<PipelineError> for CoordinatorError {
+    fn from(e: PipelineError) -> Self {
+        CoordinatorError::Pipeline(e)
+    }
+}
+
+impl From<std::io::Error> for CoordinatorError {
+    fn from(e: std::io::Error) -> Self {
+        CoordinatorError::Io(e)
+    }
 }
 
 /// Orchestrates one run of either application over prepared inputs.

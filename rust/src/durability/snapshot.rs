@@ -16,20 +16,45 @@ use crate::workload::record::{BookRecord, RECORD_BYTES};
 const MAGIC: &[u8; 4] = b"MSNP";
 const VERSION: u32 = 1;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SnapshotError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("bad snapshot magic")]
+    Io(std::io::Error),
     BadMagic,
-    #[error("unsupported snapshot version {0}")]
     BadVersion(u32),
-    #[error("snapshot checksum mismatch")]
     BadChecksum,
-    #[error("snapshot truncated: expected {expected} records, read {got}")]
     Truncated { expected: u64, got: u64 },
-    #[error("record decode at index {0}: {1}")]
     Record(u64, crate::workload::record::DecodeError),
+}
+
+impl std::fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotError::Io(e) => write!(f, "io: {e}"),
+            SnapshotError::BadMagic => write!(f, "bad snapshot magic"),
+            SnapshotError::BadVersion(v) => write!(f, "unsupported snapshot version {v}"),
+            SnapshotError::BadChecksum => write!(f, "snapshot checksum mismatch"),
+            SnapshotError::Truncated { expected, got } => {
+                write!(f, "snapshot truncated: expected {expected} records, read {got}")
+            }
+            SnapshotError::Record(i, e) => write!(f, "record decode at index {i}: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SnapshotError::Io(e) => Some(e),
+            SnapshotError::Record(_, e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for SnapshotError {
+    fn from(e: std::io::Error) -> Self {
+        SnapshotError::Io(e)
+    }
 }
 
 fn fnv64(h: u64, bytes: &[u8]) -> u64 {

@@ -11,16 +11,47 @@ use super::proto::{join_u128, ProtoError, Request, Response};
 use crate::storage::index::hash_key;
 use crate::workload::record::{BookRecord, StockUpdate};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum IpcError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("proto: {0}")]
-    Proto(#[from] ProtoError),
-    #[error("worker {0} sent unexpected response: {1:?}")]
+    Io(std::io::Error),
+    Proto(ProtoError),
     Unexpected(usize, Response),
-    #[error("worker {0} exited abnormally")]
     WorkerDied(usize),
+}
+
+impl std::fmt::Display for IpcError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IpcError::Io(e) => write!(f, "io: {e}"),
+            IpcError::Proto(e) => write!(f, "proto: {e}"),
+            IpcError::Unexpected(w, resp) => {
+                write!(f, "worker {w} sent unexpected response: {resp:?}")
+            }
+            IpcError::WorkerDied(w) => write!(f, "worker {w} exited abnormally"),
+        }
+    }
+}
+
+impl std::error::Error for IpcError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            IpcError::Io(e) => Some(e),
+            IpcError::Proto(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for IpcError {
+    fn from(e: std::io::Error) -> Self {
+        IpcError::Io(e)
+    }
+}
+
+impl From<ProtoError> for IpcError {
+    fn from(e: ProtoError) -> Self {
+        IpcError::Proto(e)
+    }
 }
 
 struct WorkerConn {

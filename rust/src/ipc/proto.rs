@@ -34,16 +34,38 @@ pub enum Response {
     Bye,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ProtoError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("frame too large: {0} bytes")]
+    Io(std::io::Error),
     TooLarge(u32),
-    #[error("unknown tag {0:#x}")]
     BadTag(u8),
-    #[error("malformed payload for tag {0:#x}: {1}")]
     Malformed(u8, String),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Io(e) => write!(f, "io: {e}"),
+            ProtoError::TooLarge(n) => write!(f, "frame too large: {n} bytes"),
+            ProtoError::BadTag(t) => write!(f, "unknown tag {t:#x}"),
+            ProtoError::Malformed(t, why) => write!(f, "malformed payload for tag {t:#x}: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ProtoError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ProtoError {
+    fn from(e: std::io::Error) -> Self {
+        ProtoError::Io(e)
+    }
 }
 
 const TAG_LOAD: u8 = 1;

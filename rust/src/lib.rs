@@ -14,11 +14,14 @@
 //! - **L1 (Pallas, build-time)** — the tiled masked-update + partial-reduce
 //!   kernel called by L2 (interpret mode for CPU PJRT).
 //!
-//! Python never runs on the request path: [`runtime`] loads the artifacts
-//! through the PJRT C API (`xla` crate) and executes them from Rust.
+//! Python never runs on the request path: with the `pjrt` cargo feature,
+//! [`runtime`] loads the artifacts through the PJRT C API (`xla` crate) and
+//! executes them from Rust. The **default build is std-only**: analytics is
+//! served by the pure-Rust reference backend ([`runtime::reference`]), so a
+//! fresh checkout builds and tests green with no artifacts and no XLA.
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` (repo root) for the full system inventory and the
+//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod baseline;
 pub mod config;

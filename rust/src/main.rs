@@ -16,7 +16,7 @@ use std::sync::Arc;
 use membig::config::{Args, EngineConfig, FlagSpec};
 use membig::coordinator::{Coordinator, Workbench};
 use membig::coordinator::report::{render_figure6, render_table1, RunReport};
-use membig::runtime::AnalyticsEngine;
+use membig::runtime::AnalyticsService;
 use membig::server::Server;
 use membig::util::fmt::{commas, human_duration, paper_hms};
 use membig::workload::gen::DatasetSpec;
@@ -30,6 +30,7 @@ fn spec() -> Vec<FlagSpec> {
         FlagSpec { name: "batch-size", value: "N", help: "pipeline batch size (default 8192)" },
         FlagSpec { name: "data-dir", value: "DIR", help: "experiment data directory" },
         FlagSpec { name: "artifacts", value: "DIR", help: "AOT artifacts directory" },
+        FlagSpec { name: "backend", value: "B", help: "analytics backend: auto|reference|pjrt|off" },
         FlagSpec { name: "config", value: "FILE", help: "INI config file" },
         FlagSpec { name: "seed", value: "N", help: "workload RNG seed" },
         FlagSpec { name: "disk-scale", value: "F", help: "fraction of modeled disk delay to sleep (default 0)" },
@@ -140,10 +141,10 @@ fn run() -> Result<(), String> {
             let coord = Coordinator::new(cfg.clone());
             let table = wb.ensure_table(&cfg).map_err(|e| e.to_string())?;
             let store = coord.load_only(&table).map_err(|e| e.to_string())?;
-            let engine =
-                AnalyticsEngine::load(&cfg.artifacts_dir).map_err(|e| e.to_string())?;
-            println!("PJRT platform: {}", engine.platform());
-            let result = engine.analytics_for_store(&store, &[]).map_err(|e| e.to_string())?;
+            let svc = start_analytics(&cfg, args.get("backend"))?
+                .ok_or("analytics needs a backend (got --backend off)")?;
+            println!("analytics backend: {}", svc.backend_name());
+            let result = svc.analytics_for_store(store, Vec::new())?;
             println!(
                 "inventory: count={} value=${:.2} mean=${:.4} min=${:.2} max=${:.2} (exec {})",
                 commas(result.stats.count),
@@ -160,17 +161,12 @@ fn run() -> Result<(), String> {
             let coord = Coordinator::new(cfg.clone());
             let table = wb.ensure_table(&cfg).map_err(|e| e.to_string())?;
             let store = coord.load_only(&table).map_err(|e| e.to_string())?;
-            let engine = membig::runtime::AnalyticsService::start(&cfg.artifacts_dir)
-                .map(Arc::new)
-                .map_err(|e| {
-                    eprintln!("analytics engine unavailable: {e}");
-                })
-                .ok();
+            let engine = start_analytics(&cfg, args.get("backend"))?;
             println!(
                 "serving {} records on {} (analytics: {})",
                 commas(store.len() as u64),
                 cfg.bind,
-                if engine.is_some() { "PJRT" } else { "disabled" }
+                engine.as_deref().map(AnalyticsService::backend_name).unwrap_or("disabled")
             );
             let handle =
                 Server::new(store, engine).spawn(&cfg.bind).map_err(|e| e.to_string())?;
@@ -186,13 +182,32 @@ fn run() -> Result<(), String> {
             println!("disk model: {:?}", cfg.disk);
             println!("data dir: {}", cfg.data_dir.display());
             println!("artifacts: {}", cfg.artifacts_dir.display());
-            match AnalyticsEngine::load_lazy(&cfg.artifacts_dir) {
-                Ok(e) => println!("PJRT: {}", e.platform()),
-                Err(e) => println!("PJRT: unavailable ({e})"),
+            #[cfg(feature = "pjrt")]
+            match membig::runtime::AnalyticsEngine::load_lazy(&cfg.artifacts_dir) {
+                Ok(e) => println!("analytics: pjrt available ({})", e.platform()),
+                Err(e) => println!("analytics: pjrt unavailable ({e}); reference backend active"),
             }
+            #[cfg(not(feature = "pjrt"))]
+            println!("analytics: reference (pure Rust) — rebuild with --features pjrt for XLA");
             Ok(())
         }
         other => Err(format!("unknown command '{other}' (try --help)")),
+    }
+}
+
+/// Resolve the `--backend` flag into a running analytics service.
+/// `auto` (default) prefers PJRT when compiled in, else pure-Rust reference;
+/// `off` disables the ANALYTICS verb entirely.
+fn start_analytics(
+    cfg: &EngineConfig,
+    backend: Option<&str>,
+) -> Result<Option<Arc<AnalyticsService>>, String> {
+    match backend.unwrap_or("auto") {
+        "off" => Ok(None),
+        "reference" => AnalyticsService::start_reference().map(Arc::new).map(Some),
+        "pjrt" => AnalyticsService::start(&cfg.artifacts_dir).map(Arc::new).map(Some),
+        "auto" => AnalyticsService::start_auto(&cfg.artifacts_dir).map(Arc::new).map(Some),
+        other => Err(format!("unknown --backend '{other}' (expected auto|reference|pjrt|off)")),
     }
 }
 

@@ -24,12 +24,34 @@ pub struct StreamReport {
     pub backpressure_waits: u64,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum PipelineError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("worker panicked: {0}")]
+    Io(std::io::Error),
     WorkerPanic(String),
+}
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PipelineError::Io(e) => write!(f, "io: {e}"),
+            PipelineError::WorkerPanic(w) => write!(f, "worker panicked: {w}"),
+        }
+    }
+}
+
+impl std::error::Error for PipelineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PipelineError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for PipelineError {
+    fn from(e: std::io::Error) -> Self {
+        PipelineError::Io(e)
+    }
 }
 
 /// Streaming executor: reads `stock_path`, routes batches of `batch_size`

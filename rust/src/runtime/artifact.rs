@@ -5,16 +5,40 @@ use std::path::{Path, PathBuf};
 
 use crate::util::json::{parse, Json};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArtifactError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("manifest parse: {0}")]
+    Io(std::io::Error),
     Parse(String),
-    #[error("no variant of model '{0}' fits batch {1} (available: {2:?})")]
     NoVariant(String, usize, Vec<usize>),
-    #[error("artifact file missing: {0}")]
     Missing(PathBuf),
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Io(e) => write!(f, "io: {e}"),
+            ArtifactError::Parse(e) => write!(f, "manifest parse: {e}"),
+            ArtifactError::NoVariant(name, batch, avail) => {
+                write!(f, "no variant of model '{name}' fits batch {batch} (available: {avail:?})")
+            }
+            ArtifactError::Missing(path) => write!(f, "artifact file missing: {}", path.display()),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArtifactError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ArtifactError {
+    fn from(e: std::io::Error) -> Self {
+        ArtifactError::Io(e)
+    }
 }
 
 #[derive(Debug, Clone, PartialEq)]

@@ -11,53 +11,50 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use super::artifact::{ArtifactError, ArtifactManifest};
+use super::types::{AnalyticsResult, InventoryStats, HIST_BINS, N_STATS};
 use crate::memstore::ShardedStore;
 use crate::workload::record::StockUpdate;
 
-pub const N_STATS: usize = 8;
-pub const HIST_BINS: usize = 20;
-
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum EngineError {
-    #[error("artifact: {0}")]
-    Artifact(#[from] ArtifactError),
-    #[error("xla: {0}")]
+    Artifact(ArtifactError),
     Xla(String),
-    #[error("model output shape unexpected: {0}")]
     BadOutput(String),
-    #[error("input arrays must share one length (got {0:?})")]
     RaggedInputs(Vec<usize>),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Artifact(e) => write!(f, "artifact: {e}"),
+            EngineError::Xla(e) => write!(f, "xla: {e}"),
+            EngineError::BadOutput(e) => write!(f, "model output shape unexpected: {e}"),
+            EngineError::RaggedInputs(lens) => {
+                write!(f, "input arrays must share one length (got {lens:?})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            EngineError::Artifact(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<ArtifactError> for EngineError {
+    fn from(e: ArtifactError) -> Self {
+        EngineError::Artifact(e)
+    }
 }
 
 impl From<xla::Error> for EngineError {
     fn from(e: xla::Error) -> Self {
         EngineError::Xla(e.to_string())
     }
-}
-
-/// Combined statistics emitted by the `analytics` model.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct InventoryStats {
-    /// Σ price·qty over live rows (dollars).
-    pub total_value: f64,
-    pub count: u64,
-    pub price_sum: f64,
-    pub price_min: f64,
-    pub price_max: f64,
-    pub qty_sum: f64,
-    pub updates_applied: u64,
-    pub mean_price: f64,
-}
-
-/// Full analytics output.
-#[derive(Debug, Clone)]
-pub struct AnalyticsResult {
-    pub upd_price: Vec<f32>,
-    pub upd_qty: Vec<f32>,
-    pub stats: InventoryStats,
-    pub histogram: [f32; HIST_BINS],
-    /// PJRT execution time of the call (excludes padding/copy).
-    pub exec_time: std::time::Duration,
 }
 
 struct Compiled {

@@ -1,12 +1,28 @@
-//! PJRT runtime: loads the AOT HLO artifacts emitted by
-//! `python/compile/aot.py` and executes them from the Rust hot path.
-//! Python is never invoked here — the artifacts are plain HLO text compiled
-//! by the in-process XLA CPU client (`xla` crate, PJRT C API).
+//! Analytics runtime.
+//!
+//! Two interchangeable backends sit behind [`AnalyticsService`]:
+//!
+//! - [`reference`] — the pure-Rust implementation of the analytics model
+//!   (masked bulk update + statistics + price histogram). Std-only and
+//!   deterministic; this is the **default** backend, so the `ANALYTICS`
+//!   server verb works on a fresh checkout with no artifacts and no XLA.
+//! - [`engine`] *(cargo feature `pjrt`)* — loads the AOT HLO artifacts
+//!   emitted by `python/compile/aot.py` and executes them through the PJRT
+//!   C API (`xla` crate). Python is never invoked at runtime.
+//!
+//! [`artifact`] (the manifest registry) is always compiled — it is plain
+//! JSON/file handling and its tests guard the interchange format.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod engine;
+pub mod reference;
 pub mod service;
+pub mod types;
 
 pub use artifact::{ArtifactManifest, ModelEntry};
-pub use engine::{AnalyticsEngine, AnalyticsResult, InventoryStats};
+#[cfg(feature = "pjrt")]
+pub use engine::AnalyticsEngine;
+pub use reference::{ReferenceEngine, ReferenceError};
 pub use service::AnalyticsService;
+pub use types::{AnalyticsResult, InventoryStats, HIST_BINS, N_STATS};

@@ -1,0 +1,246 @@
+//! Pure-Rust analytics backend — the default when the `pjrt` feature is
+//! off, and the numerical oracle the PJRT path is verified against (this is
+//! the reference math that used to live only in `tests/integration_runtime.rs`).
+//!
+//! Semantics mirror `python/compile/kernels/ref.py` exactly:
+//! `mask[i] > 0` applies the staged update for row i, `mask[i] >= 0` marks
+//! the row valid (padding rows carry mask = -1 and are excluded from every
+//! statistic). Needs no artifacts, no XLA, no threads — deterministic
+//! std-only code on the caller's stack.
+
+use std::time::Instant;
+
+use super::types::{histogram_bin, AnalyticsResult, InventoryStats, HIST_BINS};
+use crate::memstore::ShardedStore;
+use crate::workload::record::StockUpdate;
+
+#[derive(Debug)]
+pub enum ReferenceError {
+    /// Input arrays must share one length.
+    RaggedInputs(Vec<usize>),
+}
+
+impl std::fmt::Display for ReferenceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReferenceError::RaggedInputs(lens) => {
+                write!(f, "input arrays must share one length (got {lens:?})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ReferenceError {}
+
+/// Stateless analytics engine over plain slices / the live store.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ReferenceEngine;
+
+impl ReferenceEngine {
+    pub fn new() -> Self {
+        ReferenceEngine
+    }
+
+    pub fn platform(&self) -> String {
+        "reference (pure Rust)".to_string()
+    }
+
+    /// Masked bulk update + stats + histogram, one pass.
+    /// `mask[i] = 1.0` applies `new_*[i]`; `0.0` keeps current values;
+    /// negative marks the row as padding.
+    pub fn analytics(
+        &self,
+        price: &[f32],
+        qty: &[f32],
+        new_price: &[f32],
+        new_qty: &[f32],
+        mask: &[f32],
+    ) -> Result<AnalyticsResult, ReferenceError> {
+        let n = price.len();
+        let lens = vec![n, qty.len(), new_price.len(), new_qty.len(), mask.len()];
+        if lens.iter().any(|&l| l != n) {
+            return Err(ReferenceError::RaggedInputs(lens));
+        }
+        let t0 = Instant::now();
+        let mut upd_price = Vec::with_capacity(n);
+        let mut upd_qty = Vec::with_capacity(n);
+        let mut histogram = [0f32; HIST_BINS];
+        let (mut value, mut price_sum, mut qty_sum) = (0f64, 0f64, 0f64);
+        let (mut count, mut applied) = (0u64, 0u64);
+        // min/max start at the kernel's ±_BIG sentinels (ref.py), not ±inf,
+        // so an all-padding input reports the same values as the PJRT path.
+        const BIG: f64 = 3.4e38;
+        let (mut pmin, mut pmax) = (BIG, -BIG);
+        for i in 0..n {
+            let (p, q) = if mask[i] > 0.0 {
+                (new_price[i], new_qty[i])
+            } else {
+                (price[i], qty[i])
+            };
+            upd_price.push(p);
+            upd_qty.push(q);
+            if mask[i] >= 0.0 {
+                count += 1;
+                if mask[i] > 0.0 {
+                    applied += 1;
+                }
+                value += p as f64 * q as f64;
+                price_sum += p as f64;
+                qty_sum += q as f64;
+                pmin = pmin.min(p as f64);
+                pmax = pmax.max(p as f64);
+                histogram[histogram_bin(p)] += 1.0;
+            }
+        }
+        let mean_price = if count > 0 { price_sum / count as f64 } else { 0.0 };
+        Ok(AnalyticsResult {
+            upd_price,
+            upd_qty,
+            stats: InventoryStats {
+                total_value: value,
+                count,
+                price_sum,
+                price_min: pmin,
+                price_max: pmax,
+                qty_sum,
+                updates_applied: applied,
+                mean_price,
+            },
+            histogram,
+            exec_time: t0.elapsed(),
+        })
+    }
+
+    /// Σ price·qty fast path (server STATS shape).
+    pub fn value_sum(&self, price: &[f32], qty: &[f32]) -> Result<f64, ReferenceError> {
+        if qty.len() != price.len() {
+            return Err(ReferenceError::RaggedInputs(vec![price.len(), qty.len()]));
+        }
+        Ok(price.iter().zip(qty).map(|(&p, &q)| p as f64 * q as f64).sum())
+    }
+
+    /// Analytics over a live store + pending updates: exports columns,
+    /// marks updated keys, runs the model in one pass. The store itself is
+    /// not mutated — this is the read-side analytics path.
+    pub fn analytics_for_store(
+        &self,
+        store: &ShardedStore,
+        updates: &[StockUpdate],
+    ) -> Result<AnalyticsResult, ReferenceError> {
+        let mut price = Vec::new();
+        let mut qty = Vec::new();
+        let mut keys = Vec::new();
+        for s in 0..store.shard_count() {
+            for r in store.shard_records(s) {
+                price.push((r.price_cents as f32) / 100.0);
+                qty.push(r.quantity as f32);
+                keys.push(r.isbn13);
+            }
+        }
+        let mut new_price = price.clone();
+        let mut new_qty = qty.clone();
+        let mut mask = vec![0.0f32; price.len()];
+        let index: std::collections::HashMap<u64, usize> =
+            keys.iter().enumerate().map(|(i, &k)| (k, i)).collect();
+        for u in updates {
+            if let Some(&i) = index.get(&u.isbn13) {
+                new_price[i] = (u.new_price_cents as f32) / 100.0;
+                new_qty[i] = u.new_quantity as f32;
+                mask[i] = 1.0;
+            }
+        }
+        self.analytics(&price, &qty, &new_price, &new_qty, &mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gen::DatasetSpec;
+    use crate::workload::record::BookRecord;
+
+    #[test]
+    fn masked_update_semantics() {
+        let eng = ReferenceEngine::new();
+        let price = [1.0f32, 2.0, 3.0, 4.0];
+        let qty = [10.0f32, 10.0, 10.0, 10.0];
+        let new_price = [9.0f32, 9.0, 9.0, 9.0];
+        let new_qty = [1.0f32, 1.0, 1.0, 1.0];
+        // Row 0 updated, row 1 kept, row 2 updated, row 3 padding.
+        let mask = [1.0f32, 0.0, 1.0, -1.0];
+        let r = eng.analytics(&price, &qty, &new_price, &new_qty, &mask).unwrap();
+        assert_eq!(r.upd_price, vec![9.0, 2.0, 9.0, 4.0]);
+        assert_eq!(r.upd_qty, vec![1.0, 10.0, 1.0, 10.0]);
+        assert_eq!(r.stats.count, 3);
+        assert_eq!(r.stats.updates_applied, 2);
+        // 9*1 + 2*10 + 9*1 = 38; padding row excluded.
+        assert!((r.stats.total_value - 38.0).abs() < 1e-9);
+        assert!((r.stats.price_min - 2.0).abs() < 1e-9);
+        assert!((r.stats.price_max - 9.0).abs() < 1e-9);
+        let total: f32 = r.histogram.iter().sum();
+        assert_eq!(total as u64, 3, "histogram counts exactly the valid rows");
+    }
+
+    #[test]
+    fn empty_input_is_clean() {
+        let eng = ReferenceEngine::new();
+        let r = eng.analytics(&[], &[], &[], &[], &[]).unwrap();
+        assert_eq!(r.stats.count, 0);
+        assert_eq!(r.stats.mean_price, 0.0);
+        assert!(r.upd_price.is_empty());
+        // Kernel sentinel semantics, not ±inf (parity with the PJRT path).
+        assert_eq!(r.stats.price_min, 3.4e38);
+        assert_eq!(r.stats.price_max, -3.4e38);
+    }
+
+    #[test]
+    fn ragged_inputs_rejected() {
+        let eng = ReferenceEngine::new();
+        assert!(matches!(
+            eng.analytics(&[1.0], &[1.0, 2.0], &[1.0], &[1.0], &[1.0]),
+            Err(ReferenceError::RaggedInputs(_))
+        ));
+        assert!(eng.value_sum(&[1.0], &[]).is_err());
+    }
+
+    #[test]
+    fn for_store_counts_distinct_present_keys() {
+        let eng = ReferenceEngine::new();
+        let store = ShardedStore::new(2, 64);
+        store.insert(BookRecord::new(101, 200, 3)); // $2.00 x 3
+        store.insert(BookRecord::new(102, 400, 1)); // $4.00 x 1
+        let ups = vec![
+            StockUpdate { isbn13: 101, new_price_cents: 100, new_quantity: 1 },
+            StockUpdate { isbn13: 999, new_price_cents: 1, new_quantity: 1 }, // absent
+        ];
+        let r = eng.analytics_for_store(&store, &ups).unwrap();
+        assert_eq!(r.stats.count, 2);
+        assert_eq!(r.stats.updates_applied, 1);
+        // Updated: $1.00 x 1 + $4.00 x 1 = $5.00.
+        assert!((r.stats.total_value - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn for_store_value_matches_store_apply() {
+        let eng = ReferenceEngine::new();
+        let spec = DatasetSpec { records: 2_000, ..Default::default() };
+        let store = ShardedStore::new(4, 1 << 10);
+        for r in spec.iter() {
+            store.insert(r);
+        }
+        let ups = crate::workload::gen::generate_stock_updates(
+            &spec,
+            500,
+            crate::workload::gen::KeyDist::Uniform,
+            3,
+        );
+        let result = eng.analytics_for_store(&store, &ups).unwrap();
+        for u in &ups {
+            store.apply(u);
+        }
+        let (_, cents) = store.value_sum_cents();
+        let expect = cents as f64 / 100.0;
+        let rel = (result.stats.total_value - expect).abs() / expect;
+        assert!(rel < 1e-3, "reference={} store={expect} rel={rel}", result.stats.total_value);
+    }
+}

@@ -1,16 +1,28 @@
-//! Analytics service: a dedicated executor thread that owns the PJRT
-//! engine.
+//! Analytics service: a dedicated executor thread that owns one analytics
+//! backend, fed through a channel.
 //!
-//! The `xla` crate's client/executable types are `!Send` (Rc-backed), so
-//! they cannot be shared across the server's connection threads. The
-//! production pattern is a single executor thread owning the engine, fed
-//! through a channel — which also serializes PJRT executions (they are
-//! coarse-grained batch calls; queueing is the intended behaviour).
+//! Why a thread even for the pure-Rust backend: the `xla` crate's
+//! client/executable types are `!Send` (Rc-backed), so the PJRT backend
+//! *cannot* be shared across the server's connection threads — a single
+//! executor thread owning the engine is the production pattern, and it also
+//! serializes executions (analytics calls are coarse-grained batch calls;
+//! queueing is the intended behaviour). The reference backend rides the same
+//! topology so callers never care which backend is live.
+//!
+//! Backend selection:
+//! - [`AnalyticsService::start_reference`] — pure-Rust backend, always
+//!   available, needs no artifacts (the default-build path).
+//! - [`AnalyticsService::start`] — PJRT backend from an artifacts dir;
+//!   fails fast when artifacts are missing or the crate was built without
+//!   the `pjrt` feature.
+//! - [`AnalyticsService::start_auto`] — PJRT when possible, reference
+//!   otherwise; what `membig serve` / `membig analytics` use.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
-use super::engine::{AnalyticsEngine, AnalyticsResult, EngineError};
+use super::reference::ReferenceEngine;
+use super::types::AnalyticsResult;
 use crate::memstore::ShardedStore;
 use crate::workload::record::StockUpdate;
 
@@ -36,56 +48,162 @@ enum Request {
     Shutdown,
 }
 
+/// Which backend the executor thread should own.
+enum BackendSpec {
+    Reference,
+    #[cfg(feature = "pjrt")]
+    Pjrt(std::path::PathBuf),
+}
+
+/// The backend living on the executor thread. Constructed there because the
+/// PJRT engine is `!Send`.
+enum Backend {
+    Reference(ReferenceEngine),
+    #[cfg(feature = "pjrt")]
+    Pjrt(super::engine::AnalyticsEngine),
+}
+
+impl Backend {
+    fn name(&self) -> String {
+        match self {
+            Backend::Reference(r) => r.platform(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => format!("pjrt:{}", e.platform()),
+        }
+    }
+
+    fn analytics_for_store(
+        &self,
+        store: &ShardedStore,
+        updates: &[StockUpdate],
+    ) -> Result<AnalyticsResult, String> {
+        match self {
+            Backend::Reference(r) => {
+                r.analytics_for_store(store, updates).map_err(|e| e.to_string())
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => e.analytics_for_store(store, updates).map_err(|e| e.to_string()),
+        }
+    }
+
+    fn value_sum(&self, price: &[f32], qty: &[f32]) -> Result<f64, String> {
+        match self {
+            Backend::Reference(r) => r.value_sum(price, qty).map_err(|e| e.to_string()),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => e.value_sum(price, qty).map_err(|e| e.to_string()),
+        }
+    }
+
+    fn analytics(
+        &self,
+        price: &[f32],
+        qty: &[f32],
+        new_price: &[f32],
+        new_qty: &[f32],
+        mask: &[f32],
+    ) -> Result<AnalyticsResult, String> {
+        match self {
+            Backend::Reference(r) => {
+                r.analytics(price, qty, new_price, new_qty, mask).map_err(|e| e.to_string())
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(e) => {
+                e.analytics(price, qty, new_price, new_qty, mask).map_err(|e| e.to_string())
+            }
+        }
+    }
+}
+
 /// Thread-safe handle to the executor thread. Clone-free: wrap in `Arc`.
 pub struct AnalyticsService {
     tx: Mutex<mpsc::Sender<Request>>,
     join: Mutex<Option<std::thread::JoinHandle<()>>>,
+    backend: String,
 }
 
 impl AnalyticsService {
-    /// Start the executor thread; fails fast if the artifacts don't load.
+    /// Start with the PJRT backend; fails fast if the artifacts don't load
+    /// or the crate was built without the `pjrt` feature.
     pub fn start(artifacts_dir: impl Into<std::path::PathBuf>) -> Result<Self, String> {
-        let dir = artifacts_dir.into();
+        #[cfg(feature = "pjrt")]
+        {
+            Self::spawn(BackendSpec::Pjrt(artifacts_dir.into()))
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _: std::path::PathBuf = artifacts_dir.into();
+            Err("built without the `pjrt` feature (use start_reference or start_auto)".into())
+        }
+    }
+
+    /// Start with the pure-Rust reference backend (no artifacts needed).
+    pub fn start_reference() -> Result<Self, String> {
+        Self::spawn(BackendSpec::Reference)
+    }
+
+    /// Prefer PJRT when compiled in and loadable, fall back to reference.
+    /// Never fails in practice (the reference backend has no preconditions).
+    pub fn start_auto(artifacts_dir: impl Into<std::path::PathBuf>) -> Result<Self, String> {
+        #[cfg(feature = "pjrt")]
+        {
+            let dir = artifacts_dir.into();
+            match Self::spawn(BackendSpec::Pjrt(dir)) {
+                Ok(s) => return Ok(s),
+                Err(e) => eprintln!("pjrt backend unavailable ({e}); using reference backend"),
+            }
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _: std::path::PathBuf = artifacts_dir.into();
+        }
+        Self::spawn(BackendSpec::Reference)
+    }
+
+    /// Which backend is live ("reference (pure Rust)" or "pjrt:<platform>").
+    pub fn backend_name(&self) -> &str {
+        &self.backend
+    }
+
+    fn spawn(spec: BackendSpec) -> Result<Self, String> {
         let (tx, rx) = mpsc::channel::<Request>();
-        let (init_tx, init_rx) = mpsc::channel::<Result<(), String>>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<String, String>>();
         let join = std::thread::Builder::new()
-            .name("pjrt-analytics".into())
+            .name("analytics".into())
             .spawn(move || {
-                let engine = match AnalyticsEngine::load(&dir) {
-                    Ok(e) => {
-                        let _ = init_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = init_tx.send(Err(e.to_string()));
-                        return;
+                let backend = match spec {
+                    BackendSpec::Reference => Backend::Reference(ReferenceEngine::new()),
+                    #[cfg(feature = "pjrt")]
+                    BackendSpec::Pjrt(dir) => {
+                        match super::engine::AnalyticsEngine::load(&dir) {
+                            Ok(e) => Backend::Pjrt(e),
+                            Err(e) => {
+                                let _ = init_tx.send(Err(e.to_string()));
+                                return;
+                            }
+                        }
                     }
                 };
+                let _ = init_tx.send(Ok(backend.name()));
                 while let Ok(req) = rx.recv() {
                     match req {
                         Request::Shutdown => break,
                         Request::ForStore { store, updates, reply } => {
-                            let r = engine
-                                .analytics_for_store(&store, &updates)
-                                .map_err(|e| e.to_string());
-                            let _ = reply.send(r);
+                            let _ = reply.send(backend.analytics_for_store(&store, &updates));
                         }
                         Request::ValueSum { price, qty, reply } => {
-                            let r = engine.value_sum(&price, &qty).map_err(|e| e.to_string());
-                            let _ = reply.send(r);
+                            let _ = reply.send(backend.value_sum(&price, &qty));
                         }
                         Request::Analytics { price, qty, new_price, new_qty, mask, reply } => {
-                            let r = engine
-                                .analytics(&price, &qty, &new_price, &new_qty, &mask)
-                                .map_err(|e| e.to_string());
-                            let _ = reply.send(r);
+                            let _ = reply
+                                .send(backend.analytics(&price, &qty, &new_price, &new_qty, &mask));
                         }
                     }
                 }
             })
             .map_err(|e| e.to_string())?;
-        init_rx.recv().map_err(|_| "executor thread died during init".to_string())??;
-        Ok(AnalyticsService { tx: Mutex::new(tx), join: Mutex::new(Some(join)) })
+        let backend =
+            init_rx.recv().map_err(|_| "executor thread died during init".to_string())??;
+        Ok(AnalyticsService { tx: Mutex::new(tx), join: Mutex::new(Some(join)), backend })
     }
 
     fn send(&self, req: Request) -> Result<(), String> {
@@ -144,5 +262,36 @@ const _: fn() = || {
     assert_send_sync::<AnalyticsService>();
 };
 
-/// Error type re-export for callers that match on engine failures.
-pub type ServiceError = EngineError;
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gen::DatasetSpec;
+
+    #[test]
+    fn reference_service_roundtrip() {
+        let svc = AnalyticsService::start_reference().expect("reference service");
+        assert_eq!(svc.backend_name(), "reference (pure Rust)");
+        let total = svc.value_sum(vec![1.0; 128], vec![2.0; 128]).unwrap();
+        assert!((total - 256.0).abs() < 1e-6);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn auto_falls_back_without_artifacts() {
+        let svc = AnalyticsService::start_auto("/nonexistent/artifacts").expect("auto service");
+        let spec = DatasetSpec { records: 200, ..Default::default() };
+        let store = Arc::new(ShardedStore::new(2, 256));
+        for r in spec.iter() {
+            store.insert(r);
+        }
+        let r = svc.analytics_for_store(store, Vec::new()).unwrap();
+        assert_eq!(r.stats.count, 200);
+        svc.shutdown();
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_start_errors_without_feature() {
+        assert!(AnalyticsService::start("/anywhere").is_err());
+    }
+}

@@ -1,0 +1,69 @@
+//! Shared analytics types: the result/statistics shapes produced by every
+//! analytics backend (pure-Rust reference and, behind the `pjrt` feature,
+//! the XLA engine). The layout constants must track
+//! `python/compile/{kernels,model}.py`.
+
+/// Number of scalar statistics in the model's summary vector.
+pub const N_STATS: usize = 8;
+/// Price-histogram bins in the summary vector.
+pub const HIST_BINS: usize = 20;
+/// Histogram range: `[HIST_LO, HIST_HI)` dollars, `HIST_BINS` equal bins.
+pub const HIST_LO: f32 = 0.0;
+pub const HIST_HI: f32 = 10.0;
+
+/// Combined statistics emitted by the `analytics` model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InventoryStats {
+    /// Σ price·qty over live rows (dollars).
+    pub total_value: f64,
+    pub count: u64,
+    pub price_sum: f64,
+    pub price_min: f64,
+    pub price_max: f64,
+    pub qty_sum: f64,
+    pub updates_applied: u64,
+    pub mean_price: f64,
+}
+
+/// Full analytics output.
+#[derive(Debug, Clone)]
+pub struct AnalyticsResult {
+    pub upd_price: Vec<f32>,
+    pub upd_qty: Vec<f32>,
+    pub stats: InventoryStats,
+    pub histogram: [f32; HIST_BINS],
+    /// Backend execution time of the call (excludes padding/copy for PJRT;
+    /// the whole compute for the reference backend).
+    pub exec_time: std::time::Duration,
+}
+
+/// Bin index for one updated price (semantics of `model.price_histogram`:
+/// int-truncate then clamp into range).
+#[inline]
+pub fn histogram_bin(price: f32) -> usize {
+    let width = (HIST_HI - HIST_LO) / HIST_BINS as f32;
+    let idx = ((price - HIST_LO) / width) as i64;
+    idx.clamp(0, HIST_BINS as i64 - 1) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_tracks_python() {
+        assert_eq!(N_STATS, 8);
+        assert_eq!(HIST_BINS, 20);
+    }
+
+    #[test]
+    fn histogram_bins_cover_range() {
+        assert_eq!(histogram_bin(0.0), 0);
+        assert_eq!(histogram_bin(0.49), 0);
+        assert_eq!(histogram_bin(0.5), 1);
+        assert_eq!(histogram_bin(9.99), 19);
+        // Out-of-range values clamp rather than vanish.
+        assert_eq!(histogram_bin(-3.0), 0);
+        assert_eq!(histogram_bin(42.0), 19);
+    }
+}

@@ -7,7 +7,7 @@
 //! GET <isbn13>                      → OK <price_cents> <qty> | MISS
 //! UPDATE <isbn13> <cents> <qty>     → OK | MISS
 //! STATS                             → OK count=<n> value_cents=<v>
-//! ANALYTICS                         → OK value=<dollars> mean_price=<p> ... (PJRT path)
+//! ANALYTICS                         → OK value=<dollars> mean_price=<p> ... (analytics backend)
 //! PING                              → PONG
 //! QUIT                              → BYE (closes connection)
 //! ```

@@ -32,14 +32,36 @@ const ENTRY_BYTES: usize = 16;
 pub const ENTRIES_PER_PAGE: usize = (PAGE_SIZE - HEADER) / ENTRY_BYTES; // 255
 const NO_PAGE: u32 = u32::MAX;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum IndexError {
-    #[error("io: {0}")]
-    Io(#[from] io::Error),
-    #[error("bad index magic {0:#x} at page {1}")]
+    Io(io::Error),
     BadMagic(u32, u32),
-    #[error("index full: bucket chain exhausted")]
     Full,
+}
+
+impl std::fmt::Display for IndexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IndexError::Io(e) => write!(f, "io: {e}"),
+            IndexError::BadMagic(m, p) => write!(f, "bad index magic {m:#x} at page {p}"),
+            IndexError::Full => write!(f, "index full: bucket chain exhausted"),
+        }
+    }
+}
+
+impl std::error::Error for IndexError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            IndexError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for IndexError {
+    fn from(e: io::Error) -> Self {
+        IndexError::Io(e)
+    }
 }
 
 /// Location of a record in the data file.

@@ -28,20 +28,42 @@ const DATA_OFF: usize = BITMAP_OFF + BITMAP_BYTES;
 
 const _: () = assert!(DATA_OFF + SLOTS_PER_PAGE * RECORD_BYTES <= PAGE_SIZE);
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum PageError {
-    #[error("bad page magic {0:#x}")]
     BadMagic(u32),
-    #[error("slot {0} out of range (max {SLOTS_PER_PAGE})")]
     SlotRange(usize),
-    #[error("slot {0} is empty")]
     Empty(usize),
-    #[error("slot {0} is occupied")]
     Occupied(usize),
-    #[error("page full")]
     Full,
-    #[error("record decode: {0}")]
-    Decode(#[from] DecodeError),
+    Decode(DecodeError),
+}
+
+impl std::fmt::Display for PageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PageError::BadMagic(m) => write!(f, "bad page magic {m:#x}"),
+            PageError::SlotRange(s) => write!(f, "slot {s} out of range (max {SLOTS_PER_PAGE})"),
+            PageError::Empty(s) => write!(f, "slot {s} is empty"),
+            PageError::Occupied(s) => write!(f, "slot {s} is occupied"),
+            PageError::Full => write!(f, "page full"),
+            PageError::Decode(e) => write!(f, "record decode: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for PageError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PageError::Decode(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<DecodeError> for PageError {
+    fn from(e: DecodeError) -> Self {
+        PageError::Decode(e)
+    }
 }
 
 /// In-memory view over one page buffer.

@@ -15,14 +15,45 @@ use std::sync::Arc;
 use super::latency::{AccessKind, DiskSim};
 use super::page::{Page, PageError, PAGE_SIZE};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum PageFileError {
-    #[error("io: {0}")]
-    Io(#[from] io::Error),
-    #[error("page {0} out of range (file has {1} pages)")]
+    Io(io::Error),
     OutOfRange(u32, u32),
-    #[error("page: {0}")]
-    Page(#[from] PageError),
+    Page(PageError),
+}
+
+impl std::fmt::Display for PageFileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PageFileError::Io(e) => write!(f, "io: {e}"),
+            PageFileError::OutOfRange(id, n) => {
+                write!(f, "page {id} out of range (file has {n} pages)")
+            }
+            PageFileError::Page(e) => write!(f, "page: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for PageFileError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PageFileError::Io(e) => Some(e),
+            PageFileError::Page(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for PageFileError {
+    fn from(e: io::Error) -> Self {
+        PageFileError::Io(e)
+    }
+}
+
+impl From<PageError> for PageFileError {
+    fn from(e: PageError) -> Self {
+        PageFileError::Page(e)
+    }
 }
 
 pub struct PageFile {

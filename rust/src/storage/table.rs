@@ -14,22 +14,65 @@ use super::page::SLOTS_PER_PAGE;
 use super::pagefile::{PageFile, PageFileError};
 use crate::workload::record::BookRecord;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TableError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("pagefile: {0}")]
-    PageFile(#[from] PageFileError),
-    #[error("index: {0}")]
-    Index(#[from] IndexError),
-    #[error("page: {0}")]
-    Page(#[from] super::page::PageError),
-    #[error("key {0} not found")]
+    Io(std::io::Error),
+    PageFile(PageFileError),
+    Index(IndexError),
+    Page(super::page::PageError),
     NotFound(u64),
-    #[error("duplicate key {0}")]
     Duplicate(u64),
-    #[error("meta file corrupt: {0}")]
     Meta(String),
+}
+
+impl std::fmt::Display for TableError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TableError::Io(e) => write!(f, "io: {e}"),
+            TableError::PageFile(e) => write!(f, "pagefile: {e}"),
+            TableError::Index(e) => write!(f, "index: {e}"),
+            TableError::Page(e) => write!(f, "page: {e}"),
+            TableError::NotFound(k) => write!(f, "key {k} not found"),
+            TableError::Duplicate(k) => write!(f, "duplicate key {k}"),
+            TableError::Meta(e) => write!(f, "meta file corrupt: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TableError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TableError::Io(e) => Some(e),
+            TableError::PageFile(e) => Some(e),
+            TableError::Index(e) => Some(e),
+            TableError::Page(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for TableError {
+    fn from(e: std::io::Error) -> Self {
+        TableError::Io(e)
+    }
+}
+
+impl From<PageFileError> for TableError {
+    fn from(e: PageFileError) -> Self {
+        TableError::PageFile(e)
+    }
+}
+
+impl From<IndexError> for TableError {
+    fn from(e: IndexError) -> Self {
+        TableError::Index(e)
+    }
+}
+
+impl From<super::page::PageError> for TableError {
+    fn from(e: super::page::PageError) -> Self {
+        TableError::Page(e)
+    }
 }
 
 /// Options controlling a table's physical behaviour.

@@ -76,13 +76,24 @@ impl BookRecord {
     }
 }
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum DecodeError {
-    #[error("record truncated: {0} bytes")]
     Truncated(usize),
-    #[error("record checksum mismatch (expected {expected:#x}, found {found:#x})")]
     BadChecksum { expected: u32, found: u32 },
 }
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Truncated(n) => write!(f, "record truncated: {n} bytes"),
+            DecodeError::BadChecksum { expected, found } => {
+                write!(f, "record checksum mismatch (expected {expected:#x}, found {found:#x})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 /// One `Stock.dat` entry: the new price/quantity for an ISBN.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

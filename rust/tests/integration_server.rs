@@ -1,23 +1,17 @@
-//! Integration: the one-server TCP front end with the PJRT analytics
-//! service behind it — concurrent clients, mixed workload, analytics
-//! through the socket, graceful shutdown.
+//! Integration: the one-server TCP front end with the analytics service
+//! behind it — concurrent clients, mixed workload, malformed-input
+//! robustness, analytics through the socket, graceful shutdown.
+//!
+//! The ANALYTICS verb is exercised unconditionally through the pure-Rust
+//! reference backend; the PJRT variant (same wire surface) only runs under
+//! `--features pjrt` with artifacts present.
 
-use std::path::PathBuf;
 use std::sync::Arc;
 
 use membig::memstore::ShardedStore;
 use membig::runtime::AnalyticsService;
 use membig::server::{Client, Server};
 use membig::workload::gen::DatasetSpec;
-
-fn artifacts_dir() -> Option<PathBuf> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        None
-    }
-}
 
 fn store(n: u64) -> (Arc<ShardedStore>, DatasetSpec) {
     let spec = DatasetSpec { records: n, ..Default::default() };
@@ -64,13 +58,11 @@ fn mixed_workload_over_tcp() {
 }
 
 #[test]
-fn analytics_over_tcp_with_pjrt_service() {
-    let Some(dir) = artifacts_dir() else {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    };
+fn analytics_over_tcp_with_reference_service() {
+    // No artifacts, no XLA — the reference backend answers ANALYTICS on a
+    // fresh checkout.
     let (s, _) = store(3_000);
-    let svc = Arc::new(AnalyticsService::start(dir).expect("service"));
+    let svc = Arc::new(AnalyticsService::start_reference().expect("reference service"));
     let handle = Server::new(s.clone(), Some(svc)).spawn("127.0.0.1:0").unwrap();
 
     let mut c = Client::connect(handle.addr).unwrap();
@@ -78,7 +70,7 @@ fn analytics_over_tcp_with_pjrt_service() {
     assert!(resp.starts_with("OK value="), "{resp}");
     assert!(resp.contains("count=3000"), "{resp}");
 
-    // Value reported by PJRT must match the store's own sum.
+    // Value reported by the analytics path must match the store's own sum.
     let (_, cents) = s.value_sum_cents();
     let expect = cents as f64 / 100.0;
     let got: f64 = resp
@@ -93,17 +85,147 @@ fn analytics_over_tcp_with_pjrt_service() {
     handle.shutdown();
 }
 
+#[cfg(feature = "pjrt")]
+#[test]
+fn analytics_over_tcp_with_pjrt_service() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let svc = match AnalyticsService::start(dir) {
+        Ok(s) => Arc::new(s),
+        Err(e) => {
+            eprintln!("skipping: PJRT service unavailable ({e})");
+            return;
+        }
+    };
+    let (s, _) = store(3_000);
+    let handle = Server::new(s.clone(), Some(svc)).spawn("127.0.0.1:0").unwrap();
+    let mut c = Client::connect(handle.addr).unwrap();
+    let resp = c.request("ANALYTICS").unwrap();
+    assert!(resp.starts_with("OK value="), "{resp}");
+    assert!(resp.contains("count=3000"), "{resp}");
+    let _ = c.request("QUIT");
+    handle.shutdown();
+}
+
 #[test]
 fn malformed_requests_get_err_not_disconnect() {
     let (s, _) = store(10);
     let handle = Server::new(s, None).spawn("127.0.0.1:0").unwrap();
     let mut c = Client::connect(handle.addr).unwrap();
-    for bad in ["", "FROB 1 2 3", "GET", "UPDATE 1", "GET abc"] {
+    let bad_inputs = [
+        // empty / unknown verbs
+        "",
+        "FROB 1 2 3",
+        "get 1", // verbs are case-sensitive
+        "UPDATEX",
+        // short argument lists
+        "GET",
+        "UPDATE",
+        "UPDATE 1",
+        "UPDATE 1 2",
+        // non-numeric / malformed operands
+        "GET abc",
+        "GET 12.5",
+        "GET -4",
+        "UPDATE notanisbn 100 5",
+        "UPDATE 1 cents 5",
+        "UPDATE 1 100 many",
+        "UPDATE 1 100 -2",
+    ];
+    for bad in bad_inputs {
         let resp = c.request(bad).unwrap();
         assert!(resp.starts_with("ERR"), "input {bad:?} → {resp}");
     }
-    // Connection still alive afterwards.
+    // Connection still alive afterwards, and valid requests still work.
     assert_eq!(c.request("PING").unwrap(), "PONG");
+    assert!(c.request("STATS").unwrap().starts_with("OK count=10"));
     let _ = c.request("QUIT");
+    handle.shutdown();
+}
+
+#[test]
+fn whitespace_variants_parse() {
+    // Extra separators are fine (split_ascii_whitespace); extra *tokens*
+    // after a complete UPDATE are ignored by the parser today — pin the
+    // lenient-prefix behaviour for GET too.
+    let (s, spec) = store(50);
+    let handle = Server::new(s, None).spawn("127.0.0.1:0").unwrap();
+    let mut c = Client::connect(handle.addr).unwrap();
+    let key = spec.record_at(7).isbn13;
+    let resp = c.request(&format!("  GET   {key}  ")).unwrap();
+    assert!(resp.starts_with("OK"), "{resp}");
+    let resp = c.request(&format!("GET {key} trailing junk")).unwrap();
+    assert!(resp.starts_with("OK"), "{resp}");
+    let _ = c.request("QUIT");
+    handle.shutdown();
+}
+
+#[test]
+fn concurrent_get_update_interleaving_is_consistent() {
+    // Writers hammer one key set with UPDATE while readers poll GET on the
+    // same keys: every read must observe *some* complete write (price and
+    // quantity from the same update), never a torn or half-applied record.
+    let (s, spec) = store(100);
+    let handle = Server::new(s.clone(), None).spawn("127.0.0.1:0").unwrap();
+    let addr = handle.addr;
+    const HOT_KEYS: usize = 8;
+    const WRITERS: u64 = 3;
+    const ROUNDS: u64 = 120;
+
+    let keys: Vec<u64> = (0..HOT_KEYS as u64).map(|i| spec.record_at(i).isbn13).collect();
+
+    std::thread::scope(|scope| {
+        // Writers: price_cents encodes (writer, round) and quantity mirrors
+        // it, so readers can check the pair is from one atomic update.
+        for w in 0..WRITERS {
+            let keys = &keys;
+            scope.spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for round in 0..ROUNDS {
+                    let tag = 1_000 + w * ROUNDS + round; // unique, nonzero
+                    for key in keys {
+                        let resp =
+                            c.request(&format!("UPDATE {key} {tag} {tag}")).unwrap();
+                        assert_eq!(resp, "OK");
+                    }
+                }
+                let _ = c.request("QUIT");
+            });
+        }
+        // Readers: interleave GETs with the writers.
+        for _ in 0..3 {
+            let keys = &keys;
+            scope.spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for _ in 0..ROUNDS {
+                    for key in keys {
+                        let resp = c.request(&format!("GET {key}")).unwrap();
+                        let mut parts = resp.split_ascii_whitespace();
+                        assert_eq!(parts.next(), Some("OK"), "{resp}");
+                        let price: u64 = parts.next().unwrap().parse().unwrap();
+                        let qty: u64 = parts.next().unwrap().parse().unwrap();
+                        // Either the original generated record (qty < 500,
+                        // price < 1000) or a tagged write where both fields
+                        // carry the same tag.
+                        let original = price < 1_000 && qty < 500;
+                        assert!(
+                            original || price == qty,
+                            "torn read on key {key}: price={price} qty={qty}"
+                        );
+                    }
+                }
+                let _ = c.request("QUIT");
+            });
+        }
+    });
+
+    // After the dust settles every hot key holds the same writer-tagged pair.
+    for key in &keys {
+        let rec = s.get(*key).unwrap();
+        assert_eq!(rec.price_cents, rec.quantity as u64, "final state torn for {key}");
+    }
     handle.shutdown();
 }

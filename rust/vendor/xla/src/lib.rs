@@ -1,0 +1,142 @@
+//! Offline stub of the `xla` crate's PJRT surface.
+//!
+//! This container has no crate registry and no XLA/PJRT shared libraries, so
+//! the `pjrt` cargo feature of `membig` resolves `xla` to this stub: the
+//! exact API subset the engine uses (`PjRtClient`, `PjRtLoadedExecutable`,
+//! `HloModuleProto`, `XlaComputation`, `Literal`) with every runtime entry
+//! point returning a clean [`Error`]. The gated code paths therefore
+//! *compile and degrade gracefully* — `AnalyticsEngine::load` fails fast,
+//! the server's ANALYTICS verb falls back to the pure-Rust backend — without
+//! linking a single XLA symbol.
+//!
+//! To run against real XLA, replace the path dependency in
+//! `rust/Cargo.toml` with the published `xla` crate; no engine code changes
+//! are required.
+
+use std::fmt;
+
+const UNAVAILABLE: &str =
+    "PJRT unavailable: offline `xla` stub (swap rust/vendor/xla for the real `xla` crate)";
+
+/// Error type mirroring `xla::Error`'s role (stringly here).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable() -> Self {
+        Error(UNAVAILABLE.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// PJRT client handle. `cpu()` always fails in the stub.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Parsed HLO module (text form).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Host literal. Constructible (so call sites typecheck) but inert.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal), Error> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_fails_cleanly() {
+        let err = PjRtClient::cpu().err().expect("stub must not pretend to work");
+        assert!(err.to_string().contains("PJRT unavailable"));
+    }
+
+    #[test]
+    fn literal_construction_is_inert() {
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert!(l.to_tuple1().is_err());
+        assert!(l.to_tuple3().is_err());
+    }
+}
