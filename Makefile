@@ -8,11 +8,13 @@
 #   make check-pjrt  typecheck the PJRT-gated code paths
 #   make bench       run every custom-harness bench (MEMBIG_BENCH_SCALE=k
 #                    divides workload sizes for quick runs)
+#   make bench-smoke tiny-N run of the analytics + server benches — catches
+#                    bench bit-rot fast (wired into CI)
 #   make clean       drop build + bench outputs
 
 ARTIFACTS_DIR := $(abspath rust/artifacts)
 
-.PHONY: artifacts build test check-pjrt bench clean
+.PHONY: artifacts build test check-pjrt bench bench-smoke clean
 
 artifacts:
 	cd python && python -m compile.aot --out $(ARTIFACTS_DIR)
@@ -28,6 +30,12 @@ check-pjrt:
 
 bench:
 	cd rust && cargo bench
+
+# analytics is compile-smoked only (its runtime body is pjrt-gated and
+# prints a skip line under default features); hashtable + server_throughput
+# actually execute at tiny N.
+bench-smoke:
+	cd rust && MEMBIG_BENCH_SCALE=100 cargo bench --bench analytics --bench hashtable --bench server_throughput
 
 clean:
 	cd rust && cargo clean

@@ -1,7 +1,9 @@
 //! One-server architecture demo (paper §4.3): serve a live inventory over
 //! TCP from a single process — reads, updates, aggregate stats and
 //! PJRT-backed analytics — then benchmark it with concurrent clients
-//! running a read-heavy trace and report throughput + latency percentiles.
+//! running a read-heavy trace (single verbs vs pipelined MGET/MUPDATE
+//! batches) and report throughput + latency percentiles and the server's
+//! own connection/verb metrics via `STATS SERVER`.
 //!
 //! ```bash
 //! cargo run --release --example bookstore_server
@@ -12,13 +14,14 @@ use std::sync::Arc;
 use membig::memstore::ShardedStore;
 use membig::metrics::Histogram;
 use membig::runtime::AnalyticsService;
-use membig::server::{Client, Server};
+use membig::server::{Client, Server, ServerConfig};
 use membig::util::fmt::{commas, human_duration, rate};
 use membig::workload::gen::DatasetSpec;
 use membig::workload::trace::{generate_trace, Mix, Op};
 
 const CLIENTS: usize = 8;
 const OPS_PER_CLIENT: usize = 5_000;
+const BATCH_GROUP: usize = 64;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     // Build the store (the "database server" of the paper's one-server setup).
@@ -42,8 +45,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         }
     };
 
-    let handle = Server::new(store.clone(), analytics).spawn("127.0.0.1:0")?;
-    println!("serving on {}\n", handle.addr);
+    // Bounded worker pool: CLIENTS workers so the demo's clients never
+    // queue behind each other, with admission control past 64 sockets.
+    let cfg = ServerConfig { workers: CLIENTS, max_conns: 64, ..Default::default() };
+    let handle = Server::with_config(store.clone(), analytics, cfg).spawn("127.0.0.1:0")?;
+    println!("serving on {} ({} pool workers)\n", handle.addr, CLIENTS);
     let addr = handle.addr;
 
     // Concurrent clients replay a read-heavy trace.
@@ -92,10 +98,80 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         human_duration(std::time::Duration::from_nanos(snap.max_ns)),
     );
 
-    // One analytics request through the same front door.
+    // Same ops again, grouped into pipelined batch verbs: GETs ride MGET,
+    // updates ride MUPDATE — one round trip per BATCH_GROUP ops and one
+    // shard-lock acquisition per touched shard. Note the trade: ops are
+    // reordered within each buffering window (reads flush before writes),
+    // which is what batching clients accept in exchange for the round trips.
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let spec = spec.clone();
+            s.spawn(move || {
+                let trace =
+                    generate_trace(&spec, OPS_PER_CLIENT, Mix::READ_HEAVY, 0.99, c as u64);
+                let mut client = Client::connect(addr).expect("connect");
+                let mut gets: Vec<u64> = Vec::with_capacity(BATCH_GROUP);
+                let mut ups: Vec<String> = Vec::with_capacity(BATCH_GROUP);
+                let flush = |client: &mut Client, gets: &mut Vec<u64>, ups: &mut Vec<String>| {
+                    if !gets.is_empty() {
+                        let line = format!(
+                            "MGET {}",
+                            gets.iter().map(|k| k.to_string()).collect::<Vec<_>>().join(" ")
+                        );
+                        let r = client.request(&line).expect("mget");
+                        assert!(r.starts_with("OK"), "unexpected response: {r}");
+                        gets.clear();
+                    }
+                    if !ups.is_empty() {
+                        let r = client
+                            .request(&format!("MUPDATE {}", ups.join(";")))
+                            .expect("mupdate");
+                        assert!(r.starts_with("OK applied="), "unexpected response: {r}");
+                        ups.clear();
+                    }
+                };
+                for op in trace {
+                    match op {
+                        Op::Get(k) => gets.push(k),
+                        Op::Update(u) => ups.push(format!(
+                            "{} {} {}",
+                            u.isbn13, u.new_price_cents, u.new_quantity
+                        )),
+                        Op::Stats => {
+                            // STATS has no batch form — issue it inline so
+                            // both phases execute the same ops (modulo the
+                            // in-window reordering noted above).
+                            let r = client.request("STATS").expect("stats");
+                            assert!(r.starts_with("OK count="), "unexpected response: {r}");
+                        }
+                    }
+                    if gets.len() >= BATCH_GROUP || ups.len() >= BATCH_GROUP {
+                        flush(&mut client, &mut gets, &mut ups);
+                    }
+                }
+                flush(&mut client, &mut gets, &mut ups);
+                let _ = client.request("QUIT");
+            });
+        }
+    });
+    let batched = t0.elapsed();
+    println!(
+        "\nsame workload via MGET/MUPDATE batches of {BATCH_GROUP}: {} ({})",
+        human_duration(batched),
+        rate(total_ops, batched)
+    );
+    println!(
+        "pipelining speedup: {:.1}x",
+        elapsed.as_secs_f64() / batched.as_secs_f64()
+    );
+
+    // Analytics + the server's own metrics through the same front door.
     let mut client = Client::connect(addr)?;
     let resp = client.request("ANALYTICS")?;
     println!("\nANALYTICS → {resp}");
+    let resp = client.request("STATS SERVER")?;
+    println!("STATS SERVER → {resp}");
     let _ = client.request("QUIT");
 
     handle.shutdown();

@@ -194,6 +194,10 @@ pub struct EngineConfig {
     pub writeback: bool,
     /// TCP bind address for `membig serve`.
     pub bind: String,
+    /// Request worker threads for `membig serve`. 0 = max(cores, 4).
+    pub server_workers: usize,
+    /// Admission limit on concurrent server connections.
+    pub server_max_conns: usize,
 }
 
 impl Default for EngineConfig {
@@ -212,6 +216,8 @@ impl Default for EngineConfig {
             seed: 0xB00C,
             writeback: false,
             bind: "127.0.0.1:7979".to_string(),
+            server_workers: 0,
+            server_max_conns: 1024,
         }
     }
 }
@@ -253,6 +259,8 @@ impl EngineConfig {
         if let Some(v) = get("server", "bind") {
             self.bind = v.to_string();
         }
+        set!(self.server_workers, "server", "workers", usize);
+        set!(self.server_max_conns, "server", "max_conns", usize);
         set!(self.disk.avg_seek_ms, "disk", "avg_seek_ms", f64);
         set!(self.disk.rotational_ms, "disk", "rotational_ms", f64);
         set!(self.disk.transfer_mb_s, "disk", "transfer_mb_s", f64);
@@ -278,6 +286,9 @@ impl EngineConfig {
         }
         if !(self.disk.scale >= 0.0) {
             return Err("disk.scale must be >= 0".into());
+        }
+        if self.server_max_conns == 0 {
+            return Err("server.max_conns must be > 0".into());
         }
         Ok(self)
     }
@@ -408,6 +419,11 @@ scale = 0.001
 
 [pipeline]
 batch_size = 1024
+
+[server]
+bind = "0.0.0.0:7000"
+workers = 3
+max_conns = 9
 "#;
         let ini = parse_ini(text).unwrap();
         assert_eq!(ini.get("engine", "threads"), Some("8"));
@@ -418,6 +434,16 @@ batch_size = 1024
         assert_eq!(cfg.data_dir, PathBuf::from("/tmp/membig"));
         assert_eq!(cfg.batch_size, 1024);
         assert!((cfg.disk.scale - 0.001).abs() < 1e-12);
+        assert_eq!(cfg.bind, "0.0.0.0:7000");
+        assert_eq!(cfg.server_workers, 3);
+        assert_eq!(cfg.server_max_conns, 9);
+    }
+
+    #[test]
+    fn server_max_conns_zero_rejected() {
+        let mut c = EngineConfig::default();
+        c.server_max_conns = 0;
+        assert!(c.validated().is_err());
     }
 
     #[test]

@@ -17,7 +17,7 @@ use membig::config::{Args, EngineConfig, FlagSpec};
 use membig::coordinator::{Coordinator, Workbench};
 use membig::coordinator::report::{render_figure6, render_table1, RunReport};
 use membig::runtime::AnalyticsService;
-use membig::server::Server;
+use membig::server::{Server, ServerConfig};
 use membig::util::fmt::{commas, human_duration, paper_hms};
 use membig::workload::gen::DatasetSpec;
 
@@ -36,6 +36,8 @@ fn spec() -> Vec<FlagSpec> {
         FlagSpec { name: "disk-scale", value: "F", help: "fraction of modeled disk delay to sleep (default 0)" },
         FlagSpec { name: "cache-pages", value: "N", help: "disk store page-cache capacity" },
         FlagSpec { name: "bind", value: "ADDR", help: "serve: TCP bind address" },
+        FlagSpec { name: "workers", value: "N", help: "serve: request worker threads (default = max(cores, 4))" },
+        FlagSpec { name: "max-conns", value: "N", help: "serve: max concurrent connections (default 1024)" },
         FlagSpec { name: "writeback", value: "", help: "persist memstore back to disk after update" },
         FlagSpec { name: "json", value: "", help: "emit machine-readable JSON report" },
         FlagSpec { name: "help", value: "", help: "show this help" },
@@ -162,14 +164,22 @@ fn run() -> Result<(), String> {
             let table = wb.ensure_table(&cfg).map_err(|e| e.to_string())?;
             let store = coord.load_only(&table).map_err(|e| e.to_string())?;
             let engine = start_analytics(&cfg, args.get("backend"))?;
+            let mut server_cfg = ServerConfig::default();
+            if cfg.server_workers > 0 {
+                server_cfg.workers = cfg.server_workers;
+            }
+            server_cfg.max_conns = cfg.server_max_conns;
             println!(
-                "serving {} records on {} (analytics: {})",
+                "serving {} records on {} (analytics: {}; workers: {}; max conns: {})",
                 commas(store.len() as u64),
                 cfg.bind,
-                engine.as_deref().map(AnalyticsService::backend_name).unwrap_or("disabled")
+                engine.as_deref().map(AnalyticsService::backend_name).unwrap_or("disabled"),
+                server_cfg.workers,
+                server_cfg.max_conns
             );
-            let handle =
-                Server::new(store, engine).spawn(&cfg.bind).map_err(|e| e.to_string())?;
+            let handle = Server::with_config(store, engine, server_cfg)
+                .spawn(&cfg.bind)
+                .map_err(|e| e.to_string())?;
             println!("listening on {} — Ctrl-C to stop", handle.addr);
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -243,6 +253,12 @@ fn build_config(args: &Args) -> Result<EngineConfig, String> {
     }
     if let Some(b) = args.get("bind") {
         cfg.bind = b.to_string();
+    }
+    if let Some(w) = args.get_parsed::<usize>("workers").map_err(|e| e.to_string())? {
+        cfg.server_workers = w;
+    }
+    if let Some(m) = args.get_parsed::<usize>("max-conns").map_err(|e| e.to_string())? {
+        cfg.server_max_conns = m;
     }
     if args.has("writeback") {
         cfg.writeback = true;

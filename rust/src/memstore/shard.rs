@@ -72,6 +72,53 @@ impl ShardedStore {
         self.shard(self.route(key)).remove(key)
     }
 
+    /// Batched point reads: pre-route every key, then take each touched
+    /// shard lock exactly once (shard-affine dispatch, paper §4.2).
+    /// Results come back in input order.
+    pub fn get_many(&self, keys: &[u64]) -> Vec<Option<BookRecord>> {
+        let mut out = vec![None; keys.len()];
+        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (i, &k) in keys.iter().enumerate() {
+            by_shard[self.route(k)].push(i);
+        }
+        for (s, idxs) in by_shard.iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let shard = self.shard(s);
+            for &i in idxs {
+                out[i] = shard.get(keys[i]);
+            }
+        }
+        out
+    }
+
+    /// Batched updates with one lock acquisition per touched shard.
+    /// Duplicate keys within a batch apply in input order (same shard ⇒
+    /// ascending index). Returns `(applied, missed)`.
+    pub fn apply_many(&self, ups: &[StockUpdate]) -> (u64, u64) {
+        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (i, u) in ups.iter().enumerate() {
+            by_shard[self.route(u.isbn13)].push(i);
+        }
+        let (mut applied, mut missed) = (0u64, 0u64);
+        for (s, idxs) in by_shard.iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let mut shard = self.shard(s);
+            for &i in idxs {
+                let u = &ups[i];
+                if shard.update(u.isbn13, |r| u.apply_to(r)) {
+                    applied += 1;
+                } else {
+                    missed += 1;
+                }
+            }
+        }
+        (applied, missed)
+    }
+
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
@@ -205,6 +252,43 @@ mod tests {
         }
         assert_eq!(s.len(), 1_000);
         assert_eq!(s.shard_sizes().iter().sum::<usize>(), 1_000);
+    }
+
+    #[test]
+    fn get_many_matches_sequential_gets_in_order() {
+        let s = ShardedStore::new(8, 1 << 10);
+        let spec = DatasetSpec { records: 2_000, ..Default::default() };
+        for r in spec.iter() {
+            s.insert(r);
+        }
+        let mut keys: Vec<u64> = (0..500).map(|i| spec.record_at(i).isbn13).collect();
+        keys.push(42); // guaranteed miss
+        keys.push(spec.record_at(0).isbn13); // duplicate key
+        let batch = s.get_many(&keys);
+        assert_eq!(batch.len(), keys.len());
+        for (i, k) in keys.iter().enumerate() {
+            assert_eq!(batch[i], s.get(*k), "index {i} key {k}");
+        }
+    }
+
+    #[test]
+    fn apply_many_counts_and_matches_sequential() {
+        let s = ShardedStore::new(4, 1 << 10);
+        for k in 1..=100u64 {
+            s.insert(BookRecord::new(k, 1, 1));
+        }
+        let mut ups: Vec<StockUpdate> = (1..=100u64)
+            .map(|k| StockUpdate { isbn13: k, new_price_cents: k * 10, new_quantity: k as u32 })
+            .collect();
+        ups.push(StockUpdate { isbn13: 9999, new_price_cents: 1, new_quantity: 1 }); // miss
+        // Duplicate key: later entry must win (input order within a batch).
+        ups.push(StockUpdate { isbn13: 7, new_price_cents: 777, new_quantity: 7 });
+        let (applied, missed) = s.apply_many(&ups);
+        assert_eq!(applied, 101);
+        assert_eq!(missed, 1);
+        assert_eq!(s.get(7).unwrap().price_cents, 777);
+        assert_eq!(s.get(50).unwrap().price_cents, 500);
+        assert_eq!(s.len(), 100);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! pipeline and benches; all types are thread-safe and allocation-free on
 //! the record path.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -38,6 +38,35 @@ impl Counter {
 
     pub fn reset(&self) {
         self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gauge
+// ---------------------------------------------------------------------------
+
+/// Up/down gauge (e.g. currently-active connections). Signed so a stray
+/// extra `dec` shows up as a negative reading instead of wrapping to 2^64.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge(AtomicI64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
     }
 }
 
@@ -345,6 +374,116 @@ impl EngineMetrics {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Server metrics bundle
+// ---------------------------------------------------------------------------
+
+/// Metrics for the TCP front end: connection lifecycle counters plus
+/// per-verb latency and batch-size histograms. One instance per server,
+/// shared by the acceptor and every pool worker.
+#[derive(Default)]
+pub struct ServerMetrics {
+    pub conns_accepted: Counter,
+    pub conns_rejected: Counter,
+    pub conns_active: Gauge,
+    pub accept_errors: Counter,
+    pub requests: Counter,
+    /// Keys (MGET) / update groups (MUPDATE) / lines (BATCH) per batch verb.
+    pub batch_sizes: Histogram,
+    pub get_latency: Histogram,
+    pub update_latency: Histogram,
+    pub mget_latency: Histogram,
+    pub mupdate_latency: Histogram,
+    pub batch_latency: Histogram,
+    pub stats_latency: Histogram,
+    pub analytics_latency: Histogram,
+    pub other_latency: Histogram,
+}
+
+impl ServerMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The latency histogram charged for a request verb.
+    pub fn latency_for(&self, verb: &str) -> &Histogram {
+        match verb {
+            "GET" => &self.get_latency,
+            "UPDATE" => &self.update_latency,
+            "MGET" => &self.mget_latency,
+            "MUPDATE" => &self.mupdate_latency,
+            "BATCH" => &self.batch_latency,
+            "STATS" => &self.stats_latency,
+            "ANALYTICS" => &self.analytics_latency,
+            _ => &self.other_latency,
+        }
+    }
+
+    fn verbs(&self) -> [(&'static str, &Histogram); 8] {
+        [
+            ("get", &self.get_latency),
+            ("update", &self.update_latency),
+            ("mget", &self.mget_latency),
+            ("mupdate", &self.mupdate_latency),
+            ("batch", &self.batch_latency),
+            ("stats", &self.stats_latency),
+            ("analytics", &self.analytics_latency),
+            ("other", &self.other_latency),
+        ]
+    }
+
+    /// Connection-counter suffix appended to the basic `STATS` line.
+    pub fn stats_suffix(&self) -> String {
+        format!(
+            " conns_accepted={} conns_active={} conns_rejected={} accept_errors={} requests={}",
+            self.conns_accepted.get(),
+            self.conns_active.get(),
+            self.conns_rejected.get(),
+            self.accept_errors.get(),
+            self.requests.get()
+        )
+    }
+
+    /// One-line detailed report for `STATS SERVER`: connection counters,
+    /// batch-size distribution and per-verb latency percentiles.
+    pub fn stats_server_line(&self) -> String {
+        // Reuse stats_suffix for the connection counters so STATS and
+        // STATS SERVER can never report different counter sets.
+        let mut s = format!(
+            "OK{} batches={} batch_p50={} batch_max={}",
+            self.stats_suffix(),
+            self.batch_sizes.count(),
+            self.batch_sizes.quantile(0.5),
+            self.batch_sizes.max()
+        );
+        for (name, h) in self.verbs() {
+            s.push_str(&format!(
+                " {name}_n={} {name}_p50_ns={} {name}_p99_ns={}",
+                h.count(),
+                h.quantile(0.5),
+                h.quantile(0.99)
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("conns_accepted", Json::num(self.conns_accepted.get() as f64)),
+            ("conns_rejected", Json::num(self.conns_rejected.get() as f64)),
+            ("conns_active", Json::num(self.conns_active.get() as f64)),
+            ("accept_errors", Json::num(self.accept_errors.get() as f64)),
+            ("requests", Json::num(self.requests.get() as f64)),
+            ("batch_sizes", self.batch_sizes.snapshot().to_json()),
+            ("get_latency", self.get_latency.snapshot().to_json()),
+            ("update_latency", self.update_latency.snapshot().to_json()),
+            ("mget_latency", self.mget_latency.snapshot().to_json()),
+            ("mupdate_latency", self.mupdate_latency.snapshot().to_json()),
+            ("batch_latency", self.batch_latency.snapshot().to_json()),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -449,5 +588,41 @@ mod tests {
         assert_eq!(j.get("records_updated").unwrap().as_f64().unwrap(), 5.0);
         let text = m.render();
         assert!(text.contains("updated=5"));
+    }
+
+    #[test]
+    fn gauge_up_down() {
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.dec();
+        g.dec();
+        assert_eq!(g.get(), -1, "extra dec must be visible, not wrap");
+    }
+
+    #[test]
+    fn server_metrics_routes_verbs_and_renders() {
+        let m = ServerMetrics::new();
+        m.latency_for("GET").record(100);
+        m.latency_for("MUPDATE").record(200);
+        m.latency_for("NOPE").record(300);
+        assert_eq!(m.get_latency.count(), 1);
+        assert_eq!(m.mupdate_latency.count(), 1);
+        assert_eq!(m.other_latency.count(), 1);
+        m.conns_accepted.inc();
+        m.conns_active.inc();
+        m.batch_sizes.record(64);
+        let suffix = m.stats_suffix();
+        assert!(suffix.contains("conns_accepted=1"), "{suffix}");
+        assert!(suffix.contains("conns_active=1"), "{suffix}");
+        let line = m.stats_server_line();
+        assert!(line.starts_with("OK "), "{line}");
+        assert!(line.contains("batches=1"), "{line}");
+        assert!(line.contains("get_n=1"), "{line}");
+        assert!(line.contains("mupdate_p50_ns="), "{line}");
+        let j = m.to_json();
+        assert_eq!(j.get("conns_accepted").unwrap().as_f64().unwrap(), 1.0);
     }
 }

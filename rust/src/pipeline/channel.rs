@@ -137,7 +137,12 @@ impl<T> Clone for Receiver<T> {
 impl<T> Drop for Sender<T> {
     fn drop(&mut self) {
         if self.shared.senders.fetch_sub(1, Ordering::AcqRel) == 1 {
-            // Last sender: wake all receivers so they observe Closed.
+            // Last sender: wake all receivers so they observe Closed. The
+            // queue lock must be held while notifying — without it, a
+            // receiver that has already checked `senders` (nonzero) but not
+            // yet parked on the condvar misses this wakeup forever and
+            // `recv` hangs instead of returning Closed.
+            let _q = self.shared.queue.lock().unwrap();
             self.shared.not_empty.notify_all();
         }
     }
@@ -146,7 +151,9 @@ impl<T> Drop for Sender<T> {
 impl<T> Drop for Receiver<T> {
     fn drop(&mut self) {
         if self.shared.receivers.fetch_sub(1, Ordering::AcqRel) == 1 {
-            // Last receiver: wake all senders so they observe Closed.
+            // Last receiver: wake all senders so they observe Closed (lock
+            // held for the same lost-wakeup reason as Sender::drop).
+            let _q = self.shared.queue.lock().unwrap();
             self.shared.not_full.notify_all();
         }
     }
@@ -234,6 +241,26 @@ mod tests {
         assert_eq!(all.len(), SENDERS * PER_SENDER);
         all.dedup();
         assert_eq!(all.len(), SENDERS * PER_SENDER, "duplicates delivered");
+    }
+
+    #[test]
+    fn close_wakeup_never_lost_under_race() {
+        // Stress the close-vs-park window: the receiver may or may not be
+        // waiting on the condvar when the last sender drops. A lost wakeup
+        // hangs this test (visible as a suite timeout).
+        for _ in 0..200 {
+            let (tx, rx) = bounded::<u32>(1);
+            let t = std::thread::spawn(move || rx.recv());
+            drop(tx);
+            assert_eq!(t.join().unwrap(), Err(RecvError::Closed));
+        }
+        for _ in 0..200 {
+            let (tx, rx) = bounded::<u32>(1);
+            tx.send(0).unwrap(); // fill so the sender side must block
+            let t = std::thread::spawn(move || tx.send(1));
+            drop(rx);
+            assert_eq!(t.join().unwrap(), Err(SendError(1)));
+        }
     }
 
     #[test]

@@ -1,0 +1,134 @@
+//! Batch verbs for the line protocol: parsing and shard-affine execution.
+//!
+//! `MGET` and `MUPDATE` carry many keys in one request line; execution
+//! pre-routes every key with [`ShardedStore::route`] (via
+//! [`ShardedStore::get_many`] / [`ShardedStore::apply_many`]) and takes each
+//! shard lock once per batch instead of once per key — the paper's §4.2
+//! group-at-a-time dispatch applied to the request path. `BATCH <n>` framing
+//! (n follow-up lines, n response lines, one socket write) lives in the
+//! connection loop in `server::handle_client`; per-line execution still goes
+//! through `dispatch`.
+
+use crate::memstore::ShardedStore;
+use crate::workload::record::StockUpdate;
+
+/// Upper bound on keys per MGET, update groups per MUPDATE and lines per
+/// BATCH — caps per-request memory and shard lock hold time.
+pub const MAX_BATCH: usize = 10_000;
+
+/// Upper bound on the *total* bytes a `BATCH` may buffer before execution.
+/// The per-line cap alone would still let MAX_BATCH near-cap lines pin
+/// gigabytes on one connection.
+pub const MAX_BATCH_BYTES: usize = 4 << 20;
+
+/// Parse the argument tail of `MGET <k1> <k2> ...` into keys.
+pub fn parse_mget(rest: &str) -> Result<Vec<u64>, String> {
+    let mut keys = Vec::new();
+    for tok in rest.split_ascii_whitespace() {
+        match tok.parse::<u64>() {
+            Ok(k) => keys.push(k),
+            Err(_) => return Err(format!("MGET: bad key '{tok}'")),
+        }
+    }
+    if keys.is_empty() {
+        return Err("MGET expects at least one <isbn13> key".into());
+    }
+    if keys.len() > MAX_BATCH {
+        return Err(format!("MGET limited to {MAX_BATCH} keys"));
+    }
+    Ok(keys)
+}
+
+/// Parse the argument tail of `MUPDATE <k c q>;<k c q>;...` — semicolon-
+/// separated groups, whitespace-separated fields. A trailing `;` is allowed.
+pub fn parse_mupdate(rest: &str) -> Result<Vec<StockUpdate>, String> {
+    let mut ups = Vec::new();
+    for group in rest.split(';') {
+        let group = group.trim();
+        if group.is_empty() {
+            continue;
+        }
+        let mut t = group.split_ascii_whitespace();
+        let key = t.next().and_then(|s| s.parse::<u64>().ok());
+        let cents = t.next().and_then(|s| s.parse::<u64>().ok());
+        let qty = t.next().and_then(|s| s.parse::<u32>().ok());
+        match (key, cents, qty) {
+            (Some(isbn13), Some(new_price_cents), Some(new_quantity)) if t.next().is_none() => {
+                ups.push(StockUpdate { isbn13, new_price_cents, new_quantity });
+            }
+            _ => return Err(format!("MUPDATE: bad group '{group}' (expect <isbn13> <cents> <qty>)")),
+        }
+    }
+    if ups.is_empty() {
+        return Err("MUPDATE expects at least one <isbn13> <cents> <qty> group".into());
+    }
+    if ups.len() > MAX_BATCH {
+        return Err(format!("MUPDATE limited to {MAX_BATCH} groups"));
+    }
+    Ok(ups)
+}
+
+/// Execute a parsed MGET: one response line, entries in key order —
+/// `OK <n> <price,qty|MISS> ...`.
+pub fn exec_mget(store: &ShardedStore, keys: &[u64]) -> String {
+    use std::fmt::Write;
+    let vals = store.get_many(keys);
+    let mut out = String::with_capacity(8 + vals.len() * 12);
+    // write! appends straight into `out` — no per-entry temporaries on the
+    // hot batch path (infallible for String).
+    let _ = write!(out, "OK {}", vals.len());
+    for v in &vals {
+        match v {
+            Some(r) => {
+                let _ = write!(out, " {},{}", r.price_cents, r.quantity);
+            }
+            None => out.push_str(" MISS"),
+        }
+    }
+    out
+}
+
+/// Execute a parsed MUPDATE: `OK applied=<a> missed=<m>`.
+pub fn exec_mupdate(store: &ShardedStore, ups: &[StockUpdate]) -> String {
+    let (applied, missed) = store.apply_many(ups);
+    format!("OK applied={applied} missed={missed}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::record::BookRecord;
+
+    #[test]
+    fn parse_mget_accepts_keys_rejects_junk() {
+        assert_eq!(parse_mget("1 2 3").unwrap(), vec![1, 2, 3]);
+        assert!(parse_mget("").is_err());
+        assert!(parse_mget("1 two 3").is_err());
+        assert!(parse_mget("-1").is_err());
+    }
+
+    #[test]
+    fn parse_mupdate_groups() {
+        let ups = parse_mupdate("1 100 5;2 200 6; 3 300 7 ;").unwrap();
+        assert_eq!(ups.len(), 3);
+        assert_eq!(ups[1], StockUpdate { isbn13: 2, new_price_cents: 200, new_quantity: 6 });
+        assert!(parse_mupdate("").is_err());
+        assert!(parse_mupdate("1 100").is_err());
+        assert!(parse_mupdate("1 100 5 junk").is_err());
+        assert!(parse_mupdate("1 100 5;bad").is_err());
+    }
+
+    #[test]
+    fn exec_roundtrip_preserves_order_and_counts() {
+        let store = ShardedStore::new(4, 64);
+        store.insert(BookRecord::new(10, 100, 1));
+        store.insert(BookRecord::new(20, 200, 2));
+        let resp = exec_mupdate(
+            &store,
+            &parse_mupdate("10 111 9;999 1 1;20 222 8").unwrap(),
+        );
+        assert_eq!(resp, "OK applied=2 missed=1");
+        let resp = exec_mget(&store, &parse_mget("20 999 10").unwrap());
+        assert_eq!(resp, "OK 3 222,8 MISS 111,9");
+    }
+}

@@ -2,49 +2,119 @@
 //! memstore, demonstrating that a single machine serves reads, updates and
 //! PJRT-backed analytics with no distributed infrastructure.
 //!
-//! Protocol (one request per line, space-separated, ASCII):
+//! Protocol (one request per line, space-separated, ASCII; trailing tokens
+//! after a complete request are rejected):
 //! ```text
-//! GET <isbn13>                      → OK <price_cents> <qty> | MISS
-//! UPDATE <isbn13> <cents> <qty>     → OK | MISS
-//! STATS                             → OK count=<n> value_cents=<v>
-//! ANALYTICS                         → OK value=<dollars> mean_price=<p> ... (analytics backend)
-//! PING                              → PONG
-//! QUIT                              → BYE (closes connection)
+//! GET <isbn13>                  → OK <price_cents> <qty> | MISS
+//! UPDATE <isbn13> <cents> <qty> → OK | MISS
+//! MGET <k1> <k2> ...            → OK <n> <price,qty|MISS> ...  (input order)
+//! MUPDATE <k c q>;<k c q>;...   → OK applied=<a> missed=<m>
+//! BATCH <n>                     → n follow-up request lines, answered with
+//!                                 n response lines in one socket write
+//! STATS                         → OK count=<n> value_cents=<v> conns_...
+//! STATS SERVER                  → OK <conn counters + per-verb latency>
+//! ANALYTICS                     → OK value=<dollars> ... (analytics backend)
+//! PING                          → PONG
+//! QUIT                          → BYE (closes connection)
 //! ```
-//! Unknown/malformed input → `ERR <reason>`. One thread per connection:
-//! the store is shard-locked, so concurrent clients scale like the
-//! pipeline's workers.
+//! Unknown/malformed input → `ERR <reason>`.
+//!
+//! Topology: one acceptor thread feeds a **bounded worker pool**
+//! ([`pool::WorkerPool`]) over a `pipeline::channel` queue — thread count is
+//! fixed by [`ServerConfig::workers`], connections past
+//! [`ServerConfig::max_conns`] are refused with `ERR server busy`, and the
+//! batch verbs execute shard-affinely ([`batch`]): keys are pre-routed with
+//! `ShardedStore::route` and each shard lock is taken once per batch, so a
+//! loaded front end scales like the pipeline's workers instead of one
+//! thread per socket.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+pub mod batch;
+pub mod pool;
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::memstore::ShardedStore;
+use crate::metrics::ServerMetrics;
 use crate::runtime::AnalyticsService;
 use crate::workload::record::StockUpdate;
+use pool::WorkerPool;
+
+/// Tunables for the request front end.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Pool worker threads; each owns one connection at a time.
+    pub workers: usize,
+    /// Admission limit on live connections (queued + in-flight); beyond it
+    /// new sockets get `ERR server busy` and are closed.
+    pub max_conns: usize,
+    /// Per-connection read timeout — also the granularity at which idle
+    /// connections notice shutdown.
+    pub read_timeout: Duration,
+    /// A connection that completes no request within this window is closed.
+    /// Workers own their connection while serving it, so without this limit
+    /// `workers` idle clients would starve every queued connection.
+    pub idle_timeout: Duration,
+    /// Per-syscall socket write timeout. A client that stops reading fills
+    /// its TCP window and would otherwise pin a worker (and hang shutdown)
+    /// in `write_all` forever.
+    pub write_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        ServerConfig {
+            // Network front end is IO-bound: keep a floor of 4 so small
+            // hosts still overlap slow clients.
+            workers: cores.max(4),
+            max_conns: 1024,
+            read_timeout: Duration::from_millis(200),
+            idle_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(10),
+        }
+    }
+}
 
 pub struct Server {
     store: Arc<ShardedStore>,
     engine: Option<Arc<AnalyticsService>>,
     stop: Arc<AtomicBool>,
-    pub requests: Arc<AtomicU64>,
+    pub metrics: Arc<ServerMetrics>,
+    config: ServerConfig,
 }
 
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     join: Option<std::thread::JoinHandle<()>>,
-    pub requests: Arc<AtomicU64>,
+    pub metrics: Arc<ServerMetrics>,
 }
 
 impl Server {
     pub fn new(store: Arc<ShardedStore>, engine: Option<Arc<AnalyticsService>>) -> Self {
+        Self::with_config(store, engine, ServerConfig::default())
+    }
+
+    pub fn with_config(
+        store: Arc<ShardedStore>,
+        engine: Option<Arc<AnalyticsService>>,
+        mut config: ServerConfig,
+    ) -> Self {
+        // Clamp here so the admission check and the pool agree: a raw
+        // max_conns of 0 would otherwise reject every connection while the
+        // pool still stood up a 1-slot queue.
+        config.workers = config.workers.max(1);
+        config.max_conns = config.max_conns.max(1);
         Server {
             store,
             engine,
             stop: Arc::new(AtomicBool::new(false)),
-            requests: Arc::new(AtomicU64::new(0)),
+            metrics: Arc::new(ServerMetrics::new()),
+            config,
         }
     }
 
@@ -53,41 +123,74 @@ impl Server {
         let listener = TcpListener::bind(bind)?;
         let addr = listener.local_addr()?;
         let stop = self.stop.clone();
-        let requests = self.requests.clone();
+        let metrics = self.metrics.clone();
         let join = std::thread::spawn(move || self.accept_loop(listener));
-        Ok(ServerHandle { addr, stop, join: Some(join), requests })
+        Ok(ServerHandle { addr, stop, join: Some(join), metrics })
     }
 
     fn accept_loop(self, listener: TcpListener) {
-        listener.set_nonblocking(false).ok();
-        // Accept with a timeout-ish pattern: check `stop` between clients by
-        // using a short socket timeout on accept via non-blocking + sleep.
+        // Non-blocking accept + short sleep so `stop` is observed between
+        // clients without a wakeup pipe.
         listener.set_nonblocking(true).ok();
-        let mut workers = Vec::new();
+        // Queue capacity == max_conns: admission control guarantees at most
+        // max_conns live connections, so `submit` never blocks the acceptor.
+        let pool = {
+            let store = self.store.clone();
+            let engine = self.engine.clone();
+            let stop = self.stop.clone();
+            let metrics = self.metrics.clone();
+            let cfg = self.config.clone();
+            WorkerPool::new(
+                self.config.workers,
+                self.config.max_conns,
+                move |stream: TcpStream| {
+                    // Guard (not a trailing call) so the admission slot is
+                    // released even if request handling panics.
+                    let _guard = ActiveGuard(&metrics);
+                    let _ = handle_client(stream, &store, engine.as_ref(), &stop, &metrics, &cfg);
+                },
+            )
+        };
+        let base = Duration::from_millis(5);
+        let mut backoff = base;
         while !self.stop.load(Ordering::Acquire) {
             match listener.accept() {
                 Ok((stream, _)) => {
-                    let store = self.store.clone();
-                    let engine = self.engine.clone();
-                    let stop = self.stop.clone();
-                    let requests = self.requests.clone();
-                    workers.push(std::thread::spawn(move || {
-                        let _ = handle_client(stream, &store, engine.as_ref(), &stop, &requests);
-                    }));
+                    backoff = base;
+                    if self.metrics.conns_active.get() >= self.config.max_conns as i64 {
+                        self.metrics.conns_rejected.inc();
+                        reject_busy(stream);
+                        continue;
+                    }
+                    self.metrics.conns_accepted.inc();
+                    self.metrics.conns_active.inc();
+                    if pool.submit(stream).is_err() {
+                        // Pool already shut down (stop raced this accept).
+                        self.metrics.conns_active.dec();
+                    }
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    std::thread::sleep(base);
                 }
-                Err(_) => break,
+                Err(_) => {
+                    // Transient accept failure (EMFILE, ECONNABORTED, ...):
+                    // record it and back off — only `stop` ends the loop.
+                    self.metrics.accept_errors.inc();
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(500));
+                }
             }
         }
-        for w in workers {
-            let _ = w.join();
-        }
+        drop(pool); // closes the queue, drains it, joins every worker
     }
 }
 
 impl ServerHandle {
+    /// Total requests executed (single verbs + batch payload lines).
+    pub fn requests(&self) -> u64 {
+        self.metrics.requests.get()
+    }
+
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Release);
         if let Some(j) = self.join.take() {
@@ -105,61 +208,299 @@ impl Drop for ServerHandle {
     }
 }
 
+/// Decrements `conns_active` on drop — including a panicking unwind, so a
+/// crashed handler can never leak an admission slot.
+struct ActiveGuard<'a>(&'a ServerMetrics);
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.conns_active.dec();
+    }
+}
+
+/// Turn away a connection over the admission limit: answer, half-close, and
+/// briefly drain so a client that pipelined a request at connect still
+/// receives the busy line instead of an RST that may discard it. Runs on a
+/// short-lived helper thread — the acceptor must never block on a rejected
+/// peer, especially under the overload that causes rejections.
+fn reject_busy(stream: TcpStream) {
+    let reject = move || {
+        let mut stream = stream;
+        stream.set_nonblocking(false).ok();
+        let _ = stream.write_all(b"ERR server busy (connection limit reached)\n");
+        let _ = stream.shutdown(Shutdown::Write);
+        // One short read only — never a wait the client controls.
+        stream.set_read_timeout(Some(Duration::from_millis(10))).ok();
+        let mut sink = [0u8; 256];
+        let _ = stream.read(&mut sink);
+    };
+    // If the spawn itself fails (thread exhaustion) the closure is dropped
+    // and with it the stream: a hard close, which is the right fallback.
+    let _ = std::thread::Builder::new().name("server-reject".into()).spawn(reject);
+}
+
+enum ReadOutcome {
+    Line,
+    Eof,
+    Stopped,
+    /// No complete request within the idle window.
+    IdleTimeout,
+}
+
+/// Hard cap on one request line. MGET at MAX_BATCH keys is ~140 KiB, so
+/// 1 MiB leaves ample headroom while bounding what a newline-less client
+/// can pin in memory per connection.
+const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Read one request line, preserving a partially-received request across
+/// read-timeout ticks: a slow client may deliver `"GET 12"` now and
+/// `"34\n"` after the timeout, and both halves belong to one request.
+/// `line` is appended to (never cleared here) — the caller clears it after
+/// consuming a complete line. Checks `stop` each tick. The idle `deadline`
+/// is absolute and caller-supplied: one per request on the main loop, one
+/// shared across a whole BATCH payload (so a drip-feeding client cannot
+/// reset the clock per line).
+///
+/// Reads chunk-at-a-time (`fill_buf`/`consume`) instead of `read_line` so
+/// the [`MAX_LINE_BYTES`] cap is enforced between chunks — a client
+/// streaming forever without a newline gets its connection dropped, not an
+/// unbounded buffer.
+fn read_request_line(
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+    stop: &AtomicBool,
+    deadline: Instant,
+) -> std::io::Result<ReadOutcome> {
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return Ok(ReadOutcome::Stopped);
+        }
+        if Instant::now() >= deadline {
+            return Ok(ReadOutcome::IdleTimeout);
+        }
+        if line.len() > MAX_LINE_BYTES {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+            ));
+        }
+        let (complete, used) = {
+            let buf = match reader.fill_buf() {
+                Ok(b) => b,
+                // Interrupted (EINTR) retries like std's read_line would.
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut
+                        || e.kind() == std::io::ErrorKind::Interrupted =>
+                {
+                    continue
+                }
+                Err(e) => return Err(e),
+            };
+            if buf.is_empty() {
+                // EOF. A non-empty partial (no trailing newline) is still a
+                // request — matches `read_line`'s end-of-stream semantics.
+                return Ok(if line.is_empty() { ReadOutcome::Eof } else { ReadOutcome::Line });
+            }
+            match buf.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    line.push_str(&String::from_utf8_lossy(&buf[..=i]));
+                    (true, i + 1)
+                }
+                None => {
+                    line.push_str(&String::from_utf8_lossy(buf));
+                    (false, buf.len())
+                }
+            }
+        };
+        reader.consume(used);
+        if complete {
+            return Ok(ReadOutcome::Line);
+        }
+    }
+}
+
 fn handle_client(
     stream: TcpStream,
     store: &Arc<ShardedStore>,
     engine: Option<&Arc<AnalyticsService>>,
     stop: &AtomicBool,
-    requests: &AtomicU64,
+    metrics: &ServerMetrics,
+    cfg: &ServerConfig,
 ) -> std::io::Result<()> {
+    // BSD-family kernels hand accepted sockets the listener's O_NONBLOCK;
+    // clear it so the read timeout governs blocking (on Linux a no-op).
+    stream.set_nonblocking(false).ok();
     stream.set_nodelay(true).ok();
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    stream.set_read_timeout(Some(cfg.read_timeout))?;
+    stream.set_write_timeout(Some(cfg.write_timeout))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
     let mut line = String::new();
     loop {
-        if stop.load(Ordering::Acquire) {
-            return Ok(());
-        }
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => return Ok(()), // client closed
-            Ok(_) => {}
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                continue
+        match read_request_line(&mut reader, &mut line, stop, Instant::now() + cfg.idle_timeout)? {
+            ReadOutcome::Line => {}
+            ReadOutcome::Eof | ReadOutcome::Stopped => return Ok(()),
+            ReadOutcome::IdleTimeout => {
+                let _ = out.write_all(b"ERR idle timeout, closing connection\n");
+                return Ok(());
             }
-            Err(e) => return Err(e),
         }
-        requests.fetch_add(1, Ordering::Relaxed);
-        let response = dispatch(line.trim(), store, engine);
+        // Borrow the request out of the read buffer — no per-request copy;
+        // `line` is cleared only after the last use of `req`.
+        let req = line.trim();
+        let verb = req.split_ascii_whitespace().next().unwrap_or("");
+        if verb == "BATCH" {
+            // The framing header is not counted as a request — run_batch
+            // counts each payload line, so `requests` matches executed ops.
+            let quit = run_batch(req, &mut reader, &mut out, store, engine, stop, metrics, cfg)?;
+            line.clear();
+            if quit {
+                return Ok(());
+            }
+            continue;
+        }
+        let response = execute_one(req, store, engine, metrics, false);
         out.write_all(response.as_bytes())?;
         out.write_all(b"\n")?;
-        if line.trim() == "QUIT" {
+        let quit = req == "QUIT";
+        line.clear();
+        if quit {
             return Ok(());
         }
     }
 }
 
+/// Execute one request line with its per-request accounting (request count,
+/// per-verb latency) — shared by the single-request loop and the BATCH
+/// payload loop so the bookkeeping cannot drift between them.
+fn execute_one(
+    req: &str,
+    store: &Arc<ShardedStore>,
+    engine: Option<&Arc<AnalyticsService>>,
+    metrics: &ServerMetrics,
+    in_batch: bool,
+) -> String {
+    metrics.requests.inc();
+    let verb = req.split_ascii_whitespace().next().unwrap_or("");
+    // A nested BATCH payload line dispatches to an ERR; charge it to
+    // `other` so batch_latency keeps whole-group samples only.
+    let verb = if in_batch && verb == "BATCH" { "" } else { verb };
+    let t0 = Instant::now();
+    let response = dispatch_with_metrics(req, store, engine, Some(metrics));
+    metrics.latency_for(verb).record_duration(t0.elapsed());
+    response
+}
+
+/// `BATCH <n>` framing: read `n` follow-up request lines, execute them all,
+/// answer with `n` response lines in **one** socket write — the whole group
+/// costs one round trip. Returns `Ok(true)` when the connection must close
+/// (client vanished mid-batch, shutdown, or the batch contained `QUIT`).
+#[allow(clippy::too_many_arguments)]
+fn run_batch(
+    header: &str,
+    reader: &mut BufReader<TcpStream>,
+    out: &mut TcpStream,
+    store: &Arc<ShardedStore>,
+    engine: Option<&Arc<AnalyticsService>>,
+    stop: &AtomicBool,
+    metrics: &ServerMetrics,
+    cfg: &ServerConfig,
+) -> std::io::Result<bool> {
+    let mut parts = header.split_ascii_whitespace();
+    parts.next(); // "BATCH"
+    let n = parts.next().and_then(|s| s.parse::<usize>().ok());
+    let n = match (n, parts.next()) {
+        (Some(n), None) if (1..=batch::MAX_BATCH).contains(&n) => n,
+        _ => {
+            // A pipelining client may already have written payload lines we
+            // cannot distinguish from top-level requests — close instead of
+            // executing them (same no-resync rule as the payload-size cap).
+            let msg = format!("ERR BATCH expects <n> in 1..={}, closing\n", batch::MAX_BATCH);
+            out.write_all(msg.as_bytes())?;
+            return Ok(true);
+        }
+    };
+    let mut lines = Vec::with_capacity(n.min(1024));
+    let mut buf = String::new();
+    let mut total_bytes = 0usize;
+    // One idle window for the entire payload — per-line deadlines would let
+    // a drip-feeding client hold this worker for n × idle_timeout.
+    let deadline = Instant::now() + cfg.idle_timeout;
+    for _ in 0..n {
+        match read_request_line(reader, &mut buf, stop, deadline)? {
+            ReadOutcome::Line => {}
+            ReadOutcome::Eof | ReadOutcome::Stopped | ReadOutcome::IdleTimeout => {
+                return Ok(true)
+            }
+        }
+        // Per-line MAX_LINE_BYTES is not enough here: n lines buffer before
+        // execution, so cap the batch payload as a whole too.
+        total_bytes += buf.len();
+        if total_bytes > batch::MAX_BATCH_BYTES {
+            let msg =
+                format!("ERR BATCH payload exceeds {} bytes, closing\n", batch::MAX_BATCH_BYTES);
+            out.write_all(msg.as_bytes())?;
+            return Ok(true); // remaining lines are unread: cannot resync
+        }
+        lines.push(buf.trim().to_string());
+        buf.clear();
+    }
+    metrics.batch_sizes.record(n as u64);
+    // Time execution only, from here: the read loop above is dominated by
+    // client transmission, which would drown the server-work signal the
+    // per-verb histograms exist to compare.
+    let t0 = Instant::now();
+    let mut quit = false;
+    let mut responses = String::with_capacity(n * 16);
+    for req in &lines {
+        responses.push_str(&execute_one(req, store, engine, metrics, true));
+        responses.push('\n');
+        quit = quit || req == "QUIT";
+    }
+    out.write_all(responses.as_bytes())?;
+    metrics.batch_latency.record_duration(t0.elapsed());
+    Ok(quit)
+}
+
 /// Parse + execute one request line (separated out for direct unit tests).
+/// Strict parsing: unconsumed trailing tokens are an `ERR`, never ignored.
 pub fn dispatch(line: &str, store: &Arc<ShardedStore>, engine: Option<&Arc<AnalyticsService>>) -> String {
-    let mut parts = line.split_ascii_whitespace();
-    match parts.next() {
-        Some("GET") => match parts.next().and_then(|k| k.parse::<u64>().ok()) {
-            Some(key) => match store.get(key) {
-                Some(r) => format!("OK {} {}", r.price_cents, r.quantity),
-                None => "MISS".into(),
-            },
-            None => "ERR GET expects <isbn13>".into(),
-        },
-        Some("UPDATE") => {
+    dispatch_with_metrics(line, store, engine, None)
+}
+
+/// [`dispatch`] with optional server metrics: batch sizes are recorded, the
+/// basic `STATS` line gains connection counters, and `STATS SERVER` renders
+/// the full per-verb report.
+pub fn dispatch_with_metrics(
+    line: &str,
+    store: &Arc<ShardedStore>,
+    engine: Option<&Arc<AnalyticsService>>,
+    metrics: Option<&ServerMetrics>,
+) -> String {
+    let line = line.trim();
+    let (verb, rest) = match line.split_once(|c: char| c.is_ascii_whitespace()) {
+        Some((v, r)) => (v, r.trim()),
+        None => (line, ""),
+    };
+    match verb {
+        "GET" => {
+            let mut parts = rest.split_ascii_whitespace();
+            match (parts.next().and_then(|k| k.parse::<u64>().ok()), parts.next()) {
+                (Some(key), None) => match store.get(key) {
+                    Some(r) => format!("OK {} {}", r.price_cents, r.quantity),
+                    None => "MISS".into(),
+                },
+                _ => "ERR GET expects exactly <isbn13>".into(),
+            }
+        }
+        "UPDATE" => {
+            let mut parts = rest.split_ascii_whitespace();
             let key = parts.next().and_then(|k| k.parse::<u64>().ok());
             let cents = parts.next().and_then(|k| k.parse::<u64>().ok());
             let qty = parts.next().and_then(|k| k.parse::<u32>().ok());
-            match (key, cents, qty) {
-                (Some(k), Some(c), Some(q)) => {
+            match (key, cents, qty, parts.next()) {
+                (Some(k), Some(c), Some(q), None) => {
                     let u = StockUpdate { isbn13: k, new_price_cents: c, new_quantity: q };
                     if store.apply(&u) {
                         "OK".into()
@@ -167,31 +508,83 @@ pub fn dispatch(line: &str, store: &Arc<ShardedStore>, engine: Option<&Arc<Analy
                         "MISS".into()
                     }
                 }
-                _ => "ERR UPDATE expects <isbn13> <cents> <qty>".into(),
+                _ => "ERR UPDATE expects exactly <isbn13> <cents> <qty>".into(),
             }
         }
-        Some("STATS") => {
-            let (n, v) = store.value_sum_cents();
-            format!("OK count={n} value_cents={v}")
-        }
-        Some("ANALYTICS") => match engine {
-            None => "ERR analytics engine not loaded".into(),
-            Some(eng) => match eng.analytics_for_store(Arc::clone(store), Vec::new()) {
-                Ok(r) => format!(
-                    "OK value={:.2} count={} mean_price={:.4} price_min={:.2} price_max={:.2}",
-                    r.stats.total_value,
-                    r.stats.count,
-                    r.stats.mean_price,
-                    r.stats.price_min,
-                    r.stats.price_max
-                ),
-                Err(e) => format!("ERR {e}"),
-            },
+        "MGET" => match batch::parse_mget(rest) {
+            Ok(keys) => {
+                if let Some(m) = metrics {
+                    m.batch_sizes.record(keys.len() as u64);
+                }
+                batch::exec_mget(store, &keys)
+            }
+            Err(e) => format!("ERR {e}"),
         },
-        Some("PING") => "PONG".into(),
-        Some("QUIT") => "BYE".into(),
-        Some(other) => format!("ERR unknown command '{other}'"),
-        None => "ERR empty request".into(),
+        "MUPDATE" => match batch::parse_mupdate(rest) {
+            Ok(ups) => {
+                if let Some(m) = metrics {
+                    m.batch_sizes.record(ups.len() as u64);
+                }
+                batch::exec_mupdate(store, &ups)
+            }
+            Err(e) => format!("ERR {e}"),
+        },
+        "STATS" => {
+            let mut parts = rest.split_ascii_whitespace();
+            match (parts.next(), parts.next()) {
+                (None, _) => {
+                    let (n, v) = store.value_sum_cents();
+                    let mut s = format!("OK count={n} value_cents={v}");
+                    if let Some(m) = metrics {
+                        s.push_str(&m.stats_suffix());
+                    }
+                    s
+                }
+                (Some("SERVER"), None) => match metrics {
+                    Some(m) => m.stats_server_line(),
+                    None => "ERR server metrics unavailable".into(),
+                },
+                _ => "ERR STATS expects no argument or SERVER".into(),
+            }
+        }
+        "ANALYTICS" => {
+            if !rest.is_empty() {
+                return "ERR ANALYTICS takes no arguments".into();
+            }
+            match engine {
+                None => "ERR analytics engine not loaded".into(),
+                Some(eng) => match eng.analytics_for_store(Arc::clone(store), Vec::new()) {
+                    Ok(r) => format!(
+                        "OK value={:.2} count={} mean_price={:.4} price_min={:.2} price_max={:.2}",
+                        r.stats.total_value,
+                        r.stats.count,
+                        r.stats.mean_price,
+                        r.stats.price_min,
+                        r.stats.price_max
+                    ),
+                    Err(e) => format!("ERR {e}"),
+                },
+            }
+        }
+        "PING" => {
+            if rest.is_empty() {
+                "PONG".into()
+            } else {
+                "ERR PING takes no arguments".into()
+            }
+        }
+        "QUIT" => {
+            if rest.is_empty() {
+                "BYE".into()
+            } else {
+                "ERR QUIT takes no arguments".into()
+            }
+        }
+        // Top-level BATCH framing is handled in the connection loop before
+        // dispatch; reaching it here means a nested/out-of-place BATCH.
+        "BATCH" => "ERR BATCH cannot be nested".into(),
+        "" => "ERR empty request".into(),
+        other => format!("ERR unknown command '{other}'"),
     }
 }
 
@@ -214,6 +607,54 @@ impl Client {
         let mut resp = String::new();
         self.reader.read_line(&mut resp)?;
         Ok(resp.trim_end().to_string())
+    }
+
+    /// Pipelined batch: one write carrying `BATCH <n>` plus all `lines`,
+    /// then `n` response lines read back — one round trip for the group.
+    pub fn batch(&mut self, lines: &[String]) -> std::io::Result<Vec<String>> {
+        if lines.is_empty() {
+            // `BATCH 0` is a protocol error; sending it would desync the
+            // reply stream (one ERR line, zero reads here).
+            return Ok(Vec::new());
+        }
+        if lines.len() > batch::MAX_BATCH {
+            // The server would reject the header with one ERR line and then
+            // treat every payload line as a top-level request — permanently
+            // desyncing this connection. Refuse before writing anything.
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("batch of {} exceeds MAX_BATCH={}", lines.len(), batch::MAX_BATCH),
+            ));
+        }
+        if let Some(bad) = lines.iter().find(|l| l.contains('\n')) {
+            // An embedded newline would become an extra wire line: the
+            // server answers n+1 responses while we read n — same desync.
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("batch line contains embedded newline: {bad:?}"),
+            ));
+        }
+        let mut buf = format!("BATCH {}\n", lines.len());
+        for l in lines {
+            buf.push_str(l);
+            buf.push('\n');
+        }
+        self.writer.write_all(buf.as_bytes())?;
+        let mut out = Vec::with_capacity(lines.len());
+        for _ in 0..lines.len() {
+            let mut resp = String::new();
+            if self.reader.read_line(&mut resp)? == 0 {
+                // Server aborted the batch (payload cap, shutdown, ...):
+                // surface the truncation instead of fabricating responses.
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    format!("connection closed after {} of {} batch responses", out.len(),
+                        lines.len()),
+                ));
+            }
+            out.push(resp.trim_end().to_string());
+        }
+        Ok(out)
     }
 }
 
@@ -248,15 +689,53 @@ mod tests {
     }
 
     #[test]
+    fn dispatch_mget_mupdate() {
+        let (s, spec) = store(100);
+        let a = spec.record_at(1).isbn13;
+        let b = spec.record_at(2).isbn13;
+        assert_eq!(dispatch(&format!("MUPDATE {a} 100 1;{b} 200 2;42 1 1"), &s, None),
+            "OK applied=2 missed=1");
+        assert_eq!(dispatch(&format!("MGET {a} 42 {b}"), &s, None), "OK 3 100,1 MISS 200,2");
+    }
+
+    #[test]
     fn dispatch_error_paths() {
         let (s, _) = store(10);
+        // Short / malformed argument lists.
         assert!(dispatch("GET", &s, None).starts_with("ERR"));
         assert!(dispatch("GET notanumber", &s, None).starts_with("ERR"));
         assert!(dispatch("UPDATE 1 2", &s, None).starts_with("ERR"));
+        assert!(dispatch("MGET", &s, None).starts_with("ERR"));
+        assert!(dispatch("MGET a b", &s, None).starts_with("ERR"));
+        assert!(dispatch("MUPDATE", &s, None).starts_with("ERR"));
+        assert!(dispatch("MUPDATE 1 2", &s, None).starts_with("ERR"));
         assert!(dispatch("BOGUS", &s, None).starts_with("ERR"));
         assert!(dispatch("", &s, None).starts_with("ERR"));
         assert!(dispatch("ANALYTICS", &s, None).starts_with("ERR"));
+        assert!(dispatch("BATCH 2", &s, None).starts_with("ERR"));
+        // Trailing garbage is rejected on every verb.
+        assert!(dispatch("GET 1 extra", &s, None).starts_with("ERR"));
+        assert!(dispatch("UPDATE 1 2 3 junk", &s, None).starts_with("ERR"));
+        assert!(dispatch("MUPDATE 1 2 3 junk", &s, None).starts_with("ERR"));
+        assert!(dispatch("STATS BOGUS", &s, None).starts_with("ERR"));
+        assert!(dispatch("STATS SERVER extra", &s, None).starts_with("ERR"));
+        assert!(dispatch("PING please", &s, None).starts_with("ERR"));
+        assert!(dispatch("QUIT now", &s, None).starts_with("ERR"));
+        assert!(dispatch("ANALYTICS now", &s, None).starts_with("ERR"));
         assert_eq!(dispatch("PING", &s, None), "PONG");
+    }
+
+    #[test]
+    fn stats_with_metrics_appends_connection_counters() {
+        let (s, _) = store(10);
+        let m = ServerMetrics::new();
+        m.conns_accepted.inc();
+        let resp = dispatch_with_metrics("STATS", &s, None, Some(&m));
+        assert!(resp.starts_with("OK count=10"), "{resp}");
+        assert!(resp.contains("conns_accepted=1"), "{resp}");
+        let resp = dispatch_with_metrics("STATS SERVER", &s, None, Some(&m));
+        assert!(resp.starts_with("OK conns_accepted=1"), "{resp}");
+        assert_eq!(dispatch("STATS SERVER", &s, None), "ERR server metrics unavailable");
     }
 
     #[test]
@@ -283,7 +762,9 @@ mod tests {
                 });
             }
         });
-        assert!(handle.requests.load(Ordering::Relaxed) >= 4 * 202);
+        assert!(handle.requests() >= 4 * 202);
+        assert!(handle.metrics.conns_accepted.get() >= 4);
+        assert_eq!(handle.metrics.conns_rejected.get(), 0);
         handle.shutdown();
     }
 }

@@ -1,0 +1,152 @@
+//! Bounded worker pool for the TCP front end: N long-lived workers pull
+//! work items from a bounded [`pipeline::channel`](crate::pipeline::channel)
+//! queue fed by the acceptor. Replaces thread-per-connection: thread count
+//! is fixed at construction, finished connections free their worker for the
+//! next queued one, and shutdown is a channel close + join (no JoinHandle
+//! vector growing for the lifetime of the server).
+//!
+//! Generic over the work item so the pool is unit-testable without sockets;
+//! the server instantiates it with `WorkerPool<TcpStream>`.
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::pipeline::channel::{bounded, Sender};
+
+pub struct WorkerPool<T: Send + 'static> {
+    tx: Option<Sender<T>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> WorkerPool<T> {
+    /// Spawn `workers` threads over a queue of `queue_depth` pending items.
+    /// Each worker runs `handler` on one item at a time until the pool is
+    /// shut down and the queue is drained.
+    pub fn new<F>(workers: usize, queue_depth: usize, handler: F) -> Self
+    where
+        F: Fn(T) + Send + Sync + 'static,
+    {
+        assert!(workers > 0);
+        let (tx, rx) = bounded::<T>(queue_depth);
+        let handler = Arc::new(handler);
+        let mut joins = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let rx = rx.clone();
+            let handler = handler.clone();
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("server-worker-{i}"))
+                    .spawn(move || {
+                        while let Ok(item) = rx.recv() {
+                            // A panicking handler must not kill the worker —
+                            // the pool would shrink permanently. The payload
+                            // is already reported by the panic hook.
+                            let _ = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| handler(item)),
+                            );
+                        }
+                    })
+                    .expect("spawn pool worker"),
+            );
+        }
+        WorkerPool { tx: Some(tx), workers: joins }
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Hand an item to the pool; blocks while the queue is full
+    /// (backpressure on the acceptor). `Err` returns the item if the pool
+    /// has already shut down.
+    pub fn submit(&self, item: T) -> Result<(), T> {
+        match &self.tx {
+            Some(tx) => tx.send(item).map_err(|e| e.0),
+            None => Err(item),
+        }
+    }
+
+    /// Close the queue and join every worker. Queued items are still
+    /// processed before workers observe the close ([`crate::pipeline::channel`]
+    /// drains before reporting `Closed`).
+    pub fn shutdown(&mut self) {
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl<T: Send + 'static> Drop for WorkerPool<T> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Mutex;
+
+    #[test]
+    fn all_items_processed_with_fewer_workers_than_items() {
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let mut pool = {
+            let seen = seen.clone();
+            WorkerPool::new(2, 4, move |i: u64| {
+                seen.lock().unwrap().push(i);
+            })
+        };
+        for i in 0..64u64 {
+            pool.submit(i).unwrap();
+        }
+        pool.shutdown();
+        let mut got = seen.lock().unwrap().clone();
+        got.sort_unstable();
+        assert_eq!(got, (0..64).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn submit_after_shutdown_returns_item() {
+        let mut pool = WorkerPool::new(1, 1, |_: u64| {});
+        pool.shutdown();
+        assert_eq!(pool.submit(9), Err(9));
+        assert_eq!(pool.worker_count(), 0);
+    }
+
+    #[test]
+    fn panicking_handler_does_not_kill_worker() {
+        let count = Arc::new(AtomicU64::new(0));
+        let mut pool = {
+            let count = count.clone();
+            WorkerPool::new(1, 8, move |i: u64| {
+                if i == 3 {
+                    panic!("boom (expected in this test)");
+                }
+                count.fetch_add(1, Ordering::Relaxed);
+            })
+        };
+        for i in 0..8u64 {
+            pool.submit(i).unwrap();
+        }
+        pool.shutdown();
+        assert_eq!(count.load(Ordering::Relaxed), 7, "worker died on panic");
+    }
+
+    #[test]
+    fn drop_joins_workers_and_drains_queue() {
+        let count = Arc::new(AtomicU64::new(0));
+        {
+            let count = count.clone();
+            let pool = WorkerPool::new(3, 8, move |_: u64| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+            for i in 0..20u64 {
+                pool.submit(i).unwrap();
+            }
+            // Pool dropped here: must drain all 20 before joining.
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 20);
+    }
+}

@@ -6,12 +6,16 @@
 //! reference backend; the PJRT variant (same wire surface) only runs under
 //! `--features pjrt` with artifacts present.
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
+use std::time::Duration;
 
 use membig::memstore::ShardedStore;
 use membig::runtime::AnalyticsService;
-use membig::server::{Client, Server};
+use membig::server::{Client, Server, ServerConfig};
 use membig::workload::gen::DatasetSpec;
+use membig::workload::record::BookRecord;
 
 fn store(n: u64) -> (Arc<ShardedStore>, DatasetSpec) {
     let spec = DatasetSpec { records: n, ..Default::default() };
@@ -149,8 +153,8 @@ fn malformed_requests_get_err_not_disconnect() {
 #[test]
 fn whitespace_variants_parse() {
     // Extra separators are fine (split_ascii_whitespace); extra *tokens*
-    // after a complete UPDATE are ignored by the parser today — pin the
-    // lenient-prefix behaviour for GET too.
+    // after a complete request are rejected — a client sending garbage gets
+    // ERR, never a silently truncated interpretation.
     let (s, spec) = store(50);
     let handle = Server::new(s, None).spawn("127.0.0.1:0").unwrap();
     let mut c = Client::connect(handle.addr).unwrap();
@@ -158,8 +162,279 @@ fn whitespace_variants_parse() {
     let resp = c.request(&format!("  GET   {key}  ")).unwrap();
     assert!(resp.starts_with("OK"), "{resp}");
     let resp = c.request(&format!("GET {key} trailing junk")).unwrap();
-    assert!(resp.starts_with("OK"), "{resp}");
+    assert!(resp.starts_with("ERR"), "{resp}");
+    let resp = c.request(&format!("UPDATE {key} 100 5 junk")).unwrap();
+    assert!(resp.starts_with("ERR"), "{resp}");
+    // And the connection survives the rejection.
+    assert_eq!(c.request("PING").unwrap(), "PONG");
     let _ = c.request("QUIT");
+    handle.shutdown();
+}
+
+#[test]
+fn slow_client_split_line_across_timeout_boundary() {
+    // Regression: a request split across the server's read timeout must not
+    // lose its first half. The seed server cleared the partial buffer on
+    // every WouldBlock/TimedOut tick, so `"GET 12"` + pause + `"34\n"`
+    // turned into the nonsense request `"34"`.
+    let (s, _) = store(10);
+    s.insert(BookRecord::new(1234, 500, 7));
+    let handle = Server::new(s, None).spawn("127.0.0.1:0").unwrap();
+
+    let mut stream = TcpStream::connect(handle.addr).unwrap();
+    stream.set_nodelay(true).ok();
+    stream.write_all(b"GET 12").unwrap();
+    // Default read timeout is 200ms; sleep well past it so the server takes
+    // at least one timeout tick holding the partial request.
+    std::thread::sleep(Duration::from_millis(450));
+    stream.write_all(b"34\n").unwrap();
+
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert_eq!(resp.trim_end(), "OK 500 7", "partial request was dropped");
+
+    // The connection is still healthy afterwards.
+    stream.write_all(b"PING\n").unwrap();
+    resp.clear();
+    reader.read_line(&mut resp).unwrap();
+    assert_eq!(resp.trim_end(), "PONG");
+    stream.write_all(b"QUIT\n").unwrap();
+    handle.shutdown();
+}
+
+#[test]
+fn more_concurrent_clients_than_workers_all_served() {
+    let (s, spec) = store(200);
+    let cfg = ServerConfig { workers: 2, max_conns: 64, ..Default::default() };
+    let handle = Server::with_config(s, None, cfg).spawn("127.0.0.1:0").unwrap();
+    let addr = handle.addr;
+
+    // 8 clients over 2 workers: at most 2 are in flight, the rest queue in
+    // the pool's bounded channel and are served as workers free up.
+    std::thread::scope(|scope| {
+        for t in 0..8u64 {
+            let spec = &spec;
+            scope.spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                assert_eq!(c.request("PING").unwrap(), "PONG");
+                for i in 0..20u64 {
+                    let key = spec.record_at((t * 20 + i) % 200).isbn13;
+                    let r = c.request(&format!("GET {key}")).unwrap();
+                    assert!(r.starts_with("OK"), "{r}");
+                }
+                assert_eq!(c.request("QUIT").unwrap(), "BYE");
+            });
+        }
+    });
+    assert_eq!(handle.metrics.conns_accepted.get(), 8);
+    assert_eq!(handle.metrics.conns_rejected.get(), 0);
+    // Workers decrement `conns_active` after the client has already seen
+    // BYE, so give the reap a moment instead of asserting instantly.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while handle.metrics.conns_active.get() != 0 {
+        assert!(std::time::Instant::now() < deadline, "connections never reaped");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn connections_beyond_max_conns_are_rejected() {
+    let (s, _) = store(10);
+    let cfg = ServerConfig { workers: 1, max_conns: 1, ..Default::default() };
+    let handle = Server::with_config(s, None, cfg).spawn("127.0.0.1:0").unwrap();
+    let addr = handle.addr;
+
+    // First client occupies the only admission slot...
+    let mut first = Client::connect(addr).unwrap();
+    assert_eq!(first.request("PING").unwrap(), "PONG");
+
+    // ...so the second is turned away at accept time with a busy error.
+    let second = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(second);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert!(resp.starts_with("ERR server busy"), "{resp}");
+    // Server closes the rejected socket: next read sees EOF.
+    resp.clear();
+    assert_eq!(reader.read_line(&mut resp).unwrap(), 0);
+    assert_eq!(handle.metrics.conns_rejected.get(), 1);
+
+    // Once the first client leaves, the slot frees up again.
+    assert_eq!(first.request("QUIT").unwrap(), "BYE");
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        if handle.metrics.conns_active.get() == 0 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "slot never reaped");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let mut third = Client::connect(addr).unwrap();
+    assert_eq!(third.request("PING").unwrap(), "PONG");
+    let _ = third.request("QUIT");
+    handle.shutdown();
+}
+
+#[test]
+fn idle_connections_are_closed_after_idle_timeout() {
+    // Workers own their connection while serving it, so an idle client must
+    // be evicted — otherwise `workers` silent clients starve the queue.
+    let (s, _) = store(10);
+    let cfg = ServerConfig { idle_timeout: Duration::from_millis(300), ..Default::default() };
+    let handle = Server::with_config(s, None, cfg).spawn("127.0.0.1:0").unwrap();
+
+    let stream = TcpStream::connect(handle.addr).unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert!(resp.starts_with("ERR idle timeout"), "{resp}");
+    resp.clear();
+    assert_eq!(reader.read_line(&mut resp).unwrap(), 0, "expected EOF after eviction");
+
+    // The slot freed up: a live client still gets served.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while handle.metrics.conns_active.get() != 0 {
+        assert!(std::time::Instant::now() < deadline, "idle connection never reaped");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let mut c = Client::connect(handle.addr).unwrap();
+    assert_eq!(c.request("PING").unwrap(), "PONG");
+    let _ = c.request("QUIT");
+    handle.shutdown();
+}
+
+#[test]
+fn batch_verbs_roundtrip_over_tcp() {
+    let (s, spec) = store(1_000);
+    let handle = Server::new(s.clone(), None).spawn("127.0.0.1:0").unwrap();
+    let mut c = Client::connect(handle.addr).unwrap();
+
+    let a = spec.record_at(3).isbn13;
+    let b = spec.record_at(4).isbn13;
+
+    // MUPDATE applies existing keys, counts the miss.
+    let resp = c.request(&format!("MUPDATE {a} 111 1;42 1 1;{b} 222 2")).unwrap();
+    assert_eq!(resp, "OK applied=2 missed=1");
+
+    // MGET returns entries in key order, misses marked.
+    let resp = c.request(&format!("MGET {a} 42 {b}")).unwrap();
+    assert_eq!(resp, "OK 3 111,1 MISS 222,2");
+
+    // BATCH framing: n request lines → n response lines, in order.
+    let lines = vec![
+        format!("GET {a}"),
+        format!("UPDATE {b} 333 3"),
+        "PING".to_string(),
+        "GET 42".to_string(),
+        "BOGUS".to_string(),
+    ];
+    let resps = c.batch(&lines).unwrap();
+    assert_eq!(resps.len(), 5);
+    assert_eq!(resps[0], "OK 111 1");
+    assert_eq!(resps[1], "OK");
+    assert_eq!(resps[2], "PONG");
+    assert_eq!(resps[3], "MISS");
+    assert!(resps[4].starts_with("ERR"), "{}", resps[4]);
+    assert_eq!(s.get(b).unwrap().price_cents, 333);
+
+    // Malformed batch headers get one ERR line and a close: a pipelining
+    // client may already have sent payload lines that cannot be resynced.
+    for bad in ["BATCH", "BATCH 0", "BATCH abc", "BATCH 1 extra", "BATCH 10001"] {
+        let mut c2 = Client::connect(handle.addr).unwrap();
+        let resp = c2.request(bad).unwrap();
+        assert!(resp.starts_with("ERR"), "header {bad:?} → {resp}");
+        match c2.request("PING") {
+            Ok(r) => assert!(r.is_empty(), "connection should be closed, got {r:?}"),
+            Err(_) => {} // write to a closed socket is also fine
+        }
+    }
+
+    // Batch-size metrics saw the MGET/MUPDATE key counts and BATCH lines.
+    assert!(handle.metrics.batch_sizes.count() >= 3);
+
+    let _ = c.request("QUIT");
+    handle.shutdown();
+}
+
+#[test]
+fn stats_exposes_server_counters_over_tcp() {
+    let (s, _) = store(100);
+    let handle = Server::new(s, None).spawn("127.0.0.1:0").unwrap();
+    let mut c = Client::connect(handle.addr).unwrap();
+    let resp = c.request("STATS").unwrap();
+    assert!(resp.starts_with("OK count=100 value_cents="), "{resp}");
+    assert!(resp.contains("conns_accepted=1"), "{resp}");
+    assert!(resp.contains("conns_active=1"), "{resp}");
+    assert!(resp.contains("requests="), "{resp}");
+
+    let resp = c.request("STATS SERVER").unwrap();
+    assert!(resp.starts_with("OK conns_accepted=1"), "{resp}");
+    assert!(resp.contains("stats_n="), "{resp}");
+    assert!(resp.contains("get_p99_ns="), "{resp}");
+    let _ = c.request("QUIT");
+    handle.shutdown();
+}
+
+#[test]
+fn mupdate_batches_interleaved_with_gets_no_torn_reads() {
+    // One writer streams MUPDATE batches (price == qty == tag on every key)
+    // while readers poll single GETs: every read must observe a complete
+    // batch entry, never a half-applied pair.
+    let (s, spec) = store(100);
+    let cfg = ServerConfig { workers: 4, max_conns: 16, ..Default::default() };
+    let handle = Server::with_config(s.clone(), None, cfg).spawn("127.0.0.1:0").unwrap();
+    let addr = handle.addr;
+    const HOT_KEYS: usize = 8;
+    const ROUNDS: u64 = 150;
+
+    let keys: Vec<u64> = (0..HOT_KEYS as u64).map(|i| spec.record_at(i).isbn13).collect();
+
+    std::thread::scope(|scope| {
+        {
+            let keys = &keys;
+            scope.spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for round in 0..ROUNDS {
+                    let tag = 1_000 + round;
+                    let groups: Vec<String> =
+                        keys.iter().map(|k| format!("{k} {tag} {tag}")).collect();
+                    let resp = c.request(&format!("MUPDATE {}", groups.join(";"))).unwrap();
+                    assert_eq!(resp, format!("OK applied={HOT_KEYS} missed=0"));
+                }
+                let _ = c.request("QUIT");
+            });
+        }
+        for _ in 0..2 {
+            let keys = &keys;
+            scope.spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for _ in 0..ROUNDS {
+                    for key in keys {
+                        let resp = c.request(&format!("GET {key}")).unwrap();
+                        let mut parts = resp.split_ascii_whitespace();
+                        assert_eq!(parts.next(), Some("OK"), "{resp}");
+                        let price: u64 = parts.next().unwrap().parse().unwrap();
+                        let qty: u64 = parts.next().unwrap().parse().unwrap();
+                        let original = price < 1_000 && qty < 500;
+                        assert!(
+                            original || price == qty,
+                            "torn read on key {key}: price={price} qty={qty}"
+                        );
+                    }
+                }
+                let _ = c.request("QUIT");
+            });
+        }
+    });
+
+    // Final state: the last MUPDATE batch fully applied on every hot key.
+    for key in &keys {
+        let rec = s.get(*key).unwrap();
+        assert_eq!(rec.price_cents, 1_000 + ROUNDS - 1);
+        assert_eq!(rec.quantity as u64, rec.price_cents);
+    }
     handle.shutdown();
 }
 

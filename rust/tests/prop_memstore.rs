@@ -143,6 +143,58 @@ fn prop_duplicate_key_updates_last_writer_wins() {
 }
 
 #[test]
+fn prop_batch_ops_equal_sequential_ops() {
+    // The server's shard-affine batch verbs must be observationally
+    // equivalent to per-key calls: get_many ≡ map(get) in input order, and
+    // apply_many ≡ sequential apply (same counts, same final state) even
+    // with duplicate and missing keys in the batch.
+    Prop::new("get_many/apply_many ≡ sequential get/apply").cases(40).run(|rng| {
+        let shards = rng.range_usize(1, 9);
+        let store = ShardedStore::new(shards, 256);
+        let mirror = ShardedStore::new(shards, 256);
+        let n = rng.range_usize(1, 400);
+        for k in 1..=n as u64 {
+            let r = BookRecord::new(k, rng.gen_range(1000), rng.gen_range(500) as u32);
+            store.insert(r);
+            mirror.insert(r);
+        }
+        // Random batch: ~1/4 missing keys, duplicates allowed.
+        let m = rng.range_usize(1, 300);
+        let ups: Vec<StockUpdate> = (0..m)
+            .map(|_| StockUpdate {
+                isbn13: rng.gen_range(n as u64 + n as u64 / 4 + 2) + 1,
+                new_price_cents: rng.gen_range(10_000),
+                new_quantity: rng.gen_range(500) as u32,
+            })
+            .collect();
+
+        let (applied, missed) = store.apply_many(&ups);
+        let mut seq_applied = 0u64;
+        let mut seq_missed = 0u64;
+        for u in &ups {
+            if mirror.apply(u) {
+                seq_applied += 1;
+            } else {
+                seq_missed += 1;
+            }
+        }
+        prop_assert_eq!(applied, seq_applied);
+        prop_assert_eq!(missed, seq_missed);
+        prop_assert_eq!(applied + missed, m as u64);
+
+        let keys: Vec<u64> = ups.iter().map(|u| u.isbn13).collect();
+        let batch = store.get_many(&keys);
+        prop_assert_eq!(batch.len(), keys.len());
+        for (i, k) in keys.iter().enumerate() {
+            prop_assert_eq!(batch[i], store.get(*k));
+            prop_assert_eq!(store.get(*k), mirror.get(*k));
+        }
+        prop_assert_eq!(store.value_sum_cents(), mirror.value_sum_cents());
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_record_encoding_roundtrips() {
     Prop::new("BookRecord encode/decode roundtrip + corruption detection").cases(100).run(
         |rng| {
