@@ -8,8 +8,10 @@
 #   make check-pjrt  typecheck the PJRT-gated code paths
 #   make bench       run every custom-harness bench (MEMBIG_BENCH_SCALE=k
 #                    divides workload sizes for quick runs)
-#   make bench-smoke tiny-N run of the analytics + server benches — catches
-#                    bench bit-rot fast (wired into CI)
+#   make bench-smoke tiny-N run of the analytics + hashtable + server +
+#                    recovery benches — catches bench bit-rot fast and emits
+#                    machine-readable BENCH_<name>.json reports at the repo
+#                    root (wired into CI, uploaded as artifacts)
 #   make clean       drop build + bench outputs
 
 ARTIFACTS_DIR := $(abspath rust/artifacts)
@@ -32,11 +34,12 @@ bench:
 	cd rust && cargo bench
 
 # analytics is compile-smoked only (its runtime body is pjrt-gated and
-# prints a skip line under default features); hashtable + server_throughput
-# actually execute at tiny N.
+# prints a skip line under default features); hashtable, server_throughput
+# and recovery actually execute at tiny N. Every bench also writes its
+# BENCH_<name>.json report to the repo root.
 bench-smoke:
-	cd rust && MEMBIG_BENCH_SCALE=100 cargo bench --bench analytics --bench hashtable --bench server_throughput
+	cd rust && MEMBIG_BENCH_SCALE=100 cargo bench --bench analytics --bench hashtable --bench server_throughput --bench recovery
 
 clean:
 	cd rust && cargo clean
-	rm -rf bench_out
+	rm -rf bench_out BENCH_*.json

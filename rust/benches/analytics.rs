@@ -8,7 +8,7 @@
 #[cfg(feature = "pjrt")]
 use membig::runtime::AnalyticsEngine;
 #[cfg(feature = "pjrt")]
-use membig::util::bench::{bench_out_dir, stat_from};
+use membig::util::bench::{bench_out_dir, stat_from, write_bench_json, BenchJsonRow};
 #[cfg(feature = "pjrt")]
 use membig::util::csv::CsvWriter;
 #[cfg(feature = "pjrt")]
@@ -19,6 +19,10 @@ use membig::util::rng::Rng;
 #[cfg(not(feature = "pjrt"))]
 fn main() {
     println!("analytics bench skipped: rebuild with `--features pjrt` (PJRT-only bench)");
+    // Still emit the machine-readable report (empty results) so CI's
+    // BENCH_*.json artifact set is stable across feature configurations.
+    let path = membig::util::bench::write_bench_json("analytics", &[]).unwrap();
+    println!("wrote {}", path.display());
 }
 
 #[cfg(feature = "pjrt")]
@@ -40,17 +44,20 @@ fn main() {
     let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("manifest.json").exists() {
         println!("analytics bench skipped: run `make artifacts` first");
+        let _ = write_bench_json("analytics", &[]);
         return;
     }
     let engine = match AnalyticsEngine::load(&artifacts) {
         Ok(e) => e,
         Err(e) => {
             println!("analytics bench skipped: PJRT unavailable ({e})");
+            let _ = write_bench_json("analytics", &[]);
             return;
         }
     };
     println!("=== analytics path: PJRT ({}) vs pure-Rust loop ===\n", engine.platform());
 
+    let mut json_rows: Vec<BenchJsonRow> = Vec::new();
     let csv_path = bench_out_dir().join("analytics.csv");
     let mut csv = CsvWriter::create(
         &csv_path,
@@ -107,8 +114,12 @@ fn main() {
             format!("{:.0}", rust.ops_per_sec(batch as u64)),
         ])
         .unwrap();
+        json_rows.push(pjrt.json_row(batch as u64));
+        json_rows.push(rust.json_row(batch as u64));
     }
     csv.flush().unwrap();
     println!("wrote {}", csv_path.display());
+    let json_path = write_bench_json("analytics", &json_rows).unwrap();
+    println!("wrote {}", json_path.display());
     let _ = commas(0);
 }

@@ -4,7 +4,7 @@
 //! load-factor sweep. CSV: bench_out/hashtable.csv.
 
 use membig::memstore::HashTable;
-use membig::util::bench::{bench_out_dir, bench_scale, stat_from};
+use membig::util::bench::{bench_out_dir, bench_scale, stat_from, write_bench_json, BenchJsonRow};
 use membig::util::csv::CsvWriter;
 use membig::util::fmt::commas;
 use membig::util::rng::Rng;
@@ -25,6 +25,7 @@ fn main() {
 
     let csv_path = bench_out_dir().join("hashtable.csv");
     let mut csv = CsvWriter::create(&csv_path, &["table", "op", "ops_per_sec"]).unwrap();
+    let mut json_rows: Vec<BenchJsonRow> = Vec::new();
     let iters = 5;
 
     // ---- ours -----------------------------------------------------------
@@ -42,6 +43,7 @@ fn main() {
         let s = stat_from("ours insert", samples);
         println!("{}", s.render(Some(n)));
         csv.row(&["ours", "insert", &format!("{:.0}", s.ops_per_sec(n))]).unwrap();
+        json_rows.push(s.json_row(n));
     }
     for (op, name) in [(0, "get"), (1, "update")] {
         let mut samples = Vec::new();
@@ -59,6 +61,7 @@ fn main() {
         let s = stat_from(&format!("ours {name}"), samples);
         println!("{}", s.render(Some(n)));
         csv.row(&["ours", name, &format!("{:.0}", s.ops_per_sec(n))]).unwrap();
+        json_rows.push(s.json_row(n));
     }
     println!("ours: capacity={} max_probe={} mem={}\n", commas(ours.capacity() as u64),
         ours.max_probe(), membig::util::fmt::bytes(ours.memory_bytes() as u64));
@@ -78,6 +81,7 @@ fn main() {
         let s = stat_from("std insert", samples);
         println!("{}", s.render(Some(n)));
         csv.row(&["std", "insert", &format!("{:.0}", s.ops_per_sec(n))]).unwrap();
+        json_rows.push(s.json_row(n));
     }
     for (op, name) in [(0, "get"), (1, "update")] {
         let mut samples = Vec::new();
@@ -95,6 +99,7 @@ fn main() {
         let s = stat_from(&format!("std {name}"), samples);
         println!("{}", s.render(Some(n)));
         csv.row(&["std", name, &format!("{:.0}", s.ops_per_sec(n))]).unwrap();
+        json_rows.push(s.json_row(n));
     }
 
     // ---- load-factor sweep (probe behaviour near capacity) ---------------
@@ -119,4 +124,6 @@ fn main() {
     }
     csv.flush().unwrap();
     println!("\nwrote {}", csv_path.display());
+    let json_path = write_bench_json("hashtable", &json_rows).unwrap();
+    println!("wrote {}", json_path.display());
 }

@@ -15,7 +15,7 @@ use membig::memstore::snapshot::load_store;
 use membig::metrics::EngineMetrics;
 use membig::storage::latency::{DiskProfile, DiskSim};
 use membig::storage::table::{DiskTable, TableOptions};
-use membig::util::bench::{bench_out_dir, bench_scale, time_once};
+use membig::util::bench::{bench_out_dir, bench_scale, time_once, write_bench_json, BenchJsonRow};
 use membig::util::csv::CsvWriter;
 use membig::util::fmt::{commas, human_duration, rate};
 use membig::workload::gen::{generate_stock_updates, DatasetSpec, KeyDist};
@@ -110,4 +110,22 @@ fn main() {
     println!("\nsnapshot load is {gain:.1}x faster than the table scan — the startup-cost");
     println!("optimization the paper's \"load prior to processing\" step leaves on the table.");
     println!("wrote {}", csv_path.display());
+
+    // Machine-readable report (single-shot measurements: p50 == p99 == the
+    // one sample) — the EXPERIMENTS.md recovery-cost rows read from this.
+    let row = |name: &str, ops: u64, d: std::time::Duration| BenchJsonRow {
+        name: name.to_string(),
+        ops_per_sec: ops as f64 / d.as_secs_f64(),
+        p50_ns: d.as_nanos().min(u64::MAX as u128) as u64,
+        p99_ns: d.as_nanos().min(u64::MAX as u128) as u64,
+        n: 1,
+    };
+    let json_rows = vec![
+        row("table_scan", n, t_scan),
+        row("snapshot_write", n, t_write),
+        row("snapshot_load", n, t_snap),
+        row("snapshot_plus_wal", n + tail, t_recover),
+    ];
+    let json_path = write_bench_json("recovery", &json_rows).unwrap();
+    println!("wrote {}", json_path.display());
 }

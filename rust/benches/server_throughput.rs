@@ -17,7 +17,7 @@ use std::sync::Arc;
 
 use membig::memstore::ShardedStore;
 use membig::server::{Client, Server, ServerConfig};
-use membig::util::bench::{bench, bench_out_dir, bench_scale, BenchStat};
+use membig::util::bench::{bench, bench_out_dir, bench_scale, write_bench_json, BenchStat};
 use membig::util::csv::CsvWriter;
 use membig::util::fmt::commas;
 use membig::workload::gen::DatasetSpec;
@@ -114,6 +114,11 @@ fn main() {
     }
     csv.flush().unwrap();
     println!("\nwrote {}", csv_path.display());
+
+    // Machine-readable report for the CI perf trajectory.
+    let json_rows: Vec<_> = rows.iter().map(|(stat, _)| stat.json_row(GROUP as u64)).collect();
+    let json_path = write_bench_json("server_throughput", &json_rows).unwrap();
+    println!("wrote {}", json_path.display());
 
     let headline = update_single.mean.as_secs_f64() / update_mupdate.mean.as_secs_f64();
     println!(

@@ -198,6 +198,18 @@ pub struct EngineConfig {
     pub server_workers: usize,
     /// Admission limit on concurrent server connections.
     pub server_max_conns: usize,
+    /// Durability directory for `membig serve` (WAL + snapshots +
+    /// manifest). `None` (default) = RAM-only serving, tier-1 semantics
+    /// unchanged.
+    pub durable_dir: Option<PathBuf>,
+    /// fsync every group commit (power-loss durable). `false` = flush to
+    /// the kernel only (process-crash durable, much faster).
+    pub fsync: bool,
+    /// Checkpoint at least every N seconds (0 disables the time trigger).
+    pub snapshot_every_secs: u64,
+    /// Checkpoint when the live WAL exceeds N MiB (0 disables the size
+    /// trigger).
+    pub snapshot_wal_mb: u64,
 }
 
 impl Default for EngineConfig {
@@ -218,6 +230,10 @@ impl Default for EngineConfig {
             bind: "127.0.0.1:7979".to_string(),
             server_workers: 0,
             server_max_conns: 1024,
+            durable_dir: None,
+            fsync: true,
+            snapshot_every_secs: 60,
+            snapshot_wal_mb: 64,
         }
     }
 }
@@ -261,6 +277,12 @@ impl EngineConfig {
         }
         set!(self.server_workers, "server", "workers", usize);
         set!(self.server_max_conns, "server", "max_conns", usize);
+        if let Some(v) = get("durability", "dir") {
+            self.durable_dir = if v.is_empty() { None } else { Some(PathBuf::from(v)) };
+        }
+        set!(self.fsync, "durability", "fsync", bool);
+        set!(self.snapshot_every_secs, "durability", "snapshot_every_secs", u64);
+        set!(self.snapshot_wal_mb, "durability", "snapshot_wal_mb", u64);
         set!(self.disk.avg_seek_ms, "disk", "avg_seek_ms", f64);
         set!(self.disk.rotational_ms, "disk", "rotational_ms", f64);
         set!(self.disk.transfer_mb_s, "disk", "transfer_mb_s", f64);
@@ -289,6 +311,16 @@ impl EngineConfig {
         }
         if self.server_max_conns == 0 {
             return Err("server.max_conns must be > 0".into());
+        }
+        if self.durable_dir.is_some()
+            && self.snapshot_every_secs == 0
+            && self.snapshot_wal_mb == 0
+        {
+            return Err(
+                "durability needs at least one checkpoint trigger \
+                 (snapshot_every_secs or snapshot_wal_mb > 0), else the WAL grows forever"
+                    .into(),
+            );
         }
         Ok(self)
     }
@@ -424,6 +456,12 @@ batch_size = 1024
 bind = "0.0.0.0:7000"
 workers = 3
 max_conns = 9
+
+[durability]
+dir = "/var/lib/membig"
+fsync = false
+snapshot_every_secs = 120
+snapshot_wal_mb = 32
 "#;
         let ini = parse_ini(text).unwrap();
         assert_eq!(ini.get("engine", "threads"), Some("8"));
@@ -437,6 +475,31 @@ max_conns = 9
         assert_eq!(cfg.bind, "0.0.0.0:7000");
         assert_eq!(cfg.server_workers, 3);
         assert_eq!(cfg.server_max_conns, 9);
+        assert_eq!(cfg.durable_dir, Some(PathBuf::from("/var/lib/membig")));
+        assert!(!cfg.fsync);
+        assert_eq!(cfg.snapshot_every_secs, 120);
+        assert_eq!(cfg.snapshot_wal_mb, 32);
+    }
+
+    #[test]
+    fn durability_defaults_off_and_triggers_validated() {
+        let cfg = EngineConfig::default();
+        assert_eq!(cfg.durable_dir, None, "tier-1 semantics: durability is opt-in");
+        assert!(cfg.fsync);
+        // An empty dir key turns durability back off (override a file).
+        let ini = parse_ini("[durability]\ndir = \"\"\n").unwrap();
+        let mut cfg = EngineConfig::default();
+        cfg.durable_dir = Some(PathBuf::from("x"));
+        cfg.apply_ini(&ini).unwrap();
+        assert_eq!(cfg.durable_dir, None);
+        // Durable with both checkpoint triggers off is rejected.
+        let mut cfg = EngineConfig::default();
+        cfg.durable_dir = Some(PathBuf::from("/tmp/d"));
+        cfg.snapshot_every_secs = 0;
+        cfg.snapshot_wal_mb = 0;
+        assert!(cfg.clone().validated().is_err());
+        cfg.snapshot_wal_mb = 1;
+        assert!(cfg.validated().is_ok());
     }
 
     #[test]

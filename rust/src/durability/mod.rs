@@ -11,9 +11,18 @@
 //!   a snapshot is a sequential read of 24-byte records — far cheaper than
 //!   re-scanning the paged disk table (see the `recovery` rows of the
 //!   ablations bench).
+//! - [`persist`] — the live layer tying both together behind the server:
+//!   group-committed WAL appends on the mutation path, a background
+//!   snapshotter with generation-numbered checkpoints + manifest, and
+//!   crash recovery that replays `snapshot + WAL chain` to the exact
+//!   pre-crash (synced) state. See `DESIGN.md` §9.
 
+pub mod persist;
 pub mod snapshot;
 pub mod wal;
 
+pub use persist::{
+    CheckpointStats, DurabilityError, DurabilityOptions, Persistence, RecoveryReport,
+};
 pub use snapshot::{load_snapshot, write_snapshot};
 pub use wal::{Wal, WalReader};

@@ -1,0 +1,970 @@
+//! The live persistence layer: WAL group commit + background checkpoints +
+//! manifest-driven crash recovery, behind the serving path.
+//!
+//! The paper's engine loads data into RAM "prior to processing" and writes
+//! results back only at the end — everything in between dies with the
+//! process. [`Persistence`] closes that gap for the one-server front end:
+//!
+//! - **Commit path.** Every acknowledged mutation is appended to the
+//!   current WAL segment *and* applied to the [`ShardedStore`] under one
+//!   mutex, so replay order per key always matches apply order. A request
+//!   batch (`MUPDATE`, `BATCH`) costs **one** `sync()` — group commit —
+//!   and with `fsync = false` the sync degrades to a kernel flush (survives
+//!   `SIGKILL`, not power loss).
+//! - **Checkpoints.** A snapshotter thread rotates the WAL (new generation
+//!   `g+1` opened, old segment fully synced), streams the store to
+//!   `store-<g+1>.snap` one shard lock at a time
+//!   ([`ShardedStore::for_each_shard`]), atomically publishes
+//!   `MANIFEST.json`, then garbage-collects superseded generations.
+//!   Mutations racing the snapshot may appear in both the snapshot and
+//!   `wal-<g+1>` — harmless, because stock updates are absolute
+//!   (replay is idempotent) and WAL order matches apply order.
+//! - **Recovery.** [`Persistence::open`] picks the newest loadable
+//!   snapshot (manifest first, then a directory scan — so a corrupt or
+//!   missing manifest degrades, never bricks), replays the WAL chain
+//!   `wal-g, wal-g+1, ...` over it, drops a torn final frame (per-frame
+//!   CRC), trims the live segment to its valid prefix and appends from
+//!   there. A crash at *any* point — mid-append, mid-rotation,
+//!   mid-manifest — recovers to a prefix-consistent state containing every
+//!   synced write.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::memstore::ShardedStore;
+use crate::metrics::DurabilityMetrics;
+use crate::util::json::{self, Json};
+use crate::workload::record::StockUpdate;
+
+use super::snapshot::{load_snapshot, write_snapshot, SnapshotError};
+use super::wal::{Wal, WalReader, FRAME_BYTES};
+
+const MANIFEST: &str = "MANIFEST.json";
+
+/// Tunables for the persistence layer.
+#[derive(Debug, Clone)]
+pub struct DurabilityOptions {
+    /// `true`: every group commit fsyncs (survives power loss). `false`:
+    /// group commits flush to the kernel only (survives process death,
+    /// ~disk-write-free hot path); checkpoints still fsync.
+    pub fsync: bool,
+    /// Checkpoint at least this often. Zero disables the time trigger.
+    pub snapshot_every: Duration,
+    /// Checkpoint when the current WAL segment exceeds this many bytes.
+    /// Zero disables the size trigger.
+    pub snapshot_wal_bytes: u64,
+}
+
+impl Default for DurabilityOptions {
+    fn default() -> Self {
+        DurabilityOptions {
+            fsync: true,
+            snapshot_every: Duration::from_secs(60),
+            snapshot_wal_bytes: 64 << 20,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub enum DurabilityError {
+    Io(std::io::Error),
+    Snapshot(SnapshotError),
+    /// No recoverable state and the seed loader failed (or refused to run).
+    Seed(String),
+    /// Directory contents are beyond repair (e.g. WAL segments with no
+    /// loadable snapshot at all).
+    Corrupt(String),
+}
+
+impl std::fmt::Display for DurabilityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DurabilityError::Io(e) => write!(f, "io: {e}"),
+            DurabilityError::Snapshot(e) => write!(f, "snapshot: {e}"),
+            DurabilityError::Seed(e) => write!(f, "seed: {e}"),
+            DurabilityError::Corrupt(e) => write!(f, "unrecoverable data dir: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for DurabilityError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DurabilityError::Io(e) => Some(e),
+            DurabilityError::Snapshot(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for DurabilityError {
+    fn from(e: std::io::Error) -> Self {
+        DurabilityError::Io(e)
+    }
+}
+
+impl From<SnapshotError> for DurabilityError {
+    fn from(e: SnapshotError) -> Self {
+        DurabilityError::Snapshot(e)
+    }
+}
+
+/// What [`Persistence::open`] found on disk.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// `true`: the directory was empty and was initialized from the seed.
+    pub fresh: bool,
+    /// Generation of the snapshot the store was rebuilt from.
+    pub snapshot_generation: u64,
+    /// Records loaded from that snapshot.
+    pub snapshot_records: u64,
+    /// Generation of the live WAL segment appends continue into.
+    pub wal_generation: u64,
+    /// WAL frames replayed across the whole chain.
+    pub wal_frames: u64,
+    /// Number of WAL segments replayed.
+    pub chain: usize,
+    /// A torn/corrupt frame was hit and the suffix from it on was dropped.
+    pub torn_tail: bool,
+}
+
+/// Result of one checkpoint.
+#[derive(Debug, Clone)]
+pub struct CheckpointStats {
+    pub generation: u64,
+    pub records: u64,
+    pub elapsed: Duration,
+}
+
+struct WalState {
+    wal: Wal,
+    /// Generation of the segment `wal` appends to.
+    generation: u64,
+    /// Bytes in the current segment (drives the size trigger). Because
+    /// every successful commit flushes, this always equals the on-disk
+    /// segment length — the rollback boundary after a failed append.
+    wal_bytes: u64,
+    /// Frames appended since the last group sync.
+    unsynced: bool,
+    /// Set when a failed append could not be rolled back: the segment may
+    /// hold frames of a mutation that was reported ERR, so accepting more
+    /// writes would let them resurface at replay. All further commits are
+    /// refused; a restart recovers cleanly.
+    poisoned: bool,
+}
+
+struct Shared {
+    dir: PathBuf,
+    opts: DurabilityOptions,
+    store: Arc<ShardedStore>,
+    wal: Mutex<WalState>,
+    /// `true` when the size trigger fired; consumed by the snapshotter.
+    snap_signal: Mutex<bool>,
+    wake: Condvar,
+    stop: AtomicBool,
+    /// Serializes `checkpoint_now` against the background snapshotter.
+    checkpoint_lock: Mutex<()>,
+    metrics: DurabilityMetrics,
+}
+
+/// Live persistence handle. Dropping it stops the snapshotter and performs
+/// a final WAL sync; the on-disk state then recovers byte-exactly.
+pub struct Persistence {
+    shared: Arc<Shared>,
+    snapshotter: Option<std::thread::JoinHandle<()>>,
+}
+
+fn snap_path(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("store-{generation}.snap"))
+}
+
+fn wal_path(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("wal-{generation}.log"))
+}
+
+fn parse_gen(name: &str, prefix: &str, suffix: &str) -> Option<u64> {
+    name.strip_prefix(prefix)?.strip_suffix(suffix)?.parse().ok()
+}
+
+/// Generations with a snapshot file present, newest first.
+fn scan_snapshot_gens(dir: &Path) -> Vec<u64> {
+    let mut gens: Vec<u64> = match std::fs::read_dir(dir) {
+        Ok(rd) => rd
+            .flatten()
+            .filter_map(|e| parse_gen(&e.file_name().to_string_lossy(), "store-", ".snap"))
+            .collect(),
+        Err(_) => Vec::new(),
+    };
+    gens.sort_unstable();
+    gens.dedup();
+    gens.reverse();
+    gens
+}
+
+fn any_wal_segment(dir: &Path) -> bool {
+    match std::fs::read_dir(dir) {
+        Ok(rd) => rd
+            .flatten()
+            .any(|e| parse_gen(&e.file_name().to_string_lossy(), "wal-", ".log").is_some()),
+        Err(_) => false,
+    }
+}
+
+fn read_manifest(dir: &Path) -> Option<u64> {
+    let text = std::fs::read_to_string(dir.join(MANIFEST)).ok()?;
+    let j = json::parse(&text).ok()?;
+    let g = j.get("generation")?.as_f64()?;
+    if !g.is_finite() || g < 0.0 {
+        return None;
+    }
+    Some(g as u64)
+}
+
+/// Atomically publish `MANIFEST.json` for `generation` (tmp + fsync +
+/// rename + directory fsync). The manifest is a hint — recovery survives
+/// it being stale, missing or corrupt — so it is always safe to rewrite.
+fn write_manifest(dir: &Path, generation: u64) -> Result<(), DurabilityError> {
+    let j = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("generation", Json::num(generation as f64)),
+        ("snapshot", Json::str(format!("store-{generation}.snap"))),
+        ("wal", Json::str(format!("wal-{generation}.log"))),
+    ]);
+    let tmp = dir.join("MANIFEST.json.tmp");
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(j.to_string_pretty().as_bytes())?;
+        f.write_all(b"\n")?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, dir.join(MANIFEST))?;
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all(); // directory entry durability (best effort)
+    }
+    Ok(())
+}
+
+/// Delete snapshot/WAL generations strictly below `keep`, plus stray tmp
+/// files. Best effort: a leftover file only wastes space, never blocks
+/// recovery.
+fn gc_below(dir: &Path, keep: u64) {
+    gc_where(dir, |g| g < keep);
+}
+
+/// Delete generations strictly above `keep` — used after a mid-chain tear
+/// so a later recovery cannot resurrect segments past the dropped suffix.
+fn gc_above(dir: &Path, keep: u64) {
+    gc_where(dir, |g| g > keep);
+}
+
+fn gc_where(dir: &Path, cond: impl Fn(u64) -> bool) {
+    let rd = match std::fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(_) => return,
+    };
+    for e in rd.flatten() {
+        let name = e.file_name().to_string_lossy().into_owned();
+        let gen = parse_gen(&name, "store-", ".snap")
+            .or_else(|| parse_gen(&name, "wal-", ".log"));
+        let stale_tmp = name.ends_with(".tmp");
+        if stale_tmp || gen.map(&cond).unwrap_or(false) {
+            let _ = std::fs::remove_file(e.path());
+        }
+    }
+}
+
+impl Persistence {
+    /// Open `dir`: recover the store from the newest consistent
+    /// `snapshot + WAL chain` if one exists, otherwise initialize the
+    /// directory from `seed` (generation-0 snapshot + empty WAL). Returns
+    /// the live store, the persistence handle (snapshotter running), and a
+    /// report of what was recovered.
+    ///
+    /// `shards` sizes the recovered store; `seed` runs only for a fresh
+    /// directory.
+    pub fn open(
+        dir: impl AsRef<Path>,
+        opts: DurabilityOptions,
+        shards: usize,
+        seed: impl FnOnce() -> Result<Arc<ShardedStore>, String>,
+    ) -> Result<(Arc<ShardedStore>, Persistence, RecoveryReport), DurabilityError> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+
+        // Candidate snapshot generations, newest first. A complete snapshot
+        // is self-validating (checksum + record count), so newest-first is
+        // safe even when the manifest lags a crash-interrupted checkpoint.
+        let mut candidates = scan_snapshot_gens(&dir);
+        if let Some(g) = read_manifest(&dir) {
+            if !candidates.contains(&g) {
+                candidates.push(g);
+                candidates.sort_unstable();
+                candidates.reverse();
+            }
+        }
+
+        if candidates.is_empty() {
+            if any_wal_segment(&dir) {
+                return Err(DurabilityError::Corrupt(
+                    "WAL segments present but no snapshot to replay them over".into(),
+                ));
+            }
+            return Self::init_fresh(dir, opts, seed);
+        }
+
+        let mut last_err: Option<DurabilityError> = None;
+        for &g in &candidates {
+            let store = match load_snapshot(snap_path(&dir, g), shards) {
+                Ok(s) => s,
+                Err(e) => {
+                    last_err = Some(e.into());
+                    continue;
+                }
+            };
+            let snapshot_records = store.len() as u64;
+
+            // Replay the WAL chain g, g+1, ... — segments past g exist when
+            // a crash interrupted a checkpoint between rotation and
+            // manifest publication.
+            let mut frames = 0u64;
+            let mut last_file_frames = 0u64;
+            let mut chain = 0usize;
+            let mut torn = false;
+            let mut wal_gen = g;
+            let mut k = g;
+            while wal_path(&dir, k).exists() {
+                let (n, t) =
+                    WalReader::open(wal_path(&dir, k))?.replay(|u| {
+                        store.apply(u);
+                    })?;
+                frames += n;
+                last_file_frames = n;
+                chain += 1;
+                wal_gen = k;
+                if t {
+                    torn = true;
+                    break; // prefix consistency: drop everything after the tear
+                }
+                k += 1;
+            }
+
+            if chain > 0 {
+                // Trim the live segment to its valid prefix so appends
+                // extend a clean log (a torn tail would otherwise hide
+                // every later frame from the next replay).
+                let live = wal_path(&dir, wal_gen);
+                let valid = last_file_frames * FRAME_BYTES as u64;
+                let f = std::fs::OpenOptions::new().write(true).open(&live)?;
+                if f.metadata()?.len() != valid {
+                    f.set_len(valid)?;
+                    f.sync_all()?;
+                }
+            }
+            // Segments past a mid-chain tear (rare: external damage to a
+            // fully-synced segment) must not resurface next recovery.
+            gc_above(&dir, wal_gen);
+            // Re-point the manifest at what we actually recovered from.
+            write_manifest(&dir, g)?;
+
+            let wal = Wal::open(wal_path(&dir, wal_gen))?;
+            let wal_bytes = last_file_frames * FRAME_BYTES as u64;
+            let persist =
+                Self::start(dir.clone(), opts.clone(), store.clone(), wal_gen, wal, wal_bytes);
+            let report = RecoveryReport {
+                fresh: false,
+                snapshot_generation: g,
+                snapshot_records,
+                wal_generation: wal_gen,
+                wal_frames: frames,
+                chain,
+                torn_tail: torn,
+            };
+            return Ok((store, persist, report));
+        }
+        Err(last_err
+            .unwrap_or_else(|| DurabilityError::Corrupt("no loadable snapshot".into())))
+    }
+
+    fn init_fresh(
+        dir: PathBuf,
+        opts: DurabilityOptions,
+        seed: impl FnOnce() -> Result<Arc<ShardedStore>, String>,
+    ) -> Result<(Arc<ShardedStore>, Persistence, RecoveryReport), DurabilityError> {
+        let store = seed().map_err(DurabilityError::Seed)?;
+        let records = write_snapshot(&store, snap_path(&dir, 0))?;
+        let wal = Wal::open(wal_path(&dir, 0))?;
+        write_manifest(&dir, 0)?;
+        let persist = Self::start(dir, opts, store.clone(), 0, wal, 0);
+        let report = RecoveryReport {
+            fresh: true,
+            snapshot_generation: 0,
+            snapshot_records: records,
+            wal_generation: 0,
+            wal_frames: 0,
+            chain: 0,
+            torn_tail: false,
+        };
+        Ok((store, persist, report))
+    }
+
+    fn start(
+        dir: PathBuf,
+        opts: DurabilityOptions,
+        store: Arc<ShardedStore>,
+        generation: u64,
+        wal: Wal,
+        wal_bytes: u64,
+    ) -> Persistence {
+        let shared = Arc::new(Shared {
+            dir,
+            opts,
+            store,
+            wal: Mutex::new(WalState {
+                wal,
+                generation,
+                wal_bytes,
+                unsynced: false,
+                poisoned: false,
+            }),
+            snap_signal: Mutex::new(false),
+            wake: Condvar::new(),
+            stop: AtomicBool::new(false),
+            checkpoint_lock: Mutex::new(()),
+            metrics: DurabilityMetrics::new(),
+        });
+        shared.metrics.generation.set(generation as i64);
+        let snapshotter = spawn_snapshotter(shared.clone());
+        Persistence { shared, snapshotter }
+    }
+
+    /// Log + apply + (optionally) group-sync one update. With
+    /// `sync_now = false` the frame reaches the kernel but the fsync is
+    /// deferred to a later [`Persistence::sync`] — the BATCH path, where
+    /// the whole group is acknowledged by one socket write.
+    pub fn apply_update(&self, u: &StockUpdate, sync_now: bool) -> std::io::Result<bool> {
+        let (applied, _) = self.commit(std::slice::from_ref(u), sync_now)?;
+        Ok(applied == 1)
+    }
+
+    /// Log + apply a batch with **one** sync — group commit, mirroring the
+    /// shard-affine `ShardedStore::apply_many` it wraps.
+    pub fn apply_many(&self, ups: &[StockUpdate], sync_now: bool) -> std::io::Result<(u64, u64)> {
+        self.commit(ups, sync_now)
+    }
+
+    fn commit(&self, ups: &[StockUpdate], sync_now: bool) -> std::io::Result<(u64, u64)> {
+        if ups.is_empty() {
+            return Ok((0, 0));
+        }
+        let sh = &*self.shared;
+        let bytes = (ups.len() * FRAME_BYTES) as u64;
+        // Append *then* apply under one lock: replay order per key can
+        // never diverge from apply order, and a snapshot taken after a
+        // rotation (same lock) always covers the whole prior segment.
+        let mut g = sh.wal.lock().unwrap();
+        if g.poisoned {
+            return Err(std::io::Error::other(
+                "WAL poisoned by an unrecoverable append failure; restart to recover",
+            ));
+        }
+        // Log first, make it durable second, apply to the store LAST — so
+        // any failure before the apply can be rolled back and reported ERR
+        // with the store untouched: an ERR response always means "nothing
+        // changed, retry safely".
+        let mut logged = g.wal.append_batch(ups);
+        let mut fsync_failed = false;
+        if logged.is_ok() {
+            g.unsynced = true;
+            logged = if sync_now {
+                let r = sync_locked(sh, &mut g);
+                fsync_failed = r.is_err() && sh.opts.fsync;
+                r
+            } else {
+                // Flush even without the group sync: the kernel gets the
+                // frames (SIGKILL-safe before the deferred sync lands), and
+                // the buffer-always-empty invariant keeps `wal_bytes` ==
+                // file length — the rollback boundary below.
+                g.wal.flush()
+            };
+        }
+        if let Err(e) = logged {
+            if fsync_failed {
+                // fsyncgate: after a failed fsync the kernel may have
+                // dropped dirty pages while marking them clean, so no
+                // in-process repair (including a re-tried fsync in
+                // discard_and_trim) can re-establish what is durable.
+                // Crash-restart semantics: refuse everything until a
+                // restart replays what actually reached the disk.
+                g.poisoned = true;
+                eprintln!(
+                    "membig: WAL fsync failed; refusing further writes until restart: {e}"
+                );
+            } else {
+                // Write-level failure — durability was never claimed for
+                // these frames, so the segment can be repaired in place:
+                // discard the write buffer and trim back to the last
+                // committed length.
+                let committed = g.wal_bytes;
+                match g.wal.discard_and_trim(committed) {
+                    Ok(()) => g.unsynced = false, // trim fsynced the survivors
+                    Err(repair) => {
+                        g.poisoned = true;
+                        eprintln!(
+                            "membig: WAL rollback after failed commit also failed \
+                             ({repair}); refusing further writes until restart"
+                        );
+                    }
+                }
+            }
+            return Err(e);
+        }
+        let res = sh.store.apply_many(ups);
+        g.wal_bytes += bytes;
+        sh.metrics.wal_appends.add(ups.len() as u64);
+        sh.metrics.wal_bytes.add(bytes);
+        let over = sh.opts.snapshot_wal_bytes > 0 && g.wal_bytes >= sh.opts.snapshot_wal_bytes;
+        drop(g);
+        if over {
+            *sh.snap_signal.lock().unwrap() = true;
+            sh.wake.notify_all();
+        }
+        Ok(res)
+    }
+
+    /// Group sync: make every frame appended so far durable (fsync, or
+    /// kernel flush when `fsync = false`). No-op when nothing is pending.
+    ///
+    /// A failure here poisons the WAL: the pending frames are already
+    /// applied to the store (deferred BATCH commits), so they cannot be
+    /// rolled back, and letting later commits append — and get
+    /// acknowledged — after a non-durable hole would let a crash drop
+    /// acked writes as part of the hole's torn tail.
+    pub fn sync(&self) -> std::io::Result<()> {
+        let sh = &*self.shared;
+        let mut g = sh.wal.lock().unwrap();
+        let r = sync_locked(sh, &mut g);
+        if let Err(ref e) = r {
+            if !g.poisoned {
+                g.poisoned = true;
+                eprintln!(
+                    "membig: WAL group sync failed; refusing further writes until restart: {e}"
+                );
+            }
+        }
+        r
+    }
+
+    /// Run a checkpoint synchronously (tests, shutdown hooks). The
+    /// background snapshotter uses the same serialized path.
+    pub fn checkpoint_now(&self) -> Result<CheckpointStats, DurabilityError> {
+        self.shared.checkpoint()
+    }
+
+    pub fn metrics(&self) -> &DurabilityMetrics {
+        &self.shared.metrics
+    }
+
+    /// `STATS SERVER` suffix for the persistence layer.
+    pub fn stats_suffix(&self) -> String {
+        self.shared.metrics.stats_suffix()
+    }
+
+    /// Generation of the WAL segment currently receiving appends.
+    pub fn wal_generation(&self) -> u64 {
+        self.shared.wal.lock().unwrap().generation
+    }
+}
+
+fn sync_locked(sh: &Shared, g: &mut WalState) -> std::io::Result<()> {
+    if g.poisoned {
+        // Never flush a poisoned buffer — it may hold frames of an ERR'd
+        // mutation that a replay must not see.
+        return Err(std::io::Error::other(
+            "WAL poisoned by an unrecoverable append failure; restart to recover",
+        ));
+    }
+    if !g.unsynced {
+        return Ok(());
+    }
+    if sh.opts.fsync {
+        g.wal.sync()?;
+    } else {
+        g.wal.flush()?;
+    }
+    g.unsynced = false;
+    sh.metrics.wal_syncs.inc();
+    Ok(())
+}
+
+impl Drop for Persistence {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        self.shared.wake.notify_all();
+        if let Some(j) = self.snapshotter.take() {
+            let _ = j.join();
+        }
+        // Final sync: a graceful shutdown loses nothing even with
+        // `fsync = false` (cheap — once per process lifetime). A poisoned
+        // buffer must stay unwritten.
+        if let Ok(mut g) = self.shared.wal.lock() {
+            if !g.poisoned {
+                let _ = g.wal.sync();
+            }
+        }
+    }
+}
+
+impl Shared {
+    /// One checkpoint: rotate the WAL, snapshot the store, publish the
+    /// manifest, GC superseded generations.
+    fn checkpoint(&self) -> Result<CheckpointStats, DurabilityError> {
+        let _serialize = self.checkpoint_lock.lock().unwrap();
+        let t0 = Instant::now();
+        let new_gen = {
+            let mut g = self.wal.lock().unwrap();
+            if g.poisoned {
+                return Err(DurabilityError::Io(std::io::Error::other(
+                    "WAL poisoned; checkpoint would persist frames of an ERR'd mutation",
+                )));
+            }
+            // Everything in the old segment is durable before the rotation:
+            // from here on, snapshot + wal-<new_gen> alone must reconstruct
+            // the state.
+            g.wal.sync()?;
+            g.unsynced = false;
+            let new_gen = g.generation + 1;
+            g.wal = Wal::open(wal_path(&self.dir, new_gen))?;
+            g.generation = new_gen;
+            g.wal_bytes = 0;
+            new_gen
+        };
+        // Stream the store without the WAL lock — commits keep flowing into
+        // the new segment while this runs; racing updates may land in both
+        // the snapshot and the segment, which replay tolerates (absolute
+        // values, apply order preserved).
+        let records = write_snapshot(&self.store, snap_path(&self.dir, new_gen))?;
+        write_manifest(&self.dir, new_gen)?;
+        gc_below(&self.dir, new_gen);
+        let elapsed = t0.elapsed();
+        self.metrics.snapshots.inc();
+        self.metrics.snapshot_last_ms.set(elapsed.as_millis().min(i64::MAX as u128) as i64);
+        self.metrics.snapshot_last_records.set(records.min(i64::MAX as u64) as i64);
+        self.metrics.generation.set(new_gen as i64);
+        Ok(CheckpointStats { generation: new_gen, records, elapsed })
+    }
+}
+
+/// Background checkpoint thread: ticks every 200 ms, fires on the size
+/// signal from the commit path or the elapsed-time trigger. Not spawned
+/// when both triggers are disabled (`checkpoint_now` still works).
+fn spawn_snapshotter(shared: Arc<Shared>) -> Option<std::thread::JoinHandle<()>> {
+    if shared.opts.snapshot_every.is_zero() && shared.opts.snapshot_wal_bytes == 0 {
+        return None;
+    }
+    let handle = std::thread::Builder::new()
+        .name("membig-snapshot".into())
+        .spawn(move || {
+            let mut last = Instant::now();
+            loop {
+                let due_size = {
+                    let guard = shared.snap_signal.lock().unwrap();
+                    let (mut guard, _) = shared
+                        .wake
+                        .wait_timeout(guard, Duration::from_millis(200))
+                        .unwrap();
+                    std::mem::take(&mut *guard)
+                };
+                if shared.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                let every = shared.opts.snapshot_every;
+                let due_time = !every.is_zero() && last.elapsed() >= every;
+                if due_size || due_time {
+                    if let Err(e) = shared.checkpoint() {
+                        self_heal_note(&e);
+                        shared.metrics.snapshot_errors.inc();
+                    }
+                    last = Instant::now();
+                }
+            }
+        })
+        .expect("spawn membig-snapshot thread");
+    Some(handle)
+}
+
+fn self_heal_note(e: &DurabilityError) {
+    // A failed checkpoint is not fatal: the previous snapshot plus a longer
+    // WAL chain still recovers. Surface it and keep serving.
+    eprintln!("membig: background checkpoint failed (state remains recoverable): {e}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::record::BookRecord;
+
+    fn tdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("membig_persist_{}", std::process::id()))
+            .join(name);
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn opts_manual() -> DurabilityOptions {
+        // No background triggers: tests drive checkpoints explicitly.
+        DurabilityOptions {
+            fsync: false,
+            snapshot_every: Duration::ZERO,
+            snapshot_wal_bytes: 0,
+        }
+    }
+
+    fn seeded(n: u64) -> impl FnOnce() -> Result<Arc<ShardedStore>, String> {
+        move || {
+            let s = ShardedStore::new(4, 256);
+            for k in 1..=n {
+                s.insert(BookRecord::new(k, 100, 1));
+            }
+            Ok(Arc::new(s))
+        }
+    }
+
+    fn no_seed() -> impl FnOnce() -> Result<Arc<ShardedStore>, String> {
+        || Err("seed must not run on recovery".into())
+    }
+
+    fn up(k: u64, price: u64, qty: u32) -> StockUpdate {
+        StockUpdate { isbn13: k, new_price_cents: price, new_quantity: qty }
+    }
+
+    #[test]
+    fn fresh_init_then_reopen_replays_all_commits() {
+        let dir = tdir("fresh");
+        let (store, persist, rep) =
+            Persistence::open(&dir, opts_manual(), 4, seeded(100)).unwrap();
+        assert!(rep.fresh);
+        assert_eq!(rep.snapshot_records, 100);
+        assert_eq!(persist.wal_generation(), 0);
+
+        assert!(persist.apply_update(&up(1, 500, 5), true).unwrap());
+        assert!(!persist.apply_update(&up(9_999, 1, 1), true).unwrap(), "miss is logged too");
+        let (applied, missed) =
+            persist.apply_many(&[up(2, 600, 6), up(3, 700, 7), up(8_888, 1, 1)], true).unwrap();
+        assert_eq!((applied, missed), (2, 1));
+        // Deferred group: two appends, one sync.
+        persist.apply_update(&up(4, 800, 8), false).unwrap();
+        persist.apply_update(&up(5, 900, 9), false).unwrap();
+        persist.sync().unwrap();
+        assert_eq!(persist.metrics().wal_appends.get(), 7);
+        assert_eq!(store.get(4).unwrap().price_cents, 800);
+        drop(persist);
+        drop(store);
+
+        let (store, persist, rep) =
+            Persistence::open(&dir, opts_manual(), 8, no_seed()).unwrap();
+        assert!(!rep.fresh);
+        assert_eq!(rep.snapshot_generation, 0);
+        assert_eq!(rep.wal_generation, 0);
+        assert_eq!(rep.wal_frames, 7);
+        assert_eq!(rep.chain, 1);
+        assert!(!rep.torn_tail);
+        assert_eq!(store.len(), 100);
+        for (k, price, qty) in [(1, 500, 5u32), (2, 600, 6), (3, 700, 7), (4, 800, 8), (5, 900, 9)]
+        {
+            let r = store.get(k).unwrap();
+            assert_eq!((r.price_cents, r.quantity), (price, qty), "key {k}");
+        }
+        assert_eq!(store.get(50).unwrap().price_cents, 100, "untouched key unchanged");
+        drop(persist);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_rotates_gcs_and_recovers_from_new_generation() {
+        let dir = tdir("rotate");
+        let (store, persist, _) =
+            Persistence::open(&dir, opts_manual(), 4, seeded(50)).unwrap();
+        let phase1: Vec<StockUpdate> = (1..=50).map(|k| up(k, 1_000 + k, 2)).collect();
+        persist.apply_many(&phase1, true).unwrap();
+
+        let stats = persist.checkpoint_now().unwrap();
+        assert_eq!(stats.generation, 1);
+        assert_eq!(stats.records, 50);
+        assert_eq!(persist.wal_generation(), 1);
+        assert!(snap_path(&dir, 1).exists());
+        assert!(wal_path(&dir, 1).exists());
+        assert!(!snap_path(&dir, 0).exists(), "old snapshot GC'd");
+        assert!(!wal_path(&dir, 0).exists(), "old WAL GC'd");
+        assert_eq!(read_manifest(&dir), Some(1));
+        assert_eq!(persist.metrics().snapshots.get(), 1);
+        assert_eq!(persist.metrics().generation.get(), 1);
+
+        // Post-checkpoint tail lands in wal-1.
+        persist.apply_many(&[up(7, 77_777, 7), up(8, 88_888, 8)], true).unwrap();
+        drop(persist);
+        drop(store);
+
+        let (store, persist, rep) =
+            Persistence::open(&dir, opts_manual(), 4, no_seed()).unwrap();
+        assert_eq!(rep.snapshot_generation, 1);
+        assert_eq!(rep.wal_generation, 1);
+        assert_eq!(rep.wal_frames, 2);
+        assert_eq!(store.get(7).unwrap().price_cents, 77_777);
+        assert_eq!(store.get(8).unwrap().quantity, 8);
+        assert_eq!(store.get(9).unwrap().price_cents, 1_009, "phase-1 value via snapshot");
+        drop(persist);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_live_tail_is_dropped_trimmed_and_appendable() {
+        let dir = tdir("torn");
+        let (_, persist, _) = Persistence::open(&dir, opts_manual(), 4, seeded(20)).unwrap();
+        for k in 1..=10u64 {
+            persist.apply_update(&up(k, 2_000 + k, 3), true).unwrap();
+        }
+        drop(persist);
+
+        // Crash mid-frame: cut 7 bytes into the 9th frame.
+        let live = wal_path(&dir, 0);
+        let full = std::fs::metadata(&live).unwrap().len();
+        assert_eq!(full, 10 * FRAME_BYTES as u64);
+        let f = std::fs::OpenOptions::new().write(true).open(&live).unwrap();
+        f.set_len(8 * FRAME_BYTES as u64 + 7).unwrap();
+        drop(f);
+
+        let (store, persist, rep) = Persistence::open(&dir, opts_manual(), 4, no_seed()).unwrap();
+        assert!(rep.torn_tail);
+        assert_eq!(rep.wal_frames, 8);
+        assert_eq!(store.get(8).unwrap().price_cents, 2_008);
+        assert_eq!(store.get(9).unwrap().price_cents, 100, "torn frame dropped");
+        assert_eq!(
+            std::fs::metadata(&live).unwrap().len(),
+            8 * FRAME_BYTES as u64,
+            "live WAL trimmed to its valid prefix"
+        );
+
+        // Appends after the trim must survive another restart.
+        persist.apply_update(&up(15, 42_000, 4), true).unwrap();
+        drop(persist);
+        let (store, persist, rep) = Persistence::open(&dir, opts_manual(), 4, no_seed()).unwrap();
+        assert!(!rep.torn_tail);
+        assert_eq!(rep.wal_frames, 9);
+        assert_eq!(store.get(15).unwrap().price_cents, 42_000);
+        assert_eq!(store.get(8).unwrap().price_cents, 2_008);
+        drop(persist);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recovery_without_manifest_scans_for_newest_snapshot() {
+        let dir = tdir("noman");
+        let (_, persist, _) = Persistence::open(&dir, opts_manual(), 4, seeded(30)).unwrap();
+        persist.apply_many(&(1..=30).map(|k| up(k, 3_000 + k, 1)).collect::<Vec<_>>(), true)
+            .unwrap();
+        persist.checkpoint_now().unwrap();
+        persist.apply_update(&up(5, 55_555, 5), true).unwrap();
+        drop(persist);
+
+        std::fs::remove_file(dir.join(MANIFEST)).unwrap();
+        let (store, persist, rep) = Persistence::open(&dir, opts_manual(), 4, no_seed()).unwrap();
+        assert_eq!(rep.snapshot_generation, 1);
+        assert_eq!(rep.wal_frames, 1);
+        assert_eq!(store.get(5).unwrap().price_cents, 55_555);
+        assert_eq!(store.get(6).unwrap().price_cents, 3_006);
+        assert_eq!(read_manifest(&dir), Some(1), "manifest rewritten after recovery");
+        drop(persist);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crash_between_rotation_and_manifest_replays_the_chain() {
+        // Hand-build the on-disk layout a crash between WAL rotation and
+        // manifest publication leaves behind: manifest + snapshot at gen 5,
+        // plus wal-5 AND wal-6 (the freshly rotated segment).
+        let dir = tdir("chain");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = ShardedStore::new(4, 64);
+        for k in 1..=40u64 {
+            base.insert(BookRecord::new(k, 100, 1));
+        }
+        write_snapshot(&base, snap_path(&dir, 5)).unwrap();
+        write_manifest(&dir, 5).unwrap();
+        {
+            let mut w = Wal::open(wal_path(&dir, 5)).unwrap();
+            w.append_batch(&(1..=20).map(|k| up(k, 5_000 + k, 2)).collect::<Vec<_>>()).unwrap();
+            w.sync().unwrap();
+        }
+        {
+            let mut w = Wal::open(wal_path(&dir, 6)).unwrap();
+            w.append_batch(&[up(1, 60_001, 6), up(21, 60_021, 6)]).unwrap();
+            w.sync().unwrap();
+        }
+
+        let (store, persist, rep) = Persistence::open(&dir, opts_manual(), 4, no_seed()).unwrap();
+        assert_eq!(rep.snapshot_generation, 5);
+        assert_eq!(rep.wal_generation, 6, "appends continue into the newest segment");
+        assert_eq!(rep.chain, 2);
+        assert_eq!(rep.wal_frames, 22);
+        assert_eq!(store.get(1).unwrap().price_cents, 60_001, "wal-6 wins over wal-5");
+        assert_eq!(store.get(20).unwrap().price_cents, 5_020);
+        assert_eq!(store.get(21).unwrap().price_cents, 60_021);
+        assert_eq!(store.get(22).unwrap().price_cents, 100);
+        // The next checkpoint moves past the whole chain.
+        persist.checkpoint_now().unwrap();
+        assert_eq!(persist.wal_generation(), 7);
+        assert!(!wal_path(&dir, 5).exists());
+        assert!(!wal_path(&dir, 6).exists());
+        drop(persist);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn size_trigger_checkpoints_in_background() {
+        let dir = tdir("sizetrig");
+        let opts = DurabilityOptions {
+            fsync: false,
+            snapshot_every: Duration::ZERO,
+            snapshot_wal_bytes: 10 * FRAME_BYTES as u64,
+        };
+        let (_, persist, _) = Persistence::open(&dir, opts, 4, seeded(20)).unwrap();
+        persist
+            .apply_many(&(1..=20).map(|k| up(k, 4_000 + k, 4)).collect::<Vec<_>>(), true)
+            .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while persist.metrics().snapshots.get() == 0 {
+            assert!(Instant::now() < deadline, "background size-triggered checkpoint never ran");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(persist.wal_generation() >= 1);
+        drop(persist);
+        let (store, persist, rep) = Persistence::open(
+            &dir,
+            DurabilityOptions { snapshot_wal_bytes: 0, ..opts_manual() },
+            4,
+            no_seed(),
+        )
+        .unwrap();
+        assert!(rep.snapshot_generation >= 1);
+        assert_eq!(store.get(20).unwrap().price_cents, 4_020);
+        drop(persist);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_commit_is_a_noop() {
+        let dir = tdir("empty");
+        let (_, persist, _) = Persistence::open(&dir, opts_manual(), 2, seeded(1)).unwrap();
+        assert_eq!(persist.apply_many(&[], true).unwrap(), (0, 0));
+        assert_eq!(persist.metrics().wal_appends.get(), 0);
+        persist.sync().unwrap();
+        assert_eq!(persist.metrics().wal_syncs.get(), 0, "no pending frames, no sync");
+        drop(persist);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

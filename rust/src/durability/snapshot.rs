@@ -83,13 +83,26 @@ pub fn write_snapshot(store: &ShardedStore, path: impl AsRef<Path>) -> Result<u6
 
     let mut count = 0u64;
     let mut checksum = FNV_SEED;
-    for s in 0..store.shard_count() {
-        for rec in store.shard_records(s) {
+    // `for_each_shard` copies one shard out under its own lock and hands it
+    // over lock-free — a live store keeps serving the other shards while
+    // this loop streams to disk (the snapshotter's iteration hook).
+    let mut io_err: Option<std::io::Error> = None;
+    store.for_each_shard(|_, recs| {
+        if io_err.is_some() {
+            return;
+        }
+        for rec in recs {
             let enc = rec.encode();
             checksum = fnv64(checksum, &enc);
-            out.write_all(&enc)?;
+            if let Err(e) = out.write_all(&enc) {
+                io_err = Some(e);
+                return;
+            }
             count += 1;
         }
+    });
+    if let Some(e) = io_err {
+        return Err(e.into());
     }
     out.flush()?;
     let file = out.into_inner().map_err(|e| SnapshotError::Io(e.into_error()))?;

@@ -20,6 +20,10 @@ use crate::workload::record::StockUpdate;
 
 const FRAME: usize = 24;
 
+/// Exact on-disk size of one WAL frame — exported so the persistence layer
+/// and the crash-point property tests can reason about byte offsets.
+pub const FRAME_BYTES: usize = FRAME;
+
 fn frame_crc(buf: &[u8; FRAME]) -> u32 {
     let mut h: u32 = 0x811c_9dc5;
     for &b in &buf[..20] {
@@ -52,8 +56,14 @@ fn decode(b: &[u8; FRAME]) -> Option<StockUpdate> {
 }
 
 /// Appender. One per process; the pipeline's reader thread owns it.
+///
+/// The writer is an `Option` so [`Wal::discard_and_trim`] can dismantle a
+/// poisoned buffer *infallibly* (taking it apart via `into_parts`, never
+/// via `Drop`, which would flush it). `None` only after a failed rollback;
+/// every other method then reports the WAL as dismantled instead of
+/// touching the file.
 pub struct Wal {
-    out: BufWriter<File>,
+    out: Option<BufWriter<File>>,
     appended: u64,
 }
 
@@ -61,11 +71,17 @@ impl Wal {
     /// Open for append (created if missing).
     pub fn open(path: impl AsRef<Path>) -> std::io::Result<Self> {
         let f = OpenOptions::new().create(true).append(true).open(path)?;
-        Ok(Wal { out: BufWriter::with_capacity(1 << 20, f), appended: 0 })
+        Ok(Wal { out: Some(BufWriter::with_capacity(1 << 20, f)), appended: 0 })
+    }
+
+    fn writer(&mut self) -> std::io::Result<&mut BufWriter<File>> {
+        self.out
+            .as_mut()
+            .ok_or_else(|| std::io::Error::other("WAL writer dismantled by a failed rollback"))
     }
 
     pub fn append(&mut self, u: &StockUpdate) -> std::io::Result<()> {
-        self.out.write_all(&encode(u))?;
+        self.writer()?.write_all(&encode(u))?;
         self.appended += 1;
         Ok(())
     }
@@ -79,8 +95,40 @@ impl Wal {
 
     /// Group commit: flush + fsync.
     pub fn sync(&mut self) -> std::io::Result<()> {
-        self.out.flush()?;
-        self.out.get_ref().sync_data()
+        let w = self.writer()?;
+        w.flush()?;
+        w.get_ref().sync_data()
+    }
+
+    /// Push buffered frames to the kernel without the fsync. Data written
+    /// here survives a process kill (the OS has it) but not power loss —
+    /// the persistence layer uses this as its `fsync = false` mode.
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.writer()?.flush()
+    }
+
+    /// Crash-consistency repair after a failed append: throw away every
+    /// buffered-but-unwritten byte, trim the file back to `keep_bytes` —
+    /// frames of the failed batch may have spilled to disk when the buffer
+    /// filled — and resume appending on the same descriptor (`O_APPEND`
+    /// sticks to the fd, so later writes land at the trimmed end).
+    ///
+    /// The buffer is discarded *before* anything fallible runs: even if the
+    /// trim fails, no later flush — explicit or `Drop` — can write the
+    /// abandoned frames. On trim failure the `Wal` stays dismantled (every
+    /// operation errors) rather than risk extending a bad segment.
+    /// Requires `keep_bytes <=` the current file length, which holds
+    /// whenever callers flush after every successful append run.
+    pub fn discard_and_trim(&mut self, keep_bytes: u64) -> std::io::Result<()> {
+        let (file, _discarded_buffer) = self
+            .out
+            .take()
+            .ok_or_else(|| std::io::Error::other("WAL writer already dismantled"))?
+            .into_parts();
+        file.set_len(keep_bytes)?;
+        file.sync_all()?;
+        self.out = Some(BufWriter::with_capacity(1 << 20, file));
+        Ok(())
     }
 
     pub fn appended(&self) -> u64 {
@@ -258,6 +306,29 @@ mod tests {
         assert_eq!(n, 1_000);
         assert!(!torn);
         assert_eq!(recovered.value_sum_cents(), expected);
+    }
+
+    #[test]
+    fn discard_and_trim_drops_unflushed_frames_and_stays_appendable() {
+        let path = tpath("discard.wal");
+        let ups = arb_updates(30, 9);
+        let mut w = Wal::open(&path).unwrap();
+        w.append_batch(&ups[..10]).unwrap();
+        w.sync().unwrap();
+        // Buffered-only frames (never flushed) simulate a failed commit.
+        w.append_batch(&ups[10..20]).unwrap();
+        w.discard_and_trim(10 * FRAME as u64).unwrap();
+        // Post-repair appends extend the trimmed log cleanly.
+        w.append_batch(&ups[20..30]).unwrap();
+        w.sync().unwrap();
+        drop(w);
+
+        let mut got = Vec::new();
+        let (n, torn) = WalReader::open(&path).unwrap().replay(|u| got.push(*u)).unwrap();
+        assert_eq!(n, 20);
+        assert!(!torn);
+        assert_eq!(&got[..10], &ups[..10]);
+        assert_eq!(&got[10..], &ups[20..30], "discarded frames must never resurface");
     }
 
     #[test]

@@ -16,6 +16,7 @@ use std::sync::Arc;
 use membig::config::{Args, EngineConfig, FlagSpec};
 use membig::coordinator::{Coordinator, Workbench};
 use membig::coordinator::report::{render_figure6, render_table1, RunReport};
+use membig::durability::{DurabilityOptions, Persistence};
 use membig::runtime::AnalyticsService;
 use membig::server::{Server, ServerConfig};
 use membig::util::fmt::{commas, human_duration, paper_hms};
@@ -38,6 +39,10 @@ fn spec() -> Vec<FlagSpec> {
         FlagSpec { name: "bind", value: "ADDR", help: "serve: TCP bind address" },
         FlagSpec { name: "workers", value: "N", help: "serve: request worker threads (default = max(cores, 4))" },
         FlagSpec { name: "max-conns", value: "N", help: "serve: max concurrent connections (default 1024)" },
+        FlagSpec { name: "durable-dir", value: "DIR", help: "serve: WAL + snapshot directory; enables crash recovery (default off)" },
+        FlagSpec { name: "fsync", value: "BOOL", help: "serve: fsync every group commit (default true; false = kernel flush only)" },
+        FlagSpec { name: "snapshot-every", value: "SECS", help: "serve: checkpoint interval in seconds (default 60; 0 = off)" },
+        FlagSpec { name: "snapshot-wal-mb", value: "MB", help: "serve: checkpoint when the WAL exceeds MB MiB (default 64; 0 = off)" },
         FlagSpec { name: "writeback", value: "", help: "persist memstore back to disk after update" },
         FlagSpec { name: "json", value: "", help: "emit machine-readable JSON report" },
         FlagSpec { name: "help", value: "", help: "show this help" },
@@ -160,9 +165,52 @@ fn run() -> Result<(), String> {
             Ok(())
         }
         "serve" => {
-            let coord = Coordinator::new(cfg.clone());
-            let table = wb.ensure_table(&cfg).map_err(|e| e.to_string())?;
-            let store = coord.load_only(&table).map_err(|e| e.to_string())?;
+            // With --durable-dir: recover `snapshot + WAL chain` when the
+            // directory has state, else seed it from the workbench table;
+            // every acknowledged mutation is then WAL-logged before its OK.
+            let (store, persist) = match cfg.durable_dir.clone() {
+                Some(dir) => {
+                    let opts = DurabilityOptions {
+                        fsync: cfg.fsync,
+                        snapshot_every: std::time::Duration::from_secs(cfg.snapshot_every_secs),
+                        snapshot_wal_bytes: cfg.snapshot_wal_mb.saturating_mul(1 << 20),
+                    };
+                    let seed_cfg = cfg.clone();
+                    let seed_wb = &wb;
+                    let (store, persist, report) =
+                        Persistence::open(&dir, opts, cfg.shards, move || {
+                            let coord = Coordinator::new(seed_cfg.clone());
+                            let table = seed_wb.ensure_table(&seed_cfg).map_err(|e| e.to_string())?;
+                            coord.load_only(&table).map_err(|e| e.to_string())
+                        })
+                        .map_err(|e| e.to_string())?;
+                    if report.fresh {
+                        println!(
+                            "durability: initialized {} (snapshot of {} records, fsync={})",
+                            dir.display(),
+                            commas(report.snapshot_records),
+                            cfg.fsync
+                        );
+                    } else {
+                        println!(
+                            "durability: recovered {} — snapshot gen {} ({} records) + {} WAL \
+                             frame(s) across {} segment(s){}",
+                            dir.display(),
+                            report.snapshot_generation,
+                            commas(report.snapshot_records),
+                            commas(report.wal_frames),
+                            report.chain,
+                            if report.torn_tail { " (torn tail dropped)" } else { "" }
+                        );
+                    }
+                    (store, Some(Arc::new(persist)))
+                }
+                None => {
+                    let coord = Coordinator::new(cfg.clone());
+                    let table = wb.ensure_table(&cfg).map_err(|e| e.to_string())?;
+                    (coord.load_only(&table).map_err(|e| e.to_string())?, None)
+                }
+            };
             let engine = start_analytics(&cfg, args.get("backend"))?;
             let mut server_cfg = ServerConfig::default();
             if cfg.server_workers > 0 {
@@ -170,14 +218,15 @@ fn run() -> Result<(), String> {
             }
             server_cfg.max_conns = cfg.server_max_conns;
             println!(
-                "serving {} records on {} (analytics: {}; workers: {}; max conns: {})",
+                "serving {} records on {} (analytics: {}; workers: {}; max conns: {}; durability: {})",
                 commas(store.len() as u64),
                 cfg.bind,
                 engine.as_deref().map(AnalyticsService::backend_name).unwrap_or("disabled"),
                 server_cfg.workers,
-                server_cfg.max_conns
+                server_cfg.max_conns,
+                if persist.is_some() { "on" } else { "off" }
             );
-            let handle = Server::with_config(store, engine, server_cfg)
+            let handle = Server::with_persistence(store, engine, server_cfg, persist)
                 .spawn(&cfg.bind)
                 .map_err(|e| e.to_string())?;
             println!("listening on {} — Ctrl-C to stop", handle.addr);
@@ -259,6 +308,18 @@ fn build_config(args: &Args) -> Result<EngineConfig, String> {
     }
     if let Some(m) = args.get_parsed::<usize>("max-conns").map_err(|e| e.to_string())? {
         cfg.server_max_conns = m;
+    }
+    if let Some(d) = args.get("durable-dir") {
+        cfg.durable_dir = if d.is_empty() { None } else { Some(PathBuf::from(d)) };
+    }
+    if let Some(f) = args.get_parsed::<bool>("fsync").map_err(|e| e.to_string())? {
+        cfg.fsync = f;
+    }
+    if let Some(s) = args.get_parsed::<u64>("snapshot-every").map_err(|e| e.to_string())? {
+        cfg.snapshot_every_secs = s;
+    }
+    if let Some(m) = args.get_parsed::<u64>("snapshot-wal-mb").map_err(|e| e.to_string())? {
+        cfg.snapshot_wal_mb = m;
     }
     if args.has("writeback") {
         cfg.writeback = true;

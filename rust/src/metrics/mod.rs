@@ -65,6 +65,17 @@ impl Gauge {
         self.0.fetch_sub(1, Ordering::Relaxed);
     }
 
+    #[inline]
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite the reading (last-observation gauges: snapshot duration,
+    /// current WAL generation, ...).
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
     pub fn get(&self) -> i64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -193,6 +204,20 @@ impl Histogram {
             }
         }
         self.max()
+    }
+
+    /// Zero every bucket and the count/sum/min/max registers. Not atomic
+    /// with respect to concurrent `record` calls — a racing sample may land
+    /// in either epoch — which is fine for its purpose: separating
+    /// consecutive measurement runs (`STATS RESET`).
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> HistogramSnapshot {
@@ -388,6 +413,9 @@ pub struct ServerMetrics {
     pub conns_active: Gauge,
     pub accept_errors: Counter,
     pub requests: Counter,
+    /// Bumped by [`ServerMetrics::reset_epoch`] (`STATS RESET`); lets a
+    /// reader tell which measurement window a report belongs to.
+    pub epoch: Counter,
     /// Keys (MGET) / update groups (MUPDATE) / lines (BATCH) per batch verb.
     pub batch_sizes: Histogram,
     pub get_latency: Histogram,
@@ -432,15 +460,34 @@ impl ServerMetrics {
         ]
     }
 
+    /// Start a fresh measurement window (`STATS RESET`): zero the request
+    /// and connection *counters* and every latency/batch-size histogram,
+    /// then bump and return the epoch. The `conns_active` gauge is live
+    /// state, not a measurement, and is deliberately left alone — right
+    /// after a reset `conns_active` may exceed `conns_accepted`.
+    pub fn reset_epoch(&self) -> u64 {
+        self.conns_accepted.reset();
+        self.conns_rejected.reset();
+        self.accept_errors.reset();
+        self.requests.reset();
+        self.batch_sizes.reset();
+        for (_, h) in self.verbs() {
+            h.reset();
+        }
+        self.epoch.inc();
+        self.epoch.get()
+    }
+
     /// Connection-counter suffix appended to the basic `STATS` line.
     pub fn stats_suffix(&self) -> String {
         format!(
-            " conns_accepted={} conns_active={} conns_rejected={} accept_errors={} requests={}",
+            " conns_accepted={} conns_active={} conns_rejected={} accept_errors={} requests={} epoch={}",
             self.conns_accepted.get(),
             self.conns_active.get(),
             self.conns_rejected.get(),
             self.accept_errors.get(),
-            self.requests.get()
+            self.requests.get(),
+            self.epoch.get()
         )
     }
 
@@ -474,12 +521,88 @@ impl ServerMetrics {
             ("conns_active", Json::num(self.conns_active.get() as f64)),
             ("accept_errors", Json::num(self.accept_errors.get() as f64)),
             ("requests", Json::num(self.requests.get() as f64)),
+            ("epoch", Json::num(self.epoch.get() as f64)),
             ("batch_sizes", self.batch_sizes.snapshot().to_json()),
             ("get_latency", self.get_latency.snapshot().to_json()),
             ("update_latency", self.update_latency.snapshot().to_json()),
             ("mget_latency", self.mget_latency.snapshot().to_json()),
             ("mupdate_latency", self.mupdate_latency.snapshot().to_json()),
             ("batch_latency", self.batch_latency.snapshot().to_json()),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Durability metrics bundle
+// ---------------------------------------------------------------------------
+
+/// Metrics for the persistence layer behind the server: WAL traffic,
+/// group-commit syncs and checkpoint activity. One instance per
+/// `durability::Persistence`, shared by the commit path and the
+/// snapshotter thread; rendered into `STATS SERVER`.
+#[derive(Default)]
+pub struct DurabilityMetrics {
+    /// WAL frames appended (one per acknowledged mutation).
+    pub wal_appends: Counter,
+    /// WAL bytes appended (lifetime total, not current-file size).
+    pub wal_bytes: Counter,
+    /// Group-commit sync operations (fsync, or flush-only when fsync off).
+    pub wal_syncs: Counter,
+    /// Checkpoints completed since startup.
+    pub snapshots: Counter,
+    /// Background checkpoints that failed (state stays recoverable from the
+    /// previous snapshot + longer WAL chain).
+    pub snapshot_errors: Counter,
+    /// Wall-clock of the most recent checkpoint, in milliseconds.
+    pub snapshot_last_ms: Gauge,
+    /// Records written by the most recent checkpoint.
+    pub snapshot_last_records: Gauge,
+    /// Current WAL generation (bumped by every checkpoint rotation).
+    pub generation: Gauge,
+}
+
+impl DurabilityMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Joins a `STATS RESET` epoch: zero the traffic *counters* so two
+    /// measurement runs can compare WAL/checkpoint activity, keeping the
+    /// state gauges (last-snapshot readings, current generation) intact.
+    pub fn reset_epoch_counters(&self) {
+        self.wal_appends.reset();
+        self.wal_bytes.reset();
+        self.wal_syncs.reset();
+        self.snapshots.reset();
+        self.snapshot_errors.reset();
+    }
+
+    /// Suffix appended to `STATS SERVER` when a persistence layer is live.
+    pub fn stats_suffix(&self) -> String {
+        format!(
+            " wal_appends={} wal_bytes={} wal_syncs={} snapshots={} snapshot_errors={} \
+             snapshot_last_ms={} snapshot_last_records={} generation={}",
+            self.wal_appends.get(),
+            self.wal_bytes.get(),
+            self.wal_syncs.get(),
+            self.snapshots.get(),
+            self.snapshot_errors.get(),
+            self.snapshot_last_ms.get(),
+            self.snapshot_last_records.get(),
+            self.generation.get()
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("wal_appends", Json::num(self.wal_appends.get() as f64)),
+            ("wal_bytes", Json::num(self.wal_bytes.get() as f64)),
+            ("wal_syncs", Json::num(self.wal_syncs.get() as f64)),
+            ("snapshots", Json::num(self.snapshots.get() as f64)),
+            ("snapshot_errors", Json::num(self.snapshot_errors.get() as f64)),
+            ("snapshot_last_ms", Json::num(self.snapshot_last_ms.get() as f64)),
+            ("snapshot_last_records", Json::num(self.snapshot_last_records.get() as f64)),
+            ("generation", Json::num(self.generation.get() as f64)),
         ])
     }
 }
@@ -600,6 +723,98 @@ mod tests {
         g.dec();
         g.dec();
         assert_eq!(g.get(), -1, "extra dec must be visible, not wrap");
+    }
+
+    #[test]
+    fn gauge_set_and_add() {
+        let g = Gauge::new();
+        g.set(41);
+        g.add(2);
+        g.dec();
+        assert_eq!(g.get(), 42);
+        g.set(-7);
+        assert_eq!(g.get(), -7);
+    }
+
+    #[test]
+    fn histogram_reset_clears_all_registers() {
+        let h = Histogram::new();
+        for v in [1u64, 1000, 1 << 20] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 3);
+        h.reset();
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.min_ns, 0);
+        assert_eq!(s.max_ns, 0);
+        assert_eq!(h.quantile(0.99), 0);
+        // The histogram is reusable: post-reset samples are a clean run.
+        h.record(500);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.min(), 500);
+        assert_eq!(h.max(), 500);
+    }
+
+    #[test]
+    fn reset_epoch_separates_two_measurement_runs() {
+        let m = ServerMetrics::new();
+        // Run 1.
+        m.conns_accepted.inc();
+        m.requests.add(10);
+        m.latency_for("GET").record(100);
+        m.latency_for("MUPDATE").record(200);
+        m.batch_sizes.record(64);
+        m.conns_active.inc();
+        assert_eq!(m.reset_epoch(), 1);
+        // Run 2 starts clean (except the live gauge).
+        assert_eq!(m.requests.get(), 0);
+        assert_eq!(m.conns_accepted.get(), 0);
+        assert_eq!(m.get_latency.count(), 0);
+        assert_eq!(m.mupdate_latency.count(), 0);
+        assert_eq!(m.batch_sizes.count(), 0);
+        assert_eq!(m.conns_active.get(), 1, "live gauge must survive the reset");
+        m.latency_for("GET").record(300);
+        assert_eq!(m.get_latency.count(), 1);
+        assert_eq!(m.get_latency.min(), 300, "run 1 samples must not contaminate run 2");
+        assert!(m.stats_suffix().contains("epoch=1"), "{}", m.stats_suffix());
+        assert_eq!(m.reset_epoch(), 2);
+    }
+
+    #[test]
+    fn durability_metrics_render_and_json() {
+        let d = DurabilityMetrics::new();
+        d.wal_appends.add(5);
+        d.wal_bytes.add(120);
+        d.wal_syncs.inc();
+        d.snapshots.inc();
+        d.snapshot_last_ms.set(17);
+        d.snapshot_last_records.set(1000);
+        d.generation.set(3);
+        let s = d.stats_suffix();
+        for needle in [
+            " wal_appends=5",
+            " wal_bytes=120",
+            " wal_syncs=1",
+            " snapshots=1",
+            " snapshot_errors=0",
+            " snapshot_last_ms=17",
+            " snapshot_last_records=1000",
+            " generation=3",
+        ] {
+            assert!(s.contains(needle), "missing {needle:?} in {s:?}");
+        }
+        let j = d.to_json();
+        assert_eq!(j.get("wal_appends").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(j.get("generation").unwrap().as_f64().unwrap(), 3.0);
+        // Epoch reset zeroes the traffic counters but keeps state gauges.
+        d.reset_epoch_counters();
+        assert_eq!(d.wal_appends.get(), 0);
+        assert_eq!(d.wal_bytes.get(), 0);
+        assert_eq!(d.wal_syncs.get(), 0);
+        assert_eq!(d.snapshots.get(), 0);
+        assert_eq!(d.snapshot_last_ms.get(), 17, "last-snapshot gauge is state, not traffic");
+        assert_eq!(d.generation.get(), 3);
     }
 
     #[test]

@@ -12,7 +12,9 @@
 //! BATCH <n>                     → n follow-up request lines, answered with
 //!                                 n response lines in one socket write
 //! STATS                         → OK count=<n> value_cents=<v> conns_...
-//! STATS SERVER                  → OK <conn counters + per-verb latency>
+//! STATS SERVER                  → OK <conn counters + per-verb latency
+//!                                 + WAL/snapshot gauges when durable>
+//! STATS RESET                   → OK epoch=<e> (fresh measurement window)
 //! ANALYTICS                     → OK value=<dollars> ... (analytics backend)
 //! PING                          → PONG
 //! QUIT                          → BYE (closes connection)
@@ -27,6 +29,14 @@
 //! `ShardedStore::route` and each shard lock is taken once per batch, so a
 //! loaded front end scales like the pipeline's workers instead of one
 //! thread per socket.
+//!
+//! Durability: built with [`Server::with_persistence`], every mutation
+//! (`UPDATE`/`MUPDATE`/`BATCH` payload) is WAL-logged through
+//! [`durability::Persistence`](crate::durability::Persistence) *before* it
+//! is acknowledged — one group sync per request batch (`BATCH` defers each
+//! line's sync and issues exactly one before the group's single response
+//! write). Without a persistence layer the request path is byte-for-byte
+//! the old RAM-only one.
 
 pub mod batch;
 pub mod pool;
@@ -37,6 +47,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::durability::Persistence;
 use crate::memstore::ShardedStore;
 use crate::metrics::ServerMetrics;
 use crate::runtime::AnalyticsService;
@@ -82,6 +93,7 @@ impl Default for ServerConfig {
 pub struct Server {
     store: Arc<ShardedStore>,
     engine: Option<Arc<AnalyticsService>>,
+    persist: Option<Arc<Persistence>>,
     stop: Arc<AtomicBool>,
     pub metrics: Arc<ServerMetrics>,
     config: ServerConfig,
@@ -102,7 +114,21 @@ impl Server {
     pub fn with_config(
         store: Arc<ShardedStore>,
         engine: Option<Arc<AnalyticsService>>,
+        config: ServerConfig,
+    ) -> Self {
+        Self::with_persistence(store, engine, config, None)
+    }
+
+    /// Full constructor: a server whose mutations are WAL-logged and
+    /// group-committed through `persist` before they are acknowledged.
+    /// The store behind `persist` must be the same `store` passed here —
+    /// the persistence layer applies mutations itself so the log and the
+    /// memory image can never diverge.
+    pub fn with_persistence(
+        store: Arc<ShardedStore>,
+        engine: Option<Arc<AnalyticsService>>,
         mut config: ServerConfig,
+        persist: Option<Arc<Persistence>>,
     ) -> Self {
         // Clamp here so the admission check and the pool agree: a raw
         // max_conns of 0 would otherwise reject every connection while the
@@ -112,6 +138,7 @@ impl Server {
         Server {
             store,
             engine,
+            persist,
             stop: Arc::new(AtomicBool::new(false)),
             metrics: Arc::new(ServerMetrics::new()),
             config,
@@ -137,6 +164,7 @@ impl Server {
         let pool = {
             let store = self.store.clone();
             let engine = self.engine.clone();
+            let persist = self.persist.clone();
             let stop = self.stop.clone();
             let metrics = self.metrics.clone();
             let cfg = self.config.clone();
@@ -147,7 +175,15 @@ impl Server {
                     // Guard (not a trailing call) so the admission slot is
                     // released even if request handling panics.
                     let _guard = ActiveGuard(&metrics);
-                    let _ = handle_client(stream, &store, engine.as_ref(), &stop, &metrics, &cfg);
+                    let _ = handle_client(
+                        stream,
+                        &store,
+                        engine.as_ref(),
+                        persist.as_deref(),
+                        &stop,
+                        &metrics,
+                        &cfg,
+                    );
                 },
             )
         };
@@ -320,10 +356,12 @@ fn read_request_line(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_client(
     stream: TcpStream,
     store: &Arc<ShardedStore>,
     engine: Option<&Arc<AnalyticsService>>,
+    persist: Option<&Persistence>,
     stop: &AtomicBool,
     metrics: &ServerMetrics,
     cfg: &ServerConfig,
@@ -353,14 +391,15 @@ fn handle_client(
         if verb == "BATCH" {
             // The framing header is not counted as a request — run_batch
             // counts each payload line, so `requests` matches executed ops.
-            let quit = run_batch(req, &mut reader, &mut out, store, engine, stop, metrics, cfg)?;
+            let quit =
+                run_batch(req, &mut reader, &mut out, store, engine, persist, stop, metrics, cfg)?;
             line.clear();
             if quit {
                 return Ok(());
             }
             continue;
         }
-        let response = execute_one(req, store, engine, metrics, false);
+        let response = execute_one(req, store, engine, persist, metrics, false);
         out.write_all(response.as_bytes())?;
         out.write_all(b"\n")?;
         let quit = req == "QUIT";
@@ -378,6 +417,7 @@ fn execute_one(
     req: &str,
     store: &Arc<ShardedStore>,
     engine: Option<&Arc<AnalyticsService>>,
+    persist: Option<&Persistence>,
     metrics: &ServerMetrics,
     in_batch: bool,
 ) -> String {
@@ -387,7 +427,8 @@ fn execute_one(
     // `other` so batch_latency keeps whole-group samples only.
     let verb = if in_batch && verb == "BATCH" { "" } else { verb };
     let t0 = Instant::now();
-    let response = dispatch_with_metrics(req, store, engine, Some(metrics));
+    let ctx = RequestCtx { store, engine, metrics: Some(metrics), persist };
+    let response = dispatch_ctx(req, &ctx, in_batch);
     metrics.latency_for(verb).record_duration(t0.elapsed());
     response
 }
@@ -403,6 +444,7 @@ fn run_batch(
     out: &mut TcpStream,
     store: &Arc<ShardedStore>,
     engine: Option<&Arc<AnalyticsService>>,
+    persist: Option<&Persistence>,
     stop: &AtomicBool,
     metrics: &ServerMetrics,
     cfg: &ServerConfig,
@@ -454,19 +496,42 @@ fn run_batch(
     let mut quit = false;
     let mut responses = String::with_capacity(n * 16);
     for req in &lines {
-        responses.push_str(&execute_one(req, store, engine, metrics, true));
+        responses.push_str(&execute_one(req, store, engine, persist, metrics, true));
         responses.push('\n');
         quit = quit || req == "QUIT";
+    }
+    // Group commit: every mutation in the batch deferred its sync to this
+    // single call — one fsync per BATCH, issued *before* the one socket
+    // write that acknowledges the group. If the sync fails we must not
+    // deliver the buffered OKs (they would ack unlogged writes): drop the
+    // responses and close the connection.
+    if let Some(p) = persist {
+        if let Err(e) = p.sync() {
+            eprintln!("membig: WAL group sync failed, closing connection: {e}");
+            return Ok(true);
+        }
     }
     out.write_all(responses.as_bytes())?;
     metrics.batch_latency.record_duration(t0.elapsed());
     Ok(quit)
 }
 
+/// Everything a request may touch while executing. Bundled so the dispatch
+/// signature stops growing a parameter per subsystem.
+#[derive(Clone, Copy)]
+pub struct RequestCtx<'a> {
+    pub store: &'a Arc<ShardedStore>,
+    pub engine: Option<&'a Arc<AnalyticsService>>,
+    pub metrics: Option<&'a ServerMetrics>,
+    /// When set, `UPDATE`/`MUPDATE` are logged + applied through the
+    /// persistence layer (never acknowledged before the WAL has them).
+    pub persist: Option<&'a Persistence>,
+}
+
 /// Parse + execute one request line (separated out for direct unit tests).
 /// Strict parsing: unconsumed trailing tokens are an `ERR`, never ignored.
 pub fn dispatch(line: &str, store: &Arc<ShardedStore>, engine: Option<&Arc<AnalyticsService>>) -> String {
-    dispatch_with_metrics(line, store, engine, None)
+    dispatch_ctx(line, &RequestCtx { store, engine, metrics: None, persist: None }, false)
 }
 
 /// [`dispatch`] with optional server metrics: batch sizes are recorded, the
@@ -478,6 +543,14 @@ pub fn dispatch_with_metrics(
     engine: Option<&Arc<AnalyticsService>>,
     metrics: Option<&ServerMetrics>,
 ) -> String {
+    dispatch_ctx(line, &RequestCtx { store, engine, metrics, persist: None }, false)
+}
+
+/// Core dispatcher. `in_batch` marks a BATCH payload line: its mutations
+/// defer their WAL sync to the one group commit `run_batch` issues before
+/// the group's single response write.
+pub fn dispatch_ctx(line: &str, ctx: &RequestCtx<'_>, in_batch: bool) -> String {
+    let RequestCtx { store, engine, metrics, persist } = *ctx;
     let line = line.trim();
     let (verb, rest) = match line.split_once(|c: char| c.is_ascii_whitespace()) {
         Some((v, r)) => (v, r.trim()),
@@ -502,7 +575,16 @@ pub fn dispatch_with_metrics(
             match (key, cents, qty, parts.next()) {
                 (Some(k), Some(c), Some(q), None) => {
                     let u = StockUpdate { isbn13: k, new_price_cents: c, new_quantity: q };
-                    if store.apply(&u) {
+                    let applied = match persist {
+                        // WAL-first: the ack below only happens once the
+                        // frame is logged (and synced, outside a BATCH).
+                        Some(p) => match p.apply_update(&u, !in_batch) {
+                            Ok(applied) => applied,
+                            Err(e) => return format!("ERR durability: {e}"),
+                        },
+                        None => store.apply(&u),
+                    };
+                    if applied {
                         "OK".into()
                     } else {
                         "MISS".into()
@@ -525,7 +607,15 @@ pub fn dispatch_with_metrics(
                 if let Some(m) = metrics {
                     m.batch_sizes.record(ups.len() as u64);
                 }
-                batch::exec_mupdate(store, &ups)
+                match persist {
+                    // Group commit: the whole MUPDATE is one WAL append
+                    // run + one sync (deferred inside a BATCH).
+                    Some(p) => match p.apply_many(&ups, !in_batch) {
+                        Ok((applied, missed)) => format!("OK applied={applied} missed={missed}"),
+                        Err(e) => format!("ERR durability: {e}"),
+                    },
+                    None => batch::exec_mupdate(store, &ups),
+                }
             }
             Err(e) => format!("ERR {e}"),
         },
@@ -541,10 +631,30 @@ pub fn dispatch_with_metrics(
                     s
                 }
                 (Some("SERVER"), None) => match metrics {
-                    Some(m) => m.stats_server_line(),
+                    Some(m) => {
+                        let mut s = m.stats_server_line();
+                        if let Some(p) = persist {
+                            s.push_str(&p.stats_suffix());
+                        }
+                        s
+                    }
                     None => "ERR server metrics unavailable".into(),
                 },
-                _ => "ERR STATS expects no argument or SERVER".into(),
+                // Fresh measurement window: zero the counters + latency
+                // histograms (and the WAL/checkpoint traffic counters when
+                // durable) so consecutive bench runs cannot contaminate
+                // each other; the epoch counter marks which window a
+                // report belongs to.
+                (Some("RESET"), None) => match metrics {
+                    Some(m) => {
+                        if let Some(p) = persist {
+                            p.metrics().reset_epoch_counters();
+                        }
+                        format!("OK epoch={}", m.reset_epoch())
+                    }
+                    None => "ERR server metrics unavailable".into(),
+                },
+                _ => "ERR STATS expects no argument, SERVER or RESET".into(),
             }
         }
         "ANALYTICS" => {
@@ -736,6 +846,74 @@ mod tests {
         let resp = dispatch_with_metrics("STATS SERVER", &s, None, Some(&m));
         assert!(resp.starts_with("OK conns_accepted=1"), "{resp}");
         assert_eq!(dispatch("STATS SERVER", &s, None), "ERR server metrics unavailable");
+    }
+
+    #[test]
+    fn stats_reset_starts_a_fresh_window() {
+        let (s, spec) = store(10);
+        let m = ServerMetrics::new();
+        let key = spec.record_at(1).isbn13;
+        let ctx = RequestCtx { store: &s, engine: None, metrics: Some(&m), persist: None };
+        m.latency_for("GET").record(123);
+        m.requests.add(4);
+        assert_eq!(dispatch_ctx("STATS RESET", &ctx, false), "OK epoch=1");
+        assert_eq!(m.get_latency.count(), 0);
+        assert_eq!(m.requests.get(), 0);
+        let line = dispatch_ctx("STATS SERVER", &ctx, false);
+        assert!(line.contains("epoch=1"), "{line}");
+        assert!(line.contains("get_n=0"), "{line}");
+        // RESET without metrics is an ERR, and parsing stays strict.
+        assert!(dispatch(&format!("GET {key}"), &s, None).starts_with("OK"));
+        assert!(dispatch("STATS RESET", &s, None).starts_with("ERR"));
+        assert!(dispatch_ctx("STATS RESET extra", &ctx, false).starts_with("ERR"));
+    }
+
+    #[test]
+    fn durable_dispatch_logs_before_acking() {
+        use crate::durability::{DurabilityOptions, Persistence};
+        let dir = std::env::temp_dir()
+            .join(format!("membig_srv_dur_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let opts = DurabilityOptions {
+            fsync: false,
+            snapshot_every: std::time::Duration::ZERO,
+            snapshot_wal_bytes: 0,
+        };
+        let (s, persist, _) = Persistence::open(&dir, opts.clone(), 4, || {
+            let s = ShardedStore::new(4, 64);
+            for k in 1..=20u64 {
+                s.insert(crate::workload::record::BookRecord::new(k, 100, 1));
+            }
+            Ok(Arc::new(s))
+        })
+        .unwrap();
+        let ctx = RequestCtx { store: &s, engine: None, metrics: None, persist: Some(&persist) };
+        assert_eq!(dispatch_ctx("UPDATE 1 999 9", &ctx, false), "OK");
+        assert_eq!(dispatch_ctx("UPDATE 777 1 1", &ctx, false), "MISS");
+        assert_eq!(dispatch_ctx("MUPDATE 2 222 2;3 333 3;888 1 1", &ctx, false),
+            "OK applied=2 missed=1");
+        // In-batch mutations defer the sync; an explicit group sync lands them.
+        assert_eq!(dispatch_ctx("UPDATE 4 444 4", &ctx, true), "OK");
+        persist.sync().unwrap();
+        assert_eq!(persist.metrics().wal_appends.get(), 6);
+        let m = ServerMetrics::new();
+        let mctx = RequestCtx { metrics: Some(&m), ..ctx };
+        let line = dispatch_ctx("STATS SERVER", &mctx, false);
+        assert!(line.contains("wal_appends=6"), "{line}");
+        // STATS RESET opens a fresh window for the WAL counters too.
+        assert_eq!(dispatch_ctx("STATS RESET", &mctx, false), "OK epoch=1");
+        let line = dispatch_ctx("STATS SERVER", &mctx, false);
+        assert!(line.contains("wal_appends=0"), "{line}");
+        drop(persist);
+
+        // The ack was WAL-backed: a reopen replays every response we gave.
+        let (s2, persist2, _) =
+            Persistence::open(&dir, opts, 4, || Err("must recover".into())).unwrap();
+        assert_eq!(s2.get(1).unwrap().price_cents, 999);
+        assert_eq!(s2.get(3).unwrap().quantity, 3);
+        assert_eq!(s2.get(4).unwrap().price_cents, 444);
+        drop(persist2);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -6,6 +6,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchStat {
     pub name: String,
@@ -13,6 +15,7 @@ pub struct BenchStat {
     pub min: Duration,
     pub mean: Duration,
     pub p50: Duration,
+    pub p99: Duration,
     pub max: Duration,
 }
 
@@ -76,6 +79,7 @@ pub fn stat_from(name: &str, mut samples: Vec<Duration>) -> BenchStat {
         min: samples[0],
         mean,
         p50: samples[n / 2],
+        p99: samples[((n * 99) / 100).min(n - 1)],
         max: samples[n - 1],
     }
 }
@@ -100,6 +104,89 @@ pub fn bench_out_dir() -> std::path::PathBuf {
     );
     std::fs::create_dir_all(&d).ok();
     d
+}
+
+// ---------------------------------------------------------------------------
+// Machine-readable bench reports (CI perf trajectory)
+// ---------------------------------------------------------------------------
+
+/// One result row of the repo-root `BENCH_<name>.json` schema CI uploads as
+/// an artifact: throughput plus tail latency and sample count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchJsonRow {
+    pub name: String,
+    pub ops_per_sec: f64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    /// Measured iterations behind the row.
+    pub n: u64,
+}
+
+impl BenchStat {
+    /// Convert to the JSON-report row, given `ops` executed per iteration.
+    pub fn json_row(&self, ops: u64) -> BenchJsonRow {
+        BenchJsonRow {
+            name: self.name.clone(),
+            ops_per_sec: self.ops_per_sec(ops),
+            p50_ns: self.p50.as_nanos().min(u64::MAX as u128) as u64,
+            p99_ns: self.p99.as_nanos().min(u64::MAX as u128) as u64,
+            n: self.iters as u64,
+        }
+    }
+}
+
+/// Write `BENCH_<bench>.json` to the repository root (override the
+/// directory with `MEMBIG_BENCH_JSON_DIR`). CI runs `make bench-smoke` and
+/// uploads these files as artifacts, so the perf trajectory is recorded
+/// per commit instead of evaporating with the job log. Returns the path
+/// written.
+pub fn write_bench_json(
+    bench: &str,
+    rows: &[BenchJsonRow],
+) -> std::io::Result<std::path::PathBuf> {
+    let dir = match std::env::var("MEMBIG_BENCH_JSON_DIR") {
+        Ok(d) => std::path::PathBuf::from(d),
+        // CARGO_MANIFEST_DIR is `<repo>/rust`; the schema lives at the root.
+        Err(_) => std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("crate dir has a parent")
+            .to_path_buf(),
+    };
+    write_bench_json_to(&dir, bench, rows)
+}
+
+/// [`write_bench_json`] with an explicit directory (the env-free core —
+/// also what the unit tests drive, since mutating the process environment
+/// under the multi-threaded test harness races `getenv`).
+pub fn write_bench_json_to(
+    dir: &std::path::Path,
+    bench: &str,
+    rows: &[BenchJsonRow],
+) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("BENCH_{bench}.json"));
+    let json = Json::obj(vec![
+        ("bench", Json::str(bench)),
+        ("scale", Json::num(bench_scale() as f64)),
+        (
+            "results",
+            Json::arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("name", Json::str(r.name.clone())),
+                            ("ops_per_sec", Json::num(r.ops_per_sec)),
+                            ("p50_ns", Json::num(r.p50_ns as f64)),
+                            ("p99_ns", Json::num(r.p99_ns as f64)),
+                            ("n", Json::num(r.n as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(&path, json.to_string_pretty() + "\n")?;
+    Ok(path)
 }
 
 #[cfg(test)]
@@ -136,5 +223,37 @@ mod tests {
         let (v, d) = time_once(|| 42);
         assert_eq!(v, 42);
         assert!(d < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn p99_tracks_the_tail() {
+        let mut samples = vec![Duration::from_micros(100); 99];
+        samples.push(Duration::from_secs(1));
+        let s = stat_from("tail", samples);
+        assert_eq!(s.p99, Duration::from_secs(1));
+        assert!(s.p50 < Duration::from_millis(1));
+        // Tiny sample counts degrade to the max rather than panicking.
+        let s = stat_from("tiny", vec![Duration::from_micros(5); 3]);
+        assert_eq!(s.p99, Duration::from_micros(5));
+    }
+
+    #[test]
+    fn bench_json_schema_roundtrips() {
+        let dir = std::env::temp_dir().join(format!("membig_benchjson_{}", std::process::id()));
+        let stat = stat_from("cfg-a", vec![Duration::from_millis(2); 10]);
+        let rows = vec![stat.json_row(64)];
+        let path = write_bench_json_to(&dir, "unit_test", &rows).unwrap();
+        assert_eq!(path.file_name().unwrap().to_str().unwrap(), "BENCH_unit_test.json");
+        let parsed =
+            crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("unit_test"));
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("cfg-a"));
+        assert_eq!(results[0].get("n").unwrap().as_f64(), Some(10.0));
+        let ops = results[0].get("ops_per_sec").unwrap().as_f64().unwrap();
+        assert!((ops - 32_000.0).abs() < 1_000.0, "64 ops / 2ms ≈ 32k ops/s, got {ops}");
+        assert!(results[0].get("p99_ns").unwrap().as_f64().unwrap() > 0.0);
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -504,3 +504,116 @@ fn concurrent_get_update_interleaving_is_consistent() {
     }
     handle.shutdown();
 }
+
+#[test]
+fn durable_server_replays_acked_writes_after_restart() {
+    use membig::durability::{DurabilityOptions, Persistence};
+
+    let dir = std::env::temp_dir().join(format!("membig_is_durable_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let spec = DatasetSpec { records: 2_000, ..Default::default() };
+    let opts = DurabilityOptions {
+        fsync: false,
+        snapshot_every: Duration::ZERO,
+        snapshot_wal_bytes: 0,
+    };
+
+    let (s, persist, report) = Persistence::open(&dir, opts.clone(), 4, || {
+        let s = Arc::new(ShardedStore::new(4, 1 << 12));
+        for r in spec.iter() {
+            s.insert(r);
+        }
+        Ok(s)
+    })
+    .unwrap();
+    assert!(report.fresh);
+    let persist = Arc::new(persist);
+    let handle =
+        Server::with_persistence(s, None, ServerConfig::default(), Some(persist.clone()))
+            .spawn("127.0.0.1:0")
+            .unwrap();
+    let mut c = Client::connect(handle.addr).unwrap();
+
+    // 20 single UPDATEs + one MUPDATE of 30 + one BATCH of 10 = 60 frames.
+    for i in 0..20u64 {
+        let k = spec.record_at(i).isbn13;
+        assert_eq!(c.request(&format!("UPDATE {k} {} 1", 1_000 + i)).unwrap(), "OK");
+    }
+    let groups: Vec<String> = (20..50u64)
+        .map(|i| format!("{} {} 2", spec.record_at(i).isbn13, 2_000 + i))
+        .collect();
+    assert_eq!(
+        c.request(&format!("MUPDATE {}", groups.join(";"))).unwrap(),
+        "OK applied=30 missed=0"
+    );
+    let lines: Vec<String> = (50..60u64)
+        .map(|i| format!("UPDATE {} {} 3", spec.record_at(i).isbn13, 3_000 + i))
+        .collect();
+    let rs = c.batch(&lines).unwrap();
+    assert!(rs.iter().all(|r| r == "OK"), "{rs:?}");
+
+    // STATS SERVER surfaces the persistence gauges.
+    let stats = c.request("STATS SERVER").unwrap();
+    assert!(stats.contains("wal_appends=60"), "{stats}");
+    assert!(stats.contains("generation=0"), "{stats}");
+
+    let _ = c.request("QUIT");
+    handle.shutdown();
+    drop(persist); // final sync, snapshotter down
+
+    // "Restart": recover and serve the exact acknowledged state over TCP.
+    let (s2, persist2, report) =
+        Persistence::open(&dir, opts, 4, || Err("seed must not run on recovery".into())).unwrap();
+    assert!(!report.fresh);
+    assert_eq!(report.wal_frames, 60);
+    let persist2 = Arc::new(persist2);
+    let handle =
+        Server::with_persistence(s2, None, ServerConfig::default(), Some(persist2.clone()))
+            .spawn("127.0.0.1:0")
+            .unwrap();
+    let mut c = Client::connect(handle.addr).unwrap();
+    for (i, want_price, want_qty) in [(5u64, 1_005u64, 1u32), (35, 2_035, 2), (55, 3_055, 3)] {
+        let k = spec.record_at(i).isbn13;
+        assert_eq!(c.request(&format!("GET {k}")).unwrap(), format!("OK {want_price} {want_qty}"));
+    }
+    let untouched = spec.record_at(100);
+    assert_eq!(
+        c.request(&format!("GET {}", untouched.isbn13)).unwrap(),
+        format!("OK {} {}", untouched.price_cents, untouched.quantity)
+    );
+    let _ = c.request("QUIT");
+    handle.shutdown();
+    drop(persist2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stats_reset_isolates_consecutive_bench_runs() {
+    let (s, spec) = store(100);
+    let handle = Server::new(s, None).spawn("127.0.0.1:0").unwrap();
+    let mut c = Client::connect(handle.addr).unwrap();
+    let k = spec.record_at(0).isbn13;
+
+    // Bench run 1.
+    for _ in 0..10 {
+        assert!(c.request(&format!("GET {k}")).unwrap().starts_with("OK"));
+    }
+    let r = c.request("STATS SERVER").unwrap();
+    assert!(r.contains("get_n=10"), "{r}");
+    assert!(r.contains("epoch=0"), "{r}");
+
+    // Reset → run 2 starts from a clean window.
+    assert_eq!(c.request("STATS RESET").unwrap(), "OK epoch=1");
+    let r = c.request("STATS SERVER").unwrap();
+    assert!(r.contains("get_n=0"), "{r}");
+    assert!(r.contains("epoch=1"), "{r}");
+
+    for _ in 0..3 {
+        assert!(c.request(&format!("GET {k}")).unwrap().starts_with("OK"));
+    }
+    let r = c.request("STATS SERVER").unwrap();
+    assert!(r.contains("get_n=3"), "run 1 contaminated run 2: {r}");
+
+    let _ = c.request("QUIT");
+    handle.shutdown();
+}

@@ -2,7 +2,12 @@
 //! crash-point invariance of WAL replay, corruption detection of
 //! snapshots, and parser totality on hostile bytes.
 
-use membig::durability::{load_snapshot, write_snapshot, Wal, WalReader};
+use std::sync::Arc;
+use std::time::Duration;
+
+use membig::durability::{
+    load_snapshot, write_snapshot, DurabilityOptions, Persistence, Wal, WalReader,
+};
 use membig::ipc::{Request, Response};
 use membig::memstore::ShardedStore;
 use membig::util::prop::Prop;
@@ -98,6 +103,107 @@ fn prop_snapshot_roundtrips_and_detects_any_corruption() {
             Ok(())
         },
     );
+}
+
+/// WAL rotation + manifest selection under crash-point sweep: after a
+/// checkpoint has rotated the log (snapshot generation 1, live segment
+/// `wal-1`), truncating the live segment at **any** byte offset must
+/// recover to `snapshot + the whole-frame prefix` of the tail — and the
+/// trimmed log must keep accepting appends that survive a further restart.
+#[test]
+fn prop_rotated_wal_truncated_anywhere_recovers_prefix_consistent_store() {
+    Prop::new("persistence: torn live WAL at any byte → snapshot + whole-frame prefix")
+        .cases(12)
+        .run(|rng| {
+            let dir = tdir().join(format!("persist_{}", rng.next_u64()));
+            std::fs::remove_dir_all(&dir).ok();
+            let n = rng.range_usize(50, 200) as u64;
+            let opts = DurabilityOptions {
+                fsync: false,
+                snapshot_every: Duration::ZERO,
+                snapshot_wal_bytes: 0,
+            };
+
+            let (_store, persist, _rep) = Persistence::open(&dir, opts.clone(), 4, || {
+                let s = ShardedStore::new(4, 256);
+                for k in 1..=n {
+                    s.insert(BookRecord::new(k, 100, 1));
+                }
+                Ok(Arc::new(s))
+            })
+            .map_err(|e| e.to_string())?;
+
+            // Phase 1, then a checkpoint: phase-1 state lives in snapshot
+            // generation 1; the old wal-0 is garbage-collected.
+            let phase1: Vec<StockUpdate> = (1..=n)
+                .map(|k| StockUpdate { isbn13: k, new_price_cents: 1_000 + k, new_quantity: 2 })
+                .collect();
+            persist.apply_many(&phase1, true).map_err(|e| e.to_string())?;
+            persist.checkpoint_now().map_err(|e| e.to_string())?;
+
+            // Phase 2: the live tail in wal-1. Distinct keys, so any prefix
+            // of it is a well-defined store state.
+            let tail_n = rng.range_usize(1, 80) as u64;
+            let tail: Vec<StockUpdate> = (1..=tail_n)
+                .map(|k| StockUpdate { isbn13: k, new_price_cents: 70_000 + k, new_quantity: 9 })
+                .collect();
+            persist.apply_many(&tail, true).map_err(|e| e.to_string())?;
+            drop(persist);
+
+            // Crash: truncate the live segment at a uniform byte offset.
+            let wal1 = dir.join("wal-1.log");
+            let full = std::fs::metadata(&wal1).map_err(|e| e.to_string())?.len();
+            prop_assert_eq!(full, tail_n * 24);
+            let cut = rng.gen_range(full + 1); // 0..=full
+            let f = std::fs::OpenOptions::new()
+                .write(true)
+                .open(&wal1)
+                .map_err(|e| e.to_string())?;
+            f.set_len(cut).map_err(|e| e.to_string())?;
+            drop(f);
+            let keep = cut / 24;
+
+            let (store, persist, rep) =
+                Persistence::open(&dir, opts.clone(), 4, || Err("seed must not run".into()))
+                    .map_err(|e| e.to_string())?;
+            prop_assert_eq!(rep.snapshot_generation, 1);
+            prop_assert_eq!(rep.wal_generation, 1);
+            prop_assert_eq!(rep.wal_frames, keep);
+            prop_assert_eq!(rep.torn_tail, cut % 24 != 0);
+            for k in 1..=n {
+                let got = store.get(k).ok_or_else(|| format!("key {k} missing"))?;
+                let (want_price, want_qty): (u64, u32) =
+                    if k <= keep { (70_000 + k, 9) } else { (1_000 + k, 2) };
+                prop_assert!(
+                    got.price_cents == want_price && got.quantity == want_qty,
+                    "key {} has ({}, {}), want ({}, {}) at cut {}",
+                    k,
+                    got.price_cents,
+                    got.quantity,
+                    want_price,
+                    want_qty,
+                    cut
+                );
+            }
+
+            // The trimmed segment accepts appends that survive a restart.
+            persist
+                .apply_update(
+                    &StockUpdate { isbn13: 1, new_price_cents: 424_242, new_quantity: 4 },
+                    true,
+                )
+                .map_err(|e| e.to_string())?;
+            drop(persist);
+            let (store, persist, rep) =
+                Persistence::open(&dir, opts, 4, || Err("seed must not run".into()))
+                    .map_err(|e| e.to_string())?;
+            prop_assert!(!rep.torn_tail, "trimmed log replayed torn again at cut {}", cut);
+            prop_assert_eq!(rep.wal_frames, keep + 1);
+            prop_assert_eq!(store.get(1).map(|r| r.price_cents), Some(424_242));
+            drop(persist);
+            std::fs::remove_dir_all(&dir).ok();
+            Ok(())
+        });
 }
 
 #[test]

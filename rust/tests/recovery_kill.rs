@@ -1,0 +1,180 @@
+//! Crash-recovery integration: run the real `membig serve` binary with
+//! `--durable-dir`, acknowledge writes through every mutation verb,
+//! `SIGKILL` the process (no shutdown hook runs, buffers are not flushed by
+//! us), restart it over the same directory and assert that **every
+//! acknowledged write** is served back by `GET`.
+//!
+//! This is the ISSUE-3 acceptance test and runs as its own explicit CI step
+//! so durability regressions fail loudly.
+
+use std::io::BufRead;
+use std::net::SocketAddr;
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use membig::server::Client;
+use membig::workload::gen::DatasetSpec;
+
+const RECORDS: u64 = 2_000;
+const SEED: u64 = 7;
+
+/// A running `membig serve` child. Dropping it SIGKILLs the process, so a
+/// failing assertion can never leak a server.
+struct ServerProc {
+    child: Child,
+    addr: SocketAddr,
+}
+
+impl Drop for ServerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill(); // SIGKILL on unix
+        let _ = self.child.wait();
+    }
+}
+
+impl ServerProc {
+    fn spawn(tmp: &Path) -> ServerProc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_membig"))
+            .arg("serve")
+            .arg("--records")
+            .arg(RECORDS.to_string())
+            .arg("--seed")
+            .arg(SEED.to_string())
+            .arg("--bind")
+            .arg("127.0.0.1:0")
+            .arg("--backend")
+            .arg("off")
+            .arg("--workers")
+            .arg("2")
+            .arg("--data-dir")
+            .arg(tmp.join("work"))
+            .arg("--durable-dir")
+            .arg(tmp.join("durable"))
+            // No background checkpoint during the test: recovery must come
+            // from the gen-0 snapshot + the whole WAL.
+            .arg("--snapshot-every")
+            .arg("3600")
+            // Kernel-flush durability: SIGKILL-safe (the OS has the bytes)
+            // and fast enough for CI. Power-loss durability (--fsync true)
+            // exercises the same replay path.
+            .arg("--fsync")
+            .arg("false")
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn membig serve (CARGO_BIN_EXE_membig)");
+
+        let stdout = child.stdout.take().expect("child stdout piped");
+        let mut lines = std::io::BufReader::new(stdout).lines();
+        let deadline = Instant::now() + Duration::from_secs(120);
+        let addr = loop {
+            assert!(
+                Instant::now() < deadline,
+                "server did not print its listen address in time"
+            );
+            match lines.next() {
+                Some(Ok(line)) => {
+                    if let Some(rest) = line.strip_prefix("listening on ") {
+                        let tok = rest.split_whitespace().next().unwrap_or("");
+                        break tok.parse::<SocketAddr>().expect("parse listen address");
+                    }
+                }
+                Some(Err(e)) => panic!("reading server stdout: {e}"),
+                None => panic!("server exited before printing its listen address"),
+            }
+        };
+        // Keep draining stdout so the child can never block on a full pipe.
+        std::thread::spawn(move || for _ in lines {});
+        ServerProc { child, addr }
+    }
+}
+
+/// Expected (price, qty) for key index `i` after the write phase.
+fn expected(i: u64) -> (u64, u32) {
+    match i {
+        0..=99 => (10_000 + i, i as u32),
+        100..=199 => (20_000 + i, i as u32),
+        _ => (30_000 + i, i as u32),
+    }
+}
+
+#[test]
+fn sigkill_mid_load_then_restart_replays_every_acked_write() {
+    let tmp = std::env::temp_dir().join(format!("membig_recovery_kill_{}", std::process::id()));
+    std::fs::remove_dir_all(&tmp).ok();
+    std::fs::create_dir_all(&tmp).unwrap();
+    let spec = DatasetSpec { records: RECORDS, seed: SEED, ..Default::default() };
+
+    // Phase 1: load acknowledged writes through all three mutation paths.
+    let server = ServerProc::spawn(&tmp);
+    let mut c = Client::connect(server.addr).expect("connect");
+
+    for i in 0..100u64 {
+        let k = spec.record_at(i).isbn13;
+        let (p, q) = expected(i);
+        assert_eq!(c.request(&format!("UPDATE {k} {p} {q}")).unwrap(), "OK");
+    }
+    let groups: Vec<String> = (100..200u64)
+        .map(|i| {
+            let (p, q) = expected(i);
+            format!("{} {p} {q}", spec.record_at(i).isbn13)
+        })
+        .collect();
+    assert_eq!(
+        c.request(&format!("MUPDATE {}", groups.join(";"))).unwrap(),
+        "OK applied=100 missed=0"
+    );
+    let lines: Vec<String> = (200..300u64)
+        .map(|i| {
+            let (p, q) = expected(i);
+            format!("UPDATE {} {p} {q}", spec.record_at(i).isbn13)
+        })
+        .collect();
+    let responses = c.batch(&lines).unwrap();
+    assert_eq!(responses.len(), 100);
+    assert!(responses.iter().all(|r| r == "OK"), "{responses:?}");
+
+    // The server reports its WAL traffic while alive.
+    let stats = c.request("STATS SERVER").unwrap();
+    assert!(stats.contains("wal_appends=300"), "{stats}");
+
+    // Phase 2: SIGKILL — no QUIT, no shutdown, connection just dies.
+    drop(c);
+    drop(server);
+
+    // Phase 3: restart over the same directory; recovery must replay the
+    // gen-0 snapshot plus the full WAL.
+    let server = ServerProc::spawn(&tmp);
+    let mut c = Client::connect(server.addr).expect("reconnect");
+    let stats = c.request("STATS").unwrap();
+    assert!(
+        stats.starts_with(&format!("OK count={RECORDS} ")),
+        "store size changed across recovery: {stats}"
+    );
+    for i in 0..300u64 {
+        let k = spec.record_at(i).isbn13;
+        let (p, q) = expected(i);
+        assert_eq!(
+            c.request(&format!("GET {k}")).unwrap(),
+            format!("OK {p} {q}"),
+            "acked write lost for key index {i}"
+        );
+    }
+    // Untouched records come from the snapshot unchanged.
+    let pristine = spec.record_at(1_500);
+    assert_eq!(
+        c.request(&format!("GET {}", pristine.isbn13)).unwrap(),
+        format!("OK {} {}", pristine.price_cents, pristine.quantity)
+    );
+
+    // The recovered server is live, not read-only: write + read back.
+    let k = spec.record_at(42).isbn13;
+    assert_eq!(c.request(&format!("UPDATE {k} 123456 7")).unwrap(), "OK");
+    assert_eq!(c.request(&format!("GET {k}")).unwrap(), "OK 123456 7");
+
+    let _ = c.request("QUIT");
+    drop(c);
+    drop(server);
+    std::fs::remove_dir_all(&tmp).ok();
+}
