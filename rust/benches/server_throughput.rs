@@ -1,26 +1,47 @@
 //! Request-path throughput: per-request round trips vs the pipelined batch
-//! verbs. The serving claim (paper §4.3) only holds if the front end keeps
-//! cores busy instead of paying one network round trip per key — this bench
-//! measures the gap. Acceptance (ISSUE 2): an `MUPDATE` batch of 64 must
-//! sustain ≥5× the ops/sec of 64 single `UPDATE` round-trips.
+//! verbs, plus the lock-free read path. The serving claim (paper §4.3) only
+//! holds if the front end keeps cores busy instead of paying one network
+//! round trip per key — and the shared-memory claim (§4) only holds if
+//! concurrent readers *scale*, which is what the contention sweep measures.
+//!
+//! Acceptance:
+//! - ISSUE 2: an `MUPDATE` batch of 64 must sustain ≥5× the ops/sec of 64
+//!   single `UPDATE` round-trips (enforced at full scale).
+//! - ISSUE 4: 4 reader threads hammering `get_many` against a live writer
+//!   must sustain ≥ the single-reader rate at any scale (no negative
+//!   scaling — enforced even in CI smoke runs) and ≥2× at full scale.
+//!   Both floors are enforced only on hosts with ≥6 cores: with less
+//!   headroom the 4-reader config (plus writer and main thread) is
+//!   oversubscribed and the gate would measure the scheduler.
 //!
 //! Configurations (one live server, one client, loopback TCP):
-//!   update-single   64 UPDATE round-trips
-//!   update-mupdate  one MUPDATE line carrying 64 groups (shard-affine)
-//!   update-batch    BATCH 64 framing around single UPDATE lines
-//!   get-single      64 GET round-trips
-//!   get-mget        one MGET line carrying 64 keys
+//!   update-single    64 UPDATE round-trips
+//!   update-mupdate   one MUPDATE line carrying 64 groups (shard-affine)
+//!   update-batch     BATCH 64 framing around single UPDATE lines
+//!   get-single       64 GET round-trips
+//!   get-mget         one MGET line carrying 64 keys
+//!   get-heavy-mixed  BATCH 64 of 7/8 GET + 1/8 UPDATE (read-mostly serving)
+//!
+//! Read-path contention sweep (direct store, no TCP so the syscall cost
+//! cannot mask the synchronization cost): 1/2/4 reader threads × get_many
+//! batches of 64 uniformly-random keys, against one writer thread applying
+//! 64-update batches continuously. Emits `BENCH_read_path.json`.
 //!
 //! CSV: bench_out/server_throughput.csv.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use membig::memstore::ShardedStore;
 use membig::server::{Client, Server, ServerConfig};
-use membig::util::bench::{bench, bench_out_dir, bench_scale, write_bench_json, BenchStat};
+use membig::util::bench::{
+    bench, bench_out_dir, bench_scale, stat_from, write_bench_json, BenchJsonRow, BenchStat,
+};
 use membig::util::csv::CsvWriter;
 use membig::util::fmt::commas;
 use membig::workload::gen::DatasetSpec;
+use membig::workload::record::StockUpdate;
 
 const GROUP: usize = 64;
 
@@ -86,6 +107,25 @@ fn main() {
         assert!(r.starts_with(&format!("OK {GROUP} ")), "{r}");
     });
 
+    // GET-heavy mixed workload: the read-mostly serving shape the lock-free
+    // read path targets — 56 GETs + 8 UPDATEs pipelined as one BATCH group.
+    let mixed_lines: Vec<String> = keys
+        .iter()
+        .enumerate()
+        .map(|(i, k)| {
+            if i % 8 == 7 {
+                format!("UPDATE {k} {} {i}", 400 + i)
+            } else {
+                format!("GET {k}")
+            }
+        })
+        .collect();
+    let get_mixed = bench("get-heavy-mixed (BATCH 56G+8U)", 3, iters, || {
+        let rs = c.batch(&mixed_lines).unwrap();
+        assert_eq!(rs.len(), GROUP);
+        assert!(rs.iter().all(|r| r.starts_with("OK")), "{rs:?}");
+    });
+
     let _ = c.request("QUIT");
 
     let rows: Vec<(&BenchStat, f64)> = vec![
@@ -94,6 +134,7 @@ fn main() {
         (&update_batch, update_single.mean.as_secs_f64() / update_batch.mean.as_secs_f64()),
         (&get_single, 1.0),
         (&get_mget, get_single.mean.as_secs_f64() / get_mget.mean.as_secs_f64()),
+        (&get_mixed, get_single.mean.as_secs_f64() / get_mixed.mean.as_secs_f64()),
     ];
 
     let csv_path = bench_out_dir().join("server_throughput.csv");
@@ -136,4 +177,179 @@ fn main() {
         }
         println!("WARNING: below the 5x acceptance floor (not enforced at tiny N)");
     }
+
+    read_path_sweep(records, scale);
+}
+
+/// 1/2/4-reader contention sweep over the lock-free read path, against a
+/// live writer. Measures aggregate `get_many` key-reads/sec per thread
+/// count and asserts the scaling acceptance (no negative scaling ever;
+/// ≥2× for 4 readers at full scale).
+fn read_path_sweep(records: u64, scale: u64) {
+    // Even the smoke window must be long enough (tens of ms per config)
+    // that one scheduler blip on a loaded CI runner cannot flip the
+    // scaling gate below.
+    let sweep_iters: usize = if scale > 1 { 2_000 } else { 8_000 };
+    let spec = DatasetSpec { records, ..Default::default() };
+    let store = Arc::new(ShardedStore::new(8, (records as usize / 8).next_power_of_two()));
+    for r in spec.iter() {
+        store.insert(r);
+    }
+    let keys: Vec<u64> = (0..records).map(|i| spec.record_at(i).isbn13).collect();
+
+    println!(
+        "\n=== read-path contention sweep: {} records, {sweep_iters} get_many(64) \
+         batches/reader, live writer ===\n",
+        commas(records)
+    );
+
+    let mut json_rows: Vec<BenchJsonRow> = Vec::new();
+    let mut agg_by_threads: Vec<(usize, f64)> = Vec::new();
+    for &threads in &[1usize, 2, 4] {
+        // Best of two runs per thread count: the gate below compares
+        // configs measured at different moments, so take the less
+        // noise-perturbed sample of each.
+        let (mut best_ops, mut best_samples): (f64, Vec<std::time::Duration>) = (0.0, Vec::new());
+        for _attempt in 0..2 {
+            let (ops, samples) = sweep_once(&store, &keys, records, threads, sweep_iters);
+            if ops > best_ops {
+                best_ops = ops;
+                best_samples = samples;
+            }
+        }
+        let ops = best_ops;
+        let stat = stat_from(&format!("get_many-{threads}r"), best_samples);
+        println!(
+            "get_many {threads} reader(s): {:>12.0} keys/s aggregate (batch p50 {:?}, p99 {:?})",
+            ops, stat.p50, stat.p99
+        );
+        json_rows.push(BenchJsonRow {
+            name: format!("get_many-{threads}r"),
+            ops_per_sec: ops,
+            p50_ns: stat.p50.as_nanos().min(u64::MAX as u128) as u64,
+            p99_ns: stat.p99.as_nanos().min(u64::MAX as u128) as u64,
+            // `n` is the sample count behind the percentiles — reader 0's
+            // sampled batches, not the total iteration count.
+            n: stat.iters as u64,
+        });
+        agg_by_threads.push((threads, ops));
+    }
+    let stats = store.read_stats();
+    println!(
+        "read-path counters: retries={} fallbacks={}",
+        stats.retries.get(),
+        stats.fallbacks.get()
+    );
+
+    let json_path = write_bench_json("read_path", &json_rows).unwrap();
+    println!("wrote {}", json_path.display());
+
+    let one = agg_by_threads[0].1;
+    let four = agg_by_threads[2].1;
+    let scaling = four / one;
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "\n4-reader GET throughput: {scaling:.2}x single-reader \
+         (floors on >=6 cores: >=1x any scale, >=2x at full scale; {cores} cores here)"
+    );
+    // The comparison is only meaningful when 4 readers + 1 writer + the
+    // main thread actually have cores to run on: with less headroom the
+    // 4-reader config is oversubscribed while the 1-reader baseline is
+    // not, and the gate would measure the scheduler, not the lock.
+    if cores < 6 {
+        println!("WARNING: <6 cores, read-scaling floors reported but not enforced");
+        return;
+    }
+    // No negative scaling, at any N: lock-free readers must never be slower
+    // together than alone. This is the bench-smoke gate.
+    if four < one {
+        eprintln!("FAIL: negative read scaling ({scaling:.2}x)");
+        std::process::exit(1);
+    }
+    if scaling < 2.0 {
+        if scale == 1 {
+            eprintln!("FAIL: below the 2x read-scaling acceptance floor");
+            std::process::exit(1);
+        }
+        println!("WARNING: below the 2x floor (not enforced at tiny N)");
+    }
+}
+
+/// One sweep configuration: `threads` readers × `sweep_iters` get_many(64)
+/// batches against one continuously-writing thread. Returns the aggregate
+/// key-reads/sec and reader 0's per-batch latency samples.
+fn sweep_once(
+    store: &Arc<ShardedStore>,
+    keys: &[u64],
+    records: u64,
+    threads: usize,
+    sweep_iters: usize,
+) -> (f64, Vec<std::time::Duration>) {
+    let stop = AtomicBool::new(false);
+    let total_reads = AtomicU64::new(0);
+    let mut sample_src: Vec<std::time::Duration> = Vec::new();
+    let elapsed = std::thread::scope(|scope| {
+        // Writer: continuous churn so readers race real seqlock windows,
+        // not an idle store.
+        scope.spawn(|| {
+            let mut round = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                let ups: Vec<StockUpdate> = (0..64u64)
+                    .map(|i| {
+                        let k = keys[((round * 31 + i * 17) % records) as usize];
+                        StockUpdate {
+                            isbn13: k,
+                            new_price_cents: 100 + round,
+                            new_quantity: 1 + (i as u32),
+                        }
+                    })
+                    .collect();
+                store.apply_many(&ups);
+                round += 1;
+            }
+        });
+        let t0 = Instant::now();
+        let mut handles = Vec::with_capacity(threads);
+        for t in 0..threads {
+            handles.push(scope.spawn(move || {
+                let mut batch = [0u64; 64];
+                let mut state = 0x2545_F491_4F6C_DD1Du64 ^ ((t as u64 + 1) << 21);
+                let mut samples = Vec::with_capacity(64);
+                let mut reads = 0u64;
+                for it in 0..sweep_iters {
+                    for slot in batch.iter_mut() {
+                        // xorshift64*
+                        state ^= state << 13;
+                        state ^= state >> 7;
+                        state ^= state << 17;
+                        *slot = keys[(state % records) as usize];
+                    }
+                    // Thread 0 samples every 128th batch for latency
+                    // percentiles without perturbing the hot loop.
+                    if t == 0 && it % 128 == 0 {
+                        let b0 = Instant::now();
+                        reads += store.get_many(&batch).len() as u64;
+                        samples.push(b0.elapsed());
+                    } else {
+                        reads += store.get_many(&batch).len() as u64;
+                    }
+                }
+                (reads, samples)
+            }));
+        }
+        let mut first_samples = Vec::new();
+        for (t, h) in handles.into_iter().enumerate() {
+            let (reads, samples) = h.join().expect("sweep reader panicked");
+            total_reads.fetch_add(reads, Ordering::Relaxed);
+            if t == 0 {
+                first_samples = samples;
+            }
+        }
+        let el = t0.elapsed();
+        stop.store(true, Ordering::Release);
+        sample_src = first_samples;
+        el
+    });
+    let reads = total_reads.load(Ordering::Relaxed);
+    (reads as f64 / elapsed.as_secs_f64(), sample_src)
 }

@@ -451,7 +451,10 @@ impl Persistence {
     }
 
     /// Log + apply a batch with **one** sync — group commit, mirroring the
-    /// shard-affine `ShardedStore::apply_many` it wraps.
+    /// shard-affine `ShardedStore::apply_many` it wraps. (The store's
+    /// seqlock write windows live *inside* this commit path's mutex, so
+    /// WAL append order ≡ apply order still holds; lock-free readers are
+    /// unaffected by either lock.)
     pub fn apply_many(&self, ups: &[StockUpdate], sync_now: bool) -> std::io::Result<(u64, u64)> {
         self.commit(ups, sync_now)
     }

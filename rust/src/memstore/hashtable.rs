@@ -10,16 +10,29 @@
 //! - the record payload is stored inline (24B), one cache line covers a
 //!   probe step.
 //!
-//! Not thread-safe by design: the sharded store gives each worker thread
-//! exclusive ownership of its table, which is exactly the paper's
-//! shared-memory-without-locks architecture.
+//! Concurrency: mutations still require `&mut self` (the sharded store
+//! serializes writers per shard), but every slot field is an atomic so the
+//! bucket array can additionally be **probed lock-free** while a writer
+//! mutates it. A lock-free probe may observe torn records or mid-displacement
+//! states — it is only meaningful under the shard's seqlock protocol
+//! (`memstore::shard`), which detects any concurrent write and retries the
+//! read. The live bucket array is published to readers as a raw [`Buckets`]
+//! pointer; arrays replaced by growth are parked in `retired` (never freed
+//! before the table drops) so a reader holding a stale pointer dereferences
+//! valid — merely outdated — memory and fails seqlock validation instead of
+//! faulting. Retired arrays sum to less than one live array (capacities are
+//! a geometric series), so the worst-case overhead is < 2× bucket memory.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 use crate::storage::index::hash_key;
 use crate::workload::record::BookRecord;
 
 const EMPTY: u64 = 0;
 
-#[derive(Clone)]
+/// Plain bucket value used by writers for local manipulation (loads,
+/// robin-hood displacement) before storing back into the atomic slots.
+#[derive(Clone, Copy)]
 struct Bucket {
     key: u64, // 0 = empty
     price_cents: u64,
@@ -35,14 +48,148 @@ impl Bucket {
     }
 }
 
-pub struct HashTable {
-    buckets: Vec<Bucket>,
+/// One slot of the table. All fields are atomics so concurrent lock-free
+/// readers never race a writer on non-atomic memory (no UB); a multi-field
+/// read can still be torn, which the shard seqlock detects and retries.
+/// Same 24-byte footprint as the plain layout — one cache line per probe.
+struct AtomicBucket {
+    key: AtomicU64,
+    price_cents: AtomicU64,
+    quantity: AtomicU32,
+}
+
+impl AtomicBucket {
+    fn vacant() -> Self {
+        AtomicBucket {
+            key: AtomicU64::new(EMPTY),
+            price_cents: AtomicU64::new(0),
+            quantity: AtomicU32::new(0),
+        }
+    }
+
+    /// Relaxed is sufficient everywhere: writers are serialized by the shard
+    /// mutex (they read their own writes), and cross-thread visibility for
+    /// readers is established by the seqlock's acquire/release edges.
+    #[inline]
+    fn load(&self) -> Bucket {
+        Bucket {
+            key: self.key.load(Ordering::Relaxed),
+            price_cents: self.price_cents.load(Ordering::Relaxed),
+            quantity: self.quantity.load(Ordering::Relaxed),
+        }
+    }
+
+    #[inline]
+    fn store(&self, b: Bucket) {
+        self.key.store(b.key, Ordering::Relaxed);
+        self.price_cents.store(b.price_cents, Ordering::Relaxed);
+        self.quantity.store(b.quantity, Ordering::Relaxed);
+    }
+}
+
+/// A bucket array plus its mask, self-contained so a reader that obtained a
+/// (possibly stale) `*const Buckets` can probe without touching any other
+/// table state — mask and slots can never be observed out of sync.
+pub(crate) struct Buckets {
     mask: usize,
+    slots: Box<[AtomicBucket]>,
+}
+
+impl Buckets {
+    fn alloc(cap: usize) -> Box<Buckets> {
+        debug_assert!(cap.is_power_of_two());
+        Box::new(Buckets {
+            mask: cap - 1,
+            slots: (0..cap).map(|_| AtomicBucket::vacant()).collect(),
+        })
+    }
+
+    #[inline]
+    fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    #[inline]
+    fn slot_of(&self, hash: u64) -> usize {
+        (hash as usize) & self.mask
+    }
+
+    /// Probe distance of `key` found at `idx` from its home slot.
+    #[inline]
+    fn distance(&self, idx: usize, key: u64) -> usize {
+        let home = self.slot_of(hash_key(key));
+        idx.wrapping_sub(home) & self.mask
+    }
+
+    /// Lock-free point probe with the key's hash precomputed. With no
+    /// concurrent writer this is exactly the sequential robin-hood lookup
+    /// (early exit on empty slot or a poorer resident). Racing a writer it
+    /// may return a torn record or a false miss — callers MUST discard the
+    /// result unless their seqlock validation succeeds. The loop is bounded
+    /// by capacity so a torn probe chain can never spin forever.
+    pub(crate) fn probe(&self, key: u64, hash: u64) -> Option<BookRecord> {
+        let mut idx = self.slot_of(hash);
+        let mut dist = 0usize;
+        for _ in 0..=self.mask {
+            let slot = &self.slots[idx];
+            let k = slot.key.load(Ordering::Relaxed);
+            if k == key {
+                return Some(BookRecord {
+                    isbn13: key,
+                    price_cents: slot.price_cents.load(Ordering::Relaxed),
+                    quantity: slot.quantity.load(Ordering::Relaxed),
+                });
+            }
+            if k == EMPTY || self.distance(idx, k) < dist {
+                return None;
+            }
+            idx = (idx + 1) & self.mask;
+            dist += 1;
+        }
+        None
+    }
+}
+
+pub struct HashTable {
+    /// The live bucket array, held as a raw pointer (`Box::into_raw` at
+    /// allocation) rather than a `Box`: readers probe this allocation
+    /// through raw pointers published by the shard, and a `Box` *value*
+    /// being moved (`mem::replace` in `grow`, pushing onto `retired`)
+    /// would re-assert its uniqueness and invalidate those derived
+    /// pointers under Rust's aliasing model. Raw from birth, the pointer
+    /// carries no uniqueness claim; the heap address is stable across
+    /// moves of the `HashTable` itself.
+    live: *mut Buckets,
+    /// Arrays replaced by `grow`, kept allocated until `Drop` so stale
+    /// reader views stay dereferenceable (see module docs).
+    retired: Vec<*mut Buckets>,
     len: usize,
     /// Grow when len exceeds this (87.5% load factor).
     grow_at: usize,
     /// Probe-length statistics for Figure-1-style diagnostics.
     max_probe: usize,
+}
+
+// SAFETY: the raw pointers are uniquely owned by this table (created by
+// `Box::into_raw`, freed only in `Drop`), and everything reachable through
+// them is atomics — `&HashTable` exposes only `&Buckets` (Sync) views, and
+// moving the table between threads moves plain pointer values.
+unsafe impl Send for HashTable {}
+unsafe impl Sync for HashTable {}
+
+impl Drop for HashTable {
+    fn drop(&mut self) {
+        // SAFETY: `live` and every entry of `retired` came from
+        // `Box::into_raw(Buckets::alloc(..))`, are distinct, and are freed
+        // exactly once, here. `&mut self` proves no reader can exist (all
+        // reader paths borrow the owning store).
+        unsafe {
+            drop(Box::from_raw(self.live));
+            for p in self.retired.drain(..) {
+                drop(Box::from_raw(p));
+            }
+        }
+    }
 }
 
 impl HashTable {
@@ -59,12 +206,22 @@ impl HashTable {
     pub fn with_capacity(hint: usize) -> Self {
         let cap = (hint.max(8) * Self::LOAD_DEN / Self::LOAD_NUM + 1).next_power_of_two();
         HashTable {
-            buckets: vec![Bucket::VACANT; cap],
-            mask: cap - 1,
+            live: Box::into_raw(Buckets::alloc(cap)),
+            retired: Vec::new(),
             len: 0,
             grow_at: cap * Self::LOAD_NUM / Self::LOAD_DEN,
             max_probe: 0,
         }
+    }
+
+    /// The live bucket array. The borrow is expression-scoped in practice
+    /// (each call re-derives from the raw pointer), so writer methods can
+    /// interleave these reads with `self.len`/`self.max_probe` updates.
+    #[inline]
+    fn live(&self) -> &Buckets {
+        // SAFETY: `live` always points to an allocation from
+        // `Buckets::alloc`, freed only in `Drop`.
+        unsafe { &*self.live }
     }
 
     pub fn len(&self) -> usize {
@@ -76,7 +233,7 @@ impl HashTable {
     }
 
     pub fn capacity(&self) -> usize {
-        self.buckets.len()
+        self.live().capacity()
     }
 
     /// Longest probe sequence seen during inserts (diagnostics).
@@ -84,54 +241,64 @@ impl HashTable {
         self.max_probe
     }
 
-    /// Bytes of heap this table pins.
+    /// Bytes of heap this table pins — live buckets plus the retired arrays
+    /// kept alive for lock-free readers.
     pub fn memory_bytes(&self) -> usize {
-        self.buckets.len() * std::mem::size_of::<Bucket>()
+        // SAFETY: retired pointers stay valid until `Drop` (see `live()`).
+        let retired: usize =
+            self.retired.iter().map(|&p| unsafe { &*p }.capacity()).sum();
+        (self.live().capacity() + retired) * std::mem::size_of::<AtomicBucket>()
     }
 
-    #[inline]
-    fn slot_of(&self, key: u64) -> usize {
-        (hash_key(key) as usize) & self.mask
-    }
-
-    /// Probe distance of the key found at `idx` from its home slot.
-    #[inline]
-    fn distance(&self, idx: usize, key: u64) -> usize {
-        let home = self.slot_of(key);
-        idx.wrapping_sub(home) & self.mask
+    /// Raw pointer to the live bucket array, published by the sharded store
+    /// to lock-free readers. Stays valid until the table is dropped (growth
+    /// retires, never frees, old arrays).
+    pub(crate) fn buckets_ptr(&self) -> *const Buckets {
+        self.live
     }
 
     /// Insert or overwrite. Returns the previous record for the key, if any.
     pub fn insert(&mut self, rec: BookRecord) -> Option<BookRecord> {
+        self.insert_hashed(rec, hash_key(rec.isbn13))
+    }
+
+    /// [`insert`](Self::insert) with the key's hash precomputed — batch
+    /// callers hash once and share the value with shard routing.
+    pub fn insert_hashed(&mut self, rec: BookRecord, hash: u64) -> Option<BookRecord> {
         assert_ne!(rec.isbn13, EMPTY, "key 0 is reserved as the empty marker");
         if self.len >= self.grow_at {
             self.grow();
         }
-        let mut idx = self.slot_of(rec.isbn13);
-        let mut cur =
-            Bucket { key: rec.isbn13, price_cents: rec.price_cents, quantity: rec.quantity };
+        let cur = Bucket { key: rec.isbn13, price_cents: rec.price_cents, quantity: rec.quantity };
+        self.insert_at(cur, hash)
+    }
+
+    /// Robin-hood insertion into the live array; never grows (callers size
+    /// first). `hash` must be `hash_key(cur.key)`.
+    fn insert_at(&mut self, mut cur: Bucket, hash: u64) -> Option<BookRecord> {
+        let mut idx = self.live().slot_of(hash);
         let mut dist = 0usize;
         loop {
-            let b = &mut self.buckets[idx];
+            let b = self.live().slots[idx].load();
             if b.key == EMPTY {
-                *b = cur;
+                self.live().slots[idx].store(cur);
                 self.len += 1;
                 self.max_probe = self.max_probe.max(dist);
                 return None;
             }
             if b.key == cur.key {
-                let prev = b.record();
-                *b = cur;
-                return Some(prev);
+                self.live().slots[idx].store(cur);
+                return Some(b.record());
             }
             // Robin hood: displace richer residents.
-            let their_dist = self.distance(idx, self.buckets[idx].key);
+            let their_dist = self.live().distance(idx, b.key);
             if their_dist < dist {
-                std::mem::swap(&mut self.buckets[idx], &mut cur);
+                self.live().slots[idx].store(cur);
+                cur = b;
                 self.max_probe = self.max_probe.max(dist);
                 dist = their_dist;
             }
-            idx = (idx + 1) & self.mask;
+            idx = (idx + 1) & self.live().mask;
             dist += 1;
         }
     }
@@ -139,24 +306,15 @@ impl HashTable {
     /// Point lookup.
     #[inline]
     pub fn get(&self, key: u64) -> Option<BookRecord> {
-        let mut idx = self.slot_of(key);
-        let mut dist = 0usize;
-        loop {
-            let b = &self.buckets[idx];
-            if b.key == key {
-                return Some(b.record());
-            }
-            if b.key == EMPTY {
-                return None;
-            }
-            // Robin-hood invariant: once we've probed further than the
-            // resident's own distance, the key cannot be present.
-            if self.distance(idx, b.key) < dist {
-                return None;
-            }
-            idx = (idx + 1) & self.mask;
-            dist += 1;
-        }
+        self.get_hashed(key, hash_key(key))
+    }
+
+    /// [`get`](Self::get) with the key's hash precomputed. With exclusive
+    /// access the optimistic probe *is* the sequential lookup — same probe
+    /// sequence, same early exits.
+    #[inline]
+    pub fn get_hashed(&self, key: u64, hash: u64) -> Option<BookRecord> {
+        self.live().probe(key, hash)
     }
 
     /// In-place update through a closure; returns false if the key is absent.
@@ -164,69 +322,80 @@ impl HashTable {
     /// no allocation.
     #[inline]
     pub fn update(&mut self, key: u64, f: impl FnOnce(&mut BookRecord)) -> bool {
-        let mut idx = self.slot_of(key);
+        self.update_hashed(key, hash_key(key), f)
+    }
+
+    /// [`update`](Self::update) with the key's hash precomputed.
+    #[inline]
+    pub fn update_hashed(&mut self, key: u64, hash: u64, f: impl FnOnce(&mut BookRecord)) -> bool {
+        let mut idx = self.live().slot_of(hash);
         let mut dist = 0usize;
         loop {
-            let b = &self.buckets[idx];
+            let b = self.live().slots[idx].load();
             if b.key == key {
                 let mut rec = b.record();
                 f(&mut rec);
                 debug_assert_eq!(rec.isbn13, key, "update must not change the key");
-                let b = &mut self.buckets[idx];
-                b.price_cents = rec.price_cents;
-                b.quantity = rec.quantity;
+                let slot = &self.live().slots[idx];
+                slot.price_cents.store(rec.price_cents, Ordering::Relaxed);
+                slot.quantity.store(rec.quantity, Ordering::Relaxed);
                 return true;
             }
-            if b.key == EMPTY || self.distance(idx, b.key) < dist {
+            if b.key == EMPTY || self.live().distance(idx, b.key) < dist {
                 return false;
             }
-            idx = (idx + 1) & self.mask;
+            idx = (idx + 1) & self.live().mask;
             dist += 1;
         }
     }
 
     /// Remove a key (backward-shift deletion keeps probe chains tight).
     pub fn remove(&mut self, key: u64) -> Option<BookRecord> {
-        let mut idx = self.slot_of(key);
+        self.remove_hashed(key, hash_key(key))
+    }
+
+    /// [`remove`](Self::remove) with the key's hash precomputed.
+    pub fn remove_hashed(&mut self, key: u64, hash: u64) -> Option<BookRecord> {
+        let mut idx = self.live().slot_of(hash);
         let mut dist = 0usize;
         loop {
-            let b = &self.buckets[idx];
+            let b = self.live().slots[idx].load();
             if b.key == key {
-                let prev = b.record();
                 // Backward shift: pull successors left until an empty slot
                 // or a resident at home position.
                 let mut cur = idx;
                 loop {
-                    let next = (cur + 1) & self.mask;
-                    let nb = self.buckets[next].clone();
-                    if nb.key == EMPTY || self.distance(next, nb.key) == 0 {
-                        self.buckets[cur] = Bucket::VACANT;
+                    let next = (cur + 1) & self.live().mask;
+                    let nb = self.live().slots[next].load();
+                    if nb.key == EMPTY || self.live().distance(next, nb.key) == 0 {
+                        self.live().slots[cur].store(Bucket::VACANT);
                         break;
                     }
-                    self.buckets[cur] = nb;
+                    self.live().slots[cur].store(nb);
                     cur = next;
                 }
                 self.len -= 1;
-                return Some(prev);
+                return Some(b.record());
             }
-            if b.key == EMPTY || self.distance(idx, b.key) < dist {
+            if b.key == EMPTY || self.live().distance(idx, b.key) < dist {
                 return None;
             }
-            idx = (idx + 1) & self.mask;
+            idx = (idx + 1) & self.live().mask;
             dist += 1;
         }
     }
 
     /// Iterate all records (arbitrary order).
     pub fn iter(&self) -> impl Iterator<Item = BookRecord> + '_ {
-        self.buckets.iter().filter(|b| b.key != EMPTY).map(|b| b.record())
+        self.live().slots.iter().map(|s| s.load()).filter(|b| b.key != EMPTY).map(|b| b.record())
     }
 
     /// Fold the table into (count, Σ price·qty cents) without materializing.
     pub fn value_sum_cents(&self) -> (u64, u128) {
         let mut n = 0u64;
         let mut sum = 0u128;
-        for b in &self.buckets {
+        for s in &self.live().slots {
+            let b = s.load();
             if b.key != EMPTY {
                 n += 1;
                 sum += b.price_cents as u128 * b.quantity as u128;
@@ -236,17 +405,25 @@ impl HashTable {
     }
 
     fn grow(&mut self) {
-        let new_cap = self.buckets.len() * 2;
-        let old = std::mem::replace(&mut self.buckets, vec![Bucket::VACANT; new_cap]);
-        self.mask = new_cap - 1;
+        let new_cap = self.live().capacity() * 2;
+        let old = std::mem::replace(&mut self.live, Box::into_raw(Buckets::alloc(new_cap)));
         self.grow_at = new_cap * Self::LOAD_NUM / Self::LOAD_DEN;
         self.len = 0;
         self.max_probe = 0;
-        for b in old {
+        // SAFETY: `old` is the just-retired array; it stays allocated until
+        // `Drop`. Only raw-pointer *values* move below, so pointers readers
+        // derived from the published address remain valid.
+        let old_ref: &Buckets = unsafe { &*old };
+        for slot in old_ref.slots.iter() {
+            let b = slot.load();
             if b.key != EMPTY {
-                self.insert(b.record());
+                self.insert_at(b, hash_key(b.key));
             }
         }
+        // Park, don't free: a lock-free reader may still hold a pointer to
+        // this array; it will fail seqlock validation and re-probe the new
+        // one, but the memory must outlive the table.
+        self.retired.push(old);
     }
 }
 
@@ -403,8 +580,50 @@ mod tests {
     #[test]
     fn memory_accounting() {
         let t = HashTable::with_capacity(1 << 16);
-        // 24-byte buckets (u64,u64,u32 + padding) → cap * 24.
-        assert_eq!(t.memory_bytes(), t.capacity() * std::mem::size_of::<Bucket>());
+        // 24-byte slots (AtomicU64 ×2 + AtomicU32 + padding) → cap * 24.
+        assert_eq!(t.memory_bytes(), t.capacity() * std::mem::size_of::<AtomicBucket>());
         assert!(t.memory_bytes() >= (1 << 16) * 24);
+    }
+
+    #[test]
+    fn retired_arrays_are_accounted_and_bounded() {
+        let mut t = HashTable::with_capacity(8);
+        for k in 1..=5_000u64 {
+            t.insert(rec(k));
+        }
+        let live = t.capacity() * std::mem::size_of::<AtomicBucket>();
+        let total = t.memory_bytes();
+        assert!(total > live, "growth must leave retired arrays accounted");
+        // Geometric series: everything retired sums to < one live array.
+        assert!(total < 2 * live, "retired overhead must stay under 1× live ({total} vs {live})");
+    }
+
+    #[test]
+    fn hashed_variants_match_plain_calls() {
+        let mut t = HashTable::with_capacity(64);
+        for k in 1..=200u64 {
+            let h = hash_key(k);
+            assert_eq!(t.insert_hashed(rec(k), h), None);
+            assert_eq!(t.get_hashed(k, h), Some(rec(k)));
+            assert_eq!(t.get(k), t.get_hashed(k, h));
+        }
+        let h7 = hash_key(7);
+        assert!(t.update_hashed(7, h7, |r| r.quantity = 99));
+        assert_eq!(t.get(7).unwrap().quantity, 99);
+        assert_eq!(t.remove_hashed(7, h7).unwrap().quantity, 99);
+        assert_eq!(t.get(7), None);
+        assert!(!t.update_hashed(7, h7, |r| r.quantity = 1));
+    }
+
+    #[test]
+    fn probe_is_bounded_even_on_absent_keys() {
+        let mut t = HashTable::with_capacity(64);
+        for k in 1..=50u64 {
+            t.insert(rec(k));
+        }
+        // Misses terminate via the robin-hood early exit / capacity bound.
+        for k in 10_001..=10_200u64 {
+            assert_eq!(t.get(k), None);
+        }
     }
 }

@@ -1,11 +1,14 @@
 //! The paper's memory layer (§4.1–4.2): records live in purpose-built
 //! open-addressing hash tables in RAM, sharded one-table-per-thread
 //! (`T = {(t1,h1), (t2,h2), …, (tn,hn)}`), loaded once from the disk store
-//! and updated in parallel with zero cross-shard synchronization.
+//! and updated in parallel with zero cross-shard synchronization. Point
+//! reads are **lock-free** (per-shard seqlock; see [`shard`]): writers stay
+//! mutex-serialized per shard, readers validate an optimistic probe against
+//! the shard's version counter and retry instead of locking.
 
 pub mod hashtable;
 pub mod shard;
 pub mod snapshot;
 
 pub use hashtable::HashTable;
-pub use shard::ShardedStore;
+pub use shard::{ReadPathStats, ShardWriteGuard, ShardedStore};

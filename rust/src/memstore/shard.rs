@@ -2,22 +2,208 @@
 //! hash. Shard count is fixed at construction (paper: one shard per core),
 //! so routing is a pure function and workers never contend.
 //!
-//! Concurrency model: each shard is wrapped in a `Mutex` so the store is
-//! usable from any topology, but the pipeline's shard-affine workers take
-//! each mutex uncontended (one worker ↔ one shard) — the lock is a safety
-//! net, not a synchronization point. `route()` is exposed so callers can
-//! partition work *before* touching the store, which is the paper's design.
+//! Concurrency model (paper §4: workers read the memory-resident table "in
+//! a concurrent fashion"):
+//!
+//! - **Writers** stay serialized per shard by a mutex, exactly as before —
+//!   the durability layer depends on WAL replay order ≡ apply order, and a
+//!   single writer per shard keeps that guarantee trivially. Every write
+//!   window is bracketed by a **seqlock**: the shard's version counter goes
+//!   odd on entry and even on exit ([`ShardWriteGuard`]).
+//! - **Readers** (`get` / `get_many`) are lock-free: snapshot the version,
+//!   probe the atomic bucket array through the published view pointer, then
+//!   validate the version. An odd snapshot or a changed version means a
+//!   writer raced the probe — the result is discarded and the read retried.
+//!   After [`READ_RETRIES`] failed attempts the reader falls back to the
+//!   shard mutex so a write-heavy shard cannot starve its readers; retry and
+//!   fallback totals are exported via [`ReadPathStats`].
+//!
+//! Hashing: `route()` uses the *upper* hash bits, the in-table slot the
+//! lower bits, so one `hash_key` call per key serves both — the batch paths
+//! hash each key exactly once (`route_hashed` + `*_hashed` table calls).
 
-use std::sync::Mutex;
+use std::ops::Deref;
+use std::sync::atomic::{fence, AtomicPtr, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
 
-use super::hashtable::HashTable;
+use super::hashtable::{Buckets, HashTable};
+use crate::metrics::Counter;
 use crate::storage::index::hash_key;
 use crate::workload::record::{BookRecord, StockUpdate};
 
+/// Optimistic attempts before a reader gives up on the lock-free path and
+/// takes the shard mutex. Small: each retry is only worth it while the
+/// writer's window is shorter than a mutex round-trip.
+const READ_RETRIES: usize = 8;
+
+/// Keys validated under one version snapshot in `get_many`. A whole huge
+/// MGET group under a single snapshot would make its probe window so long
+/// that any write traffic forces every attempt to fail and be redone —
+/// chunking bounds the work a failed validation can discard.
+const READ_GROUP_CHUNK: usize = 256;
+
+/// Lock-free read-path counters (shared across all shards of a store).
+/// `retries` counts discarded optimistic attempts (a writer raced the
+/// probe); `fallbacks` counts reads that exhausted their retries and went
+/// through the mutex. Both are zero on an uncontended store.
+#[derive(Default)]
+pub struct ReadPathStats {
+    pub retries: Counter,
+    pub fallbacks: Counter,
+}
+
+/// One shard: a writer-serialized table plus the seqlock state that lets
+/// readers probe it without the lock. Cache-line aligned so one shard's
+/// version bumps never invalidate the line holding a *neighbouring*
+/// shard's seqlock state in the `Vec<Shard>` — cross-shard coherence
+/// traffic is exactly what the lock-free read path exists to eliminate.
+#[repr(align(64))]
+struct Shard {
+    /// Seqlock version: even = stable, odd = a writer is inside its window.
+    seq: AtomicU64,
+    /// Published pointer to the table's live bucket array. May briefly lag
+    /// behind a growth (readers then probe the retired array, which stays
+    /// allocated — see `hashtable` module docs — and fail validation).
+    view: AtomicPtr<Buckets>,
+    table: Mutex<HashTable>,
+}
+
+impl Shard {
+    fn new(capacity_hint: usize) -> Self {
+        let table = HashTable::with_capacity(capacity_hint);
+        let view = AtomicPtr::new(table.buckets_ptr() as *mut Buckets);
+        Shard { seq: AtomicU64::new(0), view, table: Mutex::new(table) }
+    }
+
+    /// Start an optimistic read: `Some(stamp)` when the shard is stable,
+    /// `None` while a writer is inside its window.
+    #[inline]
+    fn read_begin(&self) -> Option<u64> {
+        let stamp = self.seq.load(Ordering::Acquire);
+        if stamp & 1 == 0 {
+            Some(stamp)
+        } else {
+            None
+        }
+    }
+
+    /// True iff no writer ran since `read_begin` returned `stamp` — the
+    /// probed data was a consistent snapshot. The acquire fence orders the
+    /// data loads before this version re-check (Boehm's seqlock recipe).
+    #[inline]
+    fn read_validate(&self, stamp: u64) -> bool {
+        fence(Ordering::Acquire);
+        self.seq.load(Ordering::Relaxed) == stamp
+    }
+
+    /// Enter a write window: take the writer mutex, flip the version odd.
+    fn write(&self) -> ShardWriteGuard<'_> {
+        let table = self.table.lock().unwrap();
+        // Odd flip, then a release fence *before* the window's relaxed slot
+        // stores (crossbeam's SeqLock recipe): the fence pairs with the
+        // reader's acquire fence in `read_validate`, so any reader that
+        // observed one of this window's stores must also observe the odd
+        // version on its re-check — without the fence, weakly-ordered
+        // hardware could publish a slot store ahead of the flip and let a
+        // torn read validate. (Mutual exclusion itself comes from the
+        // mutex; Relaxed is enough for the counter bump.)
+        self.seq.fetch_add(1, Ordering::Relaxed);
+        fence(Ordering::Release);
+        ShardWriteGuard { shard: self, table }
+    }
+
+    /// Read-only access under the mutex (fallback path, snapshots,
+    /// aggregation). Does not touch the version: lock-free readers proceed
+    /// concurrently, other writers block.
+    fn read(&self) -> MutexGuard<'_, HashTable> {
+        self.table.lock().unwrap()
+    }
+}
+
+/// The two ways a validated read can see a shard's data: the lock-free
+/// published bucket array, or the table under the mutex (fallback). One
+/// closure in [`ShardedStore::read_shard`] serves both, so the read
+/// protocol exists in exactly one place and the paths cannot diverge.
+enum ReadView<'a> {
+    Optimistic(&'a Buckets),
+    Locked(&'a HashTable),
+}
+
+impl ReadView<'_> {
+    #[inline]
+    fn get(&self, key: u64, hash: u64) -> Option<BookRecord> {
+        match self {
+            ReadView::Optimistic(b) => b.probe(key, hash),
+            ReadView::Locked(t) => t.get_hashed(key, hash),
+        }
+    }
+}
+
+/// Exclusive write access to one shard's table. Holds the shard mutex and
+/// keeps the seqlock version odd for its whole lifetime, so lock-free
+/// readers retry (and eventually queue on the mutex) instead of observing
+/// torn state. On drop it republishes the bucket-array view (growth may
+/// have moved it), flips the version even, then releases the mutex.
+///
+/// Mutation goes through the forwarding methods below — deliberately NOT
+/// `DerefMut`: `&mut HashTable` would let safe code *replace* the table
+/// (`mem::replace`, `*guard = ...`), dropping bucket arrays that
+/// concurrent lock-free readers may still be probing. Shared `Deref` for
+/// the read API is fine; nothing reachable through `&HashTable` can free
+/// the arrays.
+pub struct ShardWriteGuard<'a> {
+    shard: &'a Shard,
+    table: MutexGuard<'a, HashTable>,
+}
+
+impl Deref for ShardWriteGuard<'_> {
+    type Target = HashTable;
+
+    fn deref(&self) -> &HashTable {
+        &self.table
+    }
+}
+
+impl ShardWriteGuard<'_> {
+    pub fn insert(&mut self, rec: BookRecord) -> Option<BookRecord> {
+        self.table.insert(rec)
+    }
+
+    pub fn insert_hashed(&mut self, rec: BookRecord, hash: u64) -> Option<BookRecord> {
+        self.table.insert_hashed(rec, hash)
+    }
+
+    pub fn update(&mut self, key: u64, f: impl FnOnce(&mut BookRecord)) -> bool {
+        self.table.update(key, f)
+    }
+
+    pub fn update_hashed(&mut self, key: u64, hash: u64, f: impl FnOnce(&mut BookRecord)) -> bool {
+        self.table.update_hashed(key, hash, f)
+    }
+
+    pub fn remove(&mut self, key: u64) -> Option<BookRecord> {
+        self.table.remove(key)
+    }
+
+    pub fn remove_hashed(&mut self, key: u64, hash: u64) -> Option<BookRecord> {
+        self.table.remove_hashed(key, hash)
+    }
+}
+
+impl Drop for ShardWriteGuard<'_> {
+    fn drop(&mut self) {
+        self.shard.view.store(self.table.buckets_ptr() as *mut Buckets, Ordering::Release);
+        self.shard.seq.fetch_add(1, Ordering::Release);
+        // The MutexGuard field drops after this body: the even version is
+        // published before the next writer can enter.
+    }
+}
+
 pub struct ShardedStore {
-    shards: Vec<Mutex<HashTable>>,
+    shards: Vec<Shard>,
     /// Bit mask when shard count is a power of two, else None → modulo.
     mask: Option<u64>,
+    read_stats: ReadPathStats,
 }
 
 impl ShardedStore {
@@ -25,10 +211,9 @@ impl ShardedStore {
         assert!(shards > 0);
         let mask = if shards.is_power_of_two() { Some(shards as u64 - 1) } else { None };
         ShardedStore {
-            shards: (0..shards)
-                .map(|_| Mutex::new(HashTable::with_capacity(capacity_hint_per_shard)))
-                .collect(),
+            shards: (0..shards).map(|_| Shard::new(capacity_hint_per_shard)).collect(),
             mask,
+            read_stats: ReadPathStats::default(),
         }
     }
 
@@ -36,32 +221,83 @@ impl ShardedStore {
         self.shards.len()
     }
 
+    /// Lock-free read-path counters (seqlock retries / mutex fallbacks).
+    pub fn read_stats(&self) -> &ReadPathStats {
+        &self.read_stats
+    }
+
     /// Which shard owns `key`. Uses the *upper* hash bits so shard routing
     /// stays independent of the in-table slot choice (lower bits).
     #[inline]
     pub fn route(&self, key: u64) -> usize {
-        let h = hash_key(key) >> 32;
+        self.route_hashed(hash_key(key))
+    }
+
+    /// [`route`](Self::route) with `hash_key(key)` precomputed, so callers
+    /// that also probe the table hash each key exactly once per operation.
+    #[inline]
+    pub fn route_hashed(&self, hash: u64) -> usize {
+        let h = hash >> 32;
         match self.mask {
             Some(m) => (h & m) as usize,
             None => (h % self.shards.len() as u64) as usize,
         }
     }
 
-    /// Exclusive access to one shard (used by shard-affine workers).
-    pub fn shard(&self, i: usize) -> std::sync::MutexGuard<'_, HashTable> {
-        self.shards[i].lock().unwrap()
+    /// Exclusive write access to one shard (shard-affine workers, bulk
+    /// load). The guard keeps the shard's seqlock odd for its lifetime —
+    /// take it only to mutate; use the read APIs for lookups.
+    pub fn shard(&self, i: usize) -> ShardWriteGuard<'_> {
+        self.shards[i].write()
     }
 
     pub fn insert(&self, rec: BookRecord) -> Option<BookRecord> {
-        self.shard(self.route(rec.isbn13)).insert(rec)
+        let h = hash_key(rec.isbn13);
+        self.shards[self.route_hashed(h)].write().insert_hashed(rec, h)
     }
 
+    /// Lock-free point read (seqlock-validated; mutex fallback after
+    /// [`READ_RETRIES`] raced attempts).
     pub fn get(&self, key: u64) -> Option<BookRecord> {
-        self.shard(self.route(key)).get(key)
+        let h = hash_key(key);
+        let s = self.route_hashed(h);
+        self.read_shard(s, |v| v.get(key, h))
+    }
+
+    /// The one copy of the seqlock read protocol, shared by `get` and
+    /// `get_many`: `read` runs against the published bucket array
+    /// ([`ReadView::Optimistic`]) and its result counts only if the
+    /// version validates; after [`READ_RETRIES`] raced attempts it runs
+    /// once more under the shard mutex ([`ReadView::Locked`]). `read` may
+    /// execute several times — each run must fully overwrite anything it
+    /// writes, since a raced attempt's output is discarded or overwritten
+    /// by the next attempt.
+    fn read_shard<T>(&self, s: usize, mut read: impl FnMut(ReadView<'_>) -> T) -> T {
+        let shard = &self.shards[s];
+        for _ in 0..READ_RETRIES {
+            if let Some(stamp) = shard.read_begin() {
+                // SAFETY: `view` points at the live or a retired bucket
+                // array of this shard's table; both stay allocated until
+                // the store drops, which requires exclusive access — no
+                // reader can coexist with the deallocation. (The write
+                // guard exposes no way for safe code to replace the table,
+                // so no other path can free the arrays early.)
+                let buckets = unsafe { &*shard.view.load(Ordering::Acquire) };
+                let out = read(ReadView::Optimistic(buckets));
+                if shard.read_validate(stamp) {
+                    return out;
+                }
+            }
+            self.read_stats.retries.inc();
+            std::hint::spin_loop();
+        }
+        self.read_stats.fallbacks.inc();
+        read(ReadView::Locked(&*shard.read()))
     }
 
     pub fn update(&self, key: u64, f: impl FnOnce(&mut BookRecord)) -> bool {
-        self.shard(self.route(key)).update(key, f)
+        let h = hash_key(key);
+        self.shards[self.route_hashed(h)].write().update_hashed(key, h, f)
     }
 
     pub fn apply(&self, u: &StockUpdate) -> bool {
@@ -69,47 +305,59 @@ impl ShardedStore {
     }
 
     pub fn remove(&self, key: u64) -> Option<BookRecord> {
-        self.shard(self.route(key)).remove(key)
+        let h = hash_key(key);
+        self.shards[self.route_hashed(h)].write().remove_hashed(key, h)
     }
 
-    /// Batched point reads: pre-route every key, then take each touched
-    /// shard lock exactly once (shard-affine dispatch, paper §4.2).
-    /// Results come back in input order.
+    /// Batched point reads: pre-route every key (hashing each exactly
+    /// once), then read each touched shard's group lock-free in chunks of
+    /// [`READ_GROUP_CHUNK`] keys per seqlock snapshot, with the shard
+    /// mutex as the contended-chunk fallback. Per-record consistency only
+    /// (like sequential `get` calls); results come back in input order.
     pub fn get_many(&self, keys: &[u64]) -> Vec<Option<BookRecord>> {
+        let hashes: Vec<u64> = keys.iter().map(|&k| hash_key(k)).collect();
         let mut out = vec![None; keys.len()];
         let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
-        for (i, &k) in keys.iter().enumerate() {
-            by_shard[self.route(k)].push(i);
+        for (i, &h) in hashes.iter().enumerate() {
+            by_shard[self.route_hashed(h)].push(i);
         }
         for (s, idxs) in by_shard.iter().enumerate() {
             if idxs.is_empty() {
                 continue;
             }
-            let shard = self.shard(s);
-            for &i in idxs {
-                out[i] = shard.get(keys[i]);
+            // One version snapshot/validation per chunk of the per-shard
+            // key group. The closure writes straight into the pre-sized
+            // output (no per-attempt allocation); a raced attempt's slots
+            // are simply overwritten by the retry.
+            for chunk in idxs.chunks(READ_GROUP_CHUNK) {
+                self.read_shard(s, |v| {
+                    for &i in chunk {
+                        out[i] = v.get(keys[i], hashes[i]);
+                    }
+                });
             }
         }
         out
     }
 
-    /// Batched updates with one lock acquisition per touched shard.
+    /// Batched updates with one write window per touched shard.
     /// Duplicate keys within a batch apply in input order (same shard ⇒
     /// ascending index). Returns `(applied, missed)`.
     pub fn apply_many(&self, ups: &[StockUpdate]) -> (u64, u64) {
+        let hashes: Vec<u64> = ups.iter().map(|u| hash_key(u.isbn13)).collect();
         let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
-        for (i, u) in ups.iter().enumerate() {
-            by_shard[self.route(u.isbn13)].push(i);
+        for (i, &h) in hashes.iter().enumerate() {
+            by_shard[self.route_hashed(h)].push(i);
         }
         let (mut applied, mut missed) = (0u64, 0u64);
         for (s, idxs) in by_shard.iter().enumerate() {
             if idxs.is_empty() {
                 continue;
             }
-            let mut shard = self.shard(s);
+            let mut shard = self.shards[s].write();
             for &i in idxs {
                 let u = &ups[i];
-                if shard.update(u.isbn13, |r| u.apply_to(r)) {
+                if shard.update_hashed(u.isbn13, hashes[i], |r| u.apply_to(r)) {
                     applied += 1;
                 } else {
                     missed += 1;
@@ -120,7 +368,7 @@ impl ShardedStore {
     }
 
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| s.read().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -128,7 +376,7 @@ impl ShardedStore {
     }
 
     pub fn memory_bytes(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().memory_bytes()).sum()
+        self.shards.iter().map(|s| s.read().memory_bytes()).sum()
     }
 
     /// (count, Σ price·qty) across all shards.
@@ -136,7 +384,7 @@ impl ShardedStore {
         let mut n = 0;
         let mut sum = 0;
         for s in &self.shards {
-            let (sn, ss) = s.lock().unwrap().value_sum_cents();
+            let (sn, ss) = s.read().value_sum_cents();
             n += sn;
             sum += ss;
         }
@@ -144,22 +392,25 @@ impl ShardedStore {
     }
 
     /// Snapshot all records of one shard (for writeback / analytics export).
+    /// Takes the mutex read-side only — concurrent lock-free readers are
+    /// unaffected while a shard is being exported.
     pub fn shard_records(&self, i: usize) -> Vec<BookRecord> {
-        self.shard(i).iter().collect()
+        self.shards[i].read().iter().collect()
     }
 
     /// Per-shard record counts — balance diagnostics for benches.
     pub fn shard_sizes(&self) -> Vec<usize> {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).collect()
+        self.shards.iter().map(|s| s.read().len()).collect()
     }
 
     /// Iteration hook for checkpointing: visit every record shard by shard.
     /// Each shard's records are copied out under that shard's lock alone —
     /// the store never holds more than one lock, so a snapshot streaming
     /// gigabytes to disk stalls at most one shard at a time while live
-    /// traffic proceeds on the others. The view is per-shard-consistent,
-    /// not globally consistent; the durability layer recovers exactness by
-    /// replaying the WAL segment opened before the snapshot began.
+    /// traffic proceeds on the others (lock-free readers aren't stalled at
+    /// all). The view is per-shard-consistent, not globally consistent; the
+    /// durability layer recovers exactness by replaying the WAL segment
+    /// opened before the snapshot began.
     pub fn for_each_shard(&self, mut f: impl FnMut(usize, &[BookRecord])) {
         for i in 0..self.shards.len() {
             let recs = self.shard_records(i);
@@ -180,6 +431,7 @@ mod tests {
             let r = s.route(k);
             assert!(r < 12);
             assert_eq!(r, s.route(k), "routing must be deterministic");
+            assert_eq!(r, s.route_hashed(hash_key(k)), "route and route_hashed must agree");
         }
     }
 
@@ -195,6 +447,8 @@ mod tests {
             let r = spec.record_at(i);
             assert_eq!(s.get(r.isbn13), Some(r));
         }
+        // No writer raced these reads: the optimistic path never fell back.
+        assert_eq!(s.read_stats().fallbacks.get(), 0);
     }
 
     #[test]
@@ -334,5 +588,24 @@ mod tests {
         let (n, sum) = s.value_sum_cents();
         assert_eq!(n, 3);
         assert_eq!(sum, 1300);
+    }
+
+    #[test]
+    fn reads_survive_growth_under_a_write_guard() {
+        // A write guard that grows the table republishes the view on drop;
+        // reads before, during (fallback) and after agree.
+        let s = ShardedStore::new(1, 8);
+        for k in 1..=6u64 {
+            s.insert(BookRecord::new(k, k * 10, 1));
+        }
+        {
+            let mut g = s.shard(0);
+            for k in 7..=500u64 {
+                g.insert(BookRecord::new(k, k * 10, 1));
+            }
+        }
+        for k in 1..=500u64 {
+            assert_eq!(s.get(k).unwrap().price_cents, k * 10, "key {k} lost across growth");
+        }
     }
 }

@@ -17,8 +17,8 @@ use crate::util::split_ranges;
 /// Sequentially scan `table` into a fresh store with `shards` shards.
 ///
 /// Perf note (EXPERIMENTS.md §Perf P1): records are buffered and routed in
-/// batches so each shard mutex is taken once per ~8k records instead of
-/// once per record — the per-record lock/route round-trip dominated the
+/// batches so each shard write guard is taken once per ~8k records instead
+/// of once per record — the per-record lock/route round-trip dominated the
 /// load phase profile.
 pub fn load_store(
     table: &DiskTable,

@@ -416,6 +416,11 @@ pub struct ServerMetrics {
     /// Bumped by [`ServerMetrics::reset_epoch`] (`STATS RESET`); lets a
     /// reader tell which measurement window a report belongs to.
     pub epoch: Counter,
+    /// Responses formatted straight into the pooled per-connection buffer
+    /// (byte tokenizer + integer formatter) instead of a fresh `String` —
+    /// one saved allocation each. GET/UPDATE/MGET/MUPDATE/PING/QUIT take
+    /// this path; STATS/ANALYTICS and error replies are cold and don't.
+    pub allocs_saved: Counter,
     /// Keys (MGET) / update groups (MUPDATE) / lines (BATCH) per batch verb.
     pub batch_sizes: Histogram,
     pub get_latency: Histogram,
@@ -470,6 +475,7 @@ impl ServerMetrics {
         self.conns_rejected.reset();
         self.accept_errors.reset();
         self.requests.reset();
+        self.allocs_saved.reset();
         self.batch_sizes.reset();
         for (_, h) in self.verbs() {
             h.reset();
@@ -497,8 +503,9 @@ impl ServerMetrics {
         // Reuse stats_suffix for the connection counters so STATS and
         // STATS SERVER can never report different counter sets.
         let mut s = format!(
-            "OK{} batches={} batch_p50={} batch_max={}",
+            "OK{} allocs_saved={} batches={} batch_p50={} batch_max={}",
             self.stats_suffix(),
+            self.allocs_saved.get(),
             self.batch_sizes.count(),
             self.batch_sizes.quantile(0.5),
             self.batch_sizes.max()
@@ -522,6 +529,7 @@ impl ServerMetrics {
             ("accept_errors", Json::num(self.accept_errors.get() as f64)),
             ("requests", Json::num(self.requests.get() as f64)),
             ("epoch", Json::num(self.epoch.get() as f64)),
+            ("allocs_saved", Json::num(self.allocs_saved.get() as f64)),
             ("batch_sizes", self.batch_sizes.snapshot().to_json()),
             ("get_latency", self.get_latency.snapshot().to_json()),
             ("update_latency", self.update_latency.snapshot().to_json()),
@@ -762,13 +770,16 @@ mod tests {
         // Run 1.
         m.conns_accepted.inc();
         m.requests.add(10);
+        m.allocs_saved.add(9);
         m.latency_for("GET").record(100);
         m.latency_for("MUPDATE").record(200);
         m.batch_sizes.record(64);
         m.conns_active.inc();
+        assert!(m.stats_server_line().contains("allocs_saved=9"));
         assert_eq!(m.reset_epoch(), 1);
         // Run 2 starts clean (except the live gauge).
         assert_eq!(m.requests.get(), 0);
+        assert_eq!(m.allocs_saved.get(), 0);
         assert_eq!(m.conns_accepted.get(), 0);
         assert_eq!(m.get_latency.count(), 0);
         assert_eq!(m.mupdate_latency.count(), 0);

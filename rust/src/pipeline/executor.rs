@@ -160,8 +160,9 @@ pub fn run_streaming_update(
 
 /// In-memory executor: apply pre-materialized updates with `n` shard-affine
 /// threads. This isolates the paper's §5 compute claim (no file I/O): each
-/// thread receives exactly the updates owned by its shard, then applies
-/// them lock-free-equivalently (the shard mutex is uncontended).
+/// thread receives exactly the updates owned by its shard and holds that
+/// shard's write guard uncontended (concurrent point reads stay lock-free
+/// and simply fall back to the mutex while a guard pins the shard).
 pub fn run_update_in_memory(
     store: &ShardedStore,
     updates: &[StockUpdate],

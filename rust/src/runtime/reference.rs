@@ -5,8 +5,10 @@
 //! Semantics mirror `python/compile/kernels/ref.py` exactly:
 //! `mask[i] > 0` applies the staged update for row i, `mask[i] >= 0` marks
 //! the row valid (padding rows carry mask = -1 and are excluded from every
-//! statistic). Needs no artifacts, no XLA, no threads — deterministic
-//! std-only code on the caller's stack.
+//! statistic). Needs no artifacts and no XLA — std-only code. The slice
+//! kernel runs on the caller's stack; [`ReferenceEngine::analytics_for_store`]
+//! fans per-shard extraction + reduction across scoped worker threads so a
+//! big store is exported in parallel instead of one shard at a time.
 
 use std::time::Instant;
 
@@ -69,7 +71,6 @@ impl ReferenceEngine {
         let (mut count, mut applied) = (0u64, 0u64);
         // min/max start at the kernel's ±_BIG sentinels (ref.py), not ±inf,
         // so an all-padding input reports the same values as the PJRT path.
-        const BIG: f64 = 3.4e38;
         let (mut pmin, mut pmax) = (BIG, -BIG);
         for i in 0..n {
             let (p, q) = if mask[i] > 0.0 {
@@ -119,38 +120,168 @@ impl ReferenceEngine {
         Ok(price.iter().zip(qty).map(|(&p, &q)| p as f64 * q as f64).sum())
     }
 
-    /// Analytics over a live store + pending updates: exports columns,
-    /// marks updated keys, runs the model in one pass. The store itself is
-    /// not mutated — this is the read-side analytics path.
+    /// Analytics over a live store + pending updates: per-shard extraction
+    /// **and** reduction fan out across `std::thread::scope` workers — each
+    /// worker copies a shard's records out under that shard's lock alone,
+    /// applies the staged updates and folds its chunk into partial stats;
+    /// the chunks are merged in shard order so the output (updated columns,
+    /// stats, histogram) matches the single-threaded column kernel, up to
+    /// floating-point summation order. The store itself is not mutated —
+    /// this is the read-side analytics path, and concurrent lock-free
+    /// point reads proceed throughout.
     pub fn analytics_for_store(
         &self,
         store: &ShardedStore,
         updates: &[StockUpdate],
     ) -> Result<AnalyticsResult, ReferenceError> {
-        let mut price = Vec::new();
-        let mut qty = Vec::new();
-        let mut keys = Vec::new();
-        for s in 0..store.shard_count() {
-            for r in store.shard_records(s) {
-                price.push((r.price_cents as f32) / 100.0);
-                qty.push(r.quantity as f32);
-                keys.push(r.isbn13);
+        let t0 = Instant::now();
+        // Staged updates keyed by isbn; a later duplicate overwrites an
+        // earlier one, exactly as the masked-columns path (each key maps to
+        // one row, later loop iterations win).
+        let staged: std::collections::HashMap<u64, (f32, f32)> = updates
+            .iter()
+            .map(|u| {
+                (u.isbn13, ((u.new_price_cents as f32) / 100.0, u.new_quantity as f32))
+            })
+            .collect();
+        let shards = store.shard_count();
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .clamp(1, shards);
+        // Worker w reduces shards w, w+workers, ... (strided, so one huge
+        // shard cannot serialize the tail); chunks are reassembled by shard
+        // index afterwards to keep the sequential output order.
+        let mut chunks: Vec<Option<ShardChunk>> = (0..shards).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(workers);
+            for w in 0..workers {
+                let staged = &staged;
+                handles.push(scope.spawn(move || {
+                    let mut done: Vec<(usize, ShardChunk)> = Vec::new();
+                    let mut s = w;
+                    while s < shards {
+                        done.push((s, reduce_shard(store, s, staged)));
+                        s += workers;
+                    }
+                    done
+                }));
             }
-        }
-        let mut new_price = price.clone();
-        let mut new_qty = qty.clone();
-        let mut mask = vec![0.0f32; price.len()];
-        let index: std::collections::HashMap<u64, usize> =
-            keys.iter().enumerate().map(|(i, &k)| (k, i)).collect();
-        for u in updates {
-            if let Some(&i) = index.get(&u.isbn13) {
-                new_price[i] = (u.new_price_cents as f32) / 100.0;
-                new_qty[i] = u.new_quantity as f32;
-                mask[i] = 1.0;
+            for h in handles {
+                for (s, c) in h.join().expect("analytics extraction worker panicked") {
+                    chunks[s] = Some(c);
+                }
             }
+        });
+        // Merge in shard order. min/max keep the kernel's ±_BIG sentinels
+        // (ref.py) so an empty store reports the same values as PJRT.
+        let total: usize = chunks.iter().map(|c| c.as_ref().map_or(0, |c| c.upd_price.len())).sum();
+        let mut upd_price = Vec::with_capacity(total);
+        let mut upd_qty = Vec::with_capacity(total);
+        let (mut value, mut price_sum, mut qty_sum) = (0f64, 0f64, 0f64);
+        let (mut count, mut applied) = (0u64, 0u64);
+        let (mut pmin, mut pmax) = (BIG, -BIG);
+        let mut histogram = [0f32; HIST_BINS];
+        for c in chunks.into_iter().map(|c| c.expect("every shard reduced exactly once")) {
+            value += c.value;
+            price_sum += c.price_sum;
+            qty_sum += c.qty_sum;
+            count += c.count;
+            applied += c.applied;
+            pmin = pmin.min(c.pmin);
+            pmax = pmax.max(c.pmax);
+            for (h, v) in histogram.iter_mut().zip(c.histogram) {
+                *h += v;
+            }
+            upd_price.extend_from_slice(&c.upd_price);
+            upd_qty.extend_from_slice(&c.upd_qty);
         }
-        self.analytics(&price, &qty, &new_price, &new_qty, &mask)
+        let mean_price = if count > 0 { price_sum / count as f64 } else { 0.0 };
+        Ok(AnalyticsResult {
+            upd_price,
+            upd_qty,
+            stats: InventoryStats {
+                total_value: value,
+                count,
+                price_sum,
+                price_min: pmin,
+                price_max: pmax,
+                qty_sum,
+                updates_applied: applied,
+                mean_price,
+            },
+            histogram,
+            exec_time: t0.elapsed(),
+        })
     }
+}
+
+/// min/max sentinel shared with the column kernel (ref.py's ±_BIG).
+const BIG: f64 = 3.4e38;
+
+/// One shard's contribution to the parallel store-analytics pass: its
+/// updated columns (in shard-extraction order) plus fully-reduced partial
+/// statistics, foldable in shard order into the global result.
+struct ShardChunk {
+    upd_price: Vec<f32>,
+    upd_qty: Vec<f32>,
+    value: f64,
+    price_sum: f64,
+    qty_sum: f64,
+    count: u64,
+    applied: u64,
+    pmin: f64,
+    pmax: f64,
+    histogram: [f32; HIST_BINS],
+}
+
+/// Extract shard `s` (one lock, records copied out) and reduce it against
+/// the staged updates. Live rows only — the store path has no padding, so
+/// every row counts (mask ≥ 0 in kernel terms).
+///
+/// This deliberately mirrors the fold inside [`ReferenceEngine::analytics`]
+/// instead of materializing five per-shard column arrays and calling it —
+/// the whole point of the parallel path is to avoid intermediate copies.
+/// The two implementations are pinned together by
+/// `parallel_for_store_matches_column_kernel`; change kernel semantics
+/// (bin width, sentinels, mean) in both places and that test will say so.
+fn reduce_shard(
+    store: &ShardedStore,
+    s: usize,
+    staged: &std::collections::HashMap<u64, (f32, f32)>,
+) -> ShardChunk {
+    let recs = store.shard_records(s);
+    let mut c = ShardChunk {
+        upd_price: Vec::with_capacity(recs.len()),
+        upd_qty: Vec::with_capacity(recs.len()),
+        value: 0.0,
+        price_sum: 0.0,
+        qty_sum: 0.0,
+        count: 0,
+        applied: 0,
+        pmin: BIG,
+        pmax: -BIG,
+        histogram: [0f32; HIST_BINS],
+    };
+    for r in recs {
+        let (p, q) = match staged.get(&r.isbn13) {
+            Some(&(np, nq)) => {
+                c.applied += 1;
+                (np, nq)
+            }
+            None => ((r.price_cents as f32) / 100.0, r.quantity as f32),
+        };
+        c.upd_price.push(p);
+        c.upd_qty.push(q);
+        c.count += 1;
+        c.value += p as f64 * q as f64;
+        c.price_sum += p as f64;
+        c.qty_sum += q as f64;
+        c.pmin = c.pmin.min(p as f64);
+        c.pmax = c.pmax.max(p as f64);
+        c.histogram[histogram_bin(p)] += 1.0;
+    }
+    c
 }
 
 #[cfg(test)]
@@ -218,6 +349,74 @@ mod tests {
         assert_eq!(r.stats.updates_applied, 1);
         // Updated: $1.00 x 1 + $4.00 x 1 = $5.00.
         assert!((r.stats.total_value - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parallel_for_store_matches_column_kernel() {
+        // The fanned-out per-shard reduction must agree with extracting the
+        // columns by hand and running the single-threaded kernel: identical
+        // updated arrays/counts/histogram, stats equal up to FP summation
+        // order.
+        let eng = ReferenceEngine::new();
+        let spec = DatasetSpec { records: 5_000, ..Default::default() };
+        let store = ShardedStore::new(8, 1 << 10);
+        for r in spec.iter() {
+            store.insert(r);
+        }
+        let mut ups = crate::workload::gen::generate_stock_updates(
+            &spec,
+            800,
+            crate::workload::gen::KeyDist::Uniform,
+            7,
+        );
+        ups.push(StockUpdate { isbn13: 1, new_price_cents: 1, new_quantity: 1 }); // absent key
+        let got = eng.analytics_for_store(&store, &ups).unwrap();
+
+        // Oracle: the old single-threaded extraction + column kernel.
+        let (mut price, mut qty, mut keys) = (Vec::new(), Vec::new(), Vec::new());
+        for s in 0..store.shard_count() {
+            for r in store.shard_records(s) {
+                price.push((r.price_cents as f32) / 100.0);
+                qty.push(r.quantity as f32);
+                keys.push(r.isbn13);
+            }
+        }
+        let mut new_price = price.clone();
+        let mut new_qty = qty.clone();
+        let mut mask = vec![0.0f32; price.len()];
+        let index: std::collections::HashMap<u64, usize> =
+            keys.iter().enumerate().map(|(i, &k)| (k, i)).collect();
+        for u in &ups {
+            if let Some(&i) = index.get(&u.isbn13) {
+                new_price[i] = (u.new_price_cents as f32) / 100.0;
+                new_qty[i] = u.new_quantity as f32;
+                mask[i] = 1.0;
+            }
+        }
+        let want = eng.analytics(&price, &qty, &new_price, &new_qty, &mask).unwrap();
+
+        assert_eq!(got.upd_price, want.upd_price, "updated prices must match exactly");
+        assert_eq!(got.upd_qty, want.upd_qty);
+        assert_eq!(got.stats.count, want.stats.count);
+        assert_eq!(got.stats.updates_applied, want.stats.updates_applied);
+        assert_eq!(got.histogram, want.histogram);
+        assert_eq!(got.stats.price_min, want.stats.price_min);
+        assert_eq!(got.stats.price_max, want.stats.price_max);
+        let rel = (got.stats.total_value - want.stats.total_value).abs()
+            / want.stats.total_value.max(1.0);
+        assert!(rel < 1e-9, "value drifted past summation-order noise: rel={rel}");
+    }
+
+    #[test]
+    fn parallel_for_store_empty_store_keeps_sentinels() {
+        let eng = ReferenceEngine::new();
+        let store = ShardedStore::new(4, 16);
+        let r = eng.analytics_for_store(&store, &[]).unwrap();
+        assert_eq!(r.stats.count, 0);
+        assert_eq!(r.stats.mean_price, 0.0);
+        assert_eq!(r.stats.price_min, 3.4e38);
+        assert_eq!(r.stats.price_max, -3.4e38);
+        assert!(r.upd_price.is_empty());
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //! executor thread owning the engine is the production pattern, and it also
 //! serializes executions (analytics calls are coarse-grained batch calls;
 //! queueing is the intended behaviour). The reference backend rides the same
-//! topology so callers never care which backend is live.
+//! topology so callers never care which backend is live. Serialization is
+//! per-*call*, not per-shard: the reference backend's store analytics fans
+//! its extraction + reduction across scoped worker threads internally, so
+//! one queued call still uses every core.
 //!
 //! Backend selection:
 //! - [`AnalyticsService::start_reference`] — pure-Rust backend, always

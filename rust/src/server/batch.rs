@@ -68,30 +68,52 @@ pub fn parse_mupdate(rest: &str) -> Result<Vec<StockUpdate>, String> {
     Ok(ups)
 }
 
-/// Execute a parsed MGET: one response line, entries in key order —
-/// `OK <n> <price,qty|MISS> ...`.
-pub fn exec_mget(store: &ShardedStore, keys: &[u64]) -> String {
-    use std::fmt::Write;
+/// Execute a parsed MGET straight into a response buffer: one line, entries
+/// in key order — `OK <n> <price,qty|MISS> ...`. The hot batch path formats
+/// integers with [`push_u64`](crate::util::fmt::push_u64) into the caller's
+/// pooled buffer: no per-entry temporaries, no response `String`.
+pub fn exec_mget_into(store: &ShardedStore, keys: &[u64], out: &mut Vec<u8>) {
+    use crate::util::fmt::push_u64;
     let vals = store.get_many(keys);
-    let mut out = String::with_capacity(8 + vals.len() * 12);
-    // write! appends straight into `out` — no per-entry temporaries on the
-    // hot batch path (infallible for String).
-    let _ = write!(out, "OK {}", vals.len());
+    out.reserve(8 + vals.len() * 12);
+    out.extend_from_slice(b"OK ");
+    push_u64(out, vals.len() as u64);
     for v in &vals {
         match v {
             Some(r) => {
-                let _ = write!(out, " {},{}", r.price_cents, r.quantity);
+                out.push(b' ');
+                push_u64(out, r.price_cents);
+                out.push(b',');
+                push_u64(out, r.quantity as u64);
             }
-            None => out.push_str(" MISS"),
+            None => out.extend_from_slice(b" MISS"),
         }
     }
-    out
 }
 
-/// Execute a parsed MUPDATE: `OK applied=<a> missed=<m>`.
-pub fn exec_mupdate(store: &ShardedStore, ups: &[StockUpdate]) -> String {
+/// [`exec_mget_into`] as a `String` (direct unit tests, legacy callers).
+pub fn exec_mget(store: &ShardedStore, keys: &[u64]) -> String {
+    let mut out = Vec::with_capacity(8 + keys.len() * 12);
+    exec_mget_into(store, keys, &mut out);
+    String::from_utf8(out).expect("MGET responses are ASCII")
+}
+
+/// Execute a parsed MUPDATE into a response buffer:
+/// `OK applied=<a> missed=<m>`.
+pub fn exec_mupdate_into(store: &ShardedStore, ups: &[StockUpdate], out: &mut Vec<u8>) {
+    use crate::util::fmt::push_u64;
     let (applied, missed) = store.apply_many(ups);
-    format!("OK applied={applied} missed={missed}")
+    out.extend_from_slice(b"OK applied=");
+    push_u64(out, applied);
+    out.extend_from_slice(b" missed=");
+    push_u64(out, missed);
+}
+
+/// [`exec_mupdate_into`] as a `String` (direct unit tests, legacy callers).
+pub fn exec_mupdate(store: &ShardedStore, ups: &[StockUpdate]) -> String {
+    let mut out = Vec::with_capacity(32);
+    exec_mupdate_into(store, ups, &mut out);
+    String::from_utf8(out).expect("MUPDATE responses are ASCII")
 }
 
 #[cfg(test)]

@@ -13,7 +13,7 @@
 //!                                 n response lines in one socket write
 //! STATS                         → OK count=<n> value_cents=<v> conns_...
 //! STATS SERVER                  → OK <conn counters + per-verb latency
-//!                                 + WAL/snapshot gauges when durable>
+//!                                 + read-path/WAL/snapshot gauges>
 //! STATS RESET                   → OK epoch=<e> (fresh measurement window)
 //! ANALYTICS                     → OK value=<dollars> ... (analytics backend)
 //! PING                          → PONG
@@ -26,9 +26,18 @@
 //! fixed by [`ServerConfig::workers`], connections past
 //! [`ServerConfig::max_conns`] are refused with `ERR server busy`, and the
 //! batch verbs execute shard-affinely ([`batch`]): keys are pre-routed with
-//! `ShardedStore::route` and each shard lock is taken once per batch, so a
-//! loaded front end scales like the pipeline's workers instead of one
-//! thread per socket.
+//! `ShardedStore::route_hashed` and each shard is visited once per batch, so
+//! a loaded front end scales like the pipeline's workers instead of one
+//! thread per socket. `GET`/`MGET` read the store **lock-free** (seqlock,
+//! `memstore::shard`), so read throughput scales with reader threads.
+//!
+//! Hot path allocation discipline: request lines accumulate into a reusable
+//! per-connection byte buffer and are UTF-8-validated **once per line** (no
+//! per-chunk decode), the tokenizer works on borrowed slices, and responses
+//! are formatted with an integer byte formatter into a pooled per-connection
+//! buffer flushed in **one** write per request (one per whole BATCH group).
+//! Steady state the request/response cycle of the point verbs allocates
+//! nothing; the `allocs_saved` counter tracks responses served this way.
 //!
 //! Durability: built with [`Server::with_persistence`], every mutation
 //! (`UPDATE`/`MUPDATE`/`BATCH` payload) is WAL-logged through
@@ -51,6 +60,7 @@ use crate::durability::Persistence;
 use crate::memstore::ShardedStore;
 use crate::metrics::ServerMetrics;
 use crate::runtime::AnalyticsService;
+use crate::util::fmt::push_u64;
 use crate::workload::record::StockUpdate;
 use pool::WorkerPool;
 
@@ -288,12 +298,14 @@ enum ReadOutcome {
 /// can pin in memory per connection.
 const MAX_LINE_BYTES: usize = 1 << 20;
 
-/// Read one request line, preserving a partially-received request across
-/// read-timeout ticks: a slow client may deliver `"GET 12"` now and
-/// `"34\n"` after the timeout, and both halves belong to one request.
-/// `line` is appended to (never cleared here) — the caller clears it after
-/// consuming a complete line. Checks `stop` each tick. The idle `deadline`
-/// is absolute and caller-supplied: one per request on the main loop, one
+/// Read one request line as raw bytes, preserving a partially-received
+/// request across read-timeout ticks: a slow client may deliver `"GET 12"`
+/// now and `"34\n"` after the timeout, and both halves belong to one
+/// request. `line` is appended to (never cleared here) — the caller clears
+/// it after consuming a complete line, and validates the accumulated bytes
+/// as UTF-8 **once per line** (the old path lossy-decoded every chunk into
+/// a fresh `String`). Checks `stop` each tick. The idle `deadline` is
+/// absolute and caller-supplied: one per request on the main loop, one
 /// shared across a whole BATCH payload (so a drip-feeding client cannot
 /// reset the clock per line).
 ///
@@ -303,7 +315,7 @@ const MAX_LINE_BYTES: usize = 1 << 20;
 /// unbounded buffer.
 fn read_request_line(
     reader: &mut BufReader<TcpStream>,
-    line: &mut String,
+    line: &mut Vec<u8>,
     stop: &AtomicBool,
     deadline: Instant,
 ) -> std::io::Result<ReadOutcome> {
@@ -340,11 +352,11 @@ fn read_request_line(
             }
             match buf.iter().position(|&b| b == b'\n') {
                 Some(i) => {
-                    line.push_str(&String::from_utf8_lossy(&buf[..=i]));
+                    line.extend_from_slice(&buf[..=i]);
                     (true, i + 1)
                 }
                 None => {
-                    line.push_str(&String::from_utf8_lossy(buf));
+                    line.extend_from_slice(buf);
                     (false, buf.len())
                 }
             }
@@ -354,6 +366,64 @@ fn read_request_line(
             return Ok(ReadOutcome::Line);
         }
     }
+}
+
+/// Per-connection pool capacity retained across requests. Buffers grow to
+/// whatever one request needs, then are trimmed back to this after any
+/// oversized use — one maximum-size BATCH (4 MiB payload + responses) must
+/// not pin megabytes for the rest of a long-lived connection's life.
+const RETAIN_BYTES: usize = 64 << 10;
+
+/// Trim a pooled buffer that ballooned past the retention cap.
+fn trim_pool(buf: &mut Vec<u8>) {
+    if buf.capacity() > RETAIN_BYTES {
+        buf.shrink_to(RETAIN_BYTES);
+    }
+}
+
+/// Reusable per-connection buffers for the BATCH framing path. Steady state
+/// a connection's batches allocate nothing: payload bytes, line bounds and
+/// the group response all live in these pools.
+#[derive(Default)]
+struct BatchScratch {
+    /// One reused accumulator for the payload read loop.
+    line: Vec<u8>,
+    /// Concatenated raw payload lines.
+    payload: Vec<u8>,
+    /// End offset of each payload line within `payload`.
+    bounds: Vec<usize>,
+    /// Response bytes for the whole group — flushed in one socket write.
+    resp: Vec<u8>,
+}
+
+impl BatchScratch {
+    /// Empty every pool, then trim ballooned capacity. Clearing first
+    /// matters: `shrink_to` cannot drop capacity below `len`, so trimming
+    /// a buffer still holding the (already-written) group response would
+    /// be a no-op. Contents are dead by the time this runs.
+    fn trim(&mut self) {
+        self.line.clear();
+        self.payload.clear();
+        self.resp.clear();
+        self.bounds.clear();
+        trim_pool(&mut self.line);
+        trim_pool(&mut self.payload);
+        trim_pool(&mut self.resp);
+        // `bounds` holds one usize per payload line (≤ MAX_BATCH entries);
+        // trim it by the same byte budget as the byte pools.
+        if self.bounds.capacity() * std::mem::size_of::<usize>() > RETAIN_BYTES {
+            self.bounds.shrink_to(RETAIN_BYTES / std::mem::size_of::<usize>());
+        }
+    }
+}
+
+/// Count + answer a request line that failed UTF-8 validation — the one
+/// copy of this accounting, charged to the `other` latency histogram so
+/// `requests == Σ verb_n` holds across STATS windows.
+fn reply_invalid_utf8(metrics: &ServerMetrics, out: &mut Vec<u8>) {
+    metrics.requests.inc();
+    metrics.latency_for("").record(0);
+    out.extend_from_slice(b"ERR request is not valid UTF-8\n");
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -374,7 +444,13 @@ fn handle_client(
     stream.set_write_timeout(Some(cfg.write_timeout))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
-    let mut line = String::new();
+    // Per-connection pools: the line accumulator, the response buffer and
+    // the BATCH scratch are reused across requests (trimmed back to
+    // RETAIN_BYTES after an outlier) — the steady-state request cycle
+    // performs no heap allocation.
+    let mut line: Vec<u8> = Vec::with_capacity(256);
+    let mut resp: Vec<u8> = Vec::with_capacity(256);
+    let mut scratch = BatchScratch::default();
     loop {
         match read_request_line(&mut reader, &mut line, stop, Instant::now() + cfg.idle_timeout)? {
             ReadOutcome::Line => {}
@@ -384,26 +460,67 @@ fn handle_client(
                 return Ok(());
             }
         }
-        // Borrow the request out of the read buffer — no per-request copy;
-        // `line` is cleared only after the last use of `req`.
-        let req = line.trim();
+        // Validate the accumulated bytes once per complete line; borrow the
+        // request out of the buffer — no per-request copy. `line` is
+        // cleared only after the last use of `req`.
+        let req = match std::str::from_utf8(&line) {
+            Ok(s) => s.trim(),
+            Err(_) => {
+                // Close, don't continue: the garbage could have been a
+                // BATCH header, in which case payload lines are already in
+                // flight and would execute as top-level requests —
+                // permanently desyncing the reply stream (same no-resync
+                // rule as malformed BATCH headers). Inside a BATCH payload
+                // the count frames each line, so `run_batch` can ERR
+                // per-line instead.
+                resp.clear();
+                reply_invalid_utf8(metrics, &mut resp);
+                let _ = out.write_all(&resp);
+                // Half-close + one bounded drain (reject_busy's pattern):
+                // dropping the socket with those pipelined bytes unread
+                // would RST and could discard the ERR reply.
+                let _ = out.shutdown(Shutdown::Write);
+                out.set_read_timeout(Some(Duration::from_millis(10))).ok();
+                let mut sink = [0u8; 256];
+                let _ = out.read(&mut sink);
+                return Ok(());
+            }
+        };
         let verb = req.split_ascii_whitespace().next().unwrap_or("");
         if verb == "BATCH" {
             // The framing header is not counted as a request — run_batch
             // counts each payload line, so `requests` matches executed ops.
-            let quit =
-                run_batch(req, &mut reader, &mut out, store, engine, persist, stop, metrics, cfg)?;
+            let quit = run_batch(
+                req,
+                &mut reader,
+                &mut out,
+                store,
+                engine,
+                persist,
+                stop,
+                metrics,
+                cfg,
+                &mut scratch,
+            )?;
             line.clear();
             if quit {
                 return Ok(());
             }
             continue;
         }
-        let response = execute_one(req, store, engine, persist, metrics, false);
-        out.write_all(response.as_bytes())?;
-        out.write_all(b"\n")?;
+        resp.clear();
+        execute_one_into(req, store, engine, persist, metrics, false, &mut resp);
+        // Response + newline leave in one syscall (the old path paid two
+        // writes per request and allocated the response `String`).
+        out.write_all(&resp)?;
         let quit = req == "QUIT";
+        // An outlier request (MGET near the line cap) must not pin its
+        // high-water buffers for the connection's remaining lifetime —
+        // clear before trimming (`shrink_to` cannot go below `len`).
         line.clear();
+        resp.clear();
+        trim_pool(&mut line);
+        trim_pool(&mut resp);
         if quit {
             return Ok(());
         }
@@ -411,16 +528,18 @@ fn handle_client(
 }
 
 /// Execute one request line with its per-request accounting (request count,
-/// per-verb latency) — shared by the single-request loop and the BATCH
-/// payload loop so the bookkeeping cannot drift between them.
-fn execute_one(
+/// per-verb latency), appending the newline-terminated response to `out` —
+/// shared by the single-request loop and the BATCH payload loop so the
+/// bookkeeping cannot drift between them.
+fn execute_one_into(
     req: &str,
     store: &Arc<ShardedStore>,
     engine: Option<&Arc<AnalyticsService>>,
     persist: Option<&Persistence>,
     metrics: &ServerMetrics,
     in_batch: bool,
-) -> String {
+    out: &mut Vec<u8>,
+) {
     metrics.requests.inc();
     let verb = req.split_ascii_whitespace().next().unwrap_or("");
     // A nested BATCH payload line dispatches to an ERR; charge it to
@@ -428,9 +547,8 @@ fn execute_one(
     let verb = if in_batch && verb == "BATCH" { "" } else { verb };
     let t0 = Instant::now();
     let ctx = RequestCtx { store, engine, metrics: Some(metrics), persist };
-    let response = dispatch_ctx(req, &ctx, in_batch);
+    dispatch_into(req, &ctx, in_batch, out);
     metrics.latency_for(verb).record_duration(t0.elapsed());
-    response
 }
 
 /// `BATCH <n>` framing: read `n` follow-up request lines, execute them all,
@@ -448,6 +566,7 @@ fn run_batch(
     stop: &AtomicBool,
     metrics: &ServerMetrics,
     cfg: &ServerConfig,
+    scratch: &mut BatchScratch,
 ) -> std::io::Result<bool> {
     let mut parts = header.split_ascii_whitespace();
     parts.next(); // "BATCH"
@@ -463,14 +582,14 @@ fn run_batch(
             return Ok(true);
         }
     };
-    let mut lines = Vec::with_capacity(n.min(1024));
-    let mut buf = String::new();
-    let mut total_bytes = 0usize;
+    scratch.payload.clear();
+    scratch.bounds.clear();
     // One idle window for the entire payload — per-line deadlines would let
     // a drip-feeding client hold this worker for n × idle_timeout.
     let deadline = Instant::now() + cfg.idle_timeout;
     for _ in 0..n {
-        match read_request_line(reader, &mut buf, stop, deadline)? {
+        scratch.line.clear();
+        match read_request_line(reader, &mut scratch.line, stop, deadline)? {
             ReadOutcome::Line => {}
             ReadOutcome::Eof | ReadOutcome::Stopped | ReadOutcome::IdleTimeout => {
                 return Ok(true)
@@ -478,15 +597,14 @@ fn run_batch(
         }
         // Per-line MAX_LINE_BYTES is not enough here: n lines buffer before
         // execution, so cap the batch payload as a whole too.
-        total_bytes += buf.len();
-        if total_bytes > batch::MAX_BATCH_BYTES {
+        scratch.payload.extend_from_slice(&scratch.line);
+        scratch.bounds.push(scratch.payload.len());
+        if scratch.payload.len() > batch::MAX_BATCH_BYTES {
             let msg =
                 format!("ERR BATCH payload exceeds {} bytes, closing\n", batch::MAX_BATCH_BYTES);
             out.write_all(msg.as_bytes())?;
             return Ok(true); // remaining lines are unread: cannot resync
         }
-        lines.push(buf.trim().to_string());
-        buf.clear();
     }
     metrics.batch_sizes.record(n as u64);
     // Time execution only, from here: the read loop above is dominated by
@@ -494,11 +612,21 @@ fn run_batch(
     // per-verb histograms exist to compare.
     let t0 = Instant::now();
     let mut quit = false;
-    let mut responses = String::with_capacity(n * 16);
-    for req in &lines {
-        responses.push_str(&execute_one(req, store, engine, persist, metrics, true));
-        responses.push('\n');
-        quit = quit || req == "QUIT";
+    let resp = &mut scratch.resp;
+    resp.clear();
+    let mut start = 0usize;
+    for &end in &scratch.bounds {
+        let raw = &scratch.payload[start..end];
+        start = end;
+        // One UTF-8 validation per payload line, on the raw bytes in place.
+        match std::str::from_utf8(raw) {
+            Ok(s) => {
+                let req = s.trim();
+                execute_one_into(req, store, engine, persist, metrics, true, resp);
+                quit = quit || req == "QUIT";
+            }
+            Err(_) => reply_invalid_utf8(metrics, resp),
+        }
     }
     // Group commit: every mutation in the batch deferred its sync to this
     // single call — one fsync per BATCH, issued *before* the one socket
@@ -511,8 +639,10 @@ fn run_batch(
             return Ok(true);
         }
     }
-    out.write_all(responses.as_bytes())?;
+    // The whole group's responses leave in one gathered write.
+    out.write_all(resp)?;
     metrics.batch_latency.record_duration(t0.elapsed());
+    scratch.trim();
     Ok(quit)
 }
 
@@ -546,25 +676,50 @@ pub fn dispatch_with_metrics(
     dispatch_ctx(line, &RequestCtx { store, engine, metrics, persist: None }, false)
 }
 
-/// Core dispatcher. `in_batch` marks a BATCH payload line: its mutations
-/// defer their WAL sync to the one group commit `run_batch` issues before
-/// the group's single response write.
+/// [`dispatch_into`] rendered to a `String` (tests, REPL-style callers).
+/// The server itself never takes this path — responses go straight into the
+/// pooled connection buffer.
 pub fn dispatch_ctx(line: &str, ctx: &RequestCtx<'_>, in_batch: bool) -> String {
+    let mut out = Vec::with_capacity(64);
+    dispatch_into(line, ctx, in_batch, &mut out);
+    out.pop(); // the newline dispatch_into frames with
+    String::from_utf8(out).expect("responses echo valid-UTF-8 requests")
+}
+
+/// Core dispatcher: parse + execute one request line, appending the
+/// newline-terminated response to `out`. The hot verbs tokenize the
+/// borrowed line and format integers straight into the buffer — no
+/// response `String`, no `format!` temporaries. `in_batch` marks a BATCH
+/// payload line: its mutations defer their WAL sync to the one group
+/// commit `run_batch` issues before the group's single response write.
+pub fn dispatch_into(line: &str, ctx: &RequestCtx<'_>, in_batch: bool, out: &mut Vec<u8>) {
     let RequestCtx { store, engine, metrics, persist } = *ctx;
     let line = line.trim();
     let (verb, rest) = match line.split_once(|c: char| c.is_ascii_whitespace()) {
         Some((v, r)) => (v, r.trim()),
         None => (line, ""),
     };
+    // Set by the arms whose response was formatted straight into the
+    // pooled buffer (no String allocation); accounted once below so the
+    // hot/cold classification lives in exactly one place per arm.
+    let mut saved = false;
     match verb {
         "GET" => {
             let mut parts = rest.split_ascii_whitespace();
             match (parts.next().and_then(|k| k.parse::<u64>().ok()), parts.next()) {
-                (Some(key), None) => match store.get(key) {
-                    Some(r) => format!("OK {} {}", r.price_cents, r.quantity),
-                    None => "MISS".into(),
-                },
-                _ => "ERR GET expects exactly <isbn13>".into(),
+                (Some(key), None) => {
+                    match store.get(key) {
+                        Some(r) => {
+                            out.extend_from_slice(b"OK ");
+                            push_u64(out, r.price_cents);
+                            out.push(b' ');
+                            push_u64(out, r.quantity as u64);
+                        }
+                        None => out.extend_from_slice(b"MISS"),
+                    }
+                    saved = true;
+                }
+                _ => out.extend_from_slice(b"ERR GET expects exactly <isbn13>"),
             }
         }
         "UPDATE" => {
@@ -580,17 +735,18 @@ pub fn dispatch_ctx(line: &str, ctx: &RequestCtx<'_>, in_batch: bool) -> String 
                         // frame is logged (and synced, outside a BATCH).
                         Some(p) => match p.apply_update(&u, !in_batch) {
                             Ok(applied) => applied,
-                            Err(e) => return format!("ERR durability: {e}"),
+                            Err(e) => {
+                                out.extend_from_slice(format!("ERR durability: {e}").as_bytes());
+                                out.push(b'\n');
+                                return;
+                            }
                         },
                         None => store.apply(&u),
                     };
-                    if applied {
-                        "OK".into()
-                    } else {
-                        "MISS".into()
-                    }
+                    out.extend_from_slice(if applied { b"OK".as_slice() } else { b"MISS" });
+                    saved = true;
                 }
-                _ => "ERR UPDATE expects exactly <isbn13> <cents> <qty>".into(),
+                _ => out.extend_from_slice(b"ERR UPDATE expects exactly <isbn13> <cents> <qty>"),
             }
         }
         "MGET" => match batch::parse_mget(rest) {
@@ -598,9 +754,10 @@ pub fn dispatch_ctx(line: &str, ctx: &RequestCtx<'_>, in_batch: bool) -> String 
                 if let Some(m) = metrics {
                     m.batch_sizes.record(keys.len() as u64);
                 }
-                batch::exec_mget(store, &keys)
+                batch::exec_mget_into(store, &keys, out);
+                saved = true;
             }
-            Err(e) => format!("ERR {e}"),
+            Err(e) => out.extend_from_slice(format!("ERR {e}").as_bytes()),
         },
         "MUPDATE" => match batch::parse_mupdate(rest) {
             Ok(ups) => {
@@ -611,13 +768,24 @@ pub fn dispatch_ctx(line: &str, ctx: &RequestCtx<'_>, in_batch: bool) -> String 
                     // Group commit: the whole MUPDATE is one WAL append
                     // run + one sync (deferred inside a BATCH).
                     Some(p) => match p.apply_many(&ups, !in_batch) {
-                        Ok((applied, missed)) => format!("OK applied={applied} missed={missed}"),
-                        Err(e) => format!("ERR durability: {e}"),
+                        Ok((applied, missed)) => {
+                            out.extend_from_slice(b"OK applied=");
+                            push_u64(out, applied);
+                            out.extend_from_slice(b" missed=");
+                            push_u64(out, missed);
+                            saved = true;
+                        }
+                        Err(e) => {
+                            out.extend_from_slice(format!("ERR durability: {e}").as_bytes())
+                        }
                     },
-                    None => batch::exec_mupdate(store, &ups),
+                    None => {
+                        batch::exec_mupdate_into(store, &ups, out);
+                        saved = true;
+                    }
                 }
             }
-            Err(e) => format!("ERR {e}"),
+            Err(e) => out.extend_from_slice(format!("ERR {e}").as_bytes()),
         },
         "STATS" => {
             let mut parts = rest.split_ascii_whitespace();
@@ -628,74 +796,95 @@ pub fn dispatch_ctx(line: &str, ctx: &RequestCtx<'_>, in_batch: bool) -> String 
                     if let Some(m) = metrics {
                         s.push_str(&m.stats_suffix());
                     }
-                    s
+                    out.extend_from_slice(s.as_bytes());
                 }
                 (Some("SERVER"), None) => match metrics {
                     Some(m) => {
                         let mut s = m.stats_server_line();
+                        let rs = store.read_stats();
+                        s.push_str(&format!(
+                            " read_retries={} read_fallbacks={}",
+                            rs.retries.get(),
+                            rs.fallbacks.get()
+                        ));
                         if let Some(p) = persist {
                             s.push_str(&p.stats_suffix());
                         }
-                        s
+                        out.extend_from_slice(s.as_bytes());
                     }
-                    None => "ERR server metrics unavailable".into(),
+                    None => out.extend_from_slice(b"ERR server metrics unavailable"),
                 },
                 // Fresh measurement window: zero the counters + latency
-                // histograms (and the WAL/checkpoint traffic counters when
-                // durable) so consecutive bench runs cannot contaminate
-                // each other; the epoch counter marks which window a
-                // report belongs to.
+                // histograms (and the WAL/checkpoint traffic and lock-free
+                // read-path counters when present) so consecutive bench
+                // runs cannot contaminate each other; the epoch counter
+                // marks which window a report belongs to.
                 (Some("RESET"), None) => match metrics {
                     Some(m) => {
                         if let Some(p) = persist {
                             p.metrics().reset_epoch_counters();
                         }
-                        format!("OK epoch={}", m.reset_epoch())
+                        let rs = store.read_stats();
+                        rs.retries.reset();
+                        rs.fallbacks.reset();
+                        out.extend_from_slice(format!("OK epoch={}", m.reset_epoch()).as_bytes());
                     }
-                    None => "ERR server metrics unavailable".into(),
+                    None => out.extend_from_slice(b"ERR server metrics unavailable"),
                 },
-                _ => "ERR STATS expects no argument, SERVER or RESET".into(),
+                _ => out.extend_from_slice(b"ERR STATS expects no argument, SERVER or RESET"),
             }
         }
         "ANALYTICS" => {
             if !rest.is_empty() {
-                return "ERR ANALYTICS takes no arguments".into();
-            }
-            match engine {
-                None => "ERR analytics engine not loaded".into(),
-                Some(eng) => match eng.analytics_for_store(Arc::clone(store), Vec::new()) {
-                    Ok(r) => format!(
-                        "OK value={:.2} count={} mean_price={:.4} price_min={:.2} price_max={:.2}",
-                        r.stats.total_value,
-                        r.stats.count,
-                        r.stats.mean_price,
-                        r.stats.price_min,
-                        r.stats.price_max
-                    ),
-                    Err(e) => format!("ERR {e}"),
-                },
+                out.extend_from_slice(b"ERR ANALYTICS takes no arguments");
+            } else {
+                match engine {
+                    None => out.extend_from_slice(b"ERR analytics engine not loaded"),
+                    Some(eng) => match eng.analytics_for_store(Arc::clone(store), Vec::new()) {
+                        Ok(r) => out.extend_from_slice(
+                            format!(
+                                "OK value={:.2} count={} mean_price={:.4} price_min={:.2} price_max={:.2}",
+                                r.stats.total_value,
+                                r.stats.count,
+                                r.stats.mean_price,
+                                r.stats.price_min,
+                                r.stats.price_max
+                            )
+                            .as_bytes(),
+                        ),
+                        Err(e) => out.extend_from_slice(format!("ERR {e}").as_bytes()),
+                    },
+                }
             }
         }
         "PING" => {
             if rest.is_empty() {
-                "PONG".into()
+                out.extend_from_slice(b"PONG");
+                saved = true;
             } else {
-                "ERR PING takes no arguments".into()
+                out.extend_from_slice(b"ERR PING takes no arguments");
             }
         }
         "QUIT" => {
             if rest.is_empty() {
-                "BYE".into()
+                out.extend_from_slice(b"BYE");
+                saved = true;
             } else {
-                "ERR QUIT takes no arguments".into()
+                out.extend_from_slice(b"ERR QUIT takes no arguments");
             }
         }
         // Top-level BATCH framing is handled in the connection loop before
         // dispatch; reaching it here means a nested/out-of-place BATCH.
-        "BATCH" => "ERR BATCH cannot be nested".into(),
-        "" => "ERR empty request".into(),
-        other => format!("ERR unknown command '{other}'"),
+        "BATCH" => out.extend_from_slice(b"ERR BATCH cannot be nested"),
+        "" => out.extend_from_slice(b"ERR empty request"),
+        other => out.extend_from_slice(format!("ERR unknown command '{other}'").as_bytes()),
     }
+    if saved {
+        if let Some(m) = metrics {
+            m.allocs_saved.inc();
+        }
+    }
+    out.push(b'\n');
 }
 
 /// Minimal blocking client for tests, examples and the CLI.
@@ -809,6 +998,25 @@ mod tests {
     }
 
     #[test]
+    fn dispatch_into_appends_newline_terminated_responses() {
+        // The buffer API the server actually uses: responses accumulate in
+        // the pooled buffer, each framed with exactly one newline.
+        let (s, spec) = store(10);
+        let key = spec.record_at(1).isbn13;
+        let rec = spec.record_at(1);
+        let ctx = RequestCtx { store: &s, engine: None, metrics: None, persist: None };
+        let mut out = Vec::new();
+        dispatch_into("PING", &ctx, false, &mut out);
+        dispatch_into(&format!("GET {key}"), &ctx, false, &mut out);
+        dispatch_into("GET 424242", &ctx, false, &mut out);
+        let text = String::from_utf8(out).unwrap();
+        assert_eq!(
+            text,
+            format!("PONG\nOK {} {}\nMISS\n", rec.price_cents, rec.quantity)
+        );
+    }
+
+    #[test]
     fn dispatch_error_paths() {
         let (s, _) = store(10);
         // Short / malformed argument lists.
@@ -845,7 +1053,31 @@ mod tests {
         assert!(resp.contains("conns_accepted=1"), "{resp}");
         let resp = dispatch_with_metrics("STATS SERVER", &s, None, Some(&m));
         assert!(resp.starts_with("OK conns_accepted=1"), "{resp}");
+        assert!(resp.contains("read_retries=0"), "{resp}");
+        assert!(resp.contains("read_fallbacks=0"), "{resp}");
         assert_eq!(dispatch("STATS SERVER", &s, None), "ERR server metrics unavailable");
+    }
+
+    #[test]
+    fn hot_verbs_count_alloc_free_responses() {
+        let (s, spec) = store(10);
+        let key = spec.record_at(1).isbn13;
+        let m = ServerMetrics::new();
+        for req in [
+            format!("GET {key}"),
+            "GET 4242".into(),      // MISS is still alloc-free
+            format!("UPDATE {key} 5 5"),
+            format!("MGET {key} 4242"),
+            format!("MUPDATE {key} 6 6"),
+            "PING".into(),
+        ] {
+            dispatch_with_metrics(&req, &s, None, Some(&m));
+        }
+        assert_eq!(m.allocs_saved.get(), 6);
+        // Cold paths (STATS, errors) are not counted.
+        dispatch_with_metrics("STATS", &s, None, Some(&m));
+        dispatch_with_metrics("GET not_a_key", &s, None, Some(&m));
+        assert_eq!(m.allocs_saved.get(), 6);
     }
 
     #[test]
@@ -856,9 +1088,11 @@ mod tests {
         let ctx = RequestCtx { store: &s, engine: None, metrics: Some(&m), persist: None };
         m.latency_for("GET").record(123);
         m.requests.add(4);
+        s.read_stats().retries.add(9);
         assert_eq!(dispatch_ctx("STATS RESET", &ctx, false), "OK epoch=1");
         assert_eq!(m.get_latency.count(), 0);
         assert_eq!(m.requests.get(), 0);
+        assert_eq!(s.read_stats().retries.get(), 0, "read-path counters join the epoch");
         let line = dispatch_ctx("STATS SERVER", &ctx, false);
         assert!(line.contains("epoch=1"), "{line}");
         assert!(line.contains("get_n=0"), "{line}");
@@ -942,6 +1176,7 @@ mod tests {
         });
         assert!(handle.requests() >= 4 * 202);
         assert!(handle.metrics.conns_accepted.get() >= 4);
+        assert!(handle.metrics.allocs_saved.get() >= 4 * 202, "hot path must be pooled");
         assert_eq!(handle.metrics.conns_rejected.get(), 0);
         handle.shutdown();
     }

@@ -34,6 +34,24 @@ pub fn human_duration(d: Duration) -> String {
     }
 }
 
+/// Append `v`'s decimal digits to a byte buffer — the server's hot-path
+/// integer formatter. No heap traffic: digits are built in a 20-byte stack
+/// scratch (u64::MAX has 20 digits) and memcpy'd into `out`.
+#[inline]
+pub fn push_u64(out: &mut Vec<u8>, mut v: u64) {
+    let mut tmp = [0u8; 20];
+    let mut i = tmp.len();
+    loop {
+        i -= 1;
+        tmp[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
+        }
+    }
+    out.extend_from_slice(&tmp[i..]);
+}
+
 /// `1234567` → `1,234,567`.
 pub fn commas(n: u64) -> String {
     let s = n.to_string();
@@ -98,6 +116,19 @@ mod tests {
         assert_eq!(human_duration(Duration::from_millis(250)), "250.00ms");
         assert_eq!(human_duration(Duration::from_secs(90)), "1.5min");
         assert_eq!(human_duration(Duration::from_secs(7200)), "2.00h");
+    }
+
+    #[test]
+    fn push_u64_matches_display() {
+        for v in [0u64, 1, 9, 10, 99, 100, 12_345, u64::MAX - 1, u64::MAX] {
+            let mut buf = Vec::new();
+            push_u64(&mut buf, v);
+            assert_eq!(String::from_utf8(buf).unwrap(), v.to_string());
+        }
+        // Appends, never clears.
+        let mut buf = b"OK ".to_vec();
+        push_u64(&mut buf, 42);
+        assert_eq!(buf, b"OK 42");
     }
 
     #[test]

@@ -617,3 +617,84 @@ fn stats_reset_isolates_consecutive_bench_runs() {
     let _ = c.request("QUIT");
     handle.shutdown();
 }
+
+#[test]
+fn invalid_utf8_request_line_gets_err_and_closes() {
+    // The zero-alloc path accumulates raw bytes and validates UTF-8 once
+    // per line. A garbage *top-level* line answers ERR and closes the
+    // connection — it could have been a BATCH header whose payload is
+    // already in flight, and executing that payload as top-level requests
+    // would desync every later response (same no-resync rule as malformed
+    // BATCH headers).
+    let (s, spec) = store(100);
+    let handle = Server::new(s, None).spawn("127.0.0.1:0").unwrap();
+    let mut stream = TcpStream::connect(handle.addr).unwrap();
+    // A poisoned would-be BATCH header: the two payload lines must NOT
+    // execute (an open connection would answer them as top-level PINGs).
+    stream.write_all(b"BATCH \xff2\nPING\nPING\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR"), "{line}");
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "connection must close, got {line:?}");
+
+    // Inside a BATCH payload the count frames each line, so an invalid
+    // line ERRs individually, the rest of the group still answers, and
+    // the connection survives.
+    let mut stream = TcpStream::connect(handle.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream.write_all(b"BATCH 3\nPING\nGET \xc3\x28\nPING\n").unwrap();
+    let mut got = Vec::new();
+    for _ in 0..3 {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        got.push(line.trim_end().to_string());
+    }
+    assert_eq!(got[0], "PONG");
+    assert!(got[1].starts_with("ERR"), "{:?}", got);
+    assert_eq!(got[2], "PONG");
+    let k = spec.record_at(0).isbn13;
+    stream.write_all(format!("GET {k}\nQUIT\n").as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK "), "{line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "BYE");
+    handle.shutdown();
+}
+
+#[test]
+fn read_path_counters_render_over_tcp() {
+    let (s, spec) = store(500);
+    let handle = Server::new(s.clone(), None).spawn("127.0.0.1:0").unwrap();
+    let mut c = Client::connect(handle.addr).unwrap();
+    let k = spec.record_at(0).isbn13;
+    assert!(c.request(&format!("GET {k}")).unwrap().starts_with("OK"));
+    let r = c.request("STATS SERVER").unwrap();
+    assert!(r.contains("read_retries="), "{r}");
+    assert!(r.contains("read_fallbacks="), "{r}");
+    assert!(r.contains("allocs_saved="), "{r}");
+    // A held write guard forces concurrent GETs through the fallback.
+    let guard = s.shard(s.route(k));
+    let reader = std::thread::spawn({
+        let addr = handle.addr;
+        let req = format!("GET {k}");
+        move || {
+            let mut c2 = Client::connect(addr).unwrap();
+            c2.request(&req).unwrap()
+        }
+    });
+    // Deterministic: wait until the server worker's read has actually hit
+    // the fallback path (counter bumps just before it parks on the mutex)
+    // rather than racing a fixed sleep against connect + dispatch.
+    while s.read_stats().fallbacks.get() == 0 {
+        std::thread::yield_now();
+    }
+    drop(guard);
+    assert!(reader.join().unwrap().starts_with("OK"));
+    assert!(s.read_stats().fallbacks.get() >= 1);
+    let _ = c.request("QUIT");
+    handle.shutdown();
+}

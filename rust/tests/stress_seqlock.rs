@@ -1,0 +1,216 @@
+//! Seqlock read-path stress (ISSUE 4): concurrent lock-free readers
+//! hammering `get`/`get_many` against writers doing `apply_many` churn AND
+//! table growth must never observe a **torn record** (the price/quantity
+//! pair invariant breaks only if a reader sees half an update) and never
+//! miss a **committed write** (a key acknowledged before the reader's probe
+//! must be found).
+//!
+//! Every record in these tests maintains `price_cents == quantity × 7`;
+//! writers only ever replace a record with another invariant-preserving
+//! pair, so any violation observed by a reader is a torn read escaping the
+//! seqlock validation.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use membig::memstore::ShardedStore;
+use membig::workload::record::{BookRecord, StockUpdate};
+
+const INVARIANT: u64 = 7;
+
+fn invariant_rec(k: u64, q: u32) -> BookRecord {
+    BookRecord::new(k, q as u64 * INVARIANT, q)
+}
+
+fn assert_untorn(k: u64, r: &BookRecord) {
+    assert_eq!(r.isbn13, k, "probe returned a foreign record for key {k}");
+    assert_eq!(
+        r.price_cents,
+        r.quantity as u64 * INVARIANT,
+        "torn read on key {k}: price={} qty={}",
+        r.price_cents,
+        r.quantity
+    );
+}
+
+/// Tiny xorshift so reader key choices are cheap and reproducible.
+fn xorshift(state: &mut u64) -> u64 {
+    let mut x = *state;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *state = x;
+    x
+}
+
+#[test]
+fn concurrent_readers_never_observe_torn_or_missing_records() {
+    // Deliberately tiny capacity hint: the insert writer forces repeated
+    // table growth (bucket-array reallocation) while readers probe.
+    let store = Arc::new(ShardedStore::new(4, 16));
+    const COMMITTED: u64 = 2_000; // present before any reader starts
+    const EXTRA: u64 = 6_000; // inserted live → growth under fire
+    const READERS: usize = 3;
+    const READER_ITERS: usize = 30_000;
+    for k in 1..=COMMITTED {
+        store.insert(invariant_rec(k, (k % 900) as u32 + 1));
+    }
+    let stop = AtomicBool::new(false);
+    // Highest key whose insert has completed; readers sample this *before*
+    // probing, so every key at or below the sample is a committed write the
+    // probe must find.
+    let committed_up_to = AtomicU64::new(COMMITTED);
+
+    std::thread::scope(|scope| {
+        // Update churn: invariant-preserving apply_many over the stable
+        // prefix, as fast as possible until the readers are done.
+        scope.spawn(|| {
+            let mut round = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                let ups: Vec<StockUpdate> = (0..64u64)
+                    .map(|i| {
+                        let k = (round.wrapping_mul(131) + i * 13) % COMMITTED + 1;
+                        let q = ((round + i) % 9_999) as u32 + 1;
+                        StockUpdate {
+                            isbn13: k,
+                            new_price_cents: q as u64 * INVARIANT,
+                            new_quantity: q,
+                        }
+                    })
+                    .collect();
+                let (applied, missed) = store.apply_many(&ups);
+                assert_eq!(missed, 0, "update churn hit an absent committed key");
+                assert_eq!(applied, 64);
+                round += 1;
+            }
+        });
+        // Growth writer: new keys drive the tables through several
+        // doublings while readers are probing the old arrays.
+        scope.spawn(|| {
+            for k in COMMITTED + 1..=COMMITTED + EXTRA {
+                let q = (k % 900) as u32 + 1;
+                store.insert(invariant_rec(k, q));
+                committed_up_to.store(k, Ordering::Release);
+            }
+        });
+
+        let mut readers = Vec::new();
+        for t in 0..READERS {
+            let store = &store;
+            let committed_up_to = &committed_up_to;
+            readers.push(scope.spawn(move || {
+                let mut rng = 0x9E37_79B9_7F4A_7C15u64 ^ ((t as u64 + 1) << 17);
+                let mut batch = [0u64; 32];
+                for it in 0..READER_ITERS {
+                    // Sample the committed frontier BEFORE probing: any key
+                    // ≤ bound was acknowledged before this read began.
+                    let bound = committed_up_to.load(Ordering::Acquire);
+                    if it % 8 == 0 {
+                        for slot in batch.iter_mut() {
+                            *slot = xorshift(&mut rng) % bound + 1;
+                        }
+                        for (i, v) in store.get_many(&batch).iter().enumerate() {
+                            let k = batch[i];
+                            let r = v.unwrap_or_else(|| {
+                                panic!("committed key {k} missing from get_many (bound {bound})")
+                            });
+                            assert_untorn(k, &r);
+                        }
+                    } else {
+                        let k = xorshift(&mut rng) % bound + 1;
+                        let r = store
+                            .get(k)
+                            .unwrap_or_else(|| {
+                                panic!("committed key {k} missing from get (bound {bound})")
+                            });
+                        assert_untorn(k, &r);
+                    }
+                }
+            }));
+        }
+        for r in readers {
+            r.join().expect("reader panicked");
+        }
+        stop.store(true, Ordering::Release);
+    });
+
+    // Quiesced final state: every key present, every record untorn.
+    assert_eq!(store.len() as u64, COMMITTED + EXTRA);
+    for k in 1..=COMMITTED + EXTRA {
+        let r = store.get(k).expect("key lost after the storm");
+        assert_untorn(k, &r);
+    }
+    let stats = store.read_stats();
+    println!(
+        "seqlock stress: retries={} fallbacks={}",
+        stats.retries.get(),
+        stats.fallbacks.get()
+    );
+}
+
+#[test]
+fn reads_fall_back_to_the_mutex_while_a_writer_pins_the_shard() {
+    // One shard, so the held write guard pins every key: the reader must
+    // exhaust its optimistic retries, take the fallback path, and block on
+    // the mutex until the writer finishes — never return torn/empty data.
+    let store = Arc::new(ShardedStore::new(1, 64));
+    store.insert(invariant_rec(42, 100));
+    let guard = store.shard(0);
+    let s2 = Arc::clone(&store);
+    let reader = std::thread::spawn(move || s2.get(42));
+    // Deterministic, no sleep race: the fallback counter is bumped right
+    // before the reader parks on the shard mutex, so once it reads ≥1 the
+    // reader has certainly burned its optimistic retries.
+    while store.read_stats().fallbacks.get() == 0 {
+        std::thread::yield_now();
+    }
+    drop(guard);
+    let got = reader.join().expect("reader panicked");
+    assert_eq!(got, Some(invariant_rec(42, 100)));
+    assert!(
+        store.read_stats().fallbacks.get() >= 1,
+        "a pinned shard must route the reader through the mutex fallback"
+    );
+    assert!(store.read_stats().retries.get() >= 1);
+}
+
+#[test]
+fn mixed_get_and_get_many_agree_under_concurrent_churn() {
+    // Property-flavoured: whatever interleaving happens, a read returns
+    // either the old or the new committed value of a key — both invariant-
+    // preserving — and get/get_many never disagree about presence.
+    let store = Arc::new(ShardedStore::new(2, 32));
+    const N: u64 = 500;
+    for k in 1..=N {
+        store.insert(invariant_rec(k, 1));
+    }
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        scope.spawn(|| {
+            let mut q = 1u32;
+            while !stop.load(Ordering::Acquire) {
+                q = q % 50_000 + 1;
+                let ups: Vec<StockUpdate> = (1..=N)
+                    .map(|k| StockUpdate {
+                        isbn13: k,
+                        new_price_cents: q as u64 * INVARIANT,
+                        new_quantity: q,
+                    })
+                    .collect();
+                store.apply_many(&ups);
+            }
+        });
+        let keys: Vec<u64> = (1..=N).collect();
+        for _ in 0..300 {
+            for (i, v) in store.get_many(&keys).iter().enumerate() {
+                let r = v.expect("present key vanished");
+                assert_untorn(keys[i], &r);
+            }
+            for k in (1..=N).step_by(37) {
+                let r = store.get(k).expect("present key vanished");
+                assert_untorn(k, &r);
+            }
+        }
+        stop.store(true, Ordering::Release);
+    });
+}
