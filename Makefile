@@ -36,12 +36,18 @@ bench:
 # analytics is compile-smoked only (its runtime body is pjrt-gated and
 # prints a skip line under default features); hashtable, server_throughput
 # and recovery actually execute at tiny N. Every bench also writes its
-# BENCH_<name>.json report to the repo root. server_throughput includes the
-# read-path contention sweep (BENCH_read_path.json) and exits non-zero on
-# negative multi-reader GET scaling — that gate runs even at tiny N, but
-# only on hosts with >=6 cores (4 readers + writer + main need headroom;
-# below that the sweep measures the scheduler, not the lock, and only
-# reports).
+# BENCH_<name>.json report to the repo root. server_throughput includes:
+#  - the read-path contention sweep (BENCH_read_path.json): exits non-zero
+#    on negative multi-reader GET scaling — runs even at tiny N, but only
+#    on hosts with >=6 cores (4 readers + writer + main need headroom;
+#    below that the sweep measures the scheduler, not the lock, and only
+#    reports). It also compares against the committed BENCH_read_path.json
+#    baseline; an all-n:0 baseline (zeroed seed) is unpopulated — reported,
+#    never gated — and the run refreshes the file with measured figures.
+#  - the idle-connection sweep (BENCH_connections.json, Linux): 0/64/256/
+#    1024 open-but-idle conns vs active MUPDATE throughput on a 2-reactor
+#    server, gated so the largest tier keeps >=90% of 0-idle throughput
+#    (idle connections must cost <10%).
 bench-smoke:
 	cd rust && MEMBIG_BENCH_SCALE=100 cargo bench --bench analytics --bench hashtable --bench server_throughput --bench recovery
 

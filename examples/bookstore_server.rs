@@ -46,11 +46,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         }
     };
 
-    // Bounded worker pool: CLIENTS workers so the demo's clients never
-    // queue behind each other, with admission control past 64 sockets.
+    // Event-driven front end: concurrency comes from the reactor threads
+    // (default = cores); `workers` only sizes the blocking-verb executors
+    // (ANALYTICS here), with admission control past 64 sockets.
     let cfg = ServerConfig { workers: CLIENTS, max_conns: 64, ..Default::default() };
     let handle = Server::with_config(store.clone(), analytics, cfg).spawn("127.0.0.1:0")?;
-    println!("serving on {} ({} pool workers)\n", handle.addr, CLIENTS);
+    println!("serving on {} ({} blocking-verb workers)\n", handle.addr, CLIENTS);
     let addr = handle.addr;
 
     // Concurrent clients replay a read-heavy trace.

@@ -194,10 +194,19 @@ pub struct EngineConfig {
     pub writeback: bool,
     /// TCP bind address for `membig serve`.
     pub bind: String,
-    /// Request worker threads for `membig serve`. 0 = max(cores, 4).
+    /// Blocking-verb worker threads for `membig serve` (`ANALYTICS`,
+    /// durable group-commit fsync). 0 = max(cores, 4). On non-Linux hosts
+    /// these workers are the whole (fallback) front end.
     pub server_workers: usize,
     /// Admission limit on concurrent server connections.
     pub server_max_conns: usize,
+    /// Reactor (event-loop) threads for `membig serve`. 0 = one per core.
+    pub server_reactors: usize,
+    /// Per-connection write-buffer cap in KiB; a client that stops reading
+    /// past this is disconnected instead of pinning server resources.
+    /// 0 = the built-in default (8 MiB); explicit values must be ≥ 256 so
+    /// the cap stays above the 64 KiB execution-pause threshold.
+    pub server_write_buf_kb: usize,
     /// Durability directory for `membig serve` (WAL + snapshots +
     /// manifest). `None` (default) = RAM-only serving, tier-1 semantics
     /// unchanged.
@@ -230,6 +239,8 @@ impl Default for EngineConfig {
             bind: "127.0.0.1:7979".to_string(),
             server_workers: 0,
             server_max_conns: 1024,
+            server_reactors: 0,
+            server_write_buf_kb: 0,
             durable_dir: None,
             fsync: true,
             snapshot_every_secs: 60,
@@ -277,6 +288,8 @@ impl EngineConfig {
         }
         set!(self.server_workers, "server", "workers", usize);
         set!(self.server_max_conns, "server", "max_conns", usize);
+        set!(self.server_reactors, "server", "reactors", usize);
+        set!(self.server_write_buf_kb, "server", "write_buf_kb", usize);
         if let Some(v) = get("durability", "dir") {
             self.durable_dir = if v.is_empty() { None } else { Some(PathBuf::from(v)) };
         }
@@ -311,6 +324,15 @@ impl EngineConfig {
         }
         if self.server_max_conns == 0 {
             return Err("server.max_conns must be > 0".into());
+        }
+        if self.server_write_buf_kb != 0 && self.server_write_buf_kb < 256 {
+            // The server only *pauses* execution at its 64 KiB soft limit;
+            // the hard cap disconnects. A cap at or below the soft limit
+            // (plus one response burst) would disconnect well-behaved
+            // clients as "non-readers" mid-burst; 0 keeps the built-in
+            // default (8 MiB). BATCH-heavy workloads should keep the cap
+            // comfortably above their largest expected group response.
+            return Err("server.write_buf_kb must be 0 (default) or >= 256".into());
         }
         if self.durable_dir.is_some()
             && self.snapshot_every_secs == 0
@@ -456,6 +478,8 @@ batch_size = 1024
 bind = "0.0.0.0:7000"
 workers = 3
 max_conns = 9
+reactors = 2
+write_buf_kb = 256
 
 [durability]
 dir = "/var/lib/membig"
@@ -475,6 +499,8 @@ snapshot_wal_mb = 32
         assert_eq!(cfg.bind, "0.0.0.0:7000");
         assert_eq!(cfg.server_workers, 3);
         assert_eq!(cfg.server_max_conns, 9);
+        assert_eq!(cfg.server_reactors, 2);
+        assert_eq!(cfg.server_write_buf_kb, 256);
         assert_eq!(cfg.durable_dir, Some(PathBuf::from("/var/lib/membig")));
         assert!(!cfg.fsync);
         assert_eq!(cfg.snapshot_every_secs, 120);
@@ -507,6 +533,21 @@ snapshot_wal_mb = 32
         let mut c = EngineConfig::default();
         c.server_max_conns = 0;
         assert!(c.validated().is_err());
+    }
+
+    #[test]
+    fn server_write_buf_floor_enforced() {
+        let mut c = EngineConfig::default();
+        // Caps at or below the 64 KiB execution-pause threshold would
+        // disconnect well-behaved clients as "non-readers".
+        for bad in [4, 16, 64, 255] {
+            c.server_write_buf_kb = bad;
+            assert!(c.clone().validated().is_err(), "cap of {bad} KiB must be rejected");
+        }
+        c.server_write_buf_kb = 0;
+        assert!(c.clone().validated().is_ok(), "0 selects the built-in default");
+        c.server_write_buf_kb = 256;
+        assert!(c.validated().is_ok());
     }
 
     #[test]

@@ -37,8 +37,10 @@ fn spec() -> Vec<FlagSpec> {
         FlagSpec { name: "disk-scale", value: "F", help: "fraction of modeled disk delay to sleep (default 0)" },
         FlagSpec { name: "cache-pages", value: "N", help: "disk store page-cache capacity" },
         FlagSpec { name: "bind", value: "ADDR", help: "serve: TCP bind address" },
-        FlagSpec { name: "workers", value: "N", help: "serve: request worker threads (default = max(cores, 4))" },
+        FlagSpec { name: "workers", value: "N", help: "serve: blocking-verb worker threads (default = max(cores, 4))" },
         FlagSpec { name: "max-conns", value: "N", help: "serve: max concurrent connections (default 1024)" },
+        FlagSpec { name: "reactors", value: "N", help: "serve: event-loop reactor threads (default = cores)" },
+        FlagSpec { name: "write-buf-kb", value: "N", help: "serve: per-connection write-buffer cap in KiB before a non-reading client is disconnected (default 8192, min 256)" },
         FlagSpec { name: "durable-dir", value: "DIR", help: "serve: WAL + snapshot directory; enables crash recovery (default off)" },
         FlagSpec { name: "fsync", value: "BOOL", help: "serve: fsync every group commit (default true; false = kernel flush only)" },
         FlagSpec { name: "snapshot-every", value: "SECS", help: "serve: checkpoint interval in seconds (default 60; 0 = off)" },
@@ -217,13 +219,25 @@ fn run() -> Result<(), String> {
                 server_cfg.workers = cfg.server_workers;
             }
             server_cfg.max_conns = cfg.server_max_conns;
+            server_cfg.reactors = cfg.server_reactors;
+            if cfg.server_write_buf_kb > 0 {
+                server_cfg.write_buf_cap = cfg.server_write_buf_kb << 10;
+            }
+            let reactors_shown = if server_cfg.reactors == 0 {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            } else {
+                server_cfg.reactors
+            };
             println!(
-                "serving {} records on {} (analytics: {}; workers: {}; max conns: {}; durability: {})",
+                "serving {} records on {} (analytics: {}; reactors: {}; blocking workers: {}; \
+                 max conns: {}; write buf: {} KiB; durability: {})",
                 commas(store.len() as u64),
                 cfg.bind,
                 engine.as_deref().map(AnalyticsService::backend_name).unwrap_or("disabled"),
+                reactors_shown,
                 server_cfg.workers,
                 server_cfg.max_conns,
+                server_cfg.write_buf_cap >> 10,
                 if persist.is_some() { "on" } else { "off" }
             );
             let handle = Server::with_persistence(store, engine, server_cfg, persist)
@@ -308,6 +322,12 @@ fn build_config(args: &Args) -> Result<EngineConfig, String> {
     }
     if let Some(m) = args.get_parsed::<usize>("max-conns").map_err(|e| e.to_string())? {
         cfg.server_max_conns = m;
+    }
+    if let Some(r) = args.get_parsed::<usize>("reactors").map_err(|e| e.to_string())? {
+        cfg.server_reactors = r;
+    }
+    if let Some(w) = args.get_parsed::<usize>("write-buf-kb").map_err(|e| e.to_string())? {
+        cfg.server_write_buf_kb = w;
     }
     if let Some(d) = args.get("durable-dir") {
         cfg.durable_dir = if d.is_empty() { None } else { Some(PathBuf::from(d)) };

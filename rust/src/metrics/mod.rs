@@ -421,6 +421,21 @@ pub struct ServerMetrics {
     /// one saved allocation each. GET/UPDATE/MGET/MUPDATE/PING/QUIT take
     /// this path; STATS/ANALYTICS and error replies are cold and don't.
     pub allocs_saved: Counter,
+    /// Reactor event-loop wakeups (`epoll_wait` returns, including timer
+    /// ticks). The headline decoupling signal: idle connections add
+    /// nothing to it — compare against `conns_active`. Always 0 on the
+    /// non-Linux fallback front end.
+    pub epoll_wakeups: Counter,
+    /// Readiness events delivered across all wakeups; `ready_events /
+    /// epoll_wakeups` is the batching factor of the event loop.
+    pub ready_events: Counter,
+    /// Connections closed because their bounded write buffer overflowed
+    /// (`ServerConfig::write_buf_cap`): a peer stopped reading its
+    /// responses. Pre-reactor this scenario pinned a worker thread inside
+    /// the socket write timeout instead.
+    pub backpressure_closes: Counter,
+    /// Timer-wheel idle-deadline expirations (connections evicted idle).
+    pub timer_expirations: Counter,
     /// Keys (MGET) / update groups (MUPDATE) / lines (BATCH) per batch verb.
     pub batch_sizes: Histogram,
     pub get_latency: Histogram,
@@ -476,6 +491,10 @@ impl ServerMetrics {
         self.accept_errors.reset();
         self.requests.reset();
         self.allocs_saved.reset();
+        self.epoll_wakeups.reset();
+        self.ready_events.reset();
+        self.backpressure_closes.reset();
+        self.timer_expirations.reset();
         self.batch_sizes.reset();
         for (_, h) in self.verbs() {
             h.reset();
@@ -503,9 +522,14 @@ impl ServerMetrics {
         // Reuse stats_suffix for the connection counters so STATS and
         // STATS SERVER can never report different counter sets.
         let mut s = format!(
-            "OK{} allocs_saved={} batches={} batch_p50={} batch_max={}",
+            "OK{} allocs_saved={} epoll_wakeups={} ready_events={} backpressure_closes={} \
+             timer_expirations={} batches={} batch_p50={} batch_max={}",
             self.stats_suffix(),
             self.allocs_saved.get(),
+            self.epoll_wakeups.get(),
+            self.ready_events.get(),
+            self.backpressure_closes.get(),
+            self.timer_expirations.get(),
             self.batch_sizes.count(),
             self.batch_sizes.quantile(0.5),
             self.batch_sizes.max()
@@ -530,6 +554,10 @@ impl ServerMetrics {
             ("requests", Json::num(self.requests.get() as f64)),
             ("epoch", Json::num(self.epoch.get() as f64)),
             ("allocs_saved", Json::num(self.allocs_saved.get() as f64)),
+            ("epoll_wakeups", Json::num(self.epoll_wakeups.get() as f64)),
+            ("ready_events", Json::num(self.ready_events.get() as f64)),
+            ("backpressure_closes", Json::num(self.backpressure_closes.get() as f64)),
+            ("timer_expirations", Json::num(self.timer_expirations.get() as f64)),
             ("batch_sizes", self.batch_sizes.snapshot().to_json()),
             ("get_latency", self.get_latency.snapshot().to_json()),
             ("update_latency", self.update_latency.snapshot().to_json()),
@@ -840,6 +868,10 @@ mod tests {
         m.conns_accepted.inc();
         m.conns_active.inc();
         m.batch_sizes.record(64);
+        m.epoll_wakeups.add(3);
+        m.ready_events.add(5);
+        m.backpressure_closes.inc();
+        m.timer_expirations.inc();
         let suffix = m.stats_suffix();
         assert!(suffix.contains("conns_accepted=1"), "{suffix}");
         assert!(suffix.contains("conns_active=1"), "{suffix}");
@@ -848,7 +880,18 @@ mod tests {
         assert!(line.contains("batches=1"), "{line}");
         assert!(line.contains("get_n=1"), "{line}");
         assert!(line.contains("mupdate_p50_ns="), "{line}");
+        assert!(line.contains("epoll_wakeups=3"), "{line}");
+        assert!(line.contains("ready_events=5"), "{line}");
+        assert!(line.contains("backpressure_closes=1"), "{line}");
+        assert!(line.contains("timer_expirations=1"), "{line}");
         let j = m.to_json();
         assert_eq!(j.get("conns_accepted").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.get("epoll_wakeups").unwrap().as_f64().unwrap(), 3.0);
+        // Reactor counters join the measurement epoch.
+        m.reset_epoch();
+        assert_eq!(m.epoll_wakeups.get(), 0);
+        assert_eq!(m.ready_events.get(), 0);
+        assert_eq!(m.backpressure_closes.get(), 0);
+        assert_eq!(m.timer_expirations.get(), 0);
     }
 }

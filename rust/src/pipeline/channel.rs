@@ -15,6 +15,24 @@ use std::sync::{Arc, Condvar, Mutex};
 #[derive(Debug, PartialEq, Eq)]
 pub struct SendError<T>(pub T);
 
+/// Outcome of a [`Sender::try_send`] that could not enqueue.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TrySendError<T> {
+    /// Queue at capacity — the value is handed back so the caller can
+    /// apply its own backpressure policy instead of blocking.
+    Full(T),
+    /// All receivers are gone.
+    Closed(T),
+}
+
+impl<T> TrySendError<T> {
+    pub fn into_inner(self) -> T {
+        match self {
+            TrySendError::Full(v) | TrySendError::Closed(v) => v,
+        }
+    }
+}
+
 #[derive(Debug, PartialEq, Eq)]
 pub enum RecvError {
     Closed,
@@ -74,6 +92,24 @@ impl<T> Sender<T> {
             self.shared.send_blocks.fetch_add(1, Ordering::Relaxed);
             q = self.shared.not_full.wait(q).unwrap();
         }
+    }
+
+    /// Non-blocking send: never parks the caller. A full queue hands the
+    /// value back as [`TrySendError::Full`] — this is what lets the server
+    /// reactors feed the blocking-verb pool without ever blocking an event
+    /// loop on it.
+    pub fn try_send(&self, value: T) -> Result<(), TrySendError<T>> {
+        let mut q = self.shared.queue.lock().unwrap();
+        if self.shared.receivers.load(Ordering::Acquire) == 0 {
+            return Err(TrySendError::Closed(value));
+        }
+        if q.len() >= self.shared.capacity {
+            return Err(TrySendError::Full(value));
+        }
+        q.push_back(value);
+        drop(q);
+        self.shared.not_empty.notify_one();
+        Ok(())
     }
 
     /// Number of times senders blocked (backpressure events).
@@ -271,6 +307,20 @@ mod tests {
         assert_eq!(rx.try_recv(), Ok(Some(5)));
         drop(tx);
         assert_eq!(rx.try_recv(), Err(RecvError::Closed));
+    }
+
+    #[test]
+    fn try_send_full_and_closed() {
+        let (tx, rx) = bounded::<u32>(2);
+        assert_eq!(tx.try_send(1), Ok(()));
+        assert_eq!(tx.try_send(2), Ok(()));
+        // At capacity: the value comes back instead of the caller parking.
+        assert_eq!(tx.try_send(3), Err(TrySendError::Full(3)));
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(tx.try_send(3), Ok(()), "space freed by the recv");
+        drop(rx);
+        assert_eq!(tx.try_send(4), Err(TrySendError::Closed(4)));
+        assert_eq!(TrySendError::Full(7u32).into_inner(), 7);
     }
 
     #[test]

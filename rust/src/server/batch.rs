@@ -5,9 +5,10 @@
 //! [`ShardedStore::get_many`] / [`ShardedStore::apply_many`]) and takes each
 //! shard lock once per batch instead of once per key — the paper's §4.2
 //! group-at-a-time dispatch applied to the request path. `BATCH <n>` framing
-//! (n follow-up lines, n response lines, one socket write) lives in the
-//! connection loop in `server::handle_client`; per-line execution still goes
-//! through `dispatch`.
+//! (n follow-up lines, n response lines released as one group) lives in the
+//! per-connection state machine (`server::reactor` on Linux, the blocking
+//! `server::fallback` loop elsewhere); per-line execution goes through
+//! `server::exec_batch_group` → `dispatch_into`.
 
 use crate::memstore::ShardedStore;
 use crate::workload::record::StockUpdate;

@@ -1,0 +1,366 @@
+//! Portable blocking front end for non-Linux hosts: acceptor + bounded
+//! `WorkerPool` over whole connections, read-timeout ticks, per-syscall
+//! write timeouts. This is the pre-reactor architecture, kept verbatim so
+//! the crate builds and serves the identical wire protocol everywhere the
+//! raw-epoll core (`super::reactor`) is unavailable. Its known scaling
+//! limits (live concurrency capped at `workers`, idle clients paying a
+//! read-timeout tick, slow readers pinning a worker inside the write
+//! timeout) are exactly what the reactor replaces — see DESIGN.md §11.
+
+#![cfg(not(target_os = "linux"))]
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::pool::WorkerPool;
+use super::{
+    batch, exec_batch_group, execute_one_into, reject_busy, reply_invalid_utf8, trim_pool,
+    BatchScratch, Server, ServerConfig, MAX_LINE_BYTES,
+};
+use crate::durability::Persistence;
+use crate::memstore::ShardedStore;
+use crate::metrics::ServerMetrics;
+use crate::runtime::AnalyticsService;
+
+/// Granularity at which a blocked read notices shutdown and the idle
+/// deadline (the reactor core needs neither: it sleeps in epoll).
+const READ_TICK: Duration = Duration::from_millis(200);
+
+/// Per-syscall socket write timeout: a client that stops reading fills its
+/// TCP window and would otherwise pin a worker (and hang shutdown) in
+/// `write_all` forever.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+impl Server {
+    pub(super) fn accept_loop(self, listener: TcpListener) {
+        // Non-blocking accept + short sleep so `stop` is observed between
+        // clients without a wakeup pipe.
+        listener.set_nonblocking(true).ok();
+        // Queue capacity == max_conns: admission control guarantees at most
+        // max_conns live connections, so `submit` never blocks the acceptor.
+        let pool = {
+            let store = self.store.clone();
+            let engine = self.engine.clone();
+            let persist = self.persist.clone();
+            let stop = self.stop.clone();
+            let metrics = self.metrics.clone();
+            let cfg = self.config.clone();
+            WorkerPool::new(
+                self.config.workers,
+                self.config.max_conns,
+                move |stream: TcpStream| {
+                    // Guard (not a trailing call) so the admission slot is
+                    // released even if request handling panics.
+                    let _guard = ActiveGuard(&metrics);
+                    let _ = handle_client(
+                        stream,
+                        &store,
+                        engine.as_ref(),
+                        persist.as_deref(),
+                        &stop,
+                        &metrics,
+                        &cfg,
+                    );
+                },
+            )
+        };
+        let base = Duration::from_millis(5);
+        let mut backoff = base;
+        while !self.stop.load(Ordering::Acquire) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    backoff = base;
+                    if self.metrics.conns_active.get() >= self.config.max_conns as i64 {
+                        self.metrics.conns_rejected.inc();
+                        reject_busy(stream);
+                        continue;
+                    }
+                    self.metrics.conns_accepted.inc();
+                    self.metrics.conns_active.inc();
+                    if pool.submit(stream).is_err() {
+                        // Pool already shut down (stop raced this accept).
+                        self.metrics.conns_active.dec();
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(base);
+                }
+                Err(_) => {
+                    // Transient accept failure (EMFILE, ECONNABORTED, ...):
+                    // record it and back off — only `stop` ends the loop.
+                    self.metrics.accept_errors.inc();
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(500));
+                }
+            }
+        }
+        drop(pool); // closes the queue, drains it, joins every worker
+    }
+}
+
+/// Decrements `conns_active` on drop — including a panicking unwind, so a
+/// crashed handler can never leak an admission slot.
+struct ActiveGuard<'a>(&'a ServerMetrics);
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.conns_active.dec();
+    }
+}
+
+enum ReadOutcome {
+    Line,
+    Eof,
+    Stopped,
+    /// No complete request within the idle window.
+    IdleTimeout,
+}
+
+/// Read one request line as raw bytes, preserving a partially-received
+/// request across read-timeout ticks: a slow client may deliver `"GET 12"`
+/// now and `"34\n"` after the timeout, and both halves belong to one
+/// request. `line` is appended to (never cleared here) — the caller clears
+/// it after consuming a complete line, and validates the accumulated bytes
+/// as UTF-8 **once per line**. Checks `stop` each tick. The idle `deadline`
+/// is absolute and caller-supplied: one per request on the main loop, one
+/// shared across a whole BATCH payload (so a drip-feeding client cannot
+/// reset the clock per line).
+///
+/// Reads chunk-at-a-time (`fill_buf`/`consume`) instead of `read_line` so
+/// the `MAX_LINE_BYTES` cap is enforced between chunks — a client
+/// streaming forever without a newline gets its connection dropped, not an
+/// unbounded buffer.
+fn read_request_line(
+    reader: &mut BufReader<TcpStream>,
+    line: &mut Vec<u8>,
+    stop: &AtomicBool,
+    deadline: Instant,
+) -> std::io::Result<ReadOutcome> {
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return Ok(ReadOutcome::Stopped);
+        }
+        if Instant::now() >= deadline {
+            return Ok(ReadOutcome::IdleTimeout);
+        }
+        if line.len() > MAX_LINE_BYTES {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+            ));
+        }
+        let (complete, used) = {
+            let buf = match reader.fill_buf() {
+                Ok(b) => b,
+                // Interrupted (EINTR) retries like std's read_line would.
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut
+                        || e.kind() == std::io::ErrorKind::Interrupted =>
+                {
+                    continue
+                }
+                Err(e) => return Err(e),
+            };
+            if buf.is_empty() {
+                // EOF. A non-empty partial (no trailing newline) is still a
+                // request — matches `read_line`'s end-of-stream semantics.
+                return Ok(if line.is_empty() { ReadOutcome::Eof } else { ReadOutcome::Line });
+            }
+            match buf.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    line.extend_from_slice(&buf[..=i]);
+                    (true, i + 1)
+                }
+                None => {
+                    line.extend_from_slice(buf);
+                    (false, buf.len())
+                }
+            }
+        };
+        reader.consume(used);
+        if complete {
+            return Ok(ReadOutcome::Line);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_client(
+    stream: TcpStream,
+    store: &Arc<ShardedStore>,
+    engine: Option<&Arc<AnalyticsService>>,
+    persist: Option<&Persistence>,
+    stop: &AtomicBool,
+    metrics: &ServerMetrics,
+    cfg: &ServerConfig,
+) -> std::io::Result<()> {
+    // BSD-family kernels hand accepted sockets the listener's O_NONBLOCK;
+    // clear it so the read timeout governs blocking.
+    stream.set_nonblocking(false).ok();
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(READ_TICK))?;
+    stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    // Per-connection pools: the line accumulator, the response buffer and
+    // the BATCH scratch are reused across requests (trimmed back after an
+    // outlier) — the steady-state request cycle performs no heap
+    // allocation.
+    let mut line: Vec<u8> = Vec::with_capacity(256);
+    let mut resp: Vec<u8> = Vec::with_capacity(256);
+    let mut scratch = BatchScratch::default();
+    loop {
+        match read_request_line(&mut reader, &mut line, stop, Instant::now() + cfg.idle_timeout)? {
+            ReadOutcome::Line => {}
+            ReadOutcome::Eof | ReadOutcome::Stopped => return Ok(()),
+            ReadOutcome::IdleTimeout => {
+                let _ = out.write_all(b"ERR idle timeout, closing connection\n");
+                return Ok(());
+            }
+        }
+        // Validate the accumulated bytes once per complete line; borrow the
+        // request out of the buffer — no per-request copy. `line` is
+        // cleared only after the last use of `req`.
+        let req = match std::str::from_utf8(&line) {
+            Ok(s) => s.trim(),
+            Err(_) => {
+                // Close, don't continue: the garbage could have been a
+                // BATCH header, in which case payload lines are already in
+                // flight and would execute as top-level requests —
+                // permanently desyncing the reply stream (same no-resync
+                // rule as malformed BATCH headers). Inside a BATCH payload
+                // the count frames each line, so the group runner can ERR
+                // per-line instead.
+                resp.clear();
+                reply_invalid_utf8(metrics, &mut resp);
+                let _ = out.write_all(&resp);
+                // Half-close + one bounded drain (reject_busy's pattern):
+                // dropping the socket with those pipelined bytes unread
+                // would RST and could discard the ERR reply.
+                let _ = out.shutdown(Shutdown::Write);
+                out.set_read_timeout(Some(Duration::from_millis(10))).ok();
+                let mut sink = [0u8; 256];
+                let _ = out.read(&mut sink);
+                return Ok(());
+            }
+        };
+        let verb = req.split_ascii_whitespace().next().unwrap_or("");
+        if verb == "BATCH" {
+            // The framing header is not counted as a request — the group
+            // runner counts each payload line, so `requests` matches
+            // executed ops.
+            let quit = run_batch(
+                req,
+                &mut reader,
+                &mut out,
+                store,
+                engine,
+                persist,
+                stop,
+                metrics,
+                cfg,
+                &mut scratch,
+            )?;
+            line.clear();
+            if quit {
+                return Ok(());
+            }
+            continue;
+        }
+        resp.clear();
+        execute_one_into(req, store, engine, persist, metrics, false, &mut resp);
+        // Response + newline leave in one syscall.
+        out.write_all(&resp)?;
+        let quit = req == "QUIT";
+        // An outlier request (MGET near the line cap) must not pin its
+        // high-water buffers for the connection's remaining lifetime —
+        // clear before trimming (`shrink_to` cannot go below `len`).
+        line.clear();
+        resp.clear();
+        trim_pool(&mut line);
+        trim_pool(&mut resp);
+        if quit {
+            return Ok(());
+        }
+    }
+}
+
+/// `BATCH <n>` framing: read `n` follow-up request lines, execute them all
+/// through `exec_batch_group`, answer with `n` response lines in **one**
+/// socket write — the whole group costs one round trip. Returns `Ok(true)`
+/// when the connection must close (client vanished mid-batch, shutdown,
+/// group sync failure, or the batch contained `QUIT`).
+#[allow(clippy::too_many_arguments)]
+fn run_batch(
+    header: &str,
+    reader: &mut BufReader<TcpStream>,
+    out: &mut TcpStream,
+    store: &Arc<ShardedStore>,
+    engine: Option<&Arc<AnalyticsService>>,
+    persist: Option<&Persistence>,
+    stop: &AtomicBool,
+    metrics: &ServerMetrics,
+    cfg: &ServerConfig,
+    scratch: &mut BatchScratch,
+) -> std::io::Result<bool> {
+    let mut parts = header.split_ascii_whitespace();
+    parts.next(); // "BATCH"
+    let n = parts.next().and_then(|s| s.parse::<usize>().ok());
+    let n = match (n, parts.next()) {
+        (Some(n), None) if (1..=batch::MAX_BATCH).contains(&n) => n,
+        _ => {
+            // A pipelining client may already have written payload lines we
+            // cannot distinguish from top-level requests — close instead of
+            // executing them (same no-resync rule as the payload-size cap).
+            let msg = format!("ERR BATCH expects <n> in 1..={}, closing\n", batch::MAX_BATCH);
+            out.write_all(msg.as_bytes())?;
+            return Ok(true);
+        }
+    };
+    scratch.payload.clear();
+    scratch.bounds.clear();
+    // One idle window for the entire payload — per-line deadlines would let
+    // a drip-feeding client hold this worker for n × idle_timeout.
+    let deadline = Instant::now() + cfg.idle_timeout;
+    for _ in 0..n {
+        scratch.line.clear();
+        match read_request_line(reader, &mut scratch.line, stop, deadline)? {
+            ReadOutcome::Line => {}
+            ReadOutcome::Eof | ReadOutcome::Stopped | ReadOutcome::IdleTimeout => {
+                return Ok(true)
+            }
+        }
+        // Per-line MAX_LINE_BYTES is not enough here: n lines buffer before
+        // execution, so cap the batch payload as a whole too.
+        scratch.payload.extend_from_slice(&scratch.line);
+        scratch.bounds.push(scratch.payload.len());
+        if scratch.payload.len() > batch::MAX_BATCH_BYTES {
+            let msg =
+                format!("ERR BATCH payload exceeds {} bytes, closing\n", batch::MAX_BATCH_BYTES);
+            out.write_all(msg.as_bytes())?;
+            return Ok(true); // remaining lines are unread: cannot resync
+        }
+    }
+    scratch.resp.clear();
+    let quit = match exec_batch_group(
+        &scratch.payload,
+        &scratch.bounds,
+        store,
+        engine,
+        persist,
+        metrics,
+        &mut scratch.resp,
+    ) {
+        Ok(quit) => quit,
+        // Group sync failed: never deliver the buffered OKs.
+        Err(()) => return Ok(true),
+    };
+    // The whole group's responses leave in one gathered write.
+    out.write_all(&scratch.resp)?;
+    scratch.trim();
+    Ok(quit)
+}

@@ -10,10 +10,10 @@
 //! MGET <k1> <k2> ...            → OK <n> <price,qty|MISS> ...  (input order)
 //! MUPDATE <k c q>;<k c q>;...   → OK applied=<a> missed=<m>
 //! BATCH <n>                     → n follow-up request lines, answered with
-//!                                 n response lines in one socket write
+//!                                 n response lines in one write
 //! STATS                         → OK count=<n> value_cents=<v> conns_...
-//! STATS SERVER                  → OK <conn counters + per-verb latency
-//!                                 + read-path/WAL/snapshot gauges>
+//! STATS SERVER                  → OK <conn + reactor counters + per-verb
+//!                                 latency + read-path/WAL/snapshot gauges>
 //! STATS RESET                   → OK epoch=<e> (fresh measurement window)
 //! ANALYTICS                     → OK value=<dollars> ... (analytics backend)
 //! PING                          → PONG
@@ -21,21 +21,39 @@
 //! ```
 //! Unknown/malformed input → `ERR <reason>`.
 //!
-//! Topology: one acceptor thread feeds a **bounded worker pool**
-//! ([`pool::WorkerPool`]) over a `pipeline::channel` queue — thread count is
-//! fixed by [`ServerConfig::workers`], connections past
-//! [`ServerConfig::max_conns`] are refused with `ERR server busy`, and the
-//! batch verbs execute shard-affinely ([`batch`]): keys are pre-routed with
-//! `ShardedStore::route_hashed` and each shard is visited once per batch, so
-//! a loaded front end scales like the pipeline's workers instead of one
-//! thread per socket. `GET`/`MGET` read the store **lock-free** (seqlock,
-//! `memstore::shard`), so read throughput scales with reader threads.
+//! Topology (Linux): an **event-driven reactor core** (`reactor` module) —
+//! one acceptor blocking in its own epoll, and `ServerConfig::reactors`
+//! reactor threads (default = cores), each owning an epoll instance (raw
+//! `epoll_create1`/`epoll_ctl`/`epoll_wait` + `eventfd`, hand-declared in
+//! the `sys` module — zero external crates), nonblocking sockets, and a slab of
+//! per-connection state machines. Connections are dealt round-robin across
+//! reactors at accept time; concurrent-connection capacity is decoupled
+//! from thread count, and an idle connection costs zero wakeups between
+//! events (idle deadlines live on a per-reactor lazy timer wheel).
+//! Responses go through a bounded per-connection write buffer with
+//! `EPOLLOUT`-driven backpressure: a client that stops reading gets its
+//! buffer capped and the connection closed (`backpressure_closes`) instead
+//! of pinning a thread inside a socket write timeout. The bounded
+//! [`pool::WorkerPool`] survives as the executor for **blocking verbs** —
+//! `ANALYTICS` and, with durability on, the mutations whose group commit
+//! fsyncs — so reactor threads never block on disk or the analytics
+//! engine. Admission control is unchanged: connections past
+//! [`ServerConfig::max_conns`] are refused with `ERR server busy`.
+//!
+//! On non-Linux hosts the portable blocking front end (`fallback` module) —
+//! acceptor + `WorkerPool` over whole connections, read-timeout ticks —
+//! serves the identical wire protocol; the reactor counters then read 0.
+//!
+//! The batch verbs execute shard-affinely ([`batch`]): keys are pre-routed
+//! with `ShardedStore::route_hashed` and each shard is visited once per
+//! batch. `GET`/`MGET` read the store **lock-free** (seqlock,
+//! `memstore::shard`), so read throughput scales with reactor threads.
 //!
 //! Hot path allocation discipline: request lines accumulate into a reusable
 //! per-connection byte buffer and are UTF-8-validated **once per line** (no
 //! per-chunk decode), the tokenizer works on borrowed slices, and responses
 //! are formatted with an integer byte formatter into a pooled per-connection
-//! buffer flushed in **one** write per request (one per whole BATCH group).
+//! buffer flushed opportunistically (one write syscall per response batch).
 //! Steady state the request/response cycle of the point verbs allocates
 //! nothing; the `allocs_saved` counter tracks responses served this way.
 //!
@@ -43,12 +61,19 @@
 //! (`UPDATE`/`MUPDATE`/`BATCH` payload) is WAL-logged through
 //! [`durability::Persistence`](crate::durability::Persistence) *before* it
 //! is acknowledged — one group sync per request batch (`BATCH` defers each
-//! line's sync and issues exactly one before the group's single response
-//! write). Without a persistence layer the request path is byte-for-byte
+//! line's sync and issues exactly one before the group's responses are
+//! released). Without a persistence layer the request path is byte-for-byte
 //! the old RAM-only one.
 
 pub mod batch;
+#[cfg(not(target_os = "linux"))]
+mod fallback;
 pub mod pool;
+mod reactor;
+mod sys;
+
+#[cfg(target_os = "linux")]
+pub use reactor::raise_nofile_limit;
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
@@ -62,40 +87,45 @@ use crate::metrics::ServerMetrics;
 use crate::runtime::AnalyticsService;
 use crate::util::fmt::push_u64;
 use crate::workload::record::StockUpdate;
-use pool::WorkerPool;
 
 /// Tunables for the request front end.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
-    /// Pool worker threads; each owns one connection at a time.
+    /// Blocking-verb executor threads (`ANALYTICS`, durable group-commit
+    /// fsync). On non-Linux hosts this is the whole front end: each worker
+    /// owns one connection at a time.
     pub workers: usize,
-    /// Admission limit on live connections (queued + in-flight); beyond it
-    /// new sockets get `ERR server busy` and are closed.
+    /// Admission limit on live connections; beyond it new sockets get
+    /// `ERR server busy` and are closed.
     pub max_conns: usize,
-    /// Per-connection read timeout — also the granularity at which idle
-    /// connections notice shutdown.
-    pub read_timeout: Duration,
+    /// Reactor (event-loop) threads. 0 = one per core. Ignored by the
+    /// non-Linux fallback front end.
+    pub reactors: usize,
     /// A connection that completes no request within this window is closed.
-    /// Workers own their connection while serving it, so without this limit
-    /// `workers` idle clients would starve every queued connection.
+    /// Partial input does not extend it, so a drip-feeding client cannot
+    /// hold its admission slot forever.
     pub idle_timeout: Duration,
-    /// Per-syscall socket write timeout. A client that stops reading fills
-    /// its TCP window and would otherwise pin a worker (and hang shutdown)
-    /// in `write_all` forever.
-    pub write_timeout: Duration,
+    /// Hard cap on un-flushed response bytes buffered per connection. A
+    /// peer that stops reading past this is disconnected (and counted in
+    /// `backpressure_closes`) instead of pinning memory or — pre-reactor —
+    /// a worker thread inside a socket write timeout.
+    pub write_buf_cap: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
         ServerConfig {
-            // Network front end is IO-bound: keep a floor of 4 so small
-            // hosts still overlap slow clients.
+            // Blocking verbs are rare but latency-heavy (fsync, analytics);
+            // a floor of 4 keeps them overlapped on small hosts.
             workers: cores.max(4),
             max_conns: 1024,
-            read_timeout: Duration::from_millis(200),
+            reactors: 0,
             idle_timeout: Duration::from_secs(30),
-            write_timeout: Duration::from_secs(10),
+            // Comfortably above the largest single BATCH response (a 4 MiB
+            // payload answers in less than its own size), so only a
+            // genuinely non-reading client ever hits it.
+            write_buf_cap: 8 << 20,
         }
     }
 }
@@ -114,6 +144,9 @@ pub struct ServerHandle {
     stop: Arc<AtomicBool>,
     join: Option<std::thread::JoinHandle<()>>,
     pub metrics: Arc<ServerMetrics>,
+    /// Wakes the acceptor out of its epoll wait so shutdown is immediate.
+    #[cfg(target_os = "linux")]
+    wake: Option<Arc<sys::EventFd>>,
 }
 
 impl Server {
@@ -140,11 +173,14 @@ impl Server {
         mut config: ServerConfig,
         persist: Option<Arc<Persistence>>,
     ) -> Self {
-        // Clamp here so the admission check and the pool agree: a raw
-        // max_conns of 0 would otherwise reject every connection while the
-        // pool still stood up a 1-slot queue.
+        // Clamp here so the admission check, the pool and the reactors all
+        // agree on the resolved values.
         config.workers = config.workers.max(1);
         config.max_conns = config.max_conns.max(1);
+        if config.reactors == 0 {
+            config.reactors =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        }
         Server {
             store,
             engine,
@@ -159,75 +195,45 @@ impl Server {
     pub fn spawn(self, bind: &str) -> std::io::Result<ServerHandle> {
         let listener = TcpListener::bind(bind)?;
         let addr = listener.local_addr()?;
-        let stop = self.stop.clone();
-        let metrics = self.metrics.clone();
-        let join = std::thread::spawn(move || self.accept_loop(listener));
-        Ok(ServerHandle { addr, stop, join: Some(join), metrics })
+        self.spawn_on(listener, addr)
     }
 
-    fn accept_loop(self, listener: TcpListener) {
-        // Non-blocking accept + short sleep so `stop` is observed between
-        // clients without a wakeup pipe.
-        listener.set_nonblocking(true).ok();
-        // Queue capacity == max_conns: admission control guarantees at most
-        // max_conns live connections, so `submit` never blocks the acceptor.
-        let pool = {
-            let store = self.store.clone();
-            let engine = self.engine.clone();
-            let persist = self.persist.clone();
-            let stop = self.stop.clone();
-            let metrics = self.metrics.clone();
-            let cfg = self.config.clone();
-            WorkerPool::new(
-                self.config.workers,
-                self.config.max_conns,
-                move |stream: TcpStream| {
-                    // Guard (not a trailing call) so the admission slot is
-                    // released even if request handling panics.
-                    let _guard = ActiveGuard(&metrics);
-                    let _ = handle_client(
-                        stream,
-                        &store,
-                        engine.as_ref(),
-                        persist.as_deref(),
-                        &stop,
-                        &metrics,
-                        &cfg,
-                    );
-                },
-            )
-        };
-        let base = Duration::from_millis(5);
-        let mut backoff = base;
-        while !self.stop.load(Ordering::Acquire) {
-            match listener.accept() {
-                Ok((stream, _)) => {
-                    backoff = base;
-                    if self.metrics.conns_active.get() >= self.config.max_conns as i64 {
-                        self.metrics.conns_rejected.inc();
-                        reject_busy(stream);
-                        continue;
-                    }
-                    self.metrics.conns_accepted.inc();
-                    self.metrics.conns_active.inc();
-                    if pool.submit(stream).is_err() {
-                        // Pool already shut down (stop raced this accept).
-                        self.metrics.conns_active.dec();
-                    }
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(base);
-                }
-                Err(_) => {
-                    // Transient accept failure (EMFILE, ECONNABORTED, ...):
-                    // record it and back off — only `stop` ends the loop.
-                    self.metrics.accept_errors.inc();
-                    std::thread::sleep(backoff);
-                    backoff = (backoff * 2).min(Duration::from_millis(500));
-                }
-            }
-        }
-        drop(pool); // closes the queue, drains it, joins every worker
+    #[cfg(target_os = "linux")]
+    fn spawn_on(
+        self,
+        listener: TcpListener,
+        addr: std::net::SocketAddr,
+    ) -> std::io::Result<ServerHandle> {
+        let stop = self.stop.clone();
+        let metrics = self.metrics.clone();
+        let wake = Arc::new(sys::EventFd::new()?);
+        let front = reactor::Frontend::build(
+            self.store,
+            self.engine,
+            self.persist,
+            metrics.clone(),
+            stop.clone(),
+            self.config,
+        )?;
+        let wake2 = wake.clone();
+        let join = std::thread::Builder::new()
+            .name("membig-acceptor".into())
+            .spawn(move || reactor::accept_loop(listener, wake2, front))?;
+        Ok(ServerHandle { addr, stop, join: Some(join), metrics, wake: Some(wake) })
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    fn spawn_on(
+        self,
+        listener: TcpListener,
+        addr: std::net::SocketAddr,
+    ) -> std::io::Result<ServerHandle> {
+        let stop = self.stop.clone();
+        let metrics = self.metrics.clone();
+        let join = std::thread::Builder::new()
+            .name("membig-acceptor".into())
+            .spawn(move || self.accept_loop(listener))?;
+        Ok(ServerHandle { addr, stop, join: Some(join), metrics })
     }
 }
 
@@ -237,30 +243,25 @@ impl ServerHandle {
         self.metrics.requests.get()
     }
 
-    pub fn shutdown(mut self) {
+    fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::Release);
+        #[cfg(target_os = "linux")]
+        if let Some(w) = &self.wake {
+            w.signal();
+        }
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
     }
 }
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Release);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-    }
-}
-
-/// Decrements `conns_active` on drop — including a panicking unwind, so a
-/// crashed handler can never leak an admission slot.
-struct ActiveGuard<'a>(&'a ServerMetrics);
-
-impl Drop for ActiveGuard<'_> {
-    fn drop(&mut self) {
-        self.0.conns_active.dec();
+        self.stop_and_join();
     }
 }
 
@@ -269,7 +270,7 @@ impl Drop for ActiveGuard<'_> {
 /// receives the busy line instead of an RST that may discard it. Runs on a
 /// short-lived helper thread — the acceptor must never block on a rejected
 /// peer, especially under the overload that causes rejections.
-fn reject_busy(stream: TcpStream) {
+pub(crate) fn reject_busy(stream: TcpStream) {
     let reject = move || {
         let mut stream = stream;
         stream.set_nonblocking(false).ok();
@@ -285,88 +286,10 @@ fn reject_busy(stream: TcpStream) {
     let _ = std::thread::Builder::new().name("server-reject".into()).spawn(reject);
 }
 
-enum ReadOutcome {
-    Line,
-    Eof,
-    Stopped,
-    /// No complete request within the idle window.
-    IdleTimeout,
-}
-
 /// Hard cap on one request line. MGET at MAX_BATCH keys is ~140 KiB, so
 /// 1 MiB leaves ample headroom while bounding what a newline-less client
 /// can pin in memory per connection.
-const MAX_LINE_BYTES: usize = 1 << 20;
-
-/// Read one request line as raw bytes, preserving a partially-received
-/// request across read-timeout ticks: a slow client may deliver `"GET 12"`
-/// now and `"34\n"` after the timeout, and both halves belong to one
-/// request. `line` is appended to (never cleared here) — the caller clears
-/// it after consuming a complete line, and validates the accumulated bytes
-/// as UTF-8 **once per line** (the old path lossy-decoded every chunk into
-/// a fresh `String`). Checks `stop` each tick. The idle `deadline` is
-/// absolute and caller-supplied: one per request on the main loop, one
-/// shared across a whole BATCH payload (so a drip-feeding client cannot
-/// reset the clock per line).
-///
-/// Reads chunk-at-a-time (`fill_buf`/`consume`) instead of `read_line` so
-/// the [`MAX_LINE_BYTES`] cap is enforced between chunks — a client
-/// streaming forever without a newline gets its connection dropped, not an
-/// unbounded buffer.
-fn read_request_line(
-    reader: &mut BufReader<TcpStream>,
-    line: &mut Vec<u8>,
-    stop: &AtomicBool,
-    deadline: Instant,
-) -> std::io::Result<ReadOutcome> {
-    loop {
-        if stop.load(Ordering::Acquire) {
-            return Ok(ReadOutcome::Stopped);
-        }
-        if Instant::now() >= deadline {
-            return Ok(ReadOutcome::IdleTimeout);
-        }
-        if line.len() > MAX_LINE_BYTES {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                format!("request line exceeds {MAX_LINE_BYTES} bytes"),
-            ));
-        }
-        let (complete, used) = {
-            let buf = match reader.fill_buf() {
-                Ok(b) => b,
-                // Interrupted (EINTR) retries like std's read_line would.
-                Err(e)
-                    if e.kind() == std::io::ErrorKind::WouldBlock
-                        || e.kind() == std::io::ErrorKind::TimedOut
-                        || e.kind() == std::io::ErrorKind::Interrupted =>
-                {
-                    continue
-                }
-                Err(e) => return Err(e),
-            };
-            if buf.is_empty() {
-                // EOF. A non-empty partial (no trailing newline) is still a
-                // request — matches `read_line`'s end-of-stream semantics.
-                return Ok(if line.is_empty() { ReadOutcome::Eof } else { ReadOutcome::Line });
-            }
-            match buf.iter().position(|&b| b == b'\n') {
-                Some(i) => {
-                    line.extend_from_slice(&buf[..=i]);
-                    (true, i + 1)
-                }
-                None => {
-                    line.extend_from_slice(buf);
-                    (false, buf.len())
-                }
-            }
-        };
-        reader.consume(used);
-        if complete {
-            return Ok(ReadOutcome::Line);
-        }
-    }
-}
+pub(crate) const MAX_LINE_BYTES: usize = 1 << 20;
 
 /// Per-connection pool capacity retained across requests. Buffers grow to
 /// whatever one request needs, then are trimmed back to this after any
@@ -375,7 +298,7 @@ fn read_request_line(
 const RETAIN_BYTES: usize = 64 << 10;
 
 /// Trim a pooled buffer that ballooned past the retention cap.
-fn trim_pool(buf: &mut Vec<u8>) {
+pub(crate) fn trim_pool(buf: &mut Vec<u8>) {
     if buf.capacity() > RETAIN_BYTES {
         buf.shrink_to(RETAIN_BYTES);
     }
@@ -385,15 +308,15 @@ fn trim_pool(buf: &mut Vec<u8>) {
 /// a connection's batches allocate nothing: payload bytes, line bounds and
 /// the group response all live in these pools.
 #[derive(Default)]
-struct BatchScratch {
-    /// One reused accumulator for the payload read loop.
-    line: Vec<u8>,
+pub(crate) struct BatchScratch {
+    /// One reused accumulator for the (fallback) payload read loop.
+    pub(crate) line: Vec<u8>,
     /// Concatenated raw payload lines.
-    payload: Vec<u8>,
+    pub(crate) payload: Vec<u8>,
     /// End offset of each payload line within `payload`.
-    bounds: Vec<usize>,
-    /// Response bytes for the whole group — flushed in one socket write.
-    resp: Vec<u8>,
+    pub(crate) bounds: Vec<usize>,
+    /// Response bytes for the whole group — released in one piece.
+    pub(crate) resp: Vec<u8>,
 }
 
 impl BatchScratch {
@@ -401,7 +324,7 @@ impl BatchScratch {
     /// matters: `shrink_to` cannot drop capacity below `len`, so trimming
     /// a buffer still holding the (already-written) group response would
     /// be a no-op. Contents are dead by the time this runs.
-    fn trim(&mut self) {
+    pub(crate) fn trim(&mut self) {
         self.line.clear();
         self.payload.clear();
         self.resp.clear();
@@ -420,118 +343,17 @@ impl BatchScratch {
 /// Count + answer a request line that failed UTF-8 validation — the one
 /// copy of this accounting, charged to the `other` latency histogram so
 /// `requests == Σ verb_n` holds across STATS windows.
-fn reply_invalid_utf8(metrics: &ServerMetrics, out: &mut Vec<u8>) {
+pub(crate) fn reply_invalid_utf8(metrics: &ServerMetrics, out: &mut Vec<u8>) {
     metrics.requests.inc();
     metrics.latency_for("").record(0);
     out.extend_from_slice(b"ERR request is not valid UTF-8\n");
 }
 
-#[allow(clippy::too_many_arguments)]
-fn handle_client(
-    stream: TcpStream,
-    store: &Arc<ShardedStore>,
-    engine: Option<&Arc<AnalyticsService>>,
-    persist: Option<&Persistence>,
-    stop: &AtomicBool,
-    metrics: &ServerMetrics,
-    cfg: &ServerConfig,
-) -> std::io::Result<()> {
-    // BSD-family kernels hand accepted sockets the listener's O_NONBLOCK;
-    // clear it so the read timeout governs blocking (on Linux a no-op).
-    stream.set_nonblocking(false).ok();
-    stream.set_nodelay(true).ok();
-    stream.set_read_timeout(Some(cfg.read_timeout))?;
-    stream.set_write_timeout(Some(cfg.write_timeout))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut out = stream;
-    // Per-connection pools: the line accumulator, the response buffer and
-    // the BATCH scratch are reused across requests (trimmed back to
-    // RETAIN_BYTES after an outlier) — the steady-state request cycle
-    // performs no heap allocation.
-    let mut line: Vec<u8> = Vec::with_capacity(256);
-    let mut resp: Vec<u8> = Vec::with_capacity(256);
-    let mut scratch = BatchScratch::default();
-    loop {
-        match read_request_line(&mut reader, &mut line, stop, Instant::now() + cfg.idle_timeout)? {
-            ReadOutcome::Line => {}
-            ReadOutcome::Eof | ReadOutcome::Stopped => return Ok(()),
-            ReadOutcome::IdleTimeout => {
-                let _ = out.write_all(b"ERR idle timeout, closing connection\n");
-                return Ok(());
-            }
-        }
-        // Validate the accumulated bytes once per complete line; borrow the
-        // request out of the buffer — no per-request copy. `line` is
-        // cleared only after the last use of `req`.
-        let req = match std::str::from_utf8(&line) {
-            Ok(s) => s.trim(),
-            Err(_) => {
-                // Close, don't continue: the garbage could have been a
-                // BATCH header, in which case payload lines are already in
-                // flight and would execute as top-level requests —
-                // permanently desyncing the reply stream (same no-resync
-                // rule as malformed BATCH headers). Inside a BATCH payload
-                // the count frames each line, so `run_batch` can ERR
-                // per-line instead.
-                resp.clear();
-                reply_invalid_utf8(metrics, &mut resp);
-                let _ = out.write_all(&resp);
-                // Half-close + one bounded drain (reject_busy's pattern):
-                // dropping the socket with those pipelined bytes unread
-                // would RST and could discard the ERR reply.
-                let _ = out.shutdown(Shutdown::Write);
-                out.set_read_timeout(Some(Duration::from_millis(10))).ok();
-                let mut sink = [0u8; 256];
-                let _ = out.read(&mut sink);
-                return Ok(());
-            }
-        };
-        let verb = req.split_ascii_whitespace().next().unwrap_or("");
-        if verb == "BATCH" {
-            // The framing header is not counted as a request — run_batch
-            // counts each payload line, so `requests` matches executed ops.
-            let quit = run_batch(
-                req,
-                &mut reader,
-                &mut out,
-                store,
-                engine,
-                persist,
-                stop,
-                metrics,
-                cfg,
-                &mut scratch,
-            )?;
-            line.clear();
-            if quit {
-                return Ok(());
-            }
-            continue;
-        }
-        resp.clear();
-        execute_one_into(req, store, engine, persist, metrics, false, &mut resp);
-        // Response + newline leave in one syscall (the old path paid two
-        // writes per request and allocated the response `String`).
-        out.write_all(&resp)?;
-        let quit = req == "QUIT";
-        // An outlier request (MGET near the line cap) must not pin its
-        // high-water buffers for the connection's remaining lifetime —
-        // clear before trimming (`shrink_to` cannot go below `len`).
-        line.clear();
-        resp.clear();
-        trim_pool(&mut line);
-        trim_pool(&mut resp);
-        if quit {
-            return Ok(());
-        }
-    }
-}
-
 /// Execute one request line with its per-request accounting (request count,
 /// per-verb latency), appending the newline-terminated response to `out` —
-/// shared by the single-request loop and the BATCH payload loop so the
-/// bookkeeping cannot drift between them.
-fn execute_one_into(
+/// shared by the reactor's inline path, the blocking pool and the fallback
+/// front end so the bookkeeping cannot drift between them.
+pub(crate) fn execute_one_into(
     req: &str,
     store: &Arc<ShardedStore>,
     engine: Option<&Arc<AnalyticsService>>,
@@ -551,72 +373,32 @@ fn execute_one_into(
     metrics.latency_for(verb).record_duration(t0.elapsed());
 }
 
-/// `BATCH <n>` framing: read `n` follow-up request lines, execute them all,
-/// answer with `n` response lines in **one** socket write — the whole group
-/// costs one round trip. Returns `Ok(true)` when the connection must close
-/// (client vanished mid-batch, shutdown, or the batch contained `QUIT`).
-#[allow(clippy::too_many_arguments)]
-fn run_batch(
-    header: &str,
-    reader: &mut BufReader<TcpStream>,
-    out: &mut TcpStream,
+/// Execute a fully-accumulated `BATCH` group: `payload` holds the raw
+/// payload lines back to back, `bounds` their end offsets. Every line runs
+/// with its sync deferred, then — with durability on — exactly one group
+/// commit lands the whole batch before the responses are released to the
+/// caller's buffer. Returns `Ok(quit)` (the group contained `QUIT`), or
+/// `Err(())` when the group sync failed: the buffered responses in `resp`
+/// must **not** be delivered (they would ack unlogged writes) and the
+/// connection must close.
+pub(crate) fn exec_batch_group(
+    payload: &[u8],
+    bounds: &[usize],
     store: &Arc<ShardedStore>,
     engine: Option<&Arc<AnalyticsService>>,
     persist: Option<&Persistence>,
-    stop: &AtomicBool,
     metrics: &ServerMetrics,
-    cfg: &ServerConfig,
-    scratch: &mut BatchScratch,
-) -> std::io::Result<bool> {
-    let mut parts = header.split_ascii_whitespace();
-    parts.next(); // "BATCH"
-    let n = parts.next().and_then(|s| s.parse::<usize>().ok());
-    let n = match (n, parts.next()) {
-        (Some(n), None) if (1..=batch::MAX_BATCH).contains(&n) => n,
-        _ => {
-            // A pipelining client may already have written payload lines we
-            // cannot distinguish from top-level requests — close instead of
-            // executing them (same no-resync rule as the payload-size cap).
-            let msg = format!("ERR BATCH expects <n> in 1..={}, closing\n", batch::MAX_BATCH);
-            out.write_all(msg.as_bytes())?;
-            return Ok(true);
-        }
-    };
-    scratch.payload.clear();
-    scratch.bounds.clear();
-    // One idle window for the entire payload — per-line deadlines would let
-    // a drip-feeding client hold this worker for n × idle_timeout.
-    let deadline = Instant::now() + cfg.idle_timeout;
-    for _ in 0..n {
-        scratch.line.clear();
-        match read_request_line(reader, &mut scratch.line, stop, deadline)? {
-            ReadOutcome::Line => {}
-            ReadOutcome::Eof | ReadOutcome::Stopped | ReadOutcome::IdleTimeout => {
-                return Ok(true)
-            }
-        }
-        // Per-line MAX_LINE_BYTES is not enough here: n lines buffer before
-        // execution, so cap the batch payload as a whole too.
-        scratch.payload.extend_from_slice(&scratch.line);
-        scratch.bounds.push(scratch.payload.len());
-        if scratch.payload.len() > batch::MAX_BATCH_BYTES {
-            let msg =
-                format!("ERR BATCH payload exceeds {} bytes, closing\n", batch::MAX_BATCH_BYTES);
-            out.write_all(msg.as_bytes())?;
-            return Ok(true); // remaining lines are unread: cannot resync
-        }
-    }
-    metrics.batch_sizes.record(n as u64);
-    // Time execution only, from here: the read loop above is dominated by
-    // client transmission, which would drown the server-work signal the
-    // per-verb histograms exist to compare.
+    resp: &mut Vec<u8>,
+) -> Result<bool, ()> {
+    metrics.batch_sizes.record(bounds.len() as u64);
+    // Time execution only: payload accumulation is dominated by client
+    // transmission, which would drown the server-work signal the per-verb
+    // histograms exist to compare.
     let t0 = Instant::now();
     let mut quit = false;
-    let resp = &mut scratch.resp;
-    resp.clear();
     let mut start = 0usize;
-    for &end in &scratch.bounds {
-        let raw = &scratch.payload[start..end];
+    for &end in bounds {
+        let raw = &payload[start..end];
         start = end;
         // One UTF-8 validation per payload line, on the raw bytes in place.
         match std::str::from_utf8(raw) {
@@ -629,20 +411,15 @@ fn run_batch(
         }
     }
     // Group commit: every mutation in the batch deferred its sync to this
-    // single call — one fsync per BATCH, issued *before* the one socket
-    // write that acknowledges the group. If the sync fails we must not
-    // deliver the buffered OKs (they would ack unlogged writes): drop the
-    // responses and close the connection.
+    // single call — one fsync per BATCH, issued *before* the group's
+    // responses are released.
     if let Some(p) = persist {
         if let Err(e) = p.sync() {
             eprintln!("membig: WAL group sync failed, closing connection: {e}");
-            return Ok(true);
+            return Err(());
         }
     }
-    // The whole group's responses leave in one gathered write.
-    out.write_all(resp)?;
     metrics.batch_latency.record_duration(t0.elapsed());
-    scratch.trim();
     Ok(quit)
 }
 
@@ -691,7 +468,8 @@ pub fn dispatch_ctx(line: &str, ctx: &RequestCtx<'_>, in_batch: bool) -> String 
 /// borrowed line and format integers straight into the buffer — no
 /// response `String`, no `format!` temporaries. `in_batch` marks a BATCH
 /// payload line: its mutations defer their WAL sync to the one group
-/// commit `run_batch` issues before the group's single response write.
+/// commit `exec_batch_group` issues before the group's responses are
+/// released.
 pub fn dispatch_into(line: &str, ctx: &RequestCtx<'_>, in_batch: bool, out: &mut Vec<u8>) {
     let RequestCtx { store, engine, metrics, persist } = *ctx;
     let line = line.trim();
@@ -1055,6 +833,8 @@ mod tests {
         assert!(resp.starts_with("OK conns_accepted=1"), "{resp}");
         assert!(resp.contains("read_retries=0"), "{resp}");
         assert!(resp.contains("read_fallbacks=0"), "{resp}");
+        assert!(resp.contains("epoll_wakeups=0"), "{resp}");
+        assert!(resp.contains("backpressure_closes=0"), "{resp}");
         assert_eq!(dispatch("STATS SERVER", &s, None), "ERR server metrics unavailable");
     }
 
@@ -1100,6 +880,47 @@ mod tests {
         assert!(dispatch(&format!("GET {key}"), &s, None).starts_with("OK"));
         assert!(dispatch("STATS RESET", &s, None).starts_with("ERR"));
         assert!(dispatch_ctx("STATS RESET extra", &ctx, false).starts_with("ERR"));
+    }
+
+    #[test]
+    fn exec_batch_group_runs_lines_and_reports_quit() {
+        let (s, spec) = store(20);
+        let m = ServerMetrics::new();
+        let key = spec.record_at(2).isbn13;
+        // Payload of three lines, the last one QUIT; bounds mark line ends.
+        let mut payload = Vec::new();
+        let mut bounds = Vec::new();
+        for line in [format!("GET {key}"), format!("UPDATE {key} 77 7"), "QUIT".to_string()] {
+            payload.extend_from_slice(line.as_bytes());
+            bounds.push(payload.len());
+        }
+        let mut resp = Vec::new();
+        let quit =
+            exec_batch_group(&payload, &bounds, &s, None, None, &m, &mut resp).unwrap();
+        assert!(quit);
+        let text = String::from_utf8(resp).unwrap();
+        let rec = spec.record_at(2);
+        assert_eq!(
+            text,
+            format!("OK {} {}\nOK\nBYE\n", rec.price_cents, rec.quantity)
+        );
+        assert_eq!(s.get(key).unwrap().price_cents, 77);
+        assert_eq!(m.requests.get(), 3, "each payload line is one request");
+        assert_eq!(m.batch_sizes.count(), 1);
+        assert_eq!(m.batch_latency.count(), 1);
+        // An invalid-UTF-8 payload line ERRs individually; the group lives.
+        let mut payload = Vec::new();
+        let mut bounds = Vec::new();
+        payload.extend_from_slice(b"PING");
+        bounds.push(payload.len());
+        payload.extend_from_slice(b"GET \xc3\x28");
+        bounds.push(payload.len());
+        let mut resp = Vec::new();
+        let quit =
+            exec_batch_group(&payload, &bounds, &s, None, None, &m, &mut resp).unwrap();
+        assert!(!quit);
+        let text = String::from_utf8(resp).unwrap();
+        assert!(text.starts_with("PONG\nERR"), "{text}");
     }
 
     #[test]

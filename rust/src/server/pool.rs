@@ -1,17 +1,28 @@
-//! Bounded worker pool for the TCP front end: N long-lived workers pull
-//! work items from a bounded [`pipeline::channel`](crate::pipeline::channel)
-//! queue fed by the acceptor. Replaces thread-per-connection: thread count
-//! is fixed at construction, finished connections free their worker for the
-//! next queued one, and shutdown is a channel close + join (no JoinHandle
-//! vector growing for the lifetime of the server).
+//! Bounded worker pool: N long-lived workers pull work items from a
+//! bounded [`pipeline::channel`](crate::pipeline::channel) queue. Thread
+//! count is fixed at construction and shutdown is a channel close + join
+//! (no JoinHandle vector growing for the lifetime of the server).
 //!
-//! Generic over the work item so the pool is unit-testable without sockets;
-//! the server instantiates it with `WorkerPool<TcpStream>`.
+//! Generic over the work item. On Linux the reactor front end instantiates
+//! it with `WorkerPool<BlockingJob>` — the executor for blocking verbs
+//! (`ANALYTICS`, durable group-commit fsync) so reactor threads never
+//! block on disk or the analytics engine; on other hosts the fallback
+//! front end still runs whole connections through `WorkerPool<TcpStream>`.
 
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::pipeline::channel::{bounded, Sender};
+use crate::pipeline::channel::{bounded, Sender, TrySendError};
+
+/// Why a [`WorkerPool::try_submit`] could not enqueue.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TrySubmitError<T> {
+    /// Queue at capacity — caller applies its own backpressure (the
+    /// reactor answers `ERR server busy` instead of blocking its loop).
+    Full(T),
+    /// Pool already shut down.
+    Closed(T),
+}
 
 pub struct WorkerPool<T: Send + 'static> {
     tx: Option<Sender<T>>,
@@ -66,6 +77,20 @@ impl<T: Send + 'static> WorkerPool<T> {
         }
     }
 
+    /// Non-blocking [`WorkerPool::submit`]: a full queue hands the item
+    /// back immediately instead of parking the caller. Event-loop callers
+    /// (the reactors) must use this — a reactor blocked on the pool queue
+    /// freezes every connection it owns.
+    pub fn try_submit(&self, item: T) -> Result<(), TrySubmitError<T>> {
+        match &self.tx {
+            Some(tx) => tx.try_send(item).map_err(|e| match e {
+                TrySendError::Full(v) => TrySubmitError::Full(v),
+                TrySendError::Closed(v) => TrySubmitError::Closed(v),
+            }),
+            None => Err(TrySubmitError::Closed(item)),
+        }
+    }
+
     /// Close the queue and join every worker. Queued items are still
     /// processed before workers observe the close ([`crate::pipeline::channel`]
     /// drains before reporting `Closed`).
@@ -113,6 +138,27 @@ mod tests {
         pool.shutdown();
         assert_eq!(pool.submit(9), Err(9));
         assert_eq!(pool.worker_count(), 0);
+    }
+
+    #[test]
+    fn try_submit_full_reports_instead_of_blocking() {
+        // One worker parked inside the handler (on `gate`), queue depth 1.
+        let gate = Arc::new(Mutex::new(()));
+        let held = gate.lock().unwrap();
+        let mut pool = {
+            let gate = gate.clone();
+            WorkerPool::new(1, 1, move |_: u64| {
+                let _g = gate.lock().unwrap();
+            })
+        };
+        pool.submit(1).unwrap(); // worker dequeues this and parks on gate
+        pool.submit(2).unwrap(); // returns only once 1 was dequeued → fills queue
+        // Queue is now provably full and the worker provably stuck: a
+        // blocking submit would deadlock this (single-threaded) test.
+        assert_eq!(pool.try_submit(3), Err(TrySubmitError::Full(3)));
+        drop(held);
+        pool.shutdown();
+        assert_eq!(pool.try_submit(9), Err(TrySubmitError::Closed(9)));
     }
 
     #[test]

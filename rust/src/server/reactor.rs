@@ -1,0 +1,1136 @@
+//! Event-driven serving core: N reactor threads, each owning one epoll
+//! instance, an eventfd-backed injector queue, a slab of nonblocking
+//! per-connection state machines, and a lazy timer wheel for idle
+//! deadlines. Replaces the blocking accept-loop + `WorkerPool<TcpStream>`
+//! front end: concurrent-connection capacity is decoupled from thread
+//! count (thousands of mostly-idle clients on a 4-core box), an idle
+//! connection costs **zero wakeups** between events (its only standing
+//! cost is one timer-wheel entry), and a client that stops reading gets a
+//! bounded write buffer and a disconnect instead of pinning a thread
+//! inside a socket write timeout.
+//!
+//! Topology:
+//! - The acceptor thread blocks in its own epoll (listener + shutdown
+//!   eventfd — no periodic poll tick) and hands accepted sockets
+//!   round-robin to reactors through their injectors.
+//! - Each reactor's epoll watches its injector eventfd plus every owned
+//!   connection. Reads drain until `EWOULDBLOCK`; complete request lines
+//!   execute **inline on the reactor** through the same zero-alloc
+//!   `execute_one_into` / `BatchScratch` machinery as before; responses
+//!   accumulate in a bounded per-connection write buffer flushed
+//!   opportunistically and drained by `EPOLLOUT` when the socket pushes
+//!   back.
+//! - Blocking verbs never run on a reactor: `ANALYTICS` (engine latency)
+//!   and — with durability on — `UPDATE`/`MUPDATE`/`BATCH` groups (group
+//!   commit fsync) hop to the retained `WorkerPool`, now an executor for
+//!   `BlockingJob`s instead of whole connections. The owning connection
+//!   pauses (its read interest is dropped, so pipelined input backs up
+//!   into TCP flow control) until the job's completion is injected back,
+//!   which preserves per-connection response order.
+//!
+//! Backpressure policy: past `OUT_SOFT_LIMIT` of un-flushed response
+//! bytes a connection stops **executing** (input stays buffered in the
+//! kernel); past `ServerConfig::write_buf_cap` it is closed and counted
+//! (`backpressure_closes`). A stalled-but-quiet client is reaped by the
+//! idle deadline instead — either way no thread is ever pinned on a
+//! non-reading peer.
+
+#![cfg(target_os = "linux")]
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::pool::{TrySubmitError, WorkerPool};
+use super::sys::{
+    self, Epoll, EpollEvent, EventFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
+};
+use super::{
+    batch, exec_batch_group, execute_one_into, reject_busy, reply_invalid_utf8, trim_pool,
+    BatchScratch, ServerConfig, MAX_LINE_BYTES,
+};
+use crate::durability::Persistence;
+use crate::memstore::ShardedStore;
+use crate::metrics::ServerMetrics;
+use crate::runtime::AnalyticsService;
+
+/// Injector-eventfd token; connection tokens are slab indices.
+const WAKE_TOKEN: u64 = u64::MAX;
+
+/// Max readiness events drained per `epoll_wait` (level-triggered: anything
+/// beyond this simply reports again on the next wait).
+const MAX_EVENTS: usize = 256;
+
+/// Un-flushed response bytes past which a connection stops executing
+/// further requests (input backs up into TCP flow control). Distinct from
+/// the hard `write_buf_cap`, which closes the connection.
+const OUT_SOFT_LIMIT: usize = 64 << 10;
+
+/// Per-read chunk; also bounds how much one `read` can grow `in_buf`.
+const READ_CHUNK: usize = 16 << 10;
+
+// ---------------------------------------------------------------------------
+// Shared state + cross-thread messages
+// ---------------------------------------------------------------------------
+
+/// Everything the reactors, the acceptor and the blocking pool share.
+pub(crate) struct Shared {
+    pub store: Arc<ShardedStore>,
+    pub engine: Option<Arc<AnalyticsService>>,
+    pub persist: Option<Arc<Persistence>>,
+    pub metrics: Arc<ServerMetrics>,
+    pub stop: Arc<AtomicBool>,
+    pub cfg: ServerConfig,
+}
+
+/// Work the reactor sends to the blocking pool: one request line or one
+/// fully-accumulated BATCH group, tagged with the connection it answers.
+pub(crate) struct BlockingJob {
+    reactor: usize,
+    slot: usize,
+    gen: u64,
+    kind: JobKind,
+}
+
+enum JobKind {
+    /// A single blocking request line (`ANALYTICS`, or a durable
+    /// `UPDATE`/`MUPDATE` whose group commit fsyncs).
+    Line(String),
+    /// A BATCH group: raw payload + per-line end offsets, executed with one
+    /// deferred group sync.
+    Group { payload: Vec<u8>, bounds: Vec<usize> },
+}
+
+enum Msg {
+    /// A freshly-accepted socket for this reactor to own.
+    Accept(TcpStream),
+    /// A blocking job finished; `resp` is appended to the connection's
+    /// write buffer. `quit` closes after flushing; `fail` closes without
+    /// acking (group sync failure — the responses must not be delivered).
+    Done { slot: usize, gen: u64, resp: Vec<u8>, quit: bool, fail: bool },
+}
+
+/// One reactor's inbound message queue + wakeup eventfd.
+pub(crate) struct Injector {
+    queue: Mutex<VecDeque<Msg>>,
+    wake: EventFd,
+}
+
+impl Injector {
+    fn new() -> std::io::Result<Injector> {
+        Ok(Injector { queue: Mutex::new(VecDeque::new()), wake: EventFd::new()? })
+    }
+
+    fn push(&self, msg: Msg) {
+        self.queue.lock().unwrap().push_back(msg);
+        self.wake.signal();
+    }
+
+    fn drain(&self) -> VecDeque<Msg> {
+        std::mem::take(&mut *self.queue.lock().unwrap())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Timer wheel (lazy)
+// ---------------------------------------------------------------------------
+
+/// Hashed timer wheel with **lazy** entries: arming is a push, re-arming is
+/// just updating the connection's `deadline` field — when an entry fires,
+/// the owner compares against the live deadline and re-inserts if it moved.
+/// One entry per connection per idle window, zero per-request wheel work,
+/// and an all-idle reactor computes its next epoll timeout from the first
+/// occupied slot (no periodic tick at all).
+struct TimerWheel {
+    slots: Vec<Vec<(usize, u64)>>,
+    tick: Duration,
+    base: Instant,
+    /// First tick index not yet processed.
+    next_tick: u64,
+    armed: usize,
+}
+
+impl TimerWheel {
+    fn new(tick: Duration, nslots: usize, now: Instant) -> TimerWheel {
+        TimerWheel {
+            slots: (0..nslots).map(|_| Vec::new()).collect(),
+            tick: tick.max(Duration::from_millis(1)),
+            base: now,
+            next_tick: 0,
+            armed: 0,
+        }
+    }
+
+    fn ticks_elapsed(&self, t: Instant) -> u64 {
+        (t.saturating_duration_since(self.base).as_nanos() / self.tick.as_nanos()) as u64
+    }
+
+    /// Arm `(slot, gen)` to fire at the first tick boundary ≥ `deadline`.
+    /// Deadlines beyond the wheel horizon alias into an earlier slot and
+    /// fire early — the lazy re-check re-inserts them, trading a rare
+    /// extra wakeup for never tracking rounds.
+    fn insert(&mut self, deadline: Instant, slot: usize, gen: u64) {
+        let t = (self.ticks_elapsed(deadline) + 1).max(self.next_tick);
+        let idx = (t % self.slots.len() as u64) as usize;
+        self.slots[idx].push((slot, gen));
+        self.armed += 1;
+    }
+
+    /// Time until the earliest armed entry's tick, or `None` when nothing
+    /// is armed (sleep forever — this is what makes idle connections free).
+    fn next_timeout(&self, now: Instant) -> Option<Duration> {
+        if self.armed == 0 {
+            return None;
+        }
+        let n = self.slots.len() as u64;
+        for off in 0..n {
+            let t = self.next_tick + off;
+            if !self.slots[(t % n) as usize].is_empty() {
+                let due = self.base + Duration::from_nanos(self.tick.as_nanos() as u64 * t);
+                return Some(due.saturating_duration_since(now));
+            }
+        }
+        Some(self.tick)
+    }
+
+    /// Drain every entry whose tick has passed into `out`. Entries are
+    /// *candidates* — the caller re-checks the live deadline and may
+    /// re-insert.
+    fn collect_due(&mut self, now: Instant, out: &mut Vec<(usize, u64)>) {
+        let now_tick = self.ticks_elapsed(now);
+        if self.armed == 0 {
+            self.next_tick = now_tick + 1;
+            return;
+        }
+        let n = self.slots.len() as u64;
+        while self.next_tick <= now_tick && self.armed > 0 {
+            let idx = (self.next_tick % n) as usize;
+            if !self.slots[idx].is_empty() {
+                self.armed -= self.slots[idx].len();
+                out.append(&mut self.slots[idx]);
+            }
+            self.next_tick += 1;
+        }
+        if self.armed == 0 {
+            self.next_tick = now_tick + 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-connection state machine
+// ---------------------------------------------------------------------------
+
+struct BatchState {
+    expect: usize,
+    /// Executes on the pool: durability is on (group commit fsync) or the
+    /// payload contains an `ANALYTICS` line.
+    blocking: bool,
+}
+
+struct Conn {
+    stream: TcpStream,
+    fd: std::os::raw::c_int,
+    /// Guards cross-thread completions against slot reuse.
+    gen: u64,
+    /// Raw inbound bytes; `cursor` marks the parsed prefix (compacted
+    /// after each processing pass).
+    in_buf: Vec<u8>,
+    cursor: usize,
+    /// Pending response bytes from `out_pos` on.
+    out: Vec<u8>,
+    out_pos: usize,
+    scratch: BatchScratch,
+    batch: Option<BatchState>,
+    /// A blocking job is in flight; execution (and reads) pause until its
+    /// completion is injected back.
+    blocked: bool,
+    /// Flush whatever is buffered, then close.
+    closing: bool,
+    eof: bool,
+    /// Interest bits currently registered with epoll.
+    interest: u32,
+    /// Idle deadline: moved forward on every *completed* request (partial
+    /// input never extends it, so a drip-feeder cannot hold the slot).
+    deadline: Instant,
+}
+
+impl Conn {
+    fn pending_out(&self) -> usize {
+        self.out.len() - self.out_pos
+    }
+}
+
+/// Write as much pending output as the socket accepts. `false` = peer gone.
+fn flush_out(conn: &mut Conn) -> bool {
+    while conn.out_pos < conn.out.len() {
+        match conn.stream.write(&conn.out[conn.out_pos..]) {
+            Ok(0) => return false,
+            Ok(n) => conn.out_pos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    if conn.out_pos >= conn.out.len() {
+        conn.out.clear();
+        conn.out_pos = 0;
+        trim_pool(&mut conn.out);
+    }
+    true
+}
+
+/// One `ERR server busy` response for a blocking request shed because the
+/// executor queue was full, with the same per-request accounting as any
+/// answered line (charged to the `other` histogram).
+fn reply_busy_line(metrics: &ServerMetrics, out: &mut Vec<u8>) {
+    metrics.requests.inc();
+    metrics.latency_for("").record(0);
+    out.extend_from_slice(b"ERR server busy (blocking executor saturated)\n");
+}
+
+/// Shed a whole BATCH group: the header promised `n` response lines, so
+/// emit exactly `n` busy lines to keep the framing in sync.
+fn reply_busy_group(metrics: &ServerMetrics, n: usize, out: &mut Vec<u8>) {
+    for _ in 0..n {
+        reply_busy_line(metrics, out);
+    }
+}
+
+/// Leading-whitespace-insensitive prefix test on raw bytes (`ANALYTICS`
+/// detection inside a BATCH payload, before UTF-8 validation).
+fn line_starts_with(raw: &[u8], prefix: &[u8]) -> bool {
+    let start = raw.iter().position(|b| !b.is_ascii_whitespace()).unwrap_or(raw.len());
+    raw[start..].starts_with(prefix)
+}
+
+/// Parse + execute every complete request line buffered on `conn`, stopping
+/// at a blocking hop, a close condition, or the output soft limit. Returns
+/// whether any request completed (the caller then moves the idle deadline).
+fn process_conn(
+    shared: &Shared,
+    pool: &WorkerPool<BlockingJob>,
+    reactor: usize,
+    slot: usize,
+    conn: &mut Conn,
+) -> bool {
+    let mut executed = false;
+    loop {
+        if conn.closing || conn.blocked || conn.pending_out() > OUT_SOFT_LIMIT {
+            break;
+        }
+        let buf_len = conn.in_buf.len();
+        let (line_start, line_end, consumed_to) =
+            match conn.in_buf[conn.cursor..].iter().position(|&b| b == b'\n') {
+                Some(i) => (conn.cursor, conn.cursor + i, conn.cursor + i + 1),
+                None => {
+                    if conn.eof && conn.cursor < buf_len {
+                        // EOF with a trailing unterminated line: still a
+                        // request (read_line end-of-stream semantics).
+                        (conn.cursor, buf_len, buf_len)
+                    } else {
+                        if buf_len - conn.cursor > MAX_LINE_BYTES {
+                            let msg = format!(
+                                "ERR request line exceeds {MAX_LINE_BYTES} bytes, closing\n"
+                            );
+                            conn.out.extend_from_slice(msg.as_bytes());
+                            conn.closing = true;
+                        }
+                        break;
+                    }
+                }
+            };
+        conn.cursor = consumed_to;
+
+        // ------------------------------------------------- BATCH payload
+        if conn.batch.is_some() {
+            let is_analytics =
+                line_starts_with(&conn.in_buf[line_start..line_end], b"ANALYTICS");
+            conn.scratch.payload.extend_from_slice(&conn.in_buf[line_start..line_end]);
+            conn.scratch.bounds.push(conn.scratch.payload.len());
+            if conn.scratch.payload.len() > batch::MAX_BATCH_BYTES {
+                conn.out.extend_from_slice(
+                    format!("ERR BATCH payload exceeds {} bytes, closing\n", batch::MAX_BATCH_BYTES)
+                        .as_bytes(),
+                );
+                conn.batch = None;
+                conn.closing = true;
+                break;
+            }
+            let st = conn.batch.as_mut().expect("checked is_some above");
+            if is_analytics {
+                st.blocking = true;
+            }
+            if conn.scratch.bounds.len() < st.expect {
+                continue;
+            }
+            let blocking = st.blocking;
+            conn.batch = None;
+            executed = true;
+            if blocking {
+                let payload = std::mem::take(&mut conn.scratch.payload);
+                let bounds = std::mem::take(&mut conn.scratch.bounds);
+                let n_lines = bounds.len();
+                let job = BlockingJob {
+                    reactor,
+                    slot,
+                    gen: conn.gen,
+                    kind: JobKind::Group { payload, bounds },
+                };
+                match pool.try_submit(job) {
+                    Ok(()) => {
+                        conn.blocked = true;
+                        break;
+                    }
+                    Err(TrySubmitError::Full(_)) => {
+                        // Executor saturated (orphaned jobs from vanished
+                        // connections can pile up): shed the group without
+                        // desyncing the BATCH framing — one busy line per
+                        // payload line the header promised. Never block a
+                        // reactor on the pool queue.
+                        reply_busy_group(&shared.metrics, n_lines, &mut conn.out);
+                        continue;
+                    }
+                    Err(TrySubmitError::Closed(_)) => {
+                        // Pool already shut down (stop raced this request).
+                        conn.closing = true;
+                        break;
+                    }
+                }
+            }
+            conn.scratch.resp.clear();
+            let outcome = exec_batch_group(
+                &conn.scratch.payload,
+                &conn.scratch.bounds,
+                &shared.store,
+                shared.engine.as_ref(),
+                shared.persist.as_deref(),
+                &shared.metrics,
+                &mut conn.scratch.resp,
+            );
+            match outcome {
+                Ok(quit) => {
+                    conn.out.extend_from_slice(&conn.scratch.resp);
+                    if quit {
+                        conn.closing = true;
+                    }
+                }
+                // Group sync failed: never deliver the buffered OKs.
+                Err(()) => conn.closing = true,
+            }
+            conn.scratch.trim();
+            if conn.closing {
+                break;
+            }
+            continue;
+        }
+
+        // ------------------------------------------------ top-level line
+        let req = match std::str::from_utf8(&conn.in_buf[line_start..line_end]) {
+            Ok(s) => s.trim(),
+            Err(_) => {
+                // Close, don't continue: the garbage could have been a
+                // BATCH header whose payload lines are already in flight —
+                // executing them as top-level requests would permanently
+                // desync the reply stream.
+                reply_invalid_utf8(&shared.metrics, &mut conn.out);
+                conn.closing = true;
+                break;
+            }
+        };
+        let verb = req.split_ascii_whitespace().next().unwrap_or("");
+        if verb == "BATCH" {
+            let mut parts = req.split_ascii_whitespace();
+            parts.next();
+            let n = parts.next().and_then(|s| s.parse::<usize>().ok());
+            match (n, parts.next()) {
+                (Some(n), None) if (1..=batch::MAX_BATCH).contains(&n) => {
+                    conn.scratch.payload.clear();
+                    conn.scratch.bounds.clear();
+                    // With durability on, the whole group defers its WAL
+                    // sync to one group commit — a blocking fsync, so the
+                    // group executes on the pool.
+                    conn.batch =
+                        Some(BatchState { expect: n, blocking: shared.persist.is_some() });
+                }
+                _ => {
+                    conn.out.extend_from_slice(
+                        format!("ERR BATCH expects <n> in 1..={}, closing\n", batch::MAX_BATCH)
+                            .as_bytes(),
+                    );
+                    conn.closing = true;
+                    break;
+                }
+            }
+            continue;
+        }
+        let blocking_verb = verb == "ANALYTICS"
+            || (shared.persist.is_some() && (verb == "UPDATE" || verb == "MUPDATE"));
+        if blocking_verb {
+            executed = true;
+            let job =
+                BlockingJob { reactor, slot, gen: conn.gen, kind: JobKind::Line(req.to_string()) };
+            match pool.try_submit(job) {
+                Ok(()) => {
+                    conn.blocked = true;
+                    break;
+                }
+                Err(TrySubmitError::Full(_)) => {
+                    reply_busy_line(&shared.metrics, &mut conn.out);
+                    continue;
+                }
+                Err(TrySubmitError::Closed(_)) => {
+                    conn.closing = true;
+                    break;
+                }
+            }
+        }
+        execute_one_into(
+            req,
+            &shared.store,
+            shared.engine.as_ref(),
+            shared.persist.as_deref(),
+            &shared.metrics,
+            false,
+            &mut conn.out,
+        );
+        executed = true;
+        if req == "QUIT" {
+            conn.closing = true;
+            break;
+        }
+    }
+    if conn.eof && conn.cursor >= conn.in_buf.len() && !conn.blocked {
+        conn.closing = true;
+    }
+    if conn.cursor > 0 {
+        conn.in_buf.drain(..conn.cursor);
+        conn.cursor = 0;
+        trim_pool(&mut conn.in_buf);
+    }
+    executed
+}
+
+// ---------------------------------------------------------------------------
+// Reactor
+// ---------------------------------------------------------------------------
+
+struct Reactor {
+    id: usize,
+    epoll: Epoll,
+    injector: Arc<Injector>,
+    shared: Arc<Shared>,
+    pool: Arc<WorkerPool<BlockingJob>>,
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    /// Slots freed during the current event batch. Withheld from `free`
+    /// until the batch is fully processed: a stale readiness event already
+    /// harvested for a closed connection must find the slot empty, not a
+    /// fresh connection that reused it (tokens carry only the slot index).
+    pending_free: Vec<usize>,
+    wheel: TimerWheel,
+    due_scratch: Vec<(usize, u64)>,
+    gen_counter: u64,
+}
+
+enum Verdict {
+    Keep(u32),
+    Close,
+    CloseBackpressure,
+}
+
+impl Reactor {
+    fn new(
+        id: usize,
+        injector: Arc<Injector>,
+        shared: Arc<Shared>,
+        pool: Arc<WorkerPool<BlockingJob>>,
+    ) -> std::io::Result<Reactor> {
+        let epoll = Epoll::new()?;
+        epoll.add(injector.wake.raw(), EPOLLIN, WAKE_TOKEN)?;
+        // Tick ≤ idle/8 keeps eviction within ~12% of the configured
+        // timeout; the 1 s cap bounds wheel-slot aliasing for huge idles.
+        let tick = (shared.cfg.idle_timeout / 8)
+            .clamp(Duration::from_millis(10), Duration::from_secs(1));
+        let wheel = TimerWheel::new(tick, 64, Instant::now());
+        Ok(Reactor {
+            id,
+            epoll,
+            injector,
+            shared,
+            pool,
+            conns: Vec::new(),
+            free: Vec::new(),
+            pending_free: Vec::new(),
+            wheel,
+            due_scratch: Vec::new(),
+            gen_counter: 0,
+        })
+    }
+
+    fn run(mut self) {
+        let mut events = vec![EpollEvent::zeroed(); MAX_EVENTS];
+        loop {
+            let timeout = self.wheel.next_timeout(Instant::now());
+            let n = match self.epoll.wait(&mut events, timeout) {
+                Ok(n) => n,
+                Err(_) => break,
+            };
+            self.shared.metrics.epoll_wakeups.inc();
+            self.shared.metrics.ready_events.add(n as u64);
+            if self.shared.stop.load(Ordering::Acquire) {
+                break;
+            }
+            for ev in &events[..n] {
+                let token = ev.token();
+                if token == WAKE_TOKEN {
+                    self.injector.wake.drain();
+                    self.drain_injector();
+                } else {
+                    self.on_event(token as usize, ev.readiness());
+                }
+            }
+            self.expire_timers(Instant::now());
+            // Slots closed this round become reusable only now, once no
+            // stale event from the harvested batch can still target them.
+            self.free.append(&mut self.pending_free);
+        }
+        self.cleanup();
+    }
+
+    fn drain_injector(&mut self) {
+        for msg in self.injector.drain() {
+            match msg {
+                Msg::Accept(stream) => self.register_conn(stream),
+                Msg::Done { slot, gen, resp, quit, fail } => {
+                    self.on_done(slot, gen, resp, quit, fail)
+                }
+            }
+        }
+    }
+
+    fn register_conn(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            self.shared.metrics.conns_active.dec();
+            return;
+        }
+        stream.set_nodelay(true).ok();
+        let fd = stream.as_raw_fd();
+        let slot = self.free.pop().unwrap_or_else(|| {
+            self.conns.push(None);
+            self.conns.len() - 1
+        });
+        self.gen_counter += 1;
+        let now = Instant::now();
+        let deadline = now + self.shared.cfg.idle_timeout;
+        let interest = EPOLLIN | EPOLLRDHUP;
+        if self.epoll.add(fd, interest, slot as u64).is_err() {
+            self.free.push(slot);
+            self.shared.metrics.conns_active.dec();
+            return;
+        }
+        self.wheel.insert(deadline, slot, self.gen_counter);
+        self.conns[slot] = Some(Conn {
+            stream,
+            fd,
+            gen: self.gen_counter,
+            in_buf: Vec::with_capacity(256),
+            cursor: 0,
+            out: Vec::with_capacity(256),
+            out_pos: 0,
+            scratch: BatchScratch::default(),
+            batch: None,
+            blocked: false,
+            closing: false,
+            eof: false,
+            interest,
+            deadline,
+        });
+    }
+
+    fn on_event(&mut self, slot: usize, readiness: u32) {
+        if !matches!(self.conns.get(slot), Some(Some(_))) {
+            return; // stale event for a slot closed earlier in this batch
+        }
+        if readiness & (EPOLLHUP | EPOLLERR) != 0 {
+            self.close_conn(slot);
+            return;
+        }
+        if readiness & (EPOLLIN | EPOLLRDHUP) != 0 {
+            if !self.read_socket(slot) {
+                self.close_conn(slot);
+                return;
+            }
+        }
+        self.advance(slot);
+    }
+
+    /// Drain the socket until `EWOULDBLOCK` (or EOF). `false` = hard error.
+    fn read_socket(&mut self, slot: usize) -> bool {
+        let conn = self.conns[slot].as_mut().expect("checked by on_event");
+        let mut chunk = [0u8; READ_CHUNK];
+        loop {
+            // Bound what one pass can buffer: a connection paused for
+            // backpressure or a blocking hop stops reading entirely, and
+            // the per-line / per-batch caps police the rest in process.
+            if conn.in_buf.len() > MAX_LINE_BYTES + batch::MAX_BATCH_BYTES {
+                return true;
+            }
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    conn.eof = true;
+                    return true;
+                }
+                Ok(n) => conn.in_buf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+    }
+
+    /// Post-IO driver: alternate flushing and executing until neither makes
+    /// progress (socket full, input exhausted, blocking hop, or close),
+    /// then re-arm interest or close. The flush→process loop matters: a
+    /// connection that paused at the output soft limit must resume the
+    /// moment its buffer drains into the kernel — the socket was already
+    /// read dry, so no further readiness event would come to resume it.
+    fn advance(&mut self, slot: usize) {
+        let mut dead = false;
+        loop {
+            let conn = self.conns[slot].as_mut().expect("advance on live conn");
+            let pend_before = conn.pending_out();
+            if !flush_out(conn) {
+                dead = true;
+                break;
+            }
+            let flushed = conn.pending_out() < pend_before;
+            let executed = process_conn(&self.shared, &self.pool, self.id, slot, conn);
+            if executed {
+                conn.deadline = Instant::now() + self.shared.cfg.idle_timeout;
+            }
+            if conn.closing || conn.blocked || !(executed || flushed) {
+                break;
+            }
+        }
+        self.update_interest_or_close(slot, dead);
+    }
+
+    /// Decide the connection's fate from its post-`advance` state. No
+    /// flushing happens here: draining the buffer *after* the execute loop
+    /// ended could strand already-buffered requests below the soft limit
+    /// with no event left to resume them — instead `EPOLLOUT` stays armed
+    /// and the next readiness round runs `advance` again.
+    fn update_interest_or_close(&mut self, slot: usize, dead: bool) {
+        let verdict = {
+            let cap = self.shared.cfg.write_buf_cap;
+            let conn = self.conns[slot].as_mut().expect("live conn");
+            if dead {
+                Verdict::Close
+            } else {
+                let pending = conn.pending_out();
+                if pending > cap {
+                    Verdict::CloseBackpressure
+                } else if conn.closing && pending == 0 {
+                    Verdict::Close
+                } else {
+                    let paused = conn.blocked
+                        || conn.closing
+                        || conn.eof
+                        || pending > OUT_SOFT_LIMIT;
+                    // After EOF, RDHUP stays level-asserted forever — keep
+                    // it armed and a connection parked on a blocking job
+                    // would spin the reactor. Reads are over; only write
+                    // drain (and implicit ERR/HUP) still matter.
+                    let mut want = if conn.eof { 0 } else { EPOLLRDHUP };
+                    if !paused {
+                        want |= EPOLLIN;
+                    }
+                    if pending > 0 {
+                        want |= EPOLLOUT;
+                    }
+                    Verdict::Keep(want)
+                }
+            }
+        };
+        match verdict {
+            Verdict::Keep(want) => {
+                let fd = {
+                    let conn = self.conns[slot].as_mut().expect("live conn");
+                    if conn.interest == want {
+                        return;
+                    }
+                    conn.interest = want;
+                    conn.fd
+                };
+                if self.epoll.modify(fd, want, slot as u64).is_err() {
+                    self.close_conn(slot);
+                }
+            }
+            Verdict::Close => self.close_conn(slot),
+            Verdict::CloseBackpressure => {
+                self.shared.metrics.backpressure_closes.inc();
+                self.close_conn(slot);
+            }
+        }
+    }
+
+    fn on_done(&mut self, slot: usize, gen: u64, resp: Vec<u8>, quit: bool, fail: bool) {
+        let live = matches!(self.conns.get(slot), Some(Some(c)) if c.gen == gen);
+        if !live {
+            return; // connection closed while the job ran
+        }
+        if fail {
+            self.close_conn(slot);
+            return;
+        }
+        {
+            let conn = self.conns[slot].as_mut().expect("checked live above");
+            conn.blocked = false;
+            conn.out.extend_from_slice(&resp);
+            if quit {
+                conn.closing = true;
+            }
+            conn.deadline = Instant::now() + self.shared.cfg.idle_timeout;
+        }
+        self.advance(slot);
+    }
+
+    fn expire_timers(&mut self, now: Instant) {
+        let mut due = std::mem::take(&mut self.due_scratch);
+        due.clear();
+        self.wheel.collect_due(now, &mut due);
+        for &(slot, gen) in &due {
+            enum T {
+                Fire,
+                Rearm(Instant),
+                Stale,
+            }
+            let t = match self.conns.get(slot).and_then(|c| c.as_ref()) {
+                Some(c) if c.gen == gen => {
+                    if c.blocked {
+                        // A blocking job is in flight: the connection is
+                        // waiting on *us*, not idle. Check again next
+                        // window; the completion handler re-arms the real
+                        // deadline, so an accepted request's response is
+                        // never thrown away by eviction.
+                        T::Rearm(now + self.shared.cfg.idle_timeout)
+                    } else if c.deadline <= now {
+                        T::Fire
+                    } else {
+                        T::Rearm(c.deadline)
+                    }
+                }
+                _ => T::Stale,
+            };
+            match t {
+                T::Fire => {
+                    self.shared.metrics.timer_expirations.inc();
+                    if let Some(c) = self.conns[slot].as_mut() {
+                        // Only announce the eviction on a clean stream: with
+                        // response bytes still pending, a direct write would
+                        // splice the error into the middle of a partially
+                        // delivered response.
+                        if c.pending_out() == 0 {
+                            let _ = c.stream.write(b"ERR idle timeout, closing connection\n");
+                        }
+                    }
+                    self.close_conn(slot);
+                }
+                T::Rearm(deadline) => self.wheel.insert(deadline, slot, gen),
+                T::Stale => {}
+            }
+        }
+        self.due_scratch = due;
+        self.due_scratch.clear();
+    }
+
+    fn close_conn(&mut self, slot: usize) {
+        if let Some(conn) = self.conns[slot].take() {
+            let _ = self.epoll.delete(conn.fd);
+            self.shared.metrics.conns_active.dec();
+            self.pending_free.push(slot);
+            // `conn.stream` drops here, closing the fd.
+        }
+    }
+
+    fn cleanup(&mut self) {
+        for slot in 0..self.conns.len() {
+            if self.conns[slot].is_some() {
+                self.close_conn(slot);
+            }
+        }
+        // Sockets accepted but never registered still hold admission slots.
+        for msg in self.injector.drain() {
+            if let Msg::Accept(_) = msg {
+                self.shared.metrics.conns_active.dec();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frontend: build reactors + blocking pool, then run the acceptor
+// ---------------------------------------------------------------------------
+
+pub(crate) struct Frontend {
+    injectors: Vec<Arc<Injector>>,
+    reactors: Vec<JoinHandle<()>>,
+    pool: Arc<WorkerPool<BlockingJob>>,
+    shared: Arc<Shared>,
+}
+
+impl Frontend {
+    /// Stand up the injectors, the blocking-verb pool and every reactor
+    /// thread. On any failure the already-spawned reactors are stopped and
+    /// joined before the error propagates.
+    pub(crate) fn build(
+        store: Arc<ShardedStore>,
+        engine: Option<Arc<AnalyticsService>>,
+        persist: Option<Arc<Persistence>>,
+        metrics: Arc<ServerMetrics>,
+        stop: Arc<AtomicBool>,
+        cfg: ServerConfig,
+    ) -> std::io::Result<Frontend> {
+        let shared = Arc::new(Shared { store, engine, persist, metrics, stop, cfg });
+        let n = shared.cfg.reactors.max(1);
+        let mut injectors = Vec::with_capacity(n);
+        for _ in 0..n {
+            injectors.push(Arc::new(Injector::new()?));
+        }
+        // Each blocked connection holds at most one in-flight job, and
+        // admission caps live connections at max_conns; 2× absorbs jobs
+        // whose connection died while they were queued.
+        let pool = {
+            let shared = shared.clone();
+            let injectors = injectors.clone();
+            Arc::new(WorkerPool::new(
+                shared.cfg.workers.max(1),
+                shared.cfg.max_conns.saturating_mul(2).max(1),
+                move |job: BlockingJob| run_blocking_job(&shared, &injectors, job),
+            ))
+        };
+        let mut reactors = Vec::with_capacity(n);
+        for id in 0..n {
+            let r = Reactor::new(id, injectors[id].clone(), shared.clone(), pool.clone());
+            let spawned = r.and_then(|r| {
+                std::thread::Builder::new()
+                    .name(format!("membig-reactor-{id}"))
+                    .spawn(move || r.run())
+            });
+            match spawned {
+                Ok(j) => reactors.push(j),
+                Err(e) => {
+                    shared.stop.store(true, Ordering::Release);
+                    for inj in &injectors {
+                        inj.wake.signal();
+                    }
+                    for j in reactors {
+                        let _ = j.join();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(Frontend { injectors, reactors, pool, shared })
+    }
+}
+
+fn run_blocking_job(shared: &Shared, injectors: &[Arc<Injector>], job: BlockingJob) {
+    let BlockingJob { reactor, slot, gen, kind } = job;
+    let mut resp = Vec::with_capacity(128);
+    let (quit, fail) = match kind {
+        JobKind::Line(line) => {
+            let req = line.trim();
+            execute_one_into(
+                req,
+                &shared.store,
+                shared.engine.as_ref(),
+                shared.persist.as_deref(),
+                &shared.metrics,
+                false,
+                &mut resp,
+            );
+            (req == "QUIT", false)
+        }
+        JobKind::Group { payload, bounds } => {
+            match exec_batch_group(
+                &payload,
+                &bounds,
+                &shared.store,
+                shared.engine.as_ref(),
+                shared.persist.as_deref(),
+                &shared.metrics,
+                &mut resp,
+            ) {
+                Ok(quit) => (quit, false),
+                Err(()) => {
+                    resp.clear();
+                    (false, true)
+                }
+            }
+        }
+    };
+    injectors[reactor].push(Msg::Done { slot, gen, resp, quit, fail });
+}
+
+/// The acceptor: blocks in its own epoll on the listener + the shutdown
+/// eventfd (no poll tick), applies admission control, and deals accepted
+/// sockets round-robin across the reactors. On shutdown it stops the
+/// reactors (injector signals + joins) and then drops the blocking pool,
+/// which drains queued jobs and joins its workers.
+pub(crate) fn accept_loop(listener: TcpListener, wake: Arc<EventFd>, front: Frontend) {
+    let Frontend { injectors, reactors, pool, shared } = front;
+    listener.set_nonblocking(true).ok();
+    let aep = match Epoll::new() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("membig: acceptor epoll unavailable: {e}");
+            shared.stop.store(true, Ordering::Release);
+            for inj in &injectors {
+                inj.wake.signal();
+            }
+            for j in reactors {
+                let _ = j.join();
+            }
+            drop(pool);
+            return;
+        }
+    };
+    let _ = aep.add(listener.as_raw_fd(), EPOLLIN, 0);
+    let _ = aep.add(wake.raw(), EPOLLIN, 1);
+    let mut events = [EpollEvent::zeroed(); 8];
+    let mut rr = 0usize;
+    let base = Duration::from_millis(5);
+    let mut backoff = base;
+    while !shared.stop.load(Ordering::Acquire) {
+        if aep.wait(&mut events, None).is_err() {
+            break;
+        }
+        wake.drain();
+        if shared.stop.load(Ordering::Acquire) {
+            break;
+        }
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    backoff = base;
+                    if shared.metrics.conns_active.get() >= shared.cfg.max_conns as i64 {
+                        shared.metrics.conns_rejected.inc();
+                        reject_busy(stream);
+                        continue;
+                    }
+                    shared.metrics.conns_accepted.inc();
+                    shared.metrics.conns_active.inc();
+                    injectors[rr].push(Msg::Accept(stream));
+                    rr = (rr + 1) % injectors.len();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => {
+                    // Transient accept failure (EMFILE, ECONNABORTED, ...):
+                    // record, back off, re-enter the epoll wait — only
+                    // shutdown ends the loop.
+                    shared.metrics.accept_errors.inc();
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(500));
+                    break;
+                }
+            }
+        }
+    }
+    for inj in &injectors {
+        inj.wake.signal();
+    }
+    for j in reactors {
+        let _ = j.join();
+    }
+    drop(pool);
+}
+
+/// Raise this process's fd soft limit (fd-heavy tests and benches).
+/// Re-exported here so callers outside the crate never touch `sys`.
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    sys::raise_nofile_limit(want)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_wheel_fires_after_deadline_not_before() {
+        let t0 = Instant::now();
+        let mut w = TimerWheel::new(Duration::from_millis(10), 8, t0);
+        w.insert(t0 + Duration::from_millis(35), 3, 7);
+        let mut due = Vec::new();
+        w.collect_due(t0 + Duration::from_millis(20), &mut due);
+        assert!(due.is_empty(), "fired {due:?} before the deadline");
+        assert!(w.next_timeout(t0 + Duration::from_millis(20)).is_some());
+        w.collect_due(t0 + Duration::from_millis(60), &mut due);
+        assert_eq!(due, vec![(3, 7)]);
+        assert_eq!(w.next_timeout(t0 + Duration::from_millis(60)), None, "wheel drained");
+    }
+
+    #[test]
+    fn timer_wheel_idle_is_free_and_lazy_rearm_works() {
+        let t0 = Instant::now();
+        let mut w = TimerWheel::new(Duration::from_millis(10), 8, t0);
+        assert_eq!(w.next_timeout(t0), None, "no timers → sleep forever");
+        // Horizon aliasing: a deadline 20 ticks out on an 8-slot wheel
+        // fires early as a candidate — the caller's lazy re-check then
+        // re-inserts. Simulate one such round trip.
+        let deadline = t0 + Duration::from_millis(200);
+        w.insert(deadline, 1, 1);
+        let mut due = Vec::new();
+        let mut hops = 0;
+        let mut now = t0;
+        while hops < 64 {
+            let Some(sleep) = w.next_timeout(now) else { break };
+            now += sleep + Duration::from_millis(1);
+            due.clear();
+            w.collect_due(now, &mut due);
+            for &(slot, gen) in &due {
+                assert_eq!((slot, gen), (1, 1));
+                if now < deadline {
+                    w.insert(deadline, slot, gen); // lazy re-arm
+                } else {
+                    return; // fired at/after the true deadline: correct
+                }
+            }
+            hops += 1;
+        }
+        panic!("entry never fired (now {now:?} vs deadline {deadline:?})");
+    }
+
+    #[test]
+    fn timer_wheel_long_sleep_does_not_accumulate_tick_debt() {
+        let t0 = Instant::now();
+        let mut w = TimerWheel::new(Duration::from_millis(1), 8, t0);
+        // Simulate waking hours later with nothing armed: collect must
+        // jump `next_tick` forward, not iterate millions of empty ticks.
+        let mut due = Vec::new();
+        let later = t0 + Duration::from_secs(3600);
+        let t = Instant::now();
+        w.collect_due(later, &mut due);
+        assert!(due.is_empty());
+        assert!(t.elapsed() < Duration::from_millis(50), "tick debt was replayed");
+        // And a timer inserted after the jump still fires promptly.
+        w.insert(later + Duration::from_millis(5), 9, 9);
+        w.collect_due(later + Duration::from_millis(20), &mut due);
+        assert_eq!(due, vec![(9, 9)]);
+    }
+
+    #[test]
+    fn line_starts_with_skips_leading_whitespace() {
+        assert!(line_starts_with(b"ANALYTICS", b"ANALYTICS"));
+        assert!(line_starts_with(b"  \tANALYTICS extra", b"ANALYTICS"));
+        assert!(!line_starts_with(b"GET 1", b"ANALYTICS"));
+        assert!(!line_starts_with(b"", b"ANALYTICS"));
+        assert!(!line_starts_with(b"   ", b"ANALYTICS"));
+    }
+}

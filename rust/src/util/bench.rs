@@ -144,15 +144,53 @@ pub fn write_bench_json(
     bench: &str,
     rows: &[BenchJsonRow],
 ) -> std::io::Result<std::path::PathBuf> {
-    let dir = match std::env::var("MEMBIG_BENCH_JSON_DIR") {
+    write_bench_json_to(&bench_json_dir(), bench, rows)
+}
+
+/// Directory the `BENCH_<name>.json` reports live in: `MEMBIG_BENCH_JSON_DIR`
+/// override, else the repository root.
+fn bench_json_dir() -> std::path::PathBuf {
+    match std::env::var("MEMBIG_BENCH_JSON_DIR") {
         Ok(d) => std::path::PathBuf::from(d),
         // CARGO_MANIFEST_DIR is `<repo>/rust`; the schema lives at the root.
         Err(_) => std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
             .parent()
             .expect("crate dir has a parent")
             .to_path_buf(),
-    };
-    write_bench_json_to(&dir, bench, rows)
+    }
+}
+
+/// Load a committed `BENCH_<bench>.json` baseline: `(scale, rows)`. `None`
+/// when the file is missing or malformed. Callers must treat all-`n == 0`
+/// rows as an **unpopulated** baseline (the zeroed schema-only seed a
+/// toolchain-less tree commits) — report against it, never gate.
+pub fn read_bench_json(bench: &str) -> Option<(u64, Vec<BenchJsonRow>)> {
+    read_bench_json_from(&bench_json_dir(), bench)
+}
+
+/// [`read_bench_json`] with an explicit directory (env-free core).
+pub fn read_bench_json_from(
+    dir: &std::path::Path,
+    bench: &str,
+) -> Option<(u64, Vec<BenchJsonRow>)> {
+    let text = std::fs::read_to_string(dir.join(format!("BENCH_{bench}.json"))).ok()?;
+    let j = crate::util::json::parse(&text).ok()?;
+    let scale = j.get("scale")?.as_f64()? as u64;
+    let rows = j
+        .get("results")?
+        .as_arr()?
+        .iter()
+        .map(|r| {
+            Some(BenchJsonRow {
+                name: r.get("name")?.as_str()?.to_string(),
+                ops_per_sec: r.get("ops_per_sec")?.as_f64()?,
+                p50_ns: r.get("p50_ns")?.as_f64()? as u64,
+                p99_ns: r.get("p99_ns")?.as_f64()? as u64,
+                n: r.get("n")?.as_f64()? as u64,
+            })
+        })
+        .collect::<Option<Vec<_>>>()?;
+    Some((scale, rows))
 }
 
 /// [`write_bench_json`] with an explicit directory (the env-free core —
@@ -254,6 +292,11 @@ mod tests {
         let ops = results[0].get("ops_per_sec").unwrap().as_f64().unwrap();
         assert!((ops - 32_000.0).abs() < 1_000.0, "64 ops / 2ms ≈ 32k ops/s, got {ops}");
         assert!(results[0].get("p99_ns").unwrap().as_f64().unwrap() > 0.0);
+        // The baseline reader round-trips what the writer produced.
+        let (scale, back) = read_bench_json_from(&dir, "unit_test").expect("readable baseline");
+        assert!(scale >= 1);
+        assert_eq!(back, rows);
+        assert!(read_bench_json_from(&dir, "no_such_bench").is_none());
         std::fs::remove_file(&path).ok();
     }
 }

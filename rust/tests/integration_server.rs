@@ -373,6 +373,22 @@ fn stats_exposes_server_counters_over_tcp() {
     assert!(resp.starts_with("OK conns_accepted=1"), "{resp}");
     assert!(resp.contains("stats_n="), "{resp}");
     assert!(resp.contains("get_p99_ns="), "{resp}");
+    // Reactor counters render on every platform (0 on the fallback front
+    // end); on Linux serving this very request produced wakeups.
+    assert!(resp.contains("epoll_wakeups="), "{resp}");
+    assert!(resp.contains("ready_events="), "{resp}");
+    assert!(resp.contains("backpressure_closes=0"), "{resp}");
+    assert!(resp.contains("timer_expirations=0"), "{resp}");
+    #[cfg(target_os = "linux")]
+    {
+        let wakeups: u64 = resp
+            .split_ascii_whitespace()
+            .find_map(|kv| kv.strip_prefix("epoll_wakeups="))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(wakeups > 0, "the reactor served this request: {resp}");
+    }
     let _ = c.request("QUIT");
     handle.shutdown();
 }
