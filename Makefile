@@ -9,9 +9,10 @@
 #   make bench       run every custom-harness bench (MEMBIG_BENCH_SCALE=k
 #                    divides workload sizes for quick runs)
 #   make bench-smoke tiny-N run of the analytics + hashtable + server +
-#                    recovery benches — catches bench bit-rot fast and emits
-#                    machine-readable BENCH_<name>.json reports at the repo
-#                    root (wired into CI, uploaded as artifacts)
+#                    recovery + ipc scale-out benches — catches bench
+#                    bit-rot fast and emits machine-readable
+#                    BENCH_<name>.json reports at the repo root (wired
+#                    into CI, uploaded as artifacts)
 #   make clean       drop build + bench outputs
 
 ARTIFACTS_DIR := $(abspath rust/artifacts)
@@ -49,7 +50,7 @@ bench:
 #    server, gated so the largest tier keeps >=90% of 0-idle throughput
 #    (idle connections must cost <10%).
 bench-smoke:
-	cd rust && MEMBIG_BENCH_SCALE=100 cargo bench --bench analytics --bench hashtable --bench server_throughput --bench recovery
+	cd rust && MEMBIG_BENCH_SCALE=100 cargo bench --bench analytics --bench hashtable --bench server_throughput --bench recovery --bench ipc_scaleout
 
 clean:
 	cd rust && cargo clean

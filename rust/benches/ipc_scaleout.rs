@@ -1,0 +1,107 @@
+//! Multi-process scale-out: the shared-nothing `ipc::ServingPool` vs the
+//! in-process `ShardedStore`, over MGET/MUPDATE-shaped workloads.
+//!
+//! The paper's multi-processing claim (§3) is that partitioning the table
+//! across OS processes keeps scaling past the point where shared-memory
+//! synchronization saturates — but every RPC pays two Unix-socket hops, so
+//! there is a crossover batch size below which in-process wins. This bench
+//! measures both sides of that crossover: the direct store (zero IPC) and
+//! real spawned worker processes at 1/2/4/8, each call scatter-gathering a
+//! 64-key batch across the owning workers.
+//!
+//! Informational only — per-machine process-spawn and socket latency vary
+//! too much to gate on; the JSON trajectory (`BENCH_ipc_scaleout.json`) is
+//! the record. Honors `MEMBIG_BENCH_SCALE` like every other bench.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use membig::ipc::ProcessPool;
+use membig::memstore::ShardedStore;
+use membig::util::bench::{bench, bench_scale, write_bench_json, BenchJsonRow};
+use membig::util::fmt::commas;
+use membig::workload::gen::DatasetSpec;
+use membig::workload::record::StockUpdate;
+
+const GROUP: usize = 64;
+const PROCS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    let scale = bench_scale();
+    let records = (200_000 / scale).max(2_000);
+    let iters: usize = if scale > 1 { 10 } else { 40 };
+
+    let spec = DatasetSpec { records, ..Default::default() };
+    let all: Vec<_> = spec.iter().collect();
+    let stride = records / GROUP as u64;
+    let keys: Vec<u64> = (0..GROUP as u64).map(|i| spec.record_at(i * stride).isbn13).collect();
+    let ups: Vec<StockUpdate> = keys
+        .iter()
+        .enumerate()
+        .map(|(i, &k)| StockUpdate {
+            isbn13: k,
+            new_price_cents: 500 + i as u64,
+            new_quantity: i as u32,
+        })
+        .collect();
+
+    println!(
+        "=== ipc scale-out: {} records, {GROUP}-key batches, {iters} iters ===\n",
+        commas(records)
+    );
+
+    let mut rows: Vec<BenchJsonRow> = Vec::new();
+
+    // Baseline: the in-process sharded store (what `serve --processes 0` uses).
+    let store = Arc::new(ShardedStore::new(8, (records as usize / 8).next_power_of_two()));
+    for r in &all {
+        store.insert(*r);
+    }
+    let s = bench("store-mget64 (in-process)", 3, iters, || {
+        let got = store.get_many(&keys);
+        assert_eq!(got.iter().filter(|r| r.is_some()).count(), GROUP);
+    });
+    println!("{}", s.render(Some(GROUP as u64)));
+    rows.push(s.json_row(GROUP as u64));
+    let s = bench("store-mupdate64 (in-process)", 3, iters, || {
+        let (applied, _) = store.apply_many(&ups);
+        assert_eq!(applied, GROUP as u64);
+    });
+    println!("{}", s.render(Some(GROUP as u64)));
+    rows.push(s.json_row(GROUP as u64));
+    drop(store);
+
+    // Real worker processes: spawn, scatter-load, drive the serving API.
+    let exe = PathBuf::from(env!("CARGO_BIN_EXE_membig"));
+    for n in PROCS {
+        let mut pool = match ProcessPool::spawn_with_exe(n, exe.clone()) {
+            Ok(p) => p,
+            Err(e) => {
+                // Sandboxed runners can forbid process spawn — report, not fail.
+                println!("procs{n}: spawn unavailable ({e}); skipping");
+                continue;
+            }
+        };
+        pool.load(&all).expect("scatter-load");
+        let serving = pool.into_serving();
+
+        let s = bench(&format!("procs{n}-mget64"), 3, iters, || {
+            let got = serving.get_many(&keys).expect("mget rpc");
+            assert_eq!(got.iter().filter(|r| r.is_some()).count(), GROUP);
+        });
+        println!("{}", s.render(Some(GROUP as u64)));
+        rows.push(s.json_row(GROUP as u64));
+
+        let s = bench(&format!("procs{n}-mupdate64"), 3, iters, || {
+            let (applied, _) = serving.update_many(&ups).expect("mupdate rpc");
+            assert_eq!(applied, GROUP as u64);
+        });
+        println!("{}", s.render(Some(GROUP as u64)));
+        rows.push(s.json_row(GROUP as u64));
+
+        serving.shutdown().expect("pool shutdown");
+    }
+
+    let path = write_bench_json("ipc_scaleout", &rows).expect("write BENCH_ipc_scaleout.json");
+    println!("\njson: {}", path.display());
+}

@@ -202,6 +202,11 @@ pub struct EngineConfig {
     pub server_max_conns: usize,
     /// Reactor (event-loop) threads for `membig serve`. 0 = one per core.
     pub server_reactors: usize,
+    /// Shard-owning worker *processes* for `membig serve`. 0 (default) =
+    /// in-process store, semantics unchanged; N > 0 spawns N workers over
+    /// Unix-socket RPC and routes every data verb to the owning worker.
+    /// Mutually exclusive with durability.
+    pub server_processes: usize,
     /// Per-connection write-buffer cap in KiB; a client that stops reading
     /// past this is disconnected instead of pinning server resources.
     /// 0 = the built-in default (8 MiB); explicit values must be ≥ 256 so
@@ -240,6 +245,7 @@ impl Default for EngineConfig {
             server_workers: 0,
             server_max_conns: 1024,
             server_reactors: 0,
+            server_processes: 0,
             server_write_buf_kb: 0,
             durable_dir: None,
             fsync: true,
@@ -289,6 +295,7 @@ impl EngineConfig {
         set!(self.server_workers, "server", "workers", usize);
         set!(self.server_max_conns, "server", "max_conns", usize);
         set!(self.server_reactors, "server", "reactors", usize);
+        set!(self.server_processes, "server", "processes", usize);
         set!(self.server_write_buf_kb, "server", "write_buf_kb", usize);
         if let Some(v) = get("durability", "dir") {
             self.durable_dir = if v.is_empty() { None } else { Some(PathBuf::from(v)) };
@@ -333,6 +340,20 @@ impl EngineConfig {
             // default (8 MiB). BATCH-heavy workloads should keep the cap
             // comfortably above their largest expected group response.
             return Err("server.write_buf_kb must be 0 (default) or >= 256".into());
+        }
+        if self.server_processes > 512 {
+            // Each worker is one OS process + one Unix socket; past a few
+            // hundred the leader's scatter fan-out dominates any win.
+            return Err("server.processes must be <= 512".into());
+        }
+        if self.server_processes > 0 && self.durable_dir.is_some() {
+            // The WAL logs against the in-process store; with the data in
+            // worker processes it would ack writes the workers never saw.
+            return Err(
+                "server.processes and durability.dir are mutually exclusive \
+                 (the WAL cannot log against out-of-process shards)"
+                    .into(),
+            );
         }
         if self.durable_dir.is_some()
             && self.snapshot_every_secs == 0
@@ -479,6 +500,7 @@ bind = "0.0.0.0:7000"
 workers = 3
 max_conns = 9
 reactors = 2
+processes = 4
 write_buf_kb = 256
 
 [durability]
@@ -500,6 +522,7 @@ snapshot_wal_mb = 32
         assert_eq!(cfg.server_workers, 3);
         assert_eq!(cfg.server_max_conns, 9);
         assert_eq!(cfg.server_reactors, 2);
+        assert_eq!(cfg.server_processes, 4);
         assert_eq!(cfg.server_write_buf_kb, 256);
         assert_eq!(cfg.durable_dir, Some(PathBuf::from("/var/lib/membig")));
         assert!(!cfg.fsync);
@@ -526,6 +549,23 @@ snapshot_wal_mb = 32
         assert!(cfg.clone().validated().is_err());
         cfg.snapshot_wal_mb = 1;
         assert!(cfg.validated().is_ok());
+    }
+
+    #[test]
+    fn server_processes_validation() {
+        let mut c = EngineConfig::default();
+        assert_eq!(c.server_processes, 0, "multi-process serving is opt-in");
+        c.server_processes = 4;
+        assert!(c.clone().validated().is_ok());
+        // Durability logs against the in-process store; with worker
+        // processes owning the data the combination is rejected.
+        c.durable_dir = Some(PathBuf::from("/tmp/d"));
+        assert!(c.clone().validated().is_err());
+        c.durable_dir = None;
+        c.server_processes = 513;
+        assert!(c.clone().validated().is_err());
+        c.server_processes = 512;
+        assert!(c.validated().is_ok());
     }
 
     #[test]

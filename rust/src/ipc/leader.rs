@@ -1,22 +1,53 @@
 //! Leader side: spawn N worker processes, shard records/updates across
 //! them by the same hash routing as the in-process store, and drive the
 //! workload over Unix sockets.
+//!
+//! Two faces share the spawn/connect machinery:
+//!
+//! * [`ProcessPool`] — the batch workflow (`load`/`update`/`stats`/`get`),
+//!   single-threaded, one caller;
+//! * [`ServingPool`] — the `serve --processes N` backend built from a pool
+//!   via [`ProcessPool::into_serving`]: every worker connection sits behind
+//!   its own mutex so reactor threads issue RPCs concurrently, and
+//!   scatter-gather verbs write to every touched worker before reading any
+//!   response (per-worker pipelining).
 
 use std::io::{BufReader, BufWriter, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::{Child, Command};
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
-use super::proto::{join_u128, ProtoError, Request, Response};
+use super::proto::{
+    join_u128, ProtoError, Request, Response, MAX_FRAME, RECORD_ENTRY_BYTES, UPDATE_BYTES,
+};
+use crate::metrics::IpcMetrics;
 use crate::storage::index::hash_key;
-use crate::workload::record::{BookRecord, StockUpdate};
+use crate::workload::record::{BookRecord, StockUpdate, RECORD_BYTES};
+
+/// Records per `Load` frame: the largest whole-record count whose frame
+/// (tag byte + payload) stays within [`MAX_FRAME`].
+pub(crate) const LOAD_CHUNK_RECORDS: usize = (MAX_FRAME as usize - 1) / RECORD_BYTES;
+
+/// Updates per `Update` frame (same bound as [`LOAD_CHUNK_RECORDS`]).
+pub(crate) const UPDATE_CHUNK_RECORDS: usize = (MAX_FRAME as usize - 1) / UPDATE_BYTES;
+
+/// Keys per `GetMany` frame — bounded by the *response* size (one
+/// presence-prefixed record entry per key), which is the larger side.
+pub(crate) const GET_MANY_CHUNK_KEYS: usize = (MAX_FRAME as usize - 1) / RECORD_ENTRY_BYTES;
+
+/// How long a spawned worker gets to connect back before the leader gives
+/// up (the child is killed and the spawn fails instead of hanging).
+const SPAWN_ACCEPT_TIMEOUT: Duration = Duration::from_secs(10);
+const SPAWN_POLL: Duration = Duration::from_millis(5);
 
 #[derive(Debug)]
 pub enum IpcError {
     Io(std::io::Error),
     Proto(ProtoError),
     Unexpected(usize, Response),
-    WorkerDied(usize),
+    WorkerDied { worker: usize, status: Option<i32> },
 }
 
 impl std::fmt::Display for IpcError {
@@ -27,7 +58,12 @@ impl std::fmt::Display for IpcError {
             IpcError::Unexpected(w, resp) => {
                 write!(f, "worker {w} sent unexpected response: {resp:?}")
             }
-            IpcError::WorkerDied(w) => write!(f, "worker {w} exited abnormally"),
+            IpcError::WorkerDied { worker, status: Some(c) } => {
+                write!(f, "worker {worker} exited abnormally (status {c})")
+            }
+            IpcError::WorkerDied { worker, status: None } => {
+                write!(f, "worker {worker} died")
+            }
         }
     }
 }
@@ -60,10 +96,51 @@ struct WorkerConn {
     writer: BufWriter<UnixStream>,
 }
 
+impl WorkerConn {
+    fn new(mut child: Option<Child>, stream: UnixStream) -> Result<WorkerConn, IpcError> {
+        match stream.try_clone() {
+            Ok(r) => Ok(WorkerConn {
+                child,
+                reader: BufReader::with_capacity(1 << 20, r),
+                writer: BufWriter::with_capacity(1 << 20, stream),
+            }),
+            Err(e) => {
+                if let Some(c) = child.as_mut() {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                }
+                Err(IpcError::Io(e))
+            }
+        }
+    }
+}
+
+impl Drop for WorkerConn {
+    fn drop(&mut self) {
+        // Kill-on-drop keeps every error path leak-free: a half-built pool
+        // (spawn failure mid-loop) reaps the workers it already connected.
+        if let Some(mut child) = self.child.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// Route a key to its owning worker — the same upper-32-bit split of
+/// [`hash_key`] the in-process `ShardedStore` uses for shard routing.
+#[inline]
+fn route_key(key: u64, n: usize) -> usize {
+    ((hash_key(key) >> 32) % n as u64) as usize
+}
+
 /// A pool of worker processes, one hash-table shard each.
 pub struct ProcessPool {
     workers: Vec<WorkerConn>,
-    socket_dir: PathBuf,
+    /// `Some` only when this pool created the directory (socket rendezvous
+    /// of real spawned processes). In-process pools own no directory and
+    /// must never delete one — the old code stored `env::temp_dir()` here
+    /// and `shutdown()` recursively deleted the system temp dir.
+    socket_dir: Option<PathBuf>,
 }
 
 impl ProcessPool {
@@ -86,25 +163,78 @@ impl ProcessPool {
         let socket_dir = std::env::temp_dir()
             .join(format!("membig_ipc_{}_{:x}", std::process::id(), hash_key(n as u64)));
         std::fs::create_dir_all(&socket_dir)?;
+        match Self::spawn_workers(n, &exe, &socket_dir) {
+            Ok(workers) => Ok(ProcessPool { workers, socket_dir: Some(socket_dir) }),
+            Err(e) => {
+                std::fs::remove_dir_all(&socket_dir).ok();
+                Err(e)
+            }
+        }
+    }
+
+    fn spawn_workers(
+        n: usize,
+        exe: &Path,
+        socket_dir: &Path,
+    ) -> Result<Vec<WorkerConn>, IpcError> {
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
             let sock_path = socket_dir.join(format!("worker_{i}.sock"));
             std::fs::remove_file(&sock_path).ok();
             let listener = UnixListener::bind(&sock_path)?;
-            let child = Command::new(&exe)
+            let mut child = Command::new(exe)
                 .arg("ipc-worker")
                 .arg("--socket")
                 .arg(&sock_path)
                 .env("MEMBIG_IPC_CHILD", "1")
                 .spawn()?;
-            let (stream, _) = listener.accept()?;
-            workers.push(WorkerConn {
-                child: Some(child),
-                reader: BufReader::with_capacity(1 << 20, stream.try_clone()?),
-                writer: BufWriter::with_capacity(1 << 20, stream),
-            });
+            let stream = match Self::accept_worker(&listener, &mut child, i) {
+                Ok(s) => s,
+                Err(e) => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return Err(e);
+                }
+            };
+            workers.push(WorkerConn::new(Some(child), stream)?);
         }
-        Ok(ProcessPool { workers, socket_dir })
+        Ok(workers)
+    }
+
+    /// Accept one worker's connect-back without hanging the leader: the
+    /// listener polls nonblocking, watching `child.try_wait()` so a worker
+    /// that dies before connecting (bad exe, crash on startup) surfaces as
+    /// [`IpcError::WorkerDied`] with its exit status instead of parking the
+    /// process in `accept()` forever.
+    fn accept_worker(
+        listener: &UnixListener,
+        child: &mut Child,
+        worker: usize,
+    ) -> Result<UnixStream, IpcError> {
+        listener.set_nonblocking(true)?;
+        let deadline = Instant::now() + SPAWN_ACCEPT_TIMEOUT;
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    // Accepted sockets inherit nonblocking on some Unixes.
+                    stream.set_nonblocking(false)?;
+                    return Ok(stream);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if let Some(status) = child.try_wait()? {
+                        return Err(IpcError::WorkerDied { worker, status: status.code() });
+                    }
+                    if Instant::now() >= deadline {
+                        return Err(IpcError::Io(std::io::Error::new(
+                            std::io::ErrorKind::TimedOut,
+                            format!("worker {worker} did not connect back within 10s"),
+                        )));
+                    }
+                    std::thread::sleep(SPAWN_POLL);
+                }
+                Err(e) => return Err(IpcError::Io(e)),
+            }
+        }
     }
 
     /// In-process pool for tests: workers are threads serving socketpairs,
@@ -118,13 +248,9 @@ impl ProcessPool {
                 let r = worker_sock.try_clone().expect("clone");
                 let _ = super::worker::serve(r, worker_sock);
             });
-            workers.push(WorkerConn {
-                child: None,
-                reader: BufReader::with_capacity(1 << 20, leader_sock.try_clone()?),
-                writer: BufWriter::with_capacity(1 << 20, leader_sock),
-            });
+            workers.push(WorkerConn::new(None, leader_sock)?);
         }
-        Ok(ProcessPool { workers, socket_dir: std::env::temp_dir() })
+        Ok(ProcessPool { workers, socket_dir: None })
     }
 
     pub fn len(&self) -> usize {
@@ -135,9 +261,15 @@ impl ProcessPool {
         self.workers.is_empty()
     }
 
+    /// OS pids of spawned workers (empty for in-process pools) — lets
+    /// integration tests SIGKILL a worker mid-flight.
+    pub fn worker_pids(&self) -> Vec<u32> {
+        self.workers.iter().filter_map(|w| w.child.as_ref().map(|c| c.id())).collect()
+    }
+
     #[inline]
     pub fn route(&self, key: u64) -> usize {
-        ((hash_key(key) >> 32) % self.workers.len() as u64) as usize
+        route_key(key, self.workers.len())
     }
 
     fn call(&mut self, worker: usize, req: &Request) -> Result<Response, IpcError> {
@@ -147,50 +279,88 @@ impl ProcessPool {
         Ok(Response::read_from(&mut w.reader)?)
     }
 
-    /// Shard and load records; returns total loaded.
+    /// Shard and load records; returns total loaded. Oversized shards are
+    /// split into multiple ≤ [`MAX_FRAME`] frames.
     pub fn load(&mut self, records: &[BookRecord]) -> Result<u64, IpcError> {
+        self.load_chunked(records, LOAD_CHUNK_RECORDS)
+    }
+
+    pub(crate) fn load_chunked(
+        &mut self,
+        records: &[BookRecord],
+        per_frame: usize,
+    ) -> Result<u64, IpcError> {
+        let per_frame = per_frame.max(1);
         let n = self.workers.len();
         let mut parts: Vec<Vec<BookRecord>> = vec![Vec::new(); n];
         for r in records {
             parts[self.route(r.isbn13)].push(*r);
         }
-        // Send all, then collect all (one in-flight request per worker).
+        // Send every frame, then collect every response (per-worker
+        // pipelining: workers chew their shares in parallel).
+        let mut expect = vec![0usize; n];
         for (i, part) in parts.iter().enumerate() {
+            if part.is_empty() {
+                continue;
+            }
             let w = &mut self.workers[i];
-            Request::Load(part.clone()).write_to(&mut w.writer)?;
+            for chunk in part.chunks(per_frame) {
+                Request::Load(chunk.to_vec()).write_to(&mut w.writer)?;
+                expect[i] += 1;
+            }
             w.writer.flush()?;
         }
         let mut total = 0;
-        for i in 0..n {
-            match Response::read_from(&mut self.workers[i].reader)? {
-                Response::Loaded(k) => total += k,
-                other => return Err(IpcError::Unexpected(i, other)),
+        for (i, &frames) in expect.iter().enumerate() {
+            for _ in 0..frames {
+                match Response::read_from(&mut self.workers[i].reader)? {
+                    Response::Loaded(k) => total += k,
+                    other => return Err(IpcError::Unexpected(i, other)),
+                }
             }
         }
         Ok(total)
     }
 
     /// Shard and apply updates in parallel across processes; returns
-    /// (applied, missing).
+    /// (applied, missing). Chunks like [`ProcessPool::load`].
     pub fn update(&mut self, updates: &[StockUpdate]) -> Result<(u64, u64), IpcError> {
+        self.update_chunked(updates, UPDATE_CHUNK_RECORDS)
+    }
+
+    pub(crate) fn update_chunked(
+        &mut self,
+        updates: &[StockUpdate],
+        per_frame: usize,
+    ) -> Result<(u64, u64), IpcError> {
+        let per_frame = per_frame.max(1);
         let n = self.workers.len();
         let mut parts: Vec<Vec<StockUpdate>> = vec![Vec::new(); n];
         for u in updates {
             parts[self.route(u.isbn13)].push(*u);
         }
+        let mut expect = vec![0usize; n];
         for (i, part) in parts.iter().enumerate() {
+            if part.is_empty() {
+                continue;
+            }
             let w = &mut self.workers[i];
-            Request::Update(part.clone()).write_to(&mut w.writer)?;
+            for chunk in part.chunks(per_frame) {
+                Request::Update(chunk.to_vec()).write_to(&mut w.writer)?;
+                expect[i] += 1;
+            }
             w.writer.flush()?;
         }
         let (mut applied, mut missing) = (0, 0);
-        for i in 0..n {
-            match Response::read_from(&mut self.workers[i].reader)? {
-                Response::Applied { applied: a, missing: m } => {
-                    applied += a;
-                    missing += m;
+        for (i, &frames) in expect.iter().enumerate() {
+            for _ in 0..frames {
+                match Response::read_from(&mut self.workers[i].reader)? {
+                    Response::Applied { applied: a, missing: m } => {
+                        applied += a;
+                        missing += m;
+                    }
+                    other => return Err(IpcError::Unexpected(i, other)),
                 }
-                other => return Err(IpcError::Unexpected(i, other)),
             }
         }
         Ok((applied, missing))
@@ -226,6 +396,16 @@ impl ProcessPool {
         }
     }
 
+    /// Convert the loaded pool into the concurrent serving backend.
+    pub fn into_serving(mut self) -> ServingPool {
+        let workers: Vec<Mutex<ServingWorker>> = std::mem::take(&mut self.workers)
+            .into_iter()
+            .map(|conn| Mutex::new(ServingWorker { conn, dead: false }))
+            .collect();
+        let n = workers.len();
+        ServingPool { workers, socket_dir: self.socket_dir.take(), metrics: IpcMetrics::new(n) }
+    }
+
     /// Graceful shutdown: Shutdown RPC, wait for children.
     pub fn shutdown(mut self) -> Result<(), IpcError> {
         for i in 0..self.workers.len() {
@@ -235,22 +415,382 @@ impl ProcessPool {
             if let Some(mut child) = w.child.take() {
                 let status = child.wait()?;
                 if !status.success() {
-                    return Err(IpcError::WorkerDied(i));
+                    return Err(IpcError::WorkerDied { worker: i, status: status.code() });
                 }
             }
         }
-        std::fs::remove_dir_all(&self.socket_dir).ok();
         Ok(())
     }
 }
 
 impl Drop for ProcessPool {
     fn drop(&mut self) {
-        for w in &mut self.workers {
-            if let Some(mut child) = w.child.take() {
-                let _ = child.kill();
-                let _ = child.wait();
+        // Children are reaped by each WorkerConn's Drop; only a socket
+        // directory this pool itself created is removed here.
+        if let Some(d) = self.socket_dir.take() {
+            std::fs::remove_dir_all(&d).ok();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving backend
+// ---------------------------------------------------------------------------
+
+/// One point operation for [`ServingPool::exec_points`] — the BATCH
+/// scatter-gather path groups consecutive GET/UPDATE lines into one RPC
+/// round per touched worker.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PointOp {
+    Get(u64),
+    Update(StockUpdate),
+}
+
+/// Reply for one [`PointOp`], in submission order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PointReply {
+    Rec(Option<BookRecord>),
+    Applied(bool),
+}
+
+struct ServingWorker {
+    conn: WorkerConn,
+    /// Sticky failure flag: once an RPC on this connection errors, the
+    /// stream position is indeterminate, so every later call fails fast
+    /// with `WorkerDied` instead of desyncing request/response frames.
+    dead: bool,
+}
+
+fn lock(m: &Mutex<ServingWorker>) -> MutexGuard<'_, ServingWorker> {
+    // A panic while holding the lock poisons it; the sticky `dead` flag is
+    // the real safety net, so recover the guard rather than propagating.
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn send_frames(i: usize, w: &mut ServingWorker, frames: &[Request]) -> Result<(), IpcError> {
+    if w.dead {
+        return Err(IpcError::WorkerDied { worker: i, status: None });
+    }
+    for f in frames {
+        f.write_to(&mut w.conn.writer)?;
+    }
+    w.conn.writer.flush()?;
+    Ok(())
+}
+
+fn short_reply(w: usize, got: usize, want: usize) -> IpcError {
+    IpcError::Io(std::io::Error::other(format!(
+        "worker {w} answered {got} of {want} expected entries"
+    )))
+}
+
+/// The `serve --processes N` backend: shard-owning worker processes driven
+/// concurrently from the server's reactor/worker threads. Point verbs hit
+/// the owning worker; scatter verbs lock every touched worker in ascending
+/// index order (deadlock-free against concurrent scatters), write all
+/// frames, then gather — so workers execute their shares in parallel.
+pub struct ServingPool {
+    workers: Vec<Mutex<ServingWorker>>,
+    socket_dir: Option<PathBuf>,
+    metrics: IpcMetrics,
+}
+
+impl ServingPool {
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    /// Per-worker RPC counters and latency (surface of `STATS SERVER`).
+    pub fn metrics(&self) -> &IpcMetrics {
+        &self.metrics
+    }
+
+    /// OS pids of spawned workers (empty for in-process pools).
+    pub fn worker_pids(&self) -> Vec<u32> {
+        self.workers
+            .iter()
+            .filter_map(|m| lock(m).conn.child.as_ref().map(|c| c.id()))
+            .collect()
+    }
+
+    #[inline]
+    pub fn route(&self, key: u64) -> usize {
+        route_key(key, self.workers.len())
+    }
+
+    /// One request, one response, against one worker.
+    fn call_one(&self, i: usize, req: &Request) -> Result<Response, IpcError> {
+        let t0 = Instant::now();
+        let mut g = lock(&self.workers[i]);
+        if g.dead {
+            self.metrics.record_error(i);
+            return Err(IpcError::WorkerDied { worker: i, status: None });
+        }
+        let res = (|| -> Result<Response, IpcError> {
+            req.write_to(&mut g.conn.writer)?;
+            g.conn.writer.flush()?;
+            Ok(Response::read_from(&mut g.conn.reader)?)
+        })();
+        match &res {
+            Ok(_) => self.metrics.record_rpc(i, 1, t0.elapsed()),
+            Err(_) => {
+                g.dead = true;
+                self.metrics.record_error(i);
             }
+        }
+        res
+    }
+
+    /// Scatter-gather core: `parts[i]` holds the frames for worker `i`
+    /// (empty = untouched). Locks touched workers in ascending index
+    /// order, writes + flushes everything, then reads `parts[i].len()`
+    /// responses per worker through `on_resp`. Even when one worker fails
+    /// mid-exchange, the others are still drained so their connections
+    /// stay frame-synchronized; the first error is returned.
+    fn scatter<F>(&self, parts: &[Vec<Request>], mut on_resp: F) -> Result<(), IpcError>
+    where
+        F: FnMut(usize, Response) -> Result<(), IpcError>,
+    {
+        debug_assert_eq!(parts.len(), self.workers.len());
+        let t0 = Instant::now();
+        let mut guards = Vec::new();
+        for (i, part) in parts.iter().enumerate() {
+            if !part.is_empty() {
+                guards.push((i, lock(&self.workers[i])));
+            }
+        }
+        let mut first_err: Option<IpcError> = None;
+        let mut sent = vec![true; guards.len()];
+        for (gi, (i, g)) in guards.iter_mut().enumerate() {
+            if let Err(e) = send_frames(*i, g, &parts[*i]) {
+                g.dead = true;
+                self.metrics.record_error(*i);
+                sent[gi] = false;
+                first_err.get_or_insert(e);
+            }
+        }
+        for (gi, (i, g)) in guards.iter_mut().enumerate() {
+            if !sent[gi] {
+                continue;
+            }
+            let mut res = Ok(());
+            for _ in 0..parts[*i].len() {
+                res = match Response::read_from(&mut g.conn.reader) {
+                    Ok(resp) => on_resp(*i, resp),
+                    Err(e) => Err(IpcError::Proto(e)),
+                };
+                if res.is_err() {
+                    break;
+                }
+            }
+            match res {
+                Ok(()) => self.metrics.record_rpc(*i, parts[*i].len() as u64, t0.elapsed()),
+                Err(e) => {
+                    g.dead = true;
+                    self.metrics.record_error(*i);
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Point lookup through the owning worker.
+    pub fn get(&self, key: u64) -> Result<Option<BookRecord>, IpcError> {
+        let w = self.route(key);
+        match self.call_one(w, &Request::Get(key))? {
+            Response::Record(r) => Ok(r),
+            other => Err(IpcError::Unexpected(w, other)),
+        }
+    }
+
+    /// Point update through the owning worker; `true` when the key existed.
+    pub fn update_one(&self, u: &StockUpdate) -> Result<bool, IpcError> {
+        let w = self.route(u.isbn13);
+        match self.call_one(w, &Request::Update(vec![*u]))? {
+            Response::Applied { applied, .. } => Ok(applied == 1),
+            other => Err(IpcError::Unexpected(w, other)),
+        }
+    }
+
+    /// Multi-key read (MGET): results in input key order.
+    pub fn get_many(&self, keys: &[u64]) -> Result<Vec<Option<BookRecord>>, IpcError> {
+        let n = self.workers.len();
+        let mut per_keys: Vec<Vec<u64>> = vec![Vec::new(); n];
+        let mut plan = Vec::with_capacity(keys.len());
+        for &k in keys {
+            let w = self.route(k);
+            plan.push((w, per_keys[w].len()));
+            per_keys[w].push(k);
+        }
+        let mut parts: Vec<Vec<Request>> = vec![Vec::new(); n];
+        for (i, ks) in per_keys.iter().enumerate() {
+            for chunk in ks.chunks(GET_MANY_CHUNK_KEYS) {
+                parts[i].push(Request::GetMany(chunk.to_vec()));
+            }
+        }
+        let mut per: Vec<Vec<Option<BookRecord>>> = vec![Vec::new(); n];
+        self.scatter(&parts, |i, resp| match resp {
+            Response::Records(rs) => {
+                per[i].extend(rs);
+                Ok(())
+            }
+            other => Err(IpcError::Unexpected(i, other)),
+        })?;
+        for (i, ks) in per_keys.iter().enumerate() {
+            if per[i].len() != ks.len() {
+                return Err(short_reply(i, per[i].len(), ks.len()));
+            }
+        }
+        Ok(plan.into_iter().map(|(w, j)| per[w][j]).collect())
+    }
+
+    /// Keyed update batch (MUPDATE): returns `(applied, missing)`.
+    pub fn update_many(&self, ups: &[StockUpdate]) -> Result<(u64, u64), IpcError> {
+        let n = self.workers.len();
+        let mut per: Vec<Vec<StockUpdate>> = vec![Vec::new(); n];
+        for u in ups {
+            per[self.route(u.isbn13)].push(*u);
+        }
+        let mut parts: Vec<Vec<Request>> = vec![Vec::new(); n];
+        for (i, us) in per.iter().enumerate() {
+            for chunk in us.chunks(UPDATE_CHUNK_RECORDS) {
+                parts[i].push(Request::Update(chunk.to_vec()));
+            }
+        }
+        let (mut applied, mut missing) = (0u64, 0u64);
+        self.scatter(&parts, |i, resp| match resp {
+            Response::Applied { applied: a, missing: m } => {
+                applied += a;
+                missing += m;
+                Ok(())
+            }
+            other => Err(IpcError::Unexpected(i, other)),
+        })?;
+        Ok((applied, missing))
+    }
+
+    /// Execute an ordered run of point ops (BATCH lines) with one `Group`
+    /// frame per touched worker. Per-key ordering is preserved: equal keys
+    /// route to the same worker and keep their submission order inside its
+    /// group. Replies come back in submission order.
+    pub fn exec_points(&self, ops: &[PointOp]) -> Result<Vec<PointReply>, IpcError> {
+        let n = self.workers.len();
+        let mut subs: Vec<Vec<Request>> = vec![Vec::new(); n];
+        let mut plan = Vec::with_capacity(ops.len());
+        for op in ops {
+            let (key, req) = match op {
+                PointOp::Get(k) => (*k, Request::Get(*k)),
+                PointOp::Update(u) => (u.isbn13, Request::Update(vec![*u])),
+            };
+            let w = self.route(key);
+            plan.push((w, subs[w].len()));
+            subs[w].push(req);
+        }
+        let mut parts: Vec<Vec<Request>> = vec![Vec::new(); n];
+        for (i, s) in subs.into_iter().enumerate() {
+            if !s.is_empty() {
+                // One group frame per worker: callers are bounded by the
+                // server's MAX_BATCH (10k lines ≈ 300 KiB ≪ MAX_FRAME).
+                parts[i] = vec![Request::Group(s)];
+            }
+        }
+        let mut per: Vec<Vec<Response>> = vec![Vec::new(); n];
+        self.scatter(&parts, |i, resp| match resp {
+            Response::Group(rs) => {
+                per[i] = rs;
+                Ok(())
+            }
+            other => Err(IpcError::Unexpected(i, other)),
+        })?;
+        let mut out = Vec::with_capacity(ops.len());
+        for (w, j) in plan {
+            match per[w].get(j) {
+                Some(Response::Record(r)) => out.push(PointReply::Rec(*r)),
+                Some(Response::Applied { applied, .. }) => {
+                    out.push(PointReply::Applied(*applied == 1))
+                }
+                Some(other) => return Err(IpcError::Unexpected(w, other.clone())),
+                None => return Err(short_reply(w, per[w].len(), j + 1)),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Aggregate stats across all workers.
+    pub fn stats(&self) -> Result<(u64, u128), IpcError> {
+        let parts = vec![vec![Request::Stats]; self.workers.len()];
+        let (mut count, mut value) = (0u64, 0u128);
+        self.scatter(&parts, |i, resp| match resp {
+            Response::Stats { count: c, value_cents_lo, value_cents_hi } => {
+                count += c;
+                value += join_u128(value_cents_lo, value_cents_hi);
+                Ok(())
+            }
+            other => Err(IpcError::Unexpected(i, other)),
+        })?;
+        Ok((count, value))
+    }
+
+    /// Reset every worker's request-window counter (STATS RESET); returns
+    /// the summed handled-count of the windows just closed.
+    pub fn reset_windows(&self) -> Result<u64, IpcError> {
+        let parts = vec![vec![Request::Reset]; self.workers.len()];
+        let mut handled = 0u64;
+        self.scatter(&parts, |i, resp| match resp {
+            Response::ResetDone { handled: h } => {
+                handled += h;
+                Ok(())
+            }
+            other => Err(IpcError::Unexpected(i, other)),
+        })?;
+        Ok(handled)
+    }
+
+    /// Graceful shutdown: Shutdown RPC + wait on every child. Dead workers
+    /// are killed instead of waited on (their Shutdown frame can't be
+    /// delivered). Later RPCs fail fast with `WorkerDied`.
+    pub fn shutdown(&self) -> Result<(), IpcError> {
+        let mut result = Ok(());
+        for (i, m) in self.workers.iter().enumerate() {
+            let mut g = lock(m);
+            if g.dead {
+                if let Some(c) = g.conn.child.as_mut() {
+                    let _ = c.kill();
+                }
+            } else {
+                let _ = send_frames(i, &mut g, &[Request::Shutdown]);
+                let _ = Response::read_from(&mut g.conn.reader);
+            }
+            g.dead = true;
+            if let Some(mut child) = g.conn.child.take() {
+                match child.wait() {
+                    Ok(status) if !status.success() && result.is_ok() => {
+                        result =
+                            Err(IpcError::WorkerDied { worker: i, status: status.code() });
+                    }
+                    Err(e) if result.is_ok() => result = Err(IpcError::Io(e)),
+                    _ => {}
+                }
+            }
+        }
+        result
+    }
+}
+
+impl Drop for ServingPool {
+    fn drop(&mut self) {
+        // Children are reaped by each WorkerConn's Drop; only a socket
+        // directory the originating pool created is removed here.
+        if let Some(d) = self.socket_dir.take() {
+            std::fs::remove_dir_all(&d).ok();
         }
     }
 }
@@ -304,5 +844,118 @@ mod tests {
             .unwrap();
         assert_eq!((applied, missing), (1, 1));
         pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn in_process_shutdown_preserves_temp_dir() {
+        // Regression: shutdown() used to remove_dir_all(env::temp_dir())
+        // for in-process pools. A sentinel planted in a temp subdirectory
+        // must survive the pool's full lifecycle.
+        let dir = std::env::temp_dir().join(format!("membig_sentinel_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let sentinel = dir.join("keep.txt");
+        std::fs::write(&sentinel, b"survives").unwrap();
+
+        let mut pool = ProcessPool::spawn_in_process(2).unwrap();
+        pool.load(&[BookRecord::new(1, 100, 1)]).unwrap();
+        assert!(pool.get(1).unwrap().is_some());
+        pool.shutdown().unwrap();
+
+        assert!(sentinel.exists(), "shutdown() must never delete the system temp dir");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn oversized_batches_chunk_into_multiple_frames() {
+        // Tiny per-frame limits force the chunked path (load: 7/frame,
+        // update: 3/frame) — the same code real pools run when a shard's
+        // share exceeds MAX_FRAME.
+        let mut pool = ProcessPool::spawn_in_process(2).unwrap();
+        let records: Vec<BookRecord> =
+            (1..=100).map(|i| BookRecord::new(i, i * 10, i as u32)).collect();
+        assert_eq!(pool.load_chunked(&records, 7).unwrap(), 100);
+
+        let ups: Vec<StockUpdate> = (1..=120)
+            .map(|i| StockUpdate { isbn13: i, new_price_cents: i + 1, new_quantity: 2 })
+            .collect();
+        let (applied, missing) = pool.update_chunked(&ups, 3).unwrap();
+        assert_eq!((applied, missing), (100, 20));
+
+        let rec = pool.get(42).unwrap().unwrap();
+        assert_eq!((rec.price_cents, rec.quantity), (43, 2));
+        let (count, value) = pool.stats().unwrap();
+        assert_eq!(count, 100);
+        let expect: u128 = (1..=100u128).map(|i| (i + 1) * 2).sum();
+        assert_eq!(value, expect);
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn serving_pool_matches_store() {
+        let spec = DatasetSpec { records: 4_000, ..Default::default() };
+        let records: Vec<BookRecord> = spec.iter().collect();
+        let mut pool = ProcessPool::spawn_in_process(3).unwrap();
+        pool.load(&records).unwrap();
+        let serving = pool.into_serving();
+
+        let store = crate::memstore::ShardedStore::new(4, 4096);
+        for r in &records {
+            store.insert(*r);
+        }
+
+        // Point verbs.
+        let sample = spec.record_at(77);
+        assert_eq!(serving.get(sample.isbn13).unwrap(), store.get(sample.isbn13));
+        assert_eq!(serving.get(42).unwrap(), None);
+        let up = StockUpdate { isbn13: sample.isbn13, new_price_cents: 999, new_quantity: 9 };
+        assert!(serving.update_one(&up).unwrap());
+        store.apply(&up);
+        assert!(!serving
+            .update_one(&StockUpdate { isbn13: 42, new_price_cents: 1, new_quantity: 1 })
+            .unwrap());
+
+        // Scatter verbs, mixed hits and misses.
+        let keys: Vec<u64> =
+            (0..64).map(|i| spec.record_at(i * 31).isbn13).chain([42, 43]).collect();
+        assert_eq!(serving.get_many(&keys).unwrap(), store.get_many(&keys));
+        let ups = generate_stock_updates(&spec, 500, KeyDist::PermuteAll, 9);
+        assert_eq!(serving.update_many(&ups).unwrap(), store.apply_many(&ups));
+
+        // Grouped point runs preserve order and per-key sequencing.
+        let k = spec.record_at(5).isbn13;
+        let ops = vec![
+            PointOp::Get(k),
+            PointOp::Update(StockUpdate { isbn13: k, new_price_cents: 777, new_quantity: 3 }),
+            PointOp::Get(k),
+            PointOp::Get(42),
+            PointOp::Update(StockUpdate { isbn13: 42, new_price_cents: 1, new_quantity: 1 }),
+        ];
+        let replies = serving.exec_points(&ops).unwrap();
+        assert_eq!(replies.len(), 5);
+        assert_eq!(replies[0], PointReply::Rec(store.get(k)));
+        assert_eq!(replies[1], PointReply::Applied(true));
+        match replies[2] {
+            PointReply::Rec(Some(r)) => {
+                assert_eq!((r.price_cents, r.quantity), (777, 3));
+            }
+            other => panic!("expected updated record, got {other:?}"),
+        }
+        assert_eq!(replies[3], PointReply::Rec(None));
+        assert_eq!(replies[4], PointReply::Applied(false));
+        store.update(k, |r| {
+            r.price_cents = 777;
+            r.quantity = 3;
+        });
+
+        // Aggregates agree after the same mutations.
+        assert_eq!(serving.stats().unwrap(), store.value_sum_cents());
+
+        // RPC metrics saw traffic; reset closes the window.
+        assert!(serving.metrics().total_rpcs() > 0);
+        assert!(serving.reset_windows().unwrap() > 0);
+        serving.metrics().reset_epoch_counters();
+        assert_eq!(serving.metrics().total_rpcs(), 0);
+
+        serving.shutdown().unwrap();
     }
 }

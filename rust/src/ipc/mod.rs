@@ -8,11 +8,16 @@
 //! Same topology as the threaded pipeline — `T = {(p1,h1) … (pn,hn)}` with
 //! processes instead of threads — so the `ablations` bench can measure the
 //! IPC tax directly against shared memory.
+//!
+//! Beyond the batch workflow, [`ServingPool`] (built via
+//! [`ProcessPool::into_serving`]) backs `membig serve --processes N`: the
+//! live wire protocol routes point verbs to the owning worker and
+//! scatter-gathers MGET/MUPDATE/BATCH across workers.
 
 pub mod leader;
 pub mod proto;
 pub mod worker;
 
-pub use leader::ProcessPool;
+pub use leader::{IpcError, PointOp, PointReply, ProcessPool, ServingPool};
 pub use proto::{Request, Response};
 pub use worker::worker_main;

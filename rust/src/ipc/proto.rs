@@ -4,12 +4,28 @@
 //! Payloads are flat arrays of fixed-size structs (records are 24B encoded,
 //! updates 20B raw) — no varints, no schema evolution; this is an internal
 //! protocol pinned to the binary.
+//!
+//! Two verb families share the framing:
+//!
+//! * **batch** (`Load`/`Update`/`Stats`/`Get`/`Shutdown`) — the original
+//!   scatter workflow used by `ProcessPool`;
+//! * **serving** (`GetMany`/`Group`/`Reset`) — added for the
+//!   `serve --processes N` backend: multi-key reads, a BATCH group frame
+//!   carrying embedded sub-request frames (one nesting level only), and a
+//!   stats-window reset.
 
 use std::io::{Read, Write};
 
 use crate::workload::record::{BookRecord, StockUpdate, RECORD_BYTES};
 
 pub const MAX_FRAME: u32 = 64 << 20; // 64 MiB safety bound
+
+/// Bytes of one encoded [`StockUpdate`] (isbn + price + qty, no checksum).
+pub const UPDATE_BYTES: usize = 20;
+
+/// Bytes of one entry in a [`Response::Records`] payload: a presence byte
+/// followed by the fixed record encoding (zero-filled when absent).
+pub const RECORD_ENTRY_BYTES: usize = 1 + RECORD_BYTES;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
@@ -23,6 +39,15 @@ pub enum Request {
     Get(u64),
     /// Clean shutdown.
     Shutdown,
+    /// Multi-key lookup; answered by [`Response::Records`] in key order.
+    GetMany(Vec<u64>),
+    /// BATCH group frame: embedded sub-request frames executed in order and
+    /// answered by one [`Response::Group`]. Groups do not nest, and
+    /// `Shutdown` is not a valid sub-request.
+    Group(Vec<Request>),
+    /// Reset the worker's request-window counter; answered by
+    /// [`Response::ResetDone`] carrying the count of the window just closed.
+    Reset,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -32,12 +57,17 @@ pub enum Response {
     Stats { count: u64, value_cents_lo: u64, value_cents_hi: u64 },
     Record(Option<BookRecord>),
     Bye,
+    /// One entry per requested key, in request order.
+    Records(Vec<Option<BookRecord>>),
+    /// One embedded response frame per sub-request, in request order.
+    Group(Vec<Response>),
+    ResetDone { handled: u64 },
 }
 
 #[derive(Debug)]
 pub enum ProtoError {
     Io(std::io::Error),
-    TooLarge(u32),
+    TooLarge(u64),
     BadTag(u8),
     Malformed(u8, String),
 }
@@ -73,13 +103,17 @@ const TAG_UPDATE: u8 = 2;
 const TAG_STATS: u8 = 3;
 const TAG_GET: u8 = 4;
 const TAG_SHUTDOWN: u8 = 5;
+const TAG_GET_MANY: u8 = 6;
+const TAG_GROUP: u8 = 7;
+const TAG_RESET: u8 = 8;
 const TAG_LOADED: u8 = 0x81;
 const TAG_APPLIED: u8 = 0x82;
 const TAG_STATS_R: u8 = 0x83;
 const TAG_RECORD: u8 = 0x84;
 const TAG_BYE: u8 = 0x85;
-
-const UPDATE_BYTES: usize = 20;
+const TAG_RECORDS: u8 = 0x86;
+const TAG_GROUP_R: u8 = 0x87;
+const TAG_RESET_R: u8 = 0x88;
 
 fn encode_update(u: &StockUpdate, out: &mut Vec<u8>) {
     out.extend_from_slice(&u.isbn13.to_le_bytes());
@@ -95,11 +129,22 @@ fn decode_update(b: &[u8]) -> StockUpdate {
     }
 }
 
-fn write_frame<W: Write>(w: &mut W, tag: u8, payload: &[u8]) -> Result<(), ProtoError> {
-    let len = 1 + payload.len() as u32;
-    if len > MAX_FRAME {
+/// Validate a payload size and return the frame length word (`1 + payload`).
+/// The check happens on the *unnarrowed* length: `payload.len() as u32` on a
+/// ≥ 4 GiB payload wraps before any comparison and would emit a corrupt
+/// length prefix, so the cast only happens after the bound holds.
+fn frame_len(payload_len: usize) -> Result<u32, ProtoError> {
+    let len = (payload_len as u64)
+        .checked_add(1)
+        .ok_or(ProtoError::TooLarge(u64::MAX))?;
+    if len > MAX_FRAME as u64 {
         return Err(ProtoError::TooLarge(len));
     }
+    Ok(len as u32)
+}
+
+fn write_frame<W: Write>(w: &mut W, tag: u8, payload: &[u8]) -> Result<(), ProtoError> {
+    let len = frame_len(payload.len())?;
     w.write_all(&len.to_le_bytes())?;
     w.write_all(&[tag])?;
     w.write_all(payload)?;
@@ -111,7 +156,7 @@ fn read_frame<R: Read>(r: &mut R) -> Result<(u8, Vec<u8>), ProtoError> {
     r.read_exact(&mut len4)?;
     let len = u32::from_le_bytes(len4);
     if len == 0 || len > MAX_FRAME {
-        return Err(ProtoError::TooLarge(len));
+        return Err(ProtoError::TooLarge(len as u64));
     }
     let mut tag = [0u8; 1];
     r.read_exact(&mut tag)?;
@@ -140,11 +185,36 @@ impl Request {
             Request::Stats => write_frame(w, TAG_STATS, &[]),
             Request::Get(key) => write_frame(w, TAG_GET, &key.to_le_bytes()),
             Request::Shutdown => write_frame(w, TAG_SHUTDOWN, &[]),
+            Request::GetMany(keys) => {
+                let mut payload = Vec::with_capacity(keys.len() * 8);
+                for k in keys {
+                    payload.extend_from_slice(&k.to_le_bytes());
+                }
+                write_frame(w, TAG_GET_MANY, &payload)
+            }
+            Request::Group(subs) => {
+                let mut payload = Vec::new();
+                for sub in subs {
+                    if matches!(sub, Request::Group(_) | Request::Shutdown) {
+                        return Err(ProtoError::Malformed(
+                            TAG_GROUP,
+                            "GROUP may not embed GROUP or SHUTDOWN".into(),
+                        ));
+                    }
+                    sub.write_to(&mut payload)?;
+                }
+                write_frame(w, TAG_GROUP, &payload)
+            }
+            Request::Reset => write_frame(w, TAG_RESET, &[]),
         }
     }
 
     pub fn read_from<R: Read>(r: &mut R) -> Result<Request, ProtoError> {
         let (tag, payload) = read_frame(r)?;
+        Request::decode_frame(tag, payload, true)
+    }
+
+    fn decode_frame(tag: u8, payload: Vec<u8>, allow_group: bool) -> Result<Self, ProtoError> {
         match tag {
             TAG_LOAD => {
                 if payload.len() % RECORD_BYTES != 0 {
@@ -175,6 +245,31 @@ impl Request {
                 Ok(Request::Get(u64::from_le_bytes(payload[..8].try_into().unwrap())))
             }
             TAG_SHUTDOWN => Ok(Request::Shutdown),
+            TAG_GET_MANY => {
+                if payload.len() % 8 != 0 {
+                    return Err(ProtoError::Malformed(tag, format!("len {}", payload.len())));
+                }
+                Ok(Request::GetMany(
+                    payload
+                        .chunks_exact(8)
+                        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ))
+            }
+            TAG_GROUP if allow_group => {
+                let mut subs = Vec::new();
+                let mut cur = payload.as_slice();
+                while !cur.is_empty() {
+                    let (t, p) = read_frame(&mut cur)?;
+                    if t == TAG_SHUTDOWN {
+                        return Err(ProtoError::Malformed(tag, "SHUTDOWN inside GROUP".into()));
+                    }
+                    subs.push(Request::decode_frame(t, p, false)?);
+                }
+                Ok(Request::Group(subs))
+            }
+            TAG_GROUP => Err(ProtoError::Malformed(tag, "nested GROUP".into())),
+            TAG_RESET => Ok(Request::Reset),
             t => Err(ProtoError::BadTag(t)),
         }
     }
@@ -202,11 +297,41 @@ impl Response {
                 Some(r) => write_frame(w, TAG_RECORD, &r.encode()),
             },
             Response::Bye => write_frame(w, TAG_BYE, &[]),
+            Response::Records(recs) => {
+                let mut p = Vec::with_capacity(recs.len() * RECORD_ENTRY_BYTES);
+                for rec in recs {
+                    match rec {
+                        Some(r) => {
+                            p.push(1);
+                            p.extend_from_slice(&r.encode());
+                        }
+                        None => p.extend_from_slice(&[0u8; RECORD_ENTRY_BYTES]),
+                    }
+                }
+                write_frame(w, TAG_RECORDS, &p)
+            }
+            Response::Group(subs) => {
+                let mut payload = Vec::new();
+                for sub in subs {
+                    if matches!(sub, Response::Group(_)) {
+                        return Err(ProtoError::Malformed(TAG_GROUP_R, "nested GROUP".into()));
+                    }
+                    sub.write_to(&mut payload)?;
+                }
+                write_frame(w, TAG_GROUP_R, &payload)
+            }
+            Response::ResetDone { handled } => {
+                write_frame(w, TAG_RESET_R, &handled.to_le_bytes())
+            }
         }
     }
 
     pub fn read_from<R: Read>(r: &mut R) -> Result<Response, ProtoError> {
         let (tag, payload) = read_frame(r)?;
+        Response::decode_frame(tag, payload, true)
+    }
+
+    fn decode_frame(tag: u8, payload: Vec<u8>, allow_group: bool) -> Result<Self, ProtoError> {
         let u64_at = |off: usize| -> u64 {
             u64::from_le_bytes(payload[off..off + 8].try_into().unwrap())
         };
@@ -225,7 +350,38 @@ impl Response {
                 BookRecord::decode(&payload).map_err(|e| ProtoError::Malformed(tag, e.to_string()))?,
             ))),
             TAG_BYE => Ok(Response::Bye),
-            t if matches!(t, TAG_LOADED | TAG_APPLIED | TAG_STATS_R | TAG_RECORD) => {
+            TAG_RECORDS if payload.len() % RECORD_ENTRY_BYTES == 0 => {
+                let mut out = Vec::with_capacity(payload.len() / RECORD_ENTRY_BYTES);
+                for chunk in payload.chunks_exact(RECORD_ENTRY_BYTES) {
+                    match chunk[0] {
+                        0 => out.push(None),
+                        1 => out.push(Some(
+                            BookRecord::decode(&chunk[1..])
+                                .map_err(|e| ProtoError::Malformed(tag, e.to_string()))?,
+                        )),
+                        f => {
+                            return Err(ProtoError::Malformed(tag, format!("presence byte {f}")))
+                        }
+                    }
+                }
+                Ok(Response::Records(out))
+            }
+            TAG_GROUP_R if allow_group => {
+                let mut subs = Vec::new();
+                let mut cur = payload.as_slice();
+                while !cur.is_empty() {
+                    let (t, p) = read_frame(&mut cur)?;
+                    subs.push(Response::decode_frame(t, p, false)?);
+                }
+                Ok(Response::Group(subs))
+            }
+            TAG_GROUP_R => Err(ProtoError::Malformed(tag, "nested GROUP".into())),
+            TAG_RESET_R if payload.len() == 8 => Ok(Response::ResetDone { handled: u64_at(0) }),
+            t if matches!(
+                t,
+                TAG_LOADED | TAG_APPLIED | TAG_STATS_R | TAG_RECORD | TAG_RECORDS | TAG_RESET_R
+            ) =>
+            {
                 Err(ProtoError::Malformed(t, format!("len {}", payload.len())))
             }
             t => Err(ProtoError::BadTag(t)),
@@ -290,6 +446,77 @@ mod tests {
     }
 
     #[test]
+    fn serving_verbs_roundtrip() {
+        roundtrip_req(Request::GetMany(vec![1, 2, u64::MAX]));
+        roundtrip_req(Request::GetMany(vec![]));
+        roundtrip_req(Request::Reset);
+        roundtrip_req(Request::Group(vec![
+            Request::Get(7),
+            Request::Update(vec![StockUpdate {
+                isbn13: 7,
+                new_price_cents: 100,
+                new_quantity: 2,
+            }]),
+            Request::Stats,
+        ]));
+        roundtrip_req(Request::Group(vec![]));
+        roundtrip_resp(Response::Records(vec![
+            Some(BookRecord::new(1, 2, 3)),
+            None,
+            Some(BookRecord::new(9_780_000_000_001, 199, 44)),
+        ]));
+        roundtrip_resp(Response::Records(vec![]));
+        roundtrip_resp(Response::ResetDone { handled: 12345 });
+        roundtrip_resp(Response::Group(vec![
+            Response::Record(Some(BookRecord::new(1, 2, 3))),
+            Response::Applied { applied: 1, missing: 0 },
+        ]));
+        roundtrip_resp(Response::Group(vec![]));
+    }
+
+    #[test]
+    fn groups_do_not_nest() {
+        // Write side refuses to embed a group (or a shutdown) in a group.
+        let mut buf = Vec::new();
+        let nested = Request::Group(vec![Request::Group(vec![Request::Stats])]);
+        assert!(matches!(nested.write_to(&mut buf), Err(ProtoError::Malformed(_, _))));
+        let shutdown = Request::Group(vec![Request::Shutdown]);
+        assert!(matches!(shutdown.write_to(&mut buf), Err(ProtoError::Malformed(_, _))));
+        // Read side rejects a hand-built nested group frame too.
+        let mut inner = Vec::new();
+        write_frame(&mut inner, TAG_GROUP, &[]).unwrap();
+        let mut outer = Vec::new();
+        write_frame(&mut outer, TAG_GROUP, &inner).unwrap();
+        assert!(matches!(
+            Request::read_from(&mut outer.as_slice()),
+            Err(ProtoError::Malformed(TAG_GROUP, _))
+        ));
+        // Same for response groups.
+        let mut inner = Vec::new();
+        write_frame(&mut inner, TAG_GROUP_R, &[]).unwrap();
+        let mut outer = Vec::new();
+        write_frame(&mut outer, TAG_GROUP_R, &inner).unwrap();
+        assert!(matches!(
+            Response::read_from(&mut outer.as_slice()),
+            Err(ProtoError::Malformed(TAG_GROUP_R, _))
+        ));
+    }
+
+    #[test]
+    fn frame_len_rejects_oversize_before_narrowing() {
+        // In range: largest payload that still fits the bound.
+        assert_eq!(frame_len(0).unwrap(), 1);
+        assert_eq!(frame_len(MAX_FRAME as usize - 1).unwrap(), MAX_FRAME);
+        // Just over the bound.
+        assert!(matches!(frame_len(MAX_FRAME as usize), Err(ProtoError::TooLarge(_))));
+        // The regression: a payload whose `as u32` narrowing wraps to a tiny
+        // value (4 GiB - 1 wraps `1 + len` to 0) must still be rejected —
+        // the old code wrote a corrupt zero-length prefix here.
+        assert!(matches!(frame_len(u32::MAX as usize), Err(ProtoError::TooLarge(_))));
+        assert!(matches!(frame_len(usize::MAX), Err(ProtoError::TooLarge(_))));
+    }
+
+    #[test]
     fn u128_split_join() {
         for v in [0u128, 1, u64::MAX as u128, u128::MAX, 123_456_789_012_345_678_901_234_567] {
             let (lo, hi) = split_u128(v);
@@ -330,6 +557,22 @@ mod tests {
         assert!(matches!(
             Request::read_from(&mut buf.as_slice()),
             Err(ProtoError::Malformed(TAG_UPDATE, _))
+        ));
+        // Ragged multi-get payload.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, TAG_GET_MANY, &[0u8; 9]).unwrap();
+        assert!(matches!(
+            Request::read_from(&mut buf.as_slice()),
+            Err(ProtoError::Malformed(TAG_GET_MANY, _))
+        ));
+        // Bad presence byte in a records payload.
+        let mut entry = [0u8; RECORD_ENTRY_BYTES];
+        entry[0] = 9;
+        let mut buf = Vec::new();
+        write_frame(&mut buf, TAG_RECORDS, &entry).unwrap();
+        assert!(matches!(
+            Response::read_from(&mut buf.as_slice()),
+            Err(ProtoError::Malformed(TAG_RECORDS, _))
         ));
         // Corrupt record in Load (checksum fails).
         let mut payload = BookRecord::new(1, 2, 3).encode().to_vec();

@@ -12,6 +12,46 @@ use std::os::unix::net::UnixStream;
 use super::proto::{split_u128, ProtoError, Request, Response};
 use crate::memstore::HashTable;
 
+/// Execute one data verb against the table. `Shutdown`, `Reset` and
+/// `Group` are connection-level and handled by the caller.
+fn apply_one(table: &mut HashTable, req: &Request) -> Result<Response, ProtoError> {
+    match req {
+        Request::Load(records) => {
+            let mut n = 0u64;
+            for r in records {
+                table.insert(*r);
+                n += 1;
+            }
+            Ok(Response::Loaded(n))
+        }
+        Request::Update(ups) => {
+            let mut applied = 0u64;
+            let mut missing = 0u64;
+            for u in ups {
+                if table.update(u.isbn13, |r| u.apply_to(r)) {
+                    applied += 1;
+                } else {
+                    missing += 1;
+                }
+            }
+            Ok(Response::Applied { applied, missing })
+        }
+        Request::Stats => {
+            let (count, value) = table.value_sum_cents();
+            let (lo, hi) = split_u128(value);
+            Ok(Response::Stats { count, value_cents_lo: lo, value_cents_hi: hi })
+        }
+        Request::Get(key) => Ok(Response::Record(table.get(*key))),
+        Request::GetMany(keys) => {
+            Ok(Response::Records(keys.iter().map(|&k| table.get(k)).collect()))
+        }
+        Request::Shutdown | Request::Reset | Request::Group(_) => Err(ProtoError::Malformed(
+            0,
+            "connection-level verb where a data verb was expected".into(),
+        )),
+    }
+}
+
 /// Serve one leader connection until Shutdown / EOF. Returns the number of
 /// requests handled.
 pub fn serve<R: Read, W: Write>(input: R, output: W) -> Result<u64, ProtoError> {
@@ -19,6 +59,9 @@ pub fn serve<R: Read, W: Write>(input: R, output: W) -> Result<u64, ProtoError> 
     let mut output = BufWriter::with_capacity(1 << 20, output);
     let mut table = HashTable::new();
     let mut handled = 0u64;
+    // Requests since the last `Reset` — the serving mode's STATS RESET
+    // window, reported in `ResetDone`.
+    let mut window = 0u64;
     loop {
         let req = match Request::read_from(&mut input) {
             Ok(r) => r,
@@ -27,41 +70,32 @@ pub fn serve<R: Read, W: Write>(input: R, output: W) -> Result<u64, ProtoError> 
             }
             Err(e) => return Err(e),
         };
-        handled += 1;
         match req {
-            Request::Load(records) => {
-                let mut n = 0u64;
-                for r in records {
-                    table.insert(r);
-                    n += 1;
-                }
-                Response::Loaded(n).write_to(&mut output)?;
-            }
-            Request::Update(ups) => {
-                let mut applied = 0u64;
-                let mut missing = 0u64;
-                for u in &ups {
-                    if table.update(u.isbn13, |r| u.apply_to(r)) {
-                        applied += 1;
-                    } else {
-                        missing += 1;
-                    }
-                }
-                Response::Applied { applied, missing }.write_to(&mut output)?;
-            }
-            Request::Stats => {
-                let (count, value) = table.value_sum_cents();
-                let (lo, hi) = split_u128(value);
-                Response::Stats { count, value_cents_lo: lo, value_cents_hi: hi }
-                    .write_to(&mut output)?;
-            }
-            Request::Get(key) => {
-                Response::Record(table.get(key)).write_to(&mut output)?;
-            }
             Request::Shutdown => {
                 Response::Bye.write_to(&mut output)?;
                 output.flush()?;
-                return Ok(handled);
+                return Ok(handled + 1);
+            }
+            Request::Reset => {
+                Response::ResetDone { handled: window }.write_to(&mut output)?;
+                window = 0;
+                handled += 1;
+            }
+            Request::Group(subs) => {
+                // One frame in, one frame out: sub-requests execute in
+                // order, so same-key ops keep their submission sequence.
+                let mut replies = Vec::with_capacity(subs.len());
+                for sub in &subs {
+                    replies.push(apply_one(&mut table, sub)?);
+                }
+                handled += subs.len() as u64;
+                window += subs.len() as u64;
+                Response::Group(replies).write_to(&mut output)?;
+            }
+            ref data => {
+                apply_one(&mut table, data)?.write_to(&mut output)?;
+                handled += 1;
+                window += 1;
             }
         }
         output.flush()?;
@@ -132,6 +166,47 @@ mod tests {
             ref other => panic!("expected stats, got {other:?}"),
         }
         assert_eq!(responses[5], Response::Bye);
+    }
+
+    #[test]
+    fn serving_verbs_get_many_group_reset() {
+        let responses = talk(vec![
+            Request::Load(vec![BookRecord::new(1, 100, 2), BookRecord::new(2, 200, 3)]),
+            Request::GetMany(vec![2, 99, 1]),
+            Request::Group(vec![
+                Request::Get(1),
+                Request::Update(vec![StockUpdate {
+                    isbn13: 1,
+                    new_price_cents: 111,
+                    new_quantity: 4,
+                }]),
+                Request::Get(1),
+            ]),
+            Request::Reset,
+            Request::Get(2),
+            Request::Reset,
+            Request::Shutdown,
+        ]);
+        assert_eq!(
+            responses[1],
+            Response::Records(vec![
+                Some(BookRecord::new(2, 200, 3)),
+                None,
+                Some(BookRecord::new(1, 100, 2)),
+            ])
+        );
+        assert_eq!(
+            responses[2],
+            Response::Group(vec![
+                Response::Record(Some(BookRecord::new(1, 100, 2))),
+                Response::Applied { applied: 1, missing: 0 },
+                Response::Record(Some(BookRecord::new(1, 111, 4))),
+            ])
+        );
+        // Window: Load + GetMany + 3 grouped sub-requests = 5; then the
+        // next window saw exactly the one Get.
+        assert_eq!(responses[3], Response::ResetDone { handled: 5 });
+        assert_eq!(responses[5], Response::ResetDone { handled: 1 });
     }
 
     #[test]

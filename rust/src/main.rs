@@ -40,6 +40,7 @@ fn spec() -> Vec<FlagSpec> {
         FlagSpec { name: "workers", value: "N", help: "serve: blocking-verb worker threads (default = max(cores, 4))" },
         FlagSpec { name: "max-conns", value: "N", help: "serve: max concurrent connections (default 1024)" },
         FlagSpec { name: "reactors", value: "N", help: "serve: event-loop reactor threads (default = cores)" },
+        FlagSpec { name: "processes", value: "N", help: "serve: shard-owning worker processes (default 0 = in-process store)" },
         FlagSpec { name: "write-buf-kb", value: "N", help: "serve: per-connection write-buffer cap in KiB before a non-reading client is disconnected (default 8192, min 256)" },
         FlagSpec { name: "durable-dir", value: "DIR", help: "serve: WAL + snapshot directory; enables crash recovery (default off)" },
         FlagSpec { name: "fsync", value: "BOOL", help: "serve: fsync every group commit (default true; false = kernel flush only)" },
@@ -167,6 +168,9 @@ fn run() -> Result<(), String> {
             Ok(())
         }
         "serve" => {
+            if cfg.server_processes > 0 {
+                return serve_processes(&cfg, &wb);
+            }
             // With --durable-dir: recover `snapshot + WAL chain` when the
             // directory has state, else seed it from the workbench table;
             // every acknowledged mutation is then WAL-logged before its OK.
@@ -268,6 +272,54 @@ fn run() -> Result<(), String> {
     }
 }
 
+/// `serve --processes N`: shared-nothing serving behind the same wire
+/// protocol. The leader loads the table once, scatters the records to N
+/// spawned worker processes (each owning a disjoint key range), and keeps
+/// no store of its own — every data verb becomes an RPC to the owning
+/// worker. Mutually exclusive with durability (enforced by `validated()`);
+/// ANALYTICS is answered with an error since the leader holds no records.
+fn serve_processes(cfg: &EngineConfig, wb: &Workbench) -> Result<(), String> {
+    let records = {
+        let coord = Coordinator::new(cfg.clone());
+        let table = wb.ensure_table(cfg).map_err(|e| e.to_string())?;
+        let store = coord.load_only(&table).map_err(|e| e.to_string())?;
+        let mut records = Vec::with_capacity(store.len());
+        store.for_each_shard(|_, recs| records.extend_from_slice(recs));
+        records
+    };
+    let mut pool =
+        membig::ipc::ProcessPool::spawn(cfg.server_processes).map_err(|e| e.to_string())?;
+    let loaded = pool.load(&records).map_err(|e| e.to_string())?;
+    drop(records);
+    let serving = Arc::new(pool.into_serving());
+
+    let mut server_cfg = ServerConfig::default();
+    if cfg.server_workers > 0 {
+        server_cfg.workers = cfg.server_workers;
+    }
+    server_cfg.max_conns = cfg.server_max_conns;
+    server_cfg.reactors = cfg.server_reactors;
+    if cfg.server_write_buf_kb > 0 {
+        server_cfg.write_buf_cap = cfg.server_write_buf_kb << 10;
+    }
+    println!(
+        "serving {} records on {} across {} worker process(es) (pids: {:?}; analytics: \
+         disabled; blocking workers: {}; max conns: {})",
+        commas(loaded),
+        cfg.bind,
+        cfg.server_processes,
+        serving.worker_pids(),
+        server_cfg.workers,
+        server_cfg.max_conns,
+    );
+    let handle =
+        Server::with_procs(serving, server_cfg).spawn(&cfg.bind).map_err(|e| e.to_string())?;
+    println!("listening on {} — Ctrl-C to stop", handle.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
 /// Resolve the `--backend` flag into a running analytics service.
 /// `auto` (default) prefers PJRT when compiled in, else pure-Rust reference;
 /// `off` disables the ANALYTICS verb entirely.
@@ -325,6 +377,9 @@ fn build_config(args: &Args) -> Result<EngineConfig, String> {
     }
     if let Some(r) = args.get_parsed::<usize>("reactors").map_err(|e| e.to_string())? {
         cfg.server_reactors = r;
+    }
+    if let Some(p) = args.get_parsed::<usize>("processes").map_err(|e| e.to_string())? {
+        cfg.server_processes = p;
     }
     if let Some(w) = args.get_parsed::<usize>("write-buf-kb").map_err(|e| e.to_string())? {
         cfg.server_write_buf_kb = w;

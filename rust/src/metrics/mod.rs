@@ -643,6 +643,116 @@ impl DurabilityMetrics {
     }
 }
 
+// ---------------------------------------------------------------------------
+// IPC (multi-process serving) metrics bundle
+// ---------------------------------------------------------------------------
+
+/// Per-worker RPC traffic of one `ipc::ServingPool` worker connection.
+#[derive(Default)]
+pub struct IpcWorkerMetrics {
+    /// Request frames sent to (and answered by) this worker.
+    pub rpcs: Counter,
+    /// Failed exchanges — each one poisons the connection.
+    pub errors: Counter,
+    /// Round-trip latency per exchange (a scatter records its group
+    /// round-trip on every worker it touched).
+    pub latency: Histogram,
+}
+
+/// Metrics for the multi-process serving backend (`serve --processes N`):
+/// one [`IpcWorkerMetrics`] per worker process, rendered into
+/// `STATS SERVER` next to the per-verb server histograms.
+pub struct IpcMetrics {
+    workers: Vec<IpcWorkerMetrics>,
+}
+
+impl IpcMetrics {
+    pub fn new(n: usize) -> Self {
+        IpcMetrics { workers: (0..n).map(|_| IpcWorkerMetrics::default()).collect() }
+    }
+
+    pub fn workers(&self) -> &[IpcWorkerMetrics] {
+        &self.workers
+    }
+
+    /// One successful exchange with `worker`: `frames` request frames
+    /// answered, `elapsed` wall-clock for the whole exchange.
+    pub fn record_rpc(&self, worker: usize, frames: u64, elapsed: Duration) {
+        let w = &self.workers[worker];
+        w.rpcs.add(frames);
+        w.latency.record_duration(elapsed);
+    }
+
+    pub fn record_error(&self, worker: usize) {
+        self.workers[worker].errors.inc();
+    }
+
+    pub fn total_rpcs(&self) -> u64 {
+        self.workers.iter().map(|w| w.rpcs.get()).sum()
+    }
+
+    pub fn total_errors(&self) -> u64 {
+        self.workers.iter().map(|w| w.errors.get()).sum()
+    }
+
+    /// Joins a `STATS RESET` epoch: zero counters and latency windows.
+    pub fn reset_epoch_counters(&self) {
+        for w in &self.workers {
+            w.rpcs.reset();
+            w.errors.reset();
+            w.latency.reset();
+        }
+    }
+
+    /// Suffix appended to `STATS SERVER` in multi-process mode: pool-wide
+    /// totals, then per-worker RPC counters and latency quantiles.
+    pub fn stats_suffix(&self) -> String {
+        let mut s = format!(
+            " ipc_workers={} ipc_rpcs={} ipc_errors={}",
+            self.workers.len(),
+            self.total_rpcs(),
+            self.total_errors()
+        );
+        for (i, w) in self.workers.iter().enumerate() {
+            s.push_str(&format!(
+                " ipc_w{}_rpcs={} ipc_w{}_errors={} ipc_w{}_p50_ns={} ipc_w{}_p99_ns={}",
+                i,
+                w.rpcs.get(),
+                i,
+                w.errors.get(),
+                i,
+                w.latency.quantile(0.5),
+                i,
+                w.latency.quantile(0.99)
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workers", Json::num(self.workers.len() as f64)),
+            ("rpcs", Json::num(self.total_rpcs() as f64)),
+            ("errors", Json::num(self.total_errors() as f64)),
+            (
+                "per_worker",
+                Json::arr(
+                    self.workers
+                        .iter()
+                        .map(|w| {
+                            Json::obj(vec![
+                                ("rpcs", Json::num(w.rpcs.get() as f64)),
+                                ("errors", Json::num(w.errors.get() as f64)),
+                                ("latency", w.latency.snapshot().to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -854,6 +964,37 @@ mod tests {
         assert_eq!(d.snapshots.get(), 0);
         assert_eq!(d.snapshot_last_ms.get(), 17, "last-snapshot gauge is state, not traffic");
         assert_eq!(d.generation.get(), 3);
+    }
+
+    #[test]
+    fn ipc_metrics_render_and_reset() {
+        let m = IpcMetrics::new(2);
+        m.record_rpc(0, 3, Duration::from_micros(50));
+        m.record_rpc(1, 1, Duration::from_micros(80));
+        m.record_error(1);
+        assert_eq!(m.total_rpcs(), 4);
+        assert_eq!(m.total_errors(), 1);
+        let s = m.stats_suffix();
+        for needle in [
+            " ipc_workers=2",
+            " ipc_rpcs=4",
+            " ipc_errors=1",
+            " ipc_w0_rpcs=3",
+            " ipc_w1_rpcs=1",
+            " ipc_w1_errors=1",
+            " ipc_w0_p50_ns=",
+            " ipc_w1_p99_ns=",
+        ] {
+            assert!(s.contains(needle), "missing {needle:?} in {s:?}");
+        }
+        let j = m.to_json();
+        assert_eq!(j.get("workers").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.get("rpcs").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(j.get("per_worker").unwrap().as_arr().unwrap().len(), 2);
+        m.reset_epoch_counters();
+        assert_eq!(m.total_rpcs(), 0);
+        assert_eq!(m.total_errors(), 0);
+        assert_eq!(m.workers()[0].latency.count(), 0);
     }
 
     #[test]

@@ -21,6 +21,7 @@ use super::{
     BatchScratch, Server, ServerConfig, MAX_LINE_BYTES,
 };
 use crate::durability::Persistence;
+use crate::ipc::ServingPool;
 use crate::memstore::ShardedStore;
 use crate::metrics::ServerMetrics;
 use crate::runtime::AnalyticsService;
@@ -45,6 +46,7 @@ impl Server {
             let store = self.store.clone();
             let engine = self.engine.clone();
             let persist = self.persist.clone();
+            let procs = self.procs.clone();
             let stop = self.stop.clone();
             let metrics = self.metrics.clone();
             let cfg = self.config.clone();
@@ -60,6 +62,7 @@ impl Server {
                         &store,
                         engine.as_ref(),
                         persist.as_deref(),
+                        procs.as_deref(),
                         &stop,
                         &metrics,
                         &cfg,
@@ -194,6 +197,7 @@ fn handle_client(
     store: &Arc<ShardedStore>,
     engine: Option<&Arc<AnalyticsService>>,
     persist: Option<&Persistence>,
+    procs: Option<&ServingPool>,
     stop: &AtomicBool,
     metrics: &ServerMetrics,
     cfg: &ServerConfig,
@@ -260,6 +264,7 @@ fn handle_client(
                 store,
                 engine,
                 persist,
+                procs,
                 stop,
                 metrics,
                 cfg,
@@ -272,7 +277,7 @@ fn handle_client(
             continue;
         }
         resp.clear();
-        execute_one_into(req, store, engine, persist, metrics, false, &mut resp);
+        execute_one_into(req, store, engine, persist, metrics, false, procs, &mut resp);
         // Response + newline leave in one syscall.
         out.write_all(&resp)?;
         let quit = req == "QUIT";
@@ -302,6 +307,7 @@ fn run_batch(
     store: &Arc<ShardedStore>,
     engine: Option<&Arc<AnalyticsService>>,
     persist: Option<&Persistence>,
+    procs: Option<&ServingPool>,
     stop: &AtomicBool,
     metrics: &ServerMetrics,
     cfg: &ServerConfig,
@@ -353,6 +359,7 @@ fn run_batch(
         engine,
         persist,
         metrics,
+        procs,
         &mut scratch.resp,
     ) {
         Ok(quit) => quit,

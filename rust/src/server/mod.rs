@@ -69,6 +69,7 @@ pub mod batch;
 #[cfg(not(target_os = "linux"))]
 mod fallback;
 pub mod pool;
+mod procs;
 mod reactor;
 mod sys;
 
@@ -82,6 +83,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::durability::Persistence;
+use crate::ipc::ServingPool;
 use crate::memstore::ShardedStore;
 use crate::metrics::ServerMetrics;
 use crate::runtime::AnalyticsService;
@@ -134,6 +136,9 @@ pub struct Server {
     store: Arc<ShardedStore>,
     engine: Option<Arc<AnalyticsService>>,
     persist: Option<Arc<Persistence>>,
+    /// Multi-process backend (`serve --processes N`): when set, the data
+    /// verbs route to shard-owning worker processes instead of `store`.
+    procs: Option<Arc<ServingPool>>,
     stop: Arc<AtomicBool>,
     pub metrics: Arc<ServerMetrics>,
     config: ServerConfig,
@@ -185,10 +190,24 @@ impl Server {
             store,
             engine,
             persist,
+            procs: None,
             stop: Arc::new(AtomicBool::new(false)),
             metrics: Arc::new(ServerMetrics::new()),
             config,
         }
+    }
+
+    /// Multi-process serving (`serve --processes N`): the data set lives in
+    /// `procs`' shard-owning worker processes, and every data verb is an
+    /// RPC to the owning worker(s). The placeholder store only backs the
+    /// shared connection machinery — the procs dispatcher intercepts every
+    /// verb that would read it. Analytics and durability are unavailable in
+    /// this mode (rejected by `Config::validated`).
+    pub fn with_procs(procs: Arc<ServingPool>, config: ServerConfig) -> Self {
+        let mut server =
+            Self::with_persistence(Arc::new(ShardedStore::new(1, 8)), None, config, None);
+        server.procs = Some(procs);
+        server
     }
 
     /// Bind and serve on a background thread; returns a handle for shutdown.
@@ -211,6 +230,7 @@ impl Server {
             self.store,
             self.engine,
             self.persist,
+            self.procs,
             metrics.clone(),
             stop.clone(),
             self.config,
@@ -353,6 +373,7 @@ pub(crate) fn reply_invalid_utf8(metrics: &ServerMetrics, out: &mut Vec<u8>) {
 /// per-verb latency), appending the newline-terminated response to `out` —
 /// shared by the reactor's inline path, the blocking pool and the fallback
 /// front end so the bookkeeping cannot drift between them.
+#[allow(clippy::too_many_arguments)] // the executor sits below RequestCtx
 pub(crate) fn execute_one_into(
     req: &str,
     store: &Arc<ShardedStore>,
@@ -360,6 +381,7 @@ pub(crate) fn execute_one_into(
     persist: Option<&Persistence>,
     metrics: &ServerMetrics,
     in_batch: bool,
+    procs: Option<&ServingPool>,
     out: &mut Vec<u8>,
 ) {
     metrics.requests.inc();
@@ -368,7 +390,7 @@ pub(crate) fn execute_one_into(
     // `other` so batch_latency keeps whole-group samples only.
     let verb = if in_batch && verb == "BATCH" { "" } else { verb };
     let t0 = Instant::now();
-    let ctx = RequestCtx { store, engine, metrics: Some(metrics), persist };
+    let ctx = RequestCtx { store, engine, metrics: Some(metrics), persist, procs };
     dispatch_into(req, &ctx, in_batch, out);
     metrics.latency_for(verb).record_duration(t0.elapsed());
 }
@@ -381,6 +403,7 @@ pub(crate) fn execute_one_into(
 /// `Err(())` when the group sync failed: the buffered responses in `resp`
 /// must **not** be delivered (they would ack unlogged writes) and the
 /// connection must close.
+#[allow(clippy::too_many_arguments)] // the executor sits below RequestCtx
 pub(crate) fn exec_batch_group(
     payload: &[u8],
     bounds: &[usize],
@@ -388,6 +411,7 @@ pub(crate) fn exec_batch_group(
     engine: Option<&Arc<AnalyticsService>>,
     persist: Option<&Persistence>,
     metrics: &ServerMetrics,
+    procs: Option<&ServingPool>,
     resp: &mut Vec<u8>,
 ) -> Result<bool, ()> {
     metrics.batch_sizes.record(bounds.len() as u64);
@@ -396,18 +420,25 @@ pub(crate) fn exec_batch_group(
     // histograms exist to compare.
     let t0 = Instant::now();
     let mut quit = false;
-    let mut start = 0usize;
-    for &end in bounds {
-        let raw = &payload[start..end];
-        start = end;
-        // One UTF-8 validation per payload line, on the raw bytes in place.
-        match std::str::from_utf8(raw) {
-            Ok(s) => {
-                let req = s.trim();
-                execute_one_into(req, store, engine, persist, metrics, true, resp);
-                quit = quit || req == "QUIT";
+    if let Some(pool) = procs {
+        // Multi-process backend: consecutive point lines coalesce into one
+        // Group frame per touched worker instead of one RPC per line.
+        quit = procs::exec_batch_lines_grouped(payload, bounds, store, engine, metrics, pool, resp);
+    } else {
+        let mut start = 0usize;
+        for &end in bounds {
+            let raw = &payload[start..end];
+            start = end;
+            // One UTF-8 validation per payload line, on the raw bytes in
+            // place.
+            match std::str::from_utf8(raw) {
+                Ok(s) => {
+                    let req = s.trim();
+                    execute_one_into(req, store, engine, persist, metrics, true, None, resp);
+                    quit = quit || req == "QUIT";
+                }
+                Err(_) => reply_invalid_utf8(metrics, resp),
             }
-            Err(_) => reply_invalid_utf8(metrics, resp),
         }
     }
     // Group commit: every mutation in the batch deferred its sync to this
@@ -433,12 +464,16 @@ pub struct RequestCtx<'a> {
     /// When set, `UPDATE`/`MUPDATE` are logged + applied through the
     /// persistence layer (never acknowledged before the WAL has them).
     pub persist: Option<&'a Persistence>,
+    /// When set, the data verbs route to the multi-process worker pool
+    /// (`serve --processes N`) and `store` is never read.
+    pub procs: Option<&'a ServingPool>,
 }
 
 /// Parse + execute one request line (separated out for direct unit tests).
 /// Strict parsing: unconsumed trailing tokens are an `ERR`, never ignored.
 pub fn dispatch(line: &str, store: &Arc<ShardedStore>, engine: Option<&Arc<AnalyticsService>>) -> String {
-    dispatch_ctx(line, &RequestCtx { store, engine, metrics: None, persist: None }, false)
+    let ctx = RequestCtx { store, engine, metrics: None, persist: None, procs: None };
+    dispatch_ctx(line, &ctx, false)
 }
 
 /// [`dispatch`] with optional server metrics: batch sizes are recorded, the
@@ -450,7 +485,8 @@ pub fn dispatch_with_metrics(
     engine: Option<&Arc<AnalyticsService>>,
     metrics: Option<&ServerMetrics>,
 ) -> String {
-    dispatch_ctx(line, &RequestCtx { store, engine, metrics, persist: None }, false)
+    let ctx = RequestCtx { store, engine, metrics, persist: None, procs: None };
+    dispatch_ctx(line, &ctx, false)
 }
 
 /// [`dispatch_into`] rendered to a `String` (tests, REPL-style callers).
@@ -471,12 +507,21 @@ pub fn dispatch_ctx(line: &str, ctx: &RequestCtx<'_>, in_batch: bool) -> String 
 /// commit `exec_batch_group` issues before the group's responses are
 /// released.
 pub fn dispatch_into(line: &str, ctx: &RequestCtx<'_>, in_batch: bool, out: &mut Vec<u8>) {
-    let RequestCtx { store, engine, metrics, persist } = *ctx;
+    let RequestCtx { store, engine, metrics, persist, procs } = *ctx;
     let line = line.trim();
     let (verb, rest) = match line.split_once(|c: char| c.is_ascii_whitespace()) {
         Some((v, r)) => (v, r.trim()),
         None => (line, ""),
     };
+    // Multi-process backend: the data verbs become worker RPCs; everything
+    // else (PING/QUIT/BATCH framing errors/unknowns) falls through to the
+    // shared arms below, which never read the placeholder store.
+    if let Some(pool) = procs {
+        if procs::dispatch_procs_into(verb, rest, pool, metrics, out) {
+            out.push(b'\n');
+            return;
+        }
+    }
     // Set by the arms whose response was formatted straight into the
     // pooled buffer (no String allocation); accounted once below so the
     // hot/cold classification lives in exactly one place per arm.
@@ -782,7 +827,7 @@ mod tests {
         let (s, spec) = store(10);
         let key = spec.record_at(1).isbn13;
         let rec = spec.record_at(1);
-        let ctx = RequestCtx { store: &s, engine: None, metrics: None, persist: None };
+        let ctx = RequestCtx { store: &s, engine: None, metrics: None, persist: None, procs: None };
         let mut out = Vec::new();
         dispatch_into("PING", &ctx, false, &mut out);
         dispatch_into(&format!("GET {key}"), &ctx, false, &mut out);
@@ -865,7 +910,13 @@ mod tests {
         let (s, spec) = store(10);
         let m = ServerMetrics::new();
         let key = spec.record_at(1).isbn13;
-        let ctx = RequestCtx { store: &s, engine: None, metrics: Some(&m), persist: None };
+        let ctx = RequestCtx {
+            store: &s,
+            engine: None,
+            metrics: Some(&m),
+            persist: None,
+            procs: None,
+        };
         m.latency_for("GET").record(123);
         m.requests.add(4);
         s.read_stats().retries.add(9);
@@ -896,7 +947,7 @@ mod tests {
         }
         let mut resp = Vec::new();
         let quit =
-            exec_batch_group(&payload, &bounds, &s, None, None, &m, &mut resp).unwrap();
+            exec_batch_group(&payload, &bounds, &s, None, None, &m, None, &mut resp).unwrap();
         assert!(quit);
         let text = String::from_utf8(resp).unwrap();
         let rec = spec.record_at(2);
@@ -917,7 +968,7 @@ mod tests {
         bounds.push(payload.len());
         let mut resp = Vec::new();
         let quit =
-            exec_batch_group(&payload, &bounds, &s, None, None, &m, &mut resp).unwrap();
+            exec_batch_group(&payload, &bounds, &s, None, None, &m, None, &mut resp).unwrap();
         assert!(!quit);
         let text = String::from_utf8(resp).unwrap();
         assert!(text.starts_with("PONG\nERR"), "{text}");
@@ -942,7 +993,13 @@ mod tests {
             Ok(Arc::new(s))
         })
         .unwrap();
-        let ctx = RequestCtx { store: &s, engine: None, metrics: None, persist: Some(&persist) };
+        let ctx = RequestCtx {
+            store: &s,
+            engine: None,
+            metrics: None,
+            persist: Some(&persist),
+            procs: None,
+        };
         assert_eq!(dispatch_ctx("UPDATE 1 999 9", &ctx, false), "OK");
         assert_eq!(dispatch_ctx("UPDATE 777 1 1", &ctx, false), "MISS");
         assert_eq!(dispatch_ctx("MUPDATE 2 222 2;3 333 3;888 1 1", &ctx, false),

@@ -1,0 +1,417 @@
+//! Multi-process request execution: the `serve --processes N` glue between
+//! the wire protocol and the [`ipc::ServingPool`](crate::ipc::ServingPool)
+//! backend.
+//!
+//! In this mode the data set lives in N shard-owning worker *processes*
+//! (paper §7's message-passing topology promoted to the serving path), not
+//! in the server's address space. The dispatcher intercepts the data verbs:
+//! `GET`/`UPDATE` become one RPC to the owning worker, `MGET`/`MUPDATE`
+//! scatter-gather with per-worker pipelining, and inside a `BATCH` group
+//! consecutive point lines are coalesced into one `Group` frame per touched
+//! worker ([`ServingPool::exec_points`]) — per-key ordering is preserved
+//! because equal keys route to the same worker and keep their submission
+//! order inside its group. `ANALYTICS` is unavailable (the leader holds no
+//! records to scan), and `STATS SERVER` gains the pool's per-worker RPC
+//! counters and latency quantiles.
+//!
+//! Response bytes mirror the in-process arms in `dispatch_into` /
+//! `server::batch` exactly: `--processes N` changes where the data lives,
+//! never the protocol.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::ipc::{IpcError, PointOp, PointReply, ServingPool};
+use crate::memstore::ShardedStore;
+use crate::metrics::ServerMetrics;
+use crate::runtime::AnalyticsService;
+use crate::util::fmt::push_u64;
+use crate::workload::record::StockUpdate;
+
+use super::{batch, execute_one_into, reply_invalid_utf8};
+
+/// Append a worker-RPC failure as a protocol error (no trailing newline —
+/// callers frame). RPC failures are server-side faults, not client errors,
+/// but the wire grammar has one error shape.
+fn push_rpc_err(out: &mut Vec<u8>, e: &IpcError) {
+    out.extend_from_slice(format!("ERR worker rpc: {e}").as_bytes());
+}
+
+/// Execute one data verb against the worker pool, appending the response
+/// (no trailing newline). Returns `false` for verbs the multi-process path
+/// does not own (`PING`, `QUIT`, errors, ...) — those fall through to the
+/// shared in-process arms, which never touch the placeholder store.
+pub(crate) fn dispatch_procs_into(
+    verb: &str,
+    rest: &str,
+    pool: &ServingPool,
+    metrics: Option<&ServerMetrics>,
+    out: &mut Vec<u8>,
+) -> bool {
+    match verb {
+        "GET" => {
+            let mut parts = rest.split_ascii_whitespace();
+            match (parts.next().and_then(|k| k.parse::<u64>().ok()), parts.next()) {
+                (Some(key), None) => match pool.get(key) {
+                    Ok(Some(r)) => {
+                        out.extend_from_slice(b"OK ");
+                        push_u64(out, r.price_cents);
+                        out.push(b' ');
+                        push_u64(out, r.quantity as u64);
+                    }
+                    Ok(None) => out.extend_from_slice(b"MISS"),
+                    Err(e) => push_rpc_err(out, &e),
+                },
+                _ => out.extend_from_slice(b"ERR GET expects exactly <isbn13>"),
+            }
+        }
+        "UPDATE" => {
+            let mut parts = rest.split_ascii_whitespace();
+            let key = parts.next().and_then(|k| k.parse::<u64>().ok());
+            let cents = parts.next().and_then(|k| k.parse::<u64>().ok());
+            let qty = parts.next().and_then(|k| k.parse::<u32>().ok());
+            match (key, cents, qty, parts.next()) {
+                (Some(k), Some(c), Some(q), None) => {
+                    let u = StockUpdate { isbn13: k, new_price_cents: c, new_quantity: q };
+                    match pool.update_one(&u) {
+                        Ok(true) => out.extend_from_slice(b"OK"),
+                        Ok(false) => out.extend_from_slice(b"MISS"),
+                        Err(e) => push_rpc_err(out, &e),
+                    }
+                }
+                _ => out.extend_from_slice(b"ERR UPDATE expects exactly <isbn13> <cents> <qty>"),
+            }
+        }
+        "MGET" => match batch::parse_mget(rest) {
+            Ok(keys) => {
+                if let Some(m) = metrics {
+                    m.batch_sizes.record(keys.len() as u64);
+                }
+                match pool.get_many(&keys) {
+                    // Same bytes as `batch::exec_mget_into`, fed by RPC.
+                    Ok(vals) => {
+                        out.reserve(8 + vals.len() * 12);
+                        out.extend_from_slice(b"OK ");
+                        push_u64(out, vals.len() as u64);
+                        for v in &vals {
+                            match v {
+                                Some(r) => {
+                                    out.push(b' ');
+                                    push_u64(out, r.price_cents);
+                                    out.push(b',');
+                                    push_u64(out, r.quantity as u64);
+                                }
+                                None => out.extend_from_slice(b" MISS"),
+                            }
+                        }
+                    }
+                    Err(e) => push_rpc_err(out, &e),
+                }
+            }
+            Err(e) => out.extend_from_slice(format!("ERR {e}").as_bytes()),
+        },
+        "MUPDATE" => match batch::parse_mupdate(rest) {
+            Ok(ups) => {
+                if let Some(m) = metrics {
+                    m.batch_sizes.record(ups.len() as u64);
+                }
+                match pool.update_many(&ups) {
+                    Ok((applied, missed)) => {
+                        out.extend_from_slice(b"OK applied=");
+                        push_u64(out, applied);
+                        out.extend_from_slice(b" missed=");
+                        push_u64(out, missed);
+                    }
+                    Err(e) => push_rpc_err(out, &e),
+                }
+            }
+            Err(e) => out.extend_from_slice(format!("ERR {e}").as_bytes()),
+        },
+        "STATS" => {
+            let mut parts = rest.split_ascii_whitespace();
+            match (parts.next(), parts.next()) {
+                (None, _) => match pool.stats() {
+                    Ok((n, v)) => {
+                        let mut s = format!("OK count={n} value_cents={v}");
+                        if let Some(m) = metrics {
+                            s.push_str(&m.stats_suffix());
+                        }
+                        out.extend_from_slice(s.as_bytes());
+                    }
+                    Err(e) => push_rpc_err(out, &e),
+                },
+                (Some("SERVER"), None) => match metrics {
+                    Some(m) => {
+                        let mut s = m.stats_server_line();
+                        s.push_str(&pool.metrics().stats_suffix());
+                        out.extend_from_slice(s.as_bytes());
+                    }
+                    None => out.extend_from_slice(b"ERR server metrics unavailable"),
+                },
+                (Some("RESET"), None) => match metrics {
+                    Some(m) => {
+                        // The pool's RPC counters and the workers' request
+                        // windows join the epoch alongside the server-side
+                        // counters — a window failure still opens the epoch
+                        // (the error is the report).
+                        pool.metrics().reset_epoch_counters();
+                        match pool.reset_windows() {
+                            Ok(_) => out.extend_from_slice(
+                                format!("OK epoch={}", m.reset_epoch()).as_bytes(),
+                            ),
+                            Err(e) => push_rpc_err(out, &e),
+                        }
+                    }
+                    None => out.extend_from_slice(b"ERR server metrics unavailable"),
+                },
+                _ => out.extend_from_slice(b"ERR STATS expects no argument, SERVER or RESET"),
+            }
+        }
+        "ANALYTICS" => {
+            if !rest.is_empty() {
+                out.extend_from_slice(b"ERR ANALYTICS takes no arguments");
+            } else {
+                out.extend_from_slice(
+                    b"ERR analytics unavailable with --processes (workers own the records)",
+                );
+            }
+        }
+        _ => return false,
+    }
+    true
+}
+
+/// The latency histogram a grouped point op is charged to.
+fn verb_of(op: &PointOp) -> &'static str {
+    match op {
+        PointOp::Get(_) => "GET",
+        PointOp::Update(_) => "UPDATE",
+    }
+}
+
+/// Classify one trimmed BATCH payload line as a point op iff it is exactly
+/// `GET <u64>` or `UPDATE <u64> <u64> <u32>` — the shapes the grouped
+/// scatter path accelerates. Anything else (including malformed point
+/// verbs) executes inline and produces the regular response/error.
+fn parse_point(line: &str) -> Option<PointOp> {
+    let (verb, rest) = match line.split_once(|c: char| c.is_ascii_whitespace()) {
+        Some((v, r)) => (v, r.trim()),
+        None => (line, ""),
+    };
+    let mut t = rest.split_ascii_whitespace();
+    match verb {
+        "GET" => match (t.next().and_then(|s| s.parse::<u64>().ok()), t.next()) {
+            (Some(k), None) => Some(PointOp::Get(k)),
+            _ => None,
+        },
+        "UPDATE" => {
+            let key = t.next().and_then(|s| s.parse::<u64>().ok());
+            let cents = t.next().and_then(|s| s.parse::<u64>().ok());
+            let qty = t.next().and_then(|s| s.parse::<u32>().ok());
+            match (key, cents, qty, t.next()) {
+                (Some(isbn13), Some(new_price_cents), Some(new_quantity), None) => {
+                    Some(PointOp::Update(StockUpdate { isbn13, new_price_cents, new_quantity }))
+                }
+                _ => None,
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Flush a pending run of point ops as one scatter via
+/// [`ServingPool::exec_points`]: one `Group` frame per touched worker,
+/// replies appended
+/// in submission order. Emits exactly one response line per op even on RPC
+/// failure — the connection's reply stream must stay in sync with the
+/// payload lines. Per-op accounting mirrors `execute_one_into` (request
+/// count + per-verb latency, amortized across the run).
+fn flush_run(
+    run: &mut Vec<PointOp>,
+    pool: &ServingPool,
+    metrics: &ServerMetrics,
+    resp: &mut Vec<u8>,
+) {
+    if run.is_empty() {
+        return;
+    }
+    let t0 = Instant::now();
+    let result = pool.exec_points(run);
+    let per_op = t0.elapsed() / run.len() as u32;
+    match result {
+        Ok(replies) => {
+            for (op, reply) in run.iter().zip(&replies) {
+                metrics.requests.inc();
+                metrics.latency_for(verb_of(op)).record_duration(per_op);
+                match reply {
+                    PointReply::Rec(Some(r)) => {
+                        resp.extend_from_slice(b"OK ");
+                        push_u64(resp, r.price_cents);
+                        resp.push(b' ');
+                        push_u64(resp, r.quantity as u64);
+                    }
+                    PointReply::Rec(None) | PointReply::Applied(false) => {
+                        resp.extend_from_slice(b"MISS")
+                    }
+                    PointReply::Applied(true) => resp.extend_from_slice(b"OK"),
+                }
+                resp.push(b'\n');
+            }
+        }
+        Err(e) => {
+            let msg = format!("ERR worker rpc: {e}");
+            for op in run.iter() {
+                metrics.requests.inc();
+                metrics.latency_for(verb_of(op)).record_duration(per_op);
+                resp.extend_from_slice(msg.as_bytes());
+                resp.push(b'\n');
+            }
+        }
+    }
+    run.clear();
+}
+
+/// Execute a BATCH group against the worker pool: runs of consecutive
+/// point lines coalesce into grouped scatters; every other line breaks the
+/// run and executes inline (through the regular dispatcher, which routes
+/// its own data verbs back to the pool). Returns whether the group
+/// contained `QUIT`.
+pub(crate) fn exec_batch_lines_grouped(
+    payload: &[u8],
+    bounds: &[usize],
+    store: &Arc<ShardedStore>,
+    engine: Option<&Arc<AnalyticsService>>,
+    metrics: &ServerMetrics,
+    pool: &ServingPool,
+    resp: &mut Vec<u8>,
+) -> bool {
+    let mut quit = false;
+    let mut run: Vec<PointOp> = Vec::new();
+    let mut start = 0usize;
+    for &end in bounds {
+        let raw = &payload[start..end];
+        start = end;
+        match std::str::from_utf8(raw) {
+            Ok(s) => {
+                let req = s.trim();
+                match parse_point(req) {
+                    Some(op) => run.push(op),
+                    None => {
+                        flush_run(&mut run, pool, metrics, resp);
+                        execute_one_into(req, store, engine, None, metrics, true, Some(pool), resp);
+                        quit = quit || req == "QUIT";
+                    }
+                }
+            }
+            Err(_) => {
+                flush_run(&mut run, pool, metrics, resp);
+                reply_invalid_utf8(metrics, resp);
+            }
+        }
+    }
+    flush_run(&mut run, pool, metrics, resp);
+    quit
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ipc::ProcessPool;
+    use crate::workload::record::BookRecord;
+
+    fn pool_with(records: &[BookRecord]) -> ServingPool {
+        let mut p = ProcessPool::spawn_in_process(3).unwrap();
+        p.load(records).unwrap();
+        p.into_serving()
+    }
+
+    fn run_verb(pool: &ServingPool, metrics: Option<&ServerMetrics>, line: &str) -> String {
+        let line = line.trim();
+        let (verb, rest) = match line.split_once(|c: char| c.is_ascii_whitespace()) {
+            Some((v, r)) => (v, r.trim()),
+            None => (line, ""),
+        };
+        let mut out = Vec::new();
+        assert!(
+            dispatch_procs_into(verb, rest, pool, metrics, &mut out),
+            "verb {verb:?} must be owned by the procs path"
+        );
+        String::from_utf8(out).unwrap()
+    }
+
+    #[test]
+    fn point_and_batch_verbs_match_protocol_bytes() {
+        let pool = pool_with(&[BookRecord::new(1, 100, 2), BookRecord::new(2, 200, 3)]);
+        assert_eq!(run_verb(&pool, None, "GET 1"), "OK 100 2");
+        assert_eq!(run_verb(&pool, None, "GET 42"), "MISS");
+        assert_eq!(run_verb(&pool, None, "GET"), "ERR GET expects exactly <isbn13>");
+        assert_eq!(run_verb(&pool, None, "UPDATE 1 111 9"), "OK");
+        assert_eq!(run_verb(&pool, None, "UPDATE 42 1 1"), "MISS");
+        assert_eq!(run_verb(&pool, None, "GET 1"), "OK 111 9");
+        assert_eq!(run_verb(&pool, None, "MGET 2 42 1"), "OK 3 200,3 MISS 111,9");
+        assert_eq!(
+            run_verb(&pool, None, "MUPDATE 1 5 5;42 1 1;2 6 6"),
+            "OK applied=2 missed=1"
+        );
+        assert!(run_verb(&pool, None, "MGET").starts_with("ERR"));
+        assert!(run_verb(&pool, None, "MUPDATE 1 2").starts_with("ERR"));
+        // 5*5 + 6*6 = 61 cents across both live records.
+        assert_eq!(run_verb(&pool, None, "STATS"), "OK count=2 value_cents=61");
+        assert!(run_verb(&pool, None, "ANALYTICS").starts_with("ERR analytics unavailable"));
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn stats_server_and_reset_cover_the_pool() {
+        let pool = pool_with(&[BookRecord::new(7, 10, 1)]);
+        let m = ServerMetrics::new();
+        run_verb(&pool, Some(&m), "GET 7");
+        let line = run_verb(&pool, Some(&m), "STATS SERVER");
+        assert!(line.contains(" ipc_workers=3"), "{line}");
+        assert!(line.contains(" ipc_w0_rpcs="), "{line}");
+        assert!(pool.metrics().total_rpcs() > 0);
+        assert_eq!(run_verb(&pool, Some(&m), "STATS RESET"), "OK epoch=1");
+        assert_eq!(pool.metrics().total_rpcs(), 0, "pool counters join the epoch");
+        assert_eq!(
+            run_verb(&pool, None, "STATS SERVER"),
+            "ERR server metrics unavailable"
+        );
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn batch_groups_point_runs_and_keeps_line_sync() {
+        let pool = pool_with(&[BookRecord::new(1, 100, 2), BookRecord::new(2, 200, 3)]);
+        let m = ServerMetrics::new();
+        let store = Arc::new(ShardedStore::new(1, 8));
+        let mut payload = Vec::new();
+        let mut bounds = Vec::new();
+        for line in [
+            "GET 1",
+            "UPDATE 1 111 4",
+            "GET 1", // same-key read observes the preceding grouped update
+            "PING",  // breaks the run, executes inline
+            "GET 2",
+            "GET nonsense", // malformed point verb: inline ERR, not a run entry
+            "QUIT",
+        ] {
+            payload.extend_from_slice(line.as_bytes());
+            bounds.push(payload.len());
+        }
+        let mut resp = Vec::new();
+        let quit = exec_batch_lines_grouped(&payload, &bounds, &store, None, &m, &pool, &mut resp);
+        assert!(quit);
+        let text = String::from_utf8(resp).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), bounds.len(), "one response line per payload line");
+        assert_eq!(lines[0], "OK 100 2");
+        assert_eq!(lines[1], "OK");
+        assert_eq!(lines[2], "OK 111 4");
+        assert_eq!(lines[3], "PONG");
+        assert_eq!(lines[4], "OK 200 3");
+        assert!(lines[5].starts_with("ERR"), "{}", lines[5]);
+        assert_eq!(lines[6], "BYE");
+        assert_eq!(m.requests.get(), bounds.len() as u64);
+        pool.shutdown().unwrap();
+    }
+}

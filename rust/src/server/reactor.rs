@@ -55,6 +55,7 @@ use super::{
     BatchScratch, ServerConfig, MAX_LINE_BYTES,
 };
 use crate::durability::Persistence;
+use crate::ipc::ServingPool;
 use crate::memstore::ShardedStore;
 use crate::metrics::ServerMetrics;
 use crate::runtime::AnalyticsService;
@@ -83,6 +84,10 @@ pub(crate) struct Shared {
     pub store: Arc<ShardedStore>,
     pub engine: Option<Arc<AnalyticsService>>,
     pub persist: Option<Arc<Persistence>>,
+    /// Multi-process worker pool (`serve --processes N`). Every data verb
+    /// is then a worker RPC — a blocking hop, so those lines run on the
+    /// `WorkerPool`, never on a reactor thread.
+    pub procs: Option<Arc<ServingPool>>,
     pub metrics: Arc<ServerMetrics>,
     pub stop: Arc<AtomicBool>,
     pub cfg: ServerConfig,
@@ -411,6 +416,7 @@ fn process_conn(
                 shared.engine.as_ref(),
                 shared.persist.as_deref(),
                 &shared.metrics,
+                shared.procs.as_deref(),
                 &mut conn.scratch.resp,
             );
             match outcome {
@@ -454,9 +460,13 @@ fn process_conn(
                     conn.scratch.bounds.clear();
                     // With durability on, the whole group defers its WAL
                     // sync to one group commit — a blocking fsync, so the
-                    // group executes on the pool.
-                    conn.batch =
-                        Some(BatchState { expect: n, blocking: shared.persist.is_some() });
+                    // group executes on the pool. With a multi-process
+                    // backend, the group scatter-gathers over worker RPCs —
+                    // also never on a reactor thread.
+                    conn.batch = Some(BatchState {
+                        expect: n,
+                        blocking: shared.persist.is_some() || shared.procs.is_some(),
+                    });
                 }
                 _ => {
                     conn.out.extend_from_slice(
@@ -470,7 +480,9 @@ fn process_conn(
             continue;
         }
         let blocking_verb = verb == "ANALYTICS"
-            || (shared.persist.is_some() && (verb == "UPDATE" || verb == "MUPDATE"));
+            || (shared.persist.is_some() && (verb == "UPDATE" || verb == "MUPDATE"))
+            || (shared.procs.is_some()
+                && matches!(verb, "GET" | "UPDATE" | "MGET" | "MUPDATE" | "STATS"));
         if blocking_verb {
             executed = true;
             let job =
@@ -497,6 +509,7 @@ fn process_conn(
             shared.persist.as_deref(),
             &shared.metrics,
             false,
+            shared.procs.as_deref(),
             &mut conn.out,
         );
         executed = true;
@@ -889,15 +902,17 @@ impl Frontend {
     /// Stand up the injectors, the blocking-verb pool and every reactor
     /// thread. On any failure the already-spawned reactors are stopped and
     /// joined before the error propagates.
+    #[allow(clippy::too_many_arguments)] // mirrors the Server fields 1:1
     pub(crate) fn build(
         store: Arc<ShardedStore>,
         engine: Option<Arc<AnalyticsService>>,
         persist: Option<Arc<Persistence>>,
+        procs: Option<Arc<ServingPool>>,
         metrics: Arc<ServerMetrics>,
         stop: Arc<AtomicBool>,
         cfg: ServerConfig,
     ) -> std::io::Result<Frontend> {
-        let shared = Arc::new(Shared { store, engine, persist, metrics, stop, cfg });
+        let shared = Arc::new(Shared { store, engine, persist, procs, metrics, stop, cfg });
         let n = shared.cfg.reactors.max(1);
         let mut injectors = Vec::with_capacity(n);
         for _ in 0..n {
@@ -954,6 +969,7 @@ fn run_blocking_job(shared: &Shared, injectors: &[Arc<Injector>], job: BlockingJ
                 shared.persist.as_deref(),
                 &shared.metrics,
                 false,
+                shared.procs.as_deref(),
                 &mut resp,
             );
             (req == "QUIT", false)
@@ -966,6 +982,7 @@ fn run_blocking_job(shared: &Shared, injectors: &[Arc<Injector>], job: BlockingJ
                 shared.engine.as_ref(),
                 shared.persist.as_deref(),
                 &shared.metrics,
+                shared.procs.as_deref(),
                 &mut resp,
             ) {
                 Ok(quit) => (quit, false),

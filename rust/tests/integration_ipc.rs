@@ -1,14 +1,19 @@
 //! Integration: real multi-process message passing (paper §7 future work).
 //! Spawns actual `membig ipc-worker` OS processes over Unix sockets and
 //! runs the full load → update → stats → get → shutdown workflow,
-//! cross-checked against the in-process store.
+//! cross-checked against the in-process store — plus the failure paths
+//! (worker dies before connecting / SIGKILL mid-serving), oversized-frame
+//! chunking, and the `serve --processes` TCP wire protocol end to end.
 
 use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use membig::ipc::ProcessPool;
 use membig::memstore::ShardedStore;
+use membig::server::{Client, Server, ServerConfig};
 use membig::workload::gen::{generate_stock_updates, DatasetSpec, KeyDist};
-use membig::workload::record::BookRecord;
+use membig::workload::record::{BookRecord, StockUpdate};
 
 fn membig_exe() -> PathBuf {
     PathBuf::from(env!("CARGO_BIN_EXE_membig"))
@@ -66,6 +71,146 @@ fn pool_drop_kills_workers() {
     // the test (kill + wait happens in Drop).
     let pool = ProcessPool::spawn_with_exe(2, membig_exe()).expect("spawn");
     drop(pool);
+}
+
+#[test]
+fn spawn_failure_reports_instead_of_hanging() {
+    // A worker that exits before connecting back (here: /bin/false ignores
+    // the ipc-worker argv) must surface WorkerDied promptly, not park the
+    // leader in accept() forever.
+    let t0 = Instant::now();
+    let err = ProcessPool::spawn_with_exe(1, PathBuf::from("/bin/false"))
+        .expect_err("a worker that never connects must fail the spawn");
+    assert!(t0.elapsed() < Duration::from_secs(15), "accept loop hung: {:?}", t0.elapsed());
+    let msg = err.to_string();
+    assert!(msg.contains("worker 0"), "unexpected spawn error: {msg}");
+
+    // A missing executable fails at Command::spawn — immediately.
+    ProcessPool::spawn_with_exe(1, PathBuf::from("/nonexistent/no-such-binary"))
+        .expect_err("missing exe must fail");
+}
+
+#[test]
+fn oversized_update_batch_chunks_across_frames() {
+    // 3.4M updates × 20 bytes ≈ 68 MB > MAX_FRAME (64 MiB): the leader must
+    // split the payload into multiple frames instead of letting the u32
+    // frame length wrap (the pre-fix behavior silently truncated).
+    const KEYS: u64 = 1_000;
+    const N: usize = 3_400_000;
+    let records: Vec<BookRecord> =
+        (0..KEYS).map(|i| BookRecord::new(9_780_000_000_000 + i, 100, 1)).collect();
+    let mut pool = ProcessPool::spawn_in_process(1).expect("in-process worker");
+    assert_eq!(pool.load(&records).unwrap(), KEYS);
+    let ups: Vec<StockUpdate> = (0..N)
+        .map(|i| StockUpdate {
+            isbn13: 9_780_000_000_000 + (i as u64 % KEYS),
+            new_price_cents: 100 + (i as u64 % 10_000),
+            new_quantity: (i % 7) as u32,
+        })
+        .collect();
+    let (applied, missing) = pool.update(&ups).unwrap();
+    assert_eq!((applied, missing), (N as u64, 0));
+    // The final value must reflect the *last* update per key (ordering
+    // preserved across the chunk boundary).
+    let last = pool.get(9_780_000_000_000).unwrap().expect("key loaded");
+    let want = &ups[N - KEYS as usize]; // last update targeting key 0
+    assert_eq!((last.price_cents, last.quantity), (want.new_price_cents, want.new_quantity));
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn sigkill_mid_serving_errors_instead_of_hanging() {
+    let records: Vec<BookRecord> =
+        (0..100u64).map(|i| BookRecord::new(9_780_000_000_000 + i, 100, 1)).collect();
+    let mut pool = ProcessPool::spawn_with_exe(2, membig_exe()).expect("spawn");
+    pool.load(&records).unwrap();
+    let serving = pool.into_serving();
+
+    for pid in serving.worker_pids() {
+        let st = std::process::Command::new("kill")
+            .args(["-9", &pid.to_string()])
+            .status()
+            .expect("run kill");
+        assert!(st.success(), "kill -9 {pid} failed");
+    }
+
+    // Every RPC must come back as an error within bounded time — no hangs,
+    // and the sticky dead flag makes later calls fail fast.
+    let t0 = Instant::now();
+    let mut errs = 0;
+    for i in 0..100u64 {
+        if serving.get(9_780_000_000_000 + i).is_err() {
+            errs += 1;
+        }
+    }
+    assert_eq!(errs, 100, "all RPCs against killed workers must error");
+    assert!(t0.elapsed() < Duration::from_secs(15), "RPCs hung: {:?}", t0.elapsed());
+    serving.shutdown().expect_err("shutdown after SIGKILL reports the dead workers");
+}
+
+// ---------------------------------------------------------------------------
+// `serve --processes N` wire protocol: real worker processes behind the TCP
+// front end, byte-compatible with the in-process server.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serve_with_processes_wire_protocol() {
+    let records: Vec<BookRecord> = (0..1_000u64)
+        .map(|i| BookRecord::new(9_780_000_000_000 + i, 100 + i, (i % 10) as u32))
+        .collect();
+    let mut pool = ProcessPool::spawn_with_exe(3, membig_exe()).expect("spawn");
+    pool.load(&records).unwrap();
+    let serving = Arc::new(pool.into_serving());
+
+    let cfg = ServerConfig { workers: 2, max_conns: 8, ..Default::default() };
+    let handle = Server::with_procs(serving, cfg).spawn("127.0.0.1:0").expect("bind");
+    let mut c = Client::connect(handle.addr).expect("connect");
+
+    let k0 = 9_780_000_000_000u64;
+    assert_eq!(c.request("PING").unwrap(), "PONG");
+    assert_eq!(c.request(&format!("GET {k0}")).unwrap(), "OK 100 0");
+    assert_eq!(c.request(&format!("UPDATE {k0} 777 9")).unwrap(), "OK");
+    assert_eq!(c.request(&format!("GET {k0}")).unwrap(), "OK 777 9");
+    assert_eq!(c.request("GET 42").unwrap(), "MISS");
+    assert_eq!(c.request("UPDATE 42 1 1").unwrap(), "MISS");
+
+    // Scatter-gather verbs across all three workers.
+    let mget = format!("MGET 3 {} {} 42", k0 + 1, k0 + 2);
+    assert_eq!(c.request(&mget).unwrap(), "OK 3 101,1 102,2 MISS");
+    let mupd = format!("MUPDATE {} 500 1;{} 501 2;42 1 1", k0 + 1, k0 + 2);
+    assert_eq!(c.request(&mupd).unwrap(), "OK applied=2 missed=1");
+    assert_eq!(c.request(&format!("GET {}", k0 + 1)).unwrap(), "OK 500 1");
+
+    // STATS aggregates across workers; STATS SERVER exposes RPC counters.
+    let stats = c.request("STATS").unwrap();
+    assert!(stats.starts_with("OK count=1000 "), "{stats}");
+    let sv = c.request("STATS SERVER").unwrap();
+    assert!(sv.contains("ipc_workers=3"), "{sv}");
+    assert!(sv.contains("ipc_w0_rpcs="), "{sv}");
+
+    // ANALYTICS has no records to run over in shared-nothing mode.
+    let a = c.request("ANALYTICS").unwrap();
+    assert!(a.starts_with("ERR"), "{a}");
+
+    // BATCH: point runs are grouped per worker; one reply per line, in order.
+    let lines: Vec<String> = vec![
+        format!("GET {k0}"),
+        format!("UPDATE {k0} 888 1"),
+        format!("GET {k0}"),
+        "PING".to_string(),
+        "GET nonsense".to_string(),
+    ];
+    let replies = c.batch(&lines).expect("batch");
+    assert_eq!(replies.len(), lines.len());
+    assert_eq!(replies[0], "OK 777 9");
+    assert_eq!(replies[1], "OK");
+    assert_eq!(replies[2], "OK 888 1");
+    assert_eq!(replies[3], "PONG");
+    assert!(replies[4].starts_with("ERR"), "{}", replies[4]);
+
+    let reset = c.request("STATS RESET").unwrap();
+    assert!(reset.starts_with("OK epoch="), "{reset}");
+    assert_eq!(c.request("QUIT").unwrap(), "BYE");
 }
 
 // ---------------------------------------------------------------------------
