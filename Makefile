@@ -13,11 +13,17 @@
 #                    bit-rot fast and emits machine-readable
 #                    BENCH_<name>.json reports at the repo root (wired
 #                    into CI, uploaded as artifacts)
+#   make lint        repo-specific static checks (cargo xtask lint) plus
+#                    the lint engine's own tests
+#   make miri        UB-check the unsafe core under Miri (nightly; small
+#                    cfg(miri) lane sizes — see DESIGN.md §13)
+#   make tsan        ThreadSanitizer over the racecheck-perturbed stress
+#                    suites (nightly + rust-src)
 #   make clean       drop build + bench outputs
 
 ARTIFACTS_DIR := $(abspath rust/artifacts)
 
-.PHONY: artifacts build test check-pjrt bench bench-smoke clean
+.PHONY: artifacts build test check-pjrt bench bench-smoke lint miri tsan clean
 
 artifacts:
 	cd python && python -m compile.aot --out $(ARTIFACTS_DIR)
@@ -51,6 +57,21 @@ bench:
 #    (idle connections must cost <10%).
 bench-smoke:
 	cd rust && MEMBIG_BENCH_SCALE=100 cargo bench --bench analytics --bench hashtable --bench server_throughput --bench recovery --bench ipc_scaleout
+
+lint:
+	cd rust && cargo xtask lint
+	cd rust && cargo test -q -p xtask
+
+# Separate invocations per target: Miri interprets each test binary and a
+# failure in one suite shouldn't hide the others' results.
+miri:
+	cd rust && MIRIFLAGS=-Zmiri-disable-isolation cargo +nightly miri test --lib -- memstore:: pipeline::channel::
+	cd rust && MIRIFLAGS=-Zmiri-disable-isolation cargo +nightly miri test --test stress_seqlock
+	cd rust && MIRIFLAGS=-Zmiri-disable-isolation cargo +nightly miri test --test prop_memstore
+
+tsan:
+	cd rust && RUSTFLAGS=-Zsanitizer=thread TSAN_OPTIONS=halt_on_error=1 cargo +nightly test --features racecheck -Zbuild-std --target x86_64-unknown-linux-gnu --test stress_seqlock
+	cd rust && RUSTFLAGS=-Zsanitizer=thread TSAN_OPTIONS=halt_on_error=1 cargo +nightly test --features racecheck -Zbuild-std --target x86_64-unknown-linux-gnu --lib -- memstore:: pipeline::channel:: util::racecheck::
 
 clean:
 	cd rust && cargo clean

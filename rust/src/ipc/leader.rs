@@ -24,6 +24,7 @@ use super::proto::{
 };
 use crate::metrics::IpcMetrics;
 use crate::storage::index::hash_key;
+use crate::util::racecheck;
 use crate::workload::record::{BookRecord, StockUpdate, RECORD_BYTES};
 
 /// Records per `Load` frame: the largest whole-record count whose frame
@@ -221,6 +222,9 @@ impl ProcessPool {
                     return Ok(stream);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    // Widen the accept-vs-child-exit race: a worker that
+                    // connects and dies must never be misread as a timeout.
+                    racecheck::perturb("ipc.accept.poll");
                     if let Some(status) = child.try_wait()? {
                         return Err(IpcError::WorkerDied { worker, status: status.code() });
                     }
@@ -398,6 +402,9 @@ impl ProcessPool {
 
     /// Convert the loaded pool into the concurrent serving backend.
     pub fn into_serving(mut self) -> ServingPool {
+        // The handoff moves every connection from single-caller to
+        // mutex-shared use; any RPC still in flight here is a protocol bug.
+        racecheck::perturb("ipc.handoff");
         let workers: Vec<Mutex<ServingWorker>> = std::mem::take(&mut self.workers)
             .into_iter()
             .map(|conn| Mutex::new(ServingWorker { conn, dead: false }))
@@ -533,6 +540,10 @@ impl ServingPool {
         let res = (|| -> Result<Response, IpcError> {
             req.write_to(&mut g.conn.writer)?;
             g.conn.writer.flush()?;
+            // Window between flush and read: concurrent call_one() calls on
+            // *other* workers interleave here; this worker's lock is held,
+            // so request/response frames must stay paired per connection.
+            racecheck::perturb("ipc.rpc.roundtrip");
             Ok(Response::read_from(&mut g.conn.reader)?)
         })();
         match &res {
@@ -573,6 +584,11 @@ impl ServingPool {
                 first_err.get_or_insert(e);
             }
         }
+        // All frames are in flight; workers chew their shares in parallel
+        // while this thread still holds every touched lock. Concurrent
+        // scatters queue on the ascending-order locks — widen the window
+        // where that ordering is what prevents deadlock.
+        racecheck::perturb("ipc.scatter.gather");
         for (gi, (i, g)) in guards.iter_mut().enumerate() {
             if !sent[gi] {
                 continue;

@@ -123,8 +123,12 @@ fn encode_update(u: &StockUpdate, out: &mut Vec<u8>) {
 
 fn decode_update(b: &[u8]) -> StockUpdate {
     StockUpdate {
+        // lint:allow(hot-path-panic): fixed-width subslices of a length the
+        // caller already validated — try_into on `[u8; N]` cannot fail.
         isbn13: u64::from_le_bytes(b[0..8].try_into().unwrap()),
+        // lint:allow(hot-path-panic): as above.
         new_price_cents: u64::from_le_bytes(b[8..16].try_into().unwrap()),
+        // lint:allow(hot-path-panic): as above.
         new_quantity: u32::from_le_bytes(b[16..20].try_into().unwrap()),
     }
 }
@@ -242,6 +246,8 @@ impl Request {
                 if payload.len() != 8 {
                     return Err(ProtoError::Malformed(tag, format!("len {}", payload.len())));
                 }
+                // lint:allow(hot-path-panic): length == 8 checked above;
+                // try_into on the fixed subslice cannot fail.
                 Ok(Request::Get(u64::from_le_bytes(payload[..8].try_into().unwrap())))
             }
             TAG_SHUTDOWN => Ok(Request::Shutdown),
@@ -252,6 +258,8 @@ impl Request {
                 Ok(Request::GetMany(
                     payload
                         .chunks_exact(8)
+                        // lint:allow(hot-path-panic): chunks_exact(8) only
+                        // yields 8-byte slices; try_into cannot fail.
                         .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
                         .collect(),
                 ))
@@ -333,6 +341,8 @@ impl Response {
 
     fn decode_frame(tag: u8, payload: Vec<u8>, allow_group: bool) -> Result<Self, ProtoError> {
         let u64_at = |off: usize| -> u64 {
+            // lint:allow(hot-path-panic): every call site sits behind an
+            // exact payload-length guard; the 8-byte subslice always exists.
             u64::from_le_bytes(payload[off..off + 8].try_into().unwrap())
         };
         match tag {

@@ -23,6 +23,15 @@
 //! See `DESIGN.md` (repo root) for the full system inventory and the
 //! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
 
+// Correctness wall (DESIGN.md §13): `unsafe` is confined to the three
+// whitelisted modules — `memstore/hashtable.rs`, `memstore/shard.rs`,
+// `server/sys.rs` — each of which opens with `#![allow(unsafe_code)]`.
+// Everything else is denied here, every unsafe fn body must re-assert its
+// own obligations, and `cargo xtask lint` additionally enforces a
+// `// SAFETY:` comment on every unsafe block.
+#![deny(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod baseline;
 pub mod config;
 pub mod ipc;

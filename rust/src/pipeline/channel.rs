@@ -12,6 +12,8 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::util::racecheck;
+
 #[derive(Debug, PartialEq, Eq)]
 pub struct SendError<T>(pub T);
 
@@ -90,6 +92,9 @@ impl<T> Sender<T> {
                 return Ok(());
             }
             self.shared.send_blocks.fetch_add(1, Ordering::Relaxed);
+            // About to park on `not_full` (lock still held): the symmetric
+            // close-vs-park window to the receiver side.
+            racecheck::perturb("channel.send.park");
             q = self.shared.not_full.wait(q).unwrap();
         }
     }
@@ -133,6 +138,13 @@ impl<T> Receiver<T> {
                 return Err(RecvError::Closed);
             }
             self.shared.recv_blocks.fetch_add(1, Ordering::Relaxed);
+            // About to park on `not_empty` (lock still held). This is the
+            // lost-wakeup window the PR-2 fix closes: the last sender's
+            // notify must not be able to slip between the `senders` check
+            // above and the `wait` below — it can't, because Drop notifies
+            // under this same lock. The deterministic test in this module
+            // holds a victim thread here to prove it.
+            racecheck::perturb("channel.recv.park");
             q = self.shared.not_empty.wait(q).unwrap();
         }
     }
@@ -173,6 +185,10 @@ impl<T> Clone for Receiver<T> {
 impl<T> Drop for Sender<T> {
     fn drop(&mut self) {
         if self.shared.senders.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Window between the count reaching zero and the wakeup: a
+            // receiver can check `senders`, see zero, and return Closed on
+            // its own — or see the pre-drop value and head for the condvar.
+            racecheck::perturb("channel.close.sender");
             // Last sender: wake all receivers so they observe Closed. The
             // queue lock must be held while notifying — without it, a
             // receiver that has already checked `senders` (nonzero) but not
@@ -187,6 +203,8 @@ impl<T> Drop for Sender<T> {
 impl<T> Drop for Receiver<T> {
     fn drop(&mut self) {
         if self.shared.receivers.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Same close-vs-park window as `Sender::drop`, sender side.
+            racecheck::perturb("channel.close.receiver");
             // Last receiver: wake all senders so they observe Closed (lock
             // held for the same lost-wakeup reason as Sender::drop).
             let _q = self.shared.queue.lock().unwrap();
@@ -246,7 +264,9 @@ mod tests {
     fn mpmc_all_items_delivered_once() {
         const SENDERS: usize = 4;
         const RECEIVERS: usize = 3;
-        const PER_SENDER: usize = 10_000;
+        // Miri executes every interleaving step in an interpreter; the
+        // protocol coverage is identical at a fraction of the N.
+        const PER_SENDER: usize = if cfg!(miri) { 200 } else { 10_000 };
         let (tx, rx) = bounded::<usize>(32);
         let got = std::sync::Mutex::new(Vec::new());
         std::thread::scope(|s| {
@@ -284,19 +304,68 @@ mod tests {
         // Stress the close-vs-park window: the receiver may or may not be
         // waiting on the condvar when the last sender drops. A lost wakeup
         // hangs this test (visible as a suite timeout).
-        for _ in 0..200 {
+        let rounds = if cfg!(miri) { 20 } else { 200 };
+        for _ in 0..rounds {
             let (tx, rx) = bounded::<u32>(1);
             let t = std::thread::spawn(move || rx.recv());
             drop(tx);
             assert_eq!(t.join().unwrap(), Err(RecvError::Closed));
         }
-        for _ in 0..200 {
+        for _ in 0..rounds {
             let (tx, rx) = bounded::<u32>(1);
             tx.send(0).unwrap(); // fill so the sender side must block
             let t = std::thread::spawn(move || tx.send(1));
             drop(rx);
             assert_eq!(t.join().unwrap(), Err(SendError(1)));
         }
+    }
+
+    /// Deterministic replay of the PR-2 lost-wakeup bug, not a stress
+    /// sample: a racecheck hook holds a victim receiver *inside* the park
+    /// window — `senders` already checked (nonzero), queue lock still
+    /// held, condvar not yet waited on — while the main thread drops the
+    /// last sender. Because `Sender::drop` notifies under the queue lock,
+    /// the drop cannot complete until the victim reaches `wait`, so the
+    /// wakeup is ordered after the park and `recv` returns `Closed`. If
+    /// the notify is ever moved back outside the lock, it fires into this
+    /// exact window, the victim parks forever, and the timeout below
+    /// fails the test.
+    #[test]
+    #[cfg(feature = "racecheck")]
+    fn close_vs_recv_deterministic_interleaving() {
+        use std::sync::mpsc;
+
+        let _serial = racecheck::hook_tests_guard();
+
+        let (reached_tx, reached_rx) = mpsc::channel::<()>();
+        // `mpsc::Sender` is `Send` but not `Sync`; the hook must be `Sync`.
+        let reached_tx = std::sync::Mutex::new(reached_tx);
+        racecheck::set_hook(move |point| {
+            let victim = std::thread::current().name() == Some("racecheck-victim");
+            if point == "channel.recv.park" && victim {
+                let _ = reached_tx.lock().unwrap().send(());
+                // Keep the window open long enough for the main thread to
+                // run the whole `drop(tx)` path against it.
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        });
+
+        let (tx, rx) = bounded::<u32>(1);
+        let (done_tx, done_rx) = mpsc::channel();
+        std::thread::Builder::new()
+            .name("racecheck-victim".into())
+            .spawn(move || {
+                let _ = done_tx.send(rx.recv());
+            })
+            .unwrap();
+        // Wait until the victim is provably inside the window, then close.
+        reached_rx.recv().expect("victim never reached the park window");
+        drop(tx);
+        let got = done_rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("lost close wakeup: victim parked forever (notify outside the queue lock?)");
+        assert_eq!(got, Err(RecvError::Closed));
+        racecheck::clear_hook();
     }
 
     #[test]

@@ -496,6 +496,8 @@ pub fn dispatch_ctx(line: &str, ctx: &RequestCtx<'_>, in_batch: bool) -> String 
     let mut out = Vec::with_capacity(64);
     dispatch_into(line, ctx, in_batch, &mut out);
     out.pop(); // the newline dispatch_into frames with
+    // lint:allow(hot-path-panic): test/REPL convenience path, never taken by
+    // the server; dispatch_into only emits ASCII + echoed UTF-8 input.
     String::from_utf8(out).expect("responses echo valid-UTF-8 requests")
 }
 

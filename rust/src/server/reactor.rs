@@ -132,11 +132,14 @@ impl Injector {
     }
 
     fn push(&self, msg: Msg) {
+        // lint:allow(hot-path-panic): lock poisoning means a reactor thread
+        // already panicked — propagating is the correct response.
         self.queue.lock().unwrap().push_back(msg);
         self.wake.signal();
     }
 
     fn drain(&self) -> VecDeque<Msg> {
+        // lint:allow(hot-path-panic): same poisoning rationale as `push`.
         std::mem::take(&mut *self.queue.lock().unwrap())
     }
 }
@@ -367,6 +370,8 @@ fn process_conn(
                 conn.closing = true;
                 break;
             }
+            // lint:allow(hot-path-panic): guarded by the `is_some` branch
+            // this arm sits in; a None here is a state-machine bug.
             let st = conn.batch.as_mut().expect("checked is_some above");
             if is_analytics {
                 st.blocking = true;
@@ -685,6 +690,8 @@ impl Reactor {
 
     /// Drain the socket until `EWOULDBLOCK` (or EOF). `false` = hard error.
     fn read_socket(&mut self, slot: usize) -> bool {
+        // lint:allow(hot-path-panic): `on_event` verified the slot is live;
+        // a None here is reactor-bookkeeping corruption worth crashing on.
         let conn = self.conns[slot].as_mut().expect("checked by on_event");
         let mut chunk = [0u8; READ_CHUNK];
         loop {
@@ -716,6 +723,8 @@ impl Reactor {
     fn advance(&mut self, slot: usize) {
         let mut dead = false;
         loop {
+            // lint:allow(hot-path-panic): callers only invoke `advance` on
+            // live slots; slot bookkeeping is the invariant being asserted.
             let conn = self.conns[slot].as_mut().expect("advance on live conn");
             let pend_before = conn.pending_out();
             if !flush_out(conn) {
@@ -742,6 +751,8 @@ impl Reactor {
     fn update_interest_or_close(&mut self, slot: usize, dead: bool) {
         let verdict = {
             let cap = self.shared.cfg.write_buf_cap;
+            // lint:allow(hot-path-panic): only reached from `advance`, which
+            // already asserted the slot is live.
             let conn = self.conns[slot].as_mut().expect("live conn");
             if dead {
                 Verdict::Close
@@ -774,6 +785,8 @@ impl Reactor {
         match verdict {
             Verdict::Keep(want) => {
                 let fd = {
+                    // lint:allow(hot-path-panic): same live-slot invariant
+                    // as the verdict block directly above.
                     let conn = self.conns[slot].as_mut().expect("live conn");
                     if conn.interest == want {
                         return;
@@ -803,6 +816,8 @@ impl Reactor {
             return;
         }
         {
+            // lint:allow(hot-path-panic): the `live` generation check above
+            // guarantees the slot holds this connection.
             let conn = self.conns[slot].as_mut().expect("checked live above");
             conn.blocked = false;
             conn.out.extend_from_slice(&resp);

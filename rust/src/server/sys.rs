@@ -14,6 +14,9 @@
 //! (taking a reference into a packed struct is UB).
 
 #![cfg(target_os = "linux")]
+// Whitelisted exception to the crate-root `#![deny(unsafe_code)]` — the one
+// module allowed to speak raw FFI (see DESIGN.md §13).
+#![allow(unsafe_code)]
 
 use std::io;
 use std::os::raw::{c_int, c_uint, c_void};
@@ -104,12 +107,16 @@ pub struct Epoll {
 
 impl Epoll {
     pub fn new() -> io::Result<Epoll> {
+        // SAFETY: no pointer arguments; the returned fd (or -1) is checked
+        // by `cvt` and, once wrapped, owned and closed exactly once in Drop.
         let fd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
         Ok(Epoll { fd })
     }
 
     fn ctl(&self, op: c_int, fd: c_int, interest: u32, token: u64) -> io::Result<()> {
         let mut ev = EpollEvent { events: interest, data: token };
+        // SAFETY: `ev` is a live, properly laid-out `EpollEvent` (#[repr(C)],
+        // kernel ABI) for the whole call; the kernel only reads it.
         cvt(unsafe { epoll_ctl(self.fd, op, fd, &mut ev) }).map(|_| ())
     }
 
@@ -128,6 +135,8 @@ impl Epoll {
     /// DEL is the reliable path.
     pub fn delete(&self, fd: c_int) -> io::Result<()> {
         let mut ev = EpollEvent::zeroed(); // ignored for DEL; non-null for pre-2.6.9 ABI
+        // SAFETY: same contract as `ctl` — `ev` outlives the call and the
+        // kernel treats it as read-only (and ignores it for DEL).
         cvt(unsafe { epoll_ctl(self.fd, EPOLL_CTL_DEL, fd, &mut ev) }).map(|_| ())
     }
 
@@ -142,6 +151,10 @@ impl Epoll {
             Some(d) => d.as_millis().saturating_add(1).min(c_int::MAX as u128) as c_int,
         };
         loop {
+            // SAFETY: the out-pointer and capacity both come from the same
+            // live slice, so the kernel writes at most `events.len()`
+            // entries into memory we exclusively borrow; every `EpollEvent`
+            // bit pattern is a valid value.
             let n = unsafe {
                 epoll_wait(self.fd, events.as_mut_ptr(), events.len() as c_int, timeout_ms)
             };
@@ -158,12 +171,17 @@ impl Epoll {
 
 impl Drop for Epoll {
     fn drop(&mut self) {
+        // SAFETY: `self.fd` is the epoll fd this wrapper exclusively owns;
+        // Drop runs once, so it is closed exactly once.
         unsafe { close(self.fd) };
     }
 }
 
-// Owned fd + &self methods that only issue thread-safe syscalls.
+// SAFETY: the wrapper owns its fd, and every `&self` method only issues
+// syscalls the kernel serializes internally — no thread-affine state.
 unsafe impl Send for Epoll {}
+// SAFETY: as above; concurrent `wait`/`ctl` from several threads is a
+// supported epoll usage pattern.
 unsafe impl Sync for Epoll {}
 
 // ---------------------------------------------------------------------------
@@ -179,6 +197,8 @@ pub struct EventFd {
 
 impl EventFd {
     pub fn new() -> io::Result<EventFd> {
+        // SAFETY: no pointer arguments; the returned fd (or -1) is checked
+        // by `cvt` and, once wrapped, owned and closed exactly once in Drop.
         let fd = cvt(unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) })?;
         Ok(EventFd { fd })
     }
@@ -190,6 +210,8 @@ impl EventFd {
     /// Bump the counter: wakes (or pre-wakes) whoever polls this fd.
     pub fn signal(&self) {
         let one: u64 = 1;
+        // SAFETY: the buffer is a live 8-byte local and the count says 8;
+        // eventfd writes are atomic counter adds, safe from any thread.
         let _ = unsafe { write(self.fd, &one as *const u64 as *const c_void, 8) };
     }
 
@@ -197,17 +219,25 @@ impl EventFd {
     /// returns-and-zeroes the whole counter).
     pub fn drain(&self) {
         let mut v: u64 = 0;
+        // SAFETY: the out-buffer is a live, exclusively-borrowed 8-byte
+        // local and the count says 8 — the kernel writes at most that.
         let _ = unsafe { read(self.fd, &mut v as *mut u64 as *mut c_void, 8) };
     }
 }
 
 impl Drop for EventFd {
     fn drop(&mut self) {
+        // SAFETY: `self.fd` is the eventfd this wrapper exclusively owns;
+        // Drop runs once, so it is closed exactly once.
         unsafe { close(self.fd) };
     }
 }
 
+// SAFETY: owned fd; `signal`/`drain` are single atomic syscalls on an
+// eventfd, explicitly designed for cross-thread use.
 unsafe impl Send for EventFd {}
+// SAFETY: as above — concurrent signal/drain from many threads is the
+// primitive's intended usage.
 unsafe impl Sync for EventFd {}
 
 // ---------------------------------------------------------------------------
@@ -221,6 +251,8 @@ unsafe impl Sync for EventFd {}
 /// limit is returned unchanged.
 pub fn raise_nofile_limit(want: u64) -> u64 {
     let mut rl = RLimit { rlim_cur: 0, rlim_max: 0 };
+    // SAFETY: `rl` is a live `#[repr(C)]` local matching the kernel's
+    // `struct rlimit` layout; the kernel fills exactly that struct.
     if unsafe { getrlimit(RLIMIT_NOFILE, &mut rl) } != 0 {
         return 0;
     }
@@ -229,6 +261,7 @@ pub fn raise_nofile_limit(want: u64) -> u64 {
     }
     let new_cur = want.min(rl.rlim_max);
     let new = RLimit { rlim_cur: new_cur, rlim_max: rl.rlim_max };
+    // SAFETY: `new` is a live `#[repr(C)]` local; the kernel only reads it.
     if unsafe { setrlimit(RLIMIT_NOFILE, &new) } == 0 {
         new_cur
     } else {

@@ -10,6 +10,7 @@ pub mod csv;
 pub mod fmt;
 pub mod json;
 pub mod prop;
+pub mod racecheck;
 pub mod rng;
 
 /// Round `n` up to the next multiple of `m` (m > 0).

@@ -1,0 +1,165 @@
+//! Deterministic race amplification for the `racecheck` feature.
+//!
+//! The seqlock read path, the channel close protocol and the ipc spawn
+//! handoff are correct only because of narrow happens-before edges; a plain
+//! stress run samples the schedule *around* those windows far more often
+//! than it drives threads *through* them. Building with
+//! `--features racecheck` compiles a [`perturb`] call into each named
+//! window (see the table in DESIGN.md §13): every call runs a cheap
+//! deterministic xorshift and, depending on the draw, yields the thread or
+//! burns a short spin — so the ThreadSanitizer lane and the stress suites
+//! spend their iterations inside the windows instead of skipping past them.
+//!
+//! Two extra facilities exist only under the feature:
+//!
+//! - **Test hooks** ([`set_hook`]/[`clear_hook`]): a test can register a
+//!   process-wide callback that fires at every perturbation point *before*
+//!   the random delay. This is how the deterministic close-vs-recv
+//!   interleaving test in `pipeline::channel` parks a victim thread exactly
+//!   inside the lost-wakeup window. Hooks run on the perturbed thread and
+//!   may block; they must not touch the synchronization primitive that owns
+//!   the point being perturbed.
+//! - **Point counters** ([`hits`]): total perturbation calls, so a lane can
+//!   assert the perturbed schedule actually executed.
+//!
+//! Default builds compile [`perturb`] to an empty `#[inline(always)]`
+//! function — zero cost on every hot path that names a point.
+
+/// No-op in default builds: the call compiles away entirely.
+#[cfg(not(feature = "racecheck"))]
+#[inline(always)]
+pub fn perturb(_point: &'static str) {}
+
+#[cfg(feature = "racecheck")]
+pub use imp::{clear_hook, hits, hook_tests_guard, perturb, set_hook};
+
+#[cfg(feature = "racecheck")]
+mod imp {
+    use std::cell::Cell;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Arc, Mutex, OnceLock};
+
+    type Hook = Arc<dyn Fn(&'static str) + Send + Sync>;
+
+    fn hook_slot() -> &'static Mutex<Option<Hook>> {
+        static SLOT: OnceLock<Mutex<Option<Hook>>> = OnceLock::new();
+        SLOT.get_or_init(|| Mutex::new(None))
+    }
+
+    /// Total perturbation-point executions across all threads.
+    static HITS: AtomicU64 = AtomicU64::new(0);
+
+    /// Monotonic seed source so each thread gets a distinct deterministic
+    /// schedule without consulting the clock (Miri- and replay-friendly).
+    static NEXT_SEED: AtomicU64 = AtomicU64::new(1);
+
+    thread_local! {
+        static STATE: Cell<u64> = Cell::new(0);
+    }
+
+    /// Register a process-wide hook observing every perturbation point.
+    /// Replaces any previous hook. Intended for tests that need to hold a
+    /// specific thread inside a specific window; filter on `point` (and, if
+    /// several tests share the process, on `std::thread::current().name()`).
+    pub fn set_hook(f: impl Fn(&'static str) + Send + Sync + 'static) {
+        *hook_slot().lock().unwrap_or_else(|e| e.into_inner()) = Some(Arc::new(f));
+    }
+
+    /// Remove the hook installed by [`set_hook`].
+    pub fn clear_hook() {
+        *hook_slot().lock().unwrap_or_else(|e| e.into_inner()) = None;
+    }
+
+    /// The hook slot is process-wide and `cargo test` runs tests in
+    /// parallel: every test that installs a hook must hold this guard for
+    /// its whole body so two tests never clobber each other's hook.
+    pub fn hook_tests_guard() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// How many perturbation points have executed so far (all threads).
+    pub fn hits() -> u64 {
+        HITS.load(Ordering::Relaxed)
+    }
+
+    /// Execute one perturbation point: run the hook (if any), then a
+    /// deterministic draw between proceeding immediately, yielding to the
+    /// scheduler, or spinning briefly — the mix that most reliably lands
+    /// *other* threads inside this thread's open window.
+    pub fn perturb(point: &'static str) {
+        HITS.fetch_add(1, Ordering::Relaxed);
+        let hook = hook_slot().lock().unwrap_or_else(|e| e.into_inner()).clone();
+        if let Some(h) = hook {
+            h(point);
+        }
+        let draw = STATE.with(|s| {
+            let mut x = s.get();
+            if x == 0 {
+                // First use on this thread: derive a per-thread seed.
+                x = NEXT_SEED.fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed) | 1;
+            }
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            s.set(x);
+            x
+        });
+        match draw % 4 {
+            // Yield half the time: on a loaded CI box this is what actually
+            // hands the core to the racing thread.
+            0 | 1 => std::thread::yield_now(),
+            // Short spin: keeps the window open without a syscall.
+            2 => {
+                for _ in 0..(draw >> 8) % 128 {
+                    std::hint::spin_loop();
+                }
+            }
+            // Proceed immediately: the unperturbed interleaving must stay
+            // in the sampled mix too.
+            _ => {}
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn perturb_counts_and_hook_fires() {
+            let _serial = hook_tests_guard();
+            let seen = Arc::new(Mutex::new(Vec::new()));
+            let seen2 = Arc::clone(&seen);
+            set_hook(move |p| {
+                if p == "racecheck.selftest" {
+                    seen2.lock().unwrap().push(p);
+                }
+            });
+            let before = hits();
+            for _ in 0..16 {
+                perturb("racecheck.selftest");
+            }
+            clear_hook();
+            perturb("racecheck.selftest"); // hook gone: must not fire
+            assert!(hits() >= before + 17);
+            assert_eq!(seen.lock().unwrap().len(), 16);
+        }
+
+        #[test]
+        fn distinct_threads_get_distinct_schedules() {
+            // Smoke only: perturb from several threads concurrently; the
+            // draws must not panic and the counter must see all of them.
+            let before = hits();
+            std::thread::scope(|s| {
+                for _ in 0..4 {
+                    s.spawn(|| {
+                        for _ in 0..100 {
+                            perturb("racecheck.threads");
+                        }
+                    });
+                }
+            });
+            assert!(hits() >= before + 400);
+        }
+    }
+}

@@ -1,6 +1,11 @@
 //! Property tests over the memory store (the paper's core data structure):
 //! differential testing vs std::HashMap, routing/sharding invariants,
 //! order-independence of the update workload, and writeback round-trips.
+//!
+//! Under Miri (DESIGN.md §13) case counts and per-case sizes shrink to
+//! interpreter scale: the properties are size-independent, and Miri checks
+//! the aliasing/atomics model on every execution, so a handful of cases
+//! buys the same coverage minutes of native fuzzing cannot.
 
 use membig::memstore::{HashTable, ShardedStore};
 use membig::util::prop::Prop;
@@ -12,12 +17,30 @@ fn arb_record(rng: &mut Rng) -> BookRecord {
     BookRecord::new(rng.gen_range(1 << 20) + 1, rng.gen_range(1000), rng.gen_range(500) as u32)
 }
 
+/// Property cases per test: native count, or a Miri-sized handful.
+fn cases(native: u64) -> u64 {
+    if cfg!(miri) {
+        3
+    } else {
+        native
+    }
+}
+
+/// Upper bound for per-case collection sizes, shrunk under Miri.
+fn sized(native: usize, miri: usize) -> usize {
+    if cfg!(miri) {
+        miri
+    } else {
+        native
+    }
+}
+
 #[test]
 fn prop_hashtable_behaves_like_hashmap() {
-    Prop::new("hashtable ≡ HashMap under random op sequences").cases(60).run(|rng| {
+    Prop::new("hashtable ≡ HashMap under random op sequences").cases(cases(60)).run(|rng| {
         let mut ours = HashTable::new();
         let mut reference = std::collections::HashMap::<u64, BookRecord>::new();
-        let ops = rng.range_usize(1, 2_000);
+        let ops = rng.range_usize(1, sized(2_000, 100));
         for _ in 0..ops {
             let key = rng.gen_range(500) + 1;
             match rng.gen_range(5) {
@@ -53,10 +76,10 @@ fn prop_hashtable_behaves_like_hashmap() {
 
 #[test]
 fn prop_value_sum_is_exact() {
-    Prop::new("value_sum_cents equals naive fold").cases(40).run(|rng| {
+    Prop::new("value_sum_cents equals naive fold").cases(cases(40)).run(|rng| {
         let mut t = HashTable::new();
         let mut expect = std::collections::HashMap::new();
-        for _ in 0..rng.range_usize(1, 3_000) {
+        for _ in 0..rng.range_usize(1, sized(3_000, 200)) {
             let r = arb_record(rng);
             t.insert(r);
             expect.insert(r.isbn13, r);
@@ -71,10 +94,10 @@ fn prop_value_sum_is_exact() {
 
 #[test]
 fn prop_routing_is_total_and_stable() {
-    Prop::new("every key routes to exactly one shard, stably").cases(40).run(|rng| {
+    Prop::new("every key routes to exactly one shard, stably").cases(cases(40)).run(|rng| {
         let shards = rng.range_usize(1, 33);
         let store = ShardedStore::new(shards, 64);
-        for _ in 0..500 {
+        for _ in 0..sized(500, 100) {
             let key = rng.next_u64() | 1;
             let s1 = store.route(key);
             let s2 = store.route(key);
@@ -87,9 +110,9 @@ fn prop_routing_is_total_and_stable() {
 
 #[test]
 fn prop_update_order_is_irrelevant_for_distinct_keys() {
-    Prop::new("permuting distinct-key updates does not change final state").cases(30).run(
+    Prop::new("permuting distinct-key updates does not change final state").cases(cases(30)).run(
         |rng| {
-            let n = rng.range_usize(10, 800);
+            let n = rng.range_usize(10, sized(800, 100));
             let records: Vec<BookRecord> =
                 (1..=n as u64).map(|k| BookRecord::new(k, 1, 1)).collect();
             let mut updates: Vec<StockUpdate> = records
@@ -122,7 +145,7 @@ fn prop_update_order_is_irrelevant_for_distinct_keys() {
 
 #[test]
 fn prop_duplicate_key_updates_last_writer_wins() {
-    Prop::new("sequential duplicate updates: last writer wins").cases(30).run(|rng| {
+    Prop::new("sequential duplicate updates: last writer wins").cases(cases(30)).run(|rng| {
         let store = ShardedStore::new(2, 64);
         store.insert(BookRecord::new(7, 0, 0));
         let k = rng.range_usize(2, 50);
@@ -148,18 +171,18 @@ fn prop_batch_ops_equal_sequential_ops() {
     // equivalent to per-key calls: get_many ≡ map(get) in input order, and
     // apply_many ≡ sequential apply (same counts, same final state) even
     // with duplicate and missing keys in the batch.
-    Prop::new("get_many/apply_many ≡ sequential get/apply").cases(40).run(|rng| {
+    Prop::new("get_many/apply_many ≡ sequential get/apply").cases(cases(40)).run(|rng| {
         let shards = rng.range_usize(1, 9);
         let store = ShardedStore::new(shards, 256);
         let mirror = ShardedStore::new(shards, 256);
-        let n = rng.range_usize(1, 400);
+        let n = rng.range_usize(1, sized(400, 100));
         for k in 1..=n as u64 {
             let r = BookRecord::new(k, rng.gen_range(1000), rng.gen_range(500) as u32);
             store.insert(r);
             mirror.insert(r);
         }
         // Random batch: ~1/4 missing keys, duplicates allowed.
-        let m = rng.range_usize(1, 300);
+        let m = rng.range_usize(1, sized(300, 80));
         let ups: Vec<StockUpdate> = (0..m)
             .map(|_| StockUpdate {
                 isbn13: rng.gen_range(n as u64 + n as u64 / 4 + 2) + 1,
@@ -196,7 +219,7 @@ fn prop_batch_ops_equal_sequential_ops() {
 
 #[test]
 fn prop_record_encoding_roundtrips() {
-    Prop::new("BookRecord encode/decode roundtrip + corruption detection").cases(100).run(
+    Prop::new("BookRecord encode/decode roundtrip + corruption detection").cases(cases(100)).run(
         |rng| {
             let rec = BookRecord::new(rng.next_u64() | 1, rng.next_u64() >> 20, rng.next_u32());
             let enc = rec.encode();

@@ -9,6 +9,13 @@
 //! writers only ever replace a record with another invariant-preserving
 //! pair, so any violation observed by a reader is a torn read escaping the
 //! seqlock validation.
+//!
+//! Lane-sized N (DESIGN.md §13): under Miri the iteration counts shrink to
+//! interpreter scale — the aliasing/atomics model checks every execution, so
+//! volume buys nothing. Under `--features racecheck` (the TSan lane) counts
+//! shrink moderately: perturbation makes each iteration slower but far more
+//! likely to land inside a seqlock window, so the sampled schedule space per
+//! iteration is much denser than in a plain stress run.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -48,10 +55,17 @@ fn concurrent_readers_never_observe_torn_or_missing_records() {
     // Deliberately tiny capacity hint: the insert writer forces repeated
     // table growth (bucket-array reallocation) while readers probe.
     let store = Arc::new(ShardedStore::new(4, 16));
-    const COMMITTED: u64 = 2_000; // present before any reader starts
-    const EXTRA: u64 = 6_000; // inserted live → growth under fire
+    // Present before any reader starts / inserted live (growth under fire).
+    const COMMITTED: u64 = if cfg!(miri) { 128 } else { 2_000 };
+    const EXTRA: u64 = if cfg!(miri) { 256 } else { 6_000 };
     const READERS: usize = 3;
-    const READER_ITERS: usize = 30_000;
+    const READER_ITERS: usize = if cfg!(miri) {
+        400
+    } else if cfg!(feature = "racecheck") {
+        4_000
+    } else {
+        30_000
+    };
     for k in 1..=COMMITTED {
         store.insert(invariant_rec(k, (k % 900) as u32 + 1));
     }
@@ -180,7 +194,7 @@ fn mixed_get_and_get_many_agree_under_concurrent_churn() {
     // either the old or the new committed value of a key — both invariant-
     // preserving — and get/get_many never disagree about presence.
     let store = Arc::new(ShardedStore::new(2, 32));
-    const N: u64 = 500;
+    const N: u64 = if cfg!(miri) { 100 } else { 500 };
     for k in 1..=N {
         store.insert(invariant_rec(k, 1));
     }
@@ -201,7 +215,8 @@ fn mixed_get_and_get_many_agree_under_concurrent_churn() {
             }
         });
         let keys: Vec<u64> = (1..=N).collect();
-        for _ in 0..300 {
+        let rounds = if cfg!(miri) { 10 } else { 300 };
+        for _ in 0..rounds {
             for (i, v) in store.get_many(&keys).iter().enumerate() {
                 let r = v.expect("present key vanished");
                 assert_untorn(keys[i], &r);
