@@ -55,8 +55,10 @@ bench:
 #    1024 open-but-idle conns vs active MUPDATE throughput on a 2-reactor
 #    server, gated so the largest tier keeps >=90% of 0-idle throughput
 #    (idle connections must cost <10%).
+# memory_vs_disk additionally exercises the larger-than-RAM tier (resident /
+# spilled / compacted point reads) and emits BENCH_tiered_read.json.
 bench-smoke:
-	cd rust && MEMBIG_BENCH_SCALE=100 cargo bench --bench analytics --bench hashtable --bench server_throughput --bench recovery --bench ipc_scaleout
+	cd rust && MEMBIG_BENCH_SCALE=100 cargo bench --bench analytics --bench hashtable --bench server_throughput --bench recovery --bench ipc_scaleout --bench memory_vs_disk
 
 lint:
 	cd rust && cargo xtask lint

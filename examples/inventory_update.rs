@@ -38,10 +38,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let records = args.get_count("records")?.unwrap_or(2_000_000);
     let updates = args.get_count("updates")?.unwrap_or(records);
 
-    let mut cfg = EngineConfig::default();
-    cfg.data_dir = std::path::PathBuf::from("bench_out/data");
-    cfg.writeback = false;
-    let cfg = cfg.validated()?;
+    let cfg = EngineConfig::builder()
+        .data_dir("bench_out/data")
+        .writeback(false)
+        .build()?;
 
     println!("══ membig end-to-end: {} records, {} updates, {} threads ══\n",
         commas(records), commas(updates), cfg.threads);

@@ -13,10 +13,11 @@ use membig::workload::gen::DatasetSpec;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. Configure: defaults = one worker thread per core, one shard each.
-    let mut cfg = EngineConfig::default();
-    cfg.data_dir = std::env::temp_dir().join("membig_quickstart");
-    cfg.writeback = true; // persist the updated store back to disk
-    let cfg = cfg.validated()?;
+    //    The builder is the one construction path; build() validates.
+    let cfg = EngineConfig::builder()
+        .data_dir(std::env::temp_dir().join("membig_quickstart"))
+        .writeback(true) // persist the updated store back to disk
+        .build()?;
 
     // 2. Prepare the experiment inputs: 100k-record database + Stock.dat.
     let spec = DatasetSpec { records: 100_000, ..Default::default() };

@@ -224,6 +224,13 @@ pub struct EngineConfig {
     /// Checkpoint when the live WAL exceeds N MiB (0 disables the size
     /// trigger).
     pub snapshot_wal_mb: u64,
+    /// Memstore budget in MiB for `membig serve` (`[storage]`
+    /// `memstore_budget_mb`). 0 (default) = pure-memory serving, wire
+    /// semantics unchanged. N > 0 caps resident records: cold shards spill
+    /// to immutable disk runs under `data_dir` and point reads fall through
+    /// memstore → block cache → runs (`storage::tiered`). Mutually
+    /// exclusive with durability and with worker processes.
+    pub memstore_budget_mb: u64,
 }
 
 impl Default for EngineConfig {
@@ -251,6 +258,7 @@ impl Default for EngineConfig {
             fsync: true,
             snapshot_every_secs: 60,
             snapshot_wal_mb: 64,
+            memstore_budget_mb: 0,
         }
     }
 }
@@ -281,6 +289,7 @@ impl EngineConfig {
         set!(self.channel_depth, "pipeline", "channel_depth", usize);
         set!(self.batch_size, "pipeline", "batch_size", usize);
         set!(self.page_cache_pages, "storage", "page_cache_pages", usize);
+        set!(self.memstore_budget_mb, "storage", "memstore_budget_mb", u64);
         set!(self.seed, "engine", "seed", u64);
         set!(self.writeback, "engine", "writeback", bool);
         if let Some(v) = get("engine", "data_dir") {
@@ -311,28 +320,187 @@ impl EngineConfig {
         Ok(())
     }
 
-    /// Validate invariants; call after all overrides are applied.
-    pub fn validated(mut self) -> Result<Self, String> {
-        if self.threads == 0 {
-            self.threads =
+    /// Start a typed builder from the defaults. Every construction path —
+    /// CLI, INI, examples, tests — funnels through
+    /// [`EngineConfigBuilder::build`], the single home of all validation.
+    pub fn builder() -> EngineConfigBuilder {
+        EngineConfigBuilder { cfg: EngineConfig::default() }
+    }
+
+    /// Validate an already-assembled config (CLI paths that mutate fields
+    /// in place). Delegates to the builder so the invariants live once.
+    pub fn validated(self) -> Result<Self, String> {
+        EngineConfigBuilder { cfg: self }.build()
+    }
+}
+
+/// Typed builder for [`EngineConfig`]: chainable setters, **all** invariant
+/// checking in [`build`](EngineConfigBuilder::build). Replaces the old
+/// scatter of field pokes + `validated()` call sites.
+///
+/// ```
+/// use membig::config::EngineConfig;
+/// let cfg = EngineConfig::builder()
+///     .shards(8)
+///     .memstore_budget_mb(64)
+///     .build()
+///     .unwrap();
+/// assert_eq!(cfg.memstore_budget_mb, 64);
+/// ```
+#[derive(Debug, Clone)]
+pub struct EngineConfigBuilder {
+    cfg: EngineConfig,
+}
+
+impl EngineConfigBuilder {
+    pub fn threads(mut self, v: usize) -> Self {
+        self.cfg.threads = v;
+        self
+    }
+
+    pub fn shards(mut self, v: usize) -> Self {
+        self.cfg.shards = v;
+        self
+    }
+
+    pub fn shard_capacity_hint(mut self, v: usize) -> Self {
+        self.cfg.shard_capacity_hint = v;
+        self
+    }
+
+    pub fn channel_depth(mut self, v: usize) -> Self {
+        self.cfg.channel_depth = v;
+        self
+    }
+
+    pub fn batch_size(mut self, v: usize) -> Self {
+        self.cfg.batch_size = v;
+        self
+    }
+
+    pub fn data_dir(mut self, v: impl Into<PathBuf>) -> Self {
+        self.cfg.data_dir = v.into();
+        self
+    }
+
+    pub fn artifacts_dir(mut self, v: impl Into<PathBuf>) -> Self {
+        self.cfg.artifacts_dir = v.into();
+        self
+    }
+
+    pub fn page_cache_pages(mut self, v: usize) -> Self {
+        self.cfg.page_cache_pages = v;
+        self
+    }
+
+    pub fn seed(mut self, v: u64) -> Self {
+        self.cfg.seed = v;
+        self
+    }
+
+    pub fn writeback(mut self, v: bool) -> Self {
+        self.cfg.writeback = v;
+        self
+    }
+
+    pub fn bind(mut self, v: impl Into<String>) -> Self {
+        self.cfg.bind = v.into();
+        self
+    }
+
+    pub fn server_workers(mut self, v: usize) -> Self {
+        self.cfg.server_workers = v;
+        self
+    }
+
+    pub fn server_max_conns(mut self, v: usize) -> Self {
+        self.cfg.server_max_conns = v;
+        self
+    }
+
+    pub fn server_reactors(mut self, v: usize) -> Self {
+        self.cfg.server_reactors = v;
+        self
+    }
+
+    pub fn server_processes(mut self, v: usize) -> Self {
+        self.cfg.server_processes = v;
+        self
+    }
+
+    pub fn server_write_buf_kb(mut self, v: usize) -> Self {
+        self.cfg.server_write_buf_kb = v;
+        self
+    }
+
+    pub fn durable_dir(mut self, v: Option<PathBuf>) -> Self {
+        self.cfg.durable_dir = v;
+        self
+    }
+
+    pub fn fsync(mut self, v: bool) -> Self {
+        self.cfg.fsync = v;
+        self
+    }
+
+    pub fn snapshot_every_secs(mut self, v: u64) -> Self {
+        self.cfg.snapshot_every_secs = v;
+        self
+    }
+
+    pub fn snapshot_wal_mb(mut self, v: u64) -> Self {
+        self.cfg.snapshot_wal_mb = v;
+        self
+    }
+
+    pub fn memstore_budget_mb(mut self, v: u64) -> Self {
+        self.cfg.memstore_budget_mb = v;
+        self
+    }
+
+    pub fn disk(mut self, v: DiskProfile) -> Self {
+        self.cfg.disk = v;
+        self
+    }
+
+    /// Override only the modeled-delay scale, keeping the rest of the disk
+    /// profile (possibly INI-loaded) intact — mirrors the `--disk-scale`
+    /// CLI flag.
+    pub fn disk_scale(mut self, v: f64) -> Self {
+        self.cfg.disk.scale = v;
+        self
+    }
+
+    /// Layer an INI file's overrides onto the builder state.
+    pub fn apply_ini(mut self, ini: &Ini) -> Result<Self, String> {
+        self.cfg.apply_ini(ini)?;
+        Ok(self)
+    }
+
+    /// Check every invariant and produce the config. This is the one place
+    /// validation happens; nothing downstream re-checks.
+    pub fn build(self) -> Result<EngineConfig, String> {
+        let mut cfg = self.cfg;
+        if cfg.threads == 0 {
+            cfg.threads =
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
         }
-        if self.shards == 0 {
-            self.shards = self.threads;
+        if cfg.shards == 0 {
+            cfg.shards = cfg.threads;
         }
-        if self.batch_size == 0 {
+        if cfg.batch_size == 0 {
             return Err("batch_size must be > 0".into());
         }
-        if self.channel_depth == 0 {
+        if cfg.channel_depth == 0 {
             return Err("channel_depth must be > 0".into());
         }
-        if !(self.disk.scale >= 0.0) {
+        if !(cfg.disk.scale >= 0.0) {
             return Err("disk.scale must be >= 0".into());
         }
-        if self.server_max_conns == 0 {
+        if cfg.server_max_conns == 0 {
             return Err("server.max_conns must be > 0".into());
         }
-        if self.server_write_buf_kb != 0 && self.server_write_buf_kb < 256 {
+        if cfg.server_write_buf_kb != 0 && cfg.server_write_buf_kb < 256 {
             // The server only *pauses* execution at its 64 KiB soft limit;
             // the hard cap disconnects. A cap at or below the soft limit
             // (plus one response burst) would disconnect well-behaved
@@ -341,12 +509,12 @@ impl EngineConfig {
             // comfortably above their largest expected group response.
             return Err("server.write_buf_kb must be 0 (default) or >= 256".into());
         }
-        if self.server_processes > 512 {
+        if cfg.server_processes > 512 {
             // Each worker is one OS process + one Unix socket; past a few
             // hundred the leader's scatter fan-out dominates any win.
             return Err("server.processes must be <= 512".into());
         }
-        if self.server_processes > 0 && self.durable_dir.is_some() {
+        if cfg.server_processes > 0 && cfg.durable_dir.is_some() {
             // The WAL logs against the in-process store; with the data in
             // worker processes it would ack writes the workers never saw.
             return Err(
@@ -355,9 +523,9 @@ impl EngineConfig {
                     .into(),
             );
         }
-        if self.durable_dir.is_some()
-            && self.snapshot_every_secs == 0
-            && self.snapshot_wal_mb == 0
+        if cfg.durable_dir.is_some()
+            && cfg.snapshot_every_secs == 0
+            && cfg.snapshot_wal_mb == 0
         {
             return Err(
                 "durability needs at least one checkpoint trigger \
@@ -365,7 +533,27 @@ impl EngineConfig {
                     .into(),
             );
         }
-        Ok(self)
+        if cfg.memstore_budget_mb > 0 && cfg.durable_dir.is_some() {
+            // The WAL + snapshot pipeline recovers the *memstore*; records
+            // evicted to tier runs would vanish from its checkpoints, so a
+            // recovery could silently drop the cold set. One safety story
+            // at a time.
+            return Err(
+                "storage.memstore_budget_mb and durability.dir are mutually exclusive \
+                 (WAL recovery covers the memstore, not spilled tier runs)"
+                    .into(),
+            );
+        }
+        if cfg.memstore_budget_mb > 0 && cfg.server_processes > 0 {
+            // Worker processes own the data; the leader's tier would have
+            // nothing resident to spill.
+            return Err(
+                "storage.memstore_budget_mb and server.processes are mutually exclusive \
+                 (worker processes own the records, the leader store is a placeholder)"
+                    .into(),
+            );
+        }
+        Ok(cfg)
     }
 }
 
@@ -566,6 +754,48 @@ snapshot_wal_mb = 32
         assert!(c.clone().validated().is_err());
         c.server_processes = 512;
         assert!(c.validated().is_ok());
+    }
+
+    #[test]
+    fn builder_constructs_and_validates() {
+        let cfg = EngineConfig::builder()
+            .shards(8)
+            .threads(8)
+            .bind("127.0.0.1:0")
+            .memstore_budget_mb(64)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.shards, 8);
+        assert_eq!(cfg.memstore_budget_mb, 64);
+        // build() owns the invariants: a broken field fails there.
+        assert!(EngineConfig::builder().batch_size(0).build().is_err());
+        assert!(EngineConfig::builder().server_max_conns(0).build().is_err());
+        // INI overrides layer through the builder too.
+        let ini = parse_ini("[storage]\nmemstore_budget_mb = 16\n").unwrap();
+        let cfg = EngineConfig::builder().apply_ini(&ini).unwrap().build().unwrap();
+        assert_eq!(cfg.memstore_budget_mb, 16);
+    }
+
+    #[test]
+    fn memstore_budget_defaults_off_and_exclusions_enforced() {
+        let cfg = EngineConfig::default();
+        assert_eq!(cfg.memstore_budget_mb, 0, "tiering is opt-in");
+        // Budget × durability: WAL recovery covers the memstore only.
+        let err = EngineConfig::builder()
+            .memstore_budget_mb(64)
+            .durable_dir(Some(PathBuf::from("/tmp/d")))
+            .build();
+        assert!(err.is_err());
+        assert!(err.unwrap_err().contains("mutually exclusive"));
+        // Budget × worker processes: the leader store is a placeholder.
+        assert!(EngineConfig::builder()
+            .memstore_budget_mb(64)
+            .server_processes(4)
+            .build()
+            .is_err());
+        // Each pairing is fine alone.
+        assert!(EngineConfig::builder().memstore_budget_mb(64).build().is_ok());
+        assert!(EngineConfig::builder().server_processes(4).build().is_ok());
     }
 
     #[test]

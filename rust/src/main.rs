@@ -13,12 +13,13 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 use std::sync::Arc;
 
-use membig::config::{Args, EngineConfig, FlagSpec};
+use membig::config::{parse_ini, Args, EngineConfig, FlagSpec};
 use membig::coordinator::{Coordinator, Workbench};
 use membig::coordinator::report::{render_figure6, render_table1, RunReport};
 use membig::durability::{DurabilityOptions, Persistence};
 use membig::runtime::AnalyticsService;
 use membig::server::{Server, ServerConfig};
+use membig::storage::{StorageEngine, TieredOptions, TieredStore};
 use membig::util::fmt::{commas, human_duration, paper_hms};
 use membig::workload::gen::DatasetSpec;
 
@@ -42,6 +43,7 @@ fn spec() -> Vec<FlagSpec> {
         FlagSpec { name: "reactors", value: "N", help: "serve: event-loop reactor threads (default = cores)" },
         FlagSpec { name: "processes", value: "N", help: "serve: shard-owning worker processes (default 0 = in-process store)" },
         FlagSpec { name: "write-buf-kb", value: "N", help: "serve: per-connection write-buffer cap in KiB before a non-reading client is disconnected (default 8192, min 256)" },
+        FlagSpec { name: "memstore-budget-mb", value: "MB", help: "serve: memstore budget in MiB; 0 (default) = pure memory, N > 0 spills cold shards to disk runs under data-dir (tiered store)" },
         FlagSpec { name: "durable-dir", value: "DIR", help: "serve: WAL + snapshot directory; enables crash recovery (default off)" },
         FlagSpec { name: "fsync", value: "BOOL", help: "serve: fsync every group commit (default true; false = kernel flush only)" },
         FlagSpec { name: "snapshot-every", value: "SECS", help: "serve: checkpoint interval in seconds (default 60; 0 = off)" },
@@ -174,7 +176,12 @@ fn run() -> Result<(), String> {
             // With --durable-dir: recover `snapshot + WAL chain` when the
             // directory has state, else seed it from the workbench table;
             // every acknowledged mutation is then WAL-logged before its OK.
-            let (store, persist) = match cfg.durable_dir.clone() {
+            // (Budget × durability is rejected at config build, so the
+            // tiered branch below only ever pairs with persist = None.)
+            let (store, persist): (Arc<dyn StorageEngine>, Option<Arc<Persistence>>) = match cfg
+                .durable_dir
+                .clone()
+            {
                 Some(dir) => {
                     let opts = DurabilityOptions {
                         fsync: cfg.fsync,
@@ -214,7 +221,40 @@ fn run() -> Result<(), String> {
                 None => {
                     let coord = Coordinator::new(cfg.clone());
                     let table = wb.ensure_table(&cfg).map_err(|e| e.to_string())?;
-                    (coord.load_only(&table).map_err(|e| e.to_string())?, None)
+                    let mem = coord.load_only(&table).map_err(|e| e.to_string())?;
+                    if cfg.memstore_budget_mb > 0 {
+                        // Larger-than-RAM tier: re-home the loaded records
+                        // into a budgeted tiered store — cold shards spill
+                        // to immutable runs under <data-dir>/tier as the
+                        // budget is exceeded during this load.
+                        let opts = TieredOptions {
+                            budget_bytes: cfg.memstore_budget_mb << 20,
+                            shards: cfg.shards,
+                            capacity_hint: cfg.shard_capacity_hint,
+                            cache_blocks: cfg.page_cache_pages,
+                            ..TieredOptions::default()
+                        };
+                        let tier = TieredStore::open_clean(cfg.data_dir.join("tier"), opts)
+                            .map_err(|e| format!("tiered store: {e}"))?;
+                        for s in 0..mem.shard_count() {
+                            for r in mem.shard_records(s) {
+                                tier.insert(r);
+                            }
+                        }
+                        drop(mem);
+                        println!(
+                            "tiered store: budget {} MiB — {} resident record(s), {} run(s) \
+                             on disk ({} bytes) under {}",
+                            cfg.memstore_budget_mb,
+                            commas(tier.resident_records()),
+                            tier.run_count(),
+                            tier.disk_bytes(),
+                            cfg.data_dir.join("tier").display()
+                        );
+                        (Arc::new(tier), None)
+                    } else {
+                        (mem, None)
+                    }
                 }
             };
             let engine = start_analytics(&cfg, args.get("backend"))?;
@@ -276,8 +316,9 @@ fn run() -> Result<(), String> {
 /// protocol. The leader loads the table once, scatters the records to N
 /// spawned worker processes (each owning a disjoint key range), and keeps
 /// no store of its own — every data verb becomes an RPC to the owning
-/// worker. Mutually exclusive with durability (enforced by `validated()`);
-/// ANALYTICS is answered with an error since the leader holds no records.
+/// worker. Mutually exclusive with durability and with the memstore budget
+/// (enforced by `EngineConfigBuilder::build`); ANALYTICS is answered with
+/// an error since the leader holds no records.
 fn serve_processes(cfg: &EngineConfig, wb: &Workbench) -> Result<(), String> {
     let records = {
         let coord = Coordinator::new(cfg.clone());
@@ -336,70 +377,76 @@ fn start_analytics(
     }
 }
 
+/// Assemble the config through [`EngineConfig::builder`]: INI layer first,
+/// CLI overrides on top, every invariant checked once in `build()`.
 fn build_config(args: &Args) -> Result<EngineConfig, String> {
-    let mut cfg = match args.get("config") {
-        Some(path) => EngineConfig::from_ini(path)?,
-        None => EngineConfig::default(),
-    };
+    let mut b = EngineConfig::builder();
+    if let Some(path) = args.get("config") {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        b = b.apply_ini(&parse_ini(&text)?)?;
+    }
     if let Some(t) = args.get_parsed::<usize>("threads").map_err(|e| e.to_string())? {
-        cfg.threads = t;
-        cfg.shards = t;
+        b = b.threads(t).shards(t);
     }
     if let Some(s) = args.get_parsed::<usize>("shards").map_err(|e| e.to_string())? {
-        cfg.shards = s;
+        b = b.shards(s);
     }
-    if let Some(b) = args.get_parsed::<usize>("batch-size").map_err(|e| e.to_string())? {
-        cfg.batch_size = b;
+    if let Some(v) = args.get_parsed::<usize>("batch-size").map_err(|e| e.to_string())? {
+        b = b.batch_size(v);
     }
     if let Some(d) = args.get("data-dir") {
-        cfg.data_dir = PathBuf::from(d);
+        b = b.data_dir(d);
     }
     if let Some(d) = args.get("artifacts") {
-        cfg.artifacts_dir = PathBuf::from(d);
+        b = b.artifacts_dir(d);
     }
     if let Some(s) = args.get_parsed::<u64>("seed").map_err(|e| e.to_string())? {
-        cfg.seed = s;
+        b = b.seed(s);
     }
     if let Some(s) = args.get_parsed::<f64>("disk-scale").map_err(|e| e.to_string())? {
-        cfg.disk.scale = s;
+        b = b.disk_scale(s);
     }
     if let Some(c) = args.get_parsed::<usize>("cache-pages").map_err(|e| e.to_string())? {
-        cfg.page_cache_pages = c;
+        b = b.page_cache_pages(c);
     }
-    if let Some(b) = args.get("bind") {
-        cfg.bind = b.to_string();
+    if let Some(v) = args.get("bind") {
+        b = b.bind(v);
     }
     if let Some(w) = args.get_parsed::<usize>("workers").map_err(|e| e.to_string())? {
-        cfg.server_workers = w;
+        b = b.server_workers(w);
     }
     if let Some(m) = args.get_parsed::<usize>("max-conns").map_err(|e| e.to_string())? {
-        cfg.server_max_conns = m;
+        b = b.server_max_conns(m);
     }
     if let Some(r) = args.get_parsed::<usize>("reactors").map_err(|e| e.to_string())? {
-        cfg.server_reactors = r;
+        b = b.server_reactors(r);
     }
     if let Some(p) = args.get_parsed::<usize>("processes").map_err(|e| e.to_string())? {
-        cfg.server_processes = p;
+        b = b.server_processes(p);
     }
     if let Some(w) = args.get_parsed::<usize>("write-buf-kb").map_err(|e| e.to_string())? {
-        cfg.server_write_buf_kb = w;
+        b = b.server_write_buf_kb(w);
+    }
+    if let Some(mb) = args.get_parsed::<u64>("memstore-budget-mb").map_err(|e| e.to_string())? {
+        b = b.memstore_budget_mb(mb);
     }
     if let Some(d) = args.get("durable-dir") {
-        cfg.durable_dir = if d.is_empty() { None } else { Some(PathBuf::from(d)) };
+        b = b.durable_dir(if d.is_empty() { None } else { Some(PathBuf::from(d)) });
     }
     if let Some(f) = args.get_parsed::<bool>("fsync").map_err(|e| e.to_string())? {
-        cfg.fsync = f;
+        b = b.fsync(f);
     }
     if let Some(s) = args.get_parsed::<u64>("snapshot-every").map_err(|e| e.to_string())? {
-        cfg.snapshot_every_secs = s;
+        b = b.snapshot_every_secs(s);
     }
     if let Some(m) = args.get_parsed::<u64>("snapshot-wal-mb").map_err(|e| e.to_string())? {
-        cfg.snapshot_wal_mb = m;
+        b = b.snapshot_wal_mb(m);
     }
     if args.has("writeback") {
-        cfg.writeback = true;
+        b = b.writeback(true);
     }
-    cfg.validated()
+    b.build()
 }
 
 /// One Table-1 cell: run both apps over identical inputs.

@@ -644,6 +644,137 @@ impl DurabilityMetrics {
 }
 
 // ---------------------------------------------------------------------------
+// Tiered-store metrics bundle
+// ---------------------------------------------------------------------------
+
+/// Metrics for the larger-than-RAM tier (`storage::tiered`): spill and
+/// compaction activity, per-tier read fallthrough, block-cache traffic and
+/// on-disk footprint. One instance per `TieredStore`; rendered into
+/// `STATS SERVER` via `StorageEngine::stats_suffix`.
+#[derive(Default)]
+pub struct TieredMetrics {
+    /// Cold-shard spills (one immutable run written each).
+    pub spills: Counter,
+    /// Records written to runs by spills (lifetime, including re-spills).
+    pub spilled_records: Counter,
+    /// Spills that failed with an I/O error (records stayed in RAM).
+    pub spill_errors: Counter,
+    /// Point reads served by the memstore (seqlock hot path).
+    pub mem_hits: Counter,
+    /// Point reads that fell through to a disk run.
+    pub disk_hits: Counter,
+    /// Point reads absent from every tier.
+    pub misses: Counter,
+    /// Spilled records pulled back into the memstore by a write.
+    pub promotions: Counter,
+    /// Block-cache hits on the run-read path.
+    pub cache_hits: Counter,
+    /// Block-cache misses (each one is a run-file read).
+    pub cache_misses: Counter,
+    /// Blocks evicted from the block cache.
+    pub cache_evictions: Counter,
+    /// Background + explicit compactions completed.
+    pub compactions: Counter,
+    /// Run records that failed their CRC frame (skipped, never served).
+    pub corrupt_records: Counter,
+    /// Run reads or compactions that failed with an I/O error.
+    pub disk_errors: Counter,
+    /// Live runs in the published manifest.
+    pub runs: Gauge,
+    /// Bytes across all live run files.
+    pub disk_bytes: Gauge,
+    /// Records currently resident in the hot tier.
+    pub resident_records: Gauge,
+}
+
+impl TieredMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Block-cache hit rate over the current epoch, `0.0` when idle.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let h = self.cache_hits.get();
+        let total = h + self.cache_misses.get();
+        if total == 0 {
+            0.0
+        } else {
+            h as f64 / total as f64
+        }
+    }
+
+    /// Joins a `STATS RESET` epoch: zero the traffic counters so two
+    /// measurement windows compare cleanly; state gauges (runs on disk,
+    /// disk bytes, resident records) persist.
+    pub fn reset_epoch_counters(&self) {
+        self.spills.reset();
+        self.spilled_records.reset();
+        self.spill_errors.reset();
+        self.mem_hits.reset();
+        self.disk_hits.reset();
+        self.misses.reset();
+        self.promotions.reset();
+        self.cache_hits.reset();
+        self.cache_misses.reset();
+        self.cache_evictions.reset();
+        self.compactions.reset();
+        self.corrupt_records.reset();
+        self.disk_errors.reset();
+    }
+
+    /// Suffix appended to `STATS SERVER` when the tier is live (leading
+    /// space included, like `DurabilityMetrics::stats_suffix`).
+    pub fn stats_suffix(&self) -> String {
+        format!(
+            " tier_spills={} tier_spilled_records={} tier_spill_errors={} tier_mem_hits={} \
+             tier_disk_hits={} tier_misses={} tier_promotions={} tier_cache_hits={} \
+             tier_cache_misses={} tier_cache_evictions={} tier_cache_hit_rate={:.3} \
+             tier_compactions={} tier_corrupt_records={} tier_disk_errors={} tier_runs={} \
+             tier_disk_bytes={} tier_resident_records={}",
+            self.spills.get(),
+            self.spilled_records.get(),
+            self.spill_errors.get(),
+            self.mem_hits.get(),
+            self.disk_hits.get(),
+            self.misses.get(),
+            self.promotions.get(),
+            self.cache_hits.get(),
+            self.cache_misses.get(),
+            self.cache_evictions.get(),
+            self.cache_hit_rate(),
+            self.compactions.get(),
+            self.corrupt_records.get(),
+            self.disk_errors.get(),
+            self.runs.get(),
+            self.disk_bytes.get(),
+            self.resident_records.get()
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("spills", Json::num(self.spills.get() as f64)),
+            ("spilled_records", Json::num(self.spilled_records.get() as f64)),
+            ("spill_errors", Json::num(self.spill_errors.get() as f64)),
+            ("mem_hits", Json::num(self.mem_hits.get() as f64)),
+            ("disk_hits", Json::num(self.disk_hits.get() as f64)),
+            ("misses", Json::num(self.misses.get() as f64)),
+            ("promotions", Json::num(self.promotions.get() as f64)),
+            ("cache_hits", Json::num(self.cache_hits.get() as f64)),
+            ("cache_misses", Json::num(self.cache_misses.get() as f64)),
+            ("cache_evictions", Json::num(self.cache_evictions.get() as f64)),
+            ("cache_hit_rate", Json::num(self.cache_hit_rate())),
+            ("compactions", Json::num(self.compactions.get() as f64)),
+            ("corrupt_records", Json::num(self.corrupt_records.get() as f64)),
+            ("disk_errors", Json::num(self.disk_errors.get() as f64)),
+            ("runs", Json::num(self.runs.get() as f64)),
+            ("disk_bytes", Json::num(self.disk_bytes.get() as f64)),
+            ("resident_records", Json::num(self.resident_records.get() as f64)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
 // IPC (multi-process serving) metrics bundle
 // ---------------------------------------------------------------------------
 
@@ -964,6 +1095,54 @@ mod tests {
         assert_eq!(d.snapshots.get(), 0);
         assert_eq!(d.snapshot_last_ms.get(), 17, "last-snapshot gauge is state, not traffic");
         assert_eq!(d.generation.get(), 3);
+    }
+
+    #[test]
+    fn tiered_metrics_render_and_reset() {
+        let t = TieredMetrics::new();
+        t.spills.add(2);
+        t.spilled_records.add(500);
+        t.mem_hits.add(90);
+        t.disk_hits.add(9);
+        t.misses.inc();
+        t.promotions.add(3);
+        t.cache_hits.add(30);
+        t.cache_misses.add(10);
+        t.compactions.inc();
+        t.runs.set(4);
+        t.disk_bytes.set(12_288);
+        t.resident_records.set(250);
+        assert!((t.cache_hit_rate() - 0.75).abs() < 1e-9);
+        let s = t.stats_suffix();
+        for needle in [
+            " tier_spills=2",
+            " tier_spilled_records=500",
+            " tier_mem_hits=90",
+            " tier_disk_hits=9",
+            " tier_misses=1",
+            " tier_promotions=3",
+            " tier_cache_hits=30",
+            " tier_cache_misses=10",
+            " tier_cache_hit_rate=0.750",
+            " tier_compactions=1",
+            " tier_corrupt_records=0",
+            " tier_runs=4",
+            " tier_disk_bytes=12288",
+            " tier_resident_records=250",
+        ] {
+            assert!(s.contains(needle), "missing {needle:?} in {s:?}");
+        }
+        let j = t.to_json();
+        assert_eq!(j.get("spills").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.get("cache_hit_rate").unwrap().as_f64().unwrap(), 0.75);
+        assert_eq!(j.get("runs").unwrap().as_f64().unwrap(), 4.0);
+        // Epoch reset zeroes traffic counters; state gauges persist.
+        t.reset_epoch_counters();
+        assert_eq!(t.spills.get(), 0);
+        assert_eq!(t.mem_hits.get(), 0);
+        assert_eq!(t.cache_hit_rate(), 0.0);
+        assert_eq!(t.runs.get(), 4, "run-count gauge is state, not traffic");
+        assert_eq!(t.disk_bytes.get(), 12_288);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use std::time::Instant;
 
 use super::artifact::{ArtifactError, ArtifactManifest};
 use super::types::{AnalyticsResult, InventoryStats, HIST_BINS, N_STATS};
-use crate::memstore::ShardedStore;
+use crate::storage::engine::StorageEngine;
 use crate::workload::record::StockUpdate;
 
 #[derive(Debug)]
@@ -230,7 +230,7 @@ impl AnalyticsEngine {
     /// read-side analytics path, entirely on PJRT.
     pub fn analytics_for_store(
         &self,
-        store: &ShardedStore,
+        store: &dyn StorageEngine,
         updates: &[StockUpdate],
     ) -> Result<AnalyticsResult, EngineError> {
         let mut price = Vec::new();

@@ -13,7 +13,7 @@
 use std::time::Instant;
 
 use super::types::{histogram_bin, AnalyticsResult, InventoryStats, HIST_BINS};
-use crate::memstore::ShardedStore;
+use crate::storage::engine::StorageEngine;
 use crate::workload::record::StockUpdate;
 
 #[derive(Debug)]
@@ -131,7 +131,7 @@ impl ReferenceEngine {
     /// point reads proceed throughout.
     pub fn analytics_for_store(
         &self,
-        store: &ShardedStore,
+        store: &dyn StorageEngine,
         updates: &[StockUpdate],
     ) -> Result<AnalyticsResult, ReferenceError> {
         let t0 = Instant::now();
@@ -246,7 +246,7 @@ struct ShardChunk {
 /// `parallel_for_store_matches_column_kernel`; change kernel semantics
 /// (bin width, sentinels, mean) in both places and that test will say so.
 fn reduce_shard(
-    store: &ShardedStore,
+    store: &dyn StorageEngine,
     s: usize,
     staged: &std::collections::HashMap<u64, (f32, f32)>,
 ) -> ShardChunk {
@@ -287,6 +287,7 @@ fn reduce_shard(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::memstore::ShardedStore;
     use crate::workload::gen::DatasetSpec;
     use crate::workload::record::BookRecord;
 

@@ -26,12 +26,12 @@ use std::sync::{Arc, Mutex};
 
 use super::reference::ReferenceEngine;
 use super::types::AnalyticsResult;
-use crate::memstore::ShardedStore;
+use crate::storage::engine::StorageEngine;
 use crate::workload::record::StockUpdate;
 
 enum Request {
     ForStore {
-        store: Arc<ShardedStore>,
+        store: Arc<dyn StorageEngine>,
         updates: Vec<StockUpdate>,
         reply: mpsc::Sender<Result<AnalyticsResult, String>>,
     },
@@ -77,7 +77,7 @@ impl Backend {
 
     fn analytics_for_store(
         &self,
-        store: &ShardedStore,
+        store: &dyn StorageEngine,
         updates: &[StockUpdate],
     ) -> Result<AnalyticsResult, String> {
         match self {
@@ -191,7 +191,7 @@ impl AnalyticsService {
                     match req {
                         Request::Shutdown => break,
                         Request::ForStore { store, updates, reply } => {
-                            let _ = reply.send(backend.analytics_for_store(&store, &updates));
+                            let _ = reply.send(backend.analytics_for_store(store.as_ref(), &updates));
                         }
                         Request::ValueSum { price, qty, reply } => {
                             let _ = reply.send(backend.value_sum(&price, &qty));
@@ -213,9 +213,12 @@ impl AnalyticsService {
         self.tx.lock().unwrap().send(req).map_err(|_| "analytics thread gone".to_string())
     }
 
+    /// Analytics over any live [`StorageEngine`] — the pure-memory store is
+    /// passed zero-copy; a tiered store's disk records ride its trailing
+    /// shard group.
     pub fn analytics_for_store(
         &self,
-        store: Arc<ShardedStore>,
+        store: Arc<dyn StorageEngine>,
         updates: Vec<StockUpdate>,
     ) -> Result<AnalyticsResult, String> {
         let (reply, rx) = mpsc::channel();
@@ -268,6 +271,7 @@ const _: fn() = || {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::memstore::ShardedStore;
     use crate::workload::gen::DatasetSpec;
 
     #[test]

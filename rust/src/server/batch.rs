@@ -1,16 +1,16 @@
 //! Batch verbs for the line protocol: parsing and shard-affine execution.
 //!
-//! `MGET` and `MUPDATE` carry many keys in one request line; execution
-//! pre-routes every key with [`ShardedStore::route`] (via
-//! [`ShardedStore::get_many`] / [`ShardedStore::apply_many`]) and takes each
-//! shard lock once per batch instead of once per key — the paper's §4.2
+//! `MGET` and `MUPDATE` carry many keys in one request line; execution goes
+//! through [`StorageEngine::get_many`] / [`StorageEngine::apply_many`], whose
+//! memstore implementation pre-routes every key and takes each shard lock
+//! once per batch instead of once per key — the paper's §4.2
 //! group-at-a-time dispatch applied to the request path. `BATCH <n>` framing
 //! (n follow-up lines, n response lines released as one group) lives in the
 //! per-connection state machine (`server::reactor` on Linux, the blocking
 //! `server::fallback` loop elsewhere); per-line execution goes through
 //! `server::exec_batch_group` → `dispatch_into`.
 
-use crate::memstore::ShardedStore;
+use crate::storage::engine::StorageEngine;
 use crate::workload::record::StockUpdate;
 
 /// Upper bound on keys per MGET, update groups per MUPDATE and lines per
@@ -73,7 +73,7 @@ pub fn parse_mupdate(rest: &str) -> Result<Vec<StockUpdate>, String> {
 /// in key order — `OK <n> <price,qty|MISS> ...`. The hot batch path formats
 /// integers with [`push_u64`](crate::util::fmt::push_u64) into the caller's
 /// pooled buffer: no per-entry temporaries, no response `String`.
-pub fn exec_mget_into(store: &ShardedStore, keys: &[u64], out: &mut Vec<u8>) {
+pub fn exec_mget_into(store: &dyn StorageEngine, keys: &[u64], out: &mut Vec<u8>) {
     use crate::util::fmt::push_u64;
     let vals = store.get_many(keys);
     out.reserve(8 + vals.len() * 12);
@@ -93,7 +93,7 @@ pub fn exec_mget_into(store: &ShardedStore, keys: &[u64], out: &mut Vec<u8>) {
 }
 
 /// [`exec_mget_into`] as a `String` (direct unit tests, legacy callers).
-pub fn exec_mget(store: &ShardedStore, keys: &[u64]) -> String {
+pub fn exec_mget(store: &dyn StorageEngine, keys: &[u64]) -> String {
     let mut out = Vec::with_capacity(8 + keys.len() * 12);
     exec_mget_into(store, keys, &mut out);
     String::from_utf8(out).expect("MGET responses are ASCII")
@@ -101,7 +101,7 @@ pub fn exec_mget(store: &ShardedStore, keys: &[u64]) -> String {
 
 /// Execute a parsed MUPDATE into a response buffer:
 /// `OK applied=<a> missed=<m>`.
-pub fn exec_mupdate_into(store: &ShardedStore, ups: &[StockUpdate], out: &mut Vec<u8>) {
+pub fn exec_mupdate_into(store: &dyn StorageEngine, ups: &[StockUpdate], out: &mut Vec<u8>) {
     use crate::util::fmt::push_u64;
     let (applied, missed) = store.apply_many(ups);
     out.extend_from_slice(b"OK applied=");
@@ -111,7 +111,7 @@ pub fn exec_mupdate_into(store: &ShardedStore, ups: &[StockUpdate], out: &mut Ve
 }
 
 /// [`exec_mupdate_into`] as a `String` (direct unit tests, legacy callers).
-pub fn exec_mupdate(store: &ShardedStore, ups: &[StockUpdate]) -> String {
+pub fn exec_mupdate(store: &dyn StorageEngine, ups: &[StockUpdate]) -> String {
     let mut out = Vec::with_capacity(32);
     exec_mupdate_into(store, ups, &mut out);
     String::from_utf8(out).expect("MUPDATE responses are ASCII")
@@ -120,6 +120,7 @@ pub fn exec_mupdate(store: &ShardedStore, ups: &[StockUpdate]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::memstore::ShardedStore;
     use crate::workload::record::BookRecord;
 
     #[test]

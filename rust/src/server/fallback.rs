@@ -22,9 +22,9 @@ use super::{
 };
 use crate::durability::Persistence;
 use crate::ipc::ServingPool;
-use crate::memstore::ShardedStore;
 use crate::metrics::ServerMetrics;
 use crate::runtime::AnalyticsService;
+use crate::storage::engine::StorageEngine;
 
 /// Granularity at which a blocked read notices shutdown and the idle
 /// deadline (the reactor core needs neither: it sleeps in epoll).
@@ -194,7 +194,7 @@ fn read_request_line(
 #[allow(clippy::too_many_arguments)]
 fn handle_client(
     stream: TcpStream,
-    store: &Arc<ShardedStore>,
+    store: &Arc<dyn StorageEngine>,
     engine: Option<&Arc<AnalyticsService>>,
     persist: Option<&Persistence>,
     procs: Option<&ServingPool>,
@@ -304,7 +304,7 @@ fn run_batch(
     header: &str,
     reader: &mut BufReader<TcpStream>,
     out: &mut TcpStream,
-    store: &Arc<ShardedStore>,
+    store: &Arc<dyn StorageEngine>,
     engine: Option<&Arc<AnalyticsService>>,
     persist: Option<&Persistence>,
     procs: Option<&ServingPool>,

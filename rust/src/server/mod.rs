@@ -44,10 +44,17 @@
 //! acceptor + `WorkerPool` over whole connections, read-timeout ticks —
 //! serves the identical wire protocol; the reactor counters then read 0.
 //!
-//! The batch verbs execute shard-affinely ([`batch`]): keys are pre-routed
-//! with `ShardedStore::route_hashed` and each shard is visited once per
-//! batch. `GET`/`MGET` read the store **lock-free** (seqlock,
+//! The batch verbs execute shard-affinely ([`batch`]): the engine's
+//! `get_many`/`apply_many` pre-route keys and visit each shard once per
+//! batch. `GET`/`MGET` read the memstore **lock-free** (seqlock,
 //! `memstore::shard`), so read throughput scales with reactor threads.
+//!
+//! Storage: every serving path holds an `Arc<dyn `[`StorageEngine`]`>` —
+//! the pure-memory store or the larger-than-RAM tier
+//! (`storage::tiered`, `--memstore-budget-mb`). A spill-enabled engine's
+//! point reads can touch disk, so the reactor classifies `GET`/`MGET`/
+//! `STATS` as blocking (pool hop, like `ANALYTICS`) exactly when
+//! [`StorageEngine::spill_enabled`] reports it.
 //!
 //! Hot path allocation discipline: request lines accumulate into a reusable
 //! per-connection byte buffer and are UTF-8-validated **once per line** (no
@@ -84,9 +91,9 @@ use std::time::{Duration, Instant};
 
 use crate::durability::Persistence;
 use crate::ipc::ServingPool;
-use crate::memstore::ShardedStore;
 use crate::metrics::ServerMetrics;
 use crate::runtime::AnalyticsService;
+use crate::storage::engine::StorageEngine;
 use crate::util::fmt::push_u64;
 use crate::workload::record::StockUpdate;
 
@@ -133,7 +140,7 @@ impl Default for ServerConfig {
 }
 
 pub struct Server {
-    store: Arc<ShardedStore>,
+    store: Arc<dyn StorageEngine>,
     engine: Option<Arc<AnalyticsService>>,
     persist: Option<Arc<Persistence>>,
     /// Multi-process backend (`serve --processes N`): when set, the data
@@ -155,12 +162,12 @@ pub struct ServerHandle {
 }
 
 impl Server {
-    pub fn new(store: Arc<ShardedStore>, engine: Option<Arc<AnalyticsService>>) -> Self {
+    pub fn new(store: Arc<dyn StorageEngine>, engine: Option<Arc<AnalyticsService>>) -> Self {
         Self::with_config(store, engine, ServerConfig::default())
     }
 
     pub fn with_config(
-        store: Arc<ShardedStore>,
+        store: Arc<dyn StorageEngine>,
         engine: Option<Arc<AnalyticsService>>,
         config: ServerConfig,
     ) -> Self {
@@ -173,7 +180,7 @@ impl Server {
     /// the persistence layer applies mutations itself so the log and the
     /// memory image can never diverge.
     pub fn with_persistence(
-        store: Arc<ShardedStore>,
+        store: Arc<dyn StorageEngine>,
         engine: Option<Arc<AnalyticsService>>,
         mut config: ServerConfig,
         persist: Option<Arc<Persistence>>,
@@ -204,8 +211,12 @@ impl Server {
     /// verb that would read it. Analytics and durability are unavailable in
     /// this mode (rejected by `Config::validated`).
     pub fn with_procs(procs: Arc<ServingPool>, config: ServerConfig) -> Self {
-        let mut server =
-            Self::with_persistence(Arc::new(ShardedStore::new(1, 8)), None, config, None);
+        let mut server = Self::with_persistence(
+            crate::storage::engine::placeholder_engine(),
+            None,
+            config,
+            None,
+        );
         server.procs = Some(procs);
         server
     }
@@ -376,7 +387,7 @@ pub(crate) fn reply_invalid_utf8(metrics: &ServerMetrics, out: &mut Vec<u8>) {
 #[allow(clippy::too_many_arguments)] // the executor sits below RequestCtx
 pub(crate) fn execute_one_into(
     req: &str,
-    store: &Arc<ShardedStore>,
+    store: &Arc<dyn StorageEngine>,
     engine: Option<&Arc<AnalyticsService>>,
     persist: Option<&Persistence>,
     metrics: &ServerMetrics,
@@ -407,7 +418,7 @@ pub(crate) fn execute_one_into(
 pub(crate) fn exec_batch_group(
     payload: &[u8],
     bounds: &[usize],
-    store: &Arc<ShardedStore>,
+    store: &Arc<dyn StorageEngine>,
     engine: Option<&Arc<AnalyticsService>>,
     persist: Option<&Persistence>,
     metrics: &ServerMetrics,
@@ -458,7 +469,7 @@ pub(crate) fn exec_batch_group(
 /// signature stops growing a parameter per subsystem.
 #[derive(Clone, Copy)]
 pub struct RequestCtx<'a> {
-    pub store: &'a Arc<ShardedStore>,
+    pub store: &'a Arc<dyn StorageEngine>,
     pub engine: Option<&'a Arc<AnalyticsService>>,
     pub metrics: Option<&'a ServerMetrics>,
     /// When set, `UPDATE`/`MUPDATE` are logged + applied through the
@@ -469,35 +480,16 @@ pub struct RequestCtx<'a> {
     pub procs: Option<&'a ServingPool>,
 }
 
-/// Parse + execute one request line (separated out for direct unit tests).
-/// Strict parsing: unconsumed trailing tokens are an `ERR`, never ignored.
-pub fn dispatch(line: &str, store: &Arc<ShardedStore>, engine: Option<&Arc<AnalyticsService>>) -> String {
-    let ctx = RequestCtx { store, engine, metrics: None, persist: None, procs: None };
-    dispatch_ctx(line, &ctx, false)
-}
-
-/// [`dispatch`] with optional server metrics: batch sizes are recorded, the
-/// basic `STATS` line gains connection counters, and `STATS SERVER` renders
-/// the full per-verb report.
-pub fn dispatch_with_metrics(
-    line: &str,
-    store: &Arc<ShardedStore>,
-    engine: Option<&Arc<AnalyticsService>>,
-    metrics: Option<&ServerMetrics>,
-) -> String {
-    let ctx = RequestCtx { store, engine, metrics, persist: None, procs: None };
-    dispatch_ctx(line, &ctx, false)
-}
-
-/// [`dispatch_into`] rendered to a `String` (tests, REPL-style callers).
-/// The server itself never takes this path — responses go straight into the
-/// pooled connection buffer.
-pub fn dispatch_ctx(line: &str, ctx: &RequestCtx<'_>, in_batch: bool) -> String {
+/// [`dispatch_into`] rendered to a `String` — the single test-only
+/// convenience wrapper (the PR-4 `dispatch`/`dispatch_with_metrics`/
+/// `dispatch_ctx` String surface collapsed into it). The server itself
+/// never takes this path — responses go straight into the pooled
+/// connection buffer.
+#[cfg(test)]
+pub(crate) fn dispatch_str(line: &str, ctx: &RequestCtx<'_>, in_batch: bool) -> String {
     let mut out = Vec::with_capacity(64);
     dispatch_into(line, ctx, in_batch, &mut out);
     out.pop(); // the newline dispatch_into frames with
-    // lint:allow(hot-path-panic): test/REPL convenience path, never taken by
-    // the server; dispatch_into only emits ASCII + echoed UTF-8 input.
     String::from_utf8(out).expect("responses echo valid-UTF-8 requests")
 }
 
@@ -632,6 +624,9 @@ pub fn dispatch_into(line: &str, ctx: &RequestCtx<'_>, in_batch: bool, out: &mut
                             rs.retries.get(),
                             rs.fallbacks.get()
                         ));
+                        // Engine-specific counters (empty for the pure
+                        // memstore; the tier_* block for a tiered engine).
+                        s.push_str(&store.stats_suffix());
                         if let Some(p) = persist {
                             s.push_str(&p.stats_suffix());
                         }
@@ -649,9 +644,7 @@ pub fn dispatch_into(line: &str, ctx: &RequestCtx<'_>, in_batch: bool, out: &mut
                         if let Some(p) = persist {
                             p.metrics().reset_epoch_counters();
                         }
-                        let rs = store.read_stats();
-                        rs.retries.reset();
-                        rs.fallbacks.reset();
+                        store.reset_stats_epoch();
                         out.extend_from_slice(format!("OK epoch={}", m.reset_epoch()).as_bytes());
                     }
                     None => out.extend_from_slice(b"ERR server metrics unavailable"),
@@ -785,15 +778,29 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::memstore::ShardedStore;
     use crate::workload::gen::DatasetSpec;
 
-    fn store(n: u64) -> (Arc<ShardedStore>, DatasetSpec) {
+    fn store(n: u64) -> (Arc<dyn StorageEngine>, DatasetSpec) {
         let spec = DatasetSpec { records: n, ..Default::default() };
-        let s = Arc::new(ShardedStore::new(4, 1 << 10));
+        let s: Arc<dyn StorageEngine> = Arc::new(ShardedStore::new(4, 1 << 10));
         for r in spec.iter() {
             s.insert(r);
         }
         (s, spec)
+    }
+
+    /// Bare dispatch: no metrics, no persistence, no procs.
+    fn d(line: &str, s: &Arc<dyn StorageEngine>) -> String {
+        let ctx = RequestCtx { store: s, engine: None, metrics: None, persist: None, procs: None };
+        dispatch_str(line, &ctx, false)
+    }
+
+    /// Dispatch with server metrics attached.
+    fn dm(line: &str, s: &Arc<dyn StorageEngine>, m: &ServerMetrics) -> String {
+        let ctx =
+            RequestCtx { store: s, engine: None, metrics: Some(m), persist: None, procs: None };
+        dispatch_str(line, &ctx, false)
     }
 
     #[test]
@@ -802,14 +809,14 @@ mod tests {
         let key = spec.record_at(5).isbn13;
         let rec = spec.record_at(5);
         assert_eq!(
-            dispatch(&format!("GET {key}"), &s, None),
+            d(&format!("GET {key}"), &s),
             format!("OK {} {}", rec.price_cents, rec.quantity)
         );
-        assert_eq!(dispatch("GET 42", &s, None), "MISS");
-        assert_eq!(dispatch(&format!("UPDATE {key} 999 7"), &s, None), "OK");
-        assert_eq!(dispatch(&format!("GET {key}"), &s, None), "OK 999 7");
+        assert_eq!(d("GET 42", &s), "MISS");
+        assert_eq!(d(&format!("UPDATE {key} 999 7"), &s), "OK");
+        assert_eq!(d(&format!("GET {key}"), &s), "OK 999 7");
         let (n, v) = s.value_sum_cents();
-        assert_eq!(dispatch("STATS", &s, None), format!("OK count={n} value_cents={v}"));
+        assert_eq!(d("STATS", &s), format!("OK count={n} value_cents={v}"));
     }
 
     #[test]
@@ -817,9 +824,9 @@ mod tests {
         let (s, spec) = store(100);
         let a = spec.record_at(1).isbn13;
         let b = spec.record_at(2).isbn13;
-        assert_eq!(dispatch(&format!("MUPDATE {a} 100 1;{b} 200 2;42 1 1"), &s, None),
+        assert_eq!(d(&format!("MUPDATE {a} 100 1;{b} 200 2;42 1 1"), &s),
             "OK applied=2 missed=1");
-        assert_eq!(dispatch(&format!("MGET {a} 42 {b}"), &s, None), "OK 3 100,1 MISS 200,2");
+        assert_eq!(d(&format!("MGET {a} 42 {b}"), &s), "OK 3 100,1 MISS 200,2");
     }
 
     #[test]
@@ -845,27 +852,27 @@ mod tests {
     fn dispatch_error_paths() {
         let (s, _) = store(10);
         // Short / malformed argument lists.
-        assert!(dispatch("GET", &s, None).starts_with("ERR"));
-        assert!(dispatch("GET notanumber", &s, None).starts_with("ERR"));
-        assert!(dispatch("UPDATE 1 2", &s, None).starts_with("ERR"));
-        assert!(dispatch("MGET", &s, None).starts_with("ERR"));
-        assert!(dispatch("MGET a b", &s, None).starts_with("ERR"));
-        assert!(dispatch("MUPDATE", &s, None).starts_with("ERR"));
-        assert!(dispatch("MUPDATE 1 2", &s, None).starts_with("ERR"));
-        assert!(dispatch("BOGUS", &s, None).starts_with("ERR"));
-        assert!(dispatch("", &s, None).starts_with("ERR"));
-        assert!(dispatch("ANALYTICS", &s, None).starts_with("ERR"));
-        assert!(dispatch("BATCH 2", &s, None).starts_with("ERR"));
+        assert!(d("GET", &s).starts_with("ERR"));
+        assert!(d("GET notanumber", &s).starts_with("ERR"));
+        assert!(d("UPDATE 1 2", &s).starts_with("ERR"));
+        assert!(d("MGET", &s).starts_with("ERR"));
+        assert!(d("MGET a b", &s).starts_with("ERR"));
+        assert!(d("MUPDATE", &s).starts_with("ERR"));
+        assert!(d("MUPDATE 1 2", &s).starts_with("ERR"));
+        assert!(d("BOGUS", &s).starts_with("ERR"));
+        assert!(d("", &s).starts_with("ERR"));
+        assert!(d("ANALYTICS", &s).starts_with("ERR"));
+        assert!(d("BATCH 2", &s).starts_with("ERR"));
         // Trailing garbage is rejected on every verb.
-        assert!(dispatch("GET 1 extra", &s, None).starts_with("ERR"));
-        assert!(dispatch("UPDATE 1 2 3 junk", &s, None).starts_with("ERR"));
-        assert!(dispatch("MUPDATE 1 2 3 junk", &s, None).starts_with("ERR"));
-        assert!(dispatch("STATS BOGUS", &s, None).starts_with("ERR"));
-        assert!(dispatch("STATS SERVER extra", &s, None).starts_with("ERR"));
-        assert!(dispatch("PING please", &s, None).starts_with("ERR"));
-        assert!(dispatch("QUIT now", &s, None).starts_with("ERR"));
-        assert!(dispatch("ANALYTICS now", &s, None).starts_with("ERR"));
-        assert_eq!(dispatch("PING", &s, None), "PONG");
+        assert!(d("GET 1 extra", &s).starts_with("ERR"));
+        assert!(d("UPDATE 1 2 3 junk", &s).starts_with("ERR"));
+        assert!(d("MUPDATE 1 2 3 junk", &s).starts_with("ERR"));
+        assert!(d("STATS BOGUS", &s).starts_with("ERR"));
+        assert!(d("STATS SERVER extra", &s).starts_with("ERR"));
+        assert!(d("PING please", &s).starts_with("ERR"));
+        assert!(d("QUIT now", &s).starts_with("ERR"));
+        assert!(d("ANALYTICS now", &s).starts_with("ERR"));
+        assert_eq!(d("PING", &s), "PONG");
     }
 
     #[test]
@@ -873,16 +880,16 @@ mod tests {
         let (s, _) = store(10);
         let m = ServerMetrics::new();
         m.conns_accepted.inc();
-        let resp = dispatch_with_metrics("STATS", &s, None, Some(&m));
+        let resp = dm("STATS", &s, &m);
         assert!(resp.starts_with("OK count=10"), "{resp}");
         assert!(resp.contains("conns_accepted=1"), "{resp}");
-        let resp = dispatch_with_metrics("STATS SERVER", &s, None, Some(&m));
+        let resp = dm("STATS SERVER", &s, &m);
         assert!(resp.starts_with("OK conns_accepted=1"), "{resp}");
         assert!(resp.contains("read_retries=0"), "{resp}");
         assert!(resp.contains("read_fallbacks=0"), "{resp}");
         assert!(resp.contains("epoll_wakeups=0"), "{resp}");
         assert!(resp.contains("backpressure_closes=0"), "{resp}");
-        assert_eq!(dispatch("STATS SERVER", &s, None), "ERR server metrics unavailable");
+        assert_eq!(d("STATS SERVER", &s), "ERR server metrics unavailable");
     }
 
     #[test]
@@ -898,12 +905,12 @@ mod tests {
             format!("MUPDATE {key} 6 6"),
             "PING".into(),
         ] {
-            dispatch_with_metrics(&req, &s, None, Some(&m));
+            dm(&req, &s, &m);
         }
         assert_eq!(m.allocs_saved.get(), 6);
         // Cold paths (STATS, errors) are not counted.
-        dispatch_with_metrics("STATS", &s, None, Some(&m));
-        dispatch_with_metrics("GET not_a_key", &s, None, Some(&m));
+        dm("STATS", &s, &m);
+        dm("GET not_a_key", &s, &m);
         assert_eq!(m.allocs_saved.get(), 6);
     }
 
@@ -922,17 +929,17 @@ mod tests {
         m.latency_for("GET").record(123);
         m.requests.add(4);
         s.read_stats().retries.add(9);
-        assert_eq!(dispatch_ctx("STATS RESET", &ctx, false), "OK epoch=1");
+        assert_eq!(dispatch_str("STATS RESET", &ctx, false), "OK epoch=1");
         assert_eq!(m.get_latency.count(), 0);
         assert_eq!(m.requests.get(), 0);
         assert_eq!(s.read_stats().retries.get(), 0, "read-path counters join the epoch");
-        let line = dispatch_ctx("STATS SERVER", &ctx, false);
+        let line = dispatch_str("STATS SERVER", &ctx, false);
         assert!(line.contains("epoch=1"), "{line}");
         assert!(line.contains("get_n=0"), "{line}");
         // RESET without metrics is an ERR, and parsing stays strict.
-        assert!(dispatch(&format!("GET {key}"), &s, None).starts_with("OK"));
-        assert!(dispatch("STATS RESET", &s, None).starts_with("ERR"));
-        assert!(dispatch_ctx("STATS RESET extra", &ctx, false).starts_with("ERR"));
+        assert!(d(&format!("GET {key}"), &s).starts_with("OK"));
+        assert!(d("STATS RESET", &s).starts_with("ERR"));
+        assert!(dispatch_str("STATS RESET extra", &ctx, false).starts_with("ERR"));
     }
 
     #[test]
@@ -995,6 +1002,8 @@ mod tests {
             Ok(Arc::new(s))
         })
         .unwrap();
+        // Struct-field init does not unsize-coerce: rebind through the trait.
+        let s: Arc<dyn StorageEngine> = s;
         let ctx = RequestCtx {
             store: &s,
             engine: None,
@@ -1002,21 +1011,21 @@ mod tests {
             persist: Some(&persist),
             procs: None,
         };
-        assert_eq!(dispatch_ctx("UPDATE 1 999 9", &ctx, false), "OK");
-        assert_eq!(dispatch_ctx("UPDATE 777 1 1", &ctx, false), "MISS");
-        assert_eq!(dispatch_ctx("MUPDATE 2 222 2;3 333 3;888 1 1", &ctx, false),
+        assert_eq!(dispatch_str("UPDATE 1 999 9", &ctx, false), "OK");
+        assert_eq!(dispatch_str("UPDATE 777 1 1", &ctx, false), "MISS");
+        assert_eq!(dispatch_str("MUPDATE 2 222 2;3 333 3;888 1 1", &ctx, false),
             "OK applied=2 missed=1");
         // In-batch mutations defer the sync; an explicit group sync lands them.
-        assert_eq!(dispatch_ctx("UPDATE 4 444 4", &ctx, true), "OK");
+        assert_eq!(dispatch_str("UPDATE 4 444 4", &ctx, true), "OK");
         persist.sync().unwrap();
         assert_eq!(persist.metrics().wal_appends.get(), 6);
         let m = ServerMetrics::new();
         let mctx = RequestCtx { metrics: Some(&m), ..ctx };
-        let line = dispatch_ctx("STATS SERVER", &mctx, false);
+        let line = dispatch_str("STATS SERVER", &mctx, false);
         assert!(line.contains("wal_appends=6"), "{line}");
         // STATS RESET opens a fresh window for the WAL counters too.
-        assert_eq!(dispatch_ctx("STATS RESET", &mctx, false), "OK epoch=1");
-        let line = dispatch_ctx("STATS SERVER", &mctx, false);
+        assert_eq!(dispatch_str("STATS RESET", &mctx, false), "OK epoch=1");
+        let line = dispatch_str("STATS SERVER", &mctx, false);
         assert!(line.contains("wal_appends=0"), "{line}");
         drop(persist);
 

@@ -22,9 +22,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::ipc::{IpcError, PointOp, PointReply, ServingPool};
-use crate::memstore::ShardedStore;
 use crate::metrics::ServerMetrics;
 use crate::runtime::AnalyticsService;
+use crate::storage::engine::StorageEngine;
 use crate::util::fmt::push_u64;
 use crate::workload::record::StockUpdate;
 
@@ -279,7 +279,7 @@ fn flush_run(
 pub(crate) fn exec_batch_lines_grouped(
     payload: &[u8],
     bounds: &[usize],
-    store: &Arc<ShardedStore>,
+    store: &Arc<dyn StorageEngine>,
     engine: Option<&Arc<AnalyticsService>>,
     metrics: &ServerMetrics,
     pool: &ServingPool,
@@ -383,7 +383,7 @@ mod tests {
     fn batch_groups_point_runs_and_keeps_line_sync() {
         let pool = pool_with(&[BookRecord::new(1, 100, 2), BookRecord::new(2, 200, 3)]);
         let m = ServerMetrics::new();
-        let store = Arc::new(ShardedStore::new(1, 8));
+        let store = crate::storage::engine::placeholder_engine();
         let mut payload = Vec::new();
         let mut bounds = Vec::new();
         for line in [

@@ -56,9 +56,9 @@ use super::{
 };
 use crate::durability::Persistence;
 use crate::ipc::ServingPool;
-use crate::memstore::ShardedStore;
 use crate::metrics::ServerMetrics;
 use crate::runtime::AnalyticsService;
+use crate::storage::engine::StorageEngine;
 
 /// Injector-eventfd token; connection tokens are slab indices.
 const WAKE_TOKEN: u64 = u64::MAX;
@@ -81,7 +81,7 @@ const READ_CHUNK: usize = 16 << 10;
 
 /// Everything the reactors, the acceptor and the blocking pool share.
 pub(crate) struct Shared {
-    pub store: Arc<ShardedStore>,
+    pub store: Arc<dyn StorageEngine>,
     pub engine: Option<Arc<AnalyticsService>>,
     pub persist: Option<Arc<Persistence>>,
     /// Multi-process worker pool (`serve --processes N`). Every data verb
@@ -467,10 +467,14 @@ fn process_conn(
                     // sync to one group commit — a blocking fsync, so the
                     // group executes on the pool. With a multi-process
                     // backend, the group scatter-gathers over worker RPCs —
-                    // also never on a reactor thread.
+                    // also never on a reactor thread. With a spill-enabled
+                    // engine, any payload GET may fall through to disk —
+                    // same pool hop.
                     conn.batch = Some(BatchState {
                         expect: n,
-                        blocking: shared.persist.is_some() || shared.procs.is_some(),
+                        blocking: shared.persist.is_some()
+                            || shared.procs.is_some()
+                            || shared.store.spill_enabled(),
                     });
                 }
                 _ => {
@@ -487,7 +491,11 @@ fn process_conn(
         let blocking_verb = verb == "ANALYTICS"
             || (shared.persist.is_some() && (verb == "UPDATE" || verb == "MUPDATE"))
             || (shared.procs.is_some()
-                && matches!(verb, "GET" | "UPDATE" | "MGET" | "MUPDATE" | "STATS"));
+                && matches!(verb, "GET" | "UPDATE" | "MGET" | "MUPDATE" | "STATS"))
+            // Spill-enabled engine: point reads can touch disk runs, so
+            // they hop to the pool like ANALYTICS; pure-memory engines
+            // (spill_enabled() == false) keep the inline seqlock path.
+            || (shared.store.spill_enabled() && matches!(verb, "GET" | "MGET" | "STATS"));
         if blocking_verb {
             executed = true;
             let job =
@@ -919,7 +927,7 @@ impl Frontend {
     /// joined before the error propagates.
     #[allow(clippy::too_many_arguments)] // mirrors the Server fields 1:1
     pub(crate) fn build(
-        store: Arc<ShardedStore>,
+        store: Arc<dyn StorageEngine>,
         engine: Option<Arc<AnalyticsService>>,
         persist: Option<Arc<Persistence>>,
         procs: Option<Arc<ServingPool>>,

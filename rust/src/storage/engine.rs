@@ -1,0 +1,215 @@
+//! The storage-engine boundary the server serves through.
+//!
+//! Until PR 8 every serving path named [`ShardedStore`] directly, so each
+//! new storage capability (durability, multi-process, and now the
+//! larger-than-RAM tier) had to thread another concrete type through
+//! `server::{mod, reactor, fallback, procs}`. [`StorageEngine`] collapses
+//! that plumbing into one object-safe trait: the server holds an
+//! `Arc<dyn StorageEngine>` and never cares whether records live purely in
+//! RAM ([`ShardedStore`]) or spill to disk runs
+//! ([`TieredStore`](crate::storage::tiered::TieredStore)).
+//!
+//! Design notes:
+//!
+//! - **Object safety.** The trait is used as `Arc<dyn StorageEngine>`
+//!   across reactor threads, so every method takes `&self` and
+//!   [`StorageEngine::for_each_shard`] takes a `&mut dyn FnMut` instead of
+//!   a generic closure.
+//! - **Read-path stats stay first-class.** `STATS SERVER` reports the
+//!   seqlock retry/fallback counters for *any* engine — a tiered store's
+//!   hot set still reads through the PR-4 lock-free path, and regressions
+//!   there must stay visible.
+//! - **Engine-specific stats ride a suffix.** [`StorageEngine::stats_suffix`]
+//!   defaults to empty; the tiered engine appends its `tier_*` counters so
+//!   `STATS SERVER` output is byte-identical for the pure-memory engine.
+
+use std::sync::Arc;
+
+use crate::memstore::{ReadPathStats, ShardedStore};
+use crate::workload::record::{BookRecord, StockUpdate};
+
+/// Uniform record-store interface for the serving paths. Implemented by
+/// [`ShardedStore`] (pure memory, the paper's engine) and
+/// [`TieredStore`](crate::storage::tiered::TieredStore) (memstore +
+/// LSM-style disk runs).
+pub trait StorageEngine: Send + Sync {
+    /// Point read. May touch disk on a tiered engine — the reactor
+    /// classifies GETs as blocking when [`StorageEngine::spill_enabled`].
+    fn get(&self, key: u64) -> Option<BookRecord>;
+
+    /// Batched point reads, results in input order (`MGET`).
+    fn get_many(&self, keys: &[u64]) -> Vec<Option<BookRecord>>;
+
+    /// Apply one absolute stock update; `false` = no such record (`UPDATE`).
+    fn apply(&self, u: &StockUpdate) -> bool;
+
+    /// Apply a batch; duplicates land in input order. Returns
+    /// `(applied, missed)` (`MUPDATE`).
+    fn apply_many(&self, ups: &[StockUpdate]) -> (u64, u64);
+
+    /// Insert or overwrite one record (bulk load; not a wire verb).
+    fn insert(&self, rec: BookRecord);
+
+    /// Logical record count across every tier.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes of RAM the engine pins (hot tier only — disk bytes are
+    /// reported via [`StorageEngine::stats_suffix`]).
+    fn memory_bytes(&self) -> usize;
+
+    /// `(count, Σ price·qty)` over the logical record set (`STATS`).
+    fn value_sum_cents(&self) -> (u64, u128);
+
+    /// Number of record groups [`StorageEngine::shard_records`] exposes.
+    /// A tiered engine reports one extra trailing group holding its live
+    /// disk records.
+    fn shard_count(&self) -> usize;
+
+    /// Copy of group `i`'s records (one shard lock at most; the tiered
+    /// engine's trailing group is a merged scan of its runs). Groups are
+    /// snapshotted independently, so multi-group aggregates can skew under
+    /// concurrent writes — same contract as the sharded store itself.
+    fn shard_records(&self, i: usize) -> Vec<BookRecord>;
+
+    /// Visit every logical record, grouped by shard (writeback, export,
+    /// multi-process bootstrap). A tiered engine appends its live disk
+    /// records as one synthetic trailing shard.
+    fn for_each_shard(&self, f: &mut dyn FnMut(usize, &[BookRecord])) {
+        for i in 0..self.shard_count() {
+            f(i, &self.shard_records(i));
+        }
+    }
+
+    /// Lock-free read-path counters of the hot tier.
+    fn read_stats(&self) -> &ReadPathStats;
+
+    /// `true` when point reads can fall through to disk — the reactor then
+    /// routes GET/MGET/STATS to the blocking pool, like ANALYTICS.
+    fn spill_enabled(&self) -> bool {
+        false
+    }
+
+    /// Engine-specific `STATS SERVER` suffix (leading space included);
+    /// empty for the pure-memory engine.
+    fn stats_suffix(&self) -> String {
+        String::new()
+    }
+
+    /// Join a `STATS RESET` epoch: zero the engine's traffic counters
+    /// (read-path retries/fallbacks, tier counters) so two measurement
+    /// windows compare cleanly. State gauges stay.
+    fn reset_stats_epoch(&self);
+}
+
+impl StorageEngine for ShardedStore {
+    fn get(&self, key: u64) -> Option<BookRecord> {
+        ShardedStore::get(self, key)
+    }
+
+    fn get_many(&self, keys: &[u64]) -> Vec<Option<BookRecord>> {
+        ShardedStore::get_many(self, keys)
+    }
+
+    fn apply(&self, u: &StockUpdate) -> bool {
+        ShardedStore::apply(self, u)
+    }
+
+    fn apply_many(&self, ups: &[StockUpdate]) -> (u64, u64) {
+        ShardedStore::apply_many(self, ups)
+    }
+
+    fn insert(&self, rec: BookRecord) {
+        ShardedStore::insert(self, rec);
+    }
+
+    fn len(&self) -> usize {
+        ShardedStore::len(self)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        ShardedStore::memory_bytes(self)
+    }
+
+    fn value_sum_cents(&self) -> (u64, u128) {
+        ShardedStore::value_sum_cents(self)
+    }
+
+    fn shard_count(&self) -> usize {
+        ShardedStore::shard_count(self)
+    }
+
+    fn shard_records(&self, i: usize) -> Vec<BookRecord> {
+        ShardedStore::shard_records(self, i)
+    }
+
+    fn read_stats(&self) -> &ReadPathStats {
+        ShardedStore::read_stats(self)
+    }
+
+    fn reset_stats_epoch(&self) {
+        self.read_stats().retries.reset();
+        self.read_stats().fallbacks.reset();
+    }
+}
+
+/// The one engine-construction site server code may use when it needs a
+/// store it will never read (the multi-process front end proxies every
+/// point verb to worker processes).
+pub fn placeholder_engine() -> Arc<dyn StorageEngine> {
+    Arc::new(ShardedStore::new(1, 8))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn up(k: u64, price: u64, qty: u32) -> StockUpdate {
+        StockUpdate { isbn13: k, new_price_cents: price, new_quantity: qty }
+    }
+
+    #[test]
+    fn sharded_store_round_trips_through_the_trait_object() {
+        let engine: Arc<dyn StorageEngine> = Arc::new(ShardedStore::new(4, 64));
+        for k in 1..=100u64 {
+            engine.insert(BookRecord::new(k, 100 + k, k as u32));
+        }
+        assert_eq!(engine.len(), 100);
+        assert!(!engine.is_empty());
+        assert!(!engine.spill_enabled());
+        assert_eq!(engine.stats_suffix(), "");
+        assert_eq!(engine.get(7).unwrap().price_cents, 107);
+        assert_eq!(engine.get(101), None);
+
+        assert!(engine.apply(&up(7, 999, 9)));
+        assert!(!engine.apply(&up(500, 1, 1)));
+        let (applied, missed) = engine.apply_many(&[up(1, 11, 1), up(777, 1, 1)]);
+        assert_eq!((applied, missed), (1, 1));
+
+        let got = engine.get_many(&[1, 7, 500]);
+        assert_eq!(got[0].unwrap().price_cents, 11);
+        assert_eq!(got[1].unwrap().price_cents, 999);
+        assert_eq!(got[2], None);
+
+        let (n, _) = engine.value_sum_cents();
+        assert_eq!(n, 100);
+        assert!(engine.memory_bytes() > 0);
+
+        let mut seen = 0usize;
+        engine.for_each_shard(&mut |_, recs| seen += recs.len());
+        assert_eq!(seen, 100);
+
+        engine.reset_stats_epoch();
+        assert_eq!(engine.read_stats().retries.get(), 0);
+    }
+
+    #[test]
+    fn placeholder_engine_is_tiny_and_empty() {
+        let e = placeholder_engine();
+        assert!(e.is_empty());
+        assert!(!e.spill_enabled());
+    }
+}

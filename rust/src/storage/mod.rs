@@ -1,21 +1,34 @@
-//! Disk-based record store — the *conventional* substrate the paper compares
-//! against (an MS-Access database on a SATA HDD).
+//! Disk-backed storage: the conventional baseline store and, since PR 8,
+//! the serving engine's larger-than-RAM tier.
 //!
-//! The store is real: fixed-slot pages in a data file, an on-disk hash index
-//! with overflow chains, and an LRU page cache. What is *simulated* is the
-//! mechanical latency of a spinning disk ([`latency::DiskProfile`]) — the
-//! testbed has no HDD, and per DESIGN.md §2 the conventional app's cost is
-//! dominated by per-record random I/O. Every uncached page touch charges the
-//! model (and optionally sleeps a scaled-down delay), and the full-scale
-//! modeled time is reported alongside wall-clock so Table 1 can be
-//! regenerated at any `--disk-scale`.
+//! Two distinct disk subsystems live here:
+//!
+//! - **The conventional baseline** (`page`/`pagefile`/`index`/`cache`/
+//!   `table`/`latency`) — the substrate the paper compares against (an
+//!   MS-Access database on a SATA HDD). The store is real: fixed-slot
+//!   pages in a data file, an on-disk hash index with overflow chains, and
+//!   an LRU page cache. What is *simulated* is the mechanical latency of a
+//!   spinning disk ([`latency::DiskProfile`]) — the testbed has no HDD,
+//!   and per DESIGN.md §2 the conventional app's cost is dominated by
+//!   per-record random I/O. Every uncached page touch charges the model
+//!   (and optionally sleeps a scaled-down delay), and the full-scale
+//!   modeled time is reported alongside wall-clock so Table 1 can be
+//!   regenerated at any `--disk-scale`.
+//! - **The serving tier** (`engine`/`tiered`) — the [`StorageEngine`]
+//!   boundary the server routes through, and the [`tiered::TieredStore`]
+//!   implementation that spills cold shards to immutable disk runs when
+//!   the memstore exceeds `--memstore-budget-mb` (DESIGN.md §14).
 
 pub mod cache;
+pub mod engine;
 pub mod index;
 pub mod latency;
 pub mod page;
 pub mod pagefile;
 pub mod table;
+pub mod tiered;
 
+pub use engine::StorageEngine;
 pub use latency::{DiskProfile, DiskSim};
 pub use table::DiskTable;
+pub use tiered::{TierError, TieredOptions, TieredStore};

@@ -1,0 +1,1387 @@
+//! Larger-than-RAM tier: LSM-style spill + compaction under the memstore.
+//!
+//! The paper's engine caps the dataset at RAM. [`TieredStore`] lifts that
+//! cap behind the [`StorageEngine`] boundary: a [`ShardedStore`] holds the
+//! hot set on the PR-4 seqlock read path, and when resident records exceed
+//! the configured budget, whole *cold shards* spill into SSTable-style
+//! immutable runs on disk. Point reads fall through
+//! `memstore → block cache → disk runs (newest-first)`; a background
+//! compactor merges runs and garbage-collects dead versions.
+//!
+//! ## On-disk format
+//!
+//! Each run `run-<seq>.run` is a sorted, immutable file reusing the
+//! snapshot layer's framing discipline: a fixed header, a bloom filter,
+//! then `count` records in ascending key order, each encoded with the
+//! per-record CRC of [`BookRecord::encode`] (`workload::record`) — the
+//! same 24-byte frame the WAL and snapshots use, so a torn or bit-flipped
+//! record can never decode.
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "MRUN"
+//! 4       4     version (u32 LE) = 1
+//! 8       8     record count (u64 LE)
+//! 16      8     min key
+//! 24      8     max key
+//! 32      8     bloom filter length in u64 words
+//! 40      8     reserved (zero)
+//! 48      ..    bloom words, then count × 24-byte CRC-framed records
+//! ```
+//!
+//! ## Run-set manifest
+//!
+//! The live run set is published through `RUNS.json` with the same
+//! tmp + `sync_data` + rename + directory-fsync protocol as the
+//! durability layer's `MANIFEST.json`: a crash between writing a run file
+//! and publishing the manifest leaves an unlisted file that the next
+//! [`TieredStore::open`] garbage-collects; a published manifest always
+//! names fully-synced runs, so records served from disk survive a kill
+//! (`tests/tiered_kill.rs`).
+//!
+//! ## Eviction policy
+//!
+//! Per-shard heat counters (bumped on every routed read) pick the
+//! *coldest non-empty shard*; its records are written to a new run while
+//! the shard's write guard is held (writers to that one shard stall for
+//! the spill, hot shards and lock-free readers elsewhere are untouched),
+//! then removed from the memstore. Heat ages by halving on every spill.
+//! The budget is enforced on *resident records* (budget bytes ÷ ~32 B of
+//! bucket cost per record): the memstore's bucket arrays themselves are
+//! hysteretic (they never shrink), so byte-exact accounting against
+//! `memory_bytes()` would spill forever.
+//!
+//! ## Writes to spilled keys
+//!
+//! `UPDATE`/`MUPDATE` on a key that only lives on disk promotes it: the
+//! record is read from the runs, the absolute update applied, and the
+//! result inserted back into the memstore (write-back). Newest-first read
+//! order makes the disk version stale immediately; compaction drops it.
+//!
+//! ## WAL interaction
+//!
+//! The tier is deliberately **mutually exclusive with durability**
+//! (`EngineConfig` validation rejects `--durable-dir` + a non-zero
+//! budget): the WAL replays into the memstore, and evicting a WAL-covered
+//! record would require snapshot-before-evict bookkeeping the tier does
+//! not yet have. The run set is still crash-safe as a *cache of the
+//! authoritative table* — spilled records survive via the manifest — but
+//! un-spilled memstore writes die with the process, exactly like the
+//! paper's pure-memory engine. See DESIGN.md §14.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::memstore::ShardedStore;
+use crate::metrics::TieredMetrics;
+use crate::storage::index::hash_key;
+use crate::util::json::{self, Json};
+use crate::workload::record::{BookRecord, StockUpdate, RECORD_BYTES};
+
+const RUN_MAGIC: &[u8; 4] = b"MRUN";
+const RUN_VERSION: u32 = 1;
+const RUN_HEADER_BYTES: u64 = 48;
+const RUNS_MANIFEST: &str = "RUNS.json";
+
+/// Block size of the read-through cache over run files. Records never
+/// span more than two blocks (24 B frames, 4 KiB blocks).
+const BLOCK_BYTES: u64 = 4096;
+
+/// Bloom sizing: ~10 bits per key, two probes (≈1% false positives).
+const BLOOM_BITS_PER_KEY: u64 = 10;
+
+/// Approximate resident RAM per memstore record: a 24-byte bucket slot at
+/// 7/8 max load, rounded up for growth slack. Converts the byte budget
+/// into the record budget eviction enforces.
+const RESIDENT_RECORD_BYTES: u64 = 32;
+
+/// Tunables for [`TieredStore::open`].
+#[derive(Debug, Clone)]
+pub struct TieredOptions {
+    /// Memstore budget in bytes; eviction keeps resident records under
+    /// `budget_bytes / 32`.
+    pub budget_bytes: u64,
+    /// Hot-tier shard count (same meaning as [`ShardedStore::new`]).
+    pub shards: usize,
+    /// Per-shard capacity hint for the hot tier.
+    pub capacity_hint: usize,
+    /// Block-cache capacity in 4 KiB blocks.
+    pub cache_blocks: usize,
+    /// Background compaction triggers at this many runs; `0` disables the
+    /// compactor thread (tests drive [`TieredStore::compact_now`]).
+    pub compact_at: usize,
+}
+
+impl Default for TieredOptions {
+    fn default() -> Self {
+        TieredOptions {
+            budget_bytes: 64 << 20,
+            shards: 8,
+            capacity_hint: 1024,
+            cache_blocks: 256,
+            compact_at: 4,
+        }
+    }
+}
+
+/// Errors opening or maintaining the tier directory.
+#[derive(Debug)]
+pub enum TierError {
+    Io(io::Error),
+    /// A manifest-listed run failed to load (bad magic/version/size).
+    Corrupt(String),
+}
+
+impl std::fmt::Display for TierError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TierError::Io(e) => write!(f, "io: {e}"),
+            TierError::Corrupt(e) => write!(f, "corrupt tier dir: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TierError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TierError::Io(e) => Some(e),
+            TierError::Corrupt(_) => None,
+        }
+    }
+}
+
+impl From<io::Error> for TierError {
+    fn from(e: io::Error) -> Self {
+        TierError::Io(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bloom filter
+// ---------------------------------------------------------------------------
+
+/// Fixed-size double-probe bloom over a run's key set. Both probes derive
+/// from the one `hash_key` call the read path already makes.
+struct Bloom {
+    words: Vec<u64>,
+}
+
+impl Bloom {
+    fn bits(&self) -> u64 {
+        self.words.len() as u64 * 64
+    }
+
+    fn probes(&self, key: u64) -> (u64, u64) {
+        let h = hash_key(key);
+        let mask = self.bits() - 1; // bits is a power of two
+        (h & mask, h.rotate_right(23) & mask)
+    }
+
+    fn build(keys: impl Iterator<Item = u64>, count: u64) -> Bloom {
+        let bits = (count.max(1) * BLOOM_BITS_PER_KEY).next_power_of_two().max(64);
+        let mut b = Bloom { words: vec![0u64; (bits / 64) as usize] };
+        for k in keys {
+            let (p1, p2) = b.probes(k);
+            b.words[(p1 / 64) as usize] |= 1 << (p1 % 64);
+            b.words[(p2 / 64) as usize] |= 1 << (p2 % 64);
+        }
+        b
+    }
+
+    fn maybe_contains(&self, key: u64) -> bool {
+        let (p1, p2) = self.probes(key);
+        self.words[(p1 / 64) as usize] & (1 << (p1 % 64)) != 0
+            && self.words[(p2 / 64) as usize] & (1 << (p2 % 64)) != 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Immutable runs
+// ---------------------------------------------------------------------------
+
+/// One immutable sorted run on disk. `file` is only used on block-cache
+/// misses; the header metadata (key range + bloom) lets point reads skip
+/// runs that cannot hold the key without touching the file at all.
+pub(crate) struct Run {
+    seq: u64,
+    path: PathBuf,
+    file: Mutex<File>,
+    count: u64,
+    min_key: u64,
+    max_key: u64,
+    bloom: Bloom,
+    /// Total file size in bytes (disk-usage gauge).
+    bytes: u64,
+    /// Offset of the record region.
+    records_off: u64,
+}
+
+fn run_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("run-{seq}.run"))
+}
+
+fn run_file_name(seq: u64) -> String {
+    format!("run-{seq}.run")
+}
+
+fn parse_run_seq(name: &str) -> Option<u64> {
+    name.strip_prefix("run-")?.strip_suffix(".run")?.parse().ok()
+}
+
+/// Write `recs` (ascending key order, unique keys) as `run-<seq>.run`
+/// under `dir`: tmp file, `sync_data`, rename. The caller publishes the
+/// manifest afterwards; a crash in between leaves an unlisted file that
+/// `open` garbage-collects.
+fn write_run(dir: &Path, seq: u64, recs: &[BookRecord]) -> io::Result<Run> {
+    debug_assert!(recs.windows(2).all(|w| w[0].isbn13 < w[1].isbn13));
+    let count = recs.len() as u64;
+    let bloom = Bloom::build(recs.iter().map(|r| r.isbn13), count);
+    let min_key = recs.first().map(|r| r.isbn13).unwrap_or(0);
+    let max_key = recs.last().map(|r| r.isbn13).unwrap_or(0);
+
+    let final_path = run_path(dir, seq);
+    let tmp = final_path.with_extension("run.tmp");
+    {
+        let mut f = io::BufWriter::new(File::create(&tmp)?);
+        f.write_all(RUN_MAGIC)?;
+        f.write_all(&RUN_VERSION.to_le_bytes())?;
+        f.write_all(&count.to_le_bytes())?;
+        f.write_all(&min_key.to_le_bytes())?;
+        f.write_all(&max_key.to_le_bytes())?;
+        f.write_all(&(bloom.words.len() as u64).to_le_bytes())?;
+        f.write_all(&0u64.to_le_bytes())?; // reserved
+        for w in &bloom.words {
+            f.write_all(&w.to_le_bytes())?;
+        }
+        for r in recs {
+            f.write_all(&r.encode())?;
+        }
+        let f = f.into_inner().map_err(|e| e.into_error())?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, &final_path)?;
+
+    let records_off = RUN_HEADER_BYTES + bloom.words.len() as u64 * 8;
+    let bytes = records_off + count * RECORD_BYTES as u64;
+    let file = File::open(&final_path)?;
+    Ok(Run {
+        seq,
+        path: final_path,
+        file: Mutex::new(file),
+        count,
+        min_key,
+        max_key,
+        bloom,
+        bytes,
+        records_off,
+    })
+}
+
+impl Run {
+    /// Open and validate an existing run file: magic, version, and an
+    /// exact-size check against the header (truncation guard, mirroring
+    /// `durability::snapshot::load_snapshot`). Record payloads are
+    /// validated lazily by their per-record CRC on every read.
+    fn open(path: PathBuf) -> Result<Run, TierError> {
+        let name = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+        let seq = parse_run_seq(&name)
+            .ok_or_else(|| TierError::Corrupt(format!("bad run file name: {name}")))?;
+        let mut file = File::open(&path)?;
+        let mut header = [0u8; RUN_HEADER_BYTES as usize];
+        file.read_exact(&mut header).map_err(|_| {
+            TierError::Corrupt(format!("{name}: shorter than the {RUN_HEADER_BYTES}-byte header"))
+        })?;
+        if &header[0..4] != RUN_MAGIC {
+            return Err(TierError::Corrupt(format!("{name}: bad magic")));
+        }
+        let version = u32::from_le_bytes(header[4..8].try_into().unwrap_or([0; 4]));
+        if version != RUN_VERSION {
+            return Err(TierError::Corrupt(format!("{name}: unsupported version {version}")));
+        }
+        let count = u64::from_le_bytes(header[8..16].try_into().unwrap_or([0; 8]));
+        let min_key = u64::from_le_bytes(header[16..24].try_into().unwrap_or([0; 8]));
+        let max_key = u64::from_le_bytes(header[24..32].try_into().unwrap_or([0; 8]));
+        let bloom_words = u64::from_le_bytes(header[32..40].try_into().unwrap_or([0; 8]));
+        let records_off = RUN_HEADER_BYTES + bloom_words * 8;
+        let expect = records_off + count * RECORD_BYTES as u64;
+        let actual = file.metadata()?.len();
+        if actual != expect {
+            return Err(TierError::Corrupt(format!(
+                "{name}: {actual} bytes on disk, header implies {expect}"
+            )));
+        }
+        let mut words = vec![0u64; bloom_words as usize];
+        let mut buf = vec![0u8; (bloom_words * 8) as usize];
+        file.read_exact(&mut buf)
+            .map_err(|_| TierError::Corrupt(format!("{name}: bloom region truncated")))?;
+        for (i, w) in words.iter_mut().enumerate() {
+            *w = u64::from_le_bytes(buf[i * 8..i * 8 + 8].try_into().unwrap_or([0; 8]));
+        }
+        Ok(Run {
+            seq,
+            path,
+            file: Mutex::new(file),
+            count,
+            min_key,
+            max_key,
+            bloom: Bloom { words },
+            bytes: expect,
+            records_off,
+        })
+    }
+
+    /// Read one 4 KiB-aligned block of the record region from disk.
+    fn read_block(&self, block: u64) -> io::Result<Vec<u8>> {
+        let region = self.count * RECORD_BYTES as u64;
+        let start = block * BLOCK_BYTES;
+        let len = BLOCK_BYTES.min(region.saturating_sub(start));
+        let mut buf = vec![0u8; len as usize];
+        // lint:allow(hot-path-panic): a poisoned file mutex means another
+        // reader panicked mid-seek; the run is unusable either way.
+        let mut f = self.file.lock().unwrap();
+        f.seek(SeekFrom::Start(self.records_off + start))?;
+        f.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Block cache
+// ---------------------------------------------------------------------------
+
+/// Read-through LRU block cache shared by every run of one store —
+/// the tier's analogue of `storage::cache::PageCache`, but read-only over
+/// immutable run files (no dirty tracking, no write-back). Keys are
+/// `(run seq, block index)`; run seqs are never reused, so a compacted
+/// run's stale blocks simply age out.
+struct BlockCache {
+    cap: usize,
+    inner: Mutex<BlockCacheInner>,
+}
+
+struct BlockCacheInner {
+    tick: u64,
+    map: HashMap<(u64, u64), (u64, Vec<u8>)>,
+}
+
+impl BlockCache {
+    fn new(cap: usize) -> BlockCache {
+        BlockCache {
+            cap: cap.max(1),
+            inner: Mutex::new(BlockCacheInner { tick: 0, map: HashMap::new() }),
+        }
+    }
+
+    /// Copy `out.len()` bytes starting at `rel_off` of `run`'s record
+    /// region through the cache (a 24-byte frame can straddle two blocks).
+    fn read_into(
+        &self,
+        run: &Run,
+        rel_off: u64,
+        out: &mut [u8],
+        m: &TieredMetrics,
+    ) -> io::Result<()> {
+        let mut done = 0usize;
+        while done < out.len() {
+            let abs = rel_off + done as u64;
+            let block = abs / BLOCK_BYTES;
+            let within = (abs % BLOCK_BYTES) as usize;
+            let key = (run.seq, block);
+            let mut copied = false;
+            {
+                // lint:allow(hot-path-panic): cache-mutex poisoning is
+                // unrecoverable; propagating it would just move the panic.
+                let mut g = self.inner.lock().unwrap();
+                g.tick += 1;
+                let tick = g.tick;
+                if let Some(entry) = g.map.get_mut(&key) {
+                    entry.0 = tick;
+                    let take = (out.len() - done).min(entry.1.len() - within);
+                    out[done..done + take].copy_from_slice(&entry.1[within..within + take]);
+                    done += take;
+                    copied = true;
+                    m.cache_hits.inc();
+                }
+            }
+            if copied {
+                continue;
+            }
+            // Miss: read outside the lock (concurrent misses may duplicate
+            // the read — benign for immutable files), then insert.
+            m.cache_misses.inc();
+            let data = run.read_block(block)?;
+            let take = (out.len() - done).min(data.len().saturating_sub(within));
+            if take == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "run block shorter than the header-implied record region",
+                ));
+            }
+            out[done..done + take].copy_from_slice(&data[within..within + take]);
+            done += take;
+            // lint:allow(hot-path-panic): same cache-mutex poisoning case.
+            let mut g = self.inner.lock().unwrap();
+            g.tick += 1;
+            let tick = g.tick;
+            if g.map.len() >= self.cap && !g.map.contains_key(&key) {
+                if let Some(&victim) = g.map.iter().min_by_key(|(_, v)| v.0).map(|(k, _)| k) {
+                    g.map.remove(&victim);
+                    m.cache_evictions.inc();
+                }
+            }
+            g.map.insert(key, (tick, data));
+        }
+        Ok(())
+    }
+}
+
+impl Run {
+    /// Point lookup via binary search over the sorted record region.
+    /// `Ok(None)` = key not in this run; `Err` = I/O failure or a record
+    /// that failed its CRC (callers count it and fall through to older
+    /// runs rather than serving a torn frame).
+    fn get(
+        &self,
+        key: u64,
+        cache: &BlockCache,
+        m: &TieredMetrics,
+    ) -> Result<Option<BookRecord>, TierError> {
+        if self.count == 0 || key < self.min_key || key > self.max_key {
+            return Ok(None);
+        }
+        if !self.bloom.maybe_contains(key) {
+            return Ok(None);
+        }
+        let mut lo = 0u64;
+        let mut hi = self.count;
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            let rec = self.read_record(mid, cache, m)?;
+            if rec.isbn13 < key {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        if lo < self.count {
+            let rec = self.read_record(lo, cache, m)?;
+            if rec.isbn13 == key {
+                return Ok(Some(rec));
+            }
+        }
+        Ok(None)
+    }
+
+    fn read_record(
+        &self,
+        i: u64,
+        cache: &BlockCache,
+        m: &TieredMetrics,
+    ) -> Result<BookRecord, TierError> {
+        let mut buf = [0u8; RECORD_BYTES];
+        cache.read_into(self, i * RECORD_BYTES as u64, &mut buf, m)?;
+        BookRecord::decode(&buf).map_err(|e| {
+            m.corrupt_records.inc();
+            TierError::Corrupt(format!("{}: record {i}: {e:?}", self.path.display()))
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Run-set manifest
+// ---------------------------------------------------------------------------
+
+/// Atomically publish `RUNS.json` (tmp + `sync_data` + rename + directory
+/// fsync — the durability layer's manifest protocol). Lists the run set
+/// newest-first; every listed file is fully synced before this runs.
+fn write_runs_manifest(dir: &Path, next_seq: u64, runs: &[Arc<Run>]) -> io::Result<()> {
+    let j = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("next_seq", Json::num(next_seq as f64)),
+        (
+            "runs",
+            Json::arr(runs.iter().map(|r| Json::str(run_file_name(r.seq))).collect()),
+        ),
+    ]);
+    let tmp = dir.join("RUNS.json.tmp");
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(j.to_string_pretty().as_bytes())?;
+        f.write_all(b"\n")?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, dir.join(RUNS_MANIFEST))?;
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all(); // directory entry durability (best effort)
+    }
+    Ok(())
+}
+
+/// `(next_seq, run file names newest-first)`, or `None` when absent or
+/// unparseable (an empty tier).
+fn read_runs_manifest(dir: &Path) -> Option<(u64, Vec<String>)> {
+    let text = std::fs::read_to_string(dir.join(RUNS_MANIFEST)).ok()?;
+    let j = json::parse(&text).ok()?;
+    let next = j.get("next_seq")?.as_f64()?;
+    if !next.is_finite() || next < 0.0 {
+        return None;
+    }
+    let names = j
+        .get("runs")?
+        .as_arr()?
+        .iter()
+        .map(|r| r.as_str().map(|s| s.to_string()))
+        .collect::<Option<Vec<_>>>()?;
+    Some((next as u64, names))
+}
+
+// ---------------------------------------------------------------------------
+// The tiered store
+// ---------------------------------------------------------------------------
+
+struct TieredShared {
+    mem: ShardedStore,
+    dir: PathBuf,
+    /// Eviction threshold in resident records (`budget_bytes / 32`).
+    budget_records: u64,
+    /// Records currently resident in the memstore (maintained by every
+    /// mutation path; cheaper than `mem.len()`'s per-shard lock sweep).
+    resident: AtomicU64,
+    /// Per-shard read heat; coldest shard spills first, halved on spill.
+    heat: Vec<AtomicU64>,
+    /// Live run set, newest-first. Readers clone the `Arc` and search
+    /// without any lock held; writers swap in a new list after the
+    /// manifest is published.
+    runs: Mutex<Arc<Vec<Arc<Run>>>>,
+    next_seq: AtomicU64,
+    /// Serializes the structural writers (spill, compaction, flush) so the
+    /// newest-first invariant of run seqs can never interleave.
+    tier_lock: Mutex<()>,
+    cache: BlockCache,
+    compact_at: usize,
+    metrics: TieredMetrics,
+    stop: AtomicBool,
+}
+
+/// Memstore + disk-run store behind the [`StorageEngine`] API. Construct
+/// with [`TieredStore::open`] (recovers the run set from `RUNS.json`) or
+/// [`TieredStore::open_clean`] (wipes the tier directory first — the serve
+/// path, where the authoritative table is reloaded anyway).
+///
+/// [`StorageEngine`]: crate::storage::engine::StorageEngine
+pub struct TieredStore {
+    shared: Arc<TieredShared>,
+    compactor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TieredStore {
+    pub fn open(dir: impl AsRef<Path>, opts: TieredOptions) -> Result<TieredStore, TierError> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+
+        let (next_seq, listed) = read_runs_manifest(&dir).unwrap_or((0, Vec::new()));
+        let mut runs: Vec<Arc<Run>> = Vec::with_capacity(listed.len());
+        for name in &listed {
+            runs.push(Arc::new(Run::open(dir.join(name))?));
+        }
+        // GC files the manifest does not own: runs written but never
+        // published (crash mid-spill), stale tmp files, compacted inputs.
+        if let Ok(rd) = std::fs::read_dir(&dir) {
+            for e in rd.flatten() {
+                let name = e.file_name().to_string_lossy().into_owned();
+                let unlisted = parse_run_seq(&name).is_some() && !listed.contains(&name);
+                if unlisted || name.ends_with(".tmp") {
+                    let _ = std::fs::remove_file(e.path());
+                }
+            }
+        }
+
+        let shards = opts.shards.max(1);
+        let shared = Arc::new(TieredShared {
+            mem: ShardedStore::new(shards, opts.capacity_hint),
+            dir,
+            budget_records: (opts.budget_bytes / RESIDENT_RECORD_BYTES).max(1),
+            resident: AtomicU64::new(0),
+            heat: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            runs: Mutex::new(Arc::new(runs)),
+            next_seq: AtomicU64::new(next_seq),
+            tier_lock: Mutex::new(()),
+            cache: BlockCache::new(opts.cache_blocks),
+            compact_at: opts.compact_at,
+            metrics: TieredMetrics::new(),
+            stop: AtomicBool::new(false),
+        });
+        shared.publish_gauges(&shared.runs_snapshot());
+        let compactor = spawn_compactor(shared.clone());
+        Ok(TieredStore { shared, compactor })
+    }
+
+    /// [`TieredStore::open`] after wiping the tier directory — for serving
+    /// paths that reload the authoritative dataset at startup and must not
+    /// resurrect runs of a previous process.
+    pub fn open_clean(
+        dir: impl AsRef<Path>,
+        opts: TieredOptions,
+    ) -> Result<TieredStore, TierError> {
+        let _ = std::fs::remove_dir_all(dir.as_ref());
+        Self::open(dir, opts)
+    }
+
+    /// Tier metrics (also rendered into `STATS SERVER` via
+    /// `StorageEngine::stats_suffix`).
+    pub fn tiered_metrics(&self) -> &TieredMetrics {
+        &self.shared.metrics
+    }
+
+    /// Current number of live runs.
+    pub fn run_count(&self) -> usize {
+        self.shared.runs_snapshot().len()
+    }
+
+    /// Bytes across all live run files.
+    pub fn disk_bytes(&self) -> u64 {
+        self.shared.runs_snapshot().iter().map(|r| r.bytes).sum()
+    }
+
+    /// Records currently resident in the hot tier.
+    pub fn resident_records(&self) -> u64 {
+        self.shared.resident.load(Ordering::Relaxed)
+    }
+
+    /// Spill every non-empty shard to disk (tests and benches: force every
+    /// record onto the fallthrough path).
+    pub fn flush(&self) -> Result<(), TierError> {
+        self.shared.flush()
+    }
+
+    /// Merge every run into one and drop dead versions, synchronously.
+    /// Returns `false` when there was nothing to compact (fewer than two
+    /// runs). The background compactor uses the same serialized path.
+    pub fn compact_now(&self) -> Result<bool, TierError> {
+        self.shared.compact()
+    }
+}
+
+impl Drop for TieredStore {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        if let Some(j) = self.compactor.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl TieredShared {
+    fn runs_snapshot(&self) -> Arc<Vec<Arc<Run>>> {
+        // lint:allow(hot-path-panic): runs-mutex poisoning is unrecoverable.
+        self.runs.lock().unwrap().clone()
+    }
+
+    fn publish_gauges(&self, runs: &[Arc<Run>]) {
+        self.metrics.runs.set(runs.len() as i64);
+        let bytes: u64 = runs.iter().map(|r| r.bytes).sum();
+        self.metrics.disk_bytes.set(bytes.min(i64::MAX as u64) as i64);
+        self.metrics
+            .resident_records
+            .set(self.resident.load(Ordering::Relaxed).min(i64::MAX as u64) as i64);
+    }
+
+    /// Point read through the tiers: memstore, then runs newest-first
+    /// (key-range + bloom skips, block cache under each probe).
+    fn get(&self, key: u64) -> Option<BookRecord> {
+        self.heat[self.mem.route(key)].fetch_add(1, Ordering::Relaxed);
+        if let Some(r) = self.mem.get(key) {
+            self.metrics.mem_hits.inc();
+            return Some(r);
+        }
+        self.disk_get(key)
+    }
+
+    fn disk_get(&self, key: u64) -> Option<BookRecord> {
+        let runs = self.runs_snapshot();
+        for run in runs.iter() {
+            match run.get(key, &self.cache, &self.metrics) {
+                Ok(Some(r)) => {
+                    self.metrics.disk_hits.inc();
+                    return Some(r);
+                }
+                Ok(None) => {}
+                // Skip a run we cannot read rather than failing the GET: a
+                // CRC-invalid or unreadable frame must never be served, and
+                // an older run may still hold a (stale but valid) version.
+                Err(_) => self.metrics.disk_errors.inc(),
+            }
+        }
+        self.metrics.misses.inc();
+        None
+    }
+
+    fn insert(&self, rec: BookRecord) {
+        if self.mem.insert(rec).is_none() {
+            self.resident.fetch_add(1, Ordering::Relaxed);
+        }
+        self.maybe_spill();
+    }
+
+    /// Absolute update with write-back promotion: a key found only on disk
+    /// is read, updated, and re-inserted into the memstore; the disk
+    /// version becomes a dead version for the compactor.
+    fn apply(&self, u: &StockUpdate) -> bool {
+        if self.mem.apply(u) {
+            return true;
+        }
+        match self.disk_get(u.isbn13) {
+            Some(mut r) => {
+                u.apply_to(&mut r);
+                self.metrics.promotions.inc();
+                self.insert(r);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn get_many(&self, keys: &[u64]) -> Vec<Option<BookRecord>> {
+        for &k in keys {
+            self.heat[self.mem.route(k)].fetch_add(1, Ordering::Relaxed);
+        }
+        let mut out = self.mem.get_many(keys);
+        for (i, slot) in out.iter_mut().enumerate() {
+            match slot {
+                Some(_) => self.metrics.mem_hits.inc(),
+                None => *slot = self.disk_get(keys[i]),
+            }
+        }
+        out
+    }
+
+    /// Batch update: the memstore's shard-affine bulk path first, then a
+    /// per-key promotion pass for whatever it missed. Input-order
+    /// last-writer-wins holds across the promotion boundary: duplicates of
+    /// a promoted key re-apply in order after the first promotion.
+    fn apply_many(&self, ups: &[StockUpdate]) -> (u64, u64) {
+        let (mut applied, bulk_missed) = self.mem.apply_many(ups);
+        let mut missed = 0u64;
+        if bulk_missed > 0 {
+            let mut promoted = std::collections::HashSet::new();
+            let mut absent = std::collections::HashSet::new();
+            for u in ups {
+                let k = u.isbn13;
+                if promoted.contains(&k) {
+                    self.mem.apply(u);
+                    applied += 1;
+                    continue;
+                }
+                if absent.contains(&k) {
+                    missed += 1;
+                    continue;
+                }
+                if self.mem.get(k).is_some() {
+                    continue; // served by the bulk pass
+                }
+                match self.disk_get(k) {
+                    Some(mut r) => {
+                        u.apply_to(&mut r);
+                        self.metrics.promotions.inc();
+                        if self.mem.insert(r).is_none() {
+                            self.resident.fetch_add(1, Ordering::Relaxed);
+                        }
+                        promoted.insert(k);
+                        applied += 1;
+                    }
+                    None => {
+                        absent.insert(k);
+                        missed += 1;
+                    }
+                }
+            }
+        }
+        self.maybe_spill();
+        (applied, missed)
+    }
+
+    /// Enforce the resident-record budget: spill coldest shards until
+    /// under budget (or nothing spillable remains). A spill failure leaves
+    /// the records safely in RAM — over budget, never lossy.
+    fn maybe_spill(&self) {
+        while self.resident.load(Ordering::Relaxed) > self.budget_records {
+            // lint:allow(hot-path-panic): tier-lock poisoning is unrecoverable.
+            let _serialize = self.tier_lock.lock().unwrap();
+            if self.resident.load(Ordering::Relaxed) <= self.budget_records {
+                return; // another writer spilled while we waited
+            }
+            match self.spill_coldest() {
+                Ok(true) => {}
+                Ok(false) => return, // nothing left to spill
+                Err(e) => {
+                    self.metrics.spill_errors.inc();
+                    eprintln!("membig: tier spill failed (records stay in RAM): {e}");
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Pick the coldest non-empty shard and spill it. Caller holds
+    /// `tier_lock`.
+    fn spill_coldest(&self) -> Result<bool, TierError> {
+        let sizes = self.mem.shard_sizes();
+        let mut pick: Option<(usize, u64, usize)> = None; // (shard, heat, len)
+        for (i, &len) in sizes.iter().enumerate() {
+            if len == 0 {
+                continue;
+            }
+            let h = self.heat[i].load(Ordering::Relaxed);
+            let better = match pick {
+                None => true,
+                // Colder wins; equal heat → the bigger shard frees more.
+                Some((_, ph, plen)) => h < ph || (h == ph && len > plen),
+            };
+            if better {
+                pick = Some((i, h, len));
+            }
+        }
+        let Some((shard, _, _)) = pick else {
+            return Ok(false);
+        };
+        self.spill_shard(shard)?;
+        // Age the heat so one hot burst does not pin a shard forever.
+        for h in &self.heat {
+            h.store(h.load(Ordering::Relaxed) / 2, Ordering::Relaxed);
+        }
+        self.heat[shard].store(0, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    /// Write shard `i`'s records to a new run and remove them from the
+    /// memstore. The shard's write guard is held across the file write:
+    /// writers to this (cold) shard stall for the spill; every other shard
+    /// and all lock-free readers elsewhere proceed. Publish order — run
+    /// file synced, run list + manifest, then memstore removal — means a
+    /// reader that misses the memstore always finds the new run in its
+    /// snapshot.
+    fn spill_shard(&self, i: usize) -> Result<usize, TierError> {
+        let mut guard = self.mem.shard(i);
+        let mut recs: Vec<BookRecord> = guard.iter().collect();
+        if recs.is_empty() {
+            return Ok(0);
+        }
+        recs.sort_unstable_by_key(|r| r.isbn13);
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let run = Arc::new(write_run(&self.dir, seq, &recs)?);
+        {
+            // lint:allow(hot-path-panic): runs-mutex poisoning is unrecoverable.
+            let mut runs = self.runs.lock().unwrap();
+            let mut v: Vec<Arc<Run>> = Vec::with_capacity(runs.len() + 1);
+            v.push(run);
+            v.extend(runs.iter().cloned());
+            let v = Arc::new(v);
+            write_runs_manifest(&self.dir, self.next_seq.load(Ordering::Relaxed), &v)?;
+            *runs = v;
+        }
+        for r in &recs {
+            guard.remove(r.isbn13);
+        }
+        drop(guard);
+        self.resident.fetch_sub(recs.len() as u64, Ordering::Relaxed);
+        self.metrics.spills.inc();
+        self.metrics.spilled_records.add(recs.len() as u64);
+        self.publish_gauges(&self.runs_snapshot());
+        Ok(recs.len())
+    }
+
+    fn flush(&self) -> Result<(), TierError> {
+        // lint:allow(hot-path-panic): tier-lock poisoning is unrecoverable.
+        let _serialize = self.tier_lock.lock().unwrap();
+        for i in 0..self.mem.shard_count() {
+            self.spill_shard(i)?;
+        }
+        Ok(())
+    }
+
+    /// Merge every run into one, keeping only the newest disk version of
+    /// each key and dropping versions shadowed by the memstore (dead-
+    /// version GC — a memstore record is always at least as new as any
+    /// disk version of its key, and eviction is serialized with this path
+    /// by `tier_lock`). Old run files are unlinked after the new manifest
+    /// is live; a crash in between leaves them unlisted for `open`'s GC.
+    fn compact(&self) -> Result<bool, TierError> {
+        // lint:allow(hot-path-panic): tier-lock poisoning is unrecoverable.
+        let _serialize = self.tier_lock.lock().unwrap();
+        let old = self.runs_snapshot();
+        if old.len() < 2 {
+            return Ok(false);
+        }
+        let mut merged: Vec<BookRecord> = Vec::new();
+        self.merge_live(&old, &mut |r| merged.push(r));
+        let new_list: Arc<Vec<Arc<Run>>> = if merged.is_empty() {
+            Arc::new(Vec::new())
+        } else {
+            let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+            Arc::new(vec![Arc::new(write_run(&self.dir, seq, &merged)?)])
+        };
+        {
+            // lint:allow(hot-path-panic): runs-mutex poisoning is unrecoverable.
+            let mut runs = self.runs.lock().unwrap();
+            write_runs_manifest(&self.dir, self.next_seq.load(Ordering::Relaxed), &new_list)?;
+            *runs = new_list;
+        }
+        for r in old.iter() {
+            let _ = std::fs::remove_file(&r.path); // best effort; open() GCs
+        }
+        self.metrics.compactions.inc();
+        self.publish_gauges(&self.runs_snapshot());
+        Ok(true)
+    }
+
+    /// K-way merge over `runs` (newest-first), emitting the newest disk
+    /// version of each key that is *not* shadowed by the memstore, in
+    /// ascending key order. Unreadable records are counted and skipped.
+    fn merge_live(&self, runs: &[Arc<Run>], f: &mut dyn FnMut(BookRecord)) {
+        struct Cursor<'a> {
+            run: &'a Run,
+            idx: u64,
+            cur: Option<BookRecord>,
+        }
+        let advance = |c: &mut Cursor<'_>, cache: &BlockCache, m: &TieredMetrics| {
+            c.cur = None;
+            while c.idx < c.run.count {
+                let i = c.idx;
+                c.idx += 1;
+                match c.run.read_record(i, cache, m) {
+                    Ok(rec) => {
+                        c.cur = Some(rec);
+                        return;
+                    }
+                    Err(TierError::Io(_)) => {
+                        // An unreadable block ends this run's scan; its
+                        // still-live keys survive in the inputs (the merge
+                        // aborts manifest-publish on write errors only).
+                        m.disk_errors.inc();
+                        c.idx = c.run.count;
+                        return;
+                    }
+                    Err(TierError::Corrupt(_)) => continue, // counted; skip frame
+                }
+            }
+        };
+        let mut cursors: Vec<Cursor<'_>> = runs
+            .iter()
+            .map(|r| Cursor { run: r, idx: 0, cur: None })
+            .collect();
+        for c in cursors.iter_mut() {
+            advance(c, &self.cache, &self.metrics);
+        }
+        loop {
+            let Some(min_key) =
+                cursors.iter().filter_map(|c| c.cur.map(|r| r.isbn13)).min()
+            else {
+                break;
+            };
+            // Newest-first list order: the first cursor at min_key wins.
+            let mut emit: Option<BookRecord> = None;
+            for c in cursors.iter_mut() {
+                if c.cur.map(|r| r.isbn13) == Some(min_key) {
+                    if emit.is_none() {
+                        emit = c.cur;
+                    }
+                    advance(c, &self.cache, &self.metrics);
+                }
+            }
+            if let Some(rec) = emit {
+                if self.mem.get(rec.isbn13).is_none() {
+                    f(rec);
+                }
+            }
+        }
+    }
+
+    /// `(count, Σ price·qty)` over the logical record set: the memstore
+    /// plus every live (unshadowed) disk record. O(dataset) with disk
+    /// reads — STATS-class, never on the point-read path.
+    fn value_sum_cents(&self) -> (u64, u128) {
+        let (mut n, mut sum) = self.mem.value_sum_cents();
+        let runs = self.runs_snapshot();
+        self.merge_live(&runs, &mut |r| {
+            n += 1;
+            sum += r.value_cents();
+        });
+        (n, sum)
+    }
+
+    fn len(&self) -> usize {
+        let mut n = self.mem.len();
+        let runs = self.runs_snapshot();
+        self.merge_live(&runs, &mut |_| n += 1);
+        n
+    }
+}
+
+/// Background compactor: ticks every ~100 ms and merges once the run
+/// count reaches `compact_at`. Not spawned when disabled (`compact_at ==
+/// 0`); `compact_now` still works.
+fn spawn_compactor(shared: Arc<TieredShared>) -> Option<std::thread::JoinHandle<()>> {
+    if shared.compact_at == 0 {
+        return None;
+    }
+    std::thread::Builder::new()
+        .name("membig-compactor".into())
+        .spawn(move || loop {
+            for _ in 0..5 {
+                if shared.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            let due = shared.runs_snapshot().len() >= shared.compact_at;
+            if due {
+                if let Err(e) = shared.compact() {
+                    // Not fatal: the pre-compaction run set stays live.
+                    shared.metrics.disk_errors.inc();
+                    eprintln!("membig: background compaction failed (run set unchanged): {e}");
+                }
+            }
+        })
+        .ok()
+}
+
+impl crate::storage::engine::StorageEngine for TieredStore {
+    fn get(&self, key: u64) -> Option<BookRecord> {
+        self.shared.get(key)
+    }
+
+    fn get_many(&self, keys: &[u64]) -> Vec<Option<BookRecord>> {
+        self.shared.get_many(keys)
+    }
+
+    fn apply(&self, u: &StockUpdate) -> bool {
+        self.shared.apply(u)
+    }
+
+    fn apply_many(&self, ups: &[StockUpdate]) -> (u64, u64) {
+        self.shared.apply_many(ups)
+    }
+
+    fn insert(&self, rec: BookRecord) {
+        self.shared.insert(rec);
+    }
+
+    fn len(&self) -> usize {
+        self.shared.len()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.shared.mem.memory_bytes()
+    }
+
+    fn value_sum_cents(&self) -> (u64, u128) {
+        self.shared.value_sum_cents()
+    }
+
+    fn shard_count(&self) -> usize {
+        // The hot-tier shards plus one trailing group of live disk records.
+        self.shared.mem.shard_count() + 1
+    }
+
+    fn shard_records(&self, i: usize) -> Vec<BookRecord> {
+        if i < self.shared.mem.shard_count() {
+            return self.shared.mem.shard_records(i);
+        }
+        let runs = self.shared.runs_snapshot();
+        let mut disk: Vec<BookRecord> = Vec::new();
+        self.shared.merge_live(&runs, &mut |r| disk.push(r));
+        disk
+    }
+
+    fn read_stats(&self) -> &crate::memstore::ReadPathStats {
+        self.shared.mem.read_stats()
+    }
+
+    fn spill_enabled(&self) -> bool {
+        true
+    }
+
+    fn stats_suffix(&self) -> String {
+        self.shared.metrics.stats_suffix()
+    }
+
+    fn reset_stats_epoch(&self) {
+        let rs = self.shared.mem.read_stats();
+        rs.retries.reset();
+        rs.fallbacks.reset();
+        self.shared.metrics.reset_epoch_counters();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::engine::StorageEngine;
+
+    fn tdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("membig_tiered_{}", std::process::id()))
+            .join(name);
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn opts(budget_records: u64) -> TieredOptions {
+        TieredOptions {
+            budget_bytes: budget_records * RESIDENT_RECORD_BYTES,
+            shards: 4,
+            capacity_hint: 64,
+            cache_blocks: 8,
+            compact_at: 0, // tests drive compaction explicitly
+        }
+    }
+
+    fn up(k: u64, price: u64, qty: u32) -> StockUpdate {
+        StockUpdate { isbn13: k, new_price_cents: price, new_quantity: qty }
+    }
+
+    #[test]
+    fn run_roundtrip_with_metadata_skips() {
+        let dir = tdir("run_rt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let recs: Vec<BookRecord> =
+            (1..=500u64).map(|k| BookRecord::new(k * 3, 100 + k, k as u32)).collect();
+        let m = TieredMetrics::new();
+        let cache = BlockCache::new(4);
+        let run = write_run(&dir, 7, &recs).unwrap();
+        assert_eq!(run.count, 500);
+        assert_eq!((run.min_key, run.max_key), (3, 1500));
+        for k in (1..=500u64).step_by(17) {
+            assert_eq!(run.get(k * 3, &cache, &m).unwrap().unwrap(), recs[k as usize - 1]);
+        }
+        // Out-of-range and bloom-rejected keys never touch the file.
+        let misses_before = m.cache_misses.get();
+        assert_eq!(run.get(2000 * 3, &cache, &m).unwrap(), None);
+        assert_eq!(m.cache_misses.get(), misses_before, "range skip must not read");
+        // In-range absent key: bloom may pass, lookup still misses.
+        assert_eq!(run.get(4, &cache, &m).unwrap(), None);
+        // Reopen from disk and read again.
+        let reopened = Run::open(run_path(&dir, 7)).unwrap();
+        assert_eq!(reopened.get(9, &cache, &m).unwrap().unwrap(), recs[2]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn run_open_rejects_truncation_and_bad_magic() {
+        let dir = tdir("run_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let recs: Vec<BookRecord> = (1..=100u64).map(|k| BookRecord::new(k, 1, 1)).collect();
+        write_run(&dir, 1, &recs).unwrap();
+        let p = run_path(&dir, 1);
+        let len = std::fs::metadata(&p).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&p).unwrap();
+        f.set_len(len - 10).unwrap();
+        drop(f);
+        assert!(matches!(Run::open(p.clone()), Err(TierError::Corrupt(_))));
+
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(matches!(Run::open(p), Err(TierError::Corrupt(_))));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_record_is_skipped_not_served() {
+        let dir = tdir("run_crc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let recs: Vec<BookRecord> = (1..=50u64).map(|k| BookRecord::new(k, 100, 1)).collect();
+        let run = write_run(&dir, 3, &recs).unwrap();
+        // Flip a payload bit of record 10 (key 11) on disk.
+        let off = run.records_off + 10 * RECORD_BYTES as u64 + 9;
+        let mut data = std::fs::read(&run.path).unwrap();
+        data[off as usize] ^= 0x40;
+        std::fs::write(&run.path, &data).unwrap();
+        let reopened = Run::open(run_path(&dir, 3)).unwrap();
+        let m = TieredMetrics::new();
+        let cache = BlockCache::new(4);
+        assert!(reopened.get(11, &cache, &m).is_err(), "torn frame must not decode");
+        assert_eq!(m.corrupt_records.get(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn over_budget_load_spills_and_every_key_reads_back() {
+        let dir = tdir("spill");
+        let store = TieredStore::open_clean(&dir, opts(100)).unwrap();
+        for k in 1..=1000u64 {
+            StorageEngine::insert(&store, BookRecord::new(k, 100 + k, k as u32));
+        }
+        assert!(store.run_count() > 0, "over-budget load must spill runs");
+        assert!(store.resident_records() <= 100);
+        assert!(store.disk_bytes() > 0);
+        assert!(store.tiered_metrics().spills.get() > 0);
+        for k in 1..=1000u64 {
+            let r = StorageEngine::get(&store, k).unwrap_or_else(|| panic!("lost key {k}"));
+            assert_eq!((r.price_cents, r.quantity), (100 + k, k as u32), "key {k}");
+        }
+        assert!(store.tiered_metrics().disk_hits.get() > 0, "some reads must come from runs");
+        assert_eq!(StorageEngine::len(&store), 1000);
+        let (n, sum) = StorageEngine::value_sum_cents(&store);
+        assert_eq!(n, 1000);
+        let naive: u128 = (1..=1000u64).map(|k| (100 + k) as u128 * k as u128).sum();
+        assert_eq!(sum, naive);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn update_of_spilled_key_promotes_and_wins() {
+        let dir = tdir("promote");
+        let store = TieredStore::open_clean(&dir, opts(10_000)).unwrap();
+        for k in 1..=200u64 {
+            StorageEngine::insert(&store, BookRecord::new(k, 1, 1));
+        }
+        store.flush().unwrap();
+        assert_eq!(store.resident_records(), 0);
+        assert!(StorageEngine::apply(&store, &up(42, 999, 9)));
+        assert_eq!(store.tiered_metrics().promotions.get(), 1);
+        let r = StorageEngine::get(&store, 42).unwrap();
+        assert_eq!((r.price_cents, r.quantity), (999, 9), "promoted value shadows the run");
+        assert!(!StorageEngine::apply(&store, &up(9999, 1, 1)), "absent key still misses");
+        // Batch with duplicates across the promotion boundary.
+        let (applied, missed) = StorageEngine::apply_many(
+            &store,
+            &[up(7, 10, 1), up(7, 20, 2), up(12345, 1, 1)],
+        );
+        assert_eq!((applied, missed), (2, 1));
+        let r = StorageEngine::get(&store, 7).unwrap();
+        assert_eq!((r.price_cents, r.quantity), (20, 2), "last duplicate wins after promotion");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compaction_merges_runs_and_drops_dead_versions() {
+        let dir = tdir("compact");
+        let store = TieredStore::open_clean(&dir, opts(10_000)).unwrap();
+        for k in 1..=300u64 {
+            StorageEngine::insert(&store, BookRecord::new(k, 1, 1));
+        }
+        store.flush().unwrap();
+        let runs_before = store.run_count();
+        assert!(runs_before >= 2, "per-shard flush writes one run per shard");
+        // Churn: promote a third of the keys (their run versions go dead),
+        // then spill again so the dead versions coexist with newer ones.
+        for k in (1..=300u64).step_by(3) {
+            assert!(StorageEngine::apply(&store, &up(k, 777, 7)));
+        }
+        store.flush().unwrap();
+        let bytes_before = store.disk_bytes();
+        assert!(store.run_count() > runs_before);
+
+        assert!(store.compact_now().unwrap());
+        assert_eq!(store.run_count(), 1, "compaction must merge to a single run");
+        assert!(store.disk_bytes() < bytes_before, "dead versions must be GC'd");
+        assert_eq!(store.tiered_metrics().compactions.get(), 1);
+        for k in 1..=300u64 {
+            let want = if k % 3 == 1 { 777 } else { 1 };
+            assert_eq!(StorageEngine::get(&store, k).unwrap().price_cents, want, "key {k}");
+        }
+        assert_eq!(StorageEngine::len(&store), 300);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn background_compactor_reduces_run_count() {
+        let dir = tdir("bg_compact");
+        let mut o = opts(10_000);
+        o.compact_at = 3;
+        let store = TieredStore::open_clean(&dir, o).unwrap();
+        for k in 1..=100u64 {
+            StorageEngine::insert(&store, BookRecord::new(k, 5, 5));
+        }
+        store.flush().unwrap();
+        assert!(store.run_count() >= 3);
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while store.run_count() > 1 {
+            assert!(std::time::Instant::now() < deadline, "compactor never merged");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(store.tiered_metrics().compactions.get() >= 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reopen_recovers_runs_from_manifest_and_gcs_strays() {
+        let dir = tdir("reopen");
+        {
+            let store = TieredStore::open_clean(&dir, opts(10_000)).unwrap();
+            for k in 1..=150u64 {
+                StorageEngine::insert(&store, BookRecord::new(k, 2 * k, 2));
+            }
+            store.flush().unwrap();
+            assert!(store.run_count() >= 1);
+        }
+        // Simulate a crash mid-spill: an orphan run file the manifest
+        // never published, plus a stale tmp.
+        std::fs::write(dir.join("run-999.run"), b"garbage").unwrap();
+        std::fs::write(dir.join("RUNS.json.tmp"), b"{").unwrap();
+
+        let store = TieredStore::open(&dir, opts(10_000)).unwrap();
+        assert!(!dir.join("run-999.run").exists(), "unlisted run must be GC'd");
+        assert!(!dir.join("RUNS.json.tmp").exists(), "stale tmp must be GC'd");
+        assert_eq!(store.resident_records(), 0, "reopen starts with a cold memstore");
+        for k in 1..=150u64 {
+            assert_eq!(
+                StorageEngine::get(&store, k).unwrap().price_cents,
+                2 * k,
+                "key {k} must survive via the run manifest"
+            );
+        }
+        assert_eq!(StorageEngine::len(&store), 150);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stats_suffix_and_reset_epoch() {
+        let dir = tdir("stats");
+        let store = TieredStore::open_clean(&dir, opts(50)).unwrap();
+        for k in 1..=400u64 {
+            StorageEngine::insert(&store, BookRecord::new(k, 1, 1));
+        }
+        for k in 1..=400u64 {
+            StorageEngine::get(&store, k);
+        }
+        let s = StorageEngine::stats_suffix(&store);
+        assert!(s.starts_with(" tier_spills="), "suffix must lead with a space: {s:?}");
+        assert!(s.contains(" tier_runs="));
+        assert!(s.contains(" tier_disk_bytes="));
+        assert!(s.contains(" tier_cache_hit_rate="));
+        assert!(StorageEngine::spill_enabled(&store));
+        StorageEngine::reset_stats_epoch(&store);
+        assert_eq!(store.tiered_metrics().mem_hits.get(), 0);
+        assert_eq!(store.tiered_metrics().disk_hits.get(), 0);
+        assert!(store.tiered_metrics().runs.get() > 0, "gauges survive the epoch reset");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn for_each_shard_visits_memstore_and_disk_records_once() {
+        let dir = tdir("fes");
+        let store = TieredStore::open_clean(&dir, opts(10_000)).unwrap();
+        for k in 1..=100u64 {
+            StorageEngine::insert(&store, BookRecord::new(k, 3, 3));
+        }
+        store.flush().unwrap();
+        for k in 101..=160u64 {
+            StorageEngine::insert(&store, BookRecord::new(k, 3, 3));
+        }
+        // Promote one spilled key back so it exists in mem AND on disk.
+        assert!(StorageEngine::apply(&store, &up(50, 9, 9)));
+        let mut keys: Vec<u64> = Vec::new();
+        StorageEngine::for_each_shard(&store, &mut |_, recs| {
+            keys.extend(recs.iter().map(|r| r.isbn13));
+        });
+        keys.sort_unstable();
+        let expect: Vec<u64> = (1..=160).collect();
+        assert_eq!(keys, expect, "each logical record exactly once");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

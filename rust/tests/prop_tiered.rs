@@ -1,0 +1,186 @@
+//! Property tests for the larger-than-RAM tier (`storage::tiered`):
+//! differential testing of a spill-enabled [`TieredStore`] against a pure
+//! in-memory [`ShardedStore`] oracle under random `insert` / `apply_many` /
+//! `get` interleavings — including overwrite-after-spill, where
+//! last-writer-wins means a promoted disk record must shadow every older
+//! on-disk version of the same key.
+//!
+//! The tier writes real files (runs + manifest); excluded under Miri, whose
+//! isolated mode has no filesystem. The aliasing-model coverage for the hot
+//! tier lives in `prop_memstore` / `stress_seqlock`.
+
+#![cfg(not(miri))]
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use membig::memstore::ShardedStore;
+use membig::storage::{StorageEngine, TieredOptions, TieredStore};
+use membig::util::prop::Prop;
+use membig::util::rng::Rng;
+use membig::workload::record::{BookRecord, StockUpdate};
+use membig::{prop_assert, prop_assert_eq};
+
+/// Unique tier directory per property case (cases run in one process).
+fn case_dir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("membig_prop_tiered_{tag}_{}_{n}", std::process::id()))
+}
+
+/// A tier squeezed hard enough that a handful of inserts spills: budget of
+/// `records` resident records (32 bytes each), no background compactor —
+/// the test drives `compact_now` deterministically.
+fn tiny_opts(records: u64, shards: usize) -> TieredOptions {
+    TieredOptions {
+        budget_bytes: records * 32,
+        shards,
+        capacity_hint: 64,
+        cache_blocks: 8,
+        compact_at: 0,
+    }
+}
+
+fn arb_record(rng: &mut Rng, key_space: u64) -> BookRecord {
+    BookRecord::new(rng.gen_range(key_space) + 1, rng.gen_range(10_000), rng.gen_range(500) as u32)
+}
+
+#[test]
+fn prop_tiered_store_matches_memstore_oracle() {
+    Prop::new("spill-enabled tier ≡ pure memstore under random op mixes").cases(30).run(|rng| {
+        let dir = case_dir("oracle");
+        let shards = rng.range_usize(1, 5);
+        // Budget of 4..=19 records vs a 64-key space: most of the working
+        // set lives on disk, so gets constantly fall through to runs.
+        let budget = 4 + rng.gen_range(16);
+        let tier = TieredStore::open_clean(&dir, tiny_opts(budget, shards)).expect("open tier");
+        let oracle = ShardedStore::new(shards, 64);
+        let key_space = 64u64;
+
+        let steps = rng.range_usize(1, 120);
+        for _ in 0..steps {
+            match rng.gen_range(6) {
+                // Insert (may overwrite a spilled version: LWW).
+                0 | 1 => {
+                    let r = arb_record(rng, key_space);
+                    tier.insert(r);
+                    oracle.insert(r);
+                }
+                // apply_many with duplicate keys in one batch: the tier's
+                // promotion pass must apply them in input order.
+                2 | 3 => {
+                    let n = rng.range_usize(1, 24);
+                    let ups: Vec<StockUpdate> = (0..n)
+                        .map(|_| StockUpdate {
+                            isbn13: rng.gen_range(key_space) + 1,
+                            new_price_cents: rng.gen_range(10_000),
+                            new_quantity: rng.gen_range(500) as u32,
+                        })
+                        .collect();
+                    let got = tier.apply_many(&ups);
+                    let want = oracle.apply_many(&ups);
+                    prop_assert_eq!(got, want);
+                }
+                // Point reads during the mix.
+                4 => {
+                    let k = rng.gen_range(key_space) + 1;
+                    prop_assert_eq!(tier.get(k), oracle.get(k));
+                }
+                // Force-spill everything, then occasionally compact: reads
+                // right after must still match (overwrite-after-spill).
+                _ => {
+                    tier.flush().expect("flush");
+                    if rng.gen_range(2) == 0 {
+                        tier.compact_now().expect("compact");
+                    }
+                }
+            }
+        }
+
+        // Full sweep: every key byte-identical, both as points and batched.
+        let keys: Vec<u64> = (1..=key_space).collect();
+        prop_assert_eq!(tier.get_many(&keys), oracle.get_many(&keys));
+        prop_assert_eq!(tier.len(), oracle.len());
+        prop_assert_eq!(tier.value_sum_cents(), oracle.value_sum_cents());
+        drop(tier);
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_overwrite_after_spill_is_last_writer_wins() {
+    Prop::new("a spilled key overwritten in RAM never resurrects its disk version")
+        .cases(30)
+        .run(|rng| {
+            let dir = case_dir("lww");
+            let tier = TieredStore::open_clean(&dir, tiny_opts(4, 2)).expect("open tier");
+            let keys: Vec<u64> = (1..=16).collect();
+            for &k in &keys {
+                tier.insert(BookRecord::new(k, 100, 1));
+            }
+            tier.flush().expect("flush");
+            prop_assert!(tier.run_count() >= 1, "everything spilled to at least one run");
+
+            // Overwrite a random subset; the rest must still read the
+            // spilled version.
+            let mut expect = std::collections::HashMap::new();
+            for &k in &keys {
+                expect.insert(k, BookRecord::new(k, 100, 1));
+            }
+            for _ in 0..rng.range_usize(1, 12) {
+                let k = keys[rng.range_usize(0, keys.len())];
+                let r = BookRecord::new(k, 200 + rng.gen_range(1000), 7);
+                tier.insert(r);
+                expect.insert(k, r);
+            }
+            // Randomly spill the overwrites themselves and/or compact —
+            // newest-first run order (and mem-shadow GC) must preserve LWW.
+            if rng.gen_range(2) == 0 {
+                tier.flush().expect("flush");
+            }
+            if rng.gen_range(2) == 0 {
+                tier.compact_now().expect("compact");
+            }
+            for &k in &keys {
+                prop_assert_eq!(tier.get(k), expect.get(&k).copied());
+            }
+            drop(tier);
+            std::fs::remove_dir_all(&dir).ok();
+            Ok(())
+        });
+}
+
+#[test]
+fn prop_compaction_reduces_runs_and_preserves_reads() {
+    Prop::new("compact_now merges runs without changing any visible record").cases(20).run(
+        |rng| {
+            let dir = case_dir("compact");
+            let tier = TieredStore::open_clean(&dir, tiny_opts(4, 2)).expect("open tier");
+            // Churn: several insert+flush rounds build up a multi-run set
+            // with dead versions across runs.
+            let rounds = rng.range_usize(2, 6);
+            let mut expect = std::collections::HashMap::new();
+            for round in 0..rounds {
+                for _ in 0..rng.range_usize(4, 16) {
+                    let r = arb_record(rng, 24);
+                    tier.insert(r);
+                    expect.insert(r.isbn13, r);
+                }
+                tier.flush().unwrap_or_else(|e| panic!("flush round {round}: {e}"));
+            }
+            let before = tier.run_count();
+            prop_assert!(before >= 2, "churn must produce at least two runs, got {}", before);
+            prop_assert!(tier.compact_now().expect("compact"), "compaction must run");
+            let after = tier.run_count();
+            prop_assert!(after < before, "compaction must reduce runs ({before} -> {after})");
+            for (&k, &r) in &expect {
+                prop_assert_eq!(tier.get(k), Some(r));
+            }
+            prop_assert_eq!(tier.len(), expect.len());
+            drop(tier);
+            std::fs::remove_dir_all(&dir).ok();
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,141 @@
+//! Crash/restart coverage for the larger-than-RAM tier: records that were
+//! spilled into disk runs must survive an unclean death of the process and
+//! be served byte-identically after `TieredStore::open` recovers the run
+//! set from the `RUNS.json` manifest.
+//!
+//! "Unclean death" is simulated with `std::mem::forget` — the store's
+//! `Drop` (compactor join) never runs, exactly as if the process had been
+//! SIGKILLed between two operations. The tier has no WAL by design
+//! (DESIGN.md §14): the hot tier is rebuilt from the authoritative table on
+//! serve startup, so only run-backed records are expected back.
+
+#![cfg(not(miri))]
+
+use std::path::PathBuf;
+
+use membig::storage::{StorageEngine, TieredOptions, TieredStore};
+use membig::workload::record::BookRecord;
+
+fn test_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("membig_tiered_kill_{tag}_{}", std::process::id()))
+}
+
+/// Budget of 8 resident records, no background compactor (nothing to leak
+/// when the store is forgotten instead of dropped).
+fn opts() -> TieredOptions {
+    TieredOptions { budget_bytes: 8 * 32, compact_at: 0, ..TieredOptions::default() }
+}
+
+fn record(k: u64) -> BookRecord {
+    BookRecord::new(k, 100 + k, (k % 500) as u32)
+}
+
+#[test]
+fn spilled_records_survive_unclean_death() {
+    let dir = test_dir("survive");
+    let tier = TieredStore::open_clean(&dir, opts()).expect("open tier");
+    for k in 1..=64 {
+        tier.insert(record(k));
+    }
+    tier.flush().expect("flush");
+    assert!(tier.run_count() >= 1, "flush must publish at least one run");
+    // Resident-only tail: never spilled, so legitimately lost on a kill.
+    for k in 1_000..1_004u64 {
+        tier.insert(record(k));
+    }
+    std::mem::forget(tier); // SIGKILL: no Drop, no final flush
+
+    let tier = TieredStore::open(&dir, opts()).expect("reopen after kill");
+    for k in 1..=64 {
+        assert_eq!(tier.get(k), Some(record(k)), "spilled key {k} must be byte-identical");
+    }
+    let keys: Vec<u64> = (1..=64).collect();
+    let want: Vec<Option<BookRecord>> = keys.iter().map(|&k| Some(record(k))).collect();
+    assert_eq!(tier.get_many(&keys), want);
+    for k in 1_000..1_004u64 {
+        assert_eq!(tier.get(k), None, "resident-only key {k} has no run to recover from");
+    }
+    assert_eq!(tier.len(), 64);
+    drop(tier);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn compacted_run_set_survives_restart_with_latest_versions() {
+    let dir = test_dir("compact");
+    let tier = TieredStore::open_clean(&dir, opts()).expect("open tier");
+    // Three generations of the same 32 keys across separate runs: only the
+    // newest version of each key may come back after compaction + restart.
+    for gen in 0..3u64 {
+        for k in 1..=32 {
+            tier.insert(BookRecord::new(k, 1_000 * (gen + 1) + k, gen as u32));
+        }
+        tier.flush().expect("flush");
+    }
+    assert!(tier.run_count() >= 2, "three flush rounds must leave multiple runs");
+    assert!(tier.compact_now().expect("compact"), "compaction must merge the runs");
+    assert_eq!(tier.run_count(), 1, "full compaction leaves a single run");
+    std::mem::forget(tier);
+
+    let tier = TieredStore::open(&dir, opts()).expect("reopen after kill");
+    assert_eq!(tier.run_count(), 1, "manifest must republish the compacted run set");
+    for k in 1..=32 {
+        assert_eq!(tier.get(k), Some(BookRecord::new(k, 3_000 + k, 2)), "key {k} newest version");
+    }
+    assert_eq!(tier.len(), 32, "dead versions must not resurrect");
+    drop(tier);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn crash_mid_spill_artifacts_are_garbage_collected_on_open() {
+    let dir = test_dir("midspill");
+    let tier = TieredStore::open_clean(&dir, opts()).expect("open tier");
+    for k in 1..=24 {
+        tier.insert(record(k));
+    }
+    tier.flush().expect("flush");
+    std::mem::forget(tier);
+
+    // A crash between "run file written" and "manifest published" leaves an
+    // unlisted run and/or a half-written tmp. Neither may be served.
+    std::fs::write(dir.join("run-9999.run"), b"MRUNgarbage-from-a-dying-writer").unwrap();
+    std::fs::write(dir.join("run-10000.run.tmp"), b"partial").unwrap();
+    std::fs::write(dir.join("RUNS.json.tmp"), b"{\"truncat").unwrap();
+
+    let tier = TieredStore::open(&dir, opts()).expect("reopen after mid-spill crash");
+    assert!(!dir.join("run-9999.run").exists(), "unlisted run must be GC'd");
+    assert!(!dir.join("run-10000.run.tmp").exists(), "tmp run must be GC'd");
+    assert!(!dir.join("RUNS.json.tmp").exists(), "tmp manifest must be GC'd");
+    for k in 1..=24 {
+        assert_eq!(tier.get(k), Some(record(k)), "published runs still serve key {k}");
+    }
+    drop(tier);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_manifest_listed_run_fails_loud() {
+    let dir = test_dir("missing");
+    let tier = TieredStore::open_clean(&dir, opts()).expect("open tier");
+    for k in 1..=24 {
+        tier.insert(record(k));
+    }
+    tier.flush().expect("flush");
+    std::mem::forget(tier);
+
+    // Delete a run the manifest owns: reopen must refuse rather than
+    // silently serve a hole in the key space.
+    let listed: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "run"))
+        .collect();
+    assert!(!listed.is_empty());
+    std::fs::remove_file(&listed[0]).unwrap();
+
+    let err = TieredStore::open(&dir, opts()).err();
+    assert!(err.is_some(), "open must fail when a manifest-listed run is missing");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -29,7 +29,8 @@ const UNSAFE_WHITELIST: &[&str] =
     &["memstore/hashtable.rs", "memstore/shard.rs", "server/sys.rs"];
 
 /// Modules where panicking calls are forbidden outside tests.
-const HOT_PATH: &[&str] = &["server/mod.rs", "server/reactor.rs", "ipc/proto.rs"];
+const HOT_PATH: &[&str] =
+    &["server/mod.rs", "server/reactor.rs", "ipc/proto.rs", "storage/tiered.rs"];
 
 /// Panicking constructs forbidden in hot-path modules. `.expect(` keeps its
 /// paren so a field named `expect` does not match; `.unwrap()` keeps both so
