@@ -373,6 +373,20 @@ impl ShardedStore {
     /// Duplicate keys within a batch apply in input order (same shard ⇒
     /// ascending index). Returns `(applied, missed)`.
     pub fn apply_many(&self, ups: &[StockUpdate]) -> (u64, u64) {
+        self.apply_many_tracked(ups, |_| {})
+    }
+
+    /// [`ShardedStore::apply_many`] that also reports the input index of
+    /// every update it applies. The tiered store's promotion pass needs
+    /// exact per-update outcomes: re-probing `get` after the fact would
+    /// race with a concurrent spill (applied key evicted in between reads
+    /// as a miss) and double-count. The no-op closure in `apply_many`
+    /// compiles away.
+    pub fn apply_many_tracked(
+        &self,
+        ups: &[StockUpdate],
+        mut on_applied: impl FnMut(usize),
+    ) -> (u64, u64) {
         let hashes: Vec<u64> = ups.iter().map(|u| hash_key(u.isbn13)).collect();
         let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
         for (i, &h) in hashes.iter().enumerate() {
@@ -388,6 +402,7 @@ impl ShardedStore {
                 let u = &ups[i];
                 if shard.update_hashed(u.isbn13, hashes[i], |r| u.apply_to(r)) {
                     applied += 1;
+                    on_applied(i);
                 } else {
                     missed += 1;
                 }
@@ -600,6 +615,20 @@ mod tests {
         assert_eq!(s.get(7).unwrap().price_cents, 777);
         assert_eq!(s.get(50).unwrap().price_cents, 500);
         assert_eq!(s.len(), 100);
+    }
+
+    #[test]
+    fn apply_many_tracked_reports_exact_applied_indices() {
+        let s = ShardedStore::new(4, 1 << 10);
+        for k in 1..=10u64 {
+            s.insert(BookRecord::new(k, 1, 1));
+        }
+        let mk = |k: u64| StockUpdate { isbn13: k, new_price_cents: 5, new_quantity: 5 };
+        let ups = [mk(1), mk(999), mk(2), mk(999), mk(1)];
+        let mut done = [false; 5];
+        let (applied, missed) = s.apply_many_tracked(&ups, |i| done[i] = true);
+        assert_eq!((applied, missed), (3, 2));
+        assert_eq!(done, [true, false, true, false, true]);
     }
 
     #[test]

@@ -52,9 +52,10 @@
 //! Storage: every serving path holds an `Arc<dyn `[`StorageEngine`]`>` —
 //! the pure-memory store or the larger-than-RAM tier
 //! (`storage::tiered`, `--memstore-budget-mb`). A spill-enabled engine's
-//! point reads can touch disk, so the reactor classifies `GET`/`MGET`/
-//! `STATS` as blocking (pool hop, like `ANALYTICS`) exactly when
-//! [`StorageEngine::spill_enabled`] reports it.
+//! point reads can touch disk and its updates can promote from disk or
+//! trigger a spill, so the reactor classifies `GET`/`MGET`/`UPDATE`/
+//! `MUPDATE`/`STATS` as blocking (pool hop, like `ANALYTICS`) exactly
+//! when [`StorageEngine::spill_enabled`] reports it.
 //!
 //! Hot path allocation discipline: request lines accumulate into a reusable
 //! per-connection byte buffer and are UTF-8-validated **once per line** (no

@@ -492,10 +492,13 @@ fn process_conn(
             || (shared.persist.is_some() && (verb == "UPDATE" || verb == "MUPDATE"))
             || (shared.procs.is_some()
                 && matches!(verb, "GET" | "UPDATE" | "MGET" | "MUPDATE" | "STATS"))
-            // Spill-enabled engine: point reads can touch disk runs, so
-            // they hop to the pool like ANALYTICS; pure-memory engines
-            // (spill_enabled() == false) keep the inline seqlock path.
-            || (shared.store.spill_enabled() && matches!(verb, "GET" | "MGET" | "STATS"));
+            // Spill-enabled engine: point reads can touch disk runs, and
+            // updates can both promote from disk (write-back) and trigger
+            // a spill (run write + fsync), so every data verb hops to the
+            // pool like ANALYTICS; pure-memory engines (spill_enabled()
+            // == false) keep the inline seqlock path.
+            || (shared.store.spill_enabled()
+                && matches!(verb, "GET" | "MGET" | "UPDATE" | "MUPDATE" | "STATS"));
         if blocking_verb {
             executed = true;
             let job =

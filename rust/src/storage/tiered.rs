@@ -307,8 +307,23 @@ impl Run {
         let min_key = u64::from_le_bytes(header[16..24].try_into().unwrap_or([0; 8]));
         let max_key = u64::from_le_bytes(header[24..32].try_into().unwrap_or([0; 8]));
         let bloom_words = u64::from_le_bytes(header[32..40].try_into().unwrap_or([0; 8]));
-        let records_off = RUN_HEADER_BYTES + bloom_words * 8;
-        let expect = records_off + count * RECORD_BYTES as u64;
+        // `Bloom::probes` masks with `bits - 1`, so a run with records must
+        // carry a power-of-two bloom (`Bloom::build` always writes one);
+        // accepting bloom_words == 0 here would underflow the mask and
+        // panic on the first lookup.
+        if count > 0 && !bloom_words.is_power_of_two() {
+            return Err(TierError::Corrupt(format!(
+                "{name}: bloom size {bloom_words} words (want a nonzero power of two)"
+            )));
+        }
+        let records_off = bloom_words
+            .checked_mul(8)
+            .and_then(|b| b.checked_add(RUN_HEADER_BYTES))
+            .ok_or_else(|| TierError::Corrupt(format!("{name}: bloom size overflows")))?;
+        let expect = count
+            .checked_mul(RECORD_BYTES as u64)
+            .and_then(|r| r.checked_add(records_off))
+            .ok_or_else(|| TierError::Corrupt(format!("{name}: record count overflows")))?;
         let actual = file.metadata()?.len();
         if actual != expect {
             return Err(TierError::Corrupt(format!(
@@ -699,9 +714,11 @@ impl TieredShared {
             self.metrics.mem_hits.inc();
             return Some(r);
         }
-        self.disk_get(key)
+        self.fallthrough_get(key)
     }
 
+    /// Search the disk runs only, newest-first. No miss accounting — the
+    /// callers decide what a miss means (see [`TieredShared::fallthrough_get`]).
     fn disk_get(&self, key: u64) -> Option<BookRecord> {
         let runs = self.runs_snapshot();
         for run in runs.iter() {
@@ -717,8 +734,30 @@ impl TieredShared {
                 Err(_) => self.metrics.disk_errors.inc(),
             }
         }
-        self.metrics.misses.inc();
         None
+    }
+
+    /// Disk fallthrough for a key the caller just missed in the memstore:
+    /// runs newest-first, then the memstore *again*. The trailing re-check
+    /// closes a read race — between the memstore miss and the runs
+    /// snapshot, a concurrent write-back promotion can move the key's only
+    /// live version back into the memstore and a compaction can then GC
+    /// the mem-shadowed disk version; without the re-check a key that
+    /// logically existed throughout would read as absent.
+    fn fallthrough_get(&self, key: u64) -> Option<BookRecord> {
+        if let Some(r) = self.disk_get(key) {
+            return Some(r);
+        }
+        match self.mem.get(key) {
+            Some(r) => {
+                self.metrics.mem_hits.inc();
+                Some(r)
+            }
+            None => {
+                self.metrics.misses.inc();
+                None
+            }
+        }
     }
 
     fn insert(&self, rec: BookRecord) {
@@ -735,7 +774,7 @@ impl TieredShared {
         if self.mem.apply(u) {
             return true;
         }
-        match self.disk_get(u.isbn13) {
+        match self.fallthrough_get(u.isbn13) {
             Some(mut r) => {
                 u.apply_to(&mut r);
                 self.metrics.promotions.inc();
@@ -754,26 +793,32 @@ impl TieredShared {
         for (i, slot) in out.iter_mut().enumerate() {
             match slot {
                 Some(_) => self.metrics.mem_hits.inc(),
-                None => *slot = self.disk_get(keys[i]),
+                None => *slot = self.fallthrough_get(keys[i]),
             }
         }
         out
     }
 
     /// Batch update: the memstore's shard-affine bulk path first, then a
-    /// per-key promotion pass for whatever it missed. Input-order
-    /// last-writer-wins holds across the promotion boundary: duplicates of
-    /// a promoted key re-apply in order after the first promotion.
+    /// per-key promotion pass for exactly the updates it did not apply
+    /// (the bulk pass reports per-update outcomes — re-probing `mem.get`
+    /// here instead would race with a concurrent spill and double-count).
+    /// Input-order last-writer-wins holds across the promotion boundary:
+    /// duplicates of a promoted key re-apply in order after the first
+    /// promotion.
     fn apply_many(&self, ups: &[StockUpdate]) -> (u64, u64) {
-        let (mut applied, bulk_missed) = self.mem.apply_many(ups);
+        let mut done = vec![false; ups.len()];
+        let (mut applied, bulk_missed) = self.mem.apply_many_tracked(ups, |i| done[i] = true);
         let mut missed = 0u64;
         if bulk_missed > 0 {
             let mut promoted = std::collections::HashSet::new();
             let mut absent = std::collections::HashSet::new();
-            for u in ups {
+            for (i, u) in ups.iter().enumerate() {
+                if done[i] {
+                    continue; // served by the bulk pass
+                }
                 let k = u.isbn13;
-                if promoted.contains(&k) {
-                    self.mem.apply(u);
+                if promoted.contains(&k) && self.mem.apply(u) {
                     applied += 1;
                     continue;
                 }
@@ -781,10 +826,7 @@ impl TieredShared {
                     missed += 1;
                     continue;
                 }
-                if self.mem.get(k).is_some() {
-                    continue; // served by the bulk pass
-                }
-                match self.disk_get(k) {
+                match self.fallthrough_get(k) {
                     Some(mut r) => {
                         u.apply_to(&mut r);
                         self.metrics.promotions.inc();
@@ -910,6 +952,12 @@ impl TieredShared {
     /// disk version of its key, and eviction is serialized with this path
     /// by `tier_lock`). Old run files are unlinked after the new manifest
     /// is live; a crash in between leaves them unlisted for `open`'s GC.
+    ///
+    /// Any read I/O error aborts the whole compaction *before* the new
+    /// manifest is published or any input is unlinked: the runs are the
+    /// sole copy of their records (durability is mutually exclusive with
+    /// the tier), so publishing a partial merge would silently lose every
+    /// record the interrupted scan never reached.
     fn compact(&self) -> Result<bool, TierError> {
         // lint:allow(hot-path-panic): tier-lock poisoning is unrecoverable.
         let _serialize = self.tier_lock.lock().unwrap();
@@ -918,7 +966,7 @@ impl TieredShared {
             return Ok(false);
         }
         let mut merged: Vec<BookRecord> = Vec::new();
-        self.merge_live(&old, &mut |r| merged.push(r));
+        self.merge_live(&old, &mut |r| merged.push(r))?;
         let new_list: Arc<Vec<Arc<Run>>> = if merged.is_empty() {
             Arc::new(Vec::new())
         } else {
@@ -941,14 +989,25 @@ impl TieredShared {
 
     /// K-way merge over `runs` (newest-first), emitting the newest disk
     /// version of each key that is *not* shadowed by the memstore, in
-    /// ascending key order. Unreadable records are counted and skipped.
-    fn merge_live(&self, runs: &[Arc<Run>], f: &mut dyn FnMut(BookRecord)) {
+    /// ascending key order. CRC-corrupt frames are counted and skipped
+    /// (they can never be served, and an older run's version of the same
+    /// key then wins — matching the read path's fallthrough); an I/O error
+    /// aborts the merge so `compact` never publishes a partial result.
+    fn merge_live(
+        &self,
+        runs: &[Arc<Run>],
+        f: &mut dyn FnMut(BookRecord),
+    ) -> Result<(), TierError> {
         struct Cursor<'a> {
             run: &'a Run,
             idx: u64,
             cur: Option<BookRecord>,
         }
-        let advance = |c: &mut Cursor<'_>, cache: &BlockCache, m: &TieredMetrics| {
+        fn advance(
+            c: &mut Cursor<'_>,
+            cache: &BlockCache,
+            m: &TieredMetrics,
+        ) -> Result<(), TierError> {
             c.cur = None;
             while c.idx < c.run.count {
                 let i = c.idx;
@@ -956,26 +1015,26 @@ impl TieredShared {
                 match c.run.read_record(i, cache, m) {
                     Ok(rec) => {
                         c.cur = Some(rec);
-                        return;
+                        return Ok(());
                     }
-                    Err(TierError::Io(_)) => {
-                        // An unreadable block ends this run's scan; its
-                        // still-live keys survive in the inputs (the merge
-                        // aborts manifest-publish on write errors only).
+                    Err(e @ TierError::Io(_)) => {
+                        // The unreachable tail of this run may hold the
+                        // sole copy of still-live keys — the caller must
+                        // not treat this merge as complete.
                         m.disk_errors.inc();
-                        c.idx = c.run.count;
-                        return;
+                        return Err(e);
                     }
                     Err(TierError::Corrupt(_)) => continue, // counted; skip frame
                 }
             }
-        };
+            Ok(())
+        }
         let mut cursors: Vec<Cursor<'_>> = runs
             .iter()
             .map(|r| Cursor { run: r, idx: 0, cur: None })
             .collect();
         for c in cursors.iter_mut() {
-            advance(c, &self.cache, &self.metrics);
+            advance(c, &self.cache, &self.metrics)?;
         }
         loop {
             let Some(min_key) =
@@ -990,7 +1049,7 @@ impl TieredShared {
                     if emit.is_none() {
                         emit = c.cur;
                     }
-                    advance(c, &self.cache, &self.metrics);
+                    advance(c, &self.cache, &self.metrics)?;
                 }
             }
             if let Some(rec) = emit {
@@ -999,15 +1058,18 @@ impl TieredShared {
                 }
             }
         }
+        Ok(())
     }
 
     /// `(count, Σ price·qty)` over the logical record set: the memstore
     /// plus every live (unshadowed) disk record. O(dataset) with disk
-    /// reads — STATS-class, never on the point-read path.
+    /// reads — STATS-class, never on the point-read path. Best-effort on
+    /// an I/O error: the aggregate covers what was readable (unlike
+    /// `compact`, nothing is deleted based on it).
     fn value_sum_cents(&self) -> (u64, u128) {
         let (mut n, mut sum) = self.mem.value_sum_cents();
         let runs = self.runs_snapshot();
-        self.merge_live(&runs, &mut |r| {
+        let _ = self.merge_live(&runs, &mut |r| {
             n += 1;
             sum += r.value_cents();
         });
@@ -1017,7 +1079,7 @@ impl TieredShared {
     fn len(&self) -> usize {
         let mut n = self.mem.len();
         let runs = self.runs_snapshot();
-        self.merge_live(&runs, &mut |_| n += 1);
+        let _ = self.merge_live(&runs, &mut |_| n += 1);
         n
     }
 }
@@ -1094,7 +1156,8 @@ impl crate::storage::engine::StorageEngine for TieredStore {
         }
         let runs = self.shared.runs_snapshot();
         let mut disk: Vec<BookRecord> = Vec::new();
-        self.shared.merge_live(&runs, &mut |r| disk.push(r));
+        // Best-effort on I/O error: exports see what was readable.
+        let _ = self.shared.merge_live(&runs, &mut |r| disk.push(r));
         disk
     }
 
@@ -1185,6 +1248,28 @@ mod tests {
         assert!(matches!(Run::open(p.clone()), Err(TierError::Corrupt(_))));
 
         std::fs::write(&p, b"NOPE").unwrap();
+        assert!(matches!(Run::open(p), Err(TierError::Corrupt(_))));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn run_open_rejects_zero_bloom_words() {
+        let dir = tdir("run_bloom0");
+        std::fs::create_dir_all(&dir).unwrap();
+        let recs: Vec<BookRecord> = (1..=10u64).map(|k| BookRecord::new(k, 1, 1)).collect();
+        let run = write_run(&dir, 5, &recs).unwrap();
+        let p = run_path(&dir, 5);
+        // Craft a header claiming bloom_words = 0 with the bloom region
+        // excised so the file-size check still passes; before the bloom
+        // validation this underflowed the probe mask and panicked on the
+        // first lookup.
+        let data = std::fs::read(&p).unwrap();
+        let mut crafted = Vec::new();
+        crafted.extend_from_slice(&data[..32]);
+        crafted.extend_from_slice(&0u64.to_le_bytes());
+        crafted.extend_from_slice(&data[40..48]);
+        crafted.extend_from_slice(&data[run.records_off as usize..]);
+        std::fs::write(&p, crafted).unwrap();
         assert!(matches!(Run::open(p), Err(TierError::Corrupt(_))));
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -1285,6 +1370,70 @@ mod tests {
             assert_eq!(StorageEngine::get(&store, k).unwrap().price_cents, want, "key {k}");
         }
         assert_eq!(StorageEngine::len(&store), 300);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compaction_aborts_on_read_error_without_dropping_inputs() {
+        let dir = tdir("compact_abort");
+        let store = TieredStore::open_clean(&dir, opts(10_000)).unwrap();
+        for k in 1..=200u64 {
+            StorageEngine::insert(&store, BookRecord::new(k, k, 1));
+        }
+        store.flush().unwrap();
+        assert!(store.run_count() >= 2);
+        let list_runs = || {
+            let mut v: Vec<String> = std::fs::read_dir(&dir)
+                .unwrap()
+                .flatten()
+                .map(|e| e.file_name().to_string_lossy().into_owned())
+                .filter(|n| parse_run_seq(n).is_some())
+                .collect();
+            v.sort();
+            v
+        };
+        let before = list_runs();
+        let manifest_before = std::fs::read_to_string(dir.join(RUNS_MANIFEST)).unwrap();
+        // Truncate one run behind the store's back: its record region
+        // becomes unreadable (I/O error, not a CRC skip). The runs are the
+        // sole copy of their records, so the merge must abort rather than
+        // publish a partial result and unlink the inputs.
+        let victim = dir.join(&before[0]);
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&victim)
+            .unwrap()
+            .set_len(RUN_HEADER_BYTES)
+            .unwrap();
+        let res = store.compact_now();
+        assert!(matches!(&res, Err(TierError::Io(_))), "partial merge must abort: {res:?}");
+        assert_eq!(list_runs(), before, "no input run may be unlinked");
+        assert_eq!(
+            std::fs::read_to_string(dir.join(RUNS_MANIFEST)).unwrap(),
+            manifest_before,
+            "manifest must not be republished"
+        );
+        assert_eq!(store.run_count(), before.len());
+        assert_eq!(store.tiered_metrics().compactions.get(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fallthrough_recheck_serves_key_resident_in_memstore() {
+        let dir = tdir("race_recheck");
+        let store = TieredStore::open_clean(&dir, opts(10_000)).unwrap();
+        StorageEngine::insert(&store, BookRecord::new(42, 7, 7));
+        // Simulate the promotion/compaction read race: the reader has
+        // already missed the memstore; by fallthrough time the key lives
+        // there again (write-back promotion) and no disk version remains
+        // (compaction GC'd the mem-shadowed copy). The trailing re-check
+        // must serve it instead of declaring a miss.
+        let r = store
+            .shared
+            .fallthrough_get(42)
+            .expect("re-check must serve the memstore-resident key");
+        assert_eq!((r.price_cents, r.quantity), (7, 7));
+        assert_eq!(store.tiered_metrics().misses.get(), 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 
