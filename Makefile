@@ -13,6 +13,10 @@
 #                    bit-rot fast and emits machine-readable
 #                    BENCH_<name>.json reports at the repo root (wired
 #                    into CI, uploaded as artifacts)
+#   make failover    hot-standby replication drill: spawn a real primary +
+#                    standby pair, SIGKILL the primary under load and assert
+#                    the promoted standby serves every acked write (also
+#                    covers fault-injected reconnects and SIGTERM drain)
 #   make lint        repo-specific static checks (cargo xtask lint) plus
 #                    the lint engine's own tests
 #   make miri        UB-check the unsafe core under Miri (nightly; small
@@ -23,7 +27,7 @@
 
 ARTIFACTS_DIR := $(abspath rust/artifacts)
 
-.PHONY: artifacts build test check-pjrt bench bench-smoke lint miri tsan clean
+.PHONY: artifacts build test check-pjrt bench bench-smoke failover lint miri tsan clean
 
 artifacts:
 	cd python && python -m compile.aot --out $(ARTIFACTS_DIR)
@@ -59,6 +63,9 @@ bench:
 # spilled / compacted point reads) and emits BENCH_tiered_read.json.
 bench-smoke:
 	cd rust && MEMBIG_BENCH_SCALE=100 cargo bench --bench analytics --bench hashtable --bench server_throughput --bench recovery --bench ipc_scaleout --bench memory_vs_disk
+
+failover:
+	cd rust && cargo test --release --test replication_kill -- --nocapture
 
 lint:
 	cd rust && cargo xtask lint

@@ -231,6 +231,18 @@ pub struct EngineConfig {
     /// memstore → block cache → runs (`storage::tiered`). Mutually
     /// exclusive with durability and with worker processes.
     pub memstore_budget_mb: u64,
+    /// Address the primary's WAL-shipping listener binds (`[replication]`
+    /// `listen`). `None` (default) = no replication, wire semantics
+    /// unchanged. Requires durability: the shipped stream *is* the WAL.
+    pub replicate_listen: Option<String>,
+    /// Primary address a standby connects to (`[replication]` `standby_of`).
+    /// `None` (default) = this process is not a standby. Requires
+    /// durability; mutually exclusive with `replicate_listen` (no chained
+    /// standbys yet), worker processes and the memstore budget.
+    pub standby_of: Option<String>,
+    /// A standby promotes itself to read-write primary after this many
+    /// milliseconds without a heartbeat from the primary.
+    pub failover_after_ms: u64,
 }
 
 impl Default for EngineConfig {
@@ -259,6 +271,9 @@ impl Default for EngineConfig {
             snapshot_every_secs: 60,
             snapshot_wal_mb: 64,
             memstore_budget_mb: 0,
+            replicate_listen: None,
+            standby_of: None,
+            failover_after_ms: 3000,
         }
     }
 }
@@ -312,6 +327,13 @@ impl EngineConfig {
         set!(self.fsync, "durability", "fsync", bool);
         set!(self.snapshot_every_secs, "durability", "snapshot_every_secs", u64);
         set!(self.snapshot_wal_mb, "durability", "snapshot_wal_mb", u64);
+        if let Some(v) = get("replication", "listen") {
+            self.replicate_listen = if v.is_empty() { None } else { Some(v.to_string()) };
+        }
+        if let Some(v) = get("replication", "standby_of") {
+            self.standby_of = if v.is_empty() { None } else { Some(v.to_string()) };
+        }
+        set!(self.failover_after_ms, "replication", "failover_after_ms", u64);
         set!(self.disk.avg_seek_ms, "disk", "avg_seek_ms", f64);
         set!(self.disk.rotational_ms, "disk", "rotational_ms", f64);
         set!(self.disk.transfer_mb_s, "disk", "transfer_mb_s", f64);
@@ -458,6 +480,21 @@ impl EngineConfigBuilder {
         self
     }
 
+    pub fn replicate_listen(mut self, v: Option<String>) -> Self {
+        self.cfg.replicate_listen = v;
+        self
+    }
+
+    pub fn standby_of(mut self, v: Option<String>) -> Self {
+        self.cfg.standby_of = v;
+        self
+    }
+
+    pub fn failover_after_ms(mut self, v: u64) -> Self {
+        self.cfg.failover_after_ms = v;
+        self
+    }
+
     pub fn disk(mut self, v: DiskProfile) -> Self {
         self.cfg.disk = v;
         self
@@ -552,6 +589,52 @@ impl EngineConfigBuilder {
                  (worker processes own the records, the leader store is a placeholder)"
                     .into(),
             );
+        }
+        if cfg.replicate_listen.is_some() && cfg.durable_dir.is_none() {
+            // The shipped stream *is* the group-commit WAL; without
+            // durability there is nothing to ship or resume from.
+            return Err(
+                "replication.listen requires durability.dir \
+                 (the replication stream is the WAL — enable durability on the primary)"
+                    .into(),
+            );
+        }
+        if cfg.standby_of.is_some() {
+            if cfg.durable_dir.is_none() {
+                return Err(
+                    "replication.standby_of requires durability.dir \
+                     (the standby mirrors the primary's WAL + snapshots on disk)"
+                        .into(),
+                );
+            }
+            if cfg.replicate_listen.is_some() {
+                return Err(
+                    "replication.standby_of and replication.listen are mutually exclusive \
+                     (chained standbys are not supported yet)"
+                        .into(),
+                );
+            }
+            if cfg.server_processes > 0 {
+                return Err(
+                    "replication.standby_of and server.processes are mutually exclusive \
+                     (the standby applies the WAL against the in-process store)"
+                        .into(),
+                );
+            }
+            if cfg.memstore_budget_mb > 0 {
+                return Err(
+                    "replication.standby_of and storage.memstore_budget_mb are mutually \
+                     exclusive (the standby mirrors the memstore only)"
+                        .into(),
+                );
+            }
+            if cfg.failover_after_ms == 0 {
+                return Err(
+                    "replication.failover_after_ms must be > 0 on a standby \
+                     (0 would promote instantly, splitting the brain on startup)"
+                        .into(),
+                );
+            }
         }
         Ok(cfg)
     }
@@ -796,6 +879,69 @@ snapshot_wal_mb = 32
         // Each pairing is fine alone.
         assert!(EngineConfig::builder().memstore_budget_mb(64).build().is_ok());
         assert!(EngineConfig::builder().server_processes(4).build().is_ok());
+    }
+
+    #[test]
+    fn replication_defaults_off_and_ini_parses() {
+        let cfg = EngineConfig::default();
+        assert_eq!(cfg.replicate_listen, None, "replication is opt-in");
+        assert_eq!(cfg.standby_of, None);
+        assert_eq!(cfg.failover_after_ms, 3000);
+        let ini = parse_ini(
+            "[replication]\nlisten = \"127.0.0.1:7980\"\nfailover_after_ms = 1500\n",
+        )
+        .unwrap();
+        let mut cfg = EngineConfig::default();
+        cfg.apply_ini(&ini).unwrap();
+        assert_eq!(cfg.replicate_listen.as_deref(), Some("127.0.0.1:7980"));
+        assert_eq!(cfg.failover_after_ms, 1500);
+        // Empty keys switch replication back off (override a file).
+        let off = parse_ini("[replication]\nlisten = \"\"\nstandby_of = \"\"\n").unwrap();
+        let mut cfg = EngineConfig::default();
+        cfg.replicate_listen = Some("x".into());
+        cfg.standby_of = Some("y".into());
+        cfg.apply_ini(&off).unwrap();
+        assert_eq!(cfg.replicate_listen, None);
+        assert_eq!(cfg.standby_of, None);
+    }
+
+    #[test]
+    fn replication_validation_rules() {
+        let durable = || EngineConfig::builder().durable_dir(Some(PathBuf::from("/tmp/d")));
+        // Both roles require durability — the stream is the WAL.
+        let err = EngineConfig::builder()
+            .replicate_listen(Some("127.0.0.1:0".into()))
+            .build()
+            .unwrap_err();
+        assert!(err.contains("requires durability.dir"), "{err}");
+        assert!(EngineConfig::builder()
+            .standby_of(Some("127.0.0.1:7980".into()))
+            .build()
+            .unwrap_err()
+            .contains("requires durability.dir"));
+        // With durability both roles stand alone.
+        assert!(durable().replicate_listen(Some("127.0.0.1:0".into())).build().is_ok());
+        assert!(durable().standby_of(Some("127.0.0.1:7980".into())).build().is_ok());
+        // No chained standbys: the two roles are exclusive.
+        assert!(durable()
+            .replicate_listen(Some("127.0.0.1:0".into()))
+            .standby_of(Some("127.0.0.1:7980".into()))
+            .build()
+            .unwrap_err()
+            .contains("mutually exclusive"));
+        // Zero failover deadline would promote on startup.
+        assert!(durable()
+            .standby_of(Some("127.0.0.1:7980".into()))
+            .failover_after_ms(0)
+            .build()
+            .unwrap_err()
+            .contains("failover_after_ms"));
+        let ok = durable()
+            .standby_of(Some("127.0.0.1:7980".into()))
+            .failover_after_ms(250)
+            .build()
+            .unwrap();
+        assert_eq!(ok.failover_after_ms, 250);
     }
 
     #[test]

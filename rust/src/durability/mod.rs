@@ -22,7 +22,7 @@ pub mod snapshot;
 pub mod wal;
 
 pub use persist::{
-    CheckpointStats, DurabilityError, DurabilityOptions, Persistence, RecoveryReport,
+    CheckpointStats, CommitSink, DurabilityError, DurabilityOptions, Persistence, RecoveryReport,
 };
 pub use snapshot::{load_snapshot, write_snapshot};
-pub use wal::{Wal, WalReader};
+pub use wal::{decode_frame, encode_frame, Wal, WalReader, FRAME_BYTES};

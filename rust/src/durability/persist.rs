@@ -140,6 +140,21 @@ pub struct CheckpointStats {
     pub elapsed: Duration,
 }
 
+/// Observer of the WAL commit path, called with the wal mutex held so
+/// observation order is exactly append order. The replication shipper
+/// implements this; both hooks MUST be non-blocking (bounded-queue push or
+/// atomic watermark update) — anything slower would serialize behind group
+/// commit and stall every mutation.
+pub trait CommitSink: Send + Sync {
+    /// `ups` was appended to segment `generation` starting at byte
+    /// `start_offset` and is at least kernel-flushed (fsynced when
+    /// `sync_now` held).
+    fn frames_committed(&self, generation: u64, start_offset: u64, ups: &[StockUpdate]);
+    /// A checkpoint rotated the WAL; appends continue in `new_generation`
+    /// at offset 0.
+    fn generation_rotated(&self, new_generation: u64);
+}
+
 struct WalState {
     wal: Wal,
     /// Generation of the segment `wal` appends to.
@@ -169,6 +184,10 @@ struct Shared {
     /// Serializes `checkpoint_now` against the background snapshotter.
     checkpoint_lock: Mutex<()>,
     metrics: DurabilityMetrics,
+    /// Optional commit observer (the replication shipper). Installed once
+    /// before serving starts; read under the wal lock so notification
+    /// order ≡ WAL order.
+    sink: Mutex<Option<Arc<dyn CommitSink>>>,
 }
 
 /// Live persistence handle. Dropping it stops the snapshotter and performs
@@ -178,11 +197,11 @@ pub struct Persistence {
     snapshotter: Option<std::thread::JoinHandle<()>>,
 }
 
-fn snap_path(dir: &Path, generation: u64) -> PathBuf {
+pub(crate) fn snap_path(dir: &Path, generation: u64) -> PathBuf {
     dir.join(format!("store-{generation}.snap"))
 }
 
-fn wal_path(dir: &Path, generation: u64) -> PathBuf {
+pub(crate) fn wal_path(dir: &Path, generation: u64) -> PathBuf {
     dir.join(format!("wal-{generation}.log"))
 }
 
@@ -191,7 +210,7 @@ fn parse_gen(name: &str, prefix: &str, suffix: &str) -> Option<u64> {
 }
 
 /// Generations with a snapshot file present, newest first.
-fn scan_snapshot_gens(dir: &Path) -> Vec<u64> {
+pub(crate) fn scan_snapshot_gens(dir: &Path) -> Vec<u64> {
     let mut gens: Vec<u64> = match std::fs::read_dir(dir) {
         Ok(rd) => rd
             .flatten()
@@ -435,6 +454,7 @@ impl Persistence {
             stop: AtomicBool::new(false),
             checkpoint_lock: Mutex::new(()),
             metrics: DurabilityMetrics::new(),
+            sink: Mutex::new(None),
         });
         shared.metrics.generation.set(generation as i64);
         let snapshotter = spawn_snapshotter(shared.clone());
@@ -526,9 +546,17 @@ impl Persistence {
             return Err(e);
         }
         let res = sh.store.apply_many(ups);
+        let start_offset = g.wal_bytes;
         g.wal_bytes += bytes;
         sh.metrics.wal_appends.add(ups.len() as u64);
         sh.metrics.wal_bytes.add(bytes);
+        // Ship hook: still under the wal lock, so standbys observe commits
+        // in exactly WAL order. The sink is a bounded non-blocking push — a
+        // slow standby overflows its queue (and later re-syncs from a
+        // snapshot) instead of stalling group commit here.
+        if let Some(sink) = sh.sink.lock().unwrap().clone() {
+            sink.frames_committed(g.generation, start_offset, ups);
+        }
         let over = sh.opts.snapshot_wal_bytes > 0 && g.wal_bytes >= sh.opts.snapshot_wal_bytes;
         drop(g);
         if over {
@@ -579,6 +607,89 @@ impl Persistence {
     /// Generation of the WAL segment currently receiving appends.
     pub fn wal_generation(&self) -> u64 {
         self.shared.wal.lock().unwrap().generation
+    }
+
+    /// Install the commit observer (the replication shipper). Install once,
+    /// before the server starts taking traffic; hooks run under the wal
+    /// lock and must never block (see [`CommitSink`]).
+    pub fn set_commit_sink(&self, sink: Arc<dyn CommitSink>) {
+        *self.shared.sink.lock().unwrap() = Some(sink);
+    }
+
+    /// `(generation, byte offset)` of the next WAL append — the resume
+    /// position a standby reports on (re)connect.
+    pub fn wal_tip(&self) -> (u64, u64) {
+        let g = self.shared.wal.lock().unwrap();
+        (g.generation, g.wal_bytes)
+    }
+
+    /// The durable directory this instance persists into.
+    pub fn dir(&self) -> &Path {
+        &self.shared.dir
+    }
+
+    /// Standby re-sync: replace this node's durable state with the
+    /// primary's snapshot image at `generation` and re-point the live WAL
+    /// at `wal-<generation>.log`, offset 0 — the shipped stream resumes
+    /// from exactly there. Used when the stream cannot resume from our
+    /// local (generation, offset): fresh bootstrap, falling behind the
+    /// primary's GC floor after a ship-queue overflow, or a divergent
+    /// history after the primary itself crash-recovered. The image is
+    /// validated (checksum + record count) *before* any live state
+    /// changes; its records are then upserted into the live store — the
+    /// workload never deletes keys, so overwrite converges on the
+    /// primary's image. Returns records loaded.
+    pub fn rebase_to_snapshot(
+        &self,
+        generation: u64,
+        snap: &[u8],
+        shards: usize,
+    ) -> Result<u64, DurabilityError> {
+        let sh = &*self.shared;
+        let _serialize = sh.checkpoint_lock.lock().unwrap();
+        // Publish the snapshot file (tmp + fsync + rename), then validate
+        // it by loading into a scratch store.
+        let path = snap_path(&sh.dir, generation);
+        // `.tmp` suffix so a crash mid-rebase leaves an orphan the normal
+        // GC sweep already cleans up.
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(snap)?;
+            f.sync_data()?;
+        }
+        std::fs::rename(&tmp, &path)?;
+        let incoming = load_snapshot(&path, shards)?;
+        let records = incoming.len() as u64;
+        {
+            let mut g = sh.wal.lock().unwrap();
+            if g.poisoned {
+                return Err(DurabilityError::Io(std::io::Error::other(
+                    "WAL poisoned; restart before re-syncing",
+                )));
+            }
+            // Fresh segment for the new generation: whatever local frames
+            // existed are superseded by the snapshot image.
+            let live = wal_path(&sh.dir, generation);
+            let _ = std::fs::remove_file(&live);
+            g.wal = Wal::open(&live)?;
+            g.generation = generation;
+            g.wal_bytes = 0;
+            g.unsynced = false;
+            // Upsert under the wal lock — same ordering discipline as the
+            // commit path, so a racing reader never sees post-rebase
+            // frames applied before the base image.
+            incoming.for_each_shard(|_, recs| {
+                for r in recs {
+                    sh.store.insert(*r);
+                }
+            });
+        }
+        write_manifest(&sh.dir, generation)?;
+        gc_below(&sh.dir, generation);
+        gc_above(&sh.dir, generation);
+        sh.metrics.generation.set(generation as i64);
+        Ok(records)
     }
 }
 
@@ -643,6 +754,11 @@ impl Shared {
             g.wal = Wal::open(wal_path(&self.dir, new_gen))?;
             g.generation = new_gen;
             g.wal_bytes = 0;
+            // Rotation notice under the same lock: the shipper learns of
+            // the generation bump before any frame of the new segment.
+            if let Some(sink) = self.sink.lock().unwrap().clone() {
+                sink.generation_rotated(new_gen);
+            }
             new_gen
         };
         // Stream the store without the WAL lock — commits keep flowing into

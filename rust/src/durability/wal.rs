@@ -55,6 +55,18 @@ fn decode(b: &[u8; FRAME]) -> Option<StockUpdate> {
     })
 }
 
+/// Encode one update as its on-disk/on-wire WAL frame. The replication
+/// layer ships frames in exactly this format, so the standby's stream
+/// decoder and crash recovery share one codec (and one CRC).
+pub fn encode_frame(u: &StockUpdate) -> [u8; FRAME_BYTES] {
+    encode(u)
+}
+
+/// Decode one WAL frame; `None` on CRC mismatch (torn/corrupt).
+pub fn decode_frame(b: &[u8; FRAME_BYTES]) -> Option<StockUpdate> {
+    decode(b)
+}
+
 /// Appender. One per process; the pipeline's reader thread owns it.
 ///
 /// The writer is an `Option` so [`Wal::discard_and_trim`] can dismantle a

@@ -40,6 +40,7 @@ pub mod durability;
 pub mod memstore;
 pub mod metrics;
 pub mod pipeline;
+pub mod replication;
 pub mod runtime;
 pub mod server;
 pub mod storage;

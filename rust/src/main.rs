@@ -48,6 +48,9 @@ fn spec() -> Vec<FlagSpec> {
         FlagSpec { name: "fsync", value: "BOOL", help: "serve: fsync every group commit (default true; false = kernel flush only)" },
         FlagSpec { name: "snapshot-every", value: "SECS", help: "serve: checkpoint interval in seconds (default 60; 0 = off)" },
         FlagSpec { name: "snapshot-wal-mb", value: "MB", help: "serve: checkpoint when the WAL exceeds MB MiB (default 64; 0 = off)" },
+        FlagSpec { name: "replicate-listen", value: "ADDR", help: "serve: primary — bind ADDR and ship the WAL to standbys (requires --durable-dir)" },
+        FlagSpec { name: "standby-of", value: "ADDR", help: "serve: hot standby of the primary at ADDR (its --replicate-listen; requires --durable-dir)" },
+        FlagSpec { name: "failover-after", value: "MS", help: "serve: standby promotes to primary after MS ms without a heartbeat (default 3000)" },
         FlagSpec { name: "writeback", value: "", help: "persist memstore back to disk after update" },
         FlagSpec { name: "json", value: "", help: "emit machine-readable JSON report" },
         FlagSpec { name: "help", value: "", help: "show this help" },
@@ -170,8 +173,17 @@ fn run() -> Result<(), String> {
             Ok(())
         }
         "serve" => {
+            preflight_serve(&cfg)?;
+            // Arm the SIGTERM/SIGINT latch before any state is built so a
+            // signal during a slow load/recovery still drains cleanly once
+            // the serve loop starts polling.
+            membig::server::install_shutdown_handler()
+                .map_err(|e| format!("signal handler: {e}"))?;
             if cfg.server_processes > 0 {
                 return serve_processes(&cfg, &wb);
+            }
+            if let Some(primary) = cfg.standby_of.clone() {
+                return serve_standby(&cfg, primary, &args);
             }
             // With --durable-dir: recover `snapshot + WAL chain` when the
             // directory has state, else seed it from the workbench table;
@@ -257,6 +269,27 @@ fn run() -> Result<(), String> {
                     }
                 }
             };
+            // Primary-side replication: bind the shipping listener and hook
+            // it under the group-commit WAL mutex *before* serving starts,
+            // so no committed batch can slip past the shipper unseen.
+            let replication = match (&cfg.replicate_listen, &persist) {
+                (Some(addr), Some(p)) => {
+                    let faults = membig::replication::FaultPlan::from_env()?;
+                    let repl = membig::replication::ReplState::primary();
+                    let (shipper, ship_addr) = membig::replication::ship::Shipper::listen(
+                        addr,
+                        p.dir().to_path_buf(),
+                        p.wal_tip(),
+                        repl.clone(),
+                        faults,
+                    )
+                    .map_err(|e| format!("--replicate-listen {addr}: {e}"))?;
+                    p.set_commit_sink(shipper.clone());
+                    println!("replicating on {ship_addr}");
+                    Some((shipper, repl))
+                }
+                _ => None,
+            };
             let engine = start_analytics(&cfg, args.get("backend"))?;
             let mut server_cfg = ServerConfig::default();
             if cfg.server_workers > 0 {
@@ -284,13 +317,18 @@ fn run() -> Result<(), String> {
                 server_cfg.write_buf_cap >> 10,
                 if persist.is_some() { "on" } else { "off" }
             );
-            let handle = Server::with_persistence(store, engine, server_cfg, persist)
-                .spawn(&cfg.bind)
-                .map_err(|e| e.to_string())?;
-            println!("listening on {} — Ctrl-C to stop", handle.addr);
-            loop {
-                std::thread::sleep(std::time::Duration::from_secs(3600));
+            let mut server =
+                Server::with_persistence(store, engine, server_cfg, persist.clone());
+            if let Some((_, repl)) = &replication {
+                server.set_replication(repl.clone());
             }
+            let handle = server.spawn(&cfg.bind).map_err(|e| e.to_string())?;
+            println!("listening on {} — Ctrl-C to stop", handle.addr);
+            let seal = match replication {
+                Some((shipper, _)) => ReplSeal::Primary(shipper),
+                None => ReplSeal::None,
+            };
+            run_until_shutdown(handle, persist, seal)
         }
         "info" => {
             println!("membig {}", env!("CARGO_PKG_VERSION"));
@@ -356,9 +394,132 @@ fn serve_processes(cfg: &EngineConfig, wb: &Workbench) -> Result<(), String> {
     let handle =
         Server::with_procs(serving, server_cfg).spawn(&cfg.bind).map_err(|e| e.to_string())?;
     println!("listening on {} — Ctrl-C to stop", handle.addr);
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    run_until_shutdown(handle, None, ReplSeal::None)
+}
+
+/// `serve --standby-of HOST:PORT`: mirror the primary's WAL stream into a
+/// local durable directory and serve reads from the applied store;
+/// mutations answer `ERR readonly standby` until the failover monitor
+/// promotes this process (no primary heartbeat for `--failover-after` ms).
+fn serve_standby(cfg: &EngineConfig, primary: String, args: &Args) -> Result<(), String> {
+    let dir = cfg
+        .durable_dir
+        .clone()
+        .ok_or("--standby-of requires --durable-dir (checked at config build)")?;
+    let faults = membig::replication::FaultPlan::from_env()?;
+    let repl = membig::replication::ReplState::standby();
+    let (store, persist, standby) = membig::replication::apply::start(
+        membig::replication::apply::StandbyOpts {
+            primary: primary.clone(),
+            dir: dir.clone(),
+            shards: cfg.shards,
+            fsync: cfg.fsync,
+            failover_after: std::time::Duration::from_millis(cfg.failover_after_ms),
+            faults,
+        },
+        repl.clone(),
+    )
+    .map_err(|e| e.to_string())?;
+    let engine = start_analytics(cfg, args.get("backend"))?;
+    let mut server_cfg = ServerConfig::default();
+    if cfg.server_workers > 0 {
+        server_cfg.workers = cfg.server_workers;
     }
+    server_cfg.max_conns = cfg.server_max_conns;
+    server_cfg.reactors = cfg.server_reactors;
+    if cfg.server_write_buf_kb > 0 {
+        server_cfg.write_buf_cap = cfg.server_write_buf_kb << 10;
+    }
+    println!(
+        "standby: mirroring {} into {} (failover after {} ms, fsync={})",
+        primary,
+        dir.display(),
+        cfg.failover_after_ms,
+        cfg.fsync
+    );
+    let store: Arc<dyn StorageEngine> = store;
+    let mut server =
+        Server::with_persistence(store, engine, server_cfg, Some(persist.clone()));
+    server.set_replication(repl);
+    let handle = server.spawn(&cfg.bind).map_err(|e| e.to_string())?;
+    println!("listening on {} — Ctrl-C to stop", handle.addr);
+    run_until_shutdown(handle, Some(persist), ReplSeal::Standby(standby))
+}
+
+/// What to seal when the serve loop drains (replication stops before the
+/// final WAL sync so no frame ships after the on-disk tip is frozen).
+enum ReplSeal {
+    None,
+    Primary(Arc<membig::replication::ship::Shipper>),
+    Standby(membig::replication::apply::Standby),
+}
+
+/// Park until SIGTERM/SIGINT, then tear down in order: stop accepting,
+/// seal replication, fsync the WAL, exit 0 — the graceful half of the
+/// crash-safety story (`kill -9` exercises the recovery half).
+fn run_until_shutdown(
+    handle: membig::server::ServerHandle,
+    persist: Option<Arc<Persistence>>,
+    seal: ReplSeal,
+) -> Result<(), String> {
+    while !membig::server::shutdown_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    println!("membig: shutdown signal received — draining");
+    handle.shutdown();
+    match seal {
+        ReplSeal::None => {}
+        ReplSeal::Primary(s) => s.seal(),
+        ReplSeal::Standby(s) => s.seal(),
+    }
+    if let Some(p) = &persist {
+        p.sync().map_err(|e| format!("final WAL sync: {e}"))?;
+    }
+    println!("membig: clean shutdown");
+    Ok(())
+}
+
+/// Fail-loud startup probes: catch an unwritable `--durable-dir`, an
+/// unbindable `--replicate-listen` or an unresolvable `--standby-of` before
+/// any state is built, each with a one-line actionable error. The probe
+/// socket/file are released before the real resources open.
+fn preflight_serve(cfg: &EngineConfig) -> Result<(), String> {
+    if let Some(dir) = &cfg.durable_dir {
+        std::fs::create_dir_all(dir).map_err(|e| {
+            format!(
+                "--durable-dir {}: cannot create: {e} (fix permissions or pick another path)",
+                dir.display()
+            )
+        })?;
+        let probe = dir.join(".membig-probe");
+        std::fs::write(&probe, b"probe").map_err(|e| {
+            format!(
+                "--durable-dir {} is not writable: {e} (fix permissions or pick another path)",
+                dir.display()
+            )
+        })?;
+        let _ = std::fs::remove_file(&probe);
+    }
+    if let Some(addr) = &cfg.replicate_listen {
+        // A listener that never accepted leaves no TIME_WAIT state, so the
+        // real bind right after this drop cannot collide with the probe.
+        std::net::TcpListener::bind(addr.as_str()).map_err(|e| {
+            format!(
+                "--replicate-listen {addr} is not bindable: {e} \
+                 (port in use, or the interface does not exist?)"
+            )
+        })?;
+    }
+    if let Some(addr) = &cfg.standby_of {
+        use std::net::ToSocketAddrs as _;
+        addr.to_socket_addrs().map_err(|e| {
+            format!(
+                "--standby-of {addr} does not resolve: {e} \
+                 (expected the primary's --replicate-listen HOST:PORT)"
+            )
+        })?;
+    }
+    Ok(())
 }
 
 /// Resolve the `--backend` flag into a running analytics service.
@@ -442,6 +603,15 @@ fn build_config(args: &Args) -> Result<EngineConfig, String> {
     }
     if let Some(m) = args.get_parsed::<u64>("snapshot-wal-mb").map_err(|e| e.to_string())? {
         b = b.snapshot_wal_mb(m);
+    }
+    if let Some(a) = args.get("replicate-listen") {
+        b = b.replicate_listen(if a.is_empty() { None } else { Some(a.to_string()) });
+    }
+    if let Some(a) = args.get("standby-of") {
+        b = b.standby_of(if a.is_empty() { None } else { Some(a.to_string()) });
+    }
+    if let Some(ms) = args.get_parsed::<u64>("failover-after").map_err(|e| e.to_string())? {
+        b = b.failover_after_ms(ms);
     }
     if args.has("writeback") {
         b = b.writeback(true);

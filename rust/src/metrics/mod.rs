@@ -644,6 +644,114 @@ impl DurabilityMetrics {
 }
 
 // ---------------------------------------------------------------------------
+// Replication metrics bundle
+// ---------------------------------------------------------------------------
+
+/// Role gauge values for [`ReplicationMetrics::role`].
+pub const REPL_ROLE_PRIMARY: i64 = 1;
+pub const REPL_ROLE_STANDBY: i64 = 2;
+
+/// Metrics for the hot-standby replication layer (`replication::`): WAL
+/// frames shipped/applied, ack traffic, replication lag, link health and
+/// failover activity. Each process (primary or standby) owns one instance
+/// and reports its own side of the link; rendered into `STATS SERVER`.
+#[derive(Default)]
+pub struct ReplicationMetrics {
+    /// WAL frames shipped to standbys (primary) — lifetime, incl. resends.
+    pub frames_shipped: Counter,
+    /// WAL bytes shipped to standbys (primary).
+    pub bytes_shipped: Counter,
+    /// WAL frames applied from the stream (standby).
+    pub frames_applied: Counter,
+    /// Acks received (primary) or sent (standby).
+    pub acks: Counter,
+    /// Heartbeats sent (primary) or received (standby).
+    pub heartbeats: Counter,
+    /// Heartbeat intervals that lapsed without any traffic (standby).
+    pub heartbeats_missed: Counter,
+    /// Link re-establishments after the initial connect.
+    pub reconnects: Counter,
+    /// Full snapshot re-syncs (bootstrap, ship-queue overflow, gap).
+    pub snapshot_resyncs: Counter,
+    /// Stream messages dropped for framing/CRC corruption (forces resync).
+    pub corrupt_frames: Counter,
+    /// Standby promotions to read-write after a lapsed heartbeat.
+    pub failovers: Counter,
+    /// Replication lag in WAL bytes (primary: tip − last ack; standby:
+    /// heartbeat tip − applied). Same-generation only; resyncs re-zero it.
+    pub lag_bytes: Gauge,
+    /// Replication lag in whole WAL frames (`lag_bytes / FRAME_BYTES`).
+    pub lag_frames: Gauge,
+    /// Current role: [`REPL_ROLE_PRIMARY`] or [`REPL_ROLE_STANDBY`].
+    pub role: Gauge,
+}
+
+impl ReplicationMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Joins a `STATS RESET` epoch: zero the traffic counters so two
+    /// measurement runs compare replication activity cleanly; the state
+    /// gauges (current lag, role) persist — a reset must never make a
+    /// standby look caught-up or flip its reported role.
+    pub fn reset_epoch_counters(&self) {
+        self.frames_shipped.reset();
+        self.bytes_shipped.reset();
+        self.frames_applied.reset();
+        self.acks.reset();
+        self.heartbeats.reset();
+        self.heartbeats_missed.reset();
+        self.reconnects.reset();
+        self.snapshot_resyncs.reset();
+        self.corrupt_frames.reset();
+        self.failovers.reset();
+    }
+
+    /// Suffix appended to `STATS SERVER` when replication is live (leading
+    /// space included, like `DurabilityMetrics::stats_suffix`).
+    pub fn stats_suffix(&self) -> String {
+        format!(
+            " repl_frames_shipped={} repl_bytes_shipped={} repl_frames_applied={} repl_acks={} \
+             repl_heartbeats={} repl_heartbeats_missed={} repl_reconnects={} \
+             repl_snapshot_resyncs={} repl_corrupt_frames={} repl_failovers={} \
+             repl_lag_bytes={} repl_lag_frames={} repl_role={}",
+            self.frames_shipped.get(),
+            self.bytes_shipped.get(),
+            self.frames_applied.get(),
+            self.acks.get(),
+            self.heartbeats.get(),
+            self.heartbeats_missed.get(),
+            self.reconnects.get(),
+            self.snapshot_resyncs.get(),
+            self.corrupt_frames.get(),
+            self.failovers.get(),
+            self.lag_bytes.get(),
+            self.lag_frames.get(),
+            self.role.get()
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("frames_shipped", Json::num(self.frames_shipped.get() as f64)),
+            ("bytes_shipped", Json::num(self.bytes_shipped.get() as f64)),
+            ("frames_applied", Json::num(self.frames_applied.get() as f64)),
+            ("acks", Json::num(self.acks.get() as f64)),
+            ("heartbeats", Json::num(self.heartbeats.get() as f64)),
+            ("heartbeats_missed", Json::num(self.heartbeats_missed.get() as f64)),
+            ("reconnects", Json::num(self.reconnects.get() as f64)),
+            ("snapshot_resyncs", Json::num(self.snapshot_resyncs.get() as f64)),
+            ("corrupt_frames", Json::num(self.corrupt_frames.get() as f64)),
+            ("failovers", Json::num(self.failovers.get() as f64)),
+            ("lag_bytes", Json::num(self.lag_bytes.get() as f64)),
+            ("lag_frames", Json::num(self.lag_frames.get() as f64)),
+            ("role", Json::num(self.role.get() as f64)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Tiered-store metrics bundle
 // ---------------------------------------------------------------------------
 
@@ -1095,6 +1203,50 @@ mod tests {
         assert_eq!(d.snapshots.get(), 0);
         assert_eq!(d.snapshot_last_ms.get(), 17, "last-snapshot gauge is state, not traffic");
         assert_eq!(d.generation.get(), 3);
+    }
+
+    #[test]
+    fn replication_metrics_render_and_reset() {
+        let r = ReplicationMetrics::new();
+        r.frames_shipped.add(300);
+        r.bytes_shipped.add(7200);
+        r.frames_applied.add(299);
+        r.acks.add(12);
+        r.heartbeats.add(40);
+        r.heartbeats_missed.add(2);
+        r.reconnects.inc();
+        r.snapshot_resyncs.inc();
+        r.failovers.inc();
+        r.lag_bytes.set(24);
+        r.lag_frames.set(1);
+        r.role.set(REPL_ROLE_STANDBY);
+        let s = r.stats_suffix();
+        for needle in [
+            " repl_frames_shipped=300",
+            " repl_bytes_shipped=7200",
+            " repl_frames_applied=299",
+            " repl_acks=12",
+            " repl_heartbeats=40",
+            " repl_heartbeats_missed=2",
+            " repl_reconnects=1",
+            " repl_snapshot_resyncs=1",
+            " repl_corrupt_frames=0",
+            " repl_failovers=1",
+            " repl_lag_bytes=24",
+            " repl_lag_frames=1",
+            " repl_role=2",
+        ] {
+            assert!(s.contains(needle), "missing {needle:?} in {s:?}");
+        }
+        let j = r.to_json();
+        assert_eq!(j.get("frames_shipped").unwrap().as_f64().unwrap(), 300.0);
+        assert_eq!(j.get("role").unwrap().as_f64().unwrap(), 2.0);
+        // Epoch reset zeroes traffic counters; lag and role are state.
+        r.reset_epoch_counters();
+        assert_eq!(r.frames_shipped.get(), 0);
+        assert_eq!(r.failovers.get(), 0);
+        assert_eq!(r.lag_bytes.get(), 24, "lag gauge is state, not traffic");
+        assert_eq!(r.role.get(), REPL_ROLE_STANDBY, "role survives the reset");
     }
 
     #[test]

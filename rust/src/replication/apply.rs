@@ -1,0 +1,349 @@
+//! Standby side of WAL shipping: `--standby-of HOST:PORT`.
+//!
+//! The standby is an ordinary `serve` process whose mutations come from the
+//! replication stream instead of clients (clients get `ERR readonly
+//! standby`). It mirrors the primary's durable directory *exactly*: shipped
+//! frames are applied through the standby's own
+//! [`Persistence::apply_many`] — same codec, same group commit — so its
+//! `(generation, offset)` WAL tip is byte-comparable with the primary's and
+//! doubles as the resume cursor after any disconnect. A `SNP1` bootstrap
+//! rebases the whole directory onto the primary's newest snapshot
+//! ([`Persistence::rebase_to_snapshot`]); rotation is mirrored by running a
+//! local checkpoint whenever the stream's generation bumps by one.
+//!
+//! A `STANDBY.json` marker in the durable dir records "this directory is a
+//! replica mirror": present → a restart may resume from its WAL tip;
+//! absent (fresh dir, or a promoted ex-standby) → the handshake demands a
+//! snapshot. The marker is deleted on promotion, at which point the
+//! directory is a normal primary directory.
+//!
+//! Failover: every stream message beats the [`FailoverClock`]; the monitor
+//! thread promotes (CAS in [`ReplState`]), seals the WAL with a final
+//! sync, and the server — which checks the role on every mutation — starts
+//! taking writes. There is nothing to replay at promotion: frames were
+//! applied on arrival, so the store already *is* the acked tip.
+
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use super::heartbeat::{spawn_monitor, FailoverClock};
+use super::{
+    backoff_delay, decode_frames, fault_kill_now, read_stream_msg, write_ack, write_handshake,
+    FaultKind, FaultPlan, Handshake, ReplState, StreamMsg,
+};
+use crate::durability::{DurabilityError, DurabilityOptions, Persistence, FRAME_BYTES};
+use crate::memstore::ShardedStore;
+use crate::util::rng::Rng;
+
+/// How long a blocking stream read may sit before we re-check stop/promote.
+/// An alive primary heartbeats every 250 ms, so a timeout here never fires
+/// on a healthy link.
+const STREAM_READ_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// Marker file: "this durable dir is a standby mirror of some primary".
+pub(crate) fn marker_path(dir: &Path) -> PathBuf {
+    dir.join("STANDBY.json")
+}
+
+fn write_marker(dir: &Path) {
+    // Best-effort: a lost marker only costs a snapshot re-sync on restart.
+    let _ = std::fs::write(marker_path(dir), b"{\"role\":\"standby\"}\n");
+}
+
+/// Everything the standby threads share.
+struct ApplyCtx {
+    primary: String,
+    dir: PathBuf,
+    shards: usize,
+    persist: Arc<Persistence>,
+    repl: Arc<ReplState>,
+    clock: Arc<FailoverClock>,
+    stop: Arc<AtomicBool>,
+    faults: FaultPlan,
+}
+
+/// Options for [`start`].
+pub struct StandbyOpts {
+    /// Primary's `--replicate-listen` address, `HOST:PORT`.
+    pub primary: String,
+    /// The standby's own durable directory (mirror of the primary's).
+    pub dir: PathBuf,
+    pub shards: usize,
+    pub fsync: bool,
+    /// Promote after this long without a primary heartbeat.
+    pub failover_after: Duration,
+    pub faults: FaultPlan,
+}
+
+/// Handle returned by [`start`]; lets shutdown seal the replication link.
+pub struct Standby {
+    stop: Arc<AtomicBool>,
+}
+
+impl Standby {
+    /// Stop the apply and failover threads (they exit within their poll
+    /// intervals). Called on graceful shutdown before the final WAL sync.
+    pub fn seal(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+}
+
+/// Open (or resume) the standby's mirrored durable directory and start the
+/// replication threads: the apply loop and the failover monitor. Returns
+/// the live store + persistence for the read-only server to serve from.
+pub fn start(
+    opts: StandbyOpts,
+    repl: Arc<ReplState>,
+) -> Result<(Arc<ShardedStore>, Arc<Persistence>, Standby), DurabilityError> {
+    // Local snapshot triggers are disabled: the standby checkpoints only
+    // when the stream says the primary rotated, keeping `(generation,
+    // offset)` in lockstep so resume cursors mean the same thing on both
+    // sides.
+    let dopts = DurabilityOptions {
+        fsync: opts.fsync,
+        snapshot_every: Duration::ZERO,
+        snapshot_wal_bytes: 0,
+    };
+    let shards = opts.shards;
+    let (store, persist, report) = Persistence::open(&opts.dir, dopts, shards, move || {
+        Ok(Arc::new(ShardedStore::new(shards, 4096)))
+    })?;
+    let persist = Arc::new(persist);
+    let need_snapshot = report.fresh || !marker_path(&opts.dir).exists();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let clock = Arc::new(FailoverClock::new());
+    let ctx = ApplyCtx {
+        primary: opts.primary,
+        dir: opts.dir.clone(),
+        shards,
+        persist: persist.clone(),
+        repl: repl.clone(),
+        clock: clock.clone(),
+        stop: stop.clone(),
+        faults: opts.faults,
+    };
+
+    {
+        let repl = repl.clone();
+        let persist = persist.clone();
+        let stop = stop.clone();
+        let dir = opts.dir;
+        let failover_after = opts.failover_after;
+        spawn_monitor(clock, failover_after, stop.clone(), repl.clone(), move || {
+            if repl.promote() {
+                stop.store(true, Ordering::Release);
+                let _ = std::fs::remove_file(marker_path(&dir));
+                if let Err(e) = persist.sync() {
+                    eprintln!("membig: promoted standby failed to seal WAL: {e}");
+                }
+                println!(
+                    "membig: standby promoted to primary (no heartbeat for {} ms)",
+                    failover_after.as_millis()
+                );
+            }
+        });
+    }
+
+    let spawned = thread::Builder::new()
+        .name("membig-repl-apply".into())
+        .spawn(move || run_apply(ctx, need_snapshot));
+    if let Err(e) = spawned {
+        return Err(DurabilityError::Io(e));
+    }
+
+    Ok((store, persist, Standby { stop }))
+}
+
+/// Outer reconnect loop: capped exponential backoff + jitter between
+/// attempts, resume position re-read from the durable WAL tip every time.
+fn run_apply(ctx: ApplyCtx, mut need_snapshot: bool) {
+    let mut rng = Rng::new(0x7365_7276_6572_7331 ^ u64::from(std::process::id()));
+    let mut attempt: u32 = 0;
+    let mut had_session = false;
+    let mut applied_batches: u64 = 0;
+    while !ctx.stop.load(Ordering::Acquire) {
+        match TcpStream::connect(&ctx.primary) {
+            Ok(sock) => {
+                if had_session {
+                    ctx.repl.metrics.reconnects.inc();
+                }
+                had_session = true;
+                match run_session(&ctx, &sock, need_snapshot, &mut applied_batches) {
+                    SessionEnd::Stopped => return,
+                    SessionEnd::Reconnect { need_snapshot: ns, made_progress } => {
+                        need_snapshot = ns;
+                        attempt = if made_progress { 0 } else { attempt.saturating_add(1) };
+                    }
+                }
+            }
+            Err(_) => attempt = attempt.saturating_add(1),
+        }
+        if ctx.stop.load(Ordering::Acquire) {
+            return;
+        }
+        thread::sleep(backoff_delay(attempt, &mut rng));
+    }
+}
+
+enum SessionEnd {
+    /// Shutdown or promotion: leave the loop entirely.
+    Stopped,
+    /// Link failed or diverged: back off and dial again.
+    Reconnect { need_snapshot: bool, made_progress: bool },
+}
+
+fn run_session(
+    ctx: &ApplyCtx,
+    sock: &TcpStream,
+    need_snapshot: bool,
+    applied_batches: &mut u64,
+) -> SessionEnd {
+    let reconnect = |ns: bool, progress: bool| SessionEnd::Reconnect {
+        need_snapshot: ns,
+        made_progress: progress,
+    };
+    if sock.set_nodelay(true).is_err()
+        || sock.set_read_timeout(Some(STREAM_READ_TIMEOUT)).is_err()
+    {
+        return reconnect(need_snapshot, false);
+    }
+    let mut io = sock;
+    let (tip_gen, tip_off) = ctx.persist.wal_tip();
+    let hs = Handshake { need_snapshot, generation: tip_gen, offset: tip_off };
+    if write_handshake(&mut io, hs).is_err() {
+        return reconnect(need_snapshot, false);
+    }
+
+    let mut progress = false;
+    loop {
+        if ctx.stop.load(Ordering::Acquire) {
+            return SessionEnd::Stopped;
+        }
+        let msg = match read_stream_msg(&mut io) {
+            Ok(m) => m,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Idle link; heartbeats lapsing is the monitor's call.
+                continue;
+            }
+            Err(_) => return reconnect(false, progress),
+        };
+        ctx.clock.beat();
+        match msg {
+            StreamMsg::Snapshot { generation, bytes } => {
+                match ctx.persist.rebase_to_snapshot(generation, &bytes, ctx.shards) {
+                    Ok(_records) => {
+                        ctx.repl.metrics.snapshot_resyncs.inc();
+                        write_marker(&ctx.dir);
+                        progress = true;
+                        if write_ack(&mut io, generation, 0).is_err() {
+                            return reconnect(false, progress);
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("membig: standby snapshot re-sync failed: {e}");
+                        return reconnect(true, progress);
+                    }
+                }
+            }
+            StreamMsg::Heartbeat { generation, tip_offset } => {
+                ctx.repl.metrics.heartbeats.inc();
+                let (tg, to) = ctx.persist.wal_tip();
+                if generation == tg {
+                    let lag = tip_offset.saturating_sub(to);
+                    ctx.repl.metrics.lag_bytes.set(lag as i64);
+                    ctx.repl.metrics.lag_frames.set((lag / FRAME_BYTES as u64) as i64);
+                }
+                // Ack our position so the primary's lag gauge stays fresh
+                // even when no frames flow.
+                if write_ack(&mut io, tg, to).is_err() {
+                    return reconnect(false, progress);
+                }
+            }
+            StreamMsg::Wal { generation, start_offset, payload } => {
+                *applied_batches += 1;
+                match ctx.faults.at(*applied_batches) {
+                    Some(FaultKind::Kill) => fault_kill_now(),
+                    Some(FaultKind::Sever) => return reconnect(false, progress),
+                    Some(FaultKind::Delay(ms)) => thread::sleep(Duration::from_millis(ms)),
+                    // Dup is a primary-side action; harmless to ignore here.
+                    Some(FaultKind::Dup) | None => {}
+                }
+                let (ups, consumed, clean) = decode_frames(&payload);
+                if !clean {
+                    // Torn/corrupt mid-stream: apply the valid whole-frame
+                    // prefix, drop the rest, resume from our tip — exactly
+                    // recovery's torn-tail rule.
+                    ctx.repl.metrics.corrupt_frames.inc();
+                }
+                let (mut tg, mut to) = ctx.persist.wal_tip();
+                if generation == tg + 1 && start_offset == 0 {
+                    // The primary rotated; mirror it with a local
+                    // checkpoint so generation numbers stay in lockstep.
+                    match ctx.persist.checkpoint_now() {
+                        Ok(st) if st.generation == generation => {
+                            tg = generation;
+                            to = 0;
+                        }
+                        _ => return reconnect(true, progress),
+                    }
+                }
+                if generation < tg {
+                    // Stale duplicate from before a rotation we already
+                    // mirrored; drop it.
+                    continue;
+                }
+                if generation > tg {
+                    // Generation gap we cannot bridge locally: reconnect
+                    // and let the primary stream from our durable tip.
+                    return reconnect(false, progress);
+                }
+                let end = start_offset + consumed as u64;
+                if end <= to {
+                    // Entirely behind our tip: a duplicate (e.g. the dup
+                    // fault, or a queue/disk overlap). Re-ack and move on.
+                    if write_ack(&mut io, tg, to).is_err() {
+                        return reconnect(false, progress);
+                    }
+                    if !clean {
+                        return reconnect(false, progress);
+                    }
+                    continue;
+                }
+                if start_offset > to {
+                    // Hole between our tip and this batch; resume cleanly.
+                    return reconnect(false, progress);
+                }
+                // Overlapping prefix is already durable here; apply only
+                // the frames past our tip. Offsets are frame-aligned on
+                // both sides by construction.
+                let skip = ((to - start_offset) / FRAME_BYTES as u64) as usize;
+                let fresh = &ups[skip..];
+                match ctx.persist.apply_many(fresh, true) {
+                    Ok(_) => {
+                        ctx.repl.metrics.frames_applied.add(fresh.len() as u64);
+                        progress = true;
+                        let (ng, no) = ctx.persist.wal_tip();
+                        if write_ack(&mut io, ng, no).is_err() {
+                            return reconnect(false, progress);
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("membig: standby failed to apply shipped frames: {e}");
+                        return reconnect(false, progress);
+                    }
+                }
+                if !clean {
+                    return reconnect(false, progress);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Deadline-driven failover: detect a dead primary by heartbeat lapse.
+//!
+//! The reactor's timer wheel is *lazy*: it never wakes per-rearm, it sleeps
+//! toward the earliest candidate deadline and re-checks live state on wake,
+//! so a deadline that was pushed out while it slept costs one cheap
+//! re-computation instead of a wakeup per heartbeat. The wheel itself lives
+//! inside the Linux-only reactor, and replication must run on the fallback
+//! servers too — so [`spawn_monitor`] applies the same discipline to the
+//! single deadline it owns: sleep until `failover_after - elapsed`, re-read
+//! the beat atomic on wake, go back to sleep if a heartbeat moved the
+//! deadline. Beats are lock-free stores; the monitor thread is the only
+//! sleeper.
+//!
+//! When the deadline truly lapses the monitor fires `on_lapse` exactly once
+//! and exits. The apply side passes a closure that wins the
+//! [`super::ReplState::promote`] CAS, seals the WAL with a final sync,
+//! removes the standby marker, and lets the server start taking writes.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::{ReplState, HEARTBEAT_EVERY};
+
+/// Monotone "last time we heard from the primary" clock, beaten by the
+/// apply thread on every stream message and read by the monitor.
+pub struct FailoverClock {
+    start: Instant,
+    last_beat_ns: AtomicU64,
+}
+
+impl FailoverClock {
+    pub fn new() -> FailoverClock {
+        let c = FailoverClock { start: Instant::now(), last_beat_ns: AtomicU64::new(0) };
+        c.beat();
+        c
+    }
+
+    /// Record that the primary is alive *now*.
+    #[inline]
+    pub fn beat(&self) {
+        let now = self.start.elapsed().as_nanos() as u64;
+        self.last_beat_ns.store(now, Ordering::Release);
+    }
+
+    /// Time since the last beat.
+    pub fn since_last_beat(&self) -> Duration {
+        let now = self.start.elapsed().as_nanos() as u64;
+        let last = self.last_beat_ns.load(Ordering::Acquire);
+        Duration::from_nanos(now.saturating_sub(last))
+    }
+}
+
+impl Default for FailoverClock {
+    fn default() -> Self {
+        FailoverClock::new()
+    }
+}
+
+/// Spawn the failover monitor. Calls `on_lapse` once when the clock goes
+/// `failover_after` without a beat, then exits; exits silently if `stop` is
+/// set first. Also accounts `repl_heartbeats_missed`: one tick per whole
+/// silent 2×[`HEARTBEAT_EVERY`] interval, so a healthy link counts zero and
+/// a flapping one counts every gap exactly once.
+pub(crate) fn spawn_monitor(
+    clock: Arc<FailoverClock>,
+    failover_after: Duration,
+    stop: Arc<AtomicBool>,
+    repl: Arc<ReplState>,
+    on_lapse: impl FnOnce() + Send + 'static,
+) -> thread::JoinHandle<()> {
+    let miss_interval = HEARTBEAT_EVERY * 2;
+    let builder = thread::Builder::new().name("membig-repl-failover".into());
+    let spawn = builder.spawn(move || {
+        // Whole silent intervals already counted since the last observed
+        // beat; resets when `elapsed` jumps backwards (a beat arrived).
+        let mut counted: u32 = 0;
+        let mut last_elapsed = Duration::ZERO;
+        loop {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            let elapsed = clock.since_last_beat();
+            if elapsed >= failover_after {
+                on_lapse();
+                return;
+            }
+            if elapsed < last_elapsed {
+                counted = 0;
+            }
+            last_elapsed = elapsed;
+            while miss_interval * (counted + 1) <= elapsed {
+                counted += 1;
+                repl.metrics.heartbeats_missed.inc();
+            }
+            // Lazy re-arm: sleep toward the *current* deadline, but never
+            // past the next miss-accounting boundary, and always at least a
+            // little so a beat storm can't spin us.
+            let to_deadline = failover_after - elapsed;
+            let nap = to_deadline.min(miss_interval).max(Duration::from_millis(10));
+            thread::sleep(nap);
+        }
+    });
+    match spawn {
+        Ok(h) => h,
+        // lint:allow(hot-path-panic): thread spawn at standby startup; if the
+        // OS refuses a thread the process cannot meaningfully serve anyway.
+        Err(e) => panic!("spawn failover monitor: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn clock_beats_reset_elapsed() {
+        let c = FailoverClock::new();
+        thread::sleep(Duration::from_millis(30));
+        assert!(c.since_last_beat() >= Duration::from_millis(25));
+        c.beat();
+        assert!(c.since_last_beat() < Duration::from_millis(25));
+    }
+
+    #[test]
+    fn monitor_fires_once_after_lapse() {
+        let clock = Arc::new(FailoverClock::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let repl = ReplState::standby();
+        let fired = Arc::new(AtomicU32::new(0));
+        let f = fired.clone();
+        let h = spawn_monitor(
+            clock.clone(),
+            Duration::from_millis(200),
+            stop.clone(),
+            repl.clone(),
+            move || {
+                f.fetch_add(1, Ordering::SeqCst);
+            },
+        );
+        // Keep it alive past one would-be deadline, then go silent.
+        thread::sleep(Duration::from_millis(100));
+        clock.beat();
+        thread::sleep(Duration::from_millis(100));
+        assert_eq!(fired.load(Ordering::SeqCst), 0, "beat must push the deadline out");
+        h.join().unwrap();
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn monitor_respects_stop() {
+        let clock = Arc::new(FailoverClock::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let repl = ReplState::standby();
+        let fired = Arc::new(AtomicU32::new(0));
+        let f = fired.clone();
+        let h = spawn_monitor(
+            clock.clone(),
+            Duration::from_secs(60),
+            stop.clone(),
+            repl,
+            move || {
+                f.fetch_add(1, Ordering::SeqCst);
+            },
+        );
+        stop.store(true, Ordering::Release);
+        // Wake-up latency is bounded by the 500 ms miss interval.
+        h.join().unwrap();
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
+    }
+}

@@ -1,0 +1,593 @@
+//! Hot-standby replication via WAL shipping (`DESIGN.md` §15).
+//!
+//! The paper's single-server premise is also its single point of failure.
+//! This module keeps the big-memory story intact — one primary owns the RAM
+//! image — while a second cheap process mirrors the group-commit WAL over
+//! TCP and takes over when the primary dies:
+//!
+//! - [`ship`] — primary side. A [`crate::durability::CommitSink`] installed
+//!   under the WAL mutex enqueues every committed batch (so ship order is
+//!   exactly WAL order) onto a **bounded** per-session queue; a session
+//!   thread drains it to the standby and falls back to reading the WAL
+//!   files on disk when the queue overflows, so a slow standby can never
+//!   stall the primary's commit path.
+//! - [`apply`] — standby side. Connects with capped exponential backoff +
+//!   jitter, bootstraps from the primary's newest snapshot when fresh,
+//!   then mirrors shipped frames into its *own* snapshot+WAL directory via
+//!   the ordinary group-commit path, acking `(generation, offset)` after
+//!   each applied batch. Corrupt frames are dropped at the CRC exactly
+//!   like crash recovery drops a torn tail.
+//! - [`heartbeat`] — deadline-driven failover. The primary ships `HBT1`
+//!   markers when idle; a monitor thread on the standby applies the
+//!   reactor's lazy-timer-wheel discipline to a single deadline and, when
+//!   the heartbeat lapses past `--failover-after`, seals the WAL and flips
+//!   the process read-write.
+//!
+//! ## Wire protocol
+//!
+//! Five message kinds, each a 4-byte ASCII tag + little-endian fields:
+//!
+//! | tag    | direction         | payload |
+//! |--------|-------------------|---------|
+//! | `MRH1` | standby → primary | `flags:u32` (bit 0 = need snapshot), `generation:u64`, `offset:u64` |
+//! | `SNP1` | primary → standby | `generation:u64`, `len:u64`, then `len` snapshot-file bytes |
+//! | `WAL1` | primary → standby | `generation:u64`, `start_offset:u64`, `len:u32`, then `len` CRC-framed WAL bytes |
+//! | `HBT1` | primary → standby | `generation:u64`, `tip_offset:u64` |
+//! | `ACK1` | standby → primary | `generation:u64`, `offset:u64` |
+//!
+//! `WAL1` payloads reuse the on-disk frame format byte-for-byte
+//! ([`crate::durability::FRAME_BYTES`]-sized, per-frame CRC), so the
+//! standby's decoder *is* the recovery decoder: [`decode_frames`] applies
+//! the longest whole-frame valid prefix and severs the link on anything
+//! else. Any malformed tag or oversized length also severs the link; the
+//! reconnect handshake resumes from the standby's durable WAL tip.
+//!
+//! ## Fault injection
+//!
+//! [`FaultPlan`] is the deterministic harness the kill tests drive via the
+//! `MEMBIG_REPL_FAULTS` env hook: `sever@10,delay@20:50,dup@30,kill@40`
+//! severs the stream after shipped batch 10, delays batch 20 by 50 ms,
+//! duplicates batch 30, and SIGKILLs the process at batch 40. Each process
+//! parses its own environment, so the same spec grammar kills either side
+//! at a chosen frame boundary.
+
+pub mod apply;
+pub mod heartbeat;
+pub mod ship;
+
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::durability::FRAME_BYTES;
+use crate::metrics::{ReplicationMetrics, REPL_ROLE_PRIMARY, REPL_ROLE_STANDBY};
+use crate::util::rng::Rng;
+use crate::workload::record::StockUpdate;
+
+/// Role byte stored in [`ReplState`]; mirrors the `repl_role` gauge values.
+pub const ROLE_PRIMARY: u8 = REPL_ROLE_PRIMARY as u8;
+/// See [`ROLE_PRIMARY`].
+pub const ROLE_STANDBY: u8 = REPL_ROLE_STANDBY as u8;
+
+/// Primary ships a heartbeat after this long with nothing to send.
+pub(crate) const HEARTBEAT_EVERY: Duration = Duration::from_millis(250);
+/// Per-session bounded ship-queue budget; overflow falls back to disk
+/// catch-up (and snapshot re-sync past the GC floor) instead of blocking
+/// the commit path.
+pub(crate) const SHIP_QUEUE_BYTES: usize = 4 << 20;
+/// Upper bound on a single `WAL1` payload, both shipped and accepted.
+pub(crate) const MAX_WAL_MSG_BYTES: u32 = 8 << 20;
+/// Sanity cap on a shipped snapshot; matches the snapshot loader's own
+/// size validation, this just bounds the network read.
+pub(crate) const MAX_SNAPSHOT_BYTES: u64 = 64 << 30;
+
+const BACKOFF_BASE_MS: u64 = 50;
+const BACKOFF_CAP_MS: u64 = 2_000;
+
+/// Handshake flag: standby has no usable mirrored state; send `SNP1` first.
+pub(crate) const HS_NEED_SNAPSHOT: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// Role state
+// ---------------------------------------------------------------------------
+
+/// Shared replication state: the process role (checked on every mutation
+/// dispatch) plus the metrics bundle rendered by `STATS SERVER`.
+pub struct ReplState {
+    role: AtomicU8,
+    pub metrics: ReplicationMetrics,
+}
+
+impl ReplState {
+    /// State for a primary (read-write from the start).
+    pub fn primary() -> Arc<ReplState> {
+        let s = ReplState { role: AtomicU8::new(ROLE_PRIMARY), metrics: ReplicationMetrics::new() };
+        s.metrics.role.set(REPL_ROLE_PRIMARY);
+        Arc::new(s)
+    }
+
+    /// State for a standby (read-only until [`ReplState::promote`]).
+    pub fn standby() -> Arc<ReplState> {
+        let s = ReplState { role: AtomicU8::new(ROLE_STANDBY), metrics: ReplicationMetrics::new() };
+        s.metrics.role.set(REPL_ROLE_STANDBY);
+        Arc::new(s)
+    }
+
+    /// True while mutations must answer `ERR readonly standby`.
+    #[inline]
+    pub fn is_standby(&self) -> bool {
+        self.role.load(Ordering::Acquire) == ROLE_STANDBY
+    }
+
+    /// Flip standby → primary exactly once. Returns whether *this* call won
+    /// the flip (loser was a concurrent promotion or an already-primary).
+    pub fn promote(&self) -> bool {
+        let won = self
+            .role
+            .compare_exchange(ROLE_STANDBY, ROLE_PRIMARY, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok();
+        if won {
+            self.metrics.failovers.inc();
+            self.metrics.role.set(REPL_ROLE_PRIMARY);
+            self.metrics.lag_bytes.set(0);
+            self.metrics.lag_frames.set(0);
+        }
+        won
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frame decoding (shared with `prop_durability` coverage)
+// ---------------------------------------------------------------------------
+
+/// Decode the longest valid whole-frame prefix of a shipped `WAL1` payload.
+///
+/// Returns `(updates, consumed_bytes, clean)`: `consumed_bytes` is always a
+/// multiple of [`FRAME_BYTES`], and `clean` is false when trailing bytes
+/// were dropped — a short tail or a CRC mismatch, handled exactly like
+/// recovery handles a torn WAL tail (apply the prefix, drop the rest).
+pub fn decode_frames(buf: &[u8]) -> (Vec<StockUpdate>, usize, bool) {
+    let mut ups = Vec::with_capacity(buf.len() / FRAME_BYTES);
+    let mut off = 0usize;
+    while off + FRAME_BYTES <= buf.len() {
+        let mut frame = [0u8; FRAME_BYTES];
+        frame.copy_from_slice(&buf[off..off + FRAME_BYTES]);
+        match crate::durability::decode_frame(&frame) {
+            Some(u) => {
+                ups.push(u);
+                off += FRAME_BYTES;
+            }
+            None => return (ups, off, false),
+        }
+    }
+    let clean = off == buf.len();
+    (ups, off, clean)
+}
+
+// ---------------------------------------------------------------------------
+// Wire protocol helpers
+// ---------------------------------------------------------------------------
+
+pub(crate) const TAG_HANDSHAKE: [u8; 4] = *b"MRH1";
+pub(crate) const TAG_SNAPSHOT: [u8; 4] = *b"SNP1";
+pub(crate) const TAG_WAL: [u8; 4] = *b"WAL1";
+pub(crate) const TAG_HEARTBEAT: [u8; 4] = *b"HBT1";
+pub(crate) const TAG_ACK: [u8; 4] = *b"ACK1";
+
+fn proto_err(what: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("replication protocol: {what}"))
+}
+
+fn read_u32(r: &mut impl Read) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Standby's resume position, sent as the first message of every session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Handshake {
+    pub need_snapshot: bool,
+    pub generation: u64,
+    pub offset: u64,
+}
+
+pub(crate) fn write_handshake(w: &mut impl Write, hs: Handshake) -> io::Result<()> {
+    let mut msg = [0u8; 24];
+    msg[0..4].copy_from_slice(&TAG_HANDSHAKE);
+    let flags: u32 = if hs.need_snapshot { HS_NEED_SNAPSHOT } else { 0 };
+    msg[4..8].copy_from_slice(&flags.to_le_bytes());
+    msg[8..16].copy_from_slice(&hs.generation.to_le_bytes());
+    msg[16..24].copy_from_slice(&hs.offset.to_le_bytes());
+    w.write_all(&msg)
+}
+
+pub(crate) fn read_handshake(r: &mut impl Read) -> io::Result<Handshake> {
+    let mut tag = [0u8; 4];
+    r.read_exact(&mut tag)?;
+    if tag != TAG_HANDSHAKE {
+        return Err(proto_err("bad handshake tag"));
+    }
+    let flags = read_u32(r)?;
+    let generation = read_u64(r)?;
+    let offset = read_u64(r)?;
+    Ok(Handshake { need_snapshot: flags & HS_NEED_SNAPSHOT != 0, generation, offset })
+}
+
+pub(crate) fn write_ack(w: &mut impl Write, generation: u64, offset: u64) -> io::Result<()> {
+    let mut msg = [0u8; 20];
+    msg[0..4].copy_from_slice(&TAG_ACK);
+    msg[4..12].copy_from_slice(&generation.to_le_bytes());
+    msg[12..20].copy_from_slice(&offset.to_le_bytes());
+    w.write_all(&msg)
+}
+
+/// Blocking read of one `ACK1`; `Err` means the session is gone.
+pub(crate) fn read_ack(r: &mut impl Read) -> io::Result<(u64, u64)> {
+    let mut tag = [0u8; 4];
+    r.read_exact(&mut tag)?;
+    if tag != TAG_ACK {
+        return Err(proto_err("bad ack tag"));
+    }
+    Ok((read_u64(r)?, read_u64(r)?))
+}
+
+pub(crate) fn write_heartbeat(w: &mut impl Write, generation: u64, tip: u64) -> io::Result<()> {
+    let mut msg = [0u8; 20];
+    msg[0..4].copy_from_slice(&TAG_HEARTBEAT);
+    msg[4..12].copy_from_slice(&generation.to_le_bytes());
+    msg[12..20].copy_from_slice(&tip.to_le_bytes());
+    w.write_all(&msg)
+}
+
+pub(crate) fn write_wal_msg(
+    w: &mut impl Write,
+    generation: u64,
+    start_offset: u64,
+    payload: &[u8],
+) -> io::Result<()> {
+    if payload.len() as u64 > MAX_WAL_MSG_BYTES as u64 {
+        return Err(proto_err("WAL batch exceeds ship cap"));
+    }
+    let mut hdr = [0u8; 24];
+    hdr[0..4].copy_from_slice(&TAG_WAL);
+    hdr[4..12].copy_from_slice(&generation.to_le_bytes());
+    hdr[12..20].copy_from_slice(&start_offset.to_le_bytes());
+    hdr[20..24].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&hdr)?;
+    w.write_all(payload)
+}
+
+pub(crate) fn write_snapshot_msg(w: &mut impl Write, generation: u64, snap: &[u8]) -> io::Result<()> {
+    let mut hdr = [0u8; 20];
+    hdr[0..4].copy_from_slice(&TAG_SNAPSHOT);
+    hdr[4..12].copy_from_slice(&generation.to_le_bytes());
+    hdr[12..20].copy_from_slice(&(snap.len() as u64).to_le_bytes());
+    w.write_all(&hdr)?;
+    w.write_all(snap)
+}
+
+/// One primary → standby stream message.
+pub(crate) enum StreamMsg {
+    Snapshot { generation: u64, bytes: Vec<u8> },
+    Wal { generation: u64, start_offset: u64, payload: Vec<u8> },
+    Heartbeat { generation: u64, tip_offset: u64 },
+}
+
+/// Blocking read of the next stream message. `InvalidData` errors (bad tag,
+/// oversized length) mean the link is unrecoverable mid-stream: sever and
+/// resume via handshake.
+pub(crate) fn read_stream_msg(r: &mut impl Read) -> io::Result<StreamMsg> {
+    let mut tag = [0u8; 4];
+    r.read_exact(&mut tag)?;
+    match tag {
+        TAG_SNAPSHOT => {
+            let generation = read_u64(r)?;
+            let len = read_u64(r)?;
+            if len > MAX_SNAPSHOT_BYTES {
+                return Err(proto_err("snapshot length implausible"));
+            }
+            // Chunked read so a lying header can't trigger one huge
+            // allocation before the stream runs dry.
+            let mut bytes = Vec::new();
+            let mut remaining = len;
+            let mut chunk = vec![0u8; 1 << 20];
+            while remaining > 0 {
+                let take = remaining.min(chunk.len() as u64) as usize;
+                r.read_exact(&mut chunk[..take])?;
+                bytes.extend_from_slice(&chunk[..take]);
+                remaining -= take as u64;
+            }
+            Ok(StreamMsg::Snapshot { generation, bytes })
+        }
+        TAG_WAL => {
+            let generation = read_u64(r)?;
+            let start_offset = read_u64(r)?;
+            let len = read_u32(r)?;
+            if len > MAX_WAL_MSG_BYTES {
+                return Err(proto_err("WAL batch length implausible"));
+            }
+            let mut payload = vec![0u8; len as usize];
+            r.read_exact(&mut payload)?;
+            Ok(StreamMsg::Wal { generation, start_offset, payload })
+        }
+        TAG_HEARTBEAT => {
+            let generation = read_u64(r)?;
+            let tip_offset = read_u64(r)?;
+            Ok(StreamMsg::Heartbeat { generation, tip_offset })
+        }
+        _ => Err(proto_err("unknown stream tag")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reconnect backoff
+// ---------------------------------------------------------------------------
+
+/// Capped exponential backoff with ±25% deterministic jitter: 50 ms doubling
+/// to a 2 s cap. `attempt` counts consecutive failures since the last good
+/// session.
+pub(crate) fn backoff_delay(attempt: u32, rng: &mut Rng) -> Duration {
+    let base = BACKOFF_BASE_MS.saturating_mul(1u64 << attempt.min(6));
+    let capped = base.min(BACKOFF_CAP_MS);
+    let jitter = capped / 4;
+    let span = 2 * jitter + 1;
+    let offset = rng.gen_range(span) as i64 - jitter as i64;
+    Duration::from_millis(capped.saturating_add_signed(offset))
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic fault injection (`MEMBIG_REPL_FAULTS`)
+// ---------------------------------------------------------------------------
+
+/// What to do when the shipped/applied batch counter hits a plan entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Drop the connection after this batch.
+    Sever,
+    /// Sleep this many milliseconds before this batch.
+    Delay(u64),
+    /// Send this batch twice (primary side only; the standby treats the
+    /// duplicate as an already-applied prefix and skips it).
+    Dup,
+    /// SIGKILL-equivalent: abort the process at this frame boundary.
+    Kill,
+}
+
+/// A deterministic schedule of faults keyed on the monotone batch counter
+/// of whichever process parsed it. Spec grammar (comma-separated):
+/// `sever@N`, `delay@N:MS`, `dup@N`, `kill@N`.
+#[derive(Debug, Default, Clone)]
+pub struct FaultPlan {
+    at: Vec<(u64, FaultKind)>,
+}
+
+impl FaultPlan {
+    /// Parse `MEMBIG_REPL_FAULTS` from the environment; empty plan when
+    /// unset. A malformed spec is a startup error worth dying loudly for —
+    /// a silently ignored fault plan would make the kill tests vacuous.
+    pub fn from_env() -> Result<FaultPlan, String> {
+        match std::env::var("MEMBIG_REPL_FAULTS") {
+            Ok(spec) => FaultPlan::from_spec(&spec),
+            Err(_) => Ok(FaultPlan::default()),
+        }
+    }
+
+    /// Parse a spec string like `sever@10,delay@20:50,dup@30,kill@40`.
+    pub fn from_spec(spec: &str) -> Result<FaultPlan, String> {
+        let mut at = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, rest) = part
+                .split_once('@')
+                .ok_or_else(|| format!("fault `{part}`: expected KIND@N"))?;
+            let parse_n = |s: &str| {
+                s.parse::<u64>().map_err(|_| format!("fault `{part}`: bad batch number `{s}`"))
+            };
+            let entry = match kind {
+                "sever" => (parse_n(rest)?, FaultKind::Sever),
+                "dup" => (parse_n(rest)?, FaultKind::Dup),
+                "kill" => (parse_n(rest)?, FaultKind::Kill),
+                "delay" => {
+                    let (n, ms) = rest
+                        .split_once(':')
+                        .ok_or_else(|| format!("fault `{part}`: expected delay@N:MS"))?;
+                    (parse_n(n)?, FaultKind::Delay(parse_n(ms)?))
+                }
+                _ => return Err(format!("fault `{part}`: unknown kind `{kind}`")),
+            };
+            at.push(entry);
+        }
+        Ok(FaultPlan { at })
+    }
+
+    /// The fault scheduled for batch `n`, if any.
+    pub fn at(&self, n: u64) -> Option<FaultKind> {
+        self.at.iter().find(|(m, _)| *m == n).map(|(_, k)| *k)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.at.is_empty()
+    }
+}
+
+/// Execute the process-killing half of a fault. Separated so sever/delay/dup
+/// can be handled inline where the stream lives.
+pub(crate) fn fault_kill_now() -> ! {
+    // abort() == SIGABRT: un-catchable mid-write death at an exact frame
+    // boundary, which is the point of the harness.
+    std::process::abort()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::durability::encode_frame;
+
+    fn upd(i: u64) -> StockUpdate {
+        StockUpdate { isbn13: 9_780_000_000_000 + i, new_price_cents: 100 + i, new_quantity: i as u32 }
+    }
+
+    fn stream_of(n: u64) -> Vec<u8> {
+        let mut buf = Vec::new();
+        for i in 0..n {
+            buf.extend_from_slice(&encode_frame(&upd(i)));
+        }
+        buf
+    }
+
+    #[test]
+    fn decode_frames_clean_stream() {
+        let buf = stream_of(5);
+        let (ups, consumed, clean) = decode_frames(&buf);
+        assert!(clean);
+        assert_eq!(consumed, buf.len());
+        assert_eq!(ups.len(), 5);
+        assert_eq!(ups[3], upd(3));
+    }
+
+    #[test]
+    fn decode_frames_truncation_yields_whole_frame_prefix() {
+        let buf = stream_of(4);
+        for cut in 0..buf.len() {
+            let (ups, consumed, clean) = decode_frames(&buf[..cut]);
+            let whole = cut / FRAME_BYTES;
+            assert_eq!(ups.len(), whole, "cut={cut}");
+            assert_eq!(consumed, whole * FRAME_BYTES, "cut={cut}");
+            assert_eq!(clean, cut % FRAME_BYTES == 0, "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn decode_frames_corruption_stops_at_bad_crc() {
+        let clean_buf = stream_of(4);
+        for byte in 0..clean_buf.len() {
+            let mut buf = clean_buf.clone();
+            buf[byte] ^= 0xff;
+            let (ups, consumed, clean) = decode_frames(&buf);
+            let bad_frame = byte / FRAME_BYTES;
+            assert!(!clean, "byte={byte}");
+            assert_eq!(ups.len(), bad_frame, "byte={byte}");
+            assert_eq!(consumed, bad_frame * FRAME_BYTES, "byte={byte}");
+            for (i, u) in ups.iter().enumerate() {
+                assert_eq!(*u, upd(i as u64), "byte={byte}");
+            }
+        }
+    }
+
+    #[test]
+    fn handshake_roundtrip() {
+        for hs in [
+            Handshake { need_snapshot: true, generation: 0, offset: 0 },
+            Handshake { need_snapshot: false, generation: 7, offset: 24 * 1000 },
+        ] {
+            let mut buf = Vec::new();
+            write_handshake(&mut buf, hs).unwrap();
+            assert_eq!(buf.len(), 24);
+            let got = read_handshake(&mut buf.as_slice()).unwrap();
+            assert_eq!(got, hs);
+        }
+    }
+
+    #[test]
+    fn stream_msg_roundtrip() {
+        let mut buf = Vec::new();
+        write_snapshot_msg(&mut buf, 3, b"snapbytes").unwrap();
+        write_wal_msg(&mut buf, 3, 48, &stream_of(2)).unwrap();
+        write_heartbeat(&mut buf, 3, 96).unwrap();
+        let mut r = buf.as_slice();
+        match read_stream_msg(&mut r).unwrap() {
+            StreamMsg::Snapshot { generation, bytes } => {
+                assert_eq!(generation, 3);
+                assert_eq!(bytes, b"snapbytes");
+            }
+            _ => panic!("expected snapshot"),
+        }
+        match read_stream_msg(&mut r).unwrap() {
+            StreamMsg::Wal { generation, start_offset, payload } => {
+                assert_eq!((generation, start_offset), (3, 48));
+                let (ups, _, clean) = decode_frames(&payload);
+                assert!(clean);
+                assert_eq!(ups.len(), 2);
+            }
+            _ => panic!("expected wal"),
+        }
+        match read_stream_msg(&mut r).unwrap() {
+            StreamMsg::Heartbeat { generation, tip_offset } => {
+                assert_eq!((generation, tip_offset), (3, 96));
+            }
+            _ => panic!("expected heartbeat"),
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn stream_msg_rejects_garbage_tag_and_huge_lengths() {
+        assert!(read_stream_msg(&mut &b"XXXX\0\0\0\0"[..]).is_err());
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&TAG_WAL);
+        buf.extend_from_slice(&1u64.to_le_bytes());
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_stream_msg(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn ack_roundtrip() {
+        let mut buf = Vec::new();
+        write_ack(&mut buf, 9, 240).unwrap();
+        assert_eq!(read_ack(&mut buf.as_slice()).unwrap(), (9, 240));
+    }
+
+    #[test]
+    fn fault_plan_parses_full_grammar() {
+        let plan = FaultPlan::from_spec("sever@10, delay@20:50 ,dup@30,kill@40").unwrap();
+        assert_eq!(plan.at(10), Some(FaultKind::Sever));
+        assert_eq!(plan.at(20), Some(FaultKind::Delay(50)));
+        assert_eq!(plan.at(30), Some(FaultKind::Dup));
+        assert_eq!(plan.at(40), Some(FaultKind::Kill));
+        assert_eq!(plan.at(11), None);
+        assert!(FaultPlan::from_spec("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn fault_plan_rejects_malformed_specs() {
+        for bad in ["sever", "sever@x", "delay@5", "delay@5:x", "explode@3"] {
+            assert!(FaultPlan::from_spec(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn role_flip_is_single_shot() {
+        let st = ReplState::standby();
+        assert!(st.is_standby());
+        assert!(st.promote());
+        assert!(!st.is_standby());
+        assert!(!st.promote(), "second promote must lose");
+        assert_eq!(st.metrics.failovers.get(), 1);
+
+        let pr = ReplState::primary();
+        assert!(!pr.is_standby());
+        assert!(!pr.promote());
+    }
+
+    #[test]
+    fn backoff_grows_and_caps_with_jitter_bounds() {
+        let mut rng = Rng::new(42);
+        let mut prev_cap = 0u64;
+        for attempt in 0..10 {
+            let d = backoff_delay(attempt, &mut rng).as_millis() as u64;
+            let nominal = (BACKOFF_BASE_MS << attempt.min(6)).min(BACKOFF_CAP_MS);
+            assert!(d >= nominal - nominal / 4, "attempt {attempt}: {d} < {}", nominal * 3 / 4);
+            assert!(d <= nominal + nominal / 4, "attempt {attempt}: {d} > {}", nominal * 5 / 4);
+            prev_cap = prev_cap.max(d);
+        }
+        assert!(prev_cap <= BACKOFF_CAP_MS + BACKOFF_CAP_MS / 4);
+    }
+}

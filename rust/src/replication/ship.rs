@@ -1,0 +1,505 @@
+//! Primary side of WAL shipping: `--replicate-listen ADDR`.
+//!
+//! The [`Shipper`] is installed as the persistence layer's
+//! [`CommitSink`], so it observes every committed batch **under the WAL
+//! mutex** — ship order is exactly WAL order — and must never block there.
+//! It only encodes the frames and pushes them onto each connected session's
+//! *bounded* queue ([`super::SHIP_QUEUE_BYTES`]); when a slow standby lets
+//! the queue overflow, the queue is dropped wholesale and the session
+//! thread falls back to reading the committed WAL files straight off disk
+//! (frames are flushed before the sink fires, so the file prefix up to the
+//! durable watermark is always valid). Only when the GC floor has passed
+//! the session's cursor — the standby is more than a whole checkpoint
+//! behind — does it fall back further, to a full snapshot re-sync. The
+//! commit path never waits on either.
+//!
+//! Each session is two threads: the ship thread (handshake → optional
+//! `SNP1` → disk catch-up → live queue + heartbeats) and an ack reader that
+//! folds the standby's `(generation, offset)` acks into the lag gauges.
+//! The fault plan ([`super::FaultPlan`]) hooks every shipped `WAL1`
+//! boundary, keyed on a global monotone batch counter so kill tests are
+//! deterministic.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread;
+use std::time::Duration;
+
+use super::{
+    fault_kill_now, read_ack, write_heartbeat, write_snapshot_msg, write_wal_msg, FaultKind,
+    FaultPlan, ReplState, HEARTBEAT_EVERY, SHIP_QUEUE_BYTES,
+};
+use crate::durability::persist::{scan_snapshot_gens, snap_path, wal_path};
+use crate::durability::{encode_frame, CommitSink, FRAME_BYTES};
+use crate::workload::record::StockUpdate;
+
+/// Max bytes per `WAL1` message when streaming catch-up from disk.
+const CATCHUP_CHUNK: usize = 512 * 1024;
+/// Handshake must arrive this fast or the session is dropped.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+/// A standby that stops draining its socket for this long is severed (it
+/// will reconnect and resume); the commit path is unaffected either way.
+const WRITE_STALL_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Mutex guard that shrugs off poisoning: ship-side state (queues, the
+/// watermark pair) stays internally consistent even if a peer thread died
+/// mid-update, and replication must keep limping rather than take the
+/// server down.
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct ShipBatch {
+    generation: u64,
+    start_offset: u64,
+    buf: Vec<u8>,
+}
+
+#[derive(Default)]
+struct SessQ {
+    batches: VecDeque<ShipBatch>,
+    bytes: usize,
+    overflowed: bool,
+    closed: bool,
+}
+
+struct Session {
+    q: Mutex<SessQ>,
+    cv: Condvar,
+}
+
+impl Session {
+    fn new() -> Session {
+        Session { q: Mutex::new(SessQ::default()), cv: Condvar::new() }
+    }
+
+    /// Called from the commit path (under the WAL mutex): never blocks.
+    fn push(&self, b: ShipBatch) {
+        let mut q = locked(&self.q);
+        if q.closed {
+            return;
+        }
+        if q.bytes + b.buf.len() > SHIP_QUEUE_BYTES {
+            // Slow standby: drop the whole queue, flag it. The session
+            // thread re-streams from disk; nothing is lost, nothing waits.
+            q.batches.clear();
+            q.bytes = 0;
+            q.overflowed = true;
+        } else {
+            q.bytes += b.buf.len();
+            q.batches.push_back(b);
+        }
+        drop(q);
+        self.cv.notify_one();
+    }
+
+    /// Session-thread side: wait up to `timeout` for a batch. Returns the
+    /// batch (if any) and whether an overflow happened since the last pop.
+    fn pop(&self, timeout: Duration) -> (Option<ShipBatch>, bool, bool) {
+        let mut q = locked(&self.q);
+        if q.batches.is_empty() && !q.overflowed && !q.closed {
+            match self.cv.wait_timeout(q, timeout) {
+                Ok((g, _)) => q = g,
+                Err(e) => q = e.into_inner().0,
+            }
+        }
+        let overflowed = q.overflowed;
+        q.overflowed = false;
+        let closed = q.closed;
+        match q.batches.pop_front() {
+            Some(b) => {
+                q.bytes -= b.buf.len();
+                (Some(b), overflowed, closed)
+            }
+            None => (None, overflowed, closed),
+        }
+    }
+
+    fn close(&self) {
+        locked(&self.q).closed = true;
+        self.cv.notify_all();
+    }
+}
+
+struct Inner {
+    dir: PathBuf,
+    repl: Arc<ReplState>,
+    /// Durable WAL tip `(generation, bytes)`: every byte lexicographically
+    /// below this is committed and readable from the on-disk segment files.
+    /// Updated under the WAL mutex via the sink callbacks.
+    watermark: Mutex<(u64, u64)>,
+    sessions: Mutex<Vec<Arc<Session>>>,
+    stop: AtomicBool,
+    faults: FaultPlan,
+    /// Global `WAL1` counter driving the fault plan.
+    shipped_batches: AtomicU64,
+    accepted: AtomicU64,
+}
+
+/// Primary-side replication endpoint. Install with
+/// `persist.set_commit_sink(shipper.clone())` after [`Shipper::listen`].
+pub struct Shipper {
+    inner: Arc<Inner>,
+}
+
+impl Shipper {
+    /// Bind `addr` and start accepting standby sessions. `initial_tip` is
+    /// the WAL tip at install time (`persist.wal_tip()`), `dir` the durable
+    /// directory the WAL segments and snapshots live in.
+    pub fn listen(
+        addr: &str,
+        dir: PathBuf,
+        initial_tip: (u64, u64),
+        repl: Arc<ReplState>,
+        faults: FaultPlan,
+    ) -> io::Result<(Arc<Shipper>, SocketAddr)> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let inner = Arc::new(Inner {
+            dir,
+            repl,
+            watermark: Mutex::new(initial_tip),
+            sessions: Mutex::new(Vec::new()),
+            stop: AtomicBool::new(false),
+            faults,
+            shipped_batches: AtomicU64::new(0),
+            accepted: AtomicU64::new(0),
+        });
+        let accept_inner = inner.clone();
+        thread::Builder::new()
+            .name("membig-repl-ship".into())
+            .spawn(move || accept_loop(accept_inner, listener))?;
+        Ok((Arc::new(Shipper { inner }), local))
+    }
+
+    /// Seal replication: stop accepting, close every session queue. Called
+    /// on graceful shutdown after the final WAL sync.
+    pub fn seal(&self) {
+        self.inner.stop.store(true, Ordering::Release);
+        for s in locked(&self.inner.sessions).iter() {
+            s.close();
+        }
+    }
+}
+
+impl CommitSink for Shipper {
+    fn frames_committed(&self, generation: u64, start_offset: u64, ups: &[StockUpdate]) {
+        let mut buf = Vec::with_capacity(ups.len() * FRAME_BYTES);
+        for u in ups {
+            buf.extend_from_slice(&encode_frame(u));
+        }
+        let end = start_offset + buf.len() as u64;
+        *locked(&self.inner.watermark) = (generation, end);
+        let sessions = locked(&self.inner.sessions);
+        for (i, s) in sessions.iter().enumerate() {
+            if i + 1 == sessions.len() {
+                s.push(ShipBatch { generation, start_offset, buf });
+                break;
+            }
+            s.push(ShipBatch { generation, start_offset, buf: buf.clone() });
+        }
+    }
+
+    fn generation_rotated(&self, new_generation: u64) {
+        *locked(&self.inner.watermark) = (new_generation, 0);
+    }
+}
+
+fn accept_loop(inner: Arc<Inner>, listener: TcpListener) {
+    loop {
+        if inner.stop.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok((sock, _peer)) => {
+                let n = inner.accepted.fetch_add(1, Ordering::AcqRel) + 1;
+                if n > 1 {
+                    // A standby coming back counts as a link reconnect.
+                    inner.repl.metrics.reconnects.inc();
+                }
+                let si = inner.clone();
+                let spawned = thread::Builder::new()
+                    .name("membig-repl-sess".into())
+                    .spawn(move || {
+                        let _ = run_session(&si, sock);
+                    });
+                if spawned.is_err() {
+                    // Out of threads: drop the connection; standby retries.
+                    continue;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(100));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(100)),
+        }
+    }
+}
+
+enum Caught {
+    Sent,
+    AtTip,
+    NeedSnapshot,
+}
+
+fn run_session(inner: &Arc<Inner>, sock: TcpStream) -> io::Result<()> {
+    sock.set_nonblocking(false)?;
+    sock.set_nodelay(true)?;
+    sock.set_write_timeout(Some(WRITE_STALL_TIMEOUT))?;
+    sock.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let mut r = &sock;
+    let hs = super::read_handshake(&mut r)?;
+
+    // Ack reader on a dup'd handle; read timeout just bounds how often it
+    // re-checks for shutdown while the link is idle.
+    sock.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let ack_sock = sock.try_clone()?;
+    let ack_inner = inner.clone();
+    let session = Arc::new(Session::new());
+    let ack_session = session.clone();
+    let _ = thread::Builder::new().name("membig-repl-ack".into()).spawn(move || {
+        ack_loop(&ack_inner, &ack_session, ack_sock);
+    });
+
+    locked(&inner.sessions).push(session.clone());
+    let res = serve_session(inner, &session, &sock, hs);
+    locked(&inner.sessions).retain(|s| !Arc::ptr_eq(s, &session));
+    session.close();
+    res
+}
+
+fn serve_session(
+    inner: &Arc<Inner>,
+    session: &Arc<Session>,
+    sock: &TcpStream,
+    hs: super::Handshake,
+) -> io::Result<()> {
+    let mut w = sock;
+    let mut cursor: (u64, u64) = if hs.need_snapshot {
+        send_snapshot(inner, &mut w)?
+    } else {
+        (hs.generation, hs.offset)
+    };
+    loop {
+        if inner.stop.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let wm = *locked(&inner.watermark);
+        if cursor > wm {
+            // Standby claims a future position — a diverged ex-primary or a
+            // corrupted resume point. Rebase it onto our truth.
+            cursor = send_snapshot(inner, &mut w)?;
+            continue;
+        }
+        if cursor < wm {
+            match catch_up_step(inner, &mut w, &mut cursor, wm)? {
+                Caught::Sent => continue,
+                Caught::NeedSnapshot => {
+                    cursor = send_snapshot(inner, &mut w)?;
+                    continue;
+                }
+                Caught::AtTip => {}
+            }
+        }
+        // At the durable tip: wait for live commits, heartbeat when idle.
+        let (batch, overflowed, closed) = session.pop(HEARTBEAT_EVERY);
+        if closed {
+            return Ok(());
+        }
+        if overflowed {
+            // Queue was dropped; next loop iteration streams from disk.
+            continue;
+        }
+        match batch {
+            None => {
+                let wm = *locked(&inner.watermark);
+                write_heartbeat(&mut w, wm.0, wm.1)?;
+                inner.repl.metrics.heartbeats.inc();
+            }
+            Some(b) => {
+                let end = (b.generation, b.start_offset + b.buf.len() as u64);
+                if end <= cursor {
+                    // Already streamed during disk catch-up; skip the dup.
+                    continue;
+                }
+                if (b.generation, b.start_offset) != cursor {
+                    // Gap (rotation or dropped batches): let disk catch-up
+                    // re-stream the range in order.
+                    continue;
+                }
+                ship_batch(inner, &mut w, b.generation, b.start_offset, &b.buf)?;
+                cursor = end;
+            }
+        }
+    }
+}
+
+/// Stream one frame-aligned chunk of committed WAL from disk.
+fn catch_up_step(
+    inner: &Arc<Inner>,
+    w: &mut impl Write,
+    cursor: &mut (u64, u64),
+    wm: (u64, u64),
+) -> io::Result<Caught> {
+    let (cg, co) = *cursor;
+    let path = wal_path(&inner.dir, cg);
+    let flen = match std::fs::metadata(&path) {
+        Ok(m) => m.len(),
+        // Segment GC'd: the standby is behind the checkpoint floor.
+        Err(_) => return Ok(Caught::NeedSnapshot),
+    };
+    // Within the live generation only the watermark prefix is committed;
+    // older segments were fully synced at rotation.
+    let end = if cg == wm.0 { wm.1.min(flen) } else { flen };
+    if co >= end {
+        if cg < wm.0 {
+            *cursor = (cg + 1, 0);
+            return Ok(Caught::Sent);
+        }
+        return Ok(Caught::AtTip);
+    }
+    let take = ((end - co) as usize).min(CATCHUP_CHUNK);
+    let take = take - take % FRAME_BYTES;
+    if take == 0 {
+        return Ok(Caught::AtTip);
+    }
+    let mut f = File::open(&path)?;
+    f.seek(SeekFrom::Start(co))?;
+    let mut buf = vec![0u8; take];
+    f.read_exact(&mut buf)?;
+    ship_batch(inner, w, cg, co, &buf)?;
+    cursor.1 += take as u64;
+    Ok(Caught::Sent)
+}
+
+/// Send one `WAL1` batch through the fault plan and count it.
+fn ship_batch(
+    inner: &Arc<Inner>,
+    w: &mut impl Write,
+    generation: u64,
+    start_offset: u64,
+    payload: &[u8],
+) -> io::Result<()> {
+    let n = inner.shipped_batches.fetch_add(1, Ordering::AcqRel) + 1;
+    match inner.faults.at(n) {
+        Some(FaultKind::Kill) => fault_kill_now(),
+        Some(FaultKind::Sever) => {
+            return Err(io::Error::new(io::ErrorKind::ConnectionReset, "fault: sever"));
+        }
+        Some(FaultKind::Delay(ms)) => thread::sleep(Duration::from_millis(ms)),
+        Some(FaultKind::Dup) => {
+            write_wal_msg(w, generation, start_offset, payload)?;
+        }
+        None => {}
+    }
+    write_wal_msg(w, generation, start_offset, payload)?;
+    inner.repl.metrics.frames_shipped.add((payload.len() / FRAME_BYTES) as u64);
+    inner.repl.metrics.bytes_shipped.add(payload.len() as u64);
+    Ok(())
+}
+
+/// Re-sync the standby from the newest on-disk snapshot. Retries a couple
+/// of times to ride out a checkpoint GC racing the file read.
+fn send_snapshot(inner: &Arc<Inner>, w: &mut impl Write) -> io::Result<(u64, u64)> {
+    for _ in 0..3 {
+        let gens = scan_snapshot_gens(&inner.dir);
+        let Some(&g) = gens.first() else { break };
+        match std::fs::read(snap_path(&inner.dir, g)) {
+            Ok(bytes) => {
+                write_snapshot_msg(w, g, &bytes)?;
+                inner.repl.metrics.snapshot_resyncs.inc();
+                inner.repl.metrics.bytes_shipped.add(bytes.len() as u64);
+                return Ok((g, 0));
+            }
+            // Raced a checkpoint's GC; rescan for the new newest.
+            Err(_) => continue,
+        }
+    }
+    Err(io::Error::other("no snapshot available to re-sync standby"))
+}
+
+fn ack_loop(inner: &Arc<Inner>, session: &Arc<Session>, sock: TcpStream) {
+    let mut r = &sock;
+    loop {
+        if inner.stop.load(Ordering::Acquire) {
+            return;
+        }
+        match read_ack(&mut r) {
+            Ok((generation, offset)) => {
+                inner.repl.metrics.acks.inc();
+                let wm = *locked(&inner.watermark);
+                if wm.0 == generation {
+                    let lag = wm.1.saturating_sub(offset);
+                    inner.repl.metrics.lag_bytes.set(lag as i64);
+                    inner.repl.metrics.lag_frames.set((lag / FRAME_BYTES as u64) as i64);
+                }
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if locked(&session.q).closed {
+                    return;
+                }
+            }
+            Err(_) => {
+                // Standby hung up: unblock the ship thread too.
+                session.close();
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch(gen: u64, start: u64, frames: usize) -> ShipBatch {
+        ShipBatch { generation: gen, start_offset: start, buf: vec![0u8; frames * FRAME_BYTES] }
+    }
+
+    #[test]
+    fn queue_pops_in_order() {
+        let s = Session::new();
+        s.push(batch(1, 0, 2));
+        s.push(batch(1, 48, 1));
+        let (b, over, _) = s.pop(Duration::from_millis(1));
+        assert!(!over);
+        assert_eq!(b.map(|b| b.start_offset), Some(0));
+        let (b, _, _) = s.pop(Duration::from_millis(1));
+        assert_eq!(b.map(|b| b.start_offset), Some(48));
+        let (b, _, _) = s.pop(Duration::from_millis(1));
+        assert!(b.is_none());
+    }
+
+    #[test]
+    fn queue_overflow_drops_and_flags() {
+        let s = Session::new();
+        let big = SHIP_QUEUE_BYTES / FRAME_BYTES / 2 + 1;
+        s.push(batch(1, 0, big));
+        s.push(batch(1, 1_000_000, big)); // overflows: queue cleared
+        let (b, over, _) = s.pop(Duration::from_millis(1));
+        assert!(over, "overflow must be reported");
+        assert!(b.is_none(), "queue was dropped wholesale");
+        // Flag is one-shot.
+        let (_, over, _) = s.pop(Duration::from_millis(1));
+        assert!(!over);
+    }
+
+    #[test]
+    fn closed_queue_rejects_pushes_and_reports() {
+        let s = Session::new();
+        s.close();
+        s.push(batch(1, 0, 1));
+        let (b, _, closed) = s.pop(Duration::from_millis(1));
+        assert!(b.is_none());
+        assert!(closed);
+    }
+}

@@ -23,6 +23,7 @@ use super::{
 use crate::durability::Persistence;
 use crate::ipc::ServingPool;
 use crate::metrics::ServerMetrics;
+use crate::replication::ReplState;
 use crate::runtime::AnalyticsService;
 use crate::storage::engine::StorageEngine;
 
@@ -47,6 +48,7 @@ impl Server {
             let engine = self.engine.clone();
             let persist = self.persist.clone();
             let procs = self.procs.clone();
+            let repl = self.repl.clone();
             let stop = self.stop.clone();
             let metrics = self.metrics.clone();
             let cfg = self.config.clone();
@@ -63,6 +65,7 @@ impl Server {
                         engine.as_ref(),
                         persist.as_deref(),
                         procs.as_deref(),
+                        repl.as_deref(),
                         &stop,
                         &metrics,
                         &cfg,
@@ -198,6 +201,7 @@ fn handle_client(
     engine: Option<&Arc<AnalyticsService>>,
     persist: Option<&Persistence>,
     procs: Option<&ServingPool>,
+    repl: Option<&ReplState>,
     stop: &AtomicBool,
     metrics: &ServerMetrics,
     cfg: &ServerConfig,
@@ -265,6 +269,7 @@ fn handle_client(
                 engine,
                 persist,
                 procs,
+                repl,
                 stop,
                 metrics,
                 cfg,
@@ -277,7 +282,7 @@ fn handle_client(
             continue;
         }
         resp.clear();
-        execute_one_into(req, store, engine, persist, metrics, false, procs, &mut resp);
+        execute_one_into(req, store, engine, persist, metrics, false, procs, repl, &mut resp);
         // Response + newline leave in one syscall.
         out.write_all(&resp)?;
         let quit = req == "QUIT";
@@ -308,6 +313,7 @@ fn run_batch(
     engine: Option<&Arc<AnalyticsService>>,
     persist: Option<&Persistence>,
     procs: Option<&ServingPool>,
+    repl: Option<&ReplState>,
     stop: &AtomicBool,
     metrics: &ServerMetrics,
     cfg: &ServerConfig,
@@ -360,6 +366,7 @@ fn run_batch(
         persist,
         metrics,
         procs,
+        repl,
         &mut scratch.resp,
     ) {
         Ok(quit) => quit,

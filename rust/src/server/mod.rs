@@ -84,6 +84,22 @@ mod sys;
 #[cfg(target_os = "linux")]
 pub use reactor::raise_nofile_limit;
 
+#[cfg(target_os = "linux")]
+pub use sys::{install_shutdown_handler, shutdown_requested};
+
+/// Non-Linux stub: no raw signal handling, `serve` only stops by kill (the
+/// pre-PR-9 behavior on every platform).
+#[cfg(not(target_os = "linux"))]
+pub fn install_shutdown_handler() -> std::io::Result<()> {
+    Ok(())
+}
+
+/// Non-Linux stub paired with [`install_shutdown_handler`].
+#[cfg(not(target_os = "linux"))]
+pub fn shutdown_requested() -> bool {
+    false
+}
+
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -93,6 +109,7 @@ use std::time::{Duration, Instant};
 use crate::durability::Persistence;
 use crate::ipc::ServingPool;
 use crate::metrics::ServerMetrics;
+use crate::replication::ReplState;
 use crate::runtime::AnalyticsService;
 use crate::storage::engine::StorageEngine;
 use crate::util::fmt::push_u64;
@@ -147,6 +164,11 @@ pub struct Server {
     /// Multi-process backend (`serve --processes N`): when set, the data
     /// verbs route to shard-owning worker processes instead of `store`.
     procs: Option<Arc<ServingPool>>,
+    /// Replication role + metrics (`--replicate-listen` / `--standby-of`).
+    /// While the role is standby, every mutation answers
+    /// `ERR readonly standby`; `None` leaves the wire byte-identical to a
+    /// replication-free build.
+    repl: Option<Arc<ReplState>>,
     stop: Arc<AtomicBool>,
     pub metrics: Arc<ServerMetrics>,
     config: ServerConfig,
@@ -199,10 +221,17 @@ impl Server {
             engine,
             persist,
             procs: None,
+            repl: None,
             stop: Arc::new(AtomicBool::new(false)),
             metrics: Arc::new(ServerMetrics::new()),
             config,
         }
+    }
+
+    /// Attach replication state: the role gate for mutations plus the
+    /// `repl_*` metrics surfaced by `STATS SERVER`.
+    pub fn set_replication(&mut self, repl: Arc<ReplState>) {
+        self.repl = Some(repl);
     }
 
     /// Multi-process serving (`serve --processes N`): the data set lives in
@@ -243,6 +272,7 @@ impl Server {
             self.engine,
             self.persist,
             self.procs,
+            self.repl,
             metrics.clone(),
             stop.clone(),
             self.config,
@@ -394,6 +424,7 @@ pub(crate) fn execute_one_into(
     metrics: &ServerMetrics,
     in_batch: bool,
     procs: Option<&ServingPool>,
+    repl: Option<&ReplState>,
     out: &mut Vec<u8>,
 ) {
     metrics.requests.inc();
@@ -402,7 +433,7 @@ pub(crate) fn execute_one_into(
     // `other` so batch_latency keeps whole-group samples only.
     let verb = if in_batch && verb == "BATCH" { "" } else { verb };
     let t0 = Instant::now();
-    let ctx = RequestCtx { store, engine, metrics: Some(metrics), persist, procs };
+    let ctx = RequestCtx { store, engine, metrics: Some(metrics), persist, procs, repl };
     dispatch_into(req, &ctx, in_batch, out);
     metrics.latency_for(verb).record_duration(t0.elapsed());
 }
@@ -424,6 +455,7 @@ pub(crate) fn exec_batch_group(
     persist: Option<&Persistence>,
     metrics: &ServerMetrics,
     procs: Option<&ServingPool>,
+    repl: Option<&ReplState>,
     resp: &mut Vec<u8>,
 ) -> Result<bool, ()> {
     metrics.batch_sizes.record(bounds.len() as u64);
@@ -446,7 +478,7 @@ pub(crate) fn exec_batch_group(
             match std::str::from_utf8(raw) {
                 Ok(s) => {
                     let req = s.trim();
-                    execute_one_into(req, store, engine, persist, metrics, true, None, resp);
+                    execute_one_into(req, store, engine, persist, metrics, true, None, repl, resp);
                     quit = quit || req == "QUIT";
                 }
                 Err(_) => reply_invalid_utf8(metrics, resp),
@@ -479,6 +511,10 @@ pub struct RequestCtx<'a> {
     /// When set, the data verbs route to the multi-process worker pool
     /// (`serve --processes N`) and `store` is never read.
     pub procs: Option<&'a ServingPool>,
+    /// When set, mutations are gated on the replication role (`ERR
+    /// readonly standby` while the role is standby) and `STATS SERVER`
+    /// carries the `repl_*` counters.
+    pub repl: Option<&'a ReplState>,
 }
 
 /// [`dispatch_into`] rendered to a `String` — the single test-only
@@ -502,12 +538,21 @@ pub(crate) fn dispatch_str(line: &str, ctx: &RequestCtx<'_>, in_batch: bool) -> 
 /// commit `exec_batch_group` issues before the group's responses are
 /// released.
 pub fn dispatch_into(line: &str, ctx: &RequestCtx<'_>, in_batch: bool, out: &mut Vec<u8>) {
-    let RequestCtx { store, engine, metrics, persist, procs } = *ctx;
+    let RequestCtx { store, engine, metrics, persist, procs, repl } = *ctx;
     let line = line.trim();
     let (verb, rest) = match line.split_once(|c: char| c.is_ascii_whitespace()) {
         Some((v, r)) => (v, r.trim()),
         None => (line, ""),
     };
+    // One readonly gate for every front end (reactor, fallback, pool,
+    // BATCH payload lines all dispatch through here): while this process
+    // is a standby, mutations are refused before they touch the store or
+    // the WAL. Promotion flips the role atomic and the very same verbs
+    // start succeeding — no reconnect, no server restart.
+    if matches!(verb, "UPDATE" | "MUPDATE") && repl.is_some_and(|r| r.is_standby()) {
+        out.extend_from_slice(b"ERR readonly standby\n");
+        return;
+    }
     // Multi-process backend: the data verbs become worker RPCs; everything
     // else (PING/QUIT/BATCH framing errors/unknowns) falls through to the
     // shared arms below, which never read the placeholder store.
@@ -631,6 +676,9 @@ pub fn dispatch_into(line: &str, ctx: &RequestCtx<'_>, in_batch: bool, out: &mut
                         if let Some(p) = persist {
                             s.push_str(&p.stats_suffix());
                         }
+                        if let Some(r) = repl {
+                            s.push_str(&r.metrics.stats_suffix());
+                        }
                         out.extend_from_slice(s.as_bytes());
                     }
                     None => out.extend_from_slice(b"ERR server metrics unavailable"),
@@ -644,6 +692,9 @@ pub fn dispatch_into(line: &str, ctx: &RequestCtx<'_>, in_batch: bool, out: &mut
                     Some(m) => {
                         if let Some(p) = persist {
                             p.metrics().reset_epoch_counters();
+                        }
+                        if let Some(r) = repl {
+                            r.metrics.reset_epoch_counters();
                         }
                         store.reset_stats_epoch();
                         out.extend_from_slice(format!("OK epoch={}", m.reset_epoch()).as_bytes());
@@ -793,14 +844,27 @@ mod tests {
 
     /// Bare dispatch: no metrics, no persistence, no procs.
     fn d(line: &str, s: &Arc<dyn StorageEngine>) -> String {
-        let ctx = RequestCtx { store: s, engine: None, metrics: None, persist: None, procs: None };
+        let ctx = RequestCtx {
+            store: s,
+            engine: None,
+            metrics: None,
+            persist: None,
+            procs: None,
+            repl: None,
+        };
         dispatch_str(line, &ctx, false)
     }
 
     /// Dispatch with server metrics attached.
     fn dm(line: &str, s: &Arc<dyn StorageEngine>, m: &ServerMetrics) -> String {
-        let ctx =
-            RequestCtx { store: s, engine: None, metrics: Some(m), persist: None, procs: None };
+        let ctx = RequestCtx {
+            store: s,
+            engine: None,
+            metrics: Some(m),
+            persist: None,
+            procs: None,
+            repl: None,
+        };
         dispatch_str(line, &ctx, false)
     }
 
@@ -837,7 +901,14 @@ mod tests {
         let (s, spec) = store(10);
         let key = spec.record_at(1).isbn13;
         let rec = spec.record_at(1);
-        let ctx = RequestCtx { store: &s, engine: None, metrics: None, persist: None, procs: None };
+        let ctx = RequestCtx {
+            store: &s,
+            engine: None,
+            metrics: None,
+            persist: None,
+            procs: None,
+            repl: None,
+        };
         let mut out = Vec::new();
         dispatch_into("PING", &ctx, false, &mut out);
         dispatch_into(&format!("GET {key}"), &ctx, false, &mut out);
@@ -926,6 +997,7 @@ mod tests {
             metrics: Some(&m),
             persist: None,
             procs: None,
+            repl: None,
         };
         m.latency_for("GET").record(123);
         m.requests.add(4);
@@ -957,7 +1029,8 @@ mod tests {
         }
         let mut resp = Vec::new();
         let quit =
-            exec_batch_group(&payload, &bounds, &s, None, None, &m, None, &mut resp).unwrap();
+            exec_batch_group(&payload, &bounds, &s, None, None, &m, None, None, &mut resp)
+                .unwrap();
         assert!(quit);
         let text = String::from_utf8(resp).unwrap();
         let rec = spec.record_at(2);
@@ -978,7 +1051,8 @@ mod tests {
         bounds.push(payload.len());
         let mut resp = Vec::new();
         let quit =
-            exec_batch_group(&payload, &bounds, &s, None, None, &m, None, &mut resp).unwrap();
+            exec_batch_group(&payload, &bounds, &s, None, None, &m, None, None, &mut resp)
+                .unwrap();
         assert!(!quit);
         let text = String::from_utf8(resp).unwrap();
         assert!(text.starts_with("PONG\nERR"), "{text}");
@@ -1011,6 +1085,7 @@ mod tests {
             metrics: None,
             persist: Some(&persist),
             procs: None,
+            repl: None,
         };
         assert_eq!(dispatch_str("UPDATE 1 999 9", &ctx, false), "OK");
         assert_eq!(dispatch_str("UPDATE 777 1 1", &ctx, false), "MISS");
@@ -1038,6 +1113,54 @@ mod tests {
         assert_eq!(s2.get(4).unwrap().price_cents, 444);
         drop(persist2);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn standby_role_gates_mutations_until_promotion() {
+        let (s, spec) = store(10);
+        let key = spec.record_at(1).isbn13;
+        let repl = crate::replication::ReplState::standby();
+        let m = ServerMetrics::new();
+        let ctx = RequestCtx {
+            store: &s,
+            engine: None,
+            metrics: Some(&m),
+            persist: None,
+            procs: None,
+            repl: Some(&*repl),
+        };
+        // Reads flow; every mutation verb is refused with the exact line.
+        assert!(dispatch_str(&format!("GET {key}"), &ctx, false).starts_with("OK"));
+        assert_eq!(dispatch_str(&format!("UPDATE {key} 9 9"), &ctx, false),
+            "ERR readonly standby");
+        assert_eq!(dispatch_str(&format!("MUPDATE {key} 9 9"), &ctx, false),
+            "ERR readonly standby");
+        // BATCH payload lines hit the same gate.
+        let mut payload = Vec::new();
+        let mut bounds = Vec::new();
+        for line in [format!("UPDATE {key} 9 9"), format!("GET {key}")] {
+            payload.extend_from_slice(line.as_bytes());
+            bounds.push(payload.len());
+        }
+        let mut resp = Vec::new();
+        exec_batch_group(&payload, &bounds, &s, None, None, &m, None, Some(&*repl), &mut resp)
+            .unwrap();
+        let text = String::from_utf8(resp).unwrap();
+        assert!(text.starts_with("ERR readonly standby\nOK"), "{text}");
+        // STATS SERVER renders the replication bundle.
+        let line = dispatch_str("STATS SERVER", &ctx, false);
+        assert!(line.contains("repl_role=2"), "{line}");
+        // Promotion flips the same dispatcher read-write.
+        assert!(repl.promote());
+        assert_eq!(dispatch_str(&format!("UPDATE {key} 9 9"), &ctx, false), "OK");
+        let line = dispatch_str("STATS SERVER", &ctx, false);
+        assert!(line.contains("repl_role=1"), "{line}");
+        assert!(line.contains("repl_failovers=1"), "{line}");
+        // STATS RESET clears replication counters, keeps the role gauge.
+        assert_eq!(dispatch_str("STATS RESET", &ctx, false), "OK epoch=1");
+        let line = dispatch_str("STATS SERVER", &ctx, false);
+        assert!(line.contains("repl_failovers=0"), "{line}");
+        assert!(line.contains("repl_role=1"), "{line}");
     }
 
     #[test]

@@ -298,7 +298,17 @@ pub(crate) fn exec_batch_lines_grouped(
                     Some(op) => run.push(op),
                     None => {
                         flush_run(&mut run, pool, metrics, resp);
-                        execute_one_into(req, store, engine, None, metrics, true, Some(pool), resp);
+                        execute_one_into(
+                            req,
+                            store,
+                            engine,
+                            None,
+                            metrics,
+                            true,
+                            Some(pool),
+                            None,
+                            resp,
+                        );
                         quit = quit || req == "QUIT";
                     }
                 }

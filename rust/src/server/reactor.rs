@@ -88,6 +88,8 @@ pub(crate) struct Shared {
     /// is then a worker RPC — a blocking hop, so those lines run on the
     /// `WorkerPool`, never on a reactor thread.
     pub procs: Option<Arc<ServingPool>>,
+    /// Replication role gate + metrics (`--replicate-listen`/`--standby-of`).
+    pub repl: Option<Arc<crate::replication::ReplState>>,
     pub metrics: Arc<ServerMetrics>,
     pub stop: Arc<AtomicBool>,
     pub cfg: ServerConfig,
@@ -422,6 +424,7 @@ fn process_conn(
                 shared.persist.as_deref(),
                 &shared.metrics,
                 shared.procs.as_deref(),
+                shared.repl.as_deref(),
                 &mut conn.scratch.resp,
             );
             match outcome {
@@ -526,6 +529,7 @@ fn process_conn(
             &shared.metrics,
             false,
             shared.procs.as_deref(),
+            shared.repl.as_deref(),
             &mut conn.out,
         );
         executed = true;
@@ -934,11 +938,12 @@ impl Frontend {
         engine: Option<Arc<AnalyticsService>>,
         persist: Option<Arc<Persistence>>,
         procs: Option<Arc<ServingPool>>,
+        repl: Option<Arc<crate::replication::ReplState>>,
         metrics: Arc<ServerMetrics>,
         stop: Arc<AtomicBool>,
         cfg: ServerConfig,
     ) -> std::io::Result<Frontend> {
-        let shared = Arc::new(Shared { store, engine, persist, procs, metrics, stop, cfg });
+        let shared = Arc::new(Shared { store, engine, persist, procs, repl, metrics, stop, cfg });
         let n = shared.cfg.reactors.max(1);
         let mut injectors = Vec::with_capacity(n);
         for _ in 0..n {
@@ -996,6 +1001,7 @@ fn run_blocking_job(shared: &Shared, injectors: &[Arc<Injector>], job: BlockingJ
                 &shared.metrics,
                 false,
                 shared.procs.as_deref(),
+                shared.repl.as_deref(),
                 &mut resp,
             );
             (req == "QUIT", false)
@@ -1009,6 +1015,7 @@ fn run_blocking_job(shared: &Shared, injectors: &[Arc<Injector>], job: BlockingJ
                 shared.persist.as_deref(),
                 &shared.metrics,
                 shared.procs.as_deref(),
+                shared.repl.as_deref(),
                 &mut resp,
             ) {
                 Ok(quit) => (quit, false),

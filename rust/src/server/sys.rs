@@ -1,9 +1,9 @@
 //! Hand-written Linux syscall bindings for the event-driven serving core:
-//! `epoll` (readiness), `eventfd` (cross-thread wakeup) and `setrlimit`
-//! (fd-heavy tests/benches raise their own `RLIMIT_NOFILE`). Zero external
-//! crates — the same std-only discipline as the rest of the tree; these
-//! symbols live in the libc that std already links, so declaring them adds
-//! no dependency.
+//! `epoll` (readiness), `eventfd` (cross-thread wakeup), `setrlimit`
+//! (fd-heavy tests/benches raise their own `RLIMIT_NOFILE`) and `sigaction`
+//! (SIGTERM/SIGINT graceful shutdown for `serve`). Zero external crates —
+//! the same std-only discipline as the rest of the tree; these symbols live
+//! in the libc that std already links, so declaring them adds no dependency.
 //!
 //! Safety model: every raw fd is owned by exactly one wrapper (`Epoll`,
 //! `EventFd`) that closes it on drop; `epoll_wait` writes only into the
@@ -20,6 +20,7 @@
 
 use std::io;
 use std::os::raw::{c_int, c_uint, c_void};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
 
 // -- constants (uapi/linux/eventpoll.h, asm-generic/fcntl.h, resource.h) ----
@@ -269,6 +270,71 @@ pub fn raise_nofile_limit(want: u64) -> u64 {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Graceful shutdown signals (SIGTERM / SIGINT)
+// ---------------------------------------------------------------------------
+
+const SIGINT: c_int = 2;
+const SIGTERM: c_int = 15;
+/// Restart interruptible syscalls after the handler runs — the serve loop
+/// polls [`shutdown_requested`] on a timer, so nothing needs EINTR to
+/// surface, and std I/O elsewhere keeps working unperturbed.
+const SA_RESTART: c_int = 0x1000_0000;
+
+/// libc `struct sigaction` as laid out by glibc and musl on the 64-bit
+/// Linux targets this module compiles for (x86_64, aarch64): the handler
+/// union first, then the full 1024-bit signal mask, then flags (padded to
+/// pointer alignment), then the restorer slot. We always call through the
+/// libc wrapper, which fills in the real restorer before trapping into the
+/// kernel, so leaving `sa_restorer` null here is correct.
+#[repr(C)]
+struct SigAction {
+    sa_handler: usize,
+    sa_mask: [u64; 16],
+    sa_flags: c_int,
+    sa_restorer: usize,
+}
+
+extern "C" {
+    fn sigaction(signum: c_int, act: *const SigAction, oldact: *mut SigAction) -> c_int;
+}
+
+/// Process-wide latch flipped by the signal handler. Never reset: shutdown
+/// is one-way.
+static SHUTDOWN_REQUESTED: AtomicBool = AtomicBool::new(false);
+
+/// The handler body is the *only* thing allowed in async-signal context: a
+/// single atomic store (async-signal-safe per POSIX; no allocation, no
+/// locks, no stdio).
+extern "C" fn on_shutdown_signal(_sig: c_int) {
+    SHUTDOWN_REQUESTED.store(true, Ordering::Release);
+}
+
+/// Install the SIGTERM/SIGINT handler that arms [`shutdown_requested`].
+/// Call once at serve startup, before accepting connections; the serve loop
+/// then polls the flag and runs the orderly teardown (fsync WAL, seal
+/// replication, exit 0) itself — the handler does none of that work.
+pub fn install_shutdown_handler() -> io::Result<()> {
+    let act = SigAction {
+        sa_handler: on_shutdown_signal as usize,
+        sa_mask: [0; 16],
+        sa_flags: SA_RESTART,
+        sa_restorer: 0,
+    };
+    for sig in [SIGINT, SIGTERM] {
+        // SAFETY: `act` is a live, correctly laid-out `SigAction` for the
+        // duration of the call and libc only reads it; the handler it
+        // installs performs one atomic store, which is async-signal-safe.
+        cvt(unsafe { sigaction(sig, &act, std::ptr::null_mut()) })?;
+    }
+    Ok(())
+}
+
+/// True once SIGTERM or SIGINT has been delivered. Monotonic.
+pub fn shutdown_requested() -> bool {
+    SHUTDOWN_REQUESTED.load(Ordering::Acquire)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -334,6 +400,20 @@ mod tests {
         let mut server = server;
         assert_eq!(server.read(&mut buf).unwrap(), 4, "payload still readable");
         ep.delete(server.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn shutdown_flag_arms_on_sigterm() {
+        extern "C" {
+            fn raise(sig: c_int) -> c_int;
+        }
+        install_shutdown_handler().unwrap();
+        // SAFETY: `raise` delivers the signal synchronously to this thread;
+        // the handler installed above performs a single atomic store, so by
+        // the time `raise` returns the flag is observable.
+        let rc = unsafe { raise(SIGTERM) };
+        assert_eq!(rc, 0);
+        assert!(shutdown_requested(), "SIGTERM must arm the shutdown latch");
     }
 
     #[test]

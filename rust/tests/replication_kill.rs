@@ -1,0 +1,394 @@
+//! Hot-standby replication integration: run two real `membig serve`
+//! binaries — a primary with `--replicate-listen` and a standby with
+//! `--standby-of` — acknowledge writes through every mutation verb,
+//! `SIGKILL` the primary under load, and assert the standby promotes
+//! itself within the failover deadline and serves back **every
+//! acknowledged write**. A second case drives the deterministic
+//! fault-injection harness (`MEMBIG_REPL_FAULTS`) through sever/dup/delay
+//! at exact batch boundaries, and a third asserts SIGTERM drains
+//! gracefully with exit code 0.
+//!
+//! This is the ISSUE-9 acceptance test and runs as its own explicit CI
+//! step so replication regressions fail loudly.
+
+use std::io::BufRead;
+use std::net::SocketAddr;
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use membig::server::Client;
+use membig::workload::gen::DatasetSpec;
+
+const RECORDS: u64 = 2_000;
+const SEED: u64 = 7;
+
+/// A running `membig serve` child. Dropping it SIGKILLs the process, so a
+/// failing assertion can never leak a server.
+struct ServerProc {
+    child: Child,
+    addr: SocketAddr,
+    /// The primary's `replicating on <addr>` announcement, when present.
+    repl_addr: Option<SocketAddr>,
+}
+
+impl Drop for ServerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill(); // SIGKILL on unix
+        let _ = self.child.wait();
+    }
+}
+
+impl ServerProc {
+    fn spawn(tmp: &Path, extra: &[&str], env: &[(&str, &str)]) -> ServerProc {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_membig"));
+        cmd.arg("serve")
+            .arg("--records")
+            .arg(RECORDS.to_string())
+            .arg("--seed")
+            .arg(SEED.to_string())
+            .arg("--bind")
+            .arg("127.0.0.1:0")
+            .arg("--backend")
+            .arg("off")
+            .arg("--workers")
+            .arg("2")
+            // No background checkpoint during the test: the stream (and any
+            // re-sync) must come from the gen-0 snapshot + the live WAL.
+            .arg("--snapshot-every")
+            .arg("3600")
+            // Kernel-flush durability: SIGKILL-safe and fast enough for CI.
+            .arg("--fsync")
+            .arg("false");
+        for a in extra {
+            cmd.arg(a);
+        }
+        for (k, v) in env {
+            cmd.env(k, v);
+        }
+        let mut child = cmd
+            .current_dir(tmp)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn membig serve (CARGO_BIN_EXE_membig)");
+
+        let stdout = child.stdout.take().expect("child stdout piped");
+        let mut lines = std::io::BufReader::new(stdout).lines();
+        let deadline = Instant::now() + Duration::from_secs(120);
+        let mut repl_addr = None;
+        let addr = loop {
+            assert!(
+                Instant::now() < deadline,
+                "server did not print its listen address in time"
+            );
+            match lines.next() {
+                Some(Ok(line)) => {
+                    if let Some(rest) = line.strip_prefix("replicating on ") {
+                        let tok = rest.split_whitespace().next().unwrap_or("");
+                        repl_addr =
+                            Some(tok.parse::<SocketAddr>().expect("parse replication address"));
+                    }
+                    if let Some(rest) = line.strip_prefix("listening on ") {
+                        let tok = rest.split_whitespace().next().unwrap_or("");
+                        break tok.parse::<SocketAddr>().expect("parse listen address");
+                    }
+                }
+                Some(Err(e)) => panic!("reading server stdout: {e}"),
+                None => panic!("server exited before printing its listen address"),
+            }
+        };
+        // Keep draining stdout so the child can never block on a full pipe.
+        std::thread::spawn(move || for _ in lines {});
+        ServerProc { child, addr, repl_addr }
+    }
+
+    /// Graceful shutdown request (the SIGKILL path is just `drop`).
+    fn sigterm(&self) {
+        let ok = Command::new("kill")
+            .arg("-TERM")
+            .arg(self.child.id().to_string())
+            .status()
+            .map(|s| s.success())
+            .unwrap_or(false);
+        assert!(ok, "kill -TERM failed");
+    }
+
+    /// Poll for exit (std has no wait-with-timeout); None = still running.
+    fn wait_code(&mut self, timeout: Duration) -> Option<i32> {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            if let Ok(Some(status)) = self.child.try_wait() {
+                return status.code();
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        None
+    }
+}
+
+/// Expected (price, qty) for key index `i` after the write phase — the
+/// three ranges cover the three mutation verbs (UPDATE, MUPDATE, BATCH).
+fn expected(i: u64) -> (u64, u32) {
+    match i {
+        0..=99 => (10_000 + i, i as u32),
+        100..=199 => (20_000 + i, i as u32),
+        _ => (30_000 + i, i as u32),
+    }
+}
+
+/// Acknowledge 300 writes on `c` across all three mutation verbs.
+fn load_acked_writes(c: &mut Client, spec: &DatasetSpec) {
+    for i in 0..100u64 {
+        let k = spec.record_at(i).isbn13;
+        let (p, q) = expected(i);
+        assert_eq!(c.request(&format!("UPDATE {k} {p} {q}")).unwrap(), "OK");
+    }
+    let groups: Vec<String> = (100..200u64)
+        .map(|i| {
+            let (p, q) = expected(i);
+            format!("{} {p} {q}", spec.record_at(i).isbn13)
+        })
+        .collect();
+    assert_eq!(
+        c.request(&format!("MUPDATE {}", groups.join(";"))).unwrap(),
+        "OK applied=100 missed=0"
+    );
+    let lines: Vec<String> = (200..300u64)
+        .map(|i| {
+            let (p, q) = expected(i);
+            format!("UPDATE {} {p} {q}", spec.record_at(i).isbn13)
+        })
+        .collect();
+    let responses = c.batch(&lines).unwrap();
+    assert_eq!(responses.len(), 100);
+    assert!(responses.iter().all(|r| r == "OK"), "{responses:?}");
+}
+
+/// Parse `key=<n>` out of a `STATS SERVER` blob.
+fn stat_u64(stats: &str, key: &str) -> Option<u64> {
+    let needle = format!("{key}=");
+    stats.split_whitespace().find_map(|tok| {
+        tok.strip_prefix(&needle).and_then(|v| v.parse::<u64>().ok())
+    })
+}
+
+/// Block until the standby's store has bootstrapped to the full record
+/// count (the snapshot transfer + WAL catch-up run in the background).
+fn wait_bootstrapped(addr: SocketAddr, timeout: Duration) -> Client {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if let Ok(mut c) = Client::connect(addr) {
+            if let Ok(stats) = c.request("STATS") {
+                if stats.starts_with(&format!("OK count={RECORDS} ")) {
+                    return c;
+                }
+            }
+        }
+        assert!(Instant::now() < deadline, "standby never finished bootstrapping");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+/// Block until a GET of key index `i` on `c` answers with its expected
+/// post-write value — i.e. the shipped stream has been applied that far.
+fn wait_applied(c: &mut Client, spec: &DatasetSpec, i: u64, timeout: Duration) {
+    let k = spec.record_at(i).isbn13;
+    let (p, q) = expected(i);
+    let want = format!("OK {p} {q}");
+    let deadline = Instant::now() + timeout;
+    loop {
+        if c.request(&format!("GET {k}")).unwrap() == want {
+            return;
+        }
+        assert!(Instant::now() < deadline, "standby never applied write index {i}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn fresh_tmp(name: &str) -> std::path::PathBuf {
+    let tmp = std::env::temp_dir().join(format!("membig_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&tmp).ok();
+    std::fs::create_dir_all(&tmp).unwrap();
+    tmp
+}
+
+fn spawn_pair(tmp: &Path, failover_ms: u64, primary_env: &[(&str, &str)]) -> (ServerProc, ServerProc) {
+    let primary = ServerProc::spawn(
+        tmp,
+        &[
+            "--data-dir",
+            "work_p",
+            "--durable-dir",
+            "durable_p",
+            "--replicate-listen",
+            "127.0.0.1:0",
+        ],
+        primary_env,
+    );
+    let repl_addr = primary.repl_addr.expect("primary must announce `replicating on`");
+    let failover = failover_ms.to_string();
+    let standby = ServerProc::spawn(
+        tmp,
+        &[
+            "--data-dir",
+            "work_s",
+            "--durable-dir",
+            "durable_s",
+            "--standby-of",
+            &repl_addr.to_string(),
+            "--failover-after",
+            &failover,
+        ],
+        &[],
+    );
+    (primary, standby)
+}
+
+#[test]
+fn sigkill_primary_standby_promotes_and_serves_every_acked_write() {
+    let tmp = fresh_tmp("replication_kill");
+    let spec = DatasetSpec { records: RECORDS, seed: SEED, ..Default::default() };
+    let (primary, standby) = spawn_pair(&tmp, 2_000, &[]);
+
+    // Phase 1: the standby bootstraps (snapshot + WAL) and serves reads,
+    // but refuses every mutation path while the primary is alive.
+    let mut sc = wait_bootstrapped(standby.addr, Duration::from_secs(60));
+    let k0 = spec.record_at(0).isbn13;
+    assert_eq!(
+        sc.request(&format!("UPDATE {k0} 1 1")).unwrap(),
+        "ERR readonly standby"
+    );
+    assert_eq!(
+        sc.request(&format!("MUPDATE {k0} 1 1")).unwrap(),
+        "ERR readonly standby"
+    );
+    let stats = sc.request("STATS SERVER").unwrap();
+    assert_eq!(stat_u64(&stats, "repl_role"), Some(2), "role gauge says standby: {stats}");
+
+    // Phase 2: 300 acknowledged writes on the primary, all three verbs.
+    let mut pc = Client::connect(primary.addr).expect("connect primary");
+    load_acked_writes(&mut pc, &spec);
+
+    // Phase 3: wait until the stream has applied through the final batch —
+    // ship order is WAL order, so index 299 applied ⇒ all 300 applied.
+    wait_applied(&mut sc, &spec, 299, Duration::from_secs(60));
+
+    // Phase 4: SIGKILL the primary — no shutdown hook, the link just dies.
+    drop(pc);
+    drop(primary);
+
+    // Phase 5: the standby must promote itself within the failover
+    // deadline (2 s without a heartbeat) plus scheduling slack.
+    let k = spec.record_at(42).isbn13;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let resp = sc.request(&format!("UPDATE {k} 123456 7")).unwrap();
+        if resp == "OK" {
+            break;
+        }
+        assert_eq!(resp, "ERR readonly standby", "unexpected refusal: {resp}");
+        assert!(Instant::now() < deadline, "standby never promoted after primary SIGKILL");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert_eq!(sc.request(&format!("GET {k}")).unwrap(), "OK 123456 7");
+
+    // Phase 6: every acknowledged write is served by the promoted standby.
+    for i in 0..300u64 {
+        if i == 42 {
+            continue; // overwritten by the promotion probe above
+        }
+        let k = spec.record_at(i).isbn13;
+        let (p, q) = expected(i);
+        assert_eq!(
+            sc.request(&format!("GET {k}")).unwrap(),
+            format!("OK {p} {q}"),
+            "acked write lost across failover for key index {i}"
+        );
+    }
+    // Untouched records came over in the snapshot unchanged.
+    let pristine = spec.record_at(1_500);
+    assert_eq!(
+        sc.request(&format!("GET {}", pristine.isbn13)).unwrap(),
+        format!("OK {} {}", pristine.price_cents, pristine.quantity)
+    );
+    let stats = sc.request("STATS SERVER").unwrap();
+    assert_eq!(stat_u64(&stats, "repl_role"), Some(1), "role gauge flips to primary: {stats}");
+    assert_eq!(stat_u64(&stats, "repl_failovers"), Some(1), "{stats}");
+
+    let _ = sc.request("QUIT");
+    drop(sc);
+    drop(standby);
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn fault_injected_sever_delay_dup_stream_still_converges() {
+    let tmp = fresh_tmp("replication_faults");
+    let spec = DatasetSpec { records: RECORDS, seed: SEED, ..Default::default() };
+    // Deterministic faults at exact shipped-batch boundaries on the
+    // primary: sever the link after batch 3 (forces reconnect + resume
+    // from the acked offset), delay batch 9 by 100 ms (standby keeps
+    // beating via later traffic), duplicate batch 12 (standby must
+    // dup-skip, not double-apply).
+    let (primary, standby) =
+        spawn_pair(&tmp, 10_000, &[("MEMBIG_REPL_FAULTS", "sever@3,delay@9:100,dup@12")]);
+    let mut sc = wait_bootstrapped(standby.addr, Duration::from_secs(60));
+
+    let mut pc = Client::connect(primary.addr).expect("connect primary");
+    load_acked_writes(&mut pc, &spec);
+    wait_applied(&mut sc, &spec, 299, Duration::from_secs(120));
+
+    // Every write converged exactly once despite the injected faults.
+    for i in 0..300u64 {
+        let k = spec.record_at(i).isbn13;
+        let (p, q) = expected(i);
+        assert_eq!(
+            sc.request(&format!("GET {k}")).unwrap(),
+            format!("OK {p} {q}"),
+            "write index {i} diverged under fault injection"
+        );
+    }
+    // The sever really happened: the standby had to reconnect.
+    let stats = sc.request("STATS SERVER").unwrap();
+    let reconnects = stat_u64(&stats, "repl_reconnects").unwrap_or(0);
+    assert!(reconnects >= 1, "expected ≥1 reconnect after sever@3: {stats}");
+
+    let _ = pc.request("QUIT");
+    let _ = sc.request("QUIT");
+    drop((pc, sc, primary, standby));
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn sigterm_drains_fsyncs_and_exits_zero() {
+    let tmp = fresh_tmp("replication_sigterm");
+    let spec = DatasetSpec { records: RECORDS, seed: SEED, ..Default::default() };
+    let mut server =
+        ServerProc::spawn(&tmp, &["--data-dir", "work", "--durable-dir", "durable"], &[]);
+    let mut c = Client::connect(server.addr).expect("connect");
+    for i in 0..50u64 {
+        let k = spec.record_at(i).isbn13;
+        let (p, q) = expected(i);
+        assert_eq!(c.request(&format!("UPDATE {k} {p} {q}")).unwrap(), "OK");
+    }
+    drop(c);
+
+    server.sigterm();
+    let code = server.wait_code(Duration::from_secs(30));
+    assert_eq!(code, Some(0), "SIGTERM must drain and exit 0");
+
+    // The graceful path sealed the WAL: a restart over the same directory
+    // serves every acknowledged write back.
+    let server = ServerProc::spawn(&tmp, &["--data-dir", "work", "--durable-dir", "durable"], &[]);
+    let mut c = Client::connect(server.addr).expect("reconnect");
+    for i in 0..50u64 {
+        let k = spec.record_at(i).isbn13;
+        let (p, q) = expected(i);
+        assert_eq!(c.request(&format!("GET {k}")).unwrap(), format!("OK {p} {q}"));
+    }
+    let _ = c.request("QUIT");
+    drop(c);
+    drop(server);
+    std::fs::remove_dir_all(&tmp).ok();
+}

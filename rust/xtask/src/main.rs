@@ -13,8 +13,9 @@
 //!   `server/sys.rs`.
 //! - **hot-path-panic** — no `.unwrap()` / `.expect(` / `panic!` /
 //!   `unreachable!` / `todo!` / `unimplemented!` in the server hot-path
-//!   modules (`server/mod.rs`, `server/reactor.rs`, `ipc/proto.rs`)
-//!   outside `#[cfg(test)]` regions.
+//!   modules (`server/mod.rs`, `server/reactor.rs`, `ipc/proto.rs`, the
+//!   larger-than-RAM tier, and the `replication/` tree) outside
+//!   `#[cfg(test)]` regions.
 //!
 //! Escape hatch: a `// lint:allow(<rule>): <why>` comment on the same line
 //! or in the comment block directly above the flagged line suppresses that
@@ -28,9 +29,20 @@ use std::process::ExitCode;
 const UNSAFE_WHITELIST: &[&str] =
     &["memstore/hashtable.rs", "memstore/shard.rs", "server/sys.rs"];
 
-/// Modules where panicking calls are forbidden outside tests.
-const HOT_PATH: &[&str] =
-    &["server/mod.rs", "server/reactor.rs", "ipc/proto.rs", "storage/tiered.rs"];
+/// Modules where panicking calls are forbidden outside tests. The
+/// replication tree counts as hot path: the shipper runs inside the commit
+/// sink and the standby applier is the only thing keeping a replica alive —
+/// a panic in either silently forfeits durability guarantees.
+const HOT_PATH: &[&str] = &[
+    "server/mod.rs",
+    "server/reactor.rs",
+    "ipc/proto.rs",
+    "storage/tiered.rs",
+    "replication/mod.rs",
+    "replication/ship.rs",
+    "replication/apply.rs",
+    "replication/heartbeat.rs",
+];
 
 /// Panicking constructs forbidden in hot-path modules. `.expect(` keeps its
 /// paren so a field named `expect` does not match; `.unwrap()` keeps both so
