@@ -17,6 +17,10 @@
 #                    standby pair, SIGKILL the primary under load and assert
 #                    the promoted standby serves every acked write (also
 #                    covers fault-injected reconnects and SIGTERM drain)
+#   make faults      storage-fault drill: the faultcheck build's ordinal
+#                    sweep (every fault class at every I/O op of each
+#                    persistent surface) plus the fsync fail-stop property
+#                    (see DESIGN.md §16)
 #   make lint        repo-specific static checks (cargo xtask lint) plus
 #                    the lint engine's own tests
 #   make miri        UB-check the unsafe core under Miri (nightly; small
@@ -27,7 +31,7 @@
 
 ARTIFACTS_DIR := $(abspath rust/artifacts)
 
-.PHONY: artifacts build test check-pjrt bench bench-smoke failover lint miri tsan clean
+.PHONY: artifacts build test check-pjrt bench bench-smoke failover faults lint miri tsan clean
 
 artifacts:
 	cd python && python -m compile.aot --out $(ARTIFACTS_DIR)
@@ -66,6 +70,11 @@ bench-smoke:
 
 failover:
 	cd rust && cargo test --release --test replication_kill -- --nocapture
+
+# The shim's unit tests (--lib) plus the ordinal sweep and the fail-stop
+# property. The sweep is file-heavy; --release keeps it quick.
+faults:
+	cd rust && cargo test --release --features faultcheck --lib --test fault_storage --test prop_durability
 
 lint:
 	cd rust && cargo xtask lint

@@ -24,5 +24,5 @@ pub mod wal;
 pub use persist::{
     CheckpointStats, CommitSink, DurabilityError, DurabilityOptions, Persistence, RecoveryReport,
 };
-pub use snapshot::{load_snapshot, write_snapshot};
+pub use snapshot::{load_snapshot, verify_snapshot, write_snapshot};
 pub use wal::{decode_frame, encode_frame, Wal, WalReader, FRAME_BYTES};

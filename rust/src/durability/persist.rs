@@ -29,21 +29,43 @@
 //!   synced write.
 
 use std::fs::File;
-use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::memstore::ShardedStore;
-use crate::metrics::DurabilityMetrics;
+use crate::metrics::{DurabilityMetrics, HealthMetrics};
+use crate::util::iofault;
 use crate::util::json::{self, Json};
 use crate::workload::record::StockUpdate;
 
-use super::snapshot::{load_snapshot, write_snapshot, SnapshotError};
+use super::snapshot::{load_snapshot, verify_snapshot, write_snapshot, SnapshotError};
 use super::wal::{Wal, WalReader, FRAME_BYTES};
 
 const MANIFEST: &str = "MANIFEST.json";
+
+/// Fault-injection surface for `MANIFEST.json` publishes.
+const MANIFEST_SURFACE: &str = "manifest";
+
+/// Fault-injection surface shared with `durability::snapshot` — the
+/// rebase path writes a snapshot image by hand.
+const SNAP_SURFACE: &str = "snap";
+
+/// First retry delay after a failed background checkpoint.
+const SNAP_BACKOFF_BASE_MS: u64 = 500;
+
+/// Ceiling for the checkpoint retry delay (capped exponential).
+const SNAP_BACKOFF_CAP_MS: u64 = 30_000;
+
+/// Retry delay after `failures` consecutive failed background
+/// checkpoints: `500ms * 2^failures`, capped at 30s. Deterministic (no
+/// jitter) — a single snapshotter thread has nothing to de-synchronize
+/// from, and the fault sweep wants reproducible timing.
+fn snapshot_backoff_delay(failures: u32) -> Duration {
+    let exp = failures.min(6);
+    Duration::from_millis((SNAP_BACKOFF_BASE_MS << exp).min(SNAP_BACKOFF_CAP_MS))
+}
 
 /// Tunables for the persistence layer.
 #[derive(Debug, Clone)]
@@ -184,6 +206,10 @@ struct Shared {
     /// Serializes `checkpoint_now` against the background snapshotter.
     checkpoint_lock: Mutex<()>,
     metrics: DurabilityMetrics,
+    /// Storage-health block (`HEALTH` verb, `health_*` stats). `Arc` so
+    /// the replication shipper can count its disk errors into the same
+    /// instance the server renders.
+    health: Arc<HealthMetrics>,
     /// Optional commit observer (the replication shipper). Installed once
     /// before serving starts; read under the wal lock so notification
     /// order ≡ WAL order.
@@ -254,13 +280,21 @@ fn write_manifest(dir: &Path, generation: u64) -> Result<(), DurabilityError> {
         ("wal", Json::str(format!("wal-{generation}.log"))),
     ]);
     let tmp = dir.join("MANIFEST.json.tmp");
-    {
+    let publish = (|| -> std::io::Result<()> {
+        iofault::fail_point(MANIFEST_SURFACE)?;
         let mut f = File::create(&tmp)?;
-        f.write_all(j.to_string_pretty().as_bytes())?;
-        f.write_all(b"\n")?;
-        f.sync_data()?;
+        iofault::write_all(MANIFEST_SURFACE, &mut f, j.to_string_pretty().as_bytes())?;
+        iofault::write_all(MANIFEST_SURFACE, &mut f, b"\n")?;
+        iofault::sync_data(MANIFEST_SURFACE, &f)?;
+        drop(f);
+        iofault::rename(MANIFEST_SURFACE, &tmp, &dir.join(MANIFEST))
+    })();
+    if let Err(e) = publish {
+        // A failed publish must not leave the tmp for the GC sweep to
+        // find later (best effort; the sweep is the backstop).
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e.into());
     }
-    std::fs::rename(&tmp, dir.join(MANIFEST))?;
     if let Ok(d) = File::open(dir) {
         let _ = d.sync_all(); // directory entry durability (best effort)
     }
@@ -454,6 +488,7 @@ impl Persistence {
             stop: AtomicBool::new(false),
             checkpoint_lock: Mutex::new(()),
             metrics: DurabilityMetrics::new(),
+            health: Arc::new(HealthMetrics::new()),
             sink: Mutex::new(None),
         });
         shared.metrics.generation.set(generation as i64);
@@ -515,6 +550,7 @@ impl Persistence {
             };
         }
         if let Err(e) = logged {
+            sh.health.wal_errors.inc();
             if fsync_failed {
                 // fsyncgate: after a failed fsync the kernel may have
                 // dropped dirty pages while marking them clean, so no
@@ -523,6 +559,7 @@ impl Persistence {
                 // Crash-restart semantics: refuse everything until a
                 // restart replays what actually reached the disk.
                 g.poisoned = true;
+                sh.health.wal_failstop.set(1);
                 eprintln!(
                     "membig: WAL fsync failed; refusing further writes until restart: {e}"
                 );
@@ -536,6 +573,7 @@ impl Persistence {
                     Ok(()) => g.unsynced = false, // trim fsynced the survivors
                     Err(repair) => {
                         g.poisoned = true;
+                        sh.health.wal_failstop.set(1);
                         eprintln!(
                             "membig: WAL rollback after failed commit also failed \
                              ({repair}); refusing further writes until restart"
@@ -581,6 +619,8 @@ impl Persistence {
         if let Err(ref e) = r {
             if !g.poisoned {
                 g.poisoned = true;
+                sh.health.wal_errors.inc();
+                sh.health.wal_failstop.set(1);
                 eprintln!(
                     "membig: WAL group sync failed; refusing further writes until restart: {e}"
                 );
@@ -597,6 +637,18 @@ impl Persistence {
 
     pub fn metrics(&self) -> &DurabilityMetrics {
         &self.shared.metrics
+    }
+
+    /// Storage-health block for this instance (`HEALTH` verb,
+    /// `health_*` stats keys).
+    pub fn health(&self) -> &HealthMetrics {
+        &self.shared.health
+    }
+
+    /// Shared handle to the health block, for subsystems that outlive a
+    /// borrow (the replication shipper's listener threads).
+    pub fn health_handle(&self) -> Arc<HealthMetrics> {
+        self.shared.health.clone()
     }
 
     /// `STATS SERVER` suffix for the persistence layer.
@@ -651,15 +703,34 @@ impl Persistence {
         // it by loading into a scratch store.
         let path = snap_path(&sh.dir, generation);
         // `.tmp` suffix so a crash mid-rebase leaves an orphan the normal
-        // GC sweep already cleans up.
+        // GC sweep already cleans up; a *failed* publish removes it
+        // immediately instead of waiting for the next sweep.
         let tmp = path.with_extension("tmp");
-        {
+        let publish = (|| -> std::io::Result<()> {
+            iofault::fail_point(SNAP_SURFACE)?;
             let mut f = File::create(&tmp)?;
-            f.write_all(snap)?;
-            f.sync_data()?;
+            iofault::write_all(SNAP_SURFACE, &mut f, snap)?;
+            iofault::sync_data(SNAP_SURFACE, &f)?;
+            drop(f);
+            iofault::rename(SNAP_SURFACE, &tmp, &path)
+        })();
+        if let Err(e) = publish {
+            let _ = std::fs::remove_file(&tmp);
+            sh.health.snapshot_errors.inc();
+            return Err(e.into());
         }
-        std::fs::rename(&tmp, &path)?;
-        let incoming = load_snapshot(&path, shards)?;
+        // Validate before any live state changes: a torn or corrupt
+        // image must leave the old store + WAL fully intact. Take the
+        // bad file back out immediately — recovery must never have to
+        // consider a generation that was published but failed to load.
+        let incoming = match load_snapshot(&path, shards) {
+            Ok(s) => s,
+            Err(e) => {
+                let _ = std::fs::remove_file(&path);
+                sh.health.snapshot_errors.inc();
+                return Err(e.into());
+            }
+        };
         let records = incoming.len() as u64;
         {
             let mut g = sh.wal.lock().unwrap();
@@ -747,8 +818,21 @@ impl Shared {
             }
             // Everything in the old segment is durable before the rotation:
             // from here on, snapshot + wal-<new_gen> alone must reconstruct
-            // the state.
-            g.wal.sync()?;
+            // the state. fsyncgate applies here exactly as in the commit
+            // path: a failed fsync may have silently dropped dirty pages,
+            // so retrying the checkpoint later and trusting a second sync
+            // of the same frames would build a snapshot chain on top of a
+            // non-durable hole. Fail-stop the WAL instead.
+            if let Err(e) = g.wal.sync() {
+                g.poisoned = true;
+                self.health.wal_errors.inc();
+                self.health.wal_failstop.set(1);
+                eprintln!(
+                    "membig: WAL sync during checkpoint failed; refusing further writes \
+                     until restart: {e}"
+                );
+                return Err(e.into());
+            }
             g.unsynced = false;
             let new_gen = g.generation + 1;
             g.wal = Wal::open(wal_path(&self.dir, new_gen))?;
@@ -766,6 +850,14 @@ impl Shared {
         // the snapshot and the segment, which replay tolerates (absolute
         // values, apply order preserved).
         let records = write_snapshot(&self.store, snap_path(&self.dir, new_gen))?;
+        // A torn write can report success with half the bytes on disk.
+        // Verify the published image while generation `new_gen - 1` and
+        // its WAL chain still exist — the manifest must never point at
+        // (nor GC run toward) a snapshot that cannot load.
+        if let Err(e) = verify_snapshot(snap_path(&self.dir, new_gen)) {
+            let _ = std::fs::remove_file(snap_path(&self.dir, new_gen));
+            return Err(e.into());
+        }
         write_manifest(&self.dir, new_gen)?;
         gc_below(&self.dir, new_gen);
         let elapsed = t0.elapsed();
@@ -788,6 +880,12 @@ fn spawn_snapshotter(shared: Arc<Shared>) -> Option<std::thread::JoinHandle<()>>
         .name("membig-snapshot".into())
         .spawn(move || {
             let mut last = Instant::now();
+            // Degraded-mode state: consecutive checkpoint failures and the
+            // earliest instant a retry is allowed (capped exponential
+            // backoff — an out-of-space disk gets seconds to recover
+            // instead of a 200 ms hammer; see DESIGN.md §16).
+            let mut failures = 0u32;
+            let mut retry_at = Instant::now();
             loop {
                 let due_size = {
                     let guard = shared.snap_signal.lock().unwrap();
@@ -802,13 +900,36 @@ fn spawn_snapshotter(shared: Arc<Shared>) -> Option<std::thread::JoinHandle<()>>
                 }
                 let every = shared.opts.snapshot_every;
                 let due_time = !every.is_zero() && last.elapsed() >= every;
-                if due_size || due_time {
-                    if let Err(e) = shared.checkpoint() {
+                if !(due_size || due_time) {
+                    continue;
+                }
+                if failures > 0 && Instant::now() < retry_at {
+                    // Holding back. The size trigger was consumed above —
+                    // re-assert it so the pressure that fired it is not
+                    // forgotten once the backoff window closes.
+                    if due_size {
+                        *shared.snap_signal.lock().unwrap() = true;
+                    }
+                    continue;
+                }
+                match shared.checkpoint() {
+                    Ok(_) => {
+                        if failures > 0 {
+                            failures = 0;
+                            shared.health.snapshot_backoff.set(0);
+                            eprintln!("membig: background checkpoint recovered; backoff cleared");
+                        }
+                    }
+                    Err(e) => {
                         self_heal_note(&e);
                         shared.metrics.snapshot_errors.inc();
+                        shared.health.snapshot_errors.inc();
+                        shared.health.snapshot_backoff.set(1);
+                        retry_at = Instant::now() + snapshot_backoff_delay(failures);
+                        failures = failures.saturating_add(1);
                     }
-                    last = Instant::now();
                 }
+                last = Instant::now();
             }
         })
         .expect("spawn membig-snapshot thread");
@@ -1073,6 +1194,22 @@ mod tests {
         assert_eq!(store.get(20).unwrap().price_cents, 4_020);
         drop(persist);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn backoff_delay_doubles_and_caps() {
+        assert_eq!(snapshot_backoff_delay(0), Duration::from_millis(500));
+        assert_eq!(snapshot_backoff_delay(1), Duration::from_millis(1_000));
+        assert_eq!(snapshot_backoff_delay(3), Duration::from_millis(4_000));
+        // Capped: the exponent clamps at 6 and the product at 30 s.
+        assert_eq!(snapshot_backoff_delay(6), Duration::from_millis(30_000));
+        assert_eq!(snapshot_backoff_delay(60), Duration::from_millis(30_000));
+        let mut prev = Duration::ZERO;
+        for f in 0..12 {
+            let d = snapshot_backoff_delay(f);
+            assert!(d >= prev, "delay must be monotone");
+            prev = d;
+        }
     }
 
     #[test]

@@ -11,10 +11,15 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::memstore::ShardedStore;
+use crate::util::iofault;
 use crate::workload::record::{BookRecord, RECORD_BYTES};
 
 const MAGIC: &[u8; 4] = b"MSNP";
 const VERSION: u32 = 1;
+
+/// Fault-injection surface for snapshot writes and loads
+/// (`MEMBIG_IO_FAULTS`, DESIGN.md §16).
+const SURFACE: &str = "snap";
 
 #[derive(Debug)]
 pub enum SnapshotError {
@@ -69,9 +74,26 @@ fn fnv64(h: u64, bytes: &[u8]) -> u64 {
 const FNV_SEED: u64 = 0xcbf2_9ce4_8422_2325;
 
 /// Write the full store to `path`. Returns records written.
+///
+/// Publish is tmp + fsync + rename; any failure removes the tmp file
+/// immediately (best effort — the recovery `*.tmp` GC sweep is the
+/// backstop) so an aborted snapshot never leaves an orphan waiting.
 pub fn write_snapshot(store: &ShardedStore, path: impl AsRef<Path>) -> Result<u64, SnapshotError> {
     let tmp = path.as_ref().with_extension("tmp");
-    let mut out = BufWriter::with_capacity(1 << 20, std::fs::File::create(&tmp)?);
+    let res = write_snapshot_inner(store, path.as_ref(), &tmp);
+    if res.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    res
+}
+
+fn write_snapshot_inner(
+    store: &ShardedStore,
+    path: &Path,
+    tmp: &Path,
+) -> Result<u64, SnapshotError> {
+    iofault::fail_point(SURFACE)?;
+    let mut out = BufWriter::with_capacity(1 << 20, std::fs::File::create(tmp)?);
 
     // First pass: collect per-shard to compute count + checksum while
     // streaming records to disk after the header is known. We buffer the
@@ -94,7 +116,7 @@ pub fn write_snapshot(store: &ShardedStore, path: impl AsRef<Path>) -> Result<u6
         for rec in recs {
             let enc = rec.encode();
             checksum = fnv64(checksum, &enc);
-            if let Err(e) = out.write_all(&enc) {
+            if let Err(e) = iofault::write_all(SURFACE, &mut out, &enc) {
                 io_err = Some(e);
                 return;
             }
@@ -107,13 +129,60 @@ pub fn write_snapshot(store: &ShardedStore, path: impl AsRef<Path>) -> Result<u6
     out.flush()?;
     let file = out.into_inner().map_err(|e| SnapshotError::Io(e.into_error()))?;
     // Patch header.
-    use std::os::unix::fs::FileExt;
-    file.write_all_at(&count.to_le_bytes(), 8)?;
-    file.write_all_at(&checksum.to_le_bytes(), 16)?;
-    file.sync_data()?;
+    iofault::write_all_at(SURFACE, &file, &count.to_le_bytes(), 8)?;
+    iofault::write_all_at(SURFACE, &file, &checksum.to_le_bytes(), 16)?;
+    iofault::sync_data(SURFACE, &file)?;
     drop(file);
-    std::fs::rename(&tmp, path.as_ref())?; // atomic publish
+    iofault::rename(SURFACE, tmp, path)?; // atomic publish
     Ok(count)
+}
+
+/// Stream `path` and check magic, version, count-vs-size, per-record
+/// decodability and the payload checksum — everything [`load_snapshot`]
+/// checks — without building a store.
+///
+/// The checkpoint path runs this on the image it just published *before*
+/// the manifest points at it and GC deletes the previous generation: a
+/// torn write can report success with only half the bytes on disk, and
+/// that must fail here, while the older chain still exists, not at the
+/// next recovery. Reads here are deliberately not routed through the
+/// fault shim — read-side validation is the detector, not the surface
+/// under test (same policy as `WalReader`).
+pub fn verify_snapshot(path: impl AsRef<Path>) -> Result<u64, SnapshotError> {
+    let mut input = BufReader::with_capacity(1 << 20, std::fs::File::open(path.as_ref())?);
+    let mut header = [0u8; 24];
+    input.read_exact(&mut header)?;
+    if &header[0..4] != MAGIC {
+        return Err(SnapshotError::BadMagic);
+    }
+    let version = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    if version != VERSION {
+        return Err(SnapshotError::BadVersion(version));
+    }
+    let expected = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let want_sum = u64::from_le_bytes(header[16..24].try_into().unwrap());
+    let payload = std::fs::metadata(path.as_ref())?.len().saturating_sub(24);
+    if payload != expected.saturating_mul(RECORD_BYTES as u64) {
+        return Err(SnapshotError::Truncated { expected, got: payload / RECORD_BYTES as u64 });
+    }
+    let mut buf = [0u8; RECORD_BYTES];
+    let mut checksum = FNV_SEED;
+    let mut got = 0u64;
+    while got < expected {
+        if let Err(e) = input.read_exact(&mut buf) {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                return Err(SnapshotError::Truncated { expected, got });
+            }
+            return Err(e.into());
+        }
+        checksum = fnv64(checksum, &buf);
+        BookRecord::decode(&buf).map_err(|e| SnapshotError::Record(got, e))?;
+        got += 1;
+    }
+    if checksum != want_sum {
+        return Err(SnapshotError::BadChecksum);
+    }
+    Ok(expected)
 }
 
 /// Load a snapshot into a fresh store with `shards` shards.
@@ -121,9 +190,10 @@ pub fn load_snapshot(
     path: impl AsRef<Path>,
     shards: usize,
 ) -> Result<Arc<ShardedStore>, SnapshotError> {
+    iofault::fail_point(SURFACE)?;
     let mut input = BufReader::with_capacity(1 << 20, std::fs::File::open(path.as_ref())?);
     let mut header = [0u8; 24];
-    input.read_exact(&mut header)?;
+    iofault::read_exact(SURFACE, &mut input, &mut header)?;
     if &header[0..4] != MAGIC {
         return Err(SnapshotError::BadMagic);
     }
@@ -152,7 +222,7 @@ pub fn load_snapshot(
     let mut checksum = FNV_SEED;
     let mut got = 0u64;
     while got < expected {
-        if let Err(e) = input.read_exact(&mut buf) {
+        if let Err(e) = iofault::read_exact(SURFACE, &mut input, &mut buf) {
             if e.kind() == std::io::ErrorKind::UnexpectedEof {
                 return Err(SnapshotError::Truncated { expected, got });
             }
@@ -204,6 +274,22 @@ mod tests {
             let r = spec.record_at(i);
             assert_eq!(loaded.get(r.isbn13), Some(r));
         }
+    }
+
+    #[test]
+    fn verify_matches_load_on_good_and_torn_images() {
+        let store = filled(800);
+        let path = tpath("verify.snap");
+        write_snapshot(&store, &path).unwrap();
+        assert_eq!(verify_snapshot(&path).unwrap(), 800);
+        // A torn publish (success reported, tail bytes missing) must fail
+        // verification exactly like it fails a load.
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - len / 2).unwrap();
+        drop(f);
+        assert!(verify_snapshot(&path).is_err());
+        assert!(load_snapshot(&path, 4).is_err());
     }
 
     #[test]

@@ -16,7 +16,12 @@ use std::fs::{File, OpenOptions};
 use std::io::{BufWriter, Read, Write};
 use std::path::Path;
 
+use crate::util::iofault;
 use crate::workload::record::StockUpdate;
+
+/// Fault-injection surface for WAL appends, syncs and opens
+/// (`MEMBIG_IO_FAULTS`, DESIGN.md §16).
+const SURFACE: &str = "wal";
 
 const FRAME: usize = 24;
 
@@ -82,6 +87,7 @@ pub struct Wal {
 impl Wal {
     /// Open for append (created if missing).
     pub fn open(path: impl AsRef<Path>) -> std::io::Result<Self> {
+        iofault::fail_point(SURFACE)?;
         let f = OpenOptions::new().create(true).append(true).open(path)?;
         Ok(Wal { out: Some(BufWriter::with_capacity(1 << 20, f)), appended: 0 })
     }
@@ -93,7 +99,7 @@ impl Wal {
     }
 
     pub fn append(&mut self, u: &StockUpdate) -> std::io::Result<()> {
-        self.writer()?.write_all(&encode(u))?;
+        iofault::write_all(SURFACE, self.writer()?, &encode(u))?;
         self.appended += 1;
         Ok(())
     }
@@ -109,7 +115,7 @@ impl Wal {
     pub fn sync(&mut self) -> std::io::Result<()> {
         let w = self.writer()?;
         w.flush()?;
-        w.get_ref().sync_data()
+        iofault::sync_data(SURFACE, w.get_ref())
     }
 
     /// Push buffered frames to the kernel without the fsync. Data written

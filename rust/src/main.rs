@@ -173,6 +173,18 @@ fn run() -> Result<(), String> {
             Ok(())
         }
         "serve" => {
+            // Deterministic storage-fault injection (`faultcheck` builds):
+            // parse MEMBIG_IO_FAULTS before any persistent path opens so a
+            // malformed plan fails loud instead of silently injecting
+            // nothing. Default builds compile the shim to a passthrough.
+            membig::util::iofault::init_from_env()
+                .map_err(|e| format!("MEMBIG_IO_FAULTS: {e}"))?;
+            if std::env::var_os("MEMBIG_IO_FAULTS").is_some() && !cfg!(feature = "faultcheck") {
+                eprintln!(
+                    "membig: MEMBIG_IO_FAULTS is set but this binary was built without \
+                     the `faultcheck` feature — no faults will be injected"
+                );
+            }
             preflight_serve(&cfg)?;
             // Arm the SIGTERM/SIGINT latch before any state is built so a
             // signal during a slow load/recovery still drains cleanly once
@@ -281,6 +293,7 @@ fn run() -> Result<(), String> {
                         p.dir().to_path_buf(),
                         p.wal_tip(),
                         repl.clone(),
+                        p.health_handle(),
                         faults,
                     )
                     .map_err(|e| format!("--replicate-listen {addr}: {e}"))?;
@@ -499,6 +512,30 @@ fn preflight_serve(cfg: &EngineConfig) -> Result<(), String> {
             )
         })?;
         let _ = std::fs::remove_file(&probe);
+        warn_if_low_disk(dir, cfg);
+    }
+    if cfg.memstore_budget_mb > 0 {
+        // The tier's spill directory gets the same create + write probe as
+        // the durable dir: `--memstore-budget-mb` must fail loud at startup,
+        // not at the first spill minutes later.
+        let tier = cfg.data_dir.join("tier");
+        std::fs::create_dir_all(&tier).map_err(|e| {
+            format!(
+                "--memstore-budget-mb: cannot create spill directory {}: {e} \
+                 (fix permissions or pick another --data-dir)",
+                tier.display()
+            )
+        })?;
+        let probe = tier.join(".membig-probe");
+        std::fs::write(&probe, b"probe").map_err(|e| {
+            format!(
+                "--memstore-budget-mb: spill directory {} is not writable: {e} \
+                 (fix permissions or pick another --data-dir)",
+                tier.display()
+            )
+        })?;
+        let _ = std::fs::remove_file(&probe);
+        warn_if_low_disk(&tier, cfg);
     }
     if let Some(addr) = &cfg.replicate_listen {
         // A listener that never accepted leaves no TIME_WAIT state, so the
@@ -520,6 +557,30 @@ fn preflight_serve(cfg: &EngineConfig) -> Result<(), String> {
         })?;
     }
     Ok(())
+}
+
+/// Warn — never fail — when the filesystem under a persistent directory has
+/// less free space than the server plausibly needs soon: two WAL checkpoint
+/// windows (`2 × --snapshot-wal-mb`), floored at 64 MiB. Advisory only:
+/// ENOSPC at run time degrades gracefully (DESIGN.md §16, surfaced by
+/// `HEALTH`), but the operator should hear about it before serving starts.
+/// Silently skipped where the statfs probe is unavailable.
+fn warn_if_low_disk(dir: &std::path::Path, cfg: &EngineConfig) {
+    let Some(free) = membig::server::free_disk_bytes(dir) else {
+        return;
+    };
+    let wal_window = cfg.snapshot_wal_mb.saturating_mul(1 << 20).saturating_mul(2);
+    let need = wal_window.max(64 << 20);
+    if free < need {
+        eprintln!(
+            "membig: warning: {} has {} MiB free, below the {} MiB advised \
+             (2x the WAL checkpoint window) — ENOSPC will pause spills/checkpoints \
+             and HEALTH will report degraded",
+            dir.display(),
+            free >> 20,
+            need >> 20
+        );
+    }
 }
 
 /// Resolve the `--backend` flag into a running analytics service.

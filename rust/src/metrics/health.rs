@@ -1,0 +1,185 @@
+//! Storage-health metrics: the degraded/ok verdict behind the `HEALTH`
+//! verb plus per-surface I/O error counters, rendered into
+//! `STATS SERVER` as `health_*` keys (DESIGN.md §16).
+//!
+//! One [`HealthMetrics`] instance is owned by whichever persistent
+//! backend a server runs (`durability::Persistence` or the tiered
+//! store) and written from its I/O error paths:
+//!
+//! - **Flags** (gauges, `0`/`1`) are *state*, not traffic — they mark a
+//!   surface as currently degraded and survive `STATS RESET`:
+//!   `wal_failstop` (WAL poisoned, fail-stop until restart),
+//!   `snapshot_backoff` (checkpointer in capped-exponential retry),
+//!   `tier_spill_stopped` (spills paused after ENOSPC; resident +
+//!   existing runs still serve). Any set flag makes
+//!   `health_degraded=1` and a non-`ok` `HEALTH` answer.
+//! - **Error counters** are traffic and reset with the epoch: one bump
+//!   per failed I/O operation, bucketed by surface (`wal`, `snapshot`,
+//!   `tier`, `repl`).
+//! - `health_io_faults_injected` mirrors the `faultcheck` shim's
+//!   injection count (`util::iofault::injected`) so a fault drill can
+//!   assert its plan actually fired; always 0 in default builds.
+
+use crate::util::json::Json;
+
+use super::{Counter, Gauge};
+
+/// Health bundle for one server's persistent backend. See the module
+/// docs for flag vs counter semantics.
+#[derive(Default)]
+pub struct HealthMetrics {
+    /// Failed WAL appends/syncs (each one either rolled back or poisoned).
+    pub wal_errors: Counter,
+    /// Failed checkpoint/snapshot writes (state stays recoverable).
+    pub snapshot_errors: Counter,
+    /// Failed tier run writes/reads (spill aborted or run quarantined).
+    pub tier_errors: Counter,
+    /// Failed replication disk I/O (catch-up reads, snapshot send,
+    /// standby marker) — the link severs and reconnects.
+    pub repl_errors: Counter,
+    /// `1` while the WAL is poisoned: fsyncgate fail-stop, every
+    /// mutation is refused until restart.
+    pub wal_failstop: Gauge,
+    /// `1` while the snapshotter is holding back after a failed
+    /// checkpoint (capped exponential retry); clears on first success.
+    pub snapshot_backoff: Gauge,
+    /// `1` while the tier refuses to spill after ENOSPC; reads and
+    /// mutations keep working, clears on the next successful spill.
+    pub tier_spill_stopped: Gauge,
+}
+
+impl HealthMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `true` when any degradation flag is set.
+    pub fn degraded(&self) -> bool {
+        self.wal_failstop.get() != 0
+            || self.snapshot_backoff.get() != 0
+            || self.tier_spill_stopped.get() != 0
+    }
+
+    /// Stable reason tokens for every set flag (the `HEALTH` verb body).
+    pub fn reasons(&self) -> Vec<&'static str> {
+        let mut r = Vec::new();
+        if self.wal_failstop.get() != 0 {
+            r.push("wal-failstop");
+        }
+        if self.snapshot_backoff.get() != 0 {
+            r.push("snapshot-backoff");
+        }
+        if self.tier_spill_stopped.get() != 0 {
+            r.push("tier-spill-stopped");
+        }
+        r
+    }
+
+    /// The one-line `HEALTH` answer: `ok`, or `degraded: <reasons>`.
+    pub fn health_line(&self) -> String {
+        let reasons = self.reasons();
+        if reasons.is_empty() {
+            "ok".to_string()
+        } else {
+            format!("degraded: {}", reasons.join(","))
+        }
+    }
+
+    /// Joins a `STATS RESET` epoch: zero the error *counters*; the
+    /// degradation flags are live state and must survive — a reset
+    /// must never make a degraded server look healthy.
+    pub fn reset_epoch_counters(&self) {
+        self.wal_errors.reset();
+        self.snapshot_errors.reset();
+        self.tier_errors.reset();
+        self.repl_errors.reset();
+    }
+
+    /// Suffix appended to `STATS SERVER` (leading space included, like
+    /// `DurabilityMetrics::stats_suffix`).
+    pub fn stats_suffix(&self) -> String {
+        format!(
+            " health_degraded={} health_wal_failstop={} health_snapshot_backoff={} \
+             health_tier_spill_stopped={} health_wal_errors={} health_snapshot_errors={} \
+             health_tier_errors={} health_repl_errors={} health_io_faults_injected={}",
+            u64::from(self.degraded()),
+            self.wal_failstop.get(),
+            self.snapshot_backoff.get(),
+            self.tier_spill_stopped.get(),
+            self.wal_errors.get(),
+            self.snapshot_errors.get(),
+            self.tier_errors.get(),
+            self.repl_errors.get(),
+            crate::util::iofault::injected()
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("degraded", Json::num(u64::from(self.degraded()) as f64)),
+            ("wal_failstop", Json::num(self.wal_failstop.get() as f64)),
+            ("snapshot_backoff", Json::num(self.snapshot_backoff.get() as f64)),
+            ("tier_spill_stopped", Json::num(self.tier_spill_stopped.get() as f64)),
+            ("wal_errors", Json::num(self.wal_errors.get() as f64)),
+            ("snapshot_errors", Json::num(self.snapshot_errors.get() as f64)),
+            ("tier_errors", Json::num(self.tier_errors.get() as f64)),
+            ("repl_errors", Json::num(self.repl_errors.get() as f64)),
+            (
+                "io_faults_injected",
+                Json::num(crate::util::iofault::injected() as f64),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn health_metrics_render_and_reset() {
+        let h = HealthMetrics::new();
+        assert!(!h.degraded());
+        assert_eq!(h.health_line(), "ok");
+        h.wal_errors.add(2);
+        h.tier_errors.inc();
+        h.snapshot_backoff.set(1);
+        h.tier_spill_stopped.set(1);
+        assert!(h.degraded());
+        assert_eq!(h.health_line(), "degraded: snapshot-backoff,tier-spill-stopped");
+        let s = h.stats_suffix();
+        for needle in [
+            " health_degraded=1",
+            " health_wal_failstop=0",
+            " health_snapshot_backoff=1",
+            " health_tier_spill_stopped=1",
+            " health_wal_errors=2",
+            " health_snapshot_errors=0",
+            " health_tier_errors=1",
+            " health_repl_errors=0",
+            " health_io_faults_injected=",
+        ] {
+            assert!(s.contains(needle), "missing {needle:?} in {s:?}");
+        }
+        let j = h.to_json();
+        assert_eq!(j.get("degraded").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.get("wal_errors").unwrap().as_f64().unwrap(), 2.0);
+        // Epoch reset zeroes the error counters; the flags are state.
+        h.reset_epoch_counters();
+        assert_eq!(h.wal_errors.get(), 0);
+        assert_eq!(h.tier_errors.get(), 0);
+        assert_eq!(h.snapshot_backoff.get(), 1, "degradation flags survive the reset");
+        assert!(h.degraded(), "a reset must never hide a degraded state");
+        h.snapshot_backoff.set(0);
+        h.tier_spill_stopped.set(0);
+        assert_eq!(h.health_line(), "ok");
+    }
+
+    #[test]
+    fn wal_failstop_is_a_reason() {
+        let h = HealthMetrics::new();
+        h.wal_failstop.set(1);
+        assert_eq!(h.health_line(), "degraded: wal-failstop");
+        assert_eq!(h.reasons(), vec!["wal-failstop"]);
+    }
+}

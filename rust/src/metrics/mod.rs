@@ -9,6 +9,10 @@ use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
 
+mod health;
+
+pub use health::HealthMetrics;
+
 // ---------------------------------------------------------------------------
 // Counter
 // ---------------------------------------------------------------------------
@@ -787,6 +791,10 @@ pub struct TieredMetrics {
     pub corrupt_records: Counter,
     /// Run reads or compactions that failed with an I/O error.
     pub disk_errors: Counter,
+    /// Runs currently quarantined after a read I/O error: skipped by
+    /// reads and excluded from compaction inputs, files kept on disk.
+    /// State, not traffic — a restart re-probes them.
+    pub quarantined: Gauge,
     /// Live runs in the published manifest.
     pub runs: Gauge,
     /// Bytes across all live run files.
@@ -837,8 +845,8 @@ impl TieredMetrics {
             " tier_spills={} tier_spilled_records={} tier_spill_errors={} tier_mem_hits={} \
              tier_disk_hits={} tier_misses={} tier_promotions={} tier_cache_hits={} \
              tier_cache_misses={} tier_cache_evictions={} tier_cache_hit_rate={:.3} \
-             tier_compactions={} tier_corrupt_records={} tier_disk_errors={} tier_runs={} \
-             tier_disk_bytes={} tier_resident_records={}",
+             tier_compactions={} tier_corrupt_records={} tier_disk_errors={} \
+             tier_quarantined={} tier_runs={} tier_disk_bytes={} tier_resident_records={}",
             self.spills.get(),
             self.spilled_records.get(),
             self.spill_errors.get(),
@@ -853,6 +861,7 @@ impl TieredMetrics {
             self.compactions.get(),
             self.corrupt_records.get(),
             self.disk_errors.get(),
+            self.quarantined.get(),
             self.runs.get(),
             self.disk_bytes.get(),
             self.resident_records.get()
@@ -875,6 +884,7 @@ impl TieredMetrics {
             ("compactions", Json::num(self.compactions.get() as f64)),
             ("corrupt_records", Json::num(self.corrupt_records.get() as f64)),
             ("disk_errors", Json::num(self.disk_errors.get() as f64)),
+            ("quarantined", Json::num(self.quarantined.get() as f64)),
             ("runs", Json::num(self.runs.get() as f64)),
             ("disk_bytes", Json::num(self.disk_bytes.get() as f64)),
             ("resident_records", Json::num(self.resident_records.get() as f64)),
@@ -1278,6 +1288,7 @@ mod tests {
             " tier_cache_hit_rate=0.750",
             " tier_compactions=1",
             " tier_corrupt_records=0",
+            " tier_quarantined=0",
             " tier_runs=4",
             " tier_disk_bytes=12288",
             " tier_resident_records=250",

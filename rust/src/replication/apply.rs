@@ -37,7 +37,12 @@ use super::{
 };
 use crate::durability::{DurabilityError, DurabilityOptions, Persistence, FRAME_BYTES};
 use crate::memstore::ShardedStore;
+use crate::util::iofault;
 use crate::util::rng::Rng;
+
+/// Fault-injection surface for the `STANDBY.json` marker write
+/// (`MEMBIG_IO_FAULTS`, DESIGN.md §16).
+const MARKER_SURFACE: &str = "marker";
 
 /// How long a blocking stream read may sit before we re-check stop/promote.
 /// An alive primary heartbeats every 250 ms, so a timeout here never fires
@@ -51,7 +56,7 @@ pub(crate) fn marker_path(dir: &Path) -> PathBuf {
 
 fn write_marker(dir: &Path) {
     // Best-effort: a lost marker only costs a snapshot re-sync on restart.
-    let _ = std::fs::write(marker_path(dir), b"{\"role\":\"standby\"}\n");
+    let _ = iofault::write_file(MARKER_SURFACE, &marker_path(dir), b"{\"role\":\"standby\"}\n");
 }
 
 /// Everything the standby threads share.

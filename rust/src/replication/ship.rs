@@ -22,7 +22,7 @@
 
 use std::collections::VecDeque;
 use std::fs::File;
-use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::io::{self, Seek, SeekFrom, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -36,7 +36,13 @@ use super::{
 };
 use crate::durability::persist::{scan_snapshot_gens, snap_path, wal_path};
 use crate::durability::{encode_frame, CommitSink, FRAME_BYTES};
+use crate::metrics::HealthMetrics;
+use crate::util::iofault;
 use crate::workload::record::StockUpdate;
+
+/// Fault-injection surface for the shipper's disk reads — WAL catch-up
+/// and snapshot re-sync (`MEMBIG_IO_FAULTS`, DESIGN.md §16).
+const SHIP_SURFACE: &str = "ship";
 
 /// Max bytes per `WAL1` message when streaming catch-up from disk.
 const CATCHUP_CHUNK: usize = 512 * 1024;
@@ -129,6 +135,10 @@ impl Session {
 struct Inner {
     dir: PathBuf,
     repl: Arc<ReplState>,
+    /// The persistence layer's health block: the shipper counts its disk
+    /// failures (`health_repl_errors`) into the same instance the server
+    /// renders.
+    health: Arc<HealthMetrics>,
     /// Durable WAL tip `(generation, bytes)`: every byte lexicographically
     /// below this is committed and readable from the on-disk segment files.
     /// Updated under the WAL mutex via the sink callbacks.
@@ -150,12 +160,14 @@ pub struct Shipper {
 impl Shipper {
     /// Bind `addr` and start accepting standby sessions. `initial_tip` is
     /// the WAL tip at install time (`persist.wal_tip()`), `dir` the durable
-    /// directory the WAL segments and snapshots live in.
+    /// directory the WAL segments and snapshots live in, `health` the
+    /// persistence layer's health block (`Persistence::health_handle`).
     pub fn listen(
         addr: &str,
         dir: PathBuf,
         initial_tip: (u64, u64),
         repl: Arc<ReplState>,
+        health: Arc<HealthMetrics>,
         faults: FaultPlan,
     ) -> io::Result<(Arc<Shipper>, SocketAddr)> {
         let listener = TcpListener::bind(addr)?;
@@ -164,6 +176,7 @@ impl Shipper {
         let inner = Arc::new(Inner {
             dir,
             repl,
+            health,
             watermark: Mutex::new(initial_tip),
             sessions: Mutex::new(Vec::new()),
             stop: AtomicBool::new(false),
@@ -369,10 +382,23 @@ fn catch_up_step(
     if take == 0 {
         return Ok(Caught::AtTip);
     }
-    let mut f = File::open(&path)?;
-    f.seek(SeekFrom::Start(co))?;
-    let mut buf = vec![0u8; take];
-    f.read_exact(&mut buf)?;
+    let read = (|| -> io::Result<Vec<u8>> {
+        iofault::fail_point(SHIP_SURFACE)?;
+        let mut f = File::open(&path)?;
+        f.seek(SeekFrom::Start(co))?;
+        let mut buf = vec![0u8; take];
+        iofault::read_exact(SHIP_SURFACE, &mut f, &mut buf)?;
+        Ok(buf)
+    })();
+    let buf = match read {
+        Ok(buf) => buf,
+        Err(e) => {
+            // Disk failure on catch-up: count it and drop the session; the
+            // standby reconnects and retries (or re-syncs via snapshot).
+            inner.health.repl_errors.inc();
+            return Err(e);
+        }
+    };
     ship_batch(inner, w, cg, co, &buf)?;
     cursor.1 += take as u64;
     Ok(Caught::Sent)
@@ -410,15 +436,19 @@ fn send_snapshot(inner: &Arc<Inner>, w: &mut impl Write) -> io::Result<(u64, u64
     for _ in 0..3 {
         let gens = scan_snapshot_gens(&inner.dir);
         let Some(&g) = gens.first() else { break };
-        match std::fs::read(snap_path(&inner.dir, g)) {
+        match iofault::read_file(SHIP_SURFACE, &snap_path(&inner.dir, g)) {
             Ok(bytes) => {
                 write_snapshot_msg(w, g, &bytes)?;
                 inner.repl.metrics.snapshot_resyncs.inc();
                 inner.repl.metrics.bytes_shipped.add(bytes.len() as u64);
                 return Ok((g, 0));
             }
-            // Raced a checkpoint's GC; rescan for the new newest.
-            Err(_) => continue,
+            // Raced a checkpoint's GC (or the disk failed); count it and
+            // rescan for the new newest.
+            Err(_) => {
+                inner.health.repl_errors.inc();
+                continue;
+            }
         }
     }
     Err(io::Error::other("no snapshot available to re-sync standby"))

@@ -16,6 +16,7 @@
 //!                                 latency + read-path/WAL/snapshot gauges>
 //! STATS RESET                   → OK epoch=<e> (fresh measurement window)
 //! ANALYTICS                     → OK value=<dollars> ... (analytics backend)
+//! HEALTH                        → ok | degraded: <reason>[,<reason>...]
 //! PING                          → PONG
 //! QUIT                          → BYE (closes connection)
 //! ```
@@ -85,7 +86,14 @@ mod sys;
 pub use reactor::raise_nofile_limit;
 
 #[cfg(target_os = "linux")]
-pub use sys::{install_shutdown_handler, shutdown_requested};
+pub use sys::{free_disk_bytes, install_shutdown_handler, shutdown_requested};
+
+/// Non-Linux stub: no statfs binding — the serve preflight simply skips
+/// its advisory free-disk warning.
+#[cfg(not(target_os = "linux"))]
+pub fn free_disk_bytes(_path: &std::path::Path) -> Option<u64> {
+    None
+}
 
 /// Non-Linux stub: no raw signal handling, `serve` only stops by kill (the
 /// pre-PR-9 behavior on every platform).
@@ -675,6 +683,10 @@ pub fn dispatch_into(line: &str, ctx: &RequestCtx<'_>, in_batch: bool, out: &mut
                         s.push_str(&store.stats_suffix());
                         if let Some(p) = persist {
                             s.push_str(&p.stats_suffix());
+                            // Storage-health block (`health_*`): the tiered
+                            // engine carries its own via stats_suffix above;
+                            // the durability layer's rides here.
+                            s.push_str(&p.health().stats_suffix());
                         }
                         if let Some(r) = repl {
                             s.push_str(&r.metrics.stats_suffix());
@@ -692,6 +704,7 @@ pub fn dispatch_into(line: &str, ctx: &RequestCtx<'_>, in_batch: bool, out: &mut
                     Some(m) => {
                         if let Some(p) = persist {
                             p.metrics().reset_epoch_counters();
+                            p.health().reset_epoch_counters();
                         }
                         if let Some(r) = repl {
                             r.metrics.reset_epoch_counters();
@@ -725,6 +738,23 @@ pub fn dispatch_into(line: &str, ctx: &RequestCtx<'_>, in_batch: bool, out: &mut
                         Err(e) => out.extend_from_slice(format!("ERR {e}").as_bytes()),
                     },
                 }
+            }
+        }
+        // One-line storage-health probe (DESIGN.md §16): `ok`, or
+        // `degraded: <reasons>` naming every active degradation. Answers
+        // from whichever layer owns persistent I/O — the durability stack,
+        // or a spill-enabled engine's own health block — and a constant
+        // `ok` when neither exists (pure RAM cannot degrade this way).
+        "HEALTH" => {
+            if rest.is_empty() {
+                let line = match (persist, store.health_metrics()) {
+                    (Some(p), _) => p.health().health_line(),
+                    (None, Some(h)) => h.health_line(),
+                    (None, None) => "ok".to_string(),
+                };
+                out.extend_from_slice(line.as_bytes());
+            } else {
+                out.extend_from_slice(b"ERR HEALTH takes no arguments");
             }
         }
         "PING" => {
@@ -1112,6 +1142,63 @@ mod tests {
         assert_eq!(s2.get(3).unwrap().quantity, 3);
         assert_eq!(s2.get(4).unwrap().price_cents, 444);
         drop(persist2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn health_verb_and_stats_carry_the_health_block() {
+        use crate::durability::{DurabilityOptions, Persistence};
+        // Pure memory: nothing can degrade, HEALTH is a constant ok.
+        let (s, _) = store(10);
+        assert_eq!(d("HEALTH", &s), "ok");
+        assert!(d("HEALTH now", &s).starts_with("ERR"));
+
+        // Durability attached: HEALTH answers from the persistence layer's
+        // health block and STATS SERVER renders the health_* keys.
+        let dir = std::env::temp_dir()
+            .join(format!("membig_srv_health_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let opts = DurabilityOptions {
+            fsync: false,
+            snapshot_every: std::time::Duration::ZERO,
+            snapshot_wal_bytes: 0,
+        };
+        let (ps, persist, _) =
+            Persistence::open(&dir, opts, 2, || Ok(Arc::new(ShardedStore::new(2, 64))))
+                .unwrap();
+        let ps: Arc<dyn StorageEngine> = ps;
+        let m = ServerMetrics::new();
+        let ctx = RequestCtx {
+            store: &ps,
+            engine: None,
+            metrics: Some(&m),
+            persist: Some(&persist),
+            procs: None,
+            repl: None,
+        };
+        assert_eq!(dispatch_str("HEALTH", &ctx, false), "ok");
+        let line = dispatch_str("STATS SERVER", &ctx, false);
+        assert!(line.contains(" health_degraded=0"), "{line}");
+        assert!(line.contains(" health_wal_errors=0"), "{line}");
+
+        // Flip a degradation by hand: both surfaces must report it.
+        persist.health().snapshot_backoff.set(1);
+        persist.health().snapshot_errors.inc();
+        assert_eq!(dispatch_str("HEALTH", &ctx, false), "degraded: snapshot-backoff");
+        let line = dispatch_str("STATS SERVER", &ctx, false);
+        assert!(line.contains(" health_degraded=1"), "{line}");
+        assert!(line.contains(" health_snapshot_errors=1"), "{line}");
+
+        // STATS RESET zeroes the error counters but never the state flags:
+        // a reset must not make a degraded server look healthy.
+        assert_eq!(dispatch_str("STATS RESET", &ctx, false), "OK epoch=1");
+        let line = dispatch_str("STATS SERVER", &ctx, false);
+        assert!(line.contains(" health_snapshot_errors=0"), "{line}");
+        assert!(line.contains(" health_degraded=1"), "{line}");
+        assert_eq!(dispatch_str("HEALTH", &ctx, false), "degraded: snapshot-backoff");
+        persist.health().snapshot_backoff.set(0);
+        assert_eq!(dispatch_str("HEALTH", &ctx, false), "ok");
+        drop(persist);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -26,6 +26,7 @@
 use std::sync::Arc;
 
 use crate::memstore::{ReadPathStats, ShardedStore};
+use crate::metrics::HealthMetrics;
 use crate::workload::record::{BookRecord, StockUpdate};
 
 /// Uniform record-store interface for the serving paths. Implemented by
@@ -97,6 +98,13 @@ pub trait StorageEngine: Send + Sync {
     /// empty for the pure-memory engine.
     fn stats_suffix(&self) -> String {
         String::new()
+    }
+
+    /// Storage-health block for engines with their own persistent I/O
+    /// (the tiered store). `None` for pure-memory engines — the `HEALTH`
+    /// verb then answers from the durability layer or a constant `ok`.
+    fn health_metrics(&self) -> Option<&HealthMetrics> {
+        None
     }
 
     /// Join a `STATS RESET` epoch: zero the engine's traffic counters
@@ -181,6 +189,7 @@ mod tests {
         assert!(!engine.is_empty());
         assert!(!engine.spill_enabled());
         assert_eq!(engine.stats_suffix(), "");
+        assert!(engine.health_metrics().is_none(), "pure-memory engine has no health block");
         assert_eq!(engine.get(7).unwrap().price_cents, 107);
         assert_eq!(engine.get(101), None);
 

@@ -71,15 +71,16 @@
 
 use std::collections::HashMap;
 use std::fs::File;
-use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::io::{self, Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::memstore::ShardedStore;
-use crate::metrics::TieredMetrics;
+use crate::metrics::{HealthMetrics, TieredMetrics};
 use crate::storage::index::hash_key;
+use crate::util::iofault;
 use crate::util::json::{self, Json};
 use crate::workload::record::{BookRecord, StockUpdate, RECORD_BYTES};
 
@@ -87,6 +88,17 @@ const RUN_MAGIC: &[u8; 4] = b"MRUN";
 const RUN_VERSION: u32 = 1;
 const RUN_HEADER_BYTES: u64 = 48;
 const RUNS_MANIFEST: &str = "RUNS.json";
+
+/// Fault-injection surfaces (`MEMBIG_IO_FAULTS`, DESIGN.md §16).
+const RUN_WRITE_SURFACE: &str = "run-write";
+const RUN_READ_SURFACE: &str = "run-read";
+const RUNS_SURFACE: &str = "runs";
+
+/// How long spills stay paused after a spill failure (ENOSPC or any
+/// other write error) before the next mutation retries. During the pause
+/// the store serves resident records + existing runs normally; only
+/// eviction is held back (`health_tier_spill_stopped`).
+const SPILL_RETRY_MS: u64 = 500;
 
 /// Block size of the read-through cache over run files. Records never
 /// span more than two blocks (24 B frames, 4 KiB blocks).
@@ -219,6 +231,11 @@ pub(crate) struct Run {
     bytes: u64,
     /// Offset of the record region.
     records_off: u64,
+    /// Set after a read I/O error (not a CRC skip): the run is excluded
+    /// from point reads and compaction inputs, but stays listed in the
+    /// manifest and on disk — the error may be transient, and a restart
+    /// re-probes the file (DESIGN.md §16).
+    quarantined: AtomicBool,
 }
 
 fn run_path(dir: &Path, seq: u64) -> PathBuf {
@@ -234,52 +251,58 @@ fn parse_run_seq(name: &str) -> Option<u64> {
 }
 
 /// Write `recs` (ascending key order, unique keys) as `run-<seq>.run`
-/// under `dir`: tmp file, `sync_data`, rename. The caller publishes the
-/// manifest afterwards; a crash in between leaves an unlisted file that
-/// `open` garbage-collects.
-fn write_run(dir: &Path, seq: u64, recs: &[BookRecord]) -> io::Result<Run> {
+/// under `dir`: tmp file, `sync_data`, rename, then re-open *and
+/// validate* the published file before handing it back. The caller
+/// publishes the manifest afterwards; a crash in between leaves an
+/// unlisted file that `open` garbage-collects. A failed (or torn —
+/// caught by the validation) write removes the tmp immediately and
+/// never reaches the manifest.
+fn write_run(dir: &Path, seq: u64, recs: &[BookRecord]) -> Result<Run, TierError> {
     debug_assert!(recs.windows(2).all(|w| w[0].isbn13 < w[1].isbn13));
     let count = recs.len() as u64;
     let bloom = Bloom::build(recs.iter().map(|r| r.isbn13), count);
     let min_key = recs.first().map(|r| r.isbn13).unwrap_or(0);
     let max_key = recs.last().map(|r| r.isbn13).unwrap_or(0);
 
+    // Header + bloom in one buffer, records in another: two large writes
+    // instead of thousands of tiny ones, and two deterministic fault
+    // ordinals per run for the `faultcheck` sweep.
+    let mut head = Vec::with_capacity(RUN_HEADER_BYTES as usize + bloom.words.len() * 8);
+    head.extend_from_slice(RUN_MAGIC);
+    head.extend_from_slice(&RUN_VERSION.to_le_bytes());
+    head.extend_from_slice(&count.to_le_bytes());
+    head.extend_from_slice(&min_key.to_le_bytes());
+    head.extend_from_slice(&max_key.to_le_bytes());
+    head.extend_from_slice(&(bloom.words.len() as u64).to_le_bytes());
+    head.extend_from_slice(&0u64.to_le_bytes()); // reserved
+    for w in &bloom.words {
+        head.extend_from_slice(&w.to_le_bytes());
+    }
+    let mut body = Vec::with_capacity(recs.len() * RECORD_BYTES);
+    for r in recs {
+        body.extend_from_slice(&r.encode());
+    }
+
     let final_path = run_path(dir, seq);
     let tmp = final_path.with_extension("run.tmp");
-    {
-        let mut f = io::BufWriter::new(File::create(&tmp)?);
-        f.write_all(RUN_MAGIC)?;
-        f.write_all(&RUN_VERSION.to_le_bytes())?;
-        f.write_all(&count.to_le_bytes())?;
-        f.write_all(&min_key.to_le_bytes())?;
-        f.write_all(&max_key.to_le_bytes())?;
-        f.write_all(&(bloom.words.len() as u64).to_le_bytes())?;
-        f.write_all(&0u64.to_le_bytes())?; // reserved
-        for w in &bloom.words {
-            f.write_all(&w.to_le_bytes())?;
-        }
-        for r in recs {
-            f.write_all(&r.encode())?;
-        }
-        let f = f.into_inner().map_err(|e| e.into_error())?;
-        f.sync_data()?;
+    let publish = (|| -> io::Result<()> {
+        iofault::fail_point(RUN_WRITE_SURFACE)?;
+        let mut f = File::create(&tmp)?;
+        iofault::write_all(RUN_WRITE_SURFACE, &mut f, &head)?;
+        iofault::write_all(RUN_WRITE_SURFACE, &mut f, &body)?;
+        iofault::sync_data(RUN_WRITE_SURFACE, &f)?;
+        drop(f);
+        iofault::rename(RUN_WRITE_SURFACE, &tmp, &final_path)
+    })();
+    if let Err(e) = publish {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e.into());
     }
-    std::fs::rename(&tmp, &final_path)?;
-
-    let records_off = RUN_HEADER_BYTES + bloom.words.len() as u64 * 8;
-    let bytes = records_off + count * RECORD_BYTES as u64;
-    let file = File::open(&final_path)?;
-    Ok(Run {
-        seq,
-        path: final_path,
-        file: Mutex::new(file),
-        count,
-        min_key,
-        max_key,
-        bloom,
-        bytes,
-        records_off,
-    })
+    // Validate what actually landed on disk (size check against the
+    // header) instead of trusting our own metadata: a torn write that
+    // reported success must fail *here*, before the manifest ever lists
+    // the file — the stray is unlisted and GC'd on the next open.
+    Run::open(final_path)
 }
 
 impl Run {
@@ -291,6 +314,7 @@ impl Run {
         let name = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
         let seq = parse_run_seq(&name)
             .ok_or_else(|| TierError::Corrupt(format!("bad run file name: {name}")))?;
+        iofault::fail_point(RUN_READ_SURFACE)?;
         let mut file = File::open(&path)?;
         let mut header = [0u8; RUN_HEADER_BYTES as usize];
         file.read_exact(&mut header).map_err(|_| {
@@ -347,6 +371,7 @@ impl Run {
             bloom: Bloom { words },
             bytes: expect,
             records_off,
+            quarantined: AtomicBool::new(false),
         })
     }
 
@@ -360,7 +385,7 @@ impl Run {
         // reader panicked mid-seek; the run is unusable either way.
         let mut f = self.file.lock().unwrap();
         f.seek(SeekFrom::Start(self.records_off + start))?;
-        f.read_exact(&mut buf)?;
+        iofault::read_exact(RUN_READ_SURFACE, &mut *f, &mut buf)?;
         Ok(buf)
     }
 }
@@ -524,13 +549,20 @@ fn write_runs_manifest(dir: &Path, next_seq: u64, runs: &[Arc<Run>]) -> io::Resu
         ),
     ]);
     let tmp = dir.join("RUNS.json.tmp");
-    {
+    let publish = (|| -> io::Result<()> {
+        iofault::fail_point(RUNS_SURFACE)?;
         let mut f = File::create(&tmp)?;
-        f.write_all(j.to_string_pretty().as_bytes())?;
-        f.write_all(b"\n")?;
-        f.sync_data()?;
+        iofault::write_all(RUNS_SURFACE, &mut f, j.to_string_pretty().as_bytes())?;
+        iofault::write_all(RUNS_SURFACE, &mut f, b"\n")?;
+        iofault::sync_data(RUNS_SURFACE, &f)?;
+        drop(f);
+        iofault::rename(RUNS_SURFACE, &tmp, &dir.join(RUNS_MANIFEST))
+    })();
+    if let Err(e) = publish {
+        // Never leave the tmp for a later GC sweep to find.
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
     }
-    std::fs::rename(&tmp, dir.join(RUNS_MANIFEST))?;
     if let Ok(d) = File::open(dir) {
         let _ = d.sync_all(); // directory entry durability (best effort)
     }
@@ -580,6 +612,14 @@ struct TieredShared {
     cache: BlockCache,
     compact_at: usize,
     metrics: TieredMetrics,
+    /// Storage-health block (`HEALTH` verb, `health_*` stats) — the tier
+    /// is mutually exclusive with `durability::Persistence`, so it owns
+    /// the server's one health instance when configured.
+    health: Arc<HealthMetrics>,
+    /// Earliest instant the next spill attempt is allowed after a spill
+    /// failure (`None` = spills healthy). Guards the degraded-mode pause;
+    /// read before taking `tier_lock`.
+    spill_retry: Mutex<Option<Instant>>,
     stop: AtomicBool,
 }
 
@@ -599,11 +639,55 @@ impl TieredStore {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)?;
 
-        let (next_seq, listed) = read_runs_manifest(&dir).unwrap_or((0, Vec::new()));
-        let mut runs: Vec<Arc<Run>> = Vec::with_capacity(listed.len());
-        for name in &listed {
-            runs.push(Arc::new(Run::open(dir.join(name))?));
-        }
+        let manifest = read_runs_manifest(&dir);
+        let manifest_torn = manifest.is_none() && dir.join(RUNS_MANIFEST).exists();
+        let (next_seq, listed, runs) = if let Some((next, names)) = manifest {
+            // Normal path: every manifest-listed run must load — the
+            // publish protocol only ever lists fully-synced, validated
+            // files, so a failure here is real damage worth refusing on.
+            let mut runs: Vec<Arc<Run>> = Vec::with_capacity(names.len());
+            for name in &names {
+                runs.push(Arc::new(Run::open(dir.join(name))?));
+            }
+            (next, names, runs)
+        } else if manifest_torn {
+            // RUNS.json exists but does not parse (torn write, external
+            // damage). The manifest is a hint, not the data: fall back to
+            // a directory scan, keep every run that validates, skip+GC
+            // the rest, and rewrite the manifest — mirroring how the
+            // durability layer survives a corrupt MANIFEST.json.
+            eprintln!("membig: RUNS.json unreadable; rebuilding the run set from a directory scan");
+            let mut found: Vec<(u64, String)> = match std::fs::read_dir(&dir) {
+                Ok(rd) => rd
+                    .flatten()
+                    .filter_map(|e| {
+                        let name = e.file_name().to_string_lossy().into_owned();
+                        parse_run_seq(&name).map(|seq| (seq, name))
+                    })
+                    .collect(),
+                Err(_) => Vec::new(),
+            };
+            found.sort_unstable_by(|a, b| b.0.cmp(&a.0)); // newest-first
+            let next = found.first().map(|(s, _)| s + 1).unwrap_or(0);
+            let mut names = Vec::with_capacity(found.len());
+            let mut runs: Vec<Arc<Run>> = Vec::with_capacity(found.len());
+            for (_, name) in found {
+                match Run::open(dir.join(&name)) {
+                    Ok(r) => {
+                        runs.push(Arc::new(r));
+                        names.push(name);
+                    }
+                    Err(e) => {
+                        eprintln!("membig: dropping unloadable run {name} during rebuild: {e}");
+                        let _ = std::fs::remove_file(dir.join(&name));
+                    }
+                }
+            }
+            write_runs_manifest(&dir, next, &runs)?;
+            (next, names, runs)
+        } else {
+            (0, Vec::new(), Vec::new())
+        };
         // GC files the manifest does not own: runs written but never
         // published (crash mid-spill), stale tmp files, compacted inputs.
         if let Ok(rd) = std::fs::read_dir(&dir) {
@@ -629,6 +713,8 @@ impl TieredStore {
             cache: BlockCache::new(opts.cache_blocks),
             compact_at: opts.compact_at,
             metrics: TieredMetrics::new(),
+            health: Arc::new(HealthMetrics::new()),
+            spill_retry: Mutex::new(None),
             stop: AtomicBool::new(false),
         });
         shared.publish_gauges(&shared.runs_snapshot());
@@ -651,6 +737,12 @@ impl TieredStore {
     /// `StorageEngine::stats_suffix`).
     pub fn tiered_metrics(&self) -> &TieredMetrics {
         &self.shared.metrics
+    }
+
+    /// Storage-health block for this store (`HEALTH` verb, `health_*`
+    /// stats keys).
+    pub fn health(&self) -> &HealthMetrics {
+        &self.shared.health
     }
 
     /// Current number of live runs.
@@ -697,6 +789,16 @@ impl TieredShared {
         self.runs.lock().unwrap().clone()
     }
 
+    /// Current run set minus quarantined runs — what scans may touch
+    /// (the point-read path does its own skip).
+    fn readable_runs(&self) -> Vec<Arc<Run>> {
+        self.runs_snapshot()
+            .iter()
+            .filter(|r| !r.quarantined.load(Ordering::Relaxed))
+            .cloned()
+            .collect()
+    }
+
     fn publish_gauges(&self, runs: &[Arc<Run>]) {
         self.metrics.runs.set(runs.len() as i64);
         let bytes: u64 = runs.iter().map(|r| r.bytes).sum();
@@ -704,6 +806,8 @@ impl TieredShared {
         self.metrics
             .resident_records
             .set(self.resident.load(Ordering::Relaxed).min(i64::MAX as u64) as i64);
+        let q = runs.iter().filter(|r| r.quarantined.load(Ordering::Relaxed)).count();
+        self.metrics.quarantined.set(q as i64);
     }
 
     /// Point read through the tiers: memstore, then runs newest-first
@@ -722,16 +826,35 @@ impl TieredShared {
     fn disk_get(&self, key: u64) -> Option<BookRecord> {
         let runs = self.runs_snapshot();
         for run in runs.iter() {
+            if run.quarantined.load(Ordering::Relaxed) {
+                continue;
+            }
             match run.get(key, &self.cache, &self.metrics) {
                 Ok(Some(r)) => {
                     self.metrics.disk_hits.inc();
                     return Some(r);
                 }
                 Ok(None) => {}
-                // Skip a run we cannot read rather than failing the GET: a
-                // CRC-invalid or unreadable frame must never be served, and
-                // an older run may still hold a (stale but valid) version.
-                Err(_) => self.metrics.disk_errors.inc(),
+                // A CRC-invalid frame must never be served, but the rest of
+                // the run is fine — skip just the probe and fall through to
+                // older runs for a (stale but valid) version.
+                Err(TierError::Corrupt(_)) => self.metrics.disk_errors.inc(),
+                // An I/O error (EIO, truncation behind our back) condemns
+                // the whole file: quarantine the run so reads stop paying
+                // for it, keep its bytes on disk — the error may be
+                // transient, and a restart re-probes it (DESIGN.md §16).
+                Err(TierError::Io(e)) => {
+                    self.metrics.disk_errors.inc();
+                    if !run.quarantined.swap(true, Ordering::Relaxed) {
+                        self.health.tier_errors.inc();
+                        self.publish_gauges(&runs);
+                        eprintln!(
+                            "membig: quarantining run {} after a read error \
+                             (serving older versions): {e}",
+                            run.path.display()
+                        );
+                    }
+                }
             }
         }
         None
@@ -849,9 +972,24 @@ impl TieredShared {
 
     /// Enforce the resident-record budget: spill coldest shards until
     /// under budget (or nothing spillable remains). A spill failure leaves
-    /// the records safely in RAM — over budget, never lossy.
+    /// the records safely in RAM — over budget, never lossy — and flips
+    /// the degraded `tier_spill_stopped` flag: mutations and reads keep
+    /// working against resident records + existing runs, and the next
+    /// mutation after [`SPILL_RETRY_MS`] retries the spill (an ENOSPC
+    /// disk usually stays full for a while; hammering it on every insert
+    /// would turn one failure into a log storm).
     fn maybe_spill(&self) {
         while self.resident.load(Ordering::Relaxed) > self.budget_records {
+            if self.health.tier_spill_stopped.get() != 0 {
+                // lint:allow(hot-path-panic): retry-mutex poisoning is
+                // unrecoverable.
+                let retry_at = *self.spill_retry.lock().unwrap();
+                if let Some(t) = retry_at {
+                    if Instant::now() < t {
+                        return; // paused; stay over budget until the window closes
+                    }
+                }
+            }
             // lint:allow(hot-path-panic): tier-lock poisoning is unrecoverable.
             let _serialize = self.tier_lock.lock().unwrap();
             if self.resident.load(Ordering::Relaxed) <= self.budget_records {
@@ -862,7 +1000,16 @@ impl TieredShared {
                 Ok(false) => return, // nothing left to spill
                 Err(e) => {
                     self.metrics.spill_errors.inc();
-                    eprintln!("membig: tier spill failed (records stay in RAM): {e}");
+                    self.health.tier_errors.inc();
+                    self.health.tier_spill_stopped.set(1);
+                    // lint:allow(hot-path-panic): retry-mutex poisoning is
+                    // unrecoverable.
+                    *self.spill_retry.lock().unwrap() =
+                        Some(Instant::now() + Duration::from_millis(SPILL_RETRY_MS));
+                    eprintln!(
+                        "membig: tier spill failed (records stay in RAM; spills paused \
+                         {SPILL_RETRY_MS} ms): {e}"
+                    );
                     return;
                 }
             }
@@ -933,6 +1080,13 @@ impl TieredShared {
         self.resident.fetch_sub(recs.len() as u64, Ordering::Relaxed);
         self.metrics.spills.inc();
         self.metrics.spilled_records.add(recs.len() as u64);
+        // A successful spill ends the degraded pause (disk came back).
+        if self.health.tier_spill_stopped.get() != 0 {
+            self.health.tier_spill_stopped.set(0);
+            // lint:allow(hot-path-panic): retry-mutex poisoning is unrecoverable.
+            *self.spill_retry.lock().unwrap() = None;
+            eprintln!("membig: tier spill recovered; degraded mode cleared");
+        }
         self.publish_gauges(&self.runs_snapshot());
         Ok(recs.len())
     }
@@ -962,24 +1116,39 @@ impl TieredShared {
         // lint:allow(hot-path-panic): tier-lock poisoning is unrecoverable.
         let _serialize = self.tier_lock.lock().unwrap();
         let old = self.runs_snapshot();
-        if old.len() < 2 {
+        // Quarantined runs are excluded from the merge inputs (their
+        // records cannot be read) but stay listed in the new manifest and
+        // keep their files: the read path already skips them, and a
+        // restart re-probes them. Merging fewer than two readable runs is
+        // pointless.
+        let (readable, quarantined): (Vec<Arc<Run>>, Vec<Arc<Run>>) = old
+            .iter()
+            .cloned()
+            .partition(|r| !r.quarantined.load(Ordering::Relaxed));
+        if readable.len() < 2 {
             return Ok(false);
         }
         let mut merged: Vec<BookRecord> = Vec::new();
-        self.merge_live(&old, &mut |r| merged.push(r))?;
-        let new_list: Arc<Vec<Arc<Run>>> = if merged.is_empty() {
-            Arc::new(Vec::new())
-        } else {
+        self.merge_live(&readable, &mut |r| merged.push(r))?;
+        let mut v: Vec<Arc<Run>> = Vec::with_capacity(1 + quarantined.len());
+        if !merged.is_empty() {
             let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
-            Arc::new(vec![Arc::new(write_run(&self.dir, seq, &merged)?)])
-        };
+            v.push(Arc::new(write_run(&self.dir, seq, &merged)?));
+        }
+        // The merged run carries the highest seq, so listing the
+        // quarantined survivors after it preserves newest-first order —
+        // and preserves what reads already serve: a key whose newest
+        // version sits in a quarantined run was *already* answered from
+        // an older run, which is exactly the version the merge kept.
+        v.extend(quarantined);
+        let new_list = Arc::new(v);
         {
             // lint:allow(hot-path-panic): runs-mutex poisoning is unrecoverable.
             let mut runs = self.runs.lock().unwrap();
             write_runs_manifest(&self.dir, self.next_seq.load(Ordering::Relaxed), &new_list)?;
             *runs = new_list;
         }
-        for r in old.iter() {
+        for r in readable.iter() {
             let _ = std::fs::remove_file(&r.path); // best effort; open() GCs
         }
         self.metrics.compactions.inc();
@@ -1068,7 +1237,7 @@ impl TieredShared {
     /// `compact`, nothing is deleted based on it).
     fn value_sum_cents(&self) -> (u64, u128) {
         let (mut n, mut sum) = self.mem.value_sum_cents();
-        let runs = self.runs_snapshot();
+        let runs = self.readable_runs();
         let _ = self.merge_live(&runs, &mut |r| {
             n += 1;
             sum += r.value_cents();
@@ -1078,7 +1247,7 @@ impl TieredShared {
 
     fn len(&self) -> usize {
         let mut n = self.mem.len();
-        let runs = self.runs_snapshot();
+        let runs = self.readable_runs();
         let _ = self.merge_live(&runs, &mut |_| n += 1);
         n
     }
@@ -1100,7 +1269,9 @@ fn spawn_compactor(shared: Arc<TieredShared>) -> Option<std::thread::JoinHandle<
                 }
                 std::thread::sleep(Duration::from_millis(20));
             }
-            let due = shared.runs_snapshot().len() >= shared.compact_at;
+            // Quarantined runs cannot be merged — counting them would spin
+            // the compactor against a merge that always declines.
+            let due = shared.readable_runs().len() >= shared.compact_at;
             if due {
                 if let Err(e) = shared.compact() {
                     // Not fatal: the pre-compaction run set stays live.
@@ -1154,7 +1325,7 @@ impl crate::storage::engine::StorageEngine for TieredStore {
         if i < self.shared.mem.shard_count() {
             return self.shared.mem.shard_records(i);
         }
-        let runs = self.shared.runs_snapshot();
+        let runs = self.shared.readable_runs();
         let mut disk: Vec<BookRecord> = Vec::new();
         // Best-effort on I/O error: exports see what was readable.
         let _ = self.shared.merge_live(&runs, &mut |r| disk.push(r));
@@ -1170,7 +1341,13 @@ impl crate::storage::engine::StorageEngine for TieredStore {
     }
 
     fn stats_suffix(&self) -> String {
-        self.shared.metrics.stats_suffix()
+        let mut s = self.shared.metrics.stats_suffix();
+        s.push_str(&self.shared.health.stats_suffix());
+        s
+    }
+
+    fn health_metrics(&self) -> Option<&HealthMetrics> {
+        Some(&self.shared.health)
     }
 
     fn reset_stats_epoch(&self) {
@@ -1178,6 +1355,7 @@ impl crate::storage::engine::StorageEngine for TieredStore {
         rs.retries.reset();
         rs.fallbacks.reset();
         self.shared.metrics.reset_epoch_counters();
+        self.shared.health.reset_epoch_counters();
     }
 }
 
@@ -1454,6 +1632,136 @@ mod tests {
             std::thread::sleep(Duration::from_millis(20));
         }
         assert!(store.tiered_metrics().compactions.get() >= 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unreadable_run_is_quarantined_and_older_versions_serve() {
+        let dir = tdir("quarantine");
+        let store = TieredStore::open_clean(&dir, opts(10_000)).unwrap();
+        for k in 1..=100u64 {
+            StorageEngine::insert(&store, BookRecord::new(k, 1, 1));
+        }
+        store.flush().unwrap();
+        // Promote every key (new version in mem) and spill again: newer
+        // runs now shadow the originals.
+        for k in 1..=100u64 {
+            assert!(StorageEngine::apply(&store, &up(k, 2, 2)));
+        }
+        store.flush().unwrap();
+        // Truncate the newest run behind the store's back: its record
+        // region becomes unreadable (I/O error, not a CRC skip). Cache
+        // misses on it must quarantine the run and fall through to the
+        // older (stale but valid) version instead of failing the GET.
+        let newest = store.shared.runs_snapshot()[0].clone();
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&newest.path)
+            .unwrap()
+            .set_len(RUN_HEADER_BYTES)
+            .unwrap();
+        let mut stale = 0u64;
+        for k in 1..=100u64 {
+            let r = StorageEngine::get(&store, k).unwrap_or_else(|| panic!("lost key {k}"));
+            assert!(r.price_cents == 1 || r.price_cents == 2, "key {k} must stay valid");
+            if r.price_cents == 1 {
+                stale += 1;
+            }
+        }
+        assert!(stale > 0, "keys in the truncated run must fall back to the old version");
+        assert!(newest.quarantined.load(Ordering::Relaxed));
+        assert_eq!(store.tiered_metrics().quarantined.get(), 1);
+        assert!(store.health().tier_errors.get() >= 1);
+        assert!(newest.path.exists(), "quarantine must never delete the file");
+        // Second pass never re-probes the quarantined run.
+        let errs = store.tiered_metrics().disk_errors.get();
+        for k in 1..=100u64 {
+            StorageEngine::get(&store, k);
+        }
+        assert_eq!(store.tiered_metrics().disk_errors.get(), errs, "quarantined run re-probed");
+        // Compaction merges the readable runs, keeps the quarantined one
+        // listed and on disk, and answers reads identically.
+        assert!(store.compact_now().unwrap());
+        assert!(newest.path.exists(), "compaction must not unlink a quarantined run");
+        let listed = read_runs_manifest(&dir).unwrap().1;
+        let qname = newest.path.file_name().unwrap().to_string_lossy().into_owned();
+        assert!(listed.contains(&qname), "quarantined run must stay in the manifest");
+        for k in 1..=100u64 {
+            let r = StorageEngine::get(&store, k).unwrap_or_else(|| panic!("lost key {k}"));
+            assert!(r.price_cents == 1 || r.price_cents == 2, "key {k} post-compaction");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn spill_failure_enters_and_exits_degraded_mode() {
+        let dir = tdir("degraded");
+        let store = TieredStore::open_clean(&dir, opts(50)).unwrap();
+        for k in 1..=40u64 {
+            StorageEngine::insert(&store, BookRecord::new(k, 7, 7));
+        }
+        assert_eq!(store.health().health_line(), "ok");
+        // Yank the tier directory: the next over-budget spill fails at
+        // `File::create` — same degradation path as a full disk.
+        std::fs::remove_dir_all(&dir).unwrap();
+        for k in 41..=200u64 {
+            StorageEngine::insert(&store, BookRecord::new(k, 7, 7));
+        }
+        assert_eq!(store.health().tier_spill_stopped.get(), 1);
+        assert!(store.health().tier_errors.get() >= 1);
+        assert_eq!(store.health().health_line(), "degraded: tier-spill-stopped");
+        // Degraded, not dead: reads and mutations keep working against
+        // the resident set.
+        assert_eq!(StorageEngine::get(&store, 10).unwrap().price_cents, 7);
+        assert!(StorageEngine::apply(&store, &up(10, 99, 9)));
+        assert_eq!(StorageEngine::get(&store, 10).unwrap().price_cents, 99);
+        // Disk comes back; after the retry window the next mutation's
+        // spill succeeds and clears the flag.
+        std::fs::create_dir_all(&dir).unwrap();
+        std::thread::sleep(Duration::from_millis(SPILL_RETRY_MS + 100));
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            StorageEngine::insert(&store, BookRecord::new(100_000, 1, 1));
+            if store.health().tier_spill_stopped.get() == 0 {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "degraded mode never cleared");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        assert_eq!(store.health().health_line(), "ok");
+        assert!(store.run_count() > 0, "recovered spill must publish a run");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_runs_manifest_rebuilds_from_directory_scan() {
+        let dir = tdir("torn_manifest");
+        {
+            let store = TieredStore::open_clean(&dir, opts(10_000)).unwrap();
+            for k in 1..=150u64 {
+                StorageEngine::insert(&store, BookRecord::new(k, 5 * k, 5));
+            }
+            store.flush().unwrap();
+            assert!(store.run_count() >= 1);
+        }
+        // Tear the manifest (half a JSON document): the run files are the
+        // data; the manifest is a hint and must be rebuilt, not trusted
+        // into wiping the tier.
+        let text = std::fs::read_to_string(dir.join(RUNS_MANIFEST)).unwrap();
+        std::fs::write(dir.join(RUNS_MANIFEST), &text.as_bytes()[..text.len() / 2]).unwrap();
+
+        let store = TieredStore::open(&dir, opts(10_000)).unwrap();
+        for k in 1..=150u64 {
+            assert_eq!(
+                StorageEngine::get(&store, k).unwrap().price_cents,
+                5 * k,
+                "key {k} must survive the torn manifest"
+            );
+        }
+        assert!(
+            read_runs_manifest(&dir).is_some(),
+            "manifest must be rewritten after the rebuild"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

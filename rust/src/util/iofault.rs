@@ -1,0 +1,497 @@
+//! Deterministic storage-fault injection for the `faultcheck` feature.
+//!
+//! Every persistent-I/O surface in the crate — the WAL
+//! (`durability::wal`), snapshots (`durability::snapshot`), manifest
+//! publishes (`durability::persist`), tier runs and `RUNS.json`
+//! (`storage::tiered`), and replication's disk reads and standby marker
+//! (`replication::{ship, apply}`) — threads its file operations through
+//! the thin wrappers here instead of calling `std::fs`/`std::io`
+//! directly. Default builds compile each wrapper to an
+//! `#[inline(always)]` passthrough: same syscalls, same bytes, zero
+//! cost. Building with `--features faultcheck` arms the shim: every
+//! operation bumps a per-surface ordinal counter, and a fault plan can
+//! demand that the Nth operation on a surface fail in a specific way —
+//! the same deterministic-ordinal design as `racecheck` perturbation
+//! points (PR 7) and `MEMBIG_REPL_FAULTS` (PR 9), extended with a
+//! surface key.
+//!
+//! Plan grammar (`MEMBIG_IO_FAULTS` or [`IoFaultPlan::from_spec`]):
+//!
+//! ```text
+//! KIND@SURFACE:ORDINAL[,KIND@SURFACE:ORDINAL...]
+//! e.g. MEMBIG_IO_FAULTS="enospc@wal:12,eio@run-read:3,shortwrite@snap:1,torn@manifest:2"
+//! ```
+//!
+//! Fault kinds and their semantics per operation shape:
+//!
+//! | kind        | write ops                              | read/fsync/rename/open       |
+//! |-------------|----------------------------------------|------------------------------|
+//! | `enospc`    | fail with `ENOSPC`, nothing written    | fail with `ENOSPC`           |
+//! | `eio`       | fail with `EIO`, nothing written       | fail with `EIO`              |
+//! | `shortwrite`| write half the buffer, then **fail**   | fail with `EIO`              |
+//! | `fsyncfail` | fail with `EIO`                        | fail with `EIO`              |
+//! | `torn`      | write half the buffer, report **Ok**   | fail with `EIO`              |
+//!
+//! `shortwrite` exercises the caller's *error-handling* path with
+//! partial bytes on disk; `torn` exercises the *validation* path —
+//! the caller believes the write succeeded, so only checksums, record
+//! counts and length checks stand between the torn file and recovery.
+//!
+//! Ordinals are 1-based and count every shim operation on a surface
+//! since the plan was last (re)armed, in program order — so a fault at
+//! ordinal N is exactly reproducible. Surfaces currently wired:
+//! `wal`, `snap`, `manifest`, `run-write`, `run-read`, `runs`,
+//! `ship`, `marker`.
+
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Raw `errno` for "no space left on device" (same value on Linux and
+/// the BSDs); used instead of `ErrorKind` so injected and real ENOSPC
+/// are indistinguishable to the degradation policy.
+const ENOSPC: i32 = 28;
+
+/// `true` when `e` is an out-of-disk-space failure — the trigger for
+/// degraded mode (stop spilling / back off snapshots) rather than the
+/// generic abort-this-operation handling.
+#[inline]
+pub fn is_enospc(e: &std::io::Error) -> bool {
+    e.raw_os_error() == Some(ENOSPC)
+}
+
+#[cfg(not(feature = "faultcheck"))]
+mod passthrough {
+    use super::*;
+
+    /// Default build: `MEMBIG_IO_FAULTS` is not consulted (the caller
+    /// warns if it is set so a fault drill never silently no-ops).
+    #[inline(always)]
+    pub fn init_from_env() -> Result<(), String> {
+        Ok(())
+    }
+
+    /// Total faults injected so far — always zero without the feature.
+    #[inline(always)]
+    pub fn injected() -> u64 {
+        0
+    }
+
+    /// Fault gate with no associated data transfer (opens, metadata,
+    /// whole-file reads done by the caller). Passthrough: always `Ok`.
+    #[inline(always)]
+    pub fn fail_point(_surface: &'static str) -> std::io::Result<()> {
+        Ok(())
+    }
+
+    #[inline(always)]
+    pub fn write_all<W: Write>(
+        _surface: &'static str,
+        w: &mut W,
+        buf: &[u8],
+    ) -> std::io::Result<()> {
+        w.write_all(buf)
+    }
+
+    #[inline(always)]
+    pub fn write_all_at(
+        _surface: &'static str,
+        f: &File,
+        buf: &[u8],
+        offset: u64,
+    ) -> std::io::Result<()> {
+        use std::os::unix::fs::FileExt;
+        f.write_all_at(buf, offset)
+    }
+
+    #[inline(always)]
+    pub fn read_exact<R: Read>(
+        _surface: &'static str,
+        r: &mut R,
+        buf: &mut [u8],
+    ) -> std::io::Result<()> {
+        r.read_exact(buf)
+    }
+
+    #[inline(always)]
+    pub fn sync_data(_surface: &'static str, f: &File) -> std::io::Result<()> {
+        f.sync_data()
+    }
+
+    #[inline(always)]
+    pub fn rename(_surface: &'static str, from: &Path, to: &Path) -> std::io::Result<()> {
+        std::fs::rename(from, to)
+    }
+
+    #[inline(always)]
+    pub fn write_file(
+        _surface: &'static str,
+        path: &Path,
+        contents: &[u8],
+    ) -> std::io::Result<()> {
+        std::fs::write(path, contents)
+    }
+
+    #[inline(always)]
+    pub fn read_file(_surface: &'static str, path: &Path) -> std::io::Result<Vec<u8>> {
+        std::fs::read(path)
+    }
+}
+
+#[cfg(not(feature = "faultcheck"))]
+pub use passthrough::{
+    fail_point, init_from_env, injected, read_exact, read_file, rename, sync_data, write_all,
+    write_all_at, write_file,
+};
+
+#[cfg(feature = "faultcheck")]
+pub use imp::{
+    arm, disarm, fail_point, init_from_env, injected, op_count, read_exact, read_file, rename,
+    sync_data, test_guard, write_all, write_all_at, write_file, IoFaultKind, IoFaultPlan,
+};
+
+#[cfg(feature = "faultcheck")]
+mod imp {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    const EIO: i32 = 5;
+
+    /// One storage-fault class (see the module table for semantics).
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum IoFaultKind {
+        Enospc,
+        Eio,
+        ShortWrite,
+        FsyncFail,
+        Torn,
+    }
+
+    impl IoFaultKind {
+        fn parse(s: &str) -> Option<IoFaultKind> {
+            match s {
+                "enospc" => Some(IoFaultKind::Enospc),
+                "eio" => Some(IoFaultKind::Eio),
+                "shortwrite" => Some(IoFaultKind::ShortWrite),
+                "fsyncfail" => Some(IoFaultKind::FsyncFail),
+                "torn" => Some(IoFaultKind::Torn),
+                _ => None,
+            }
+        }
+    }
+
+    /// A parsed `MEMBIG_IO_FAULTS` plan: faults keyed by
+    /// `(surface, ordinal)`. Malformed specs are a hard error — a
+    /// silently dropped fault would make the sweep vacuous.
+    #[derive(Debug, Clone, Default)]
+    pub struct IoFaultPlan {
+        at: Vec<(String, u64, IoFaultKind)>,
+    }
+
+    impl IoFaultPlan {
+        /// Parse `KIND@SURFACE:ORDINAL[,...]`. Empty spec = empty plan.
+        pub fn from_spec(spec: &str) -> Result<IoFaultPlan, String> {
+            let mut at = Vec::new();
+            for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+                let (kind_s, rest) = part
+                    .split_once('@')
+                    .ok_or_else(|| format!("io fault `{part}`: expected KIND@SURFACE:ORDINAL"))?;
+                let kind = IoFaultKind::parse(kind_s).ok_or_else(|| {
+                    format!(
+                        "io fault `{part}`: unknown kind `{kind_s}` \
+                         (enospc|eio|shortwrite|fsyncfail|torn)"
+                    )
+                })?;
+                let (surface, ord_s) = rest
+                    .split_once(':')
+                    .ok_or_else(|| format!("io fault `{part}`: expected KIND@SURFACE:ORDINAL"))?;
+                if surface.is_empty() {
+                    return Err(format!("io fault `{part}`: empty surface"));
+                }
+                let ordinal: u64 = ord_s
+                    .parse()
+                    .map_err(|_| format!("io fault `{part}`: bad ordinal `{ord_s}`"))?;
+                if ordinal == 0 {
+                    return Err(format!("io fault `{part}`: ordinals are 1-based"));
+                }
+                at.push((surface.to_string(), ordinal, kind));
+            }
+            Ok(IoFaultPlan { at })
+        }
+
+        /// Convenience for tests: a plan with one fault.
+        pub fn single(kind: IoFaultKind, surface: &str, ordinal: u64) -> IoFaultPlan {
+            IoFaultPlan { at: vec![(surface.to_string(), ordinal, kind)] }
+        }
+
+        pub fn is_empty(&self) -> bool {
+            self.at.is_empty()
+        }
+
+        fn at(&self, surface: &str, ordinal: u64) -> Option<IoFaultKind> {
+            self.at
+                .iter()
+                .find(|(s, n, _)| *n == ordinal && s == surface)
+                .map(|&(_, _, k)| k)
+        }
+    }
+
+    struct State {
+        plan: IoFaultPlan,
+        /// Per-surface operation counters since the last (re)arm.
+        counters: Vec<(&'static str, u64)>,
+    }
+
+    fn state() -> &'static Mutex<State> {
+        static STATE: OnceLock<Mutex<State>> = OnceLock::new();
+        STATE.get_or_init(|| {
+            Mutex::new(State { plan: IoFaultPlan::default(), counters: Vec::new() })
+        })
+    }
+
+    /// Total faults injected since process start (all surfaces); the
+    /// `health_io_faults_injected` stat reads this.
+    static INJECTED: AtomicU64 = AtomicU64::new(0);
+
+    /// Install `plan` and zero every surface's ordinal counter, so the
+    /// next shim operation on each surface is ordinal 1.
+    pub fn arm(plan: IoFaultPlan) {
+        let mut st = state().lock().unwrap_or_else(|e| e.into_inner());
+        st.plan = plan;
+        st.counters.clear();
+    }
+
+    /// Remove the plan and zero the counters (counting continues —
+    /// [`op_count`] after a clean run measures a surface's op total).
+    pub fn disarm() {
+        arm(IoFaultPlan::default());
+    }
+
+    /// Parse `MEMBIG_IO_FAULTS` and arm the shim; unset = no plan.
+    pub fn init_from_env() -> Result<(), String> {
+        match std::env::var("MEMBIG_IO_FAULTS") {
+            Ok(spec) => {
+                let plan = IoFaultPlan::from_spec(&spec)?;
+                arm(plan);
+                Ok(())
+            }
+            Err(_) => Ok(()),
+        }
+    }
+
+    /// Operations seen on `surface` since the last (re)arm.
+    pub fn op_count(surface: &str) -> u64 {
+        let st = state().lock().unwrap_or_else(|e| e.into_inner());
+        st.counters.iter().find(|(s, _)| *s == surface).map(|&(_, n)| n).unwrap_or(0)
+    }
+
+    /// Total faults injected since process start.
+    pub fn injected() -> u64 {
+        INJECTED.load(Ordering::Relaxed)
+    }
+
+    /// The plan and counters are process-wide and `cargo test` runs
+    /// tests in parallel: every test that arms a plan must hold this
+    /// guard for its whole body (same discipline as
+    /// `racecheck::hook_tests_guard`).
+    pub fn test_guard() -> MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Bump `surface`'s ordinal; return the fault demanded at it, if any.
+    fn check(surface: &'static str) -> Option<IoFaultKind> {
+        let mut st = state().lock().unwrap_or_else(|e| e.into_inner());
+        let ordinal = match st.counters.iter_mut().find(|(s, _)| *s == surface) {
+            Some((_, n)) => {
+                *n += 1;
+                *n
+            }
+            None => {
+                st.counters.push((surface, 1));
+                1
+            }
+        };
+        let hit = st.plan.at(surface, ordinal);
+        if hit.is_some() {
+            INJECTED.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    fn enospc() -> std::io::Error {
+        std::io::Error::from_raw_os_error(ENOSPC)
+    }
+
+    fn eio() -> std::io::Error {
+        std::io::Error::from_raw_os_error(EIO)
+    }
+
+    pub fn fail_point(surface: &'static str) -> std::io::Result<()> {
+        match check(surface) {
+            None => Ok(()),
+            Some(IoFaultKind::Enospc) => Err(enospc()),
+            Some(_) => Err(eio()),
+        }
+    }
+
+    pub fn write_all<W: Write>(
+        surface: &'static str,
+        w: &mut W,
+        buf: &[u8],
+    ) -> std::io::Result<()> {
+        match check(surface) {
+            None => w.write_all(buf),
+            Some(IoFaultKind::Enospc) => Err(enospc()),
+            Some(IoFaultKind::Eio) | Some(IoFaultKind::FsyncFail) => Err(eio()),
+            Some(IoFaultKind::ShortWrite) => {
+                w.write_all(&buf[..buf.len() / 2])?;
+                Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "injected short write",
+                ))
+            }
+            // Torn: half the bytes land, the caller is told everything
+            // did — only validation on the read side can catch it.
+            Some(IoFaultKind::Torn) => w.write_all(&buf[..buf.len() / 2]),
+        }
+    }
+
+    pub fn write_all_at(
+        surface: &'static str,
+        f: &File,
+        buf: &[u8],
+        offset: u64,
+    ) -> std::io::Result<()> {
+        use std::os::unix::fs::FileExt;
+        match check(surface) {
+            None => f.write_all_at(buf, offset),
+            Some(IoFaultKind::Enospc) => Err(enospc()),
+            Some(IoFaultKind::Eio) | Some(IoFaultKind::FsyncFail) => Err(eio()),
+            Some(IoFaultKind::ShortWrite) => {
+                f.write_all_at(&buf[..buf.len() / 2], offset)?;
+                Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "injected short write",
+                ))
+            }
+            Some(IoFaultKind::Torn) => f.write_all_at(&buf[..buf.len() / 2], offset),
+        }
+    }
+
+    pub fn read_exact<R: Read>(
+        surface: &'static str,
+        r: &mut R,
+        buf: &mut [u8],
+    ) -> std::io::Result<()> {
+        match check(surface) {
+            None => r.read_exact(buf),
+            Some(IoFaultKind::Enospc) => Err(enospc()),
+            Some(_) => Err(eio()),
+        }
+    }
+
+    pub fn sync_data(surface: &'static str, f: &File) -> std::io::Result<()> {
+        match check(surface) {
+            None => f.sync_data(),
+            Some(IoFaultKind::Enospc) => Err(enospc()),
+            Some(_) => Err(eio()),
+        }
+    }
+
+    pub fn rename(surface: &'static str, from: &Path, to: &Path) -> std::io::Result<()> {
+        match check(surface) {
+            None => std::fs::rename(from, to),
+            Some(IoFaultKind::Enospc) => Err(enospc()),
+            Some(_) => Err(eio()),
+        }
+    }
+
+    pub fn write_file(
+        surface: &'static str,
+        path: &Path,
+        contents: &[u8],
+    ) -> std::io::Result<()> {
+        match check(surface) {
+            None => std::fs::write(path, contents),
+            Some(IoFaultKind::Enospc) => Err(enospc()),
+            Some(IoFaultKind::Eio) | Some(IoFaultKind::FsyncFail) => Err(eio()),
+            Some(IoFaultKind::ShortWrite) => {
+                std::fs::write(path, &contents[..contents.len() / 2])?;
+                Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "injected short write",
+                ))
+            }
+            Some(IoFaultKind::Torn) => std::fs::write(path, &contents[..contents.len() / 2]),
+        }
+    }
+
+    pub fn read_file(surface: &'static str, path: &Path) -> std::io::Result<Vec<u8>> {
+        match check(surface) {
+            None => std::fs::read(path),
+            Some(IoFaultKind::Enospc) => Err(enospc()),
+            Some(_) => Err(eio()),
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn spec_grammar_roundtrip_and_errors() {
+            let _serial = test_guard();
+            let p = IoFaultPlan::from_spec(
+                "enospc@wal:12, eio@run-read:3,shortwrite@snap:1,fsyncfail@wal:5,torn@manifest:2",
+            )
+            .unwrap();
+            assert_eq!(p.at("wal", 12), Some(IoFaultKind::Enospc));
+            assert_eq!(p.at("wal", 5), Some(IoFaultKind::FsyncFail));
+            assert_eq!(p.at("run-read", 3), Some(IoFaultKind::Eio));
+            assert_eq!(p.at("snap", 1), Some(IoFaultKind::ShortWrite));
+            assert_eq!(p.at("manifest", 2), Some(IoFaultKind::Torn));
+            assert_eq!(p.at("wal", 11), None);
+            assert_eq!(p.at("runs", 12), None);
+            assert!(IoFaultPlan::from_spec("").unwrap().is_empty());
+            for bad in ["enospc", "enospc@wal", "zap@wal:1", "eio@wal:x", "eio@wal:0", "eio@:1"] {
+                assert!(IoFaultPlan::from_spec(bad).is_err(), "{bad} must not parse");
+            }
+        }
+
+        #[test]
+        fn ordinals_are_per_surface_and_deterministic() {
+            let _serial = test_guard();
+            arm(IoFaultPlan::from_spec("eio@a-surface:2,enospc@b-surface:1").unwrap());
+            let before = injected();
+            let mut sink = Vec::new();
+            assert!(write_all("a-surface", &mut sink, b"one").is_ok());
+            assert!(fail_point("b-surface").is_err(), "b ordinal 1 faults");
+            let err = write_all("a-surface", &mut sink, b"two").unwrap_err();
+            assert_eq!(err.raw_os_error(), Some(5), "a ordinal 2 is EIO");
+            assert!(write_all("a-surface", &mut sink, b"three").is_ok(), "one-shot");
+            assert_eq!(sink, b"onethree".to_vec());
+            assert_eq!(injected(), before + 2);
+            assert_eq!(op_count("a-surface"), 3);
+            assert_eq!(op_count("b-surface"), 1);
+            disarm();
+        }
+
+        #[test]
+        fn shortwrite_and_torn_leave_half_the_bytes() {
+            let _serial = test_guard();
+            arm(IoFaultPlan::from_spec("shortwrite@half:1,torn@half:2").unwrap());
+            let mut sink = Vec::new();
+            let e = write_all("half", &mut sink, b"abcdef").unwrap_err();
+            assert_eq!(e.kind(), std::io::ErrorKind::WriteZero);
+            assert_eq!(sink, b"abc".to_vec(), "short write left a prefix");
+            sink.clear();
+            assert!(write_all("half", &mut sink, b"abcdef").is_ok(), "torn reports Ok");
+            assert_eq!(sink, b"abc".to_vec(), "torn also left only a prefix");
+            assert!(is_enospc(&super::enospc()));
+            assert!(!is_enospc(&super::eio()));
+            disarm();
+        }
+    }
+}

@@ -8,6 +8,7 @@
 pub mod bench;
 pub mod csv;
 pub mod fmt;
+pub mod iofault;
 pub mod json;
 pub mod prop;
 pub mod racecheck;

@@ -1,0 +1,478 @@
+//! Storage-fault ordinal sweep (DESIGN.md §16): for every persistent
+//! surface, inject each fault class at every operation ordinal of a fixed
+//! workload, recover, and assert the degradation contract — no acked
+//! write lost, no partial artifact published, fail-stop where durability
+//! was claimed, correct-value-or-nothing on reads, and a clean retry once
+//! the disk heals.
+//!
+//! Op totals per surface are *measured* (a clean run of the same workload
+//! under the counting shim), not hard-coded, so the sweep stays exhaustive
+//! when the I/O shape of a path changes.
+//!
+//! Empty without `--features faultcheck`: the shim compiles to a
+//! passthrough and nothing can be injected. Excluded under Miri (real
+//! files). The shim's plan and counters are process-wide, so every test
+//! serializes on `iofault::test_guard()`.
+
+#![cfg(all(feature = "faultcheck", not(miri)))]
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use membig::durability::{write_snapshot, DurabilityOptions, Persistence};
+use membig::memstore::ShardedStore;
+use membig::storage::{StorageEngine, TieredOptions, TieredStore};
+use membig::util::iofault::{self, IoFaultKind, IoFaultPlan};
+use membig::workload::record::{BookRecord, StockUpdate};
+
+const KINDS: [IoFaultKind; 5] = [
+    IoFaultKind::Enospc,
+    IoFaultKind::Eio,
+    IoFaultKind::ShortWrite,
+    IoFaultKind::FsyncFail,
+    IoFaultKind::Torn,
+];
+
+/// Keys `1..=KEYS` are seeded at `(100, 1)`; the durability workload
+/// re-prices key `k` to `(1_000 + k, 7)`. Distinct keys, so any applied
+/// subset is directly observable in the recovered store.
+const KEYS: u64 = 6;
+
+fn case_dir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    let d = std::env::temp_dir().join(format!("membig_fs_{tag}_{}_{n}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Every aborted publish removes its scratch file immediately and recovery
+/// sweeps the rest: a `*.tmp` that survives either is a leak.
+fn no_tmp_orphans(dir: &Path, ctx: &str) {
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let name = entry.unwrap().file_name().to_string_lossy().into_owned();
+        assert!(!name.ends_with(".tmp"), "orphaned `{name}` after {ctx}");
+    }
+}
+
+/// Real fsyncs, no background snapshotter: every shim op during the sweep
+/// belongs to the workload, so ordinals are deterministic.
+fn opts() -> DurabilityOptions {
+    DurabilityOptions { fsync: true, snapshot_every: Duration::ZERO, snapshot_wal_bytes: 0 }
+}
+
+fn upd(k: u64) -> StockUpdate {
+    StockUpdate { isbn13: k, new_price_cents: 1_000 + k, new_quantity: 7 }
+}
+
+fn open_seeded(dir: &Path) -> (Arc<ShardedStore>, Persistence) {
+    let (store, persist, _rep) = Persistence::open(dir, opts(), 2, || {
+        let s = ShardedStore::new(2, 64);
+        for k in 1..=KEYS {
+            s.insert(BookRecord::new(k, 100, 1));
+        }
+        Ok(Arc::new(s))
+    })
+    .expect("seed open");
+    (store, persist)
+}
+
+fn reopen(dir: &Path) -> (Arc<ShardedStore>, Persistence) {
+    let (store, persist, _rep) =
+        Persistence::open(dir, opts(), 2, || Err("seed must not run on reopen".into()))
+            .expect("recovery open");
+    (store, persist)
+}
+
+/// `true` = re-priced by the workload, `false` = still the seed value.
+/// Anything else — missing key or a value neither write produced — is a
+/// torn/garbage read and fails the sweep on the spot.
+fn key_state(store: &ShardedStore, k: u64, ctx: &str) -> bool {
+    let r = store.get(k).unwrap_or_else(|| panic!("{ctx}: key {k} vanished"));
+    if r.price_cents == 1_000 + k && r.quantity == 7 {
+        true
+    } else if r.price_cents == 100 && r.quantity == 1 {
+        false
+    } else {
+        panic!("{ctx}: key {k} reads garbage ({}, {})", r.price_cents, r.quantity)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// WAL
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wal_sweep_no_acked_write_lost_and_errs_change_nothing() {
+    let _serial = iofault::test_guard();
+    // Measure the apply phase's op total on the wal surface.
+    let total = {
+        let dir = case_dir("wal_measure");
+        let (_store, persist) = open_seeded(&dir);
+        iofault::disarm(); // zero the counters: the apply phase starts at ordinal 1
+        for k in 1..=KEYS {
+            persist.apply_update(&upd(k), true).unwrap();
+        }
+        let n = iofault::op_count("wal");
+        drop(persist);
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(n >= KEYS, "wal surface saw only {n} ops for {KEYS} synced appends");
+        n
+    };
+
+    for kind in KINDS {
+        for ord in 1..=total {
+            let ctx = format!("{kind:?}@wal:{ord}");
+            let dir = case_dir("wal_sweep");
+            let (_store, persist) = open_seeded(&dir);
+            iofault::arm(IoFaultPlan::single(kind, "wal", ord));
+            let acked: Vec<bool> =
+                (1..=KEYS).map(|k| persist.apply_update(&upd(k), true).is_ok()).collect();
+            drop(persist);
+            iofault::disarm();
+
+            let (store, persist) = reopen(&dir);
+            no_tmp_orphans(&dir, &ctx);
+            let state: Vec<bool> = (1..=KEYS).map(|k| key_state(&store, k, &ctx)).collect();
+            if kind == IoFaultKind::Torn {
+                // A torn append is acknowledged by design (the disk lied,
+                // nothing in-process can know). The pinned invariant is
+                // that replay still yields a clean prefix — the CRC stops
+                // it at the half-frame; never garbage, never a gap.
+                for w in state.windows(2) {
+                    assert!(w[0] || !w[1], "{ctx}: applied set is not a prefix: {state:?}");
+                }
+            } else {
+                for (i, (&a, &s)) in acked.iter().zip(&state).enumerate() {
+                    if a {
+                        assert!(s, "{ctx}: acked update {} lost in recovery", i + 1);
+                    }
+                    // An ERR followed by a later OK means the segment was
+                    // repaired in place — the failed frame must have been
+                    // rolled back whole, not half-applied. (After a failed
+                    // *fsync* there is no later OK: the WAL fail-stops.)
+                    if !a && acked[i + 1..].iter().any(|&x| x) {
+                        assert!(!s, "{ctx}: ERR'd update {} resurrected by replay", i + 1);
+                    }
+                }
+            }
+            // The recovered log accepts and persists new writes.
+            persist.apply_update(&upd(1), true).expect("post-recovery append");
+            drop(persist);
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint: snapshot + manifest surfaces
+// ---------------------------------------------------------------------------
+
+#[test]
+fn checkpoint_sweep_never_publishes_a_partial_generation() {
+    let _serial = iofault::test_guard();
+    let (snap_total, manifest_total) = {
+        let dir = case_dir("ckpt_measure");
+        let (_store, persist) = open_seeded(&dir);
+        for k in 1..=KEYS {
+            persist.apply_update(&upd(k), true).unwrap();
+        }
+        iofault::disarm();
+        persist.checkpoint_now().expect("clean checkpoint");
+        let r = (iofault::op_count("snap"), iofault::op_count("manifest"));
+        drop(persist);
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(r.0 >= 3 && r.1 >= 1, "checkpoint op totals look wrong: {r:?}");
+        r
+    };
+
+    for (surface, total) in [("snap", snap_total), ("manifest", manifest_total)] {
+        for kind in KINDS {
+            for ord in 1..=total {
+                let ctx = format!("{kind:?}@{surface}:{ord} (checkpoint)");
+                let dir = case_dir("ckpt_sweep");
+                let (store, persist) = open_seeded(&dir);
+                for k in 1..=KEYS {
+                    persist.apply_update(&upd(k), true).unwrap();
+                }
+                iofault::arm(IoFaultPlan::single(kind, surface, ord));
+                let res = persist.checkpoint_now();
+                iofault::disarm();
+                if surface == "snap" {
+                    // Every snap fault must abort the checkpoint — including
+                    // a torn image that reported success, which only the
+                    // post-publish verification can catch. (A torn manifest
+                    // may pass: `read_manifest` treats it as a hint and the
+                    // generation scan recovers regardless.)
+                    assert!(res.is_err(), "{ctx}: checkpoint succeeded under an injected fault");
+                }
+                if res.is_err() {
+                    // Mutations keep flowing after a failed checkpoint:
+                    // durability comes from the longer WAL chain.
+                    persist.apply_update(&upd(1), true).unwrap_or_else(|e| {
+                        panic!("{ctx}: mutation blocked after a failed checkpoint: {e}")
+                    });
+                }
+                for k in 1..=KEYS {
+                    assert!(
+                        key_state(&store, k, &ctx),
+                        "{ctx}: live store lost an applied update"
+                    );
+                }
+                drop(persist);
+                let (store, persist) = reopen(&dir);
+                no_tmp_orphans(&dir, &ctx);
+                for k in 1..=KEYS {
+                    assert!(key_state(&store, k, &ctx), "{ctx}: recovery lost an acked write");
+                }
+                drop(persist);
+                std::fs::remove_dir_all(&dir).ok();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Standby rebase
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rebase_sweep_validates_before_touching_live_state() {
+    let _serial = iofault::test_guard();
+    // The incoming primary image: every key re-priced to (5_000 + k, 9).
+    let image: Vec<u8> = {
+        let s = ShardedStore::new(2, 64);
+        for k in 1..=KEYS {
+            s.insert(BookRecord::new(k, 5_000 + k, 9));
+        }
+        let dir = case_dir("rebase_image");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("image.snap");
+        write_snapshot(&s, &path).expect("image snapshot");
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        bytes
+    };
+    let rebased = |store: &ShardedStore, k: u64| -> bool {
+        store.get(k).is_some_and(|r| r.price_cents == 5_000 + k && r.quantity == 9)
+    };
+
+    let total = {
+        let dir = case_dir("rebase_measure");
+        let (_store, persist) = open_seeded(&dir);
+        iofault::disarm();
+        persist.rebase_to_snapshot(5, &image, 2).expect("clean rebase");
+        let n = iofault::op_count("snap");
+        drop(persist);
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(n >= 3, "rebase consumed only {n} snap ops");
+        n
+    };
+
+    for kind in KINDS {
+        for ord in 1..=total {
+            let ctx = format!("{kind:?}@snap:{ord} (rebase)");
+            let dir = case_dir("rebase_sweep");
+            let (store, persist) = open_seeded(&dir);
+            iofault::arm(IoFaultPlan::single(kind, "snap", ord));
+            let res = persist.rebase_to_snapshot(5, &image, 2);
+            iofault::disarm();
+            assert!(res.is_err(), "{ctx}: rebase succeeded under an injected fault");
+            // Validate-before-mutate: a failed publish — or a torn image
+            // that published "successfully" but cannot load — must leave
+            // the live store untouched and the bad generation unpublished.
+            for k in 1..=KEYS {
+                assert!(
+                    !key_state(&store, k, &ctx),
+                    "{ctx}: live store changed by a failed rebase"
+                );
+            }
+            assert!(
+                !dir.join("store-5.snap").exists(),
+                "{ctx}: an unloadable snapshot generation stayed published"
+            );
+            no_tmp_orphans(&dir, &ctx);
+            // A crash right now recovers the pre-rebase state.
+            drop(persist);
+            let (store, persist) = reopen(&dir);
+            for k in 1..=KEYS {
+                assert!(!key_state(&store, k, &ctx), "{ctx}: recovery picked up a bad rebase");
+            }
+            // The disk heals: the same rebase now goes through and sticks.
+            persist
+                .rebase_to_snapshot(5, &image, 2)
+                .unwrap_or_else(|e| panic!("{ctx}: healed retry failed: {e}"));
+            for k in 1..=KEYS {
+                assert!(rebased(&store, k), "{ctx}: healed rebase not visible live");
+            }
+            drop(persist);
+            let (store, persist) = reopen(&dir);
+            for k in 1..=KEYS {
+                assert!(rebased(&store, k), "{ctx}: healed rebase lost by recovery");
+            }
+            drop(persist);
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tier: spill (run-write + runs manifest) and read (run-read) surfaces
+// ---------------------------------------------------------------------------
+
+/// Keys `1..=TKEYS` at `(300 + k, 3)`, split across two shards; the budget
+/// is large so nothing spills until the explicit `flush`.
+const TKEYS: u64 = 16;
+
+fn tier_opts() -> TieredOptions {
+    TieredOptions {
+        budget_bytes: 1 << 20,
+        shards: 2,
+        capacity_hint: 64,
+        cache_blocks: 8,
+        compact_at: 0,
+    }
+}
+
+fn fill_tier(t: &TieredStore) {
+    for k in 1..=TKEYS {
+        t.insert(BookRecord::new(k, 300 + k, 3));
+    }
+}
+
+fn tier_rec(k: u64) -> BookRecord {
+    BookRecord::new(k, 300 + k, 3)
+}
+
+#[test]
+fn tier_spill_sweep_publishes_all_or_nothing() {
+    let _serial = iofault::test_guard();
+    let (write_total, manifest_total) = {
+        let dir = case_dir("tier_measure");
+        let t = TieredStore::open_clean(&dir, tier_opts()).unwrap();
+        fill_tier(&t);
+        iofault::disarm();
+        t.flush().expect("clean flush");
+        let r = (iofault::op_count("run-write"), iofault::op_count("runs"));
+        drop(t);
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(r.0 >= 2 && r.1 >= 2, "flush op totals look wrong: {r:?}");
+        r
+    };
+
+    for (surface, total) in [("run-write", write_total), ("runs", manifest_total)] {
+        for kind in KINDS {
+            for ord in 1..=total {
+                let ctx = format!("{kind:?}@{surface}:{ord} (spill)");
+                let dir = case_dir("tier_sweep");
+                let t = TieredStore::open_clean(&dir, tier_opts()).unwrap();
+                fill_tier(&t);
+                iofault::arm(IoFaultPlan::single(kind, surface, ord));
+                let res = t.flush();
+                iofault::disarm();
+                if surface == "run-write" {
+                    // Every run-write fault must abort the spill — a torn
+                    // run that reported success has to fail the post-publish
+                    // validation before the manifest ever lists it. (A torn
+                    // RUNS.json may pass: it is a hint, rebuilt by scan.)
+                    assert!(res.is_err(), "{ctx}: flush succeeded under an injected fault");
+                }
+                // The live tier still serves every record — an aborted spill
+                // left them resident, a completed one reads them back.
+                for k in 1..=TKEYS {
+                    assert_eq!(t.get(k), Some(tier_rec(k)), "{ctx}: live read wrong");
+                }
+                drop(t);
+                // Restart: records that were only resident are gone (the
+                // tier is the volatile side of the config), but whatever it
+                // serves must be a value that was actually written, and a
+                // half-published run or manifest must not wedge the open.
+                let t = TieredStore::open(&dir, tier_opts())
+                    .unwrap_or_else(|e| panic!("{ctx}: reopen failed: {e}"));
+                no_tmp_orphans(&dir, &ctx);
+                for k in 1..=TKEYS {
+                    if let Some(r) = t.get(k) {
+                        assert_eq!(r, tier_rec(k), "{ctx}: reopened tier returned a wrong value");
+                    }
+                }
+                drop(t);
+                std::fs::remove_dir_all(&dir).ok();
+            }
+        }
+    }
+}
+
+#[test]
+fn tier_read_fault_sweep_quarantines_instead_of_lying() {
+    let _serial = iofault::test_guard();
+    // Measure: open over the two flushed runs (validation reads), then a
+    // cold-cache sweep of every key (block reads).
+    let (open_ops, read_total) = {
+        let dir = case_dir("tread_measure");
+        let t = TieredStore::open_clean(&dir, tier_opts()).unwrap();
+        fill_tier(&t);
+        t.flush().expect("clean flush");
+        drop(t);
+        iofault::disarm();
+        let t = TieredStore::open(&dir, tier_opts()).unwrap();
+        let opened = iofault::op_count("run-read");
+        for k in 1..=TKEYS {
+            assert_eq!(t.get(k), Some(tier_rec(k)));
+        }
+        let n = iofault::op_count("run-read");
+        drop(t);
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(opened >= 1 && n > opened, "read op totals look wrong: open={opened} total={n}");
+        (opened, n)
+    };
+
+    for kind in KINDS {
+        for ord in 1..=read_total {
+            let ctx = format!("{kind:?}@run-read:{ord}");
+            let dir = case_dir("tread_sweep");
+            let t = TieredStore::open_clean(&dir, tier_opts()).unwrap();
+            fill_tier(&t);
+            t.flush().expect("clean flush");
+            drop(t);
+            iofault::arm(IoFaultPlan::single(kind, "run-read", ord));
+            match TieredStore::open(&dir, tier_opts()) {
+                Err(_) => {
+                    // Fail-loud at open: a listed run that cannot be
+                    // validated refuses the whole store rather than
+                    // silently dropping its records.
+                    assert!(ord <= open_ops, "{ctx}: open failed on a get-phase ordinal");
+                }
+                Ok(t) => {
+                    assert!(ord > open_ops, "{ctx}: open-phase fault did not fail the open");
+                    // The faulted block read must quarantine its run and
+                    // serve nothing from it — correct value or None, never
+                    // a lie; later reads must not re-probe it.
+                    for k in 1..=TKEYS {
+                        if let Some(r) = t.get(k) {
+                            assert_eq!(r, tier_rec(k), "{ctx}: faulted read returned a wrong value");
+                        }
+                    }
+                    assert_eq!(
+                        t.tiered_metrics().quarantined.get(),
+                        1,
+                        "{ctx}: read fault did not quarantine exactly one run"
+                    );
+                    assert_eq!(t.health().tier_errors.get(), 1, "{ctx}: tier_errors not counted");
+                    drop(t);
+                }
+            }
+            iofault::disarm();
+            // Quarantine never deletes the file and open-time failures are
+            // transient here: a healed restart serves everything again.
+            let t = TieredStore::open(&dir, tier_opts())
+                .unwrap_or_else(|e| panic!("{ctx}: healed reopen failed: {e}"));
+            for k in 1..=TKEYS {
+                assert_eq!(t.get(k), Some(tier_rec(k)), "{ctx}: healed reopen lost a record");
+            }
+            drop(t);
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}

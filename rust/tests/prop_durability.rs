@@ -206,6 +206,119 @@ fn prop_rotated_wal_truncated_anywhere_recovers_prefix_consistent_store() {
         });
 }
 
+/// fsyncgate fail-stop (DESIGN.md §16): after an injected fsync failure,
+/// no subsequent mutation is acked until restart — the kernel may have
+/// dropped dirty pages while marking them clean, so nothing in-process can
+/// re-establish what is durable. Restart recovers exactly the acked
+/// prefix, plus at most the one in-flight frame whose write reached the
+/// kernel before its sync was refused (that write was ERR'd, so either
+/// outcome is correct; acking it would be the bug).
+#[cfg(feature = "faultcheck")]
+#[test]
+fn prop_fsync_failure_is_fail_stop_until_restart() {
+    use membig::util::iofault::{self, IoFaultKind, IoFaultPlan};
+
+    // The shim's plan and counters are process-wide: serialize with every
+    // other fault-arming test for the whole property.
+    let _serial = iofault::test_guard();
+    let opts = DurabilityOptions {
+        fsync: true,
+        snapshot_every: Duration::ZERO,
+        snapshot_wal_bytes: 0,
+    };
+
+    // Measure the wal ops of one synced single-update apply; the fsync is
+    // the last of them, so apply `t`'s sync sits at ordinal `t * per`.
+    let per = {
+        let dir = tdir().join("failstop_measure");
+        std::fs::remove_dir_all(&dir).ok();
+        let (_store, persist, _rep) = Persistence::open(&dir, opts.clone(), 2, || {
+            let s = ShardedStore::new(2, 64);
+            s.insert(BookRecord::new(1, 100, 1));
+            Ok(Arc::new(s))
+        })
+        .expect("measure open");
+        iofault::disarm();
+        persist
+            .apply_update(&StockUpdate { isbn13: 1, new_price_cents: 7, new_quantity: 7 }, true)
+            .unwrap();
+        let per = iofault::op_count("wal");
+        drop(persist);
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(per >= 2, "a synced apply must at least write and sync (saw {per} ops)");
+        per
+    };
+
+    Prop::new("fsync failure: nothing acked after the fault; restart keeps the acked prefix")
+        .cases(20)
+        .run(|rng| {
+            let dir = tdir().join(format!("failstop_{}", rng.next_u64()));
+            std::fs::remove_dir_all(&dir).ok();
+            let n = rng.range_usize(4, 24) as u64;
+            let t = rng.range_usize(1, n as usize + 1) as u64; // faulted apply
+            let (store, persist, _rep) = Persistence::open(&dir, opts.clone(), 2, || {
+                let s = ShardedStore::new(2, 64);
+                for k in 1..=n {
+                    s.insert(BookRecord::new(k, 100, 1));
+                }
+                Ok(Arc::new(s))
+            })
+            .map_err(|e| e.to_string())?;
+            iofault::arm(IoFaultPlan::single(IoFaultKind::FsyncFail, "wal", t * per));
+            for k in 1..=n {
+                let res = persist.apply_update(
+                    &StockUpdate { isbn13: k, new_price_cents: 1_000 + k, new_quantity: 7 },
+                    true,
+                );
+                prop_assert!(
+                    res.is_ok() == (k < t),
+                    "apply {} with the fault at {}: got {:?}",
+                    k,
+                    t,
+                    res.map(|_| ())
+                );
+            }
+            prop_assert_eq!(persist.health().wal_failstop.get(), 1);
+            drop(persist);
+            iofault::disarm();
+
+            // The live store never applied the refused mutations either.
+            for k in t + 1..=n {
+                prop_assert_eq!(store.get(k).map(|r| r.price_cents), Some(100));
+            }
+
+            let (store, persist, _rep) =
+                Persistence::open(&dir, opts.clone(), 2, || Err("seed must not run".into()))
+                    .map_err(|e| e.to_string())?;
+            for k in 1..=n {
+                let got = store.get(k).ok_or_else(|| format!("key {k} missing"))?;
+                if k < t {
+                    prop_assert!(got.price_cents == 1_000 + k, "acked write {} lost", k);
+                } else if k == t {
+                    prop_assert!(
+                        got.price_cents == 1_000 + k || got.price_cents == 100,
+                        "in-flight write {} recovered as garbage ({})",
+                        k,
+                        got.price_cents
+                    );
+                } else {
+                    prop_assert!(got.price_cents == 100, "refused write {} acked by replay", k);
+                }
+            }
+            // Restart cleared the fail-stop; writes flow again.
+            prop_assert_eq!(persist.health().wal_failstop.get(), 0);
+            persist
+                .apply_update(
+                    &StockUpdate { isbn13: 1, new_price_cents: 9_999, new_quantity: 1 },
+                    true,
+                )
+                .map_err(|e| e.to_string())?;
+            drop(persist);
+            std::fs::remove_dir_all(&dir).ok();
+            Ok(())
+        });
+}
+
 #[test]
 fn prop_shipped_stream_damage_applies_valid_prefix_then_resyncs() {
     Prop::new(

@@ -42,6 +42,11 @@ const HOT_PATH: &[&str] = &[
     "replication/ship.rs",
     "replication/apply.rs",
     "replication/heartbeat.rs",
+    // The fault shim sits inside every persistent write path, and the
+    // health block is read by the same paths to report degradation — a
+    // panic in either turns an injected (or real) disk error into a crash.
+    "util/iofault.rs",
+    "metrics/health.rs",
 ];
 
 /// Panicking constructs forbidden in hot-path modules. `.expect(` keeps its
